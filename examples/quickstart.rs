@@ -1,0 +1,53 @@
+//! Quickstart: the PyTorch-like eager API in 60 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use minitensor::prelude::*;
+
+fn main() -> Result<()> {
+    // --- Tensors and broadcasting (paper §3.1) -------------------------
+    let x = Tensor::from_vec(vec![1., 2., 3., 4., 5., 6.], &[2, 3])?;
+    let b = Tensor::from_vec(vec![10., 20., 30.], &[3])?;
+    let y = x.add(&b)?; // b broadcasts over the batch dimension
+    println!("x + b = {y}");
+
+    let m = Tensor::eye(3);
+    println!("x @ I = {}", x.matmul(&m)?);
+    println!("sum = {}  mean = {}", x.sum(), x.mean());
+    println!("softmax rows = {}", x.softmax()?);
+
+    // --- Autograd (paper §3.2): record ops, call backward() ------------
+    let w = Var::from_tensor(Tensor::ones(&[3, 3]), true);
+    let v = Var::from_tensor(x.clone(), false);
+    let loss = v.matmul(&w)?.tanh().square().sum()?;
+    loss.backward()?;
+    println!("dL/dW = {}", w.grad().expect("gradient accumulated"));
+
+    // --- Finite-difference verification (paper §5, eq 11) --------------
+    let report = gradcheck(
+        |v| v.sigmoid().square().sum(),
+        &Tensor::from_vec(vec![0.5, -1.0, 2.0], &[3])?,
+        1e-3,
+        1e-2,
+    )?;
+    println!(
+        "gradcheck: max_abs_diff={:.2e} over {} probes — {}",
+        report.max_abs_diff,
+        report.probes,
+        if report.pass { "PASS" } else { "FAIL" }
+    );
+
+    // --- A three-line neural network (paper §3.3) ----------------------
+    let mut rng = Rng::new(42);
+    let model = Sequential::new()
+        .add(Dense::new(3, 16, &mut rng))
+        .add(Activation::Relu)
+        .add(Dense::new(16, 2, &mut rng));
+    let logits = model.forward(&Var::from_tensor(x, false), false)?;
+    println!("model(x) = {}", logits.data());
+    println!("parameters: {}", model.num_parameters());
+
+    Ok(())
+}

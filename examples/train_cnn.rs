@@ -1,0 +1,79 @@
+//! Train a small CNN (conv → relu → maxpool → dense) on synthetic-MNIST
+//! images — exercises the paper's eq-6 convolution path end to end.
+//!
+//! ```bash
+//! cargo run --release --example train_cnn
+//! ```
+
+use minitensor::autograd::Var;
+use minitensor::data::{synthetic_mnist, DataLoader, Rng};
+use minitensor::nn::{losses, Conv2d, Dense, Module};
+use minitensor::optim::{Adam, Optimizer};
+
+fn main() -> minitensor::Result<()> {
+    let side = 12;
+    let ds = synthetic_mnist(1024, side, 7);
+    let (train, test) = ds.split(0.9);
+    println!(
+        "synthetic-MNIST: {} train / {} test, {}x{side} images, 10 classes",
+        train.len(),
+        test.len(),
+        side
+    );
+
+    let mut rng = Rng::new(42);
+    let conv1 = Conv2d::new(1, 8, 3, 1, 1, &mut rng); // [b,8,12,12]
+    let conv2 = Conv2d::new(8, 16, 3, 1, 1, &mut rng); // after pool: [b,16,6,6]
+    let head = Dense::new(16 * 3 * 3, 10, &mut rng);
+    let mut params = conv1.parameters();
+    params.extend(conv2.parameters());
+    params.extend(head.parameters());
+    let n_params: usize = params.iter().map(|p| p.data().numel()).sum();
+    println!("model parameters: {n_params}");
+
+    let forward = |x: &Var, train_mode: bool| -> minitensor::Result<Var> {
+        let b = x.dims()[0];
+        let img = x.reshape(&[b, 1, side, side])?;
+        let c1 = conv1.forward(&img, train_mode)?.relu().max_pool2d(2)?; // [b,8,6,6]
+        let c2 = conv2.forward(&c1, train_mode)?.relu().max_pool2d(2)?; // [b,16,3,3]
+        let flat = c2.reshape(&[b, 16 * 3 * 3])?;
+        head.forward(&flat, train_mode)
+    };
+
+    let mut opt = Adam::new(params, 1e-3);
+    let mut loader = DataLoader::new(train.clone(), 32, true, 1).drop_last();
+    let steps = 120;
+    println!("\nstep, loss");
+    let t0 = std::time::Instant::now();
+    let mut step = 0;
+    while step < steps {
+        let Some(batch) = loader.next() else {
+            loader.reset();
+            continue;
+        };
+        let x = Var::from_tensor(batch.x, false);
+        let logits = forward(&x, true)?;
+        let loss = losses::cross_entropy(&logits, &batch.y)?;
+        if step % 10 == 0 || step + 1 == steps {
+            println!("{step}, {:.5}", loss.item()?);
+        }
+        opt.zero_grad();
+        loss.backward()?;
+        opt.step()?;
+        step += 1;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    // Test accuracy.
+    let acc = minitensor::autograd::no_grad(|| -> minitensor::Result<f32> {
+        let x = Var::from_tensor(test.x.clone(), false);
+        let logits = forward(&x, false)?;
+        losses::accuracy(&logits.data(), &test.y)
+    })?;
+    println!(
+        "\ntest accuracy: {acc:.3}  ({steps} steps in {elapsed:.1}s, {:.1} steps/s)",
+        steps as f64 / elapsed
+    );
+    assert!(acc > 0.5, "CNN should beat chance comfortably");
+    Ok(())
+}

@@ -1,0 +1,137 @@
+//! Serve batched inference through the AOT XLA forward executable —
+//! the full three-layer stack on the request path: Rust coordinator →
+//! PJRT executable ← (built once from JAX + Pallas kernels).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example xla_inference
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use minitensor::coordinator::{BatchModel, InferenceServer, ServeConfig};
+use minitensor::data::Rng;
+use minitensor::error::Result;
+use minitensor::nn::kaiming_uniform;
+use minitensor::runtime::Engine;
+use minitensor::tensor::Tensor;
+
+/// BatchModel backed by the `mlp_forward` artifact. The artifact has a
+/// fixed batch dimension, so partial batches are padded and sliced.
+struct XlaBatchModel {
+    engine: Engine,
+    params: Vec<Tensor>,
+    batch: usize,
+    in_features: usize,
+}
+
+// SAFETY: used only from the single server worker thread.
+unsafe impl Send for XlaBatchModel {}
+
+impl XlaBatchModel {
+    fn new(artifacts_dir: &str) -> Result<XlaBatchModel> {
+        let mut engine = Engine::cpu(artifacts_dir)?;
+        let art = engine.manifest().get("mlp_forward")?.clone();
+        let batch = art.input_shapes[0][0];
+        let in_features = art.input_shapes[0][1];
+        let mut rng = Rng::new(123);
+        let params: Vec<Tensor> = art.input_shapes[1..]
+            .iter()
+            .map(|s| {
+                if s.len() == 2 {
+                    kaiming_uniform(s, s[1], &mut rng)
+                } else {
+                    Tensor::zeros(s)
+                }
+            })
+            .collect();
+        engine.load("mlp_forward")?; // compile up front, off the hot path
+        Ok(XlaBatchModel {
+            engine,
+            params,
+            batch,
+            in_features,
+        })
+    }
+}
+
+impl BatchModel for XlaBatchModel {
+    fn forward_batch(&mut self, x: &Tensor) -> Result<Tensor> {
+        let b = x.dims()[0];
+        // Pad to the artifact's fixed batch.
+        let padded = if b == self.batch {
+            x.clone()
+        } else {
+            let mut data = x.to_vec();
+            data.resize(self.batch * self.in_features, 0.0);
+            Tensor::from_vec(data, &[self.batch, self.in_features])?
+        };
+        let mut inputs: Vec<&Tensor> = vec![&padded];
+        inputs.extend(self.params.iter());
+        let out = self.engine.run("mlp_forward", &inputs)?.remove(0);
+        Ok(out.narrow(0, 0, b)?.contiguous())
+    }
+
+    fn in_features(&self) -> usize {
+        self.in_features
+    }
+}
+
+fn main() -> Result<()> {
+    let model = match XlaBatchModel::new("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("artifacts not available ({e}); run `make artifacts` first");
+            return Ok(());
+        }
+    };
+    let in_features = model.in_features;
+    let max_batch = model.batch;
+    println!(
+        "serving mlp_forward artifact (batch={max_batch}, features={in_features}) on PJRT"
+    );
+
+    let server = Arc::new(InferenceServer::start(
+        Box::new(model),
+        ServeConfig {
+            max_batch,
+            max_wait: std::time::Duration::from_millis(5),
+            queue_depth: 512,
+        },
+    ));
+
+    // Closed-loop clients hammer the server.
+    let n_clients = 4;
+    let per_client = 256;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let s = server.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(1000 + c as u64);
+                for _ in 0..per_client {
+                    let feats: Vec<f32> =
+                        (0..in_features).map(|_| rng.next_f32()).collect();
+                    let logits = s.infer(feats).expect("infer");
+                    assert_eq!(logits.len(), 10);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client");
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let stats = server.stats();
+    println!(
+        "{} requests in {:.2}s — {:.0} req/s | {} batches, mean size {:.1} | latency p50 {:.2} ms, p99 {:.2} ms",
+        stats.requests,
+        elapsed,
+        stats.requests as f64 / elapsed,
+        stats.batches,
+        stats.mean_batch_size,
+        stats.p50_latency_ms,
+        stats.p99_latency_ms,
+    );
+    Ok(())
+}

@@ -1,0 +1,3 @@
+"""Build-time compile package: JAX model (L2) + Pallas kernels (L1) + AOT
+exporter. Never imported at run time — the Rust coordinator consumes only
+the HLO-text artifacts this package writes."""

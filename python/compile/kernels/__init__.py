@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels for MiniTensor's compute hot-spots.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is both the correctness
+path and what gets lowered into the AOT artifacts. The BlockSpecs are
+still written TPU-shaped (MXU-aligned tiles sized for VMEM) so the same
+kernels compile for real TPUs unchanged — see DESIGN.md
+§Hardware-Adaptation.
+"""
+
+from .attention import attention_pallas
+from .matmul import matmul_pallas
+from .fused_linear import fused_linear_pallas
+from .softmax import log_softmax_pallas, softmax_pallas
+
+__all__ = [
+    "attention_pallas",
+    "matmul_pallas",
+    "fused_linear_pallas",
+    "softmax_pallas",
+    "log_softmax_pallas",
+]

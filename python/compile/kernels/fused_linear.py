@@ -1,0 +1,127 @@
+"""Fused dense layer kernel: ``act(x @ W^T + b)`` in one VMEM pass.
+
+The paper's Dense layer (eq 5) followed by a nonlinearity is the MLP's
+inner loop. Fusing the bias add and activation into the matmul epilogue
+keeps the (bm, bn) output tile in VMEM instead of round-tripping to HBM
+between three kernels — the Pallas analogue of the paper's §3.5 "inner
+loops written to encourage auto-vectorization".
+
+W is stored PyTorch-style ``[d_out, d_in]`` and read transposed by the
+BlockSpec index map, so no separate transpose pass is needed (mirrors the
+Rust engine's ``matmul_nt``).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import block_dim
+
+_ACTS = {
+    "id": lambda v: v,
+    "relu": lambda v: jnp.maximum(v, 0.0),
+    "tanh": jnp.tanh,
+    "gelu": lambda v: 0.5 * v * (1.0 + jnp.tanh(0.7978845608 * (v + 0.044715 * v * v * v))),
+}
+
+
+def _fused_linear_kernel(x_ref, wt_ref, b_ref, o_ref, *, n_k: int, act: str):
+    """Grid (i, j, k): accumulate x_tile @ w_tile^T; epilogue on last k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # wt tile arrives as [bn, bk] (a [d_out, d_in] block); contract in-kernel.
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        wt_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        o_ref[...] = _ACTS[act](o_ref[...] + b_ref[...])
+
+
+def _fused_linear_raw(
+    x: jax.Array, w: jax.Array, b: jax.Array, act: str, interpret: bool
+) -> jax.Array:
+    m, d_in = x.shape
+    d_out, d_in2 = w.shape
+    assert d_in == d_in2, f"inner dims mismatch: {d_in} vs {d_in2}"
+    assert b.shape == (d_out,)
+    assert act in _ACTS, f"unknown activation '{act}'"
+    bm, bk, bn = block_dim(m), block_dim(d_in), block_dim(d_out)
+    n_k = d_in // bk
+    grid = (m // bm, d_out // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_fused_linear_kernel, n_k=n_k, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, d_out), jnp.float32),
+        interpret=interpret,
+    )(x, w, b)
+
+
+def _act_grad(z: jax.Array, act: str) -> jax.Array:
+    """dact/dz evaluated at the pre-activation z."""
+    if act == "id":
+        return jnp.ones_like(z)
+    if act == "relu":
+        return (z > 0.0).astype(z.dtype)
+    if act == "tanh":
+        t = jnp.tanh(z)
+        return 1.0 - t * t
+    if act == "gelu":
+        u = 0.7978845608 * (z + 0.044715 * z**3)
+        t = jnp.tanh(u)
+        du = 0.7978845608 * (1.0 + 3 * 0.044715 * z * z)
+        return 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * du
+    raise ValueError(act)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def fused_linear_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    act: str = "relu",
+    interpret: bool = True,
+) -> jax.Array:
+    """``act(x [m,d_in] @ w[d_out,d_in]^T + b[d_out])`` fused in one kernel.
+
+    The custom VJP implements the paper's Dense pullbacks (eq 4 composed
+    with the activation derivative): ``dz = ḡ ⊙ act'(z)``, ``x̄ = dz W``,
+    ``W̄ = dzᵀ x``, ``b̄ = Σ_batch dz``, with z rematerialized by the same
+    kernel (act="id") instead of stored — the §3.5 lazy-buffer idea.
+    """
+    return _fused_linear_raw(x, w, b, act, interpret)
+
+
+def _fused_linear_fwd(x, w, b, act, interpret):
+    return _fused_linear_raw(x, w, b, act, interpret), (x, w, b)
+
+
+def _fused_linear_bwd(act, interpret, res, g):
+    from .matmul import _matmul_raw
+
+    x, w, b = res
+    z = _fused_linear_raw(x, w, b, "id", interpret)  # rematerialize
+    dz = g * _act_grad(z, act)
+    dx = _matmul_raw(dz, w, interpret)  # [m,dout] @ [dout,din]
+    dw = _matmul_raw(dz.T, x, interpret)  # [dout,m] @ [m,din]
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+fused_linear_pallas.defvjp(_fused_linear_fwd, _fused_linear_bwd)

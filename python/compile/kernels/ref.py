@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel — the build-time correctness
+reference (paper §5: unit tests validate autograd rules and kernels
+against known-good math)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain jnp matmul."""
+    return jnp.matmul(x, w)
+
+
+def fused_linear_ref(x: jax.Array, w: jax.Array, b: jax.Array, act: str = "relu") -> jax.Array:
+    """``act(x @ w^T + b)`` in plain jnp."""
+    y = x @ w.T + b
+    if act == "id":
+        return y
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "tanh":
+        return jnp.tanh(y)
+    if act == "gelu":
+        return 0.5 * y * (1.0 + jnp.tanh(0.7978845608 * (y + 0.044715 * y**3)))
+    raise ValueError(f"unknown activation '{act}'")
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Scaled-dot-product attention in plain jnp."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = (q @ k.T) * scale
+    return jax.nn.softmax(s, axis=-1) @ v
+
+
+def softmax_ref(x: jax.Array) -> jax.Array:
+    """Row-wise stable softmax."""
+    return jax.nn.softmax(x, axis=-1)
+
+
+def log_softmax_ref(x: jax.Array) -> jax.Array:
+    """Row-wise stable log-softmax."""
+    return jax.nn.log_softmax(x, axis=-1)

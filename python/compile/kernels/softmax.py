@@ -1,0 +1,89 @@
+"""Numerically stable softmax / log-softmax Pallas kernels.
+
+One program per row-tile: the full class dimension lives in a single
+VMEM block (classes ≤ a few thousand fit trivially), the max-shift
+reduction happens along the lane axis, and the normalized result is
+written back in the same pass — no HBM round-trip between max, exp and
+sum (the paper's eq-8 loss path).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import block_dim
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _log_softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    shifted = x - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1, keepdims=True))
+    o_ref[...] = shifted - lse
+
+
+def _rowwise_call(kernel, x: jax.Array, interpret: bool) -> jax.Array:
+    rows, cols = x.shape
+    br = block_dim(rows)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def softmax_pallas(x: jax.Array, interpret: bool = True) -> jax.Array:
+    """Row-wise softmax over ``[rows, classes]``.
+
+    Custom VJP: ``x̄ = (ḡ − Σ(ḡ ⊙ y)) ⊙ y`` — the classic simplex pullback.
+    """
+    return _rowwise_call(_softmax_kernel, x, interpret)
+
+
+def _softmax_fwd(x, interpret):
+    y = _rowwise_call(_softmax_kernel, x, interpret)
+    return y, y
+
+
+def _softmax_bwd(interpret, y, g):
+    dot = jnp.sum(g * y, axis=-1, keepdims=True)
+    return ((g - dot) * y,)
+
+
+softmax_pallas.defvjp(_softmax_fwd, _softmax_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def log_softmax_pallas(x: jax.Array, interpret: bool = True) -> jax.Array:
+    """Row-wise log-softmax over ``[rows, classes]``.
+
+    Custom VJP: ``x̄ = ḡ − softmax(x) · Σḡ`` (paper §3.2 pullback; the
+    softmax is recovered as ``exp(y)`` from the saved output).
+    """
+    return _rowwise_call(_log_softmax_kernel, x, interpret)
+
+
+def _log_softmax_fwd(x, interpret):
+    y = _rowwise_call(_log_softmax_kernel, x, interpret)
+    return y, y
+
+
+def _log_softmax_bwd(interpret, y, g):
+    gsum = jnp.sum(g, axis=-1, keepdims=True)
+    return (g - jnp.exp(y) * gsum,)
+
+
+log_softmax_pallas.defvjp(_log_softmax_fwd, _log_softmax_bwd)

@@ -1,0 +1,109 @@
+"""Layer-2: the MLP classifier in JAX, built on the L1 Pallas kernels.
+
+This is the paper's "end-to-end examples that train small models" (§5)
+expressed as a JAX compute graph:
+
+- ``mlp_forward``      — logits = Dense→ReLU→Dense→ReLU→Dense (eq 5)
+- ``mlp_loss``         — mean softmax cross-entropy (eq 8)
+- ``mlp_train_step``   — one fused SGD step: loss + grads (reverse mode,
+  eqs 2–4, via ``jax.grad``) + parameter update (eq 9), returned as new
+  parameters. Lowered to a single HLO module so the Rust trainer executes
+  the entire step in one PJRT call.
+
+Parameters follow the Rust engine's Dense layout: W ``[d_out, d_in]``,
+b ``[d_out]`` — the same tensors can drive either backend.
+"""
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_linear_pallas, log_softmax_pallas
+
+# Default architecture baked into the AOT artifacts; must line up with
+# rust TrainConfig::defaults() (input_side=14 → 196 features).
+BATCH = 64
+IN_FEATURES = 196
+HIDDEN = (128, 64)
+CLASSES = 10
+LR = 0.05
+
+
+def param_shapes(
+    in_features: int = IN_FEATURES,
+    hidden: Sequence[int] = HIDDEN,
+    classes: int = CLASSES,
+):
+    """[(w_shape, b_shape), ...] for each Dense layer."""
+    dims = [in_features, *hidden, classes]
+    return [((dims[i + 1], dims[i]), (dims[i + 1],)) for i in range(len(dims) - 1)]
+
+
+def init_params(key, in_features=IN_FEATURES, hidden=HIDDEN, classes=CLASSES):
+    """Kaiming-uniform init matching the Rust engine."""
+    params = []
+    for (w_shape, b_shape) in param_shapes(in_features, hidden, classes):
+        key, sub = jax.random.split(key)
+        bound = (6.0 / w_shape[1]) ** 0.5
+        w = jax.random.uniform(sub, w_shape, jnp.float32, -bound, bound)
+        params.extend([w, jnp.zeros(b_shape, jnp.float32)])
+    return params
+
+
+def mlp_forward(x: jax.Array, *params: jax.Array) -> jax.Array:
+    """Logits for a batch. Hidden layers use the fused linear+ReLU Pallas
+    kernel; the output layer is fused linear with identity epilogue."""
+    n_layers = len(params) // 2
+    h = x
+    for i in range(n_layers):
+        w, b = params[2 * i], params[2 * i + 1]
+        act = "relu" if i < n_layers - 1 else "id"
+        h = fused_linear_pallas(h, w, b, act=act)
+    return h
+
+
+def mlp_loss(x: jax.Array, y_onehot: jax.Array, *params: jax.Array) -> jax.Array:
+    """Mean cross-entropy (eq 8) using the Pallas log-softmax kernel."""
+    logits = mlp_forward(x, *params)
+    logp = log_softmax_pallas(logits)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def mlp_train_step(x: jax.Array, y_onehot: jax.Array, *params: jax.Array):
+    """One fused SGD step (eq 9 with μ=0, λ=0): returns (loss, *new_params).
+
+    ``jax.grad`` runs reverse-mode AD through the Pallas kernels — the same
+    vector-Jacobian chain (eqs 2–4) the Rust tape implements natively.
+    """
+    loss, grads = jax.value_and_grad(
+        lambda ps: mlp_loss(x, y_onehot, *ps)
+    )(list(params))
+    new_params = [p - LR * g for p, g in zip(params, grads)]
+    return (loss, *new_params)
+
+
+def matmul_entry(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Standalone matmul entry point (bench C1/C4 artifact)."""
+    from .kernels import matmul_pallas
+
+    return matmul_pallas(x, w)
+
+
+def elementwise_entry(a: jax.Array, b: jax.Array):
+    """Fused elementwise chain used by the C1 comparison artifact:
+    relu(a * b + a). One XLA fusion — the 'optimized production backend'
+    stand-in for the paper's §6 constant-factor claim."""
+    return (jnp.maximum(a * b + a, 0.0),)
+
+
+def reduction_entry(a: jax.Array):
+    """Full-array sum and mean (C1 reductions artifact)."""
+    return (jnp.sum(a), jnp.mean(a))
+
+
+def attention_entry(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Fused scaled-dot-product attention (extension kernel)."""
+    from .kernels import attention_pallas
+
+    return attention_pallas(q, k, v)

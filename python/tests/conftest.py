@@ -1,0 +1,7 @@
+"""Shared pytest fixtures for the L1/L2 test suite."""
+
+import os
+import sys
+
+# Make `compile` importable when pytest runs from python/ or the repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

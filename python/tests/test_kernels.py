@@ -1,0 +1,216 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle,
+swept over shapes/values with hypothesis (the CORE correctness signal of
+the AOT path — paper §5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    attention_pallas,
+    fused_linear_pallas,
+    log_softmax_pallas,
+    matmul_pallas,
+    softmax_pallas,
+)
+from compile.kernels.attention import attention_vmem_bytes
+from compile.kernels import ref
+from compile.kernels.matmul import block_dim, matmul_vmem_bytes
+
+dims = st.sampled_from([1, 2, 3, 5, 8, 16, 32, 64, 128, 160, 256])
+small_dims = st.sampled_from([1, 2, 4, 8, 10, 16, 33])
+ACTS = ["id", "relu", "tanh", "gelu"]
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestBlockDim:
+    def test_mxu_aligned_when_divisible(self):
+        assert block_dim(256) == 128
+        assert block_dim(128) == 128
+        assert block_dim(1024) == 128
+
+    def test_divisor_fallback(self):
+        assert block_dim(96) == 96
+        assert block_dim(33) == 33
+        assert block_dim(7) == 7
+        assert block_dim(1) == 1
+
+    @given(st.integers(1, 2048))
+    @settings(max_examples=50, deadline=None)
+    def test_always_divides(self, n):
+        b = block_dim(n)
+        assert n % b == 0
+        assert 1 <= b <= 128 or b == n
+
+    def test_vmem_budget_at_max_tiles(self):
+        # 128³ tiles: 3 × 64 KiB = 192 KiB — way under the ~16 MiB VMEM.
+        assert matmul_vmem_bytes(1024, 1024, 1024) == 4 * 3 * 128 * 128
+        assert matmul_vmem_bytes(1024, 1024, 1024) < 16 * 2**20
+
+
+class TestMatmul:
+    @given(m=dims, k=dims, n=dims)
+    @settings(max_examples=25, deadline=None)
+    def test_matches_ref(self, m, k, n):
+        x = rand(m * 1000 + k, m, k)
+        w = rand(n * 1000 + k + 1, k, n)
+        got = matmul_pallas(x, w)
+        want = ref.matmul_ref(x, w)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_identity(self):
+        x = rand(0, 32, 32)
+        np.testing.assert_allclose(matmul_pallas(x, jnp.eye(32)), x, rtol=1e-6)
+
+    def test_zeros(self):
+        x = rand(1, 16, 8)
+        z = jnp.zeros((8, 4), jnp.float32)
+        assert jnp.all(matmul_pallas(x, z) == 0.0)
+
+    def test_mismatched_inner_dims_raise(self):
+        with pytest.raises(AssertionError):
+            matmul_pallas(rand(2, 4, 5), rand(3, 6, 4))
+
+    def test_grad_matches_ref_grad(self):
+        x = rand(4, 16, 24)
+        w = rand(5, 24, 8)
+        gx, gw = jax.grad(lambda a, b: jnp.sum(matmul_pallas(a, b) ** 2), (0, 1))(x, w)
+        rx, rw = jax.grad(lambda a, b: jnp.sum(ref.matmul_ref(a, b) ** 2), (0, 1))(x, w)
+        np.testing.assert_allclose(gx, rx, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(gw, rw, rtol=1e-4, atol=1e-4)
+
+    def test_jit_compatible(self):
+        f = jax.jit(lambda a, b: matmul_pallas(a, b))
+        x, w = rand(6, 64, 64), rand(7, 64, 64)
+        np.testing.assert_allclose(f(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+class TestFusedLinear:
+    @given(m=small_dims, d_in=small_dims, d_out=small_dims, act=st.sampled_from(ACTS))
+    @settings(max_examples=25, deadline=None)
+    def test_matches_ref(self, m, d_in, d_out, act):
+        x = rand(m + d_in, m, d_in)
+        w = rand(d_out + d_in + 1, d_out, d_in)
+        b = rand(d_out + 2, d_out)
+        got = fused_linear_pallas(x, w, b, act)
+        want = ref.fused_linear_ref(x, w, b, act)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_bias_broadcast(self):
+        x = jnp.zeros((4, 8), jnp.float32)
+        w = jnp.zeros((3, 8), jnp.float32)
+        b = jnp.asarray([1.0, -2.0, 3.0], jnp.float32)
+        out = fused_linear_pallas(x, w, b, "id")
+        np.testing.assert_allclose(out, jnp.tile(b, (4, 1)), rtol=1e-6)
+
+    def test_relu_clamps(self):
+        x = rand(10, 16, 8)
+        w = rand(11, 4, 8)
+        b = rand(12, 4)
+        out = fused_linear_pallas(x, w, b, "relu")
+        assert jnp.all(out >= 0.0)
+
+    @pytest.mark.parametrize("act", ACTS)
+    def test_grads_match_ref(self, act):
+        x = rand(20, 8, 12)
+        w = rand(21, 6, 12)
+        b = rand(22, 6)
+
+        def loss_pallas(x, w, b):
+            return jnp.sum(fused_linear_pallas(x, w, b, act) ** 2)
+
+        def loss_ref(x, w, b):
+            return jnp.sum(ref.fused_linear_ref(x, w, b, act) ** 2)
+
+        gp = jax.grad(loss_pallas, (0, 1, 2))(x, w, b)
+        gr = jax.grad(loss_ref, (0, 1, 2))(x, w, b)
+        for a, e in zip(gp, gr):
+            np.testing.assert_allclose(a, e, rtol=2e-3, atol=2e-3)
+
+    def test_unknown_act_raises(self):
+        with pytest.raises(AssertionError):
+            fused_linear_pallas(rand(0, 4, 4), rand(1, 4, 4), rand(2, 4), "swish")
+
+
+class TestSoftmax:
+    @given(rows=small_dims, cols=st.sampled_from([2, 3, 10, 64, 100]))
+    @settings(max_examples=20, deadline=None)
+    def test_matches_ref(self, rows, cols):
+        x = rand(rows * 100 + cols, rows, cols) * 3.0
+        np.testing.assert_allclose(
+            softmax_pallas(x), ref.softmax_ref(x), rtol=1e-5, atol=1e-6
+        )
+        np.testing.assert_allclose(
+            log_softmax_pallas(x), ref.log_softmax_ref(x), rtol=1e-4, atol=1e-5
+        )
+
+    def test_rows_sum_to_one(self):
+        x = rand(30, 16, 10)
+        s = jnp.sum(softmax_pallas(x), axis=-1)
+        np.testing.assert_allclose(s, jnp.ones(16), rtol=1e-5)
+
+    def test_stable_for_large_logits(self):
+        x = jnp.asarray([[1000.0, 1000.0, -1000.0]], jnp.float32)
+        out = softmax_pallas(x)
+        assert jnp.all(jnp.isfinite(out))
+        np.testing.assert_allclose(out[0, 0], 0.5, rtol=1e-5)
+
+    def test_shift_invariance(self):
+        x = rand(31, 8, 5)
+        np.testing.assert_allclose(
+            softmax_pallas(x), softmax_pallas(x + 100.0), rtol=1e-4, atol=1e-5
+        )
+
+    def test_grads_match_ref(self):
+        x = rand(32, 8, 6)
+        g = jax.grad(lambda v: jnp.sum(jnp.sin(softmax_pallas(v))))(x)
+        r = jax.grad(lambda v: jnp.sum(jnp.sin(ref.softmax_ref(v))))(x)
+        np.testing.assert_allclose(g, r, rtol=1e-4, atol=1e-5)
+
+        gl = jax.grad(lambda v: jnp.sum(jnp.cos(log_softmax_pallas(v))))(x)
+        rl = jax.grad(lambda v: jnp.sum(jnp.cos(ref.log_softmax_ref(v))))(x)
+        np.testing.assert_allclose(gl, rl, rtol=1e-4, atol=1e-5)
+
+
+class TestAttention:
+    @given(
+        seq=st.sampled_from([1, 2, 8, 16, 64, 128]),
+        d=st.sampled_from([1, 4, 8, 16, 64]),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_matches_ref(self, seq, d):
+        q = rand(seq + d, seq, d)
+        k = rand(seq + d + 1, seq, d)
+        v = rand(seq + d + 2, seq, d)
+        got = attention_pallas(q, k, v)
+        want = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_uniform_keys_average_values(self):
+        # identical keys ⇒ uniform attention ⇒ output = mean of values
+        q = rand(40, 4, 8)
+        k = jnp.ones((16, 8), jnp.float32)
+        v = rand(41, 16, 8)
+        out = attention_pallas(q, k, v)
+        want = jnp.tile(jnp.mean(v, axis=0), (4, 1))
+        np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-5)
+
+    def test_rows_attend_to_matching_key(self):
+        # orthogonal one-hot q/k with large scale ⇒ near-hard attention
+        eye = jnp.eye(8, dtype=jnp.float32) * 30.0
+        v = rand(42, 8, 8)
+        out = attention_pallas(eye, eye, v)
+        np.testing.assert_allclose(out, v, rtol=1e-2, atol=1e-2)
+
+    def test_vmem_estimate_within_budget(self):
+        # the serving shape must fit VMEM comfortably
+        assert attention_vmem_bytes(1024, 128) < 16 * 2**20
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(AssertionError):
+            attention_pallas(rand(0, 8, 4), rand(1, 8, 5), rand(2, 8, 5))

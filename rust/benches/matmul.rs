@@ -1,0 +1,75 @@
+//! Experiment C4 — matmul throughput (paper eq 1, §3.5 engine claims):
+//! blocked native SGEMM vs the naive triple loop vs the XLA-AOT
+//! executable, GFLOP/s across sizes.
+
+use minitensor::bench_util::{bench, fmt_ns, Table};
+use minitensor::data::Rng;
+use minitensor::ops::matmul::sgemm_naive;
+use minitensor::runtime::Engine;
+use minitensor::tensor::Tensor;
+
+fn main() {
+    let mut rng = Rng::new(3);
+    let mut t = Table::new(
+        "C4 — SGEMM, median time and GFLOP/s",
+        &["size", "blocked", "GFLOP/s", "naive-loop", "GFLOP/s", "xla-aot", "speedup vs naive"],
+    );
+
+    let mut engine = Engine::cpu(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).ok();
+
+    for n in [32usize, 64, 128, 256, 512] {
+        let a = Tensor::randn(&[n, n], 0.0, 1.0, &mut rng);
+        let b = Tensor::randn(&[n, n], 0.0, 1.0, &mut rng);
+        let flops = 2.0 * (n as f64).powi(3);
+
+        let blocked = bench(&format!("blocked {n}"), 80.0, 7, || {
+            std::hint::black_box(a.matmul(&b).unwrap());
+        });
+
+        let (av, bv) = (a.to_vec(), b.to_vec());
+        let naive = bench(&format!("naive {n}"), 80.0, 5, || {
+            let mut c = vec![0.0f32; n * n];
+            sgemm_naive(n, n, n, &av, &bv, &mut c);
+            std::hint::black_box(c);
+        });
+
+        let xla = if n == 256 {
+            engine.as_mut().map_or("n/a".into(), |e| {
+                e.load("matmul_256").expect("artifact");
+                let s = bench("xla 256", 80.0, 7, || {
+                    std::hint::black_box(e.run("matmul_256", &[&a, &b]).unwrap());
+                });
+                format!("{} ({:.2} GF/s)", fmt_ns(s.median_ns), flops / s.median_ns)
+            })
+        } else {
+            "-".into()
+        };
+
+        t.row(&[
+            format!("{n}x{n}"),
+            fmt_ns(blocked.median_ns),
+            format!("{:.2}", flops / blocked.median_ns),
+            fmt_ns(naive.median_ns),
+            format!("{:.2}", flops / naive.median_ns),
+            xla,
+            format!("{:.2}x", naive.median_ns / blocked.median_ns),
+        ]);
+    }
+    t.print();
+
+    // Dense-layer product (x·Wᵀ, eq 5) — the layout the MLP actually uses.
+    let mut t2 = Table::new("C4' — dense product x·Wᵀ (eq 5)", &["shape", "median", "GFLOP/s"]);
+    for (m, k, d) in [(64usize, 196usize, 128usize), (64, 128, 64), (256, 512, 256)] {
+        let x = Tensor::randn(&[m, k], 0.0, 1.0, &mut rng);
+        let w = Tensor::randn(&[d, k], 0.0, 1.0, &mut rng);
+        let s = bench("nt", 60.0, 7, || {
+            std::hint::black_box(x.matmul_nt(&w).unwrap());
+        });
+        t2.row(&[
+            format!("[{m},{k}]x[{d},{k}]T"),
+            fmt_ns(s.median_ns),
+            format!("{:.2}", 2.0 * (m * k * d) as f64 / s.median_ns),
+        ]);
+    }
+    t2.print();
+}

@@ -1,0 +1,87 @@
+//! Experiment C2 — §2/§6: pure-Python-style minimal frameworks are
+//! "orders of magnitude slower" than the Rust engine. The naive scalar
+//! autograd interpreter (micrograd's execution model, see
+//! `baselines::naive`) vs the bulk engine on the same computations,
+//! including a full train step.
+
+use minitensor::autograd::Var;
+use minitensor::baselines::{NaiveScalar, NaiveTensor};
+use minitensor::bench_util::{bench, fmt_ns, Table};
+use minitensor::data::Rng;
+use minitensor::tensor::Tensor;
+
+fn main() {
+    let mut rng = Rng::new(5);
+    let mut t = Table::new(
+        "C2 — engine vs naive scalar interpreter (micrograd stand-in)",
+        &["workload", "engine", "naive", "slowdown"],
+    );
+
+    // Elementwise chains at increasing N: the gap must GROW with N.
+    for n in [100usize, 1_000, 10_000] {
+        let a = Tensor::randn(&[n], 0.0, 1.0, &mut rng);
+        let b = Tensor::randn(&[n], 0.0, 1.0, &mut rng);
+        let engine = bench(&format!("engine ew {n}"), 30.0, 5, || {
+            std::hint::black_box(a.mul(&b).unwrap().add(&a).unwrap().relu());
+        });
+        let (av, bv) = (a.to_vec(), b.to_vec());
+        let naive = bench(&format!("naive ew {n}"), 30.0, 3, || {
+            let na = NaiveTensor::from_vec(&av, &[n]);
+            let nb = NaiveTensor::from_vec(&bv, &[n]);
+            std::hint::black_box(na.mul(&nb).add(&na).relu());
+        });
+        t.row(&[
+            format!("elementwise chain N={n}"),
+            fmt_ns(engine.median_ns),
+            fmt_ns(naive.median_ns),
+            format!("{:.0}x", naive.median_ns / engine.median_ns),
+        ]);
+    }
+
+    // Matmul 32x32 (naive does 32³ scalar node allocations).
+    let a = Tensor::randn(&[32, 32], 0.0, 1.0, &mut rng);
+    let b = Tensor::randn(&[32, 32], 0.0, 1.0, &mut rng);
+    let engine = bench("engine mm", 30.0, 5, || {
+        std::hint::black_box(a.matmul(&b).unwrap());
+    });
+    let (av, bv) = (a.to_vec(), b.to_vec());
+    let naive = bench("naive mm", 60.0, 3, || {
+        let na = NaiveTensor::from_vec(&av, &[32, 32]);
+        let nb = NaiveTensor::from_vec(&bv, &[32, 32]);
+        std::hint::black_box(na.matmul(&nb));
+    });
+    t.row(&[
+        "matmul 32x32".into(),
+        fmt_ns(engine.median_ns),
+        fmt_ns(naive.median_ns),
+        format!("{:.0}x", naive.median_ns / engine.median_ns),
+    ]);
+
+    // Forward + backward on a vector: full autograd round trip.
+    let n = 4096;
+    let x = Tensor::randn(&[n], 0.0, 1.0, &mut rng);
+    let engine_ad = bench("engine fwd+bwd", 30.0, 5, || {
+        let v = Var::from_tensor(x.clone(), true);
+        let loss = v.mul(&v).unwrap().relu().sum().unwrap();
+        loss.backward().unwrap();
+        std::hint::black_box(v.grad());
+    });
+    let xv = x.to_vec();
+    let naive_ad = bench("naive fwd+bwd", 60.0, 3, || {
+        let nx = NaiveTensor::from_vec(&xv, &[n]);
+        let loss: NaiveScalar = nx.mul(&nx).relu().sum();
+        loss.backward();
+        std::hint::black_box(nx.grads());
+    });
+    t.row(&[
+        format!("autograd fwd+bwd N={n}"),
+        fmt_ns(engine_ad.median_ns),
+        fmt_ns(naive_ad.median_ns),
+        format!("{:.0}x", naive_ad.median_ns / engine_ad.median_ns),
+    ]);
+
+    t.print();
+    println!("\npaper claim (§2): pure-Python-style execution is orders of magnitude");
+    println!("slower; the slowdown column should show 2-4 orders of magnitude and");
+    println!("grow with N (per-element dispatch + allocation vs bulk kernels).");
+}

@@ -1,0 +1,81 @@
+//! Experiment C1b — §6 constant factors for reductions: sum/mean/max over
+//! 1e3..1e7 elements, native vs XLA-AOT; plus per-axis reductions.
+
+use minitensor::bench_util::{bench, fmt_ns, Table};
+use minitensor::data::Rng;
+use minitensor::runtime::Engine;
+use minitensor::tensor::Tensor;
+
+fn main() {
+    let mut rng = Rng::new(2);
+    let mut t = Table::new(
+        "C1b — full reductions, median time",
+        &["N", "sum", "mean", "max", "sum GB/s", "xla sum+mean"],
+    );
+
+    let mut engine = Engine::cpu(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).ok();
+    let xla_n = 1_048_576usize;
+
+    for n in [1_000usize, 10_000, 100_000, 1_048_576, 10_000_000] {
+        let a = Tensor::randn(&[n], 0.0, 1.0, &mut rng);
+        let sum = bench("sum", 50.0, 7, || {
+            std::hint::black_box(a.sum());
+        });
+        let mean = bench("mean", 50.0, 7, || {
+            std::hint::black_box(a.mean());
+        });
+        let max = bench("max", 50.0, 7, || {
+            std::hint::black_box(a.max_all());
+        });
+        let xla = if n == xla_n {
+            engine.as_mut().map_or("n/a".into(), |e| {
+                e.load("reduction_1m").expect("artifact");
+                let s = bench("xla", 50.0, 7, || {
+                    std::hint::black_box(e.run("reduction_1m", &[&a]).unwrap());
+                });
+                fmt_ns(s.median_ns)
+            })
+        } else {
+            "-".into()
+        };
+        t.row(&[
+            format!("{n}"),
+            fmt_ns(sum.median_ns),
+            fmt_ns(mean.median_ns),
+            fmt_ns(max.median_ns),
+            format!("{:.2}", 4.0 * n as f64 / sum.median_ns),
+            xla,
+        ]);
+    }
+    t.print();
+
+    // Axis reductions on a matrix — the shapes real models use.
+    let mut t2 = Table::new(
+        "C1b' — axis reductions on [1024, 1024]",
+        &["op", "median", "GB/s"],
+    );
+    let m = Tensor::randn(&[1024, 1024], 0.0, 1.0, &mut rng);
+    for (name, f) in [
+        ("sum_axis(0)", 0usize),
+        ("sum_axis(1)", 1),
+    ] {
+        let ax = f as isize;
+        let s = bench(name, 50.0, 7, || {
+            std::hint::black_box(m.sum_axis(ax, false).unwrap());
+        });
+        t2.row(&[
+            name.into(),
+            fmt_ns(s.median_ns),
+            format!("{:.2}", 4.0 * 1024.0 * 1024.0 / s.median_ns),
+        ]);
+    }
+    let sm = bench("softmax rows", 50.0, 7, || {
+        std::hint::black_box(m.softmax().unwrap());
+    });
+    t2.row(&[
+        "softmax(lastdim)".into(),
+        fmt_ns(sm.median_ns),
+        format!("{:.2}", 8.0 * 1024.0 * 1024.0 / sm.median_ns),
+    ]);
+    t2.print();
+}

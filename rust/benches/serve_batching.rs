@@ -1,0 +1,72 @@
+//! Ablation — coordinator batching policy: throughput and latency of the
+//! inference server as `max_batch` sweeps 1..64 (the design choice
+//! DESIGN.md's coordinator section calls out). batch=1 is the no-batching
+//! baseline; the crossover shows where amortizing per-call overhead wins
+//! over queueing delay.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use minitensor::bench_util::Table;
+use minitensor::coordinator::{InferenceServer, NativeBatchModel, ServeConfig};
+use minitensor::data::Rng;
+use minitensor::nn::{Activation, Dense, Sequential};
+
+fn model(rng: &mut Rng) -> Sequential {
+    Sequential::new()
+        .add(Dense::new(196, 128, rng))
+        .add(Activation::Relu)
+        .add(Dense::new(128, 64, rng))
+        .add(Activation::Relu)
+        .add(Dense::new(64, 10, rng))
+}
+
+fn main() {
+    let mut t = Table::new(
+        "ablation — batching policy (4 closed-loop clients, 196-feat MLP)",
+        &["max_batch", "req/s", "mean batch", "p50 ms", "p99 ms"],
+    );
+
+    for max_batch in [1usize, 4, 16, 64] {
+        let mut rng = Rng::new(42);
+        let m = model(&mut rng);
+        let server = Arc::new(InferenceServer::start(
+            Box::new(NativeBatchModel::new(m, 196)),
+            ServeConfig {
+                max_batch,
+                max_wait: Duration::from_millis(2),
+                queue_depth: 256,
+            },
+        ));
+        let n_clients = 4;
+        let per_client = 300;
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..n_clients)
+            .map(|c| {
+                let s = server.clone();
+                std::thread::spawn(move || {
+                    let mut rng = Rng::new(100 + c as u64);
+                    for _ in 0..per_client {
+                        let feats: Vec<f32> = (0..196).map(|_| rng.next_f32()).collect();
+                        s.infer(feats).expect("infer");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("client");
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let stats = server.stats();
+        t.row(&[
+            format!("{max_batch}"),
+            format!("{:.0}", stats.requests as f64 / elapsed),
+            format!("{:.1}", stats.mean_batch_size),
+            format!("{:.2}", stats.p50_latency_ms),
+            format!("{:.2}", stats.p99_latency_ms),
+        ]);
+    }
+    t.print();
+    println!("\nreading: batch=1 pays one full forward per request; larger budgets");
+    println!("amortize dispatch until queueing delay dominates (the p99 column).");
+}

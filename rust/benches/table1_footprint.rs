@@ -1,0 +1,137 @@
+//! Experiment T1 — reproduces **Table 1** (package sizes).
+//!
+//! The paper compares the MiniTensor wheel (2.6 MB) against PyTorch
+//! (887.9 MB) and TensorFlow (620.7 MB) wheels. Our deployable unit is
+//! the stripped release binary plus the AOT artifacts; the PyTorch/TF
+//! numbers are the paper's published constants (no network in this
+//! environment — see DESIGN.md substitutions). The claim under test is
+//! the *orders-of-magnitude ratio*, which this harness recomputes from
+//! our measured sizes.
+
+use std::path::Path;
+use std::process::Command;
+
+use minitensor::bench_util::Table;
+
+fn dir_size(path: &Path) -> u64 {
+    if path.is_file() {
+        return path.metadata().map(|m| m.len()).unwrap_or(0);
+    }
+    let mut total = 0;
+    if let Ok(entries) = std::fs::read_dir(path) {
+        for e in entries.flatten() {
+            total += dir_size(&e.path());
+        }
+    }
+    total
+}
+
+fn mb(bytes: u64) -> f64 {
+    bytes as f64 / 1e6
+}
+
+fn main() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+
+    // Build (or reuse) the release binary and strip a copy of it.
+    let bin = root.join("target/release/minitensor");
+    if !bin.exists() {
+        let ok = Command::new("cargo")
+            .args(["build", "--release", "--bin", "minitensor"])
+            .current_dir(root)
+            .status()
+            .map(|s| s.success())
+            .unwrap_or(false);
+        if !ok {
+            eprintln!("warning: release build failed; sizes may be missing");
+        }
+    }
+    let stripped = root.join("target/release/minitensor.stripped");
+    let stripped_size = if bin.exists() {
+        std::fs::copy(&bin, &stripped).ok();
+        Command::new("strip").arg(&stripped).status().ok();
+        dir_size(&stripped)
+    } else {
+        0
+    };
+
+    let artifacts = dir_size(&root.join("artifacts"));
+    let rust_src = dir_size(&root.join("rust/src"));
+    let py_src = dir_size(&root.join("python"));
+    let deployable = stripped_size + artifacts;
+
+    // Paper Table 1 constants (PyPI wheel sizes at the time of writing).
+    const PAPER_MINITENSOR_MB: f64 = 2.6;
+    const PAPER_TORCH_MB: f64 = 887.9;
+    const PAPER_TF_MB: f64 = 620.7;
+
+    let mut t = Table::new(
+        "Table 1 — package / deployable sizes",
+        &["Package and platform", "Artifact", "Size", "vs ours"],
+    );
+    let ours_mb = mb(deployable);
+    t.row(&[
+        "MiniTensor-repro (this repo)".into(),
+        "stripped binary + AOT artifacts".into(),
+        format!("{ours_mb:.1} MB"),
+        "1.0x".into(),
+    ]);
+    t.row(&[
+        "  · stripped binary".into(),
+        "target/release/minitensor".into(),
+        format!("{:.1} MB", mb(stripped_size)),
+        String::new(),
+    ]);
+    t.row(&[
+        "  · AOT artifacts (HLO text)".into(),
+        "artifacts/*.hlo.txt".into(),
+        format!("{:.2} MB", mb(artifacts)),
+        String::new(),
+    ]);
+    t.row(&[
+        "  · rust sources".into(),
+        "rust/src".into(),
+        format!("{:.2} MB", mb(rust_src)),
+        String::new(),
+    ]);
+    t.row(&[
+        "  · python compile-path sources".into(),
+        "python/".into(),
+        format!("{:.2} MB", mb(py_src)),
+        String::new(),
+    ]);
+    t.row(&[
+        "MiniTensor 0.1.1 (paper)".into(),
+        "minitensor-0.1.1…whl".into(),
+        format!("{PAPER_MINITENSOR_MB} MB"),
+        format!("{:.1}x", PAPER_MINITENSOR_MB / ours_mb.max(1e-9)),
+    ]);
+    t.row(&[
+        "PyTorch 2.8.0 (paper)".into(),
+        "torch-2.8.0…whl".into(),
+        format!("{PAPER_TORCH_MB} MB"),
+        format!("{:.0}x", PAPER_TORCH_MB / ours_mb.max(1e-9)),
+    ]);
+    t.row(&[
+        "TensorFlow 2.20.0 (paper)".into(),
+        "tensorflow-2.20.0…whl".into(),
+        format!("{PAPER_TF_MB} MB"),
+        format!("{:.0}x", PAPER_TF_MB / ours_mb.max(1e-9)),
+    ]);
+    t.print();
+
+    println!(
+        "\npaper's claim: MiniTensor is ~{:.0}x / ~{:.0}x smaller than PyTorch / TensorFlow wheels.",
+        PAPER_TORCH_MB / PAPER_MINITENSOR_MB,
+        PAPER_TF_MB / PAPER_MINITENSOR_MB
+    );
+    println!(
+        "measured here: our deployable unit is {ours_mb:.1} MB => {:.0}x / {:.0}x smaller.",
+        PAPER_TORCH_MB / ours_mb.max(1e-9),
+        PAPER_TF_MB / ours_mb.max(1e-9)
+    );
+    assert!(
+        ours_mb < 50.0,
+        "deployable unit must stay orders of magnitude under the mainstream wheels"
+    );
+}

@@ -1,0 +1,58 @@
+//! Experiment C5 — §5 end-to-end: training throughput and the loss-descent
+//! curve for the reference MLP, on both backends.
+
+use minitensor::bench_util::Table;
+use minitensor::coordinator::{Backend, Config, TrainConfig, Trainer};
+
+fn run(backend: Backend, steps: usize) -> Option<minitensor::coordinator::TrainReport> {
+    let cfg = Config::parse(&format!(
+        "[train]\ndataset = synthetic_mnist\nn_examples = 1024\ninput_side = 14\nhidden = 128,64\noptimizer = sgd\nmomentum = 0.0\nlr = 0.05\nbatch_size = 64\nsteps = {steps}\nlog_every = {}\nbackend = {backend}\n",
+        (steps / 10).max(1),
+    ))
+    .unwrap();
+    let tc = TrainConfig::from_config(&cfg).unwrap();
+    match Trainer::new(tc).run() {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("{backend} backend skipped: {e}");
+            None
+        }
+    }
+}
+
+fn main() {
+    let steps = 100;
+    let mut t = Table::new(
+        "C5 — end-to-end training (synthetic-MNIST MLP 196-128-64-10)",
+        &["backend", "params", "initial loss", "final loss", "acc", "steps/s"],
+    );
+    let mut curves = Vec::new();
+    for backend in [Backend::Native, Backend::Xla] {
+        if let Some(r) = run(backend, steps) {
+            t.row(&[
+                format!("{backend}"),
+                format!("{}", r.num_parameters),
+                format!("{:.4}", r.initial_loss),
+                format!("{:.4}", r.final_loss),
+                r.accuracy.map_or("n/a".into(), |a| format!("{a:.3}")),
+                format!("{:.1}", r.steps_per_sec),
+            ]);
+            curves.push((backend, r.losses.clone()));
+            assert!(
+                r.final_loss < r.initial_loss,
+                "{backend}: loss must descend (paper §5)"
+            );
+        }
+    }
+    t.print();
+
+    println!("\nloss curves (step, loss):");
+    for (backend, losses) in &curves {
+        let pts: Vec<String> = losses
+            .iter()
+            .map(|(s, l)| format!("({s}, {l:.3})"))
+            .collect();
+        println!("  {backend}: {}", pts.join(" "));
+    }
+    println!("\npaper claim (§5): end-to-end examples confirm consistent loss descent.");
+}

@@ -1,0 +1,158 @@
+//! Finite-difference gradient checking (paper §5, eq 11):
+//!
+//! ```text
+//! ∂L/∂θ_i ≈ (L(θ + ε e_i) − L(θ − ε e_i)) / 2ε
+//! ```
+//!
+//! Central differences against the autograd gradient, probe-by-probe. Used
+//! by the test suite on every primitive and layer; "although finite
+//! differences are slow, they provide a reference for edge cases and
+//! broadcasting semantics."
+
+use super::Var;
+use crate::error::Result;
+use crate::tensor::Tensor;
+
+/// Outcome of a gradient check on one input.
+#[derive(Debug, Clone)]
+pub struct GradCheckReport {
+    /// Maximum absolute difference between analytic and numeric gradients.
+    pub max_abs_diff: f32,
+    /// Maximum relative difference (scaled by gradient magnitude).
+    pub max_rel_diff: f32,
+    /// Number of probe coordinates compared.
+    pub probes: usize,
+    /// Whether the check passed the tolerance it was run with.
+    pub pass: bool,
+}
+
+/// Check `f`'s gradient w.r.t. `input` at the given point.
+///
+/// `f` must build a scalar loss from a leaf `Var`. Every coordinate is
+/// probed when `numel <= 64`; otherwise a deterministic stratified subset
+/// of 64 coordinates is used to keep the check fast.
+pub fn gradcheck(f: impl Fn(&Var) -> Result<Var>, input: &Tensor, eps: f32, tol: f32) -> Result<GradCheckReport> {
+    gradcheck_verbose(f, input, eps, tol, false)
+}
+
+/// [`gradcheck`] that optionally prints per-probe diagnostics.
+pub fn gradcheck_verbose(
+    f: impl Fn(&Var) -> Result<Var>,
+    input: &Tensor,
+    eps: f32,
+    tol: f32,
+    verbose: bool,
+) -> Result<GradCheckReport> {
+    // Analytic gradient.
+    let leaf = Var::from_tensor(input.clone(), true);
+    let loss = f(&leaf)?;
+    loss.backward()?;
+    let analytic = leaf
+        .grad()
+        .ok_or_else(|| crate::Error::msg("gradcheck: no gradient reached the input"))?
+        .to_vec();
+
+    // Probe set.
+    let n = input.numel();
+    let probes: Vec<usize> = if n <= 64 {
+        (0..n).collect()
+    } else {
+        // Deterministic stratified subset: 64 evenly spaced coordinates.
+        (0..64).map(|i| i * n / 64).collect()
+    };
+
+    let base = input.to_vec();
+    let mut max_abs = 0.0f32;
+    let mut max_rel = 0.0f32;
+    for &i in &probes {
+        let mut plus = base.clone();
+        plus[i] += eps;
+        let mut minus = base.clone();
+        minus[i] -= eps;
+        let lp = eval_loss(&f, &plus, input)?;
+        let lm = eval_loss(&f, &minus, input)?;
+        let numeric = (lp - lm) / (2.0 * eps);
+        let abs = (numeric - analytic[i]).abs();
+        let rel = abs / analytic[i].abs().max(numeric.abs()).max(1.0);
+        if verbose && abs > tol {
+            eprintln!(
+                "gradcheck probe {i}: analytic={} numeric={numeric} abs={abs}",
+                analytic[i]
+            );
+        }
+        max_abs = max_abs.max(abs);
+        max_rel = max_rel.max(rel);
+    }
+
+    Ok(GradCheckReport {
+        max_abs_diff: max_abs,
+        max_rel_diff: max_rel,
+        probes: probes.len(),
+        pass: max_rel <= tol,
+    })
+}
+
+fn eval_loss(f: &impl Fn(&Var) -> Result<Var>, data: &[f32], proto: &Tensor) -> Result<f32> {
+    let t = Tensor::from_vec(data.to_vec(), proto.dims())?;
+    let v = Var::from_tensor(t, false);
+    // The loss value itself doesn't need a graph.
+    super::no_grad(|| f(&v))?.item()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    #[test]
+    fn passes_on_correct_gradient() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&[3, 3], 0.0, 1.0, &mut rng);
+        let report = gradcheck(
+            |v| v.square().unwrap_sum(),
+            &x,
+            1e-3,
+            1e-2,
+        )
+        .unwrap();
+        assert!(report.pass, "{report:?}");
+        assert_eq!(report.probes, 9);
+    }
+
+    #[test]
+    fn catches_wrong_gradient() {
+        // Deliberately wrong: use sigmoid forward but relu-style graph by
+        // composing x.relu() then comparing against sigmoid — instead we
+        // simply test that an intentionally mismatched loss/grad pair
+        // fails: f uses x^3 but we check against the gradient of x^2 by
+        // constructing a function whose autograd is inconsistent is not
+        // possible through the public API, so assert a tight tolerance
+        // fails for a noisy function instead.
+        let x = Tensor::from_vec(vec![0.5, -0.25], &[2]).unwrap();
+        // |x| has a kink; probing near 0 with large eps gives mismatch
+        let x_kink = Tensor::from_vec(vec![1e-5, -1e-5], &[2]).unwrap();
+        let good = gradcheck(|v| v.abs().unwrap_sum(), &x, 1e-3, 1e-2).unwrap();
+        assert!(good.pass);
+        let bad = gradcheck(|v| v.abs().unwrap_sum(), &x_kink, 1e-3, 1e-2).unwrap();
+        assert!(!bad.pass, "kink probe should fail: {bad:?}");
+    }
+
+    #[test]
+    fn large_input_subsamples() {
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&[20, 20], 0.0, 1.0, &mut rng);
+        let report = gradcheck(|v| v.mean(), &x, 1e-2, 1e-2).unwrap();
+        assert!(report.pass);
+        assert_eq!(report.probes, 64);
+    }
+
+    /// Helper so closures stay terse in tests.
+    trait UnwrapSum {
+        fn unwrap_sum(self) -> Result<Var>;
+    }
+    impl UnwrapSum for Var {
+        fn unwrap_sum(self) -> Result<Var> {
+            self.sum()
+        }
+    }
+}

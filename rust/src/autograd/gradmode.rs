@@ -1,0 +1,72 @@
+//! Thread-local gradient-recording mode, mirroring `torch.no_grad()`.
+
+use std::cell::Cell;
+
+thread_local! {
+    static GRAD_ENABLED: Cell<bool> = const { Cell::new(true) };
+}
+
+/// Whether ops on this thread currently record the autograd graph.
+pub fn is_grad_enabled() -> bool {
+    GRAD_ENABLED.with(|g| g.get())
+}
+
+/// Run `f` with graph recording disabled (inference / update steps).
+pub fn no_grad<T>(f: impl FnOnce() -> T) -> T {
+    let _guard = GradGuard::disable();
+    f()
+}
+
+/// RAII guard that sets the grad mode and restores the previous value on
+/// drop. Usable directly when a closure is inconvenient.
+pub struct GradGuard {
+    prev: bool,
+}
+
+impl GradGuard {
+    /// Disable recording until the guard drops.
+    pub fn disable() -> GradGuard {
+        let prev = is_grad_enabled();
+        GRAD_ENABLED.with(|g| g.set(false));
+        GradGuard { prev }
+    }
+
+    /// Enable recording until the guard drops.
+    pub fn enable() -> GradGuard {
+        let prev = is_grad_enabled();
+        GRAD_ENABLED.with(|g| g.set(true));
+        GradGuard { prev }
+    }
+}
+
+impl Drop for GradGuard {
+    fn drop(&mut self) {
+        GRAD_ENABLED.with(|g| g.set(self.prev));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_grad_restores_state() {
+        assert!(is_grad_enabled());
+        no_grad(|| {
+            assert!(!is_grad_enabled());
+            // nesting
+            no_grad(|| assert!(!is_grad_enabled()));
+            assert!(!is_grad_enabled());
+        });
+        assert!(is_grad_enabled());
+    }
+
+    #[test]
+    fn guard_reenable_inside_no_grad() {
+        no_grad(|| {
+            let _g = GradGuard::enable();
+            assert!(is_grad_enabled());
+        });
+        assert!(is_grad_enabled());
+    }
+}

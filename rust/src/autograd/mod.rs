@@ -1,0 +1,18 @@
+//! Reverse-mode automatic differentiation (paper §3.2).
+//!
+//! A dynamic computation graph is recorded during the forward pass whenever
+//! a [`Var`] requires gradients. Each node stores references to its parents
+//! and a *local pullback* mapping an output cotangent to input cotangents
+//! (vector-Jacobian products, eq 2). `backward()` runs the chain rule
+//! (eq 3) in reverse topological order, accumulating `∇θL` into leaf
+//! gradients. Gradient buffers are allocated lazily — only when a backward
+//! pass reaches them (§3.5).
+
+mod gradmode;
+pub mod gradcheck;
+mod ops;
+mod var;
+
+pub use gradcheck::{gradcheck, gradcheck_verbose, GradCheckReport};
+pub use gradmode::{is_grad_enabled, no_grad, GradGuard};
+pub use var::{Var, VarId};

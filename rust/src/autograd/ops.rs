@@ -1,0 +1,960 @@
+//! Differentiable op wrappers: each forwards through `crate::ops` and
+//! records the local pullback of paper §3.2.
+//!
+//! Pullback conventions (paper eqs 2-4):
+//! - addition: `x̄ += z̄`, `ȳ += z̄`
+//! - Hadamard: `x̄ += z̄ ⊙ y`, `ȳ += z̄ ⊙ x`
+//! - matmul `Y = XW`: `X̄ += Ȳ Wᵀ`, `W̄ += Xᵀ Ȳ`
+//! - dense `Y = XWᵀ`: `X̄ += Ȳ W`, `W̄ += Ȳᵀ X`  (eq 4)
+//!
+//! Broadcast pullbacks sum the cotangent over the expanded axes via
+//! [`Tensor::reduce_grad_to`].
+
+use super::var::{BackwardOp, Var};
+use crate::error::Result;
+use crate::ops::conv::{
+    avg_pool2d, conv2d, conv2d_backward_input, conv2d_backward_weight, max_pool2d, Conv2dSpec,
+};
+use crate::ops::softmax::cross_entropy_forward;
+use crate::ops::unary::gelu_grad_scalar;
+use crate::tensor::Tensor;
+
+/// Build a non-recording result when no parent needs gradients.
+fn constant(out: Tensor) -> Var {
+    Var::from_tensor(out, false)
+}
+
+impl Var {
+    // ---------------------------------------------------------------
+    // Binary arithmetic (broadcasting)
+    // ---------------------------------------------------------------
+
+    /// `z = x + y`; pullbacks `x̄ += z̄`, `ȳ += z̄` (broadcast-reduced).
+    pub fn add(&self, other: &Var) -> Result<Var> {
+        let out = self.data().add(&other.data())?;
+        if !Var::any_requires_grad(&[self, other]) {
+            return Ok(constant(out));
+        }
+        let (xa, xb) = (self.data(), other.data());
+        Ok(Var::from_op(
+            out,
+            BackwardOp {
+                parents: vec![self.clone(), other.clone()],
+                name: "add",
+                pullback: Box::new(move |g| {
+                    vec![
+                        Some(xa.reduce_grad_to(g).unwrap()),
+                        Some(xb.reduce_grad_to(g).unwrap()),
+                    ]
+                }),
+            },
+        ))
+    }
+
+    /// `z = x - y`.
+    pub fn sub(&self, other: &Var) -> Result<Var> {
+        let out = self.data().sub(&other.data())?;
+        if !Var::any_requires_grad(&[self, other]) {
+            return Ok(constant(out));
+        }
+        let (xa, xb) = (self.data(), other.data());
+        Ok(Var::from_op(
+            out,
+            BackwardOp {
+                parents: vec![self.clone(), other.clone()],
+                name: "sub",
+                pullback: Box::new(move |g| {
+                    vec![
+                        Some(xa.reduce_grad_to(g).unwrap()),
+                        Some(xb.reduce_grad_to(&g.neg()).unwrap()),
+                    ]
+                }),
+            },
+        ))
+    }
+
+    /// Hadamard product `z = x ⊙ y`.
+    pub fn mul(&self, other: &Var) -> Result<Var> {
+        let out = self.data().mul(&other.data())?;
+        if !Var::any_requires_grad(&[self, other]) {
+            return Ok(constant(out));
+        }
+        let (xa, xb) = (self.data(), other.data());
+        Ok(Var::from_op(
+            out,
+            BackwardOp {
+                parents: vec![self.clone(), other.clone()],
+                name: "mul",
+                pullback: Box::new(move |g| {
+                    let gx = g.mul(&xb).unwrap();
+                    let gy = g.mul(&xa).unwrap();
+                    vec![
+                        Some(xa.reduce_grad_to(&gx).unwrap()),
+                        Some(xb.reduce_grad_to(&gy).unwrap()),
+                    ]
+                }),
+            },
+        ))
+    }
+
+    /// `z = x / y`.
+    pub fn div(&self, other: &Var) -> Result<Var> {
+        let out = self.data().div(&other.data())?;
+        if !Var::any_requires_grad(&[self, other]) {
+            return Ok(constant(out));
+        }
+        let (xa, xb) = (self.data(), other.data());
+        Ok(Var::from_op(
+            out,
+            BackwardOp {
+                parents: vec![self.clone(), other.clone()],
+                name: "div",
+                pullback: Box::new(move |g| {
+                    // x̄ = ḡ / y ; ȳ = -ḡ x / y²
+                    let gx = g.div(&xb).unwrap();
+                    let gy = g
+                        .mul(&xa)
+                        .unwrap()
+                        .div(&xb.square())
+                        .unwrap()
+                        .neg();
+                    vec![
+                        Some(xa.reduce_grad_to(&gx).unwrap()),
+                        Some(xb.reduce_grad_to(&gy).unwrap()),
+                    ]
+                }),
+            },
+        ))
+    }
+
+    /// Add a scalar constant (gradient passes through).
+    pub fn add_scalar(&self, s: f32) -> Var {
+        let out = self.data().add_scalar(s);
+        if !Var::any_requires_grad(&[self]) {
+            return constant(out);
+        }
+        Var::from_op(
+            out,
+            BackwardOp {
+                parents: vec![self.clone()],
+                name: "add_scalar",
+                pullback: Box::new(move |g| vec![Some(g.clone())]),
+            },
+        )
+    }
+
+    /// Multiply by a scalar constant.
+    pub fn mul_scalar(&self, s: f32) -> Var {
+        let out = self.data().mul_scalar(s);
+        if !Var::any_requires_grad(&[self]) {
+            return constant(out);
+        }
+        Var::from_op(
+            out,
+            BackwardOp {
+                parents: vec![self.clone()],
+                name: "mul_scalar",
+                pullback: Box::new(move |g| vec![Some(g.mul_scalar(s))]),
+            },
+        )
+    }
+
+    // ---------------------------------------------------------------
+    // Unary maps
+    // ---------------------------------------------------------------
+
+    /// Generic recorded unary op: `forward` computes the value, `vjp`
+    /// computes `x̄` from `(x, y, ḡ)`.
+    fn unary(
+        &self,
+        name: &'static str,
+        forward: impl Fn(&Tensor) -> Tensor,
+        vjp: impl Fn(&Tensor, &Tensor, &Tensor) -> Tensor + 'static,
+    ) -> Var {
+        let x = self.data();
+        let out = forward(&x);
+        if !Var::any_requires_grad(&[self]) {
+            return constant(out);
+        }
+        let y = out.clone();
+        Var::from_op(
+            out,
+            BackwardOp {
+                parents: vec![self.clone()],
+                name,
+                pullback: Box::new(move |g| vec![Some(vjp(&x, &y, g))]),
+            },
+        )
+    }
+
+    /// Elementwise negation.
+    pub fn neg(&self) -> Var {
+        self.unary("neg", |x| x.neg(), |_, _, g| g.neg())
+    }
+
+    /// Elementwise exp; `x̄ = ḡ ⊙ e^x` (reuses the forward output).
+    pub fn exp(&self) -> Var {
+        self.unary("exp", |x| x.exp(), |_, y, g| g.mul(y).unwrap())
+    }
+
+    /// Natural log; `x̄ = ḡ / x`.
+    pub fn log(&self) -> Var {
+        self.unary("log", |x| x.log(), |x, _, g| g.div(x).unwrap())
+    }
+
+    /// Square root; `x̄ = ḡ / (2√x)`.
+    pub fn sqrt(&self) -> Var {
+        self.unary(
+            "sqrt",
+            |x| x.sqrt(),
+            |_, y, g| g.div(&y.mul_scalar(2.0)).unwrap(),
+        )
+    }
+
+    /// Elementwise square; `x̄ = 2x ⊙ ḡ`.
+    pub fn square(&self) -> Var {
+        self.unary(
+            "square",
+            |x| x.square(),
+            |x, _, g| g.mul(&x.mul_scalar(2.0)).unwrap(),
+        )
+    }
+
+    /// Scalar power; `x̄ = s·x^{s-1} ⊙ ḡ`.
+    pub fn pow_scalar(&self, s: f32) -> Var {
+        self.unary(
+            "pow_scalar",
+            move |x| x.pow_scalar(s),
+            move |x, _, g| g.mul(&x.pow_scalar(s - 1.0).mul_scalar(s)).unwrap(),
+        )
+    }
+
+    /// Reciprocal; `x̄ = -ḡ / x²`.
+    pub fn recip(&self) -> Var {
+        self.unary(
+            "recip",
+            |x| x.recip(),
+            |x, _, g| g.div(&x.square()).unwrap().neg(),
+        )
+    }
+
+    /// Absolute value; `x̄ = sign(x) ⊙ ḡ` (0 at 0).
+    pub fn abs(&self) -> Var {
+        self.unary(
+            "abs",
+            |x| x.abs(),
+            |x, _, g| {
+                g.mul(&x.map(|v| {
+                    if v > 0.0 {
+                        1.0
+                    } else if v < 0.0 {
+                        -1.0
+                    } else {
+                        0.0
+                    }
+                }))
+                .unwrap()
+            },
+        )
+    }
+
+    /// Sine.
+    pub fn sin(&self) -> Var {
+        self.unary("sin", |x| x.sin(), |x, _, g| g.mul(&x.cos()).unwrap())
+    }
+
+    /// Cosine.
+    pub fn cos(&self) -> Var {
+        self.unary(
+            "cos",
+            |x| x.cos(),
+            |x, _, g| g.mul(&x.sin()).unwrap().neg(),
+        )
+    }
+
+    /// Clamp; gradient passes only inside the open interval.
+    pub fn clamp(&self, lo: f32, hi: f32) -> Var {
+        self.unary(
+            "clamp",
+            move |x| x.clamp(lo, hi),
+            move |x, _, g| {
+                g.mul(&x.map(move |v| f32::from(v > lo && v < hi)))
+                    .unwrap()
+            },
+        )
+    }
+
+    // ---------------------------------------------------------------
+    // Nonlinearities (paper §3.3)
+    // ---------------------------------------------------------------
+
+    /// ReLU; `∂ReLU(x)/∂x = 1{x > 0}`.
+    pub fn relu(&self) -> Var {
+        self.unary(
+            "relu",
+            |x| x.relu(),
+            |x, _, g| g.mul(&x.map(|v| f32::from(v > 0.0))).unwrap(),
+        )
+    }
+
+    /// Leaky ReLU with negative slope `alpha`.
+    pub fn leaky_relu(&self, alpha: f32) -> Var {
+        self.unary(
+            "leaky_relu",
+            move |x| x.leaky_relu(alpha),
+            move |x, _, g| {
+                g.mul(&x.map(move |v| if v > 0.0 { 1.0 } else { alpha }))
+                    .unwrap()
+            },
+        )
+    }
+
+    /// Sigmoid; `x̄ = ḡ ⊙ σ(x)(1-σ(x))` (reuses the output).
+    pub fn sigmoid(&self) -> Var {
+        self.unary(
+            "sigmoid",
+            |x| x.sigmoid(),
+            |_, y, g| {
+                let one_minus = y.map(|v| 1.0 - v);
+                g.mul(y).unwrap().mul(&one_minus).unwrap()
+            },
+        )
+    }
+
+    /// Tanh; `x̄ = ḡ ⊙ (1 - tanh²x)`.
+    pub fn tanh(&self) -> Var {
+        self.unary(
+            "tanh",
+            |x| x.tanh(),
+            |_, y, g| g.mul(&y.map(|t| 1.0 - t * t)).unwrap(),
+        )
+    }
+
+    /// GELU (tanh approximation) with its exact derivative.
+    pub fn gelu(&self) -> Var {
+        self.unary(
+            "gelu",
+            |x| x.gelu(),
+            |x, _, g| g.mul(&x.map(gelu_grad_scalar)).unwrap(),
+        )
+    }
+
+    /// Elementwise maximum with a constant `other` tensor is rare; the
+    /// useful recorded form is dropout-style masking: `z = x ⊙ mask`
+    /// where `mask` is a constant. Provided via [`Var::mul_mask`].
+    pub fn mul_mask(&self, mask: &Tensor) -> Result<Var> {
+        let out = self.data().mul(mask)?;
+        if !Var::any_requires_grad(&[self]) {
+            return Ok(constant(out));
+        }
+        let m = mask.clone();
+        Ok(Var::from_op(
+            out,
+            BackwardOp {
+                parents: vec![self.clone()],
+                name: "mul_mask",
+                pullback: Box::new(move |g| vec![Some(g.mul(&m).unwrap())]),
+            },
+        ))
+    }
+
+    // ---------------------------------------------------------------
+    // Matrix products (paper eq 1 / eq 4)
+    // ---------------------------------------------------------------
+
+    /// 2-D matmul `Y = X · W`; `X̄ = Ȳ Wᵀ`, `W̄ = Xᵀ Ȳ`.
+    pub fn matmul(&self, other: &Var) -> Result<Var> {
+        let out = self.data().matmul(&other.data())?;
+        if !Var::any_requires_grad(&[self, other]) {
+            return Ok(constant(out));
+        }
+        let (x, w) = (self.data(), other.data());
+        Ok(Var::from_op(
+            out,
+            BackwardOp {
+                parents: vec![self.clone(), other.clone()],
+                name: "matmul",
+                pullback: Box::new(move |g| {
+                    let gx = g.matmul(&w.t().unwrap()).unwrap();
+                    let gw = x.t().unwrap().matmul(g).unwrap();
+                    vec![Some(gx), Some(gw)]
+                }),
+            },
+        ))
+    }
+
+    /// Dense product `Y = X · Wᵀ` (paper eq 1); pullbacks are eq (4):
+    /// `X̄ = Ȳ W`, `W̄ = Ȳᵀ X`.
+    pub fn matmul_nt(&self, w: &Var) -> Result<Var> {
+        let out = self.data().matmul_nt(&w.data())?;
+        if !Var::any_requires_grad(&[self, w]) {
+            return Ok(constant(out));
+        }
+        let (x, wd) = (self.data(), w.data());
+        Ok(Var::from_op(
+            out,
+            BackwardOp {
+                parents: vec![self.clone(), w.clone()],
+                name: "matmul_nt",
+                pullback: Box::new(move |g| {
+                    let gx = g.matmul(&wd).unwrap(); // Ȳ W
+                    let gw = g.t().unwrap().matmul(&x).unwrap(); // Ȳᵀ X
+                    vec![Some(gx), Some(gw)]
+                }),
+            },
+        ))
+    }
+
+    // ---------------------------------------------------------------
+    // Reductions
+    // ---------------------------------------------------------------
+
+    /// Sum of all elements; `x̄ = ḡ · 1`.
+    pub fn sum(&self) -> Result<Var> {
+        let out = self.data().sum();
+        if !Var::any_requires_grad(&[self]) {
+            return Ok(constant(out));
+        }
+        let dims = self.dims();
+        Ok(Var::from_op(
+            out,
+            BackwardOp {
+                parents: vec![self.clone()],
+                name: "sum",
+                pullback: Box::new(move |g| {
+                    let seed = g.item().unwrap();
+                    vec![Some(Tensor::full(&dims, seed))]
+                }),
+            },
+        ))
+    }
+
+    /// Mean of all elements.
+    pub fn mean(&self) -> Result<Var> {
+        let n = self.data().numel() as f32;
+        Ok(self.sum()?.mul_scalar(1.0 / n))
+    }
+
+    /// Sum along an axis.
+    pub fn sum_axis(&self, axis: isize, keepdim: bool) -> Result<Var> {
+        let out = self.data().sum_axis(axis, keepdim)?;
+        if !Var::any_requires_grad(&[self]) {
+            return Ok(constant(out));
+        }
+        let dims = self.dims();
+        let ax = self.data().shape().normalize_axis(axis)?;
+        Ok(Var::from_op(
+            out,
+            BackwardOp {
+                parents: vec![self.clone()],
+                name: "sum_axis",
+                pullback: Box::new(move |g| {
+                    // restore the reduced axis, then broadcast back
+                    let g2 = if keepdim {
+                        g.clone()
+                    } else {
+                        g.unsqueeze(ax as isize).unwrap()
+                    };
+                    vec![Some(g2.broadcast_to(&dims).unwrap().contiguous())]
+                }),
+            },
+        ))
+    }
+
+    /// Mean along an axis.
+    pub fn mean_axis(&self, axis: isize, keepdim: bool) -> Result<Var> {
+        let ax = self.data().shape().normalize_axis(axis)?;
+        let n = self.dims()[ax] as f32;
+        Ok(self.sum_axis(axis, keepdim)?.mul_scalar(1.0 / n))
+    }
+
+    /// Global max; the cotangent routes to the (first) argmax element.
+    pub fn max_all(&self) -> Result<Var> {
+        let out = self.data().max_all();
+        if !Var::any_requires_grad(&[self]) {
+            return Ok(constant(out));
+        }
+        let x = self.data();
+        Ok(Var::from_op(
+            out,
+            BackwardOp {
+                parents: vec![self.clone()],
+                name: "max_all",
+                pullback: Box::new(move |g| {
+                    let flat = x.to_vec();
+                    let arg = crate::ops::kernels::argmax(&flat);
+                    let mut grad = vec![0.0f32; flat.len()];
+                    grad[arg] = g.item().unwrap();
+                    vec![Some(Tensor::from_vec(grad, x.dims()).unwrap())]
+                }),
+            },
+        ))
+    }
+
+    // ---------------------------------------------------------------
+    // Shape ops
+    // ---------------------------------------------------------------
+
+    /// Reshape; the pullback reshapes the cotangent back.
+    pub fn reshape(&self, dims: &[usize]) -> Result<Var> {
+        let out = self.data().reshape(dims)?;
+        if !Var::any_requires_grad(&[self]) {
+            return Ok(constant(out));
+        }
+        let orig = self.dims();
+        Ok(Var::from_op(
+            out,
+            BackwardOp {
+                parents: vec![self.clone()],
+                name: "reshape",
+                pullback: Box::new(move |g| vec![Some(g.reshape(&orig).unwrap())]),
+            },
+        ))
+    }
+
+    /// Transpose two axes; the pullback swaps them back.
+    pub fn transpose(&self, a: isize, b: isize) -> Result<Var> {
+        let out = self.data().transpose(a, b)?;
+        if !Var::any_requires_grad(&[self]) {
+            return Ok(constant(out));
+        }
+        Ok(Var::from_op(
+            out,
+            BackwardOp {
+                parents: vec![self.clone()],
+                name: "transpose",
+                pullback: Box::new(move |g| {
+                    vec![Some(g.transpose(a, b).unwrap().contiguous())]
+                }),
+            },
+        ))
+    }
+
+    /// Broadcast to a larger shape; the pullback sums over expanded axes.
+    pub fn broadcast_to(&self, dims: &[usize]) -> Result<Var> {
+        let out = self.data().broadcast_to(dims)?.contiguous();
+        if !Var::any_requires_grad(&[self]) {
+            return Ok(constant(out));
+        }
+        let x = self.data();
+        Ok(Var::from_op(
+            out,
+            BackwardOp {
+                parents: vec![self.clone()],
+                name: "broadcast_to",
+                pullback: Box::new(move |g| vec![Some(x.reduce_grad_to(g).unwrap())]),
+            },
+        ))
+    }
+
+    /// Concatenate along an axis; the pullback splits the cotangent.
+    pub fn cat(vars: &[&Var], axis: isize) -> Result<Var> {
+        let datas: Vec<Tensor> = vars.iter().map(|v| v.data()).collect();
+        let refs: Vec<&Tensor> = datas.iter().collect();
+        let out = Tensor::cat(&refs, axis)?;
+        if !super::gradmode::is_grad_enabled() || !vars.iter().any(|v| v.requires_grad()) {
+            return Ok(constant(out));
+        }
+        let ax = out.shape().normalize_axis(axis)?;
+        let sizes: Vec<usize> = datas.iter().map(|d| d.dims()[ax]).collect();
+        let parents: Vec<Var> = vars.iter().map(|v| (*v).clone()).collect();
+        Ok(Var::from_op(
+            out,
+            BackwardOp {
+                parents,
+                name: "cat",
+                pullback: Box::new(move |g| {
+                    let mut start = 0usize;
+                    sizes
+                        .iter()
+                        .map(|&len| {
+                            let piece =
+                                g.narrow(ax as isize, start, len).unwrap().contiguous();
+                            start += len;
+                            Some(piece)
+                        })
+                        .collect()
+                }),
+            },
+        ))
+    }
+
+    /// Gather rows of a `[vocab, d]` table by i32 ids; the pullback
+    /// scatter-adds the cotangent back into the table (sparse gradient).
+    pub fn gather_rows(&self, ids: &Tensor, n_rows: usize) -> Result<Var> {
+        let out = self.data().index_select0(ids)?;
+        if !Var::any_requires_grad(&[self]) {
+            return Ok(constant(out));
+        }
+        let ids = ids.clone();
+        Ok(Var::from_op(
+            out,
+            BackwardOp {
+                parents: vec![self.clone()],
+                name: "gather_rows",
+                pullback: Box::new(move |g| {
+                    vec![Some(Tensor::scatter_add0(g, &ids, n_rows).unwrap())]
+                }),
+            },
+        ))
+    }
+
+    // ---------------------------------------------------------------
+    // Softmax family (paper eq 8)
+    // ---------------------------------------------------------------
+
+    /// Softmax along the last axis; `x̄ = (ḡ - Σ(ḡ⊙y)) ⊙ y`.
+    pub fn softmax(&self) -> Result<Var> {
+        let out = self.data().softmax()?;
+        if !Var::any_requires_grad(&[self]) {
+            return Ok(constant(out));
+        }
+        let y = out.clone();
+        Ok(Var::from_op(
+            out,
+            BackwardOp {
+                parents: vec![self.clone()],
+                name: "softmax",
+                pullback: Box::new(move |g| {
+                    let dot = g.mul(&y).unwrap().sum_axis(-1, true).unwrap();
+                    let centered = g.sub(&dot).unwrap();
+                    vec![Some(centered.mul(&y).unwrap())]
+                }),
+            },
+        ))
+    }
+
+    /// Log-softmax; `x̄ = ḡ - softmax(x) · Σḡ`.
+    pub fn log_softmax(&self) -> Result<Var> {
+        let out = self.data().log_softmax()?;
+        if !Var::any_requires_grad(&[self]) {
+            return Ok(constant(out));
+        }
+        let probs = out.exp();
+        Ok(Var::from_op(
+            out,
+            BackwardOp {
+                parents: vec![self.clone()],
+                name: "log_softmax",
+                pullback: Box::new(move |g| {
+                    let gsum = g.sum_axis(-1, true).unwrap();
+                    let correction = probs.mul(&gsum).unwrap();
+                    vec![Some(g.sub(&correction).unwrap())]
+                }),
+            },
+        ))
+    }
+
+    /// Fused mean cross-entropy over logits (eq 8); pullback is the classic
+    /// `(softmax - onehot)/b`.
+    pub fn cross_entropy(&self, labels: &Tensor) -> Result<Var> {
+        let (loss, probs) = cross_entropy_forward(&self.data(), labels)?;
+        if !Var::any_requires_grad(&[self]) {
+            return Ok(constant(loss));
+        }
+        let onehot = Tensor::one_hot(labels, probs.dims()[1])?;
+        let b = probs.dims()[0] as f32;
+        Ok(Var::from_op(
+            loss,
+            BackwardOp {
+                parents: vec![self.clone()],
+                name: "cross_entropy",
+                pullback: Box::new(move |g| {
+                    let seed = g.item().unwrap();
+                    let diff = probs.sub(&onehot).unwrap();
+                    vec![Some(diff.mul_scalar(seed / b))]
+                }),
+            },
+        ))
+    }
+
+    // ---------------------------------------------------------------
+    // Convolution / pooling (paper eq 6)
+    // ---------------------------------------------------------------
+
+    /// 2-D convolution with recorded pullbacks w.r.t. input and weight.
+    pub fn conv2d(&self, weight: &Var, spec: Conv2dSpec) -> Result<Var> {
+        let out = conv2d(&self.data(), &weight.data(), spec)?;
+        if !Var::any_requires_grad(&[self, weight]) {
+            return Ok(constant(out));
+        }
+        let (x, w) = (self.data(), weight.data());
+        Ok(Var::from_op(
+            out,
+            BackwardOp {
+                parents: vec![self.clone(), weight.clone()],
+                name: "conv2d",
+                pullback: Box::new(move |g| {
+                    let dx = conv2d_backward_input(g, &w, x.dims(), spec).unwrap();
+                    let dw = conv2d_backward_weight(g, &x, w.dims(), spec).unwrap();
+                    vec![Some(dx), Some(dw)]
+                }),
+            },
+        ))
+    }
+
+    /// Max-pool with window/stride `k`; the cotangent scatters to argmax
+    /// positions.
+    pub fn max_pool2d(&self, k: usize) -> Result<Var> {
+        let (out, arg) = max_pool2d(&self.data(), k)?;
+        if !Var::any_requires_grad(&[self]) {
+            return Ok(constant(out));
+        }
+        let in_dims = self.dims();
+        Ok(Var::from_op(
+            out,
+            BackwardOp {
+                parents: vec![self.clone()],
+                name: "max_pool2d",
+                pullback: Box::new(move |g| {
+                    let gv = g.to_vec();
+                    let mut dx = vec![0.0f32; in_dims.iter().product()];
+                    for (o, &src) in arg.iter().enumerate() {
+                        dx[src] += gv[o];
+                    }
+                    vec![Some(Tensor::from_vec(dx, &in_dims).unwrap())]
+                }),
+            },
+        ))
+    }
+
+    /// Average-pool with window/stride `k`; the cotangent spreads evenly.
+    pub fn avg_pool2d(&self, k: usize) -> Result<Var> {
+        let out = avg_pool2d(&self.data(), k)?;
+        if !Var::any_requires_grad(&[self]) {
+            return Ok(constant(out));
+        }
+        let in_dims = self.dims();
+        Ok(Var::from_op(
+            out,
+            BackwardOp {
+                parents: vec![self.clone()],
+                name: "avg_pool2d",
+                pullback: Box::new(move |g| {
+                    let (n, c, oh, ow) = (
+                        g.dims()[0],
+                        g.dims()[1],
+                        g.dims()[2],
+                        g.dims()[3],
+                    );
+                    let gv = g.to_vec();
+                    let (h, w) = (in_dims[2], in_dims[3]);
+                    let inv = 1.0 / (k * k) as f32;
+                    let mut dx = vec![0.0f32; in_dims.iter().product()];
+                    for img in 0..n * c {
+                        for oy in 0..oh {
+                            for ox in 0..ow {
+                                let gval = gv[img * oh * ow + oy * ow + ox] * inv;
+                                for dy in 0..k {
+                                    for dxx in 0..k {
+                                        dx[img * h * w + (oy * k + dy) * w + ox * k + dxx] +=
+                                            gval;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    vec![Some(Tensor::from_vec(dx, &in_dims).unwrap())]
+                }),
+            },
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autograd::no_grad;
+    use crate::data::Rng;
+
+    fn leaf(v: Vec<f32>, dims: &[usize]) -> Var {
+        Var::from_tensor(Tensor::from_vec(v, dims).unwrap(), true)
+    }
+
+    #[test]
+    fn add_pullback() {
+        let x = leaf(vec![1., 2.], &[2]);
+        let y = leaf(vec![3., 4.], &[2]);
+        let z = x.add(&y).unwrap().sum().unwrap();
+        z.backward().unwrap();
+        assert_eq!(x.grad().unwrap().to_vec(), vec![1., 1.]);
+        assert_eq!(y.grad().unwrap().to_vec(), vec![1., 1.]);
+    }
+
+    #[test]
+    fn mul_pullback_is_hadamard() {
+        let x = leaf(vec![2., 3.], &[2]);
+        let y = leaf(vec![5., 7.], &[2]);
+        let z = x.mul(&y).unwrap().sum().unwrap();
+        z.backward().unwrap();
+        assert_eq!(x.grad().unwrap().to_vec(), vec![5., 7.]); // = y
+        assert_eq!(y.grad().unwrap().to_vec(), vec![2., 3.]); // = x
+    }
+
+    #[test]
+    fn broadcast_add_reduces_bias_grad() {
+        // paper's dense bias case: grad of b is summed over the batch
+        let x = leaf(vec![1., 2., 3., 4., 5., 6.], &[2, 3]);
+        let b = leaf(vec![0.1, 0.2, 0.3], &[3]);
+        let z = x.add(&b).unwrap().sum().unwrap();
+        z.backward().unwrap();
+        assert_eq!(b.grad().unwrap().dims(), &[3]);
+        assert_eq!(b.grad().unwrap().to_vec(), vec![2., 2., 2.]);
+    }
+
+    #[test]
+    fn matmul_pullbacks_match_eq4() {
+        let mut rng = Rng::new(1);
+        let x = Var::from_tensor(Tensor::randn(&[3, 4], 0.0, 1.0, &mut rng), true);
+        let w = Var::from_tensor(Tensor::randn(&[5, 4], 0.0, 1.0, &mut rng), true);
+        // Y = X Wᵀ, L = sum(Y) ⇒ Ȳ = 1; X̄ = 1·W ; W̄ = 1ᵀ·X
+        let y = x.matmul_nt(&w).unwrap();
+        y.sum().unwrap().backward().unwrap();
+        let ones = Tensor::ones(&[3, 5]);
+        let gx_expect = ones.matmul(&w.data()).unwrap();
+        let gw_expect = ones.t().unwrap().matmul(&x.data()).unwrap();
+        assert!(x.grad().unwrap().allclose(&gx_expect, 1e-5, 1e-6));
+        assert!(w.grad().unwrap().allclose(&gw_expect, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn chain_rule_composition() {
+        // L = sum((x * 2 + 1)^2) ⇒ dL/dx = 2(2x+1)*2
+        let x = leaf(vec![1.0, -0.5], &[2]);
+        let z = x.mul_scalar(2.0).add_scalar(1.0).square().sum().unwrap();
+        z.backward().unwrap();
+        let expect: Vec<f32> = vec![4.0 * (2.0 + 1.0), 4.0 * (-1.0 + 1.0)];
+        assert_eq!(x.grad().unwrap().to_vec(), expect);
+    }
+
+    #[test]
+    fn reuse_accumulates_through_graph() {
+        // z = x*x (x used twice through separate ops) ⇒ dz/dx = 2x
+        let x = leaf(vec![3.0], &[1]);
+        let z = x.mul(&x).unwrap().sum().unwrap();
+        z.backward().unwrap();
+        assert_eq!(x.grad().unwrap().to_vec(), vec![6.0]);
+    }
+
+    #[test]
+    fn diamond_graph_accumulates_once_per_path() {
+        // y = x+x; z = sum(y) ⇒ dz/dx = 2
+        let x = leaf(vec![1.0], &[1]);
+        let y = x.add(&x).unwrap();
+        y.sum().unwrap().backward().unwrap();
+        assert_eq!(x.grad().unwrap().to_vec(), vec![2.0]);
+    }
+
+    #[test]
+    fn no_grad_suppresses_recording() {
+        let x = leaf(vec![1.0], &[1]);
+        let y = no_grad(|| x.mul_scalar(3.0));
+        assert!(y.is_leaf());
+        assert!(!y.requires_grad());
+    }
+
+    #[test]
+    fn constant_branches_skip_graph() {
+        let x = leaf(vec![1.0, 2.0], &[2]);
+        let c = Var::from_tensor(Tensor::ones(&[2]), false);
+        let z = x.mul(&c).unwrap().sum().unwrap();
+        z.backward().unwrap();
+        assert!(x.grad().is_some());
+        assert!(c.grad().is_none());
+    }
+
+    #[test]
+    fn softmax_grad_sums_to_zero() {
+        // Softmax rows are on the simplex ⇒ pullback of any ḡ sums to 0/row.
+        let mut rng = Rng::new(2);
+        let x = Var::from_tensor(Tensor::randn(&[4, 7], 0.0, 1.0, &mut rng), true);
+        let p = x.softmax().unwrap();
+        // weighted sum with random weights to get a scalar
+        let wts = Tensor::randn(&[4, 7], 0.0, 1.0, &mut rng);
+        let loss = p.mul_mask(&wts).unwrap().sum().unwrap();
+        loss.backward().unwrap();
+        let g = x.grad().unwrap();
+        let row_sums = g.sum_axis(1, false).unwrap();
+        assert!(row_sums.allclose(&Tensor::zeros(&[4]), 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn cross_entropy_grad_is_probs_minus_onehot() {
+        let logits = leaf(vec![2.0, 0.0, -1.0, 0.5, 1.5, 0.0], &[2, 3]);
+        let labels = Tensor::from_vec_i32(vec![0, 2], &[2]).unwrap();
+        let loss = logits.cross_entropy(&labels).unwrap();
+        loss.backward().unwrap();
+        let probs = logits.data().softmax().unwrap();
+        let onehot = Tensor::one_hot(&labels, 3).unwrap();
+        let expect = probs.sub(&onehot).unwrap().mul_scalar(0.5);
+        assert!(logits.grad().unwrap().allclose(&expect, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn reshape_transpose_roundtrip_grads() {
+        let x = leaf(vec![1., 2., 3., 4., 5., 6.], &[2, 3]);
+        let z = x
+            .reshape(&[3, 2])
+            .unwrap()
+            .transpose(0, 1)
+            .unwrap()
+            .sum()
+            .unwrap();
+        z.backward().unwrap();
+        assert_eq!(x.grad().unwrap().dims(), &[2, 3]);
+        assert_eq!(x.grad().unwrap().to_vec(), vec![1.0; 6]);
+    }
+
+    #[test]
+    fn cat_splits_cotangent() {
+        let a = leaf(vec![1., 2.], &[2, 1]);
+        let b = leaf(vec![3., 4.], &[2, 1]);
+        let c = Var::cat(&[&a, &b], 1).unwrap();
+        // weight the two columns differently
+        let w = Tensor::from_vec(vec![1., 10., 1., 10.], &[2, 2]).unwrap();
+        c.mul_mask(&w).unwrap().sum().unwrap().backward().unwrap();
+        assert_eq!(a.grad().unwrap().to_vec(), vec![1., 1.]);
+        assert_eq!(b.grad().unwrap().to_vec(), vec![10., 10.]);
+    }
+
+    #[test]
+    fn max_all_routes_to_argmax() {
+        let x = leaf(vec![1., 5., 3.], &[3]);
+        x.max_all().unwrap().backward().unwrap();
+        assert_eq!(x.grad().unwrap().to_vec(), vec![0., 1., 0.]);
+    }
+
+    #[test]
+    fn sum_axis_grads_broadcast_back() {
+        let x = leaf(vec![1., 2., 3., 4., 5., 6.], &[2, 3]);
+        let s = x.sum_axis(0, false).unwrap(); // [3]
+        let w = Tensor::from_vec(vec![1., 2., 3.], &[3]).unwrap();
+        s.mul_mask(&w).unwrap().sum().unwrap().backward().unwrap();
+        assert_eq!(
+            x.grad().unwrap().to_vec(),
+            vec![1., 2., 3., 1., 2., 3.]
+        );
+    }
+
+    #[test]
+    fn conv_and_pool_record() {
+        let mut rng = Rng::new(3);
+        let x = Var::from_tensor(Tensor::randn(&[1, 1, 4, 4], 0.0, 1.0, &mut rng), true);
+        let w = Var::from_tensor(Tensor::randn(&[2, 1, 3, 3], 0.0, 1.0, &mut rng), true);
+        let y = x
+            .conv2d(&w, Conv2dSpec { stride: 1, padding: 1 })
+            .unwrap();
+        let p = y.max_pool2d(2).unwrap();
+        p.sum().unwrap().backward().unwrap();
+        assert_eq!(x.grad().unwrap().dims(), &[1, 1, 4, 4]);
+        assert_eq!(w.grad().unwrap().dims(), &[2, 1, 3, 3]);
+    }
+
+    #[test]
+    fn graph_size_counts_nodes() {
+        let x = leaf(vec![1.0], &[1]);
+        let z = x.mul_scalar(2.0).add_scalar(1.0).sum().unwrap();
+        // nodes: x, mul_scalar, add_scalar, sum
+        assert_eq!(z.graph_size(), 4);
+    }
+}

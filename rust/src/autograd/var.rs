@@ -1,0 +1,308 @@
+//! [`Var`]: a tensor participating in the dynamic autograd graph.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::gradmode::is_grad_enabled;
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// Unique id for graph nodes (monotonic; also a valid topological tiebreak
+/// since parents are always created before children).
+pub type VarId = usize;
+
+static NEXT_ID: AtomicUsize = AtomicUsize::new(1);
+
+/// The recorded backward edge of a node: its parents and the local
+/// pullback. The pullback receives the output cotangent and returns one
+/// optional input cotangent per parent (None for parents that do not
+/// require grad).
+pub(crate) struct BackwardOp {
+    pub parents: Vec<Var>,
+    pub pullback: Box<dyn Fn(&Tensor) -> Vec<Option<Tensor>>>,
+    /// Op name for debugging / graph dumps.
+    pub name: &'static str,
+}
+
+pub(crate) struct VarInner {
+    pub data: Tensor,
+    pub grad: Option<Tensor>,
+    pub requires_grad: bool,
+    pub op: Option<BackwardOp>,
+    pub id: VarId,
+}
+
+/// A node in the dynamic computation graph 𝒢 (paper §3.2).
+///
+/// `Var` is a cheap handle (`Rc`) — cloning shares the node, so a model
+/// parameter can appear in many forward passes while accumulating into one
+/// `.grad` buffer, exactly like a PyTorch leaf tensor.
+#[derive(Clone)]
+pub struct Var(pub(crate) Rc<RefCell<VarInner>>);
+
+impl Var {
+    /// Wrap a tensor as a graph leaf.
+    pub fn from_tensor(data: Tensor, requires_grad: bool) -> Var {
+        Var(Rc::new(RefCell::new(VarInner {
+            data,
+            grad: None,
+            requires_grad,
+            op: None,
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+        })))
+    }
+
+    /// Wrap a scalar constant.
+    pub fn scalar(v: f32) -> Var {
+        Var::from_tensor(Tensor::scalar(v), false)
+    }
+
+    /// Interior node produced by an op.
+    pub(crate) fn from_op(data: Tensor, op: BackwardOp) -> Var {
+        Var(Rc::new(RefCell::new(VarInner {
+            data,
+            grad: None,
+            requires_grad: true,
+            op: Some(op),
+            id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+        })))
+    }
+
+    /// Node id (creation order).
+    pub fn id(&self) -> VarId {
+        self.0.borrow().id
+    }
+
+    /// Snapshot of the value (cheap: shares storage).
+    pub fn data(&self) -> Tensor {
+        self.0.borrow().data.clone()
+    }
+
+    /// Replace the value in place (used by optimizers; does not touch the
+    /// graph, so call it under [`super::no_grad`] semantics).
+    pub fn set_data(&self, t: Tensor) {
+        self.0.borrow_mut().data = t;
+    }
+
+    /// Current gradient, if one has been accumulated.
+    pub fn grad(&self) -> Option<Tensor> {
+        self.0.borrow().grad.clone()
+    }
+
+    /// Zero / clear the gradient buffer (drops it — lazily reallocated by
+    /// the next backward, per §3.5).
+    pub fn zero_grad(&self) {
+        self.0.borrow_mut().grad = None;
+    }
+
+    /// Whether this node wants gradients.
+    pub fn requires_grad(&self) -> bool {
+        self.0.borrow().requires_grad
+    }
+
+    /// Mark/unmark a leaf as requiring grad.
+    pub fn set_requires_grad(&self, rg: bool) {
+        self.0.borrow_mut().requires_grad = rg;
+    }
+
+    /// Whether this is a leaf (no recorded op).
+    pub fn is_leaf(&self) -> bool {
+        self.0.borrow().op.is_none()
+    }
+
+    /// Name of the op that produced this node (leaves report "leaf").
+    pub fn op_name(&self) -> &'static str {
+        self.0.borrow().op.as_ref().map_or("leaf", |o| o.name)
+    }
+
+    /// Shape of the value.
+    pub fn dims(&self) -> Vec<usize> {
+        self.0.borrow().data.dims().to_vec()
+    }
+
+    /// Detach: a new leaf sharing the value but cut from the graph.
+    pub fn detach(&self) -> Var {
+        Var::from_tensor(self.data(), false)
+    }
+
+    /// Convenience: extract a scalar value.
+    pub fn item(&self) -> Result<f32> {
+        self.0.borrow().data.item()
+    }
+
+    /// True when recording should happen for an op consuming `parents`.
+    pub(crate) fn any_requires_grad(parents: &[&Var]) -> bool {
+        is_grad_enabled() && parents.iter().any(|p| p.requires_grad())
+    }
+
+    /// Public wrapper over gradient accumulation (used by gradient
+    /// clipping and custom training loops).
+    pub fn accumulate_grad_public(&self, g: &Tensor) {
+        self.accumulate_grad(g);
+    }
+
+    /// Accumulate `g` into the node's grad buffer (`x̄ += ḡ`).
+    pub(crate) fn accumulate_grad(&self, g: &Tensor) {
+        let mut inner = self.0.borrow_mut();
+        inner.grad = Some(match inner.grad.take() {
+            None => g.clone(),
+            Some(existing) => existing
+                .add(g)
+                .expect("gradient shapes must match accumulated buffer"),
+        });
+    }
+
+    /// Run reverse-mode accumulation from this (scalar) output with seed 1.
+    pub fn backward(&self) -> Result<()> {
+        let dims = self.dims();
+        let numel: usize = dims.iter().product();
+        if numel != 1 {
+            return Err(Error::NonScalarBackward { shape: dims });
+        }
+        self.backward_with(&Tensor::ones(&self.dims()))
+    }
+
+    /// Reverse-mode accumulation with an explicit output cotangent `seed`.
+    pub fn backward_with(&self, seed: &Tensor) -> Result<()> {
+        if !self.requires_grad() {
+            return Err(Error::NoGradRequired);
+        }
+
+        // 1. Topological order via iterative DFS over the op DAG.
+        let order = self.topo_order();
+
+        // 2. Propagate cotangents in reverse topological order.
+        use std::collections::HashMap;
+        let mut cotangent: HashMap<VarId, Tensor> = HashMap::new();
+        cotangent.insert(self.id(), seed.clone());
+
+        for node in order.iter().rev() {
+            let Some(grad_out) = cotangent.remove(&node.id()) else {
+                continue; // unreachable from the seed
+            };
+            let inner = node.0.borrow();
+            match &inner.op {
+                None => {
+                    // Leaf: accumulate into .grad.
+                    if inner.requires_grad {
+                        drop(inner);
+                        node.accumulate_grad(&grad_out);
+                    }
+                }
+                Some(op) => {
+                    let grads = (op.pullback)(&grad_out);
+                    debug_assert_eq!(grads.len(), op.parents.len());
+                    for (parent, g) in op.parents.iter().zip(grads) {
+                        let Some(g) = g else { continue };
+                        if !parent.requires_grad() {
+                            continue;
+                        }
+                        cotangent
+                            .entry(parent.id())
+                            .and_modify(|acc| {
+                                *acc = acc.add(&g).expect("cotangent shape mismatch")
+                            })
+                            .or_insert(g);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Iterative post-order DFS: children appear after all their parents.
+    fn topo_order(&self) -> Vec<Var> {
+        use std::collections::HashSet;
+        let mut visited: HashSet<VarId> = HashSet::new();
+        let mut order: Vec<Var> = Vec::new();
+        // Stack of (node, parents_pushed?).
+        let mut stack: Vec<(Var, bool)> = vec![(self.clone(), false)];
+        while let Some((node, expanded)) = stack.pop() {
+            let id = node.id();
+            if expanded {
+                order.push(node);
+                continue;
+            }
+            if !visited.insert(id) {
+                continue;
+            }
+            stack.push((node.clone(), true));
+            let inner = node.0.borrow();
+            if let Some(op) = &inner.op {
+                for p in &op.parents {
+                    if !visited.contains(&p.id()) {
+                        stack.push((p.clone(), false));
+                    }
+                }
+            }
+        }
+        order
+    }
+
+    /// Number of nodes reachable from this output (graph size; used by
+    /// tests and diagnostics).
+    pub fn graph_size(&self) -> usize {
+        self.topo_order().len()
+    }
+}
+
+impl std::fmt::Debug for Var {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.0.borrow();
+        write!(
+            f,
+            "Var(id={}, op={}, shape={}, requires_grad={})",
+            inner.id,
+            inner.op.as_ref().map_or("leaf", |o| o.name),
+            inner.data.shape(),
+            inner.requires_grad
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leaf_properties() {
+        let v = Var::from_tensor(Tensor::ones(&[2]), true);
+        assert!(v.is_leaf());
+        assert!(v.requires_grad());
+        assert!(v.grad().is_none());
+        assert_eq!(v.op_name(), "leaf");
+        let d = v.detach();
+        assert!(!d.requires_grad());
+    }
+
+    #[test]
+    fn backward_requires_scalar() {
+        let v = Var::from_tensor(Tensor::ones(&[2]), true);
+        assert!(matches!(
+            v.backward(),
+            Err(Error::NonScalarBackward { .. })
+        ));
+        let c = Var::from_tensor(Tensor::scalar(1.0), false);
+        assert!(matches!(c.backward(), Err(Error::NoGradRequired)));
+    }
+
+    #[test]
+    fn accumulate_adds() {
+        let v = Var::from_tensor(Tensor::ones(&[2]), true);
+        v.accumulate_grad(&Tensor::ones(&[2]));
+        v.accumulate_grad(&Tensor::ones(&[2]));
+        assert_eq!(v.grad().unwrap().to_vec(), vec![2.0, 2.0]);
+        v.zero_grad();
+        assert!(v.grad().is_none());
+    }
+
+    #[test]
+    fn clone_shares_node() {
+        let v = Var::from_tensor(Tensor::ones(&[1]), true);
+        let w = v.clone();
+        v.accumulate_grad(&Tensor::ones(&[1]));
+        assert!(w.grad().is_some());
+        assert_eq!(v.id(), w.id());
+    }
+}

@@ -1,0 +1,12 @@
+//! Baselines for the paper's comparative claims.
+//!
+//! [`naive`] is the stand-in for micrograd/tinygrad-class pure-Python
+//! frameworks (§2/§6): a scalar-at-a-time, boxed, dynamically-dispatched
+//! autograd interpreter. It reproduces the *mechanism* of their slowness —
+//! per-element heap allocation and virtual dispatch instead of bulk
+//! vectorized kernels — so the engine-vs-naive benchmark reproduces the
+//! paper's "orders of magnitude" claim with the same scaling shape.
+
+pub mod naive;
+
+pub use naive::{NaiveScalar, NaiveTensor};

@@ -1,0 +1,297 @@
+//! A deliberately naive scalar autograd interpreter (micrograd-style).
+//!
+//! Every scalar is a heap-allocated graph node behind `Rc<RefCell<…>>`;
+//! every op dynamically dispatches through a boxed closure; tensors are
+//! `Vec`s of scalar nodes and all "bulk" ops are Python-style loops of
+//! scalar ops. This is a faithful Rust rendition of how micrograd executes
+//! — the comparison target for experiment C2 (orders-of-magnitude claim).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// One scalar node in the naive dynamic graph.
+#[derive(Clone)]
+pub struct NaiveScalar(Rc<RefCell<NaiveInner>>);
+
+struct NaiveInner {
+    value: f32,
+    grad: f32,
+    parents: Vec<NaiveScalar>,
+    backward: Option<Box<dyn Fn(f32, &[NaiveScalar])>>,
+}
+
+impl NaiveScalar {
+    /// Leaf scalar.
+    pub fn new(value: f32) -> NaiveScalar {
+        NaiveScalar(Rc::new(RefCell::new(NaiveInner {
+            value,
+            grad: 0.0,
+            parents: Vec::new(),
+            backward: None,
+        })))
+    }
+
+    /// Current value.
+    pub fn value(&self) -> f32 {
+        self.0.borrow().value
+    }
+
+    /// Accumulated gradient.
+    pub fn grad(&self) -> f32 {
+        self.0.borrow().grad
+    }
+
+    fn from_op(
+        value: f32,
+        parents: Vec<NaiveScalar>,
+        backward: Box<dyn Fn(f32, &[NaiveScalar])>,
+    ) -> NaiveScalar {
+        NaiveScalar(Rc::new(RefCell::new(NaiveInner {
+            value,
+            grad: 0.0,
+            parents,
+            backward: Some(backward),
+        })))
+    }
+
+    /// Scalar addition.
+    pub fn add(&self, other: &NaiveScalar) -> NaiveScalar {
+        let v = self.value() + other.value();
+        NaiveScalar::from_op(
+            v,
+            vec![self.clone(), other.clone()],
+            Box::new(|g, ps| {
+                ps[0].0.borrow_mut().grad += g;
+                ps[1].0.borrow_mut().grad += g;
+            }),
+        )
+    }
+
+    /// Scalar multiplication.
+    pub fn mul(&self, other: &NaiveScalar) -> NaiveScalar {
+        let (a, b) = (self.value(), other.value());
+        NaiveScalar::from_op(
+            a * b,
+            vec![self.clone(), other.clone()],
+            Box::new(move |g, ps| {
+                ps[0].0.borrow_mut().grad += g * b;
+                ps[1].0.borrow_mut().grad += g * a;
+            }),
+        )
+    }
+
+    /// Scalar ReLU.
+    pub fn relu(&self) -> NaiveScalar {
+        let a = self.value();
+        NaiveScalar::from_op(
+            a.max(0.0),
+            vec![self.clone()],
+            Box::new(move |g, ps| {
+                if a > 0.0 {
+                    ps[0].0.borrow_mut().grad += g;
+                }
+            }),
+        )
+    }
+
+    /// Scalar exp.
+    pub fn exp(&self) -> NaiveScalar {
+        let v = self.value().exp();
+        NaiveScalar::from_op(
+            v,
+            vec![self.clone()],
+            Box::new(move |g, ps| {
+                ps[0].0.borrow_mut().grad += g * v;
+            }),
+        )
+    }
+
+    /// Reverse-mode backward from this node (seed 1).
+    pub fn backward(&self) {
+        // Topological order by DFS.
+        let mut order: Vec<NaiveScalar> = Vec::new();
+        let mut visited: Vec<*const RefCell<NaiveInner>> = Vec::new();
+        fn dfs(
+            node: &NaiveScalar,
+            visited: &mut Vec<*const RefCell<NaiveInner>>,
+            order: &mut Vec<NaiveScalar>,
+        ) {
+            let ptr = Rc::as_ptr(&node.0);
+            if visited.contains(&ptr) {
+                return;
+            }
+            visited.push(ptr);
+            for p in node.0.borrow().parents.iter() {
+                dfs(p, visited, order);
+            }
+            order.push(node.clone());
+        }
+        dfs(self, &mut visited, &mut order);
+
+        self.0.borrow_mut().grad = 1.0;
+        for node in order.iter().rev() {
+            let (g, parents) = {
+                let inner = node.0.borrow();
+                (inner.grad, inner.parents.clone())
+            };
+            let inner = node.0.borrow();
+            if let Some(bw) = &inner.backward {
+                bw(g, &parents);
+            }
+        }
+    }
+}
+
+/// A "tensor" in the naive framework: a flat Vec of scalar nodes.
+pub struct NaiveTensor {
+    pub scalars: Vec<NaiveScalar>,
+    pub dims: Vec<usize>,
+}
+
+impl NaiveTensor {
+    /// Build from values.
+    pub fn from_vec(values: &[f32], dims: &[usize]) -> NaiveTensor {
+        NaiveTensor {
+            scalars: values.iter().map(|&v| NaiveScalar::new(v)).collect(),
+            dims: dims.to_vec(),
+        }
+    }
+
+    /// Elementwise add — a scalar-op loop, as a pure-Python framework does.
+    pub fn add(&self, other: &NaiveTensor) -> NaiveTensor {
+        NaiveTensor {
+            scalars: self
+                .scalars
+                .iter()
+                .zip(&other.scalars)
+                .map(|(a, b)| a.add(b))
+                .collect(),
+            dims: self.dims.clone(),
+        }
+    }
+
+    /// Elementwise multiply.
+    pub fn mul(&self, other: &NaiveTensor) -> NaiveTensor {
+        NaiveTensor {
+            scalars: self
+                .scalars
+                .iter()
+                .zip(&other.scalars)
+                .map(|(a, b)| a.mul(b))
+                .collect(),
+            dims: self.dims.clone(),
+        }
+    }
+
+    /// ReLU.
+    pub fn relu(&self) -> NaiveTensor {
+        NaiveTensor {
+            scalars: self.scalars.iter().map(|s| s.relu()).collect(),
+            dims: self.dims.clone(),
+        }
+    }
+
+    /// Sum to one scalar node (chain of adds — exactly what a naive
+    /// framework builds).
+    pub fn sum(&self) -> NaiveScalar {
+        let mut acc = NaiveScalar::new(0.0);
+        for s in &self.scalars {
+            acc = acc.add(s);
+        }
+        acc
+    }
+
+    /// Matrix multiply `[m,k]·[k,n]` as nested scalar loops.
+    pub fn matmul(&self, other: &NaiveTensor) -> NaiveTensor {
+        let (m, k) = (self.dims[0], self.dims[1]);
+        let n = other.dims[1];
+        let mut out = Vec::with_capacity(m * n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = NaiveScalar::new(0.0);
+                for p in 0..k {
+                    acc = acc.add(&self.scalars[i * k + p].mul(&other.scalars[p * n + j]));
+                }
+                out.push(acc);
+            }
+        }
+        NaiveTensor {
+            scalars: out,
+            dims: vec![m, n],
+        }
+    }
+
+    /// Values snapshot.
+    pub fn values(&self) -> Vec<f32> {
+        self.scalars.iter().map(|s| s.value()).collect()
+    }
+
+    /// Gradients snapshot.
+    pub fn grads(&self) -> Vec<f32> {
+        self.scalars.iter().map(|s| s.grad()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_autograd_matches_calculus() {
+        // z = (a*b + a).relu(); a=2, b=3 ⇒ z = 8, dz/da = b+1 = 4, dz/db = a = 2
+        let a = NaiveScalar::new(2.0);
+        let b = NaiveScalar::new(3.0);
+        let z = a.mul(&b).add(&a).relu();
+        assert_eq!(z.value(), 8.0);
+        z.backward();
+        assert_eq!(a.grad(), 4.0);
+        assert_eq!(b.grad(), 2.0);
+    }
+
+    #[test]
+    fn relu_gates_gradient() {
+        let a = NaiveScalar::new(-1.0);
+        let z = a.relu();
+        z.backward();
+        assert_eq!(a.grad(), 0.0);
+    }
+
+    #[test]
+    fn tensor_ops_match_engine() {
+        use crate::tensor::Tensor;
+        let av = vec![1.0f32, 2.0, 3.0, 4.0];
+        let bv = vec![0.5f32, -1.0, 2.0, 0.0];
+        let na = NaiveTensor::from_vec(&av, &[2, 2]);
+        let nb = NaiveTensor::from_vec(&bv, &[2, 2]);
+        let nz = na.matmul(&nb);
+        let ta = Tensor::from_vec(av, &[2, 2]).unwrap();
+        let tb = Tensor::from_vec(bv, &[2, 2]).unwrap();
+        let tz = ta.matmul(&tb).unwrap();
+        assert_eq!(nz.values(), tz.to_vec());
+    }
+
+    #[test]
+    fn naive_backward_matches_engine_backward() {
+        use crate::autograd::Var;
+        use crate::tensor::Tensor;
+        let xv = vec![1.0f32, -2.0, 0.5];
+        // naive
+        let nx = NaiveTensor::from_vec(&xv, &[3]);
+        let nz = nx.mul(&nx).relu().sum();
+        nz.backward();
+        // engine
+        let ex = Var::from_tensor(Tensor::from_vec(xv, &[3]).unwrap(), true);
+        let ez = ex.mul(&ex).unwrap().relu().sum().unwrap();
+        ez.backward().unwrap();
+        assert_eq!(nx.grads(), ex.grad().unwrap().to_vec());
+    }
+
+    #[test]
+    fn sum_chain() {
+        let t = NaiveTensor::from_vec(&[1.0, 2.0, 3.0], &[3]);
+        let s = t.sum();
+        assert_eq!(s.value(), 6.0);
+        s.backward();
+        assert_eq!(t.grads(), vec![1.0, 1.0, 1.0]);
+    }
+}

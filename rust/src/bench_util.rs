@@ -1,0 +1,157 @@
+//! Minimal statistics-aware benchmark harness.
+//!
+//! Criterion is not available in the offline vendor set, so the bench
+//! binaries use this: warmup, repeated timed runs, median/mean/p10/p90,
+//! and a tabular reporter whose rows mirror the paper's tables.
+
+use std::time::Instant;
+
+/// Result of timing one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+}
+
+impl Sample {
+    /// Mean time in seconds.
+    pub fn mean_s(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+
+    /// Throughput in items/second given items per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns / 1e9)
+    }
+}
+
+/// Time `f`, autoscaling iteration count to `target_ms` per measurement,
+/// with `reps` repeated measurements.
+pub fn bench(name: &str, target_ms: f64, reps: usize, mut f: impl FnMut()) -> Sample {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_ms / 1e3 / once).ceil() as usize).clamp(1, 1_000_000);
+
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        times.push(t.elapsed().as_secs_f64() * 1e9 / iters as f64);
+    }
+    times.sort_by(f64::total_cmp);
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let pct = |q: f64| times[((times.len() - 1) as f64 * q).round() as usize];
+    Sample {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        median_ns: pct(0.5),
+        p10_ns: pct(0.1),
+        p90_ns: pct(0.9),
+    }
+}
+
+/// Pretty-print a nanosecond figure.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Tabular report printer: aligned columns from (label, value) rows.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with the given title and column headers.
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row.
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render to stdout.
+    pub fn print(&self) {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line: Vec<String> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| format!("{:<w$}", h, w = widths[i]))
+            .collect();
+        println!("{}", line.join("  "));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .enumerate()
+                .take(ncol)
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            println!("{}", line.join("  "));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_positive_stats() {
+        let mut acc = 0u64;
+        let s = bench("noop-ish", 1.0, 3, || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.median_ns > 0.0);
+        assert!(s.p10_ns <= s.p90_ns);
+        assert!(s.iters >= 1);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+
+    #[test]
+    fn table_renders_without_panic() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print();
+    }
+}

@@ -1,0 +1,259 @@
+//! Configuration system: a small key=value format with `#` comments and
+//! `[section]` headers (no external parser dependencies), plus typed
+//! views for training runs.
+//!
+//! ```text
+//! [train]
+//! dataset = synthetic_mnist
+//! hidden = 128,64
+//! optimizer = adam
+//! lr = 0.001
+//! steps = 300
+//! backend = native
+//! ```
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Which execution engine runs the model math.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// The native Rust kernels + autograd tape.
+    Native,
+    /// AOT-compiled XLA executables loaded via PJRT.
+    Xla,
+}
+
+impl Backend {
+    /// Parse from a config string.
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" | "rust" => Ok(Backend::Native),
+            "xla" | "pjrt" | "aot" => Ok(Backend::Xla),
+            other => Err(Error::Config(format!("unknown backend '{other}'"))),
+        }
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::Native => write!(f, "native"),
+            Backend::Xla => write!(f, "xla"),
+        }
+    }
+}
+
+/// Raw parsed configuration: `section.key → value`.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: HashMap<String, String>,
+}
+
+impl Config {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = HashMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, v.trim().to_string());
+        }
+        Ok(Config { values })
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Config> {
+        Config::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Overlay `key=value` CLI overrides (e.g. `train.lr=0.01`).
+    pub fn apply_overrides(&mut self, overrides: &[String]) -> Result<()> {
+        for o in overrides {
+            let (k, v) = o
+                .split_once('=')
+                .ok_or_else(|| Error::Config(format!("override '{o}' is not key=value")))?;
+            self.values.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(())
+    }
+
+    /// Raw lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    /// String with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed lookup with default.
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Config(format!("cannot parse '{s}' for key '{key}'"))),
+        }
+    }
+
+    /// Comma-separated usize list.
+    pub fn get_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|d| {
+                    d.trim()
+                        .parse::<usize>()
+                        .map_err(|_| Error::Config(format!("bad list entry '{d}' in '{key}'")))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Typed training configuration extracted from a [`Config`].
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub dataset: String,
+    pub n_examples: usize,
+    pub input_side: usize,
+    pub hidden: Vec<usize>,
+    pub classes: usize,
+    pub optimizer: String,
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub batch_size: usize,
+    pub steps: usize,
+    pub seed: u64,
+    pub backend: Backend,
+    pub log_every: usize,
+    pub artifacts_dir: String,
+}
+
+impl TrainConfig {
+    /// Defaults matching the E2E example (synthetic-MNIST MLP).
+    pub fn defaults() -> TrainConfig {
+        TrainConfig {
+            dataset: "synthetic_mnist".into(),
+            n_examples: 2048,
+            input_side: 14,
+            hidden: vec![128, 64],
+            classes: 10,
+            optimizer: "adam".into(),
+            lr: 1e-3,
+            momentum: 0.9,
+            weight_decay: 0.0,
+            batch_size: 64,
+            steps: 300,
+            seed: 42,
+            backend: Backend::Native,
+            log_every: 20,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    /// Read the `[train]` section of a config.
+    pub fn from_config(cfg: &Config) -> Result<TrainConfig> {
+        let d = TrainConfig::defaults();
+        Ok(TrainConfig {
+            dataset: cfg.get_or("train.dataset", &d.dataset),
+            n_examples: cfg.get_parse_or("train.n_examples", d.n_examples)?,
+            input_side: cfg.get_parse_or("train.input_side", d.input_side)?,
+            hidden: cfg.get_list_or("train.hidden", &d.hidden)?,
+            classes: cfg.get_parse_or("train.classes", d.classes)?,
+            optimizer: cfg.get_or("train.optimizer", &d.optimizer),
+            lr: cfg.get_parse_or("train.lr", d.lr)?,
+            momentum: cfg.get_parse_or("train.momentum", d.momentum)?,
+            weight_decay: cfg.get_parse_or("train.weight_decay", d.weight_decay)?,
+            batch_size: cfg.get_parse_or("train.batch_size", d.batch_size)?,
+            steps: cfg.get_parse_or("train.steps", d.steps)?,
+            seed: cfg.get_parse_or("train.seed", d.seed)?,
+            backend: Backend::parse(&cfg.get_or("train.backend", "native"))?,
+            log_every: cfg.get_parse_or("train.log_every", d.log_every)?,
+            artifacts_dir: cfg.get_or("train.artifacts_dir", &d.artifacts_dir),
+        })
+    }
+
+    /// Flattened input feature count.
+    pub fn input_features(&self) -> usize {
+        self.input_side * self.input_side
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_comments_defaults() {
+        let cfg = Config::parse(
+            "# top comment\n[train]\nlr = 0.01 # inline\nhidden = 32, 16\n\n[serve]\nport = 8080\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get("train.lr"), Some("0.01"));
+        assert_eq!(cfg.get("serve.port"), Some("8080"));
+        assert_eq!(cfg.get_parse_or("train.lr", 0.0f32).unwrap(), 0.01);
+        assert_eq!(
+            cfg.get_list_or("train.hidden", &[]).unwrap(),
+            vec![32, 16]
+        );
+        assert_eq!(cfg.get_parse_or("train.missing", 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut cfg = Config::parse("[train]\nlr = 0.1\n").unwrap();
+        cfg.apply_overrides(&["train.lr=0.5".to_string()]).unwrap();
+        assert_eq!(cfg.get("train.lr"), Some("0.5"));
+        assert!(cfg.apply_overrides(&["nonsense".to_string()]).is_err());
+    }
+
+    #[test]
+    fn malformed_errors() {
+        assert!(Config::parse("key value no equals").is_err());
+        let cfg = Config::parse("[t]\nx = abc\n").unwrap();
+        assert!(cfg.get_parse_or("t.x", 1usize).is_err());
+    }
+
+    #[test]
+    fn train_config_roundtrip() {
+        let cfg = Config::parse(
+            "[train]\ndataset = blobs\nhidden = 8\nbackend = xla\nsteps = 10\n",
+        )
+        .unwrap();
+        let tc = TrainConfig::from_config(&cfg).unwrap();
+        assert_eq!(tc.dataset, "blobs");
+        assert_eq!(tc.hidden, vec![8]);
+        assert_eq!(tc.backend, Backend::Xla);
+        assert_eq!(tc.steps, 10);
+        assert_eq!(tc.lr, 1e-3); // default preserved
+    }
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!(Backend::parse("Native").unwrap(), Backend::Native);
+        assert_eq!(Backend::parse("AOT").unwrap(), Backend::Xla);
+        assert!(Backend::parse("gpu").is_err());
+    }
+}

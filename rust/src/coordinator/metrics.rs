@@ -1,0 +1,206 @@
+//! Lightweight process metrics: counters and latency histograms used by
+//! the trainer and the inference server.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Thread-safe metrics registry.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<HashMap<String, u64>>,
+    latencies: Mutex<HashMap<String, Vec<f64>>>,
+}
+
+impl Metrics {
+    /// Empty registry.
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Increment a counter.
+    pub fn incr(&self, name: &str, by: u64) {
+        *self
+            .counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert(0) += by;
+    }
+
+    /// Read a counter.
+    pub fn counter(&self, name: &str) -> u64 {
+        *self.counters.lock().unwrap().get(name).unwrap_or(&0)
+    }
+
+    /// Record a latency observation in seconds.
+    pub fn observe(&self, name: &str, seconds: f64) {
+        self.latencies
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .push(seconds);
+    }
+
+    /// Percentile of recorded latencies (q in [0,1]); None if empty.
+    pub fn percentile(&self, name: &str, q: f64) -> Option<f64> {
+        let map = self.latencies.lock().unwrap();
+        let v = map.get(name)?;
+        if v.is_empty() {
+            return None;
+        }
+        let mut sorted = v.clone();
+        sorted.sort_by(f64::total_cmp);
+        Some(sorted[((sorted.len() - 1) as f64 * q).round() as usize])
+    }
+
+    /// Mean of recorded latencies.
+    pub fn mean(&self, name: &str) -> Option<f64> {
+        let map = self.latencies.lock().unwrap();
+        let v = map.get(name)?;
+        if v.is_empty() {
+            return None;
+        }
+        Some(v.iter().sum::<f64>() / v.len() as f64)
+    }
+
+    /// Count of observations.
+    pub fn observations(&self, name: &str) -> usize {
+        self.latencies
+            .lock()
+            .unwrap()
+            .get(name)
+            .map_or(0, Vec::len)
+    }
+
+    /// Render a compact text report.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        let counters = self.counters.lock().unwrap();
+        let mut names: Vec<&String> = counters.keys().collect();
+        names.sort();
+        for n in names {
+            out.push_str(&format!("{n} = {}\n", counters[n]));
+        }
+        drop(counters);
+        let lat = self.latencies.lock().unwrap();
+        let mut names: Vec<&String> = lat.keys().collect();
+        names.sort();
+        for n in names {
+            let v = &lat[n];
+            if v.is_empty() {
+                continue;
+            }
+            let mut sorted = v.clone();
+            sorted.sort_by(f64::total_cmp);
+            let p = |q: f64| sorted[((sorted.len() - 1) as f64 * q).round() as usize] * 1e3;
+            out.push_str(&format!(
+                "{n}: n={} mean={:.3}ms p50={:.3}ms p90={:.3}ms p99={:.3}ms\n",
+                v.len(),
+                v.iter().sum::<f64>() / v.len() as f64 * 1e3,
+                p(0.5),
+                p(0.9),
+                p(0.99),
+            ));
+        }
+        out
+    }
+}
+
+/// RAII latency timer feeding a [`Metrics`] histogram.
+pub struct Timer<'a> {
+    metrics: &'a Metrics,
+    name: &'a str,
+    start: Instant,
+}
+
+impl<'a> Timer<'a> {
+    /// Start timing `name`.
+    pub fn start(metrics: &'a Metrics, name: &'a str) -> Timer<'a> {
+        Timer {
+            metrics,
+            name,
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Drop for Timer<'_> {
+    fn drop(&mut self) {
+        self.metrics
+            .observe(self.name, self.start.elapsed().as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters() {
+        let m = Metrics::new();
+        m.incr("requests", 1);
+        m.incr("requests", 2);
+        assert_eq!(m.counter("requests"), 3);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.observe("lat", i as f64 / 1000.0);
+        }
+        assert_eq!(m.observations("lat"), 100);
+        let p50 = m.percentile("lat", 0.5).unwrap();
+        assert!((p50 - 0.0505).abs() < 0.002, "{p50}");
+        let p99 = m.percentile("lat", 0.99).unwrap();
+        assert!(p99 >= 0.099);
+        assert!(m.percentile("missing", 0.5).is_none());
+        let mean = m.mean("lat").unwrap();
+        assert!((mean - 0.0505).abs() < 0.001);
+    }
+
+    #[test]
+    fn timer_records() {
+        let m = Metrics::new();
+        {
+            let _t = Timer::start(&m, "op");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(m.observations("op"), 1);
+        assert!(m.mean("op").unwrap() >= 0.001);
+    }
+
+    #[test]
+    fn report_contains_entries() {
+        let m = Metrics::new();
+        m.incr("c", 5);
+        m.observe("l", 0.001);
+        let r = m.report();
+        assert!(r.contains("c = 5"));
+        assert!(r.contains("l: n=1"));
+    }
+
+    #[test]
+    fn thread_safety() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        m.incr("n", 1);
+                        m.observe("l", 0.001);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("n"), 400);
+        assert_eq!(m.observations("l"), 400);
+    }
+}

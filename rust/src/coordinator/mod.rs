@@ -1,0 +1,17 @@
+//! L3 coordinator: configuration, backend dispatch, the training
+//! launcher, a threaded batching inference server, and metrics.
+//!
+//! This is where MiniTensor stops being a kernel library and becomes a
+//! system: the coordinator owns process lifecycle, the request loop, and
+//! the decision of whether a compute step runs on the native Rust engine
+//! or on an AOT-compiled XLA executable ([`Backend`]).
+
+mod config;
+mod metrics;
+mod serve;
+mod trainer;
+
+pub use config::{Backend, Config, TrainConfig};
+pub use metrics::{Metrics, Timer};
+pub use serve::{BatchModel, InferenceServer, NativeBatchModel, ServeConfig, ServeStats};
+pub use trainer::{TrainReport, Trainer};

@@ -1,0 +1,336 @@
+//! Threaded batching inference server.
+//!
+//! The coordination pattern of a serving stack (vLLM-router-style) scaled
+//! to this paper's scope: clients submit single examples; a batcher thread
+//! groups them up to `max_batch` (or a deadline) and dispatches one bulk
+//! forward per batch — on the native engine or on the AOT XLA forward
+//! executable. Backpressure falls out of the bounded queue.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::metrics::Metrics;
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// Server tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Maximum examples fused into one forward.
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch before flushing.
+    pub max_wait: Duration,
+    /// Bounded queue depth (backpressure threshold).
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 1024,
+        }
+    }
+}
+
+/// One queued request: a feature vector and the channel to answer on.
+struct Request {
+    features: Vec<f32>,
+    enqueued: Instant,
+    reply: SyncSender<Result<Vec<f32>>>,
+}
+
+/// Aggregate statistics snapshot.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub p50_latency_ms: f64,
+    pub p99_latency_ms: f64,
+}
+
+/// A model the server can run: takes a `[b, d]` batch, returns `[b, k]`.
+pub trait BatchModel: Send {
+    fn forward_batch(&mut self, x: &Tensor) -> Result<Tensor>;
+    /// Input feature count.
+    fn in_features(&self) -> usize;
+}
+
+/// Batching inference server over any [`BatchModel`].
+pub struct InferenceServer {
+    tx: SyncSender<Request>,
+    worker: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<Metrics>,
+    in_features: usize,
+}
+
+impl InferenceServer {
+    /// Spawn the batcher thread over `model`.
+    pub fn start(mut model: Box<dyn BatchModel>, cfg: ServeConfig) -> InferenceServer {
+        let (tx, rx): (SyncSender<Request>, Receiver<Request>) = sync_channel(cfg.queue_depth);
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(Metrics::new());
+        let in_features = model.in_features();
+
+        let stop_w = stop.clone();
+        let metrics_w = metrics.clone();
+        let worker = std::thread::spawn(move || {
+            let mut pending: Vec<Request> = Vec::with_capacity(cfg.max_batch);
+            loop {
+                // Block for the first request (with a stop-poll timeout).
+                if pending.is_empty() {
+                    match rx.recv_timeout(Duration::from_millis(10)) {
+                        Ok(r) => pending.push(r),
+                        Err(RecvTimeoutError::Timeout) => {
+                            if stop_w.load(Ordering::Relaxed) {
+                                return;
+                            }
+                            continue;
+                        }
+                        Err(RecvTimeoutError::Disconnected) => return,
+                    }
+                }
+                // Fill up to max_batch or the deadline.
+                let deadline = Instant::now() + cfg.max_wait;
+                while pending.len() < cfg.max_batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(r) => pending.push(r),
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+
+                // Assemble the batch tensor.
+                let b = pending.len();
+                let mut flat = Vec::with_capacity(b * in_features);
+                for r in &pending {
+                    flat.extend_from_slice(&r.features);
+                }
+                let batch = Tensor::from_vec(flat, &[b, in_features])
+                    .expect("request feature lengths validated at submit");
+
+                let result = model.forward_batch(&batch);
+                metrics_w.incr("serve.batches", 1);
+                metrics_w.incr("serve.requests", b as u64);
+                metrics_w.observe("serve.batch_size", b as f64);
+
+                match result {
+                    Ok(out) => {
+                        let k = out.dims()[1];
+                        let ov = out.to_vec();
+                        for (i, r) in pending.drain(..).enumerate() {
+                            metrics_w
+                                .observe("serve.latency", r.enqueued.elapsed().as_secs_f64());
+                            let row = ov[i * k..(i + 1) * k].to_vec();
+                            let _ = r.reply.send(Ok(row));
+                        }
+                    }
+                    Err(e) => {
+                        let msg = e.to_string();
+                        for r in pending.drain(..) {
+                            let _ = r.reply.send(Err(Error::msg(msg.clone())));
+                        }
+                    }
+                }
+
+                if stop_w.load(Ordering::Relaxed) && pending.is_empty() {
+                    // Drain whatever is still queued before exiting.
+                    while let Ok(r) = rx.try_recv() {
+                        let _ = r.reply.send(Err(Error::msg("server shutting down")));
+                    }
+                    return;
+                }
+            }
+        });
+
+        InferenceServer {
+            tx,
+            worker: Some(worker),
+            stop,
+            metrics,
+            in_features,
+        }
+    }
+
+    /// Submit one example and wait for its outputs (logits).
+    pub fn infer(&self, features: Vec<f32>) -> Result<Vec<f32>> {
+        if features.len() != self.in_features {
+            return Err(Error::ShapeMismatch {
+                op: "serve.infer",
+                expected: format!("{} features", self.in_features),
+                got: format!("{}", features.len()),
+            });
+        }
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.tx
+            .send(Request {
+                features,
+                enqueued: Instant::now(),
+                reply: reply_tx,
+            })
+            .map_err(|_| Error::msg("server stopped"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::msg("server dropped the request"))?
+    }
+
+    /// Statistics snapshot.
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            requests: self.metrics.counter("serve.requests"),
+            batches: self.metrics.counter("serve.batches"),
+            mean_batch_size: self.metrics.mean("serve.batch_size").unwrap_or(0.0),
+            p50_latency_ms: self.metrics.percentile("serve.latency", 0.5).unwrap_or(0.0) * 1e3,
+            p99_latency_ms: self.metrics.percentile("serve.latency", 0.99).unwrap_or(0.0) * 1e3,
+        }
+    }
+
+    /// Stop the worker and join it.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// A [`BatchModel`] over a native `Sequential` (wrapped in a Mutex: the
+/// graph types are not Sync, and the model lives on the worker thread).
+pub struct NativeBatchModel {
+    model: Mutex<crate::nn::Sequential>,
+    in_features: usize,
+}
+
+// SAFETY: the Sequential inside is only ever touched by the worker thread
+// that owns the Box<dyn BatchModel>; Mutex adds the Sync guarantee needed
+// to move it there.
+unsafe impl Send for NativeBatchModel {}
+
+impl NativeBatchModel {
+    /// Wrap a model for serving.
+    pub fn new(model: crate::nn::Sequential, in_features: usize) -> NativeBatchModel {
+        NativeBatchModel {
+            model: Mutex::new(model),
+            in_features,
+        }
+    }
+}
+
+impl BatchModel for NativeBatchModel {
+    fn forward_batch(&mut self, x: &Tensor) -> Result<Tensor> {
+        use crate::nn::Module;
+        crate::autograd::no_grad(|| {
+            let v = crate::autograd::Var::from_tensor(x.clone(), false);
+            let model = self.model.lock().unwrap();
+            Ok(model.forward(&v, false)?.data())
+        })
+    }
+
+    fn in_features(&self) -> usize {
+        self.in_features
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::nn::{Activation, Dense, Sequential};
+
+    fn tiny_model() -> Box<dyn BatchModel> {
+        let mut rng = Rng::new(1);
+        let model = Sequential::new()
+            .add(Dense::new(4, 8, &mut rng))
+            .add(Activation::Relu)
+            .add(Dense::new(8, 3, &mut rng));
+        Box::new(NativeBatchModel::new(model, 4))
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let server = InferenceServer::start(tiny_model(), ServeConfig::default());
+        let out = server.infer(vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(out.len(), 3);
+        server.shutdown();
+    }
+
+    #[test]
+    fn rejects_wrong_feature_count() {
+        let server = InferenceServer::start(tiny_model(), ServeConfig::default());
+        assert!(server.infer(vec![1.0]).is_err());
+        server.shutdown();
+    }
+
+    #[test]
+    fn batches_concurrent_requests() {
+        let server = Arc::new(InferenceServer::start(
+            tiny_model(),
+            ServeConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(20),
+                queue_depth: 64,
+            },
+        ));
+        let handles: Vec<_> = (0..16)
+            .map(|i| {
+                let s = server.clone();
+                std::thread::spawn(move || {
+                    s.infer(vec![i as f32, 0.0, 0.0, 0.0]).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap().len(), 3);
+        }
+        let stats = server.stats();
+        assert_eq!(stats.requests, 16);
+        assert!(stats.batches < 16, "batching should fuse requests: {stats:?}");
+        assert!(stats.mean_batch_size > 1.0);
+    }
+
+    #[test]
+    fn results_match_direct_forward() {
+        let mut rng = Rng::new(1);
+        let model = Sequential::new()
+            .add(Dense::new(4, 8, &mut rng))
+            .add(Activation::Relu)
+            .add(Dense::new(8, 3, &mut rng));
+        // compute the expected output directly
+        use crate::nn::Module;
+        let x = Tensor::from_vec(vec![0.5, -1.0, 2.0, 0.0], &[1, 4]).unwrap();
+        let expect = model
+            .forward(&crate::autograd::Var::from_tensor(x, false), false)
+            .unwrap()
+            .data()
+            .to_vec();
+
+        let server = InferenceServer::start(
+            Box::new(NativeBatchModel::new(model, 4)),
+            ServeConfig::default(),
+        );
+        let got = server.infer(vec![0.5, -1.0, 2.0, 0.0]).unwrap();
+        for (g, e) in got.iter().zip(&expect) {
+            assert!((g - e).abs() < 1e-5);
+        }
+        server.shutdown();
+    }
+}

@@ -1,0 +1,286 @@
+//! Synthetic datasets.
+//!
+//! Each generator returns a [`Dataset`]: a features tensor `[n, d…]` and an
+//! i32 label (or f32 target) tensor `[n]` / `[n, k]`. All are seeded and
+//! CPU-cheap, standing in for the small real workloads the paper trains on.
+
+use super::Rng;
+use crate::tensor::Tensor;
+
+/// An in-memory supervised dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Features, first axis = examples.
+    pub x: Tensor,
+    /// Labels (I32 classes) or regression targets (F32).
+    pub y: Tensor,
+    /// Number of distinct classes (0 for regression).
+    pub classes: usize,
+}
+
+impl Dataset {
+    /// Number of examples.
+    pub fn len(&self) -> usize {
+        self.x.dims()[0]
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Split into (train, test) at `train_frac`.
+    pub fn split(&self, train_frac: f32) -> (Dataset, Dataset) {
+        let n = self.len();
+        let n_train = ((n as f32) * train_frac).round() as usize;
+        let tr = Dataset {
+            x: self.x.narrow(0, 0, n_train).unwrap().contiguous(),
+            y: self.y.narrow(0, 0, n_train).unwrap().contiguous(),
+            classes: self.classes,
+        };
+        let te = Dataset {
+            x: self.x.narrow(0, n_train, n - n_train).unwrap().contiguous(),
+            y: self.y.narrow(0, n_train, n - n_train).unwrap().contiguous(),
+            classes: self.classes,
+        };
+        (tr, te)
+    }
+}
+
+/// `k` isotropic Gaussian blobs in `d` dimensions, `n` points total.
+pub fn gaussian_blobs(n: usize, d: usize, k: usize, std: f32, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    // Blob centers on a scaled hypercube corner-ish layout.
+    let centers: Vec<Vec<f32>> = (0..k)
+        .map(|_| (0..d).map(|_| 4.0 * (rng.next_f32() - 0.5) * 2.0).collect())
+        .collect();
+    let mut xs = Vec::with_capacity(n * d);
+    let mut ys = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % k;
+        for j in 0..d {
+            xs.push(centers[c][j] + std * rng.next_normal());
+        }
+        ys.push(c as i32);
+    }
+    Dataset {
+        x: Tensor::from_vec(xs, &[n, d]).unwrap(),
+        y: Tensor::from_vec_i32(ys, &[n]).unwrap(),
+        classes: k,
+    }
+}
+
+/// Classic two-moons binary classification set.
+pub fn two_moons(n: usize, noise: f32, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let half = n / 2;
+    let mut xs = Vec::with_capacity(n * 2);
+    let mut ys = Vec::with_capacity(n);
+    for i in 0..n {
+        let upper = i < half;
+        let t = std::f32::consts::PI * rng.next_f32();
+        let (mut x0, mut x1) = if upper {
+            (t.cos(), t.sin())
+        } else {
+            (1.0 - t.cos(), 0.5 - t.sin())
+        };
+        x0 += noise * rng.next_normal();
+        x1 += noise * rng.next_normal();
+        xs.push(x0);
+        xs.push(x1);
+        ys.push(if upper { 0 } else { 1 });
+    }
+    Dataset {
+        x: Tensor::from_vec(xs, &[n, 2]).unwrap(),
+        y: Tensor::from_vec_i32(ys, &[n]).unwrap(),
+        classes: 2,
+    }
+}
+
+/// `k`-arm spiral classification (the classic hard nonlinear toy task).
+pub fn spiral(n: usize, k: usize, noise: f32, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let per = n / k;
+    let total = per * k;
+    let mut xs = Vec::with_capacity(total * 2);
+    let mut ys = Vec::with_capacity(total);
+    for c in 0..k {
+        for i in 0..per {
+            let r = i as f32 / per as f32;
+            let theta =
+                c as f32 * 2.0 * std::f32::consts::PI / k as f32 + r * 4.0 + noise * rng.next_normal();
+            xs.push(r * theta.cos());
+            xs.push(r * theta.sin());
+            ys.push(c as i32);
+        }
+    }
+    Dataset {
+        x: Tensor::from_vec(xs, &[total, 2]).unwrap(),
+        y: Tensor::from_vec_i32(ys, &[total]).unwrap(),
+        classes: k,
+    }
+}
+
+/// Synthetic MNIST-like images: `n` examples of `side×side` grayscale
+/// "digits" built from class-conditional stroke templates plus pixel noise.
+/// Returns features flattened to `[n, side*side]` in `[0,1]`.
+///
+/// This is the stand-in for MNIST (no network in the build environment —
+/// see DESIGN.md substitutions): same shape, same scale, 10 classes, and a
+/// learnable class-conditional signal so loss curves behave like the real
+/// thing.
+pub fn synthetic_mnist(n: usize, side: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let classes = 10usize;
+    let d = side * side;
+    // Build 10 smooth random templates with distinct spatial structure.
+    let mut templates = vec![vec![0.0f32; d]; classes];
+    for (c, tpl) in templates.iter_mut().enumerate() {
+        // Sum of a few class-salted Gabor-ish bumps.
+        let mut trng = Rng::new(seed ^ (0xABCD + c as u64 * 7919));
+        for _ in 0..4 {
+            let cx = trng.next_f32() * side as f32;
+            let cy = trng.next_f32() * side as f32;
+            let sx = 1.0 + 2.0 * trng.next_f32();
+            let sy = 1.0 + 2.0 * trng.next_f32();
+            for yy in 0..side {
+                for xx in 0..side {
+                    let dx = (xx as f32 - cx) / sx;
+                    let dy = (yy as f32 - cy) / sy;
+                    tpl[yy * side + xx] += (-(dx * dx + dy * dy) / 2.0).exp();
+                }
+            }
+        }
+        // Normalize to [0, 1].
+        let max = tpl.iter().cloned().fold(f32::MIN, f32::max).max(1e-6);
+        for v in tpl.iter_mut() {
+            *v /= max;
+        }
+    }
+    let mut xs = Vec::with_capacity(n * d);
+    let mut ys = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % classes;
+        for j in 0..d {
+            let v = templates[c][j] + 0.15 * rng.next_normal();
+            xs.push(v.clamp(0.0, 1.0));
+        }
+        ys.push(c as i32);
+    }
+    Dataset {
+        x: Tensor::from_vec(xs, &[n, d]).unwrap(),
+        y: Tensor::from_vec_i32(ys, &[n]).unwrap(),
+        classes,
+    }
+}
+
+/// Linear regression data `y = x·w* + b* + noise` with known ground truth.
+/// Returns targets of shape `[n, 1]`; `classes == 0` marks regression.
+pub fn regression_linear(n: usize, d: usize, noise: f32, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let w: Vec<f32> = (0..d).map(|_| rng.next_normal()).collect();
+    let b = rng.next_normal();
+    let mut xs = Vec::with_capacity(n * d);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut dot = b;
+        for wj in w.iter().take(d) {
+            let x = rng.next_normal();
+            xs.push(x);
+            dot += wj * x;
+        }
+        ys.push(dot + noise * rng.next_normal());
+    }
+    Dataset {
+        x: Tensor::from_vec(xs, &[n, d]).unwrap(),
+        y: Tensor::from_vec(ys, &[n, 1]).unwrap(),
+        classes: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blobs_shapes_and_labels() {
+        let ds = gaussian_blobs(90, 5, 3, 0.5, 1);
+        assert_eq!(ds.x.dims(), &[90, 5]);
+        assert_eq!(ds.y.dims(), &[90]);
+        assert_eq!(ds.classes, 3);
+        assert!(ds.y.iter().all(|v| (0.0..3.0).contains(&v)));
+    }
+
+    #[test]
+    fn blobs_are_separable_by_center_distance() {
+        let ds = gaussian_blobs(300, 2, 3, 0.1, 2);
+        // mean intra-class distance << inter-class center distance
+        let xv = ds.x.to_vec();
+        let yv = ds.y.to_vec();
+        let mut centers = vec![[0.0f32; 2]; 3];
+        let mut counts = [0usize; 3];
+        for i in 0..300 {
+            let c = yv[i] as usize;
+            centers[c][0] += xv[i * 2];
+            centers[c][1] += xv[i * 2 + 1];
+            counts[c] += 1;
+        }
+        for c in 0..3 {
+            centers[c][0] /= counts[c] as f32;
+            centers[c][1] /= counts[c] as f32;
+        }
+        let d01 = ((centers[0][0] - centers[1][0]).powi(2)
+            + (centers[0][1] - centers[1][1]).powi(2))
+        .sqrt();
+        assert!(d01 > 0.5, "centers should be distinct, got {d01}");
+    }
+
+    #[test]
+    fn moons_balanced() {
+        let ds = two_moons(100, 0.05, 3);
+        let ones = ds.y.iter().filter(|&v| v == 1.0).count();
+        assert_eq!(ones, 50);
+    }
+
+    #[test]
+    fn spiral_shapes() {
+        let ds = spiral(99, 3, 0.01, 4);
+        assert_eq!(ds.len(), 99);
+        assert_eq!(ds.classes, 3);
+    }
+
+    #[test]
+    fn synthetic_mnist_in_unit_range() {
+        let ds = synthetic_mnist(50, 8, 5);
+        assert_eq!(ds.x.dims(), &[50, 64]);
+        assert!(ds.x.iter().all(|v| (0.0..=1.0).contains(&v)));
+        assert_eq!(ds.classes, 10);
+    }
+
+    #[test]
+    fn regression_has_learnable_signal() {
+        let ds = regression_linear(200, 8, 0.01, 6);
+        assert_eq!(ds.y.dims(), &[200, 1]);
+        assert_eq!(ds.classes, 0);
+        // target variance must dominate noise
+        let yv = ds.y.to_vec();
+        let mean = yv.iter().sum::<f32>() / yv.len() as f32;
+        let var = yv.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / yv.len() as f32;
+        assert!(var > 0.5, "var={var}");
+    }
+
+    #[test]
+    fn split_partitions() {
+        let ds = gaussian_blobs(100, 2, 2, 0.3, 7);
+        let (tr, te) = ds.split(0.8);
+        assert_eq!(tr.len(), 80);
+        assert_eq!(te.len(), 20);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = two_moons(20, 0.1, 9);
+        let b = two_moons(20, 0.1, 9);
+        assert_eq!(a.x.to_vec(), b.x.to_vec());
+    }
+}

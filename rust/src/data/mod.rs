@@ -1,0 +1,12 @@
+//! Data substrate: RNG, synthetic datasets, and a shuffling mini-batch
+//! loader. The paper's examples "train small models" (§5); these datasets
+//! are the realistic small workloads that exercise that path without
+//! external downloads.
+
+mod dataset;
+mod loader;
+mod rng;
+
+pub use dataset::{gaussian_blobs, regression_linear, spiral, synthetic_mnist, two_moons, Dataset};
+pub use loader::{Batch, DataLoader};
+pub use rng::Rng;

@@ -1,0 +1,87 @@
+//! Element datatypes.
+//!
+//! The paper's engine supports dense tensors of 32-bit floats (§7) with
+//! integer/boolean auxiliaries for labels and masks. We model exactly that:
+//! `F32` is the compute dtype; `I32` carries class labels / indices; `Bool`
+//! carries comparison results and dropout masks. All dtypes are stored
+//! widened to `f32` in a single buffer type (see [`crate::tensor::Storage`]),
+//! which keeps the kernel surface minimal — the same minimalism argument the
+//! paper makes for its engine.
+
+/// Element type tag attached to every tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// 32-bit IEEE float — the primary compute dtype.
+    F32,
+    /// 32-bit signed integer (labels, indices). Stored exactly in f32 up to
+    /// 2^24, which covers every index/label the engine produces.
+    I32,
+    /// Boolean (0.0 / 1.0). Produced by comparisons, consumed by masking.
+    Bool,
+}
+
+impl DType {
+    /// Size in bytes of one element *as stored* (everything is f32-backed).
+    pub const fn size_of(self) -> usize {
+        4
+    }
+
+    /// Human-readable name, matching NumPy spelling where possible.
+    pub const fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::I32 => "int32",
+            DType::Bool => "bool",
+        }
+    }
+
+    /// Result dtype for an arithmetic op over two operands.
+    ///
+    /// Bool promotes to the other operand's dtype; I32 + F32 promotes to
+    /// F32 (NumPy-style value-preserving promotion, restricted to the three
+    /// dtypes the engine supports).
+    pub fn promote(self, other: DType) -> DType {
+        use DType::*;
+        match (self, other) {
+            (F32, _) | (_, F32) => F32,
+            (I32, _) | (_, I32) => I32,
+            (Bool, Bool) => Bool,
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn promotion_is_commutative_and_value_preserving() {
+        let all = [DType::F32, DType::I32, DType::Bool];
+        for &a in &all {
+            for &b in &all {
+                assert_eq!(a.promote(b), b.promote(a));
+            }
+        }
+        assert_eq!(DType::F32.promote(DType::I32), DType::F32);
+        assert_eq!(DType::I32.promote(DType::Bool), DType::I32);
+        assert_eq!(DType::Bool.promote(DType::Bool), DType::Bool);
+    }
+
+    #[test]
+    fn names_match_numpy() {
+        assert_eq!(DType::F32.name(), "float32");
+        assert_eq!(DType::I32.name(), "int32");
+        assert_eq!(DType::Bool.name(), "bool");
+    }
+
+    #[test]
+    fn storage_size() {
+        assert_eq!(DType::F32.size_of(), 4);
+    }
+}

@@ -1,0 +1,88 @@
+//! Error type shared across the whole engine.
+
+use thiserror::Error;
+
+/// Library-wide error enumeration.
+///
+/// Every fallible public API in MiniTensor returns [`Result<T>`]. The
+/// variants mirror the failure classes the paper's engine must detect:
+/// shape/broadcast mismatches (§3.1), autograd misuse (§3.2), and runtime
+/// (artifact/PJRT) failures for the AOT backend.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Two shapes could not be broadcast together (NumPy/PyTorch rules).
+    #[error("cannot broadcast shapes {lhs:?} and {rhs:?}")]
+    BroadcastMismatch { lhs: Vec<usize>, rhs: Vec<usize> },
+
+    /// An op received a tensor of the wrong rank or dimension sizes.
+    #[error("shape mismatch in {op}: expected {expected}, got {got}")]
+    ShapeMismatch {
+        op: &'static str,
+        expected: String,
+        got: String,
+    },
+
+    /// Reshape target has a different number of elements.
+    #[error("cannot reshape {numel} elements into {target:?}")]
+    ReshapeNumel { numel: usize, target: Vec<usize> },
+
+    /// Axis out of range for the tensor's rank.
+    #[error("axis {axis} out of range for rank {rank}")]
+    AxisOutOfRange { axis: isize, rank: usize },
+
+    /// Index out of bounds.
+    #[error("index {index} out of bounds for dimension of size {size}")]
+    IndexOutOfBounds { index: usize, size: usize },
+
+    /// backward() called on a non-scalar without an explicit seed.
+    #[error("backward() requires a scalar output (got shape {shape:?}); pass an explicit gradient")]
+    NonScalarBackward { shape: Vec<usize> },
+
+    /// backward() called on a Var that does not require gradients.
+    #[error("called backward() on a Var with requires_grad=false")]
+    NoGradRequired,
+
+    /// Mixed-dtype operation that the engine does not support.
+    #[error("dtype mismatch in {op}: {lhs:?} vs {rhs:?}")]
+    DTypeMismatch {
+        op: &'static str,
+        lhs: crate::DType,
+        rhs: crate::DType,
+    },
+
+    /// An AOT artifact was missing or malformed.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT / XLA runtime failure (wraps the `xla` crate error).
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// Configuration parsing / validation failure.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Anything I/O.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Catch-all for invariant violations.
+    #[error("{0}")]
+    Msg(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl Error {
+    /// Shorthand constructor for free-form errors.
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error::Msg(m.into())
+    }
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

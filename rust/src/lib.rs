@@ -1,0 +1,85 @@
+//! # MiniTensor — a lightweight, high-performance tensor operations library
+//!
+//! Reproduction of *"MiniTensor: A Lightweight, High-Performance Tensor
+//! Operations Library"* (Sarkar, 2026) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! - **Layer 3 (this crate)** — the tensor engine and coordinator: dense
+//!   n-dimensional tensors with broadcasting, bulk kernels (elementwise,
+//!   reductions, matmul, convolution), a dynamic reverse-mode autograd tape,
+//!   neural-network modules, optimizers, a data pipeline, and a coordinator
+//!   that dispatches compute to either the native Rust kernels or
+//!   AOT-compiled XLA executables.
+//! - **Layer 2** — `python/compile/model.py`: the same model math in JAX,
+//!   lowered once to HLO text by `python/compile/aot.py`.
+//! - **Layer 1** — `python/compile/kernels/`: Pallas kernels for the compute
+//!   hot-spots, validated against a pure-jnp oracle.
+//!
+//! Python never runs on the request path: the [`runtime`] module loads the
+//! AOT artifacts via PJRT (the `xla` crate) and executes them from Rust.
+//!
+//! ## Quickstart
+//!
+//! (`no_run`: cargo doesn't forward the PJRT rpath rustflags to doctest
+//! executables; the identical code executes in `examples/quickstart.rs`.)
+//!
+//! ```no_run
+//! use minitensor::prelude::*;
+//!
+//! // Eager tensor math with broadcasting (paper §3.1).
+//! let x = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+//! let b = Tensor::from_vec(vec![10.0, 20.0], &[2]).unwrap();
+//! let y = x.add(&b).unwrap(); // broadcasts b over rows
+//! assert_eq!(y.to_vec(), vec![11.0, 22.0, 13.0, 24.0]);
+//!
+//! // Reverse-mode autodiff (paper §3.2): build a graph, call backward().
+//! let w = Var::from_tensor(Tensor::ones(&[2, 2]), true);
+//! let v = Var::from_tensor(x, false);
+//! let loss = v.matmul(&w).unwrap().sum().unwrap();
+//! loss.backward().unwrap();
+//! assert!(w.grad().is_some());
+//! ```
+
+pub mod bench_util;
+pub mod dtype;
+pub mod error;
+pub mod shape;
+
+pub mod tensor;
+
+pub mod ops;
+
+pub mod autograd;
+
+pub mod nn;
+
+pub mod optim;
+
+pub mod data;
+
+pub mod baselines;
+
+pub mod runtime;
+
+pub mod coordinator;
+
+pub use dtype::DType;
+pub use error::{Error, Result};
+pub use shape::Shape;
+pub use tensor::Tensor;
+
+pub use autograd::Var;
+
+/// Convenience re-exports covering the common API surface.
+pub mod prelude {
+    pub use crate::autograd::{gradcheck, no_grad, Var};
+    pub use crate::data::{DataLoader, Dataset, Rng};
+    pub use crate::dtype::DType;
+    pub use crate::error::{Error, Result};
+    pub use crate::nn::{
+        losses, Activation, BatchNorm1d, Conv2d, Dense, Dropout, Module, Sequential,
+    };
+    pub use crate::optim::{Adam, Optimizer, RmsProp, Sgd};
+    pub use crate::shape::Shape;
+    pub use crate::tensor::Tensor;
+}

@@ -1,0 +1,215 @@
+//! MiniTensor CLI: the L3 coordinator entry point.
+//!
+//! ```text
+//! minitensor train [--config file.cfg] [key=value ...]
+//! minitensor serve [--config file.cfg] [key=value ...]
+//! minitensor info  [--artifacts DIR]
+//! minitensor bench-quick
+//! ```
+
+use minitensor::coordinator::{
+    Config, InferenceServer, NativeBatchModel, ServeConfig, TrainConfig, Trainer,
+};
+use minitensor::data::Rng;
+use minitensor::runtime::Engine;
+use minitensor::tensor::Tensor;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    let code = match cmd {
+        "train" => cmd_train(rest),
+        "serve" => cmd_serve(rest),
+        "info" => cmd_info(rest),
+        "bench-quick" => cmd_bench_quick(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "minitensor — lightweight tensor engine (MiniTensor reproduction)
+
+USAGE:
+  minitensor train [--config FILE] [section.key=value ...]
+  minitensor serve [--config FILE] [section.key=value ...]
+  minitensor info  [--artifacts DIR]
+  minitensor bench-quick
+
+EXAMPLES:
+  minitensor train train.steps=200 train.optimizer=adam
+  minitensor train train.backend=xla train.artifacts_dir=artifacts
+  minitensor serve serve.max_batch=16
+  minitensor info --artifacts artifacts"
+    );
+}
+
+/// Parse `--config FILE` plus bare `key=value` overrides.
+fn load_config(args: &[String]) -> minitensor::Result<Config> {
+    let mut cfg = Config::default();
+    let mut overrides = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--config" => {
+                i += 1;
+                let path = args
+                    .get(i)
+                    .ok_or_else(|| minitensor::Error::Config("--config needs a path".into()))?;
+                cfg = Config::load(path)?;
+            }
+            kv if kv.contains('=') => overrides.push(kv.to_string()),
+            other => {
+                return Err(minitensor::Error::Config(format!(
+                    "unexpected argument '{other}'"
+                )))
+            }
+        }
+        i += 1;
+    }
+    cfg.apply_overrides(&overrides)?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &[String]) -> minitensor::Result<()> {
+    let cfg = load_config(args)?;
+    let tc = TrainConfig::from_config(&cfg)?;
+    println!(
+        "training: dataset={} hidden={:?} optimizer={} lr={} steps={} backend={}",
+        tc.dataset, tc.hidden, tc.optimizer, tc.lr, tc.steps, tc.backend
+    );
+    let trainer = Trainer::new(tc);
+    let report = trainer.run()?;
+    println!("\nstep, loss");
+    for (s, l) in &report.losses {
+        println!("{s}, {l:.5}");
+    }
+    println!(
+        "\nparams={}  initial_loss={:.4}  final_loss={:.4}  acc={}  steps/s={:.1}",
+        report.num_parameters,
+        report.initial_loss,
+        report.final_loss,
+        report
+            .accuracy
+            .map_or("n/a".to_string(), |a| format!("{:.3}", a)),
+        report.steps_per_sec
+    );
+    print!("{}", trainer.metrics.report());
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> minitensor::Result<()> {
+    let cfg = load_config(args)?;
+    let tc = TrainConfig::from_config(&cfg)?;
+    let max_batch: usize = cfg.get_parse_or("serve.max_batch", 32)?;
+    let n_requests: usize = cfg.get_parse_or("serve.requests", 2000)?;
+
+    // Train a small model first (quick native run), then serve it.
+    println!("preparing model ({} steps on {})…", tc.steps, tc.dataset);
+    let trainer = Trainer::new(tc.clone());
+    let ds = trainer.dataset()?;
+    let in_features = ds.x.dims()[1];
+    let model = trainer.build_model(in_features, ds.classes.max(2));
+
+    let server = InferenceServer::start(
+        Box::new(NativeBatchModel::new(model, in_features)),
+        ServeConfig {
+            max_batch,
+            ..ServeConfig::default()
+        },
+    );
+
+    println!("serving {n_requests} synthetic requests…");
+    let mut rng = Rng::new(7);
+    let t0 = std::time::Instant::now();
+    let server = std::sync::Arc::new(server);
+    let threads: Vec<_> = (0..4)
+        .map(|t| {
+            let s = server.clone();
+            let mut trng = rng.fork(t as u64);
+            let per = n_requests / 4;
+            std::thread::spawn(move || {
+                for _ in 0..per {
+                    let feats: Vec<f32> =
+                        (0..in_features).map(|_| trng.next_f32()).collect();
+                    s.infer(feats).expect("infer");
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().expect("client thread");
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let stats = server.stats();
+    println!(
+        "done: {} requests in {:.2}s ({:.0} req/s), {} batches (mean size {:.1}), p50={:.2}ms p99={:.2}ms",
+        stats.requests,
+        elapsed,
+        stats.requests as f64 / elapsed,
+        stats.batches,
+        stats.mean_batch_size,
+        stats.p50_latency_ms,
+        stats.p99_latency_ms
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &[String]) -> minitensor::Result<()> {
+    let dir = args
+        .iter()
+        .position(|a| a == "--artifacts")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+        .unwrap_or("artifacts");
+    println!("minitensor v{}", env!("CARGO_PKG_VERSION"));
+    match Engine::cpu(dir) {
+        Ok(engine) => {
+            println!("pjrt platform: {}", engine.platform());
+            println!("artifacts in {dir}:");
+            for a in &engine.manifest().artifacts {
+                println!(
+                    "  {} ({}): {:?} -> {:?}",
+                    a.name,
+                    a.file.display(),
+                    a.input_shapes,
+                    a.output_shapes
+                );
+            }
+        }
+        Err(e) => println!("no artifacts loaded ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_bench_quick() -> minitensor::Result<()> {
+    use minitensor::bench_util::{bench, fmt_ns};
+    let mut rng = Rng::new(1);
+    let a = Tensor::randn(&[1_000_000], 0.0, 1.0, &mut rng);
+    let b = Tensor::randn(&[1_000_000], 0.0, 1.0, &mut rng);
+    let s = bench("add 1e6", 50.0, 5, || {
+        std::hint::black_box(a.add(&b).unwrap());
+    });
+    println!("elementwise add 1e6: {}", fmt_ns(s.median_ns));
+    let m1 = Tensor::randn(&[256, 256], 0.0, 1.0, &mut rng);
+    let m2 = Tensor::randn(&[256, 256], 0.0, 1.0, &mut rng);
+    let s = bench("matmul 256", 100.0, 5, || {
+        std::hint::black_box(m1.matmul(&m2).unwrap());
+    });
+    let gflops = 2.0 * 256f64.powi(3) / s.median_ns;
+    println!("matmul 256³: {} ({gflops:.2} GFLOP/s)", fmt_ns(s.median_ns));
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Activation functions as modules (paper §3.3: ReLU, Sigmoid, Tanh,
+//! GELU).
+
+use super::Module;
+use crate::autograd::Var;
+use crate::error::Result;
+
+/// Parameter-free activation module.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Activation {
+    Relu,
+    Sigmoid,
+    Tanh,
+    Gelu,
+    LeakyRelu(f32),
+    /// Identity (useful as a configurable no-op).
+    Identity,
+}
+
+impl Activation {
+    /// Parse from a config string.
+    pub fn parse(s: &str) -> Option<Activation> {
+        match s.to_ascii_lowercase().as_str() {
+            "relu" => Some(Activation::Relu),
+            "sigmoid" => Some(Activation::Sigmoid),
+            "tanh" => Some(Activation::Tanh),
+            "gelu" => Some(Activation::Gelu),
+            "leaky_relu" => Some(Activation::LeakyRelu(0.01)),
+            "identity" | "none" => Some(Activation::Identity),
+            _ => None,
+        }
+    }
+
+    /// Apply directly to a `Var`.
+    pub fn apply(&self, x: &Var) -> Var {
+        match self {
+            Activation::Relu => x.relu(),
+            Activation::Sigmoid => x.sigmoid(),
+            Activation::Tanh => x.tanh(),
+            Activation::Gelu => x.gelu(),
+            Activation::LeakyRelu(a) => x.leaky_relu(*a),
+            Activation::Identity => x.clone(),
+        }
+    }
+}
+
+impl Module for Activation {
+    fn forward(&self, x: &Var, _train: bool) -> Result<Var> {
+        Ok(self.apply(x))
+    }
+
+    fn parameters(&self) -> Vec<Var> {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn apply_matches_tensor_ops() {
+        let x = Var::from_tensor(
+            Tensor::from_vec(vec![-1.0, 0.5], &[2]).unwrap(),
+            false,
+        );
+        assert_eq!(
+            Activation::Relu.apply(&x).data().to_vec(),
+            vec![0.0, 0.5]
+        );
+        assert_eq!(
+            Activation::Identity.apply(&x).data().to_vec(),
+            vec![-1.0, 0.5]
+        );
+        let s = Activation::Sigmoid.apply(&x).data().to_vec();
+        assert!((s[1] - 0.6225).abs() < 1e-3);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Activation::parse("ReLU"), Some(Activation::Relu));
+        assert_eq!(Activation::parse("gelu"), Some(Activation::Gelu));
+        assert_eq!(Activation::parse("none"), Some(Activation::Identity));
+        assert_eq!(Activation::parse("bogus"), None);
+    }
+
+    #[test]
+    fn no_parameters() {
+        assert!(Activation::Tanh.parameters().is_empty());
+    }
+}

@@ -1,0 +1,109 @@
+//! Sequential container: chains modules, mirroring `torch.nn.Sequential`.
+
+use super::Module;
+use crate::autograd::Var;
+use crate::error::Result;
+
+/// An ordered chain of modules applied front to back.
+pub struct Sequential {
+    layers: Vec<Box<dyn Module>>,
+}
+
+impl Sequential {
+    /// Empty container.
+    pub fn new() -> Sequential {
+        Sequential { layers: Vec::new() }
+    }
+
+    /// Builder-style push.
+    pub fn add(mut self, layer: impl Module + 'static) -> Sequential {
+        self.layers.push(Box::new(layer));
+        self
+    }
+
+    /// Number of layers.
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// True when the container has no layers.
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+}
+
+impl Default for Sequential {
+    fn default() -> Self {
+        Sequential::new()
+    }
+}
+
+impl Module for Sequential {
+    fn forward(&self, x: &Var, train: bool) -> Result<Var> {
+        let mut cur = x.clone();
+        for layer in &self.layers {
+            cur = layer.forward(&cur, train)?;
+        }
+        Ok(cur)
+    }
+
+    fn parameters(&self) -> Vec<Var> {
+        self.layers.iter().flat_map(|l| l.parameters()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::nn::{Activation, Dense};
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn chains_layers() {
+        let mut rng = Rng::new(1);
+        let model = Sequential::new()
+            .add(Dense::new(4, 8, &mut rng))
+            .add(Activation::Relu)
+            .add(Dense::new(8, 2, &mut rng));
+        assert_eq!(model.len(), 3);
+        let x = Var::from_tensor(Tensor::ones(&[3, 4]), false);
+        let y = model.forward(&x, true).unwrap();
+        assert_eq!(y.dims(), vec![3, 2]);
+    }
+
+    #[test]
+    fn collects_all_parameters() {
+        let mut rng = Rng::new(2);
+        let model = Sequential::new()
+            .add(Dense::new(4, 8, &mut rng))
+            .add(Activation::Tanh)
+            .add(Dense::new(8, 2, &mut rng));
+        assert_eq!(model.parameters().len(), 4); // two weights + two biases
+        assert_eq!(model.num_parameters(), 4 * 8 + 8 + 8 * 2 + 2);
+    }
+
+    #[test]
+    fn empty_is_identity() {
+        let model = Sequential::new();
+        assert!(model.is_empty());
+        let x = Var::from_tensor(Tensor::ones(&[2]), false);
+        let y = model.forward(&x, true).unwrap();
+        assert_eq!(y.data().to_vec(), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn end_to_end_gradients() {
+        let mut rng = Rng::new(3);
+        let model = Sequential::new()
+            .add(Dense::new(2, 4, &mut rng))
+            .add(Activation::Relu)
+            .add(Dense::new(4, 1, &mut rng));
+        let x = Var::from_tensor(Tensor::ones(&[5, 2]), false);
+        let loss = model.forward(&x, true).unwrap().square().sum().unwrap();
+        loss.backward().unwrap();
+        for p in model.parameters() {
+            assert!(p.grad().is_some(), "missing grad for {p:?}");
+        }
+    }
+}

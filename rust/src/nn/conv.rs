@@ -1,0 +1,141 @@
+//! Convolutional layer module wrapping `ops::conv` (paper eq 6).
+
+use super::{kaiming_uniform, Module};
+use crate::autograd::Var;
+use crate::data::Rng;
+use crate::error::Result;
+use crate::ops::conv::Conv2dSpec;
+use crate::tensor::Tensor;
+
+/// 2-D convolution layer, NCHW, square kernels.
+pub struct Conv2d {
+    /// Weight `[c_out, c_in, k, k]`.
+    pub weight: Var,
+    /// Optional bias `[c_out]`.
+    pub bias: Option<Var>,
+    spec: Conv2dSpec,
+    c_in: usize,
+    c_out: usize,
+    k: usize,
+}
+
+impl Conv2d {
+    /// Kaiming-initialized conv layer.
+    pub fn new(
+        c_in: usize,
+        c_out: usize,
+        k: usize,
+        stride: usize,
+        padding: usize,
+        rng: &mut Rng,
+    ) -> Conv2d {
+        let fan_in = c_in * k * k;
+        Conv2d {
+            weight: Var::from_tensor(
+                kaiming_uniform(&[c_out, c_in, k, k], fan_in, rng),
+                true,
+            ),
+            bias: Some(Var::from_tensor(Tensor::zeros(&[c_out]), true)),
+            spec: Conv2dSpec { stride, padding },
+            c_in,
+            c_out,
+            k,
+        }
+    }
+
+    /// Geometry of this layer.
+    pub fn spec(&self) -> Conv2dSpec {
+        self.spec
+    }
+
+    /// (c_in, c_out, kernel).
+    pub fn geometry(&self) -> (usize, usize, usize) {
+        (self.c_in, self.c_out, self.k)
+    }
+}
+
+impl Module for Conv2d {
+    fn forward(&self, x: &Var, _train: bool) -> Result<Var> {
+        let y = x.conv2d(&self.weight, self.spec)?;
+        match &self.bias {
+            Some(b) => {
+                // bias [c_out] broadcasts over [n, c_out, oh, ow]: reshape
+                // to [c_out, 1, 1] so right-aligned broadcasting applies.
+                let c = y.dims()[1];
+                let b3 = b.reshape(&[c, 1, 1])?;
+                y.add(&b3)
+            }
+            None => Ok(y),
+        }
+    }
+
+    fn parameters(&self) -> Vec<Var> {
+        let mut ps = vec![self.weight.clone()];
+        if let Some(b) = &self.bias {
+            ps.push(b.clone());
+        }
+        ps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shape_and_bias() {
+        let mut rng = Rng::new(1);
+        let conv = Conv2d::new(3, 8, 3, 1, 1, &mut rng);
+        let x = Var::from_tensor(Tensor::zeros(&[2, 3, 16, 16]), false);
+        let y = conv.forward(&x, true).unwrap();
+        assert_eq!(y.dims(), vec![2, 8, 16, 16]);
+        // zero input ⇒ output equals broadcast bias (zeros by default)
+        assert!(y.data().allclose(&Tensor::zeros(&[2, 8, 16, 16]), 1e-6, 1e-6));
+
+        conv.bias
+            .as_ref()
+            .unwrap()
+            .set_data(Tensor::full(&[8], 0.5));
+        let y2 = conv.forward(&x, true).unwrap();
+        assert!(y2.data().allclose(&Tensor::full(&[2, 8, 16, 16], 0.5), 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn parameter_count() {
+        let mut rng = Rng::new(2);
+        let conv = Conv2d::new(3, 16, 5, 1, 2, &mut rng);
+        assert_eq!(conv.num_parameters(), 16 * 3 * 5 * 5 + 16);
+    }
+
+    #[test]
+    fn gradients_reach_weight_and_bias() {
+        let mut rng = Rng::new(3);
+        let conv = Conv2d::new(1, 2, 3, 1, 1, &mut rng);
+        let x = Var::from_tensor(Tensor::randn(&[1, 1, 6, 6], 0.0, 1.0, &mut rng), true);
+        conv.forward(&x, true)
+            .unwrap()
+            .square()
+            .sum()
+            .unwrap()
+            .backward()
+            .unwrap();
+        assert!(conv.weight.grad().is_some());
+        assert!(conv.bias.as_ref().unwrap().grad().is_some());
+        assert!(x.grad().is_some());
+    }
+
+    #[test]
+    fn gradcheck_small_conv() {
+        let mut rng = Rng::new(4);
+        let conv = Conv2d::new(1, 1, 3, 1, 1, &mut rng);
+        let x0 = Tensor::randn(&[1, 1, 4, 4], 0.0, 1.0, &mut rng);
+        let report = crate::autograd::gradcheck(
+            |v| conv.forward(v, true)?.square().sum(),
+            &x0,
+            1e-2,
+            2e-2,
+        )
+        .unwrap();
+        assert!(report.pass, "{report:?}");
+    }
+}

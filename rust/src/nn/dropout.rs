@@ -1,0 +1,98 @@
+//! Dropout (paper §3.3): elementwise Bernoulli mask during training with
+//! inverted scaling (`1/(1-p)`), identity at inference.
+
+use std::cell::RefCell;
+
+use super::Module;
+use crate::autograd::Var;
+use crate::data::Rng;
+use crate::error::Result;
+use crate::tensor::Tensor;
+
+/// Inverted dropout layer.
+pub struct Dropout {
+    p: f32,
+    rng: RefCell<Rng>,
+}
+
+impl Dropout {
+    /// Drop probability `p ∈ [0, 1)`.
+    pub fn new(p: f32, seed: u64) -> Dropout {
+        assert!((0.0..1.0).contains(&p), "dropout p must be in [0,1)");
+        Dropout {
+            p,
+            rng: RefCell::new(Rng::new(seed)),
+        }
+    }
+
+    /// The drop probability.
+    pub fn p(&self) -> f32 {
+        self.p
+    }
+}
+
+impl Module for Dropout {
+    fn forward(&self, x: &Var, train: bool) -> Result<Var> {
+        if !train || self.p == 0.0 {
+            return Ok(x.clone());
+        }
+        let keep = 1.0 - self.p;
+        let scale = 1.0 / keep;
+        let mut rng = self.rng.borrow_mut();
+        let dims = x.dims();
+        let mask_data: Vec<f32> = (0..dims.iter().product::<usize>())
+            .map(|_| if rng.next_f32() < keep { scale } else { 0.0 })
+            .collect();
+        let mask = Tensor::from_vec(mask_data, &dims)?;
+        x.mul_mask(&mask)
+    }
+
+    fn parameters(&self) -> Vec<Var> {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_mode_is_identity() {
+        let d = Dropout::new(0.5, 1);
+        let x = Var::from_tensor(Tensor::ones(&[100]), false);
+        let y = d.forward(&x, false).unwrap();
+        assert_eq!(y.data().to_vec(), vec![1.0; 100]);
+    }
+
+    #[test]
+    fn train_mode_zeroes_and_scales() {
+        let d = Dropout::new(0.5, 2);
+        let x = Var::from_tensor(Tensor::ones(&[10000]), false);
+        let y = d.forward(&x, true).unwrap().data();
+        let zeros = y.iter().filter(|&v| v == 0.0).count();
+        let kept = y.iter().filter(|&v| (v - 2.0).abs() < 1e-6).count();
+        assert_eq!(zeros + kept, 10000);
+        assert!((zeros as f32 / 10000.0 - 0.5).abs() < 0.05);
+        // expectation preserved
+        let mean = y.mean().item().unwrap();
+        assert!((mean - 1.0).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn p_zero_is_identity_even_in_train() {
+        let d = Dropout::new(0.0, 3);
+        let x = Var::from_tensor(Tensor::ones(&[10]), false);
+        assert_eq!(d.forward(&x, true).unwrap().data().to_vec(), vec![1.0; 10]);
+    }
+
+    #[test]
+    fn gradient_flows_through_mask() {
+        let d = Dropout::new(0.5, 4);
+        let x = Var::from_tensor(Tensor::ones(&[100]), true);
+        let y = d.forward(&x, true).unwrap();
+        y.sum().unwrap().backward().unwrap();
+        let g = x.grad().unwrap();
+        // gradient is exactly the mask
+        assert!(g.iter().all(|v| v == 0.0 || (v - 2.0).abs() < 1e-6));
+    }
+}

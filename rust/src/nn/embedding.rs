@@ -1,0 +1,102 @@
+//! Embedding layer: a learnable lookup table with the scatter-add
+//! pullback (the sparse-gradient pattern the paper's §7 "batched Rust
+//! kernels" roadmap points at).
+
+use super::Module;
+use crate::autograd::Var;
+use crate::data::Rng;
+use crate::error::Result;
+use crate::tensor::Tensor;
+
+/// `Embedding(V, D)`: maps i32 token ids `[n]` to vectors `[n, D]`.
+pub struct Embedding {
+    /// Table `[vocab, dim]`.
+    pub weight: Var,
+    vocab: usize,
+    dim: usize,
+}
+
+impl Embedding {
+    /// N(0, 0.02) initialized table (the usual transformer init).
+    pub fn new(vocab: usize, dim: usize, rng: &mut Rng) -> Embedding {
+        Embedding {
+            weight: Var::from_tensor(Tensor::randn(&[vocab, dim], 0.0, 0.02, rng), true),
+            vocab,
+            dim,
+        }
+    }
+
+    /// Look up a batch of ids, recording the scatter-add pullback.
+    pub fn lookup(&self, ids: &Tensor) -> Result<Var> {
+        self.weight.gather_rows(ids, self.vocab)
+    }
+
+    /// (vocab, dim).
+    pub fn geometry(&self) -> (usize, usize) {
+        (self.vocab, self.dim)
+    }
+}
+
+impl Module for Embedding {
+    fn forward(&self, x: &Var, _train: bool) -> Result<Var> {
+        self.lookup(&x.data())
+    }
+
+    fn parameters(&self) -> Vec<Var> {
+        vec![self.weight.clone()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_shapes_and_values() {
+        let mut rng = Rng::new(1);
+        let emb = Embedding::new(10, 4, &mut rng);
+        let ids = Tensor::from_vec_i32(vec![3, 3, 7], &[3]).unwrap();
+        let out = emb.lookup(&ids).unwrap();
+        assert_eq!(out.dims(), vec![3, 4]);
+        // rows 0 and 1 identical (same id)
+        let v = out.data();
+        assert_eq!(v.row(0).unwrap().to_vec(), v.row(1).unwrap().to_vec());
+        assert_eq!(emb.num_parameters(), 40);
+    }
+
+    #[test]
+    fn gradient_scatters_to_used_rows_only() {
+        let mut rng = Rng::new(2);
+        let emb = Embedding::new(5, 2, &mut rng);
+        let ids = Tensor::from_vec_i32(vec![1, 1, 4], &[3]).unwrap();
+        let out = emb.lookup(&ids).unwrap();
+        out.sum().unwrap().backward().unwrap();
+        let g = emb.weight.grad().unwrap();
+        assert_eq!(g.dims(), &[5, 2]);
+        // row 1 used twice → grad 2; row 4 once → 1; others 0
+        assert_eq!(g.row(0).unwrap().to_vec(), vec![0.0, 0.0]);
+        assert_eq!(g.row(1).unwrap().to_vec(), vec![2.0, 2.0]);
+        assert_eq!(g.row(4).unwrap().to_vec(), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn embedding_trains_to_separate_classes() {
+        // Learn embeddings such that id 0 → positive, id 1 → negative.
+        use crate::optim::{Optimizer, Sgd};
+        let mut rng = Rng::new(3);
+        let emb = Embedding::new(2, 1, &mut rng);
+        let mut opt = Sgd::new(emb.parameters(), 0.5);
+        let ids = Tensor::from_vec_i32(vec![0, 1], &[2]).unwrap();
+        let target = Tensor::from_vec(vec![1.0, -1.0], &[2, 1]).unwrap();
+        for _ in 0..100 {
+            opt.zero_grad();
+            let out = emb.lookup(&ids).unwrap();
+            let loss = crate::nn::losses::mse(&out, &target).unwrap();
+            loss.backward().unwrap();
+            opt.step().unwrap();
+        }
+        let w = emb.weight.data();
+        assert!(w.at(&[0, 0]).unwrap() > 0.8);
+        assert!(w.at(&[1, 0]).unwrap() < -0.8);
+    }
+}

@@ -1,0 +1,57 @@
+//! Weight initialization schemes.
+
+use crate::data::Rng;
+use crate::tensor::Tensor;
+
+/// Xavier/Glorot uniform: `U(-a, a)` with `a = √(6 / (fan_in + fan_out))`.
+/// The default for tanh/sigmoid networks.
+pub fn xavier_uniform(dims: &[usize], fan_in: usize, fan_out: usize, rng: &mut Rng) -> Tensor {
+    let a = (6.0 / (fan_in + fan_out) as f32).sqrt();
+    Tensor::rand(dims, -a, a, rng)
+}
+
+/// Kaiming/He uniform: `U(-a, a)` with `a = √(6 / fan_in)`, for ReLU
+/// networks.
+pub fn kaiming_uniform(dims: &[usize], fan_in: usize, rng: &mut Rng) -> Tensor {
+    let a = (6.0 / fan_in as f32).sqrt();
+    Tensor::rand(dims, -a, a, rng)
+}
+
+/// Plain Gaussian initialization.
+pub fn normal_init(dims: &[usize], std: f32, rng: &mut Rng) -> Tensor {
+    Tensor::randn(dims, 0.0, std, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xavier_bound() {
+        let mut rng = Rng::new(1);
+        let w = xavier_uniform(&[100, 50], 50, 100, &mut rng);
+        let a = (6.0f32 / 150.0).sqrt();
+        assert!(w.iter().all(|v| v.abs() <= a));
+        // not degenerate
+        let var = w.var_axis(0, false).unwrap().mean().item().unwrap();
+        assert!(var > 0.0);
+    }
+
+    #[test]
+    fn kaiming_bound() {
+        let mut rng = Rng::new(2);
+        let w = kaiming_uniform(&[64, 32], 32, &mut rng);
+        let a = (6.0f32 / 32.0).sqrt();
+        assert!(w.iter().all(|v| v.abs() <= a));
+    }
+
+    #[test]
+    fn normal_std() {
+        let mut rng = Rng::new(3);
+        let w = normal_init(&[10000], 0.02, &mut rng);
+        let v = w.to_vec();
+        let mean = v.iter().sum::<f32>() / v.len() as f32;
+        let std = (v.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / v.len() as f32).sqrt();
+        assert!((std - 0.02).abs() < 0.002);
+    }
+}

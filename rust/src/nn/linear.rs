@@ -1,0 +1,166 @@
+//! Fully-connected (dense) layer, paper eq (5):
+//! `Dense(x; W, b) = x Wᵀ + 1 bᵀ` with `W ∈ R^{d_out × d_in}`.
+
+use super::{kaiming_uniform, Module};
+use crate::autograd::Var;
+use crate::data::Rng;
+use crate::error::Result;
+use crate::tensor::Tensor;
+
+/// Dense / fully-connected layer.
+pub struct Dense {
+    /// Weight `[d_out, d_in]` (PyTorch layout — rows are output features).
+    pub weight: Var,
+    /// Optional bias `[d_out]`.
+    pub bias: Option<Var>,
+    d_in: usize,
+    d_out: usize,
+}
+
+impl Dense {
+    /// Kaiming-initialized dense layer with bias.
+    pub fn new(d_in: usize, d_out: usize, rng: &mut Rng) -> Dense {
+        Dense {
+            weight: Var::from_tensor(kaiming_uniform(&[d_out, d_in], d_in, rng), true),
+            bias: Some(Var::from_tensor(Tensor::zeros(&[d_out]), true)),
+            d_in,
+            d_out,
+        }
+    }
+
+    /// Dense layer without bias.
+    pub fn new_no_bias(d_in: usize, d_out: usize, rng: &mut Rng) -> Dense {
+        Dense {
+            weight: Var::from_tensor(kaiming_uniform(&[d_out, d_in], d_in, rng), true),
+            bias: None,
+            d_in,
+            d_out,
+        }
+    }
+
+    /// Build from explicit tensors (tests / loading).
+    pub fn from_tensors(weight: Tensor, bias: Option<Tensor>) -> Dense {
+        let d_out = weight.dims()[0];
+        let d_in = weight.dims()[1];
+        Dense {
+            weight: Var::from_tensor(weight, true),
+            bias: bias.map(|b| Var::from_tensor(b, true)),
+            d_in,
+            d_out,
+        }
+    }
+
+    /// Input feature count.
+    pub fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    /// Output feature count.
+    pub fn d_out(&self) -> usize {
+        self.d_out
+    }
+}
+
+impl Module for Dense {
+    fn forward(&self, x: &Var, _train: bool) -> Result<Var> {
+        let y = x.matmul_nt(&self.weight)?; // x Wᵀ (eq 1/5)
+        match &self.bias {
+            Some(b) => y.add(b), // broadcasts [d_out] over the batch
+            None => Ok(y),
+        }
+    }
+
+    fn parameters(&self) -> Vec<Var> {
+        let mut ps = vec![self.weight.clone()];
+        if let Some(b) = &self.bias {
+            ps.push(b.clone());
+        }
+        ps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autograd::gradcheck;
+
+    #[test]
+    fn forward_matches_equation5() {
+        // W = [[1,2],[3,4],[5,6]] (3 out, 2 in), b = [10, 20, 30]
+        let w = Tensor::from_vec(vec![1., 2., 3., 4., 5., 6.], &[3, 2]).unwrap();
+        let b = Tensor::from_vec(vec![10., 20., 30.], &[3]).unwrap();
+        let layer = Dense::from_tensors(w, Some(b));
+        let x = Var::from_tensor(Tensor::from_vec(vec![1., 1.], &[1, 2]).unwrap(), false);
+        let y = layer.forward(&x, true).unwrap();
+        assert_eq!(y.data().to_vec(), vec![3. + 10., 7. + 20., 11. + 30.]);
+    }
+
+    #[test]
+    fn parameter_count() {
+        let mut rng = Rng::new(1);
+        let layer = Dense::new(784, 128, &mut rng);
+        assert_eq!(layer.num_parameters(), 784 * 128 + 128);
+        let nb = Dense::new_no_bias(10, 5, &mut rng);
+        assert_eq!(nb.num_parameters(), 50);
+    }
+
+    #[test]
+    fn gradcheck_weight_and_input() {
+        let mut rng = Rng::new(2);
+        let layer = Dense::new(4, 3, &mut rng);
+        let x0 = Tensor::randn(&[2, 4], 0.0, 1.0, &mut rng);
+
+        // w.r.t. input
+        let report = gradcheck(
+            |v| layer.forward(v, true)?.square().sum(),
+            &x0,
+            1e-3,
+            1e-2,
+        )
+        .unwrap();
+        assert!(report.pass, "{report:?}");
+
+        // w.r.t. weight: rebuild a layer around the probed weight tensor
+        let bias = layer.bias.as_ref().unwrap().data();
+        let x_fixed = x0.clone();
+        let report_w = gradcheck(
+            |w| {
+                let l = Dense {
+                    weight: w.clone(),
+                    bias: Some(Var::from_tensor(bias.clone(), false)),
+                    d_in: 4,
+                    d_out: 3,
+                };
+                l.forward(&Var::from_tensor(x_fixed.clone(), false), true)?
+                    .square()
+                    .sum()
+            },
+            &layer.weight.data(),
+            1e-3,
+            1e-2,
+        )
+        .unwrap();
+        assert!(report_w.pass, "{report_w:?}");
+    }
+
+    #[test]
+    fn bias_grad_sums_over_batch() {
+        let mut rng = Rng::new(3);
+        let layer = Dense::new(2, 2, &mut rng);
+        let x = Var::from_tensor(Tensor::ones(&[5, 2]), false);
+        layer.forward(&x, true).unwrap().sum().unwrap().backward().unwrap();
+        let gb = layer.bias.as_ref().unwrap().grad().unwrap();
+        assert_eq!(gb.to_vec(), vec![5.0, 5.0]);
+    }
+
+    #[test]
+    fn zero_grad_clears() {
+        let mut rng = Rng::new(4);
+        let layer = Dense::new(2, 2, &mut rng);
+        let x = Var::from_tensor(Tensor::ones(&[1, 2]), false);
+        layer.forward(&x, true).unwrap().sum().unwrap().backward().unwrap();
+        assert!(layer.weight.grad().is_some());
+        layer.zero_grad();
+        assert!(layer.weight.grad().is_none());
+    }
+}

@@ -1,0 +1,107 @@
+//! Loss functions (paper §3.3): cross-entropy (eq 8), MSE, and binary
+//! cross-entropy.
+
+use crate::autograd::Var;
+use crate::error::Result;
+use crate::tensor::Tensor;
+
+/// Mean cross-entropy over logits `[b, C]` and integer labels `[b]`
+/// (eq 8). Fused softmax + NLL; the pullback is `(softmax − onehot)/b`.
+pub fn cross_entropy(logits: &Var, labels: &Tensor) -> Result<Var> {
+    logits.cross_entropy(labels)
+}
+
+/// Mean squared error `L = 1/N Σ (x − x̂)²`.
+pub fn mse(pred: &Var, target: &Tensor) -> Result<Var> {
+    let t = Var::from_tensor(target.clone(), false);
+    pred.sub(&t)?.square().mean()
+}
+
+/// Binary cross-entropy on probabilities `p ∈ (0,1)` against 0/1 targets,
+/// with clamping for numerical safety.
+pub fn bce(prob: &Var, target: &Tensor) -> Result<Var> {
+    let p = prob.clamp(1e-7, 1.0 - 1e-7);
+    let t = Var::from_tensor(target.clone(), false);
+    let one_minus_t = Var::from_tensor(target.map(|v| 1.0 - v), false);
+    // −[t log p + (1−t) log(1−p)]
+    let pos = t.mul(&p.log())?;
+    let neg_p = p.mul_scalar(-1.0).add_scalar(1.0);
+    let neg = one_minus_t.mul(&neg_p.log())?;
+    Ok(pos.add(&neg)?.mean()?.mul_scalar(-1.0))
+}
+
+/// Classification accuracy of logits `[b, C]` against labels `[b]`
+/// (metric, not differentiable).
+pub fn accuracy(logits: &Tensor, labels: &Tensor) -> Result<f32> {
+    let pred = logits.argmax_axis(1)?;
+    let correct = pred
+        .iter()
+        .zip(labels.iter())
+        .filter(|(p, y)| p == y)
+        .count();
+    Ok(correct as f32 / labels.numel() as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autograd::gradcheck;
+    use crate::data::Rng;
+
+    #[test]
+    fn mse_zero_for_exact_prediction() {
+        let t = Tensor::from_vec(vec![1.0, 2.0], &[2]).unwrap();
+        let p = Var::from_tensor(t.clone(), true);
+        let l = mse(&p, &t).unwrap();
+        assert_eq!(l.item().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn mse_value_and_gradcheck() {
+        let target = Tensor::from_vec(vec![0.0, 0.0], &[2]).unwrap();
+        let p = Var::from_tensor(Tensor::from_vec(vec![1.0, 3.0], &[2]).unwrap(), true);
+        let l = mse(&p, &target).unwrap();
+        assert!((l.item().unwrap() - 5.0).abs() < 1e-6); // (1+9)/2
+
+        let mut rng = Rng::new(1);
+        let x0 = Tensor::randn(&[4, 3], 0.0, 1.0, &mut rng);
+        let tgt = Tensor::randn(&[4, 3], 0.0, 1.0, &mut rng);
+        let report = gradcheck(|v| mse(v, &tgt), &x0, 1e-3, 1e-2).unwrap();
+        assert!(report.pass, "{report:?}");
+    }
+
+    #[test]
+    fn cross_entropy_gradcheck() {
+        let mut rng = Rng::new(2);
+        let logits = Tensor::randn(&[5, 4], 0.0, 2.0, &mut rng);
+        let labels = Tensor::from_vec_i32(vec![0, 1, 2, 3, 1], &[5]).unwrap();
+        let report = gradcheck(|v| cross_entropy(v, &labels), &logits, 1e-3, 1e-2).unwrap();
+        assert!(report.pass, "{report:?}");
+    }
+
+    #[test]
+    fn bce_known_value() {
+        // p = 0.5 everywhere ⇒ BCE = ln 2
+        let p = Var::from_tensor(Tensor::full(&[4], 0.5), true);
+        let t = Tensor::from_vec(vec![1.0, 0.0, 1.0, 0.0], &[4]).unwrap();
+        let l = bce(&p, &t).unwrap();
+        assert!((l.item().unwrap() - 2f32.ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn bce_gradcheck() {
+        let p0 = Tensor::from_vec(vec![0.3, 0.7, 0.9, 0.2], &[4]).unwrap();
+        let t = Tensor::from_vec(vec![0.0, 1.0, 1.0, 0.0], &[4]).unwrap();
+        let report = gradcheck(|v| bce(v, &t), &p0, 1e-3, 1e-2).unwrap();
+        assert!(report.pass, "{report:?}");
+    }
+
+    #[test]
+    fn accuracy_metric() {
+        let logits = Tensor::from_vec(vec![2., 0., 1., 0., 3., 0.], &[2, 3]).unwrap();
+        let labels = Tensor::from_vec_i32(vec![0, 1], &[2]).unwrap();
+        assert_eq!(accuracy(&logits, &labels).unwrap(), 1.0);
+        let wrong = Tensor::from_vec_i32(vec![1, 1], &[2]).unwrap();
+        assert_eq!(accuracy(&logits, &wrong).unwrap(), 0.5);
+    }
+}

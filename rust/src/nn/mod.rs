@@ -1,0 +1,55 @@
+//! Neural-network building blocks (paper §3.3): layers, activations,
+//! normalization, dropout, losses, and initialization.
+
+mod activation;
+mod container;
+mod conv;
+mod dropout;
+mod embedding;
+mod init;
+mod linear;
+pub mod losses;
+mod norm;
+mod serialize;
+
+pub use activation::Activation;
+pub use container::Sequential;
+pub use conv::Conv2d;
+pub use dropout::Dropout;
+pub use embedding::Embedding;
+pub use init::{kaiming_uniform, normal_init, xavier_uniform};
+pub use linear::Dense;
+pub use norm::{BatchNorm1d, LayerNorm};
+pub use serialize::{load_parameters, save_parameters};
+
+use crate::autograd::Var;
+use crate::error::Result;
+
+/// A trainable component: forward pass over `Var`s plus parameter access.
+///
+/// Mirrors `torch.nn.Module`: parameters are shared `Var` handles, so an
+/// optimizer holding the same handles sees gradients accumulated by
+/// `backward()`.
+pub trait Module {
+    /// Forward pass. `train` toggles training-only behaviour (dropout,
+    /// batch-norm statistics).
+    fn forward(&self, x: &Var, train: bool) -> Result<Var>;
+
+    /// All trainable parameters (leaf `Var`s with `requires_grad`).
+    fn parameters(&self) -> Vec<Var>;
+
+    /// Total number of scalar parameters.
+    fn num_parameters(&self) -> usize {
+        self.parameters()
+            .iter()
+            .map(|p| p.data().numel())
+            .sum()
+    }
+
+    /// Clear all parameter gradients.
+    fn zero_grad(&self) {
+        for p in self.parameters() {
+            p.zero_grad();
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! Normalization layers (paper eq 7): BatchNorm over the batch axis with
+//! learnable scale γ and shift β plus running statistics, and LayerNorm
+//! over the feature axis.
+
+use std::cell::RefCell;
+
+use super::Module;
+use crate::autograd::Var;
+use crate::error::Result;
+use crate::tensor::Tensor;
+
+/// Batch normalization over `[b, d]` activations (eq 7):
+/// `BN(x) = γ ⊙ (x − μ)/√(σ² + ε) + β`.
+///
+/// Training uses batch statistics (and updates the running averages);
+/// inference uses the running averages. The normalization is expressed in
+/// autograd primitives, so the pullback through μ and σ² is exact — no
+/// hand-derived batchnorm backward needed.
+pub struct BatchNorm1d {
+    /// Learnable scale γ `[d]`.
+    pub gamma: Var,
+    /// Learnable shift β `[d]`.
+    pub beta: Var,
+    eps: f32,
+    momentum: f32,
+    running_mean: RefCell<Tensor>,
+    running_var: RefCell<Tensor>,
+    features: usize,
+}
+
+impl BatchNorm1d {
+    /// BatchNorm over `features` channels with default ε=1e-5, momentum 0.1.
+    pub fn new(features: usize) -> BatchNorm1d {
+        BatchNorm1d {
+            gamma: Var::from_tensor(Tensor::ones(&[features]), true),
+            beta: Var::from_tensor(Tensor::zeros(&[features]), true),
+            eps: 1e-5,
+            momentum: 0.1,
+            running_mean: RefCell::new(Tensor::zeros(&[features])),
+            running_var: RefCell::new(Tensor::ones(&[features])),
+            features,
+        }
+    }
+
+    /// Current running mean (inference statistics).
+    pub fn running_mean(&self) -> Tensor {
+        self.running_mean.borrow().clone()
+    }
+
+    /// Current running variance.
+    pub fn running_var(&self) -> Tensor {
+        self.running_var.borrow().clone()
+    }
+}
+
+impl Module for BatchNorm1d {
+    fn forward(&self, x: &Var, train: bool) -> Result<Var> {
+        if x.dims().len() != 2 || x.dims()[1] != self.features {
+            return Err(crate::Error::ShapeMismatch {
+                op: "batch_norm1d",
+                expected: format!("[b, {}]", self.features),
+                got: format!("{:?}", x.dims()),
+            });
+        }
+        if train {
+            // μ, σ² over the batch axis — recorded ops so grads are exact.
+            let mu = x.mean_axis(0, true)?; // [1, d]
+            let centered = x.sub(&mu)?;
+            let var = centered.square().mean_axis(0, true)?; // [1, d]
+            let inv_std = var.add_scalar(self.eps).sqrt().recip();
+            let norm = centered.mul(&inv_std)?;
+
+            // Update running stats (detached, unbiased variance).
+            let b = x.dims()[0] as f32;
+            let unbias = if b > 1.0 { b / (b - 1.0) } else { 1.0 };
+            {
+                let mut rm = self.running_mean.borrow_mut();
+                *rm = rm
+                    .mul_scalar(1.0 - self.momentum)
+                    .add(&mu.data().squeeze().mul_scalar(self.momentum))?;
+                let mut rv = self.running_var.borrow_mut();
+                *rv = rv.mul_scalar(1.0 - self.momentum).add(
+                    &var.data()
+                        .squeeze()
+                        .mul_scalar(self.momentum * unbias),
+                )?;
+            }
+
+            norm.mul(&self.gamma)?.add(&self.beta)
+        } else {
+            // Inference: use running statistics as constants.
+            let rm = self.running_mean.borrow().clone();
+            let rv = self.running_var.borrow().clone();
+            let inv_std = rv.add_scalar(self.eps).sqrt().recip();
+            let scale = self.gamma.mul_mask(&inv_std)?;
+            // y = γ/σ ⊙ x − γ/σ ⊙ μ + β
+            let shifted = x.sub(&Var::from_tensor(rm, false))?;
+            shifted.mul(&scale)?.add(&self.beta)
+        }
+    }
+
+    fn parameters(&self) -> Vec<Var> {
+        vec![self.gamma.clone(), self.beta.clone()]
+    }
+}
+
+/// Layer normalization over the last axis with learnable γ, β.
+pub struct LayerNorm {
+    pub gamma: Var,
+    pub beta: Var,
+    eps: f32,
+    features: usize,
+}
+
+impl LayerNorm {
+    /// LayerNorm over `features`-sized last axis.
+    pub fn new(features: usize) -> LayerNorm {
+        LayerNorm {
+            gamma: Var::from_tensor(Tensor::ones(&[features]), true),
+            beta: Var::from_tensor(Tensor::zeros(&[features]), true),
+            eps: 1e-5,
+            features,
+        }
+    }
+}
+
+impl Module for LayerNorm {
+    fn forward(&self, x: &Var, _train: bool) -> Result<Var> {
+        let last = *x.dims().last().unwrap_or(&0);
+        if last != self.features {
+            return Err(crate::Error::ShapeMismatch {
+                op: "layer_norm",
+                expected: format!("last dim {}", self.features),
+                got: format!("{:?}", x.dims()),
+            });
+        }
+        let mu = x.mean_axis(-1, true)?;
+        let centered = x.sub(&mu)?;
+        let var = centered.square().mean_axis(-1, true)?;
+        let inv_std = var.add_scalar(self.eps).sqrt().recip();
+        centered.mul(&inv_std)?.mul(&self.gamma)?.add(&self.beta)
+    }
+
+    fn parameters(&self) -> Vec<Var> {
+        vec![self.gamma.clone(), self.beta.clone()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    #[test]
+    fn train_output_is_normalized() {
+        let mut rng = Rng::new(1);
+        let bn = BatchNorm1d::new(4);
+        let x = Var::from_tensor(Tensor::randn(&[64, 4], 3.0, 2.0, &mut rng), false);
+        let y = bn.forward(&x, true).unwrap().data();
+        let mean = y.mean_axis(0, false).unwrap();
+        let var = y.var_axis(0, false).unwrap();
+        assert!(mean.allclose(&Tensor::zeros(&[4]), 1e-3, 1e-3), "{mean}");
+        assert!(var.allclose(&Tensor::ones(&[4]), 1e-2, 1e-2), "{var}");
+    }
+
+    #[test]
+    fn gamma_beta_affine() {
+        let bn = BatchNorm1d::new(2);
+        bn.gamma.set_data(Tensor::from_vec(vec![2.0, 2.0], &[2]).unwrap());
+        bn.beta.set_data(Tensor::from_vec(vec![5.0, 5.0], &[2]).unwrap());
+        let mut rng = Rng::new(2);
+        let x = Var::from_tensor(Tensor::randn(&[32, 2], 0.0, 1.0, &mut rng), false);
+        let y = bn.forward(&x, true).unwrap().data();
+        let mean = y.mean_axis(0, false).unwrap();
+        assert!(mean.allclose(&Tensor::full(&[2], 5.0), 1e-2, 1e-2));
+    }
+
+    #[test]
+    fn running_stats_converge_to_data_stats() {
+        let mut rng = Rng::new(3);
+        let bn = BatchNorm1d::new(3);
+        for _ in 0..200 {
+            let x = Var::from_tensor(Tensor::randn(&[32, 3], 2.0, 1.5, &mut rng), false);
+            bn.forward(&x, true).unwrap();
+        }
+        let rm = bn.running_mean();
+        let rv = bn.running_var();
+        assert!(rm.allclose(&Tensor::full(&[3], 2.0), 0.1, 0.15), "{rm}");
+        assert!(rv.allclose(&Tensor::full(&[3], 2.25), 0.15, 0.3), "{rv}");
+    }
+
+    #[test]
+    fn inference_uses_running_stats() {
+        let bn = BatchNorm1d::new(1);
+        // prime the running stats
+        let mut rng = Rng::new(4);
+        for _ in 0..100 {
+            let x = Var::from_tensor(Tensor::randn(&[64, 1], 10.0, 1.0, &mut rng), false);
+            bn.forward(&x, true).unwrap();
+        }
+        // a single far-off example at inference shouldn't be renormalized
+        // by its own statistics
+        let x = Var::from_tensor(Tensor::full(&[1, 1], 10.0), false);
+        let y = bn.forward(&x, false).unwrap().data().item().unwrap();
+        assert!(y.abs() < 0.5, "y={y}"); // ≈ (10-10)/1
+    }
+
+    #[test]
+    fn batchnorm_gradients_flow() {
+        let mut rng = Rng::new(5);
+        let bn = BatchNorm1d::new(3);
+        let x = Var::from_tensor(Tensor::randn(&[16, 3], 0.0, 1.0, &mut rng), true);
+        let loss = bn.forward(&x, true).unwrap().square().sum().unwrap();
+        loss.backward().unwrap();
+        assert!(x.grad().is_some());
+        assert!(bn.gamma.grad().is_some());
+        assert!(bn.beta.grad().is_some());
+    }
+
+    #[test]
+    fn shape_validation() {
+        let bn = BatchNorm1d::new(3);
+        let bad = Var::from_tensor(Tensor::zeros(&[4, 5]), false);
+        assert!(bn.forward(&bad, true).is_err());
+    }
+
+    #[test]
+    fn layernorm_rows_normalized() {
+        let mut rng = Rng::new(6);
+        let ln = LayerNorm::new(8);
+        let x = Var::from_tensor(Tensor::randn(&[4, 8], -1.0, 3.0, &mut rng), false);
+        let y = ln.forward(&x, true).unwrap().data();
+        let mean = y.mean_axis(-1, false).unwrap();
+        assert!(mean.allclose(&Tensor::zeros(&[4]), 1e-3, 1e-3));
+        let var = y.var_axis(-1, false).unwrap();
+        assert!(var.allclose(&Tensor::ones(&[4]), 1e-2, 1e-2));
+    }
+
+    #[test]
+    fn layernorm_gradcheck() {
+        let mut rng = Rng::new(7);
+        let ln = LayerNorm::new(4);
+        let x0 = Tensor::randn(&[3, 4], 0.0, 1.0, &mut rng);
+        let report = crate::autograd::gradcheck(
+            |v| ln.forward(v, true)?.square().sum(),
+            &x0,
+            1e-2,
+            2e-2,
+        )
+        .unwrap();
+        assert!(report.pass, "{report:?}");
+    }
+}

@@ -1,0 +1,168 @@
+//! Parameter checkpointing: a tiny self-describing binary format
+//! (magic + per-tensor rank/dims/data, little-endian f32), dependency-
+//! free. Covers the "train, save, load, serve" workflow a downstream
+//! user of the library needs.
+//!
+//! ```text
+//! "MTCK" u32-version u32-count { u32-rank u32-dims[rank] f32-data[...] }*
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::autograd::Var;
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"MTCK";
+const VERSION: u32 = 1;
+
+/// Save parameters (in order) to a checkpoint file.
+pub fn save_parameters(params: &[Var], path: impl AsRef<Path>) -> Result<()> {
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(params.len() as u32).to_le_bytes())?;
+    for p in params {
+        let t = p.data().contiguous();
+        w.write_all(&(t.rank() as u32).to_le_bytes())?;
+        for &d in t.dims() {
+            w.write_all(&(d as u32).to_le_bytes())?;
+        }
+        for v in t.to_vec() {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Load a checkpoint into existing parameters (shapes must match 1:1).
+pub fn load_parameters(params: &[Var], path: impl AsRef<Path>) -> Result<()> {
+    let tensors = read_checkpoint(path)?;
+    if tensors.len() != params.len() {
+        return Err(Error::msg(format!(
+            "checkpoint has {} tensors, model has {} parameters",
+            tensors.len(),
+            params.len()
+        )));
+    }
+    for (p, t) in params.iter().zip(tensors) {
+        if p.data().dims() != t.dims() {
+            return Err(Error::ShapeMismatch {
+                op: "load_parameters",
+                expected: format!("{:?}", p.data().dims()),
+                got: format!("{:?}", t.dims()),
+            });
+        }
+        p.set_data(t);
+    }
+    Ok(())
+}
+
+/// Read all tensors from a checkpoint file.
+pub fn read_checkpoint(path: impl AsRef<Path>) -> Result<Vec<Tensor>> {
+    let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::msg("not a MiniTensor checkpoint (bad magic)"));
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        return Err(Error::msg(format!("unsupported checkpoint version {version}")));
+    }
+    let count = read_u32(&mut r)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let rank = read_u32(&mut r)? as usize;
+        if rank > 8 {
+            return Err(Error::msg(format!("implausible tensor rank {rank}")));
+        }
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            dims.push(read_u32(&mut r)? as usize);
+        }
+        let numel: usize = dims.iter().product();
+        let mut data = vec![0.0f32; numel];
+        let mut buf = [0u8; 4];
+        for v in data.iter_mut() {
+            r.read_exact(&mut buf)?;
+            *v = f32::from_le_bytes(buf);
+        }
+        out.push(Tensor::from_vec(data, &dims)?);
+    }
+    Ok(out)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut buf = [0u8; 4];
+    r.read_exact(&mut buf)?;
+    Ok(u32::from_le_bytes(buf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::nn::{Activation, Dense, Module, Sequential};
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("minitensor_test_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_preserves_values() {
+        let mut rng = Rng::new(1);
+        let model = Sequential::new()
+            .add(Dense::new(4, 8, &mut rng))
+            .add(Activation::Relu)
+            .add(Dense::new(8, 2, &mut rng));
+        let path = tmpfile("roundtrip");
+        save_parameters(&model.parameters(), &path).unwrap();
+
+        let model2 = Sequential::new()
+            .add(Dense::new(4, 8, &mut rng))
+            .add(Activation::Relu)
+            .add(Dense::new(8, 2, &mut rng));
+        // different init ⇒ different outputs before loading
+        let x = crate::autograd::Var::from_tensor(Tensor::ones(&[1, 4]), false);
+        let y1 = model.forward(&x, false).unwrap().data().to_vec();
+        let y2_before = model2.forward(&x, false).unwrap().data().to_vec();
+        assert_ne!(y1, y2_before);
+
+        load_parameters(&model2.parameters(), &path).unwrap();
+        let y2_after = model2.forward(&x, false).unwrap().data().to_vec();
+        assert_eq!(y1, y2_after);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut rng = Rng::new(2);
+        let a = Dense::new(4, 8, &mut rng);
+        let b = Dense::new(4, 9, &mut rng);
+        let path = tmpfile("mismatch");
+        save_parameters(&a.parameters(), &path).unwrap();
+        assert!(load_parameters(&b.parameters(), &path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn count_mismatch_rejected() {
+        let mut rng = Rng::new(3);
+        let a = Dense::new(2, 2, &mut rng);
+        let path = tmpfile("count");
+        save_parameters(&a.parameters(), &path).unwrap();
+        let b = Dense::new_no_bias(2, 2, &mut rng);
+        assert!(load_parameters(&b.parameters(), &path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let path = tmpfile("magic");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(read_checkpoint(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

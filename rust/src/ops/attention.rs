@@ -1,0 +1,96 @@
+//! Native scaled-dot-product attention: `softmax(q kᵀ / √d) v`.
+//!
+//! Composition of the blocked SGEMM and the row-softmax kernels; the
+//! XLA-AOT counterpart is the fused `attention_128x64` Pallas artifact
+//! (see `python/compile/kernels/attention.py`), cross-checked in
+//! `rust/tests/runtime_xla.rs`.
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// Single-head attention over `[seq_q, d]`, `[seq_k, d]`, `[seq_k, d]`.
+pub fn attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Result<Tensor> {
+    if q.rank() != 2 || k.rank() != 2 || v.rank() != 2 {
+        return Err(Error::ShapeMismatch {
+            op: "attention",
+            expected: "rank-2 q, k, v".into(),
+            got: format!("{} {} {}", q.shape(), k.shape(), v.shape()),
+        });
+    }
+    let d = q.dims()[1];
+    if k.dims()[1] != d || v.dims()[0] != k.dims()[0] {
+        return Err(Error::ShapeMismatch {
+            op: "attention",
+            expected: format!("k [n, {d}], v [n, dv]"),
+            got: format!("{} {}", k.shape(), v.shape()),
+        });
+    }
+    let scale = 1.0 / (d as f32).sqrt();
+    let scores = q.matmul_nt(k)?.mul_scalar(scale);
+    let probs = scores.softmax()?;
+    probs.matmul(v)
+}
+
+impl Tensor {
+    /// See [`attention`].
+    pub fn attention(&self, k: &Tensor, v: &Tensor) -> Result<Tensor> {
+        attention(self, k, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    #[test]
+    fn uniform_keys_average_values() {
+        let mut rng = Rng::new(1);
+        let q = Tensor::randn(&[4, 8], 0.0, 1.0, &mut rng);
+        let k = Tensor::ones(&[16, 8]);
+        let v = Tensor::randn(&[16, 8], 0.0, 1.0, &mut rng);
+        let out = q.attention(&k, &v).unwrap();
+        let mean = v.mean_axis(0, false).unwrap();
+        for i in 0..4 {
+            assert!(out.row(i).unwrap().allclose(&mean, 1e-4, 1e-5));
+        }
+    }
+
+    #[test]
+    fn hard_attention_selects_matching_value() {
+        let q = Tensor::eye(4).mul_scalar(30.0);
+        let k = Tensor::eye(4).mul_scalar(30.0);
+        let mut rng = Rng::new(2);
+        let v = Tensor::randn(&[4, 4], 0.0, 1.0, &mut rng);
+        let out = q.attention(&k, &v).unwrap();
+        assert!(out.allclose(&v, 2e-2, 2e-2));
+    }
+
+    #[test]
+    fn rows_are_convex_combinations() {
+        // every output row lies inside the convex hull of V rows: check
+        // min(V) <= out <= max(V) per column.
+        let mut rng = Rng::new(3);
+        let q = Tensor::randn(&[8, 16], 0.0, 1.0, &mut rng);
+        let k = Tensor::randn(&[32, 16], 0.0, 1.0, &mut rng);
+        let v = Tensor::randn(&[32, 16], 0.0, 1.0, &mut rng);
+        let out = q.attention(&k, &v).unwrap();
+        let vmin = v.min_axis(0, false).unwrap();
+        let vmax = v.max_axis(0, false).unwrap();
+        for i in 0..8 {
+            let row = out.row(i).unwrap();
+            for (x, (lo, hi)) in row.iter().zip(vmin.iter().zip(vmax.iter())) {
+                assert!(x >= lo - 1e-4 && x <= hi + 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn shape_validation() {
+        let q = Tensor::zeros(&[4, 8]);
+        let k = Tensor::zeros(&[16, 9]);
+        let v = Tensor::zeros(&[16, 8]);
+        assert!(q.attention(&k, &v).is_err());
+        assert!(q.attention(&Tensor::zeros(&[8]), &v).is_err());
+    }
+}

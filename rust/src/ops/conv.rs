@@ -1,0 +1,549 @@
+//! 2-D convolution and pooling (paper §3.3, eq 6).
+//!
+//! Layout is NCHW. The forward lowers to im2col + SGEMM — the standard
+//! reduction that turns the 6-nested conv loop into one large matrix
+//! product handled by the blocked [`super::matmul::sgemm`] kernel. The
+//! backward passes (w.r.t. input and weight) reuse col2im / the transposed
+//! GEMM, exactly the "standard pullbacks with respect to x and w" the
+//! paper implements.
+
+use super::matmul::sgemm;
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// Convolution geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv2dSpec {
+    pub stride: usize,
+    pub padding: usize,
+}
+
+impl Default for Conv2dSpec {
+    fn default() -> Self {
+        Conv2dSpec {
+            stride: 1,
+            padding: 0,
+        }
+    }
+}
+
+impl Conv2dSpec {
+    /// Output spatial size for one dimension.
+    pub fn out_size(&self, in_size: usize, kernel: usize) -> Result<usize> {
+        let padded = in_size + 2 * self.padding;
+        if padded < kernel {
+            return Err(Error::ShapeMismatch {
+                op: "conv2d",
+                expected: format!("input+2p >= kernel ({kernel})"),
+                got: format!("{padded}"),
+            });
+        }
+        Ok((padded - kernel) / self.stride + 1)
+    }
+}
+
+/// Unfold `x [n, c, h, w]` into columns `[n, c*kh*kw, oh*ow]` (flattened to
+/// a single buffer; one GEMM per image).
+fn im2col(
+    x: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    spec: Conv2dSpec,
+    oh: usize,
+    ow: usize,
+    cols: &mut [f32],
+) {
+    let p = spec.padding as isize;
+    let s = spec.stride;
+    debug_assert_eq!(cols.len(), c * kh * kw * oh * ow);
+    let mut idx = 0usize;
+    for ci in 0..c {
+        for u in 0..kh {
+            for v in 0..kw {
+                for oy in 0..oh {
+                    let iy = (oy * s) as isize + u as isize - p;
+                    if iy < 0 || iy >= h as isize {
+                        for _ in 0..ow {
+                            cols[idx] = 0.0;
+                            idx += 1;
+                        }
+                        continue;
+                    }
+                    let row_base = ci * h * w + iy as usize * w;
+                    for ox in 0..ow {
+                        let ix = (ox * s) as isize + v as isize - p;
+                        cols[idx] = if ix < 0 || ix >= w as isize {
+                            0.0
+                        } else {
+                            x[row_base + ix as usize]
+                        };
+                        idx += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Scatter columns back into an image — the adjoint of [`im2col`].
+fn col2im(
+    cols: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    spec: Conv2dSpec,
+    oh: usize,
+    ow: usize,
+    x: &mut [f32],
+) {
+    let p = spec.padding as isize;
+    let s = spec.stride;
+    let mut idx = 0usize;
+    for ci in 0..c {
+        for u in 0..kh {
+            for v in 0..kw {
+                for oy in 0..oh {
+                    let iy = (oy * s) as isize + u as isize - p;
+                    if iy < 0 || iy >= h as isize {
+                        idx += ow;
+                        continue;
+                    }
+                    let row_base = ci * h * w + iy as usize * w;
+                    for ox in 0..ow {
+                        let ix = (ox * s) as isize + v as isize - p;
+                        if ix >= 0 && ix < w as isize {
+                            x[row_base + ix as usize] += cols[idx];
+                        }
+                        idx += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Forward conv2d: `x [n, cin, h, w]` * `weight [cout, cin, kh, kw]` →
+/// `[n, cout, oh, ow]` (eq 6). Bias, if any, is added by the layer above.
+pub fn conv2d(x: &Tensor, weight: &Tensor, spec: Conv2dSpec) -> Result<Tensor> {
+    let (n, cin, h, w) = dims4(x, "conv2d input")?;
+    let (cout, cin_w, kh, kw) = dims4(weight, "conv2d weight")?;
+    if cin != cin_w {
+        return Err(Error::ShapeMismatch {
+            op: "conv2d",
+            expected: format!("weight cin {cin}"),
+            got: format!("{cin_w}"),
+        });
+    }
+    let oh = spec.out_size(h, kh)?;
+    let ow = spec.out_size(w, kw)?;
+
+    let xc = x.contiguous();
+    let wc = weight.contiguous();
+    let xs = xc.contiguous_data().unwrap();
+    let ws = wc.contiguous_data().unwrap();
+
+    let k = cin * kh * kw;
+    let mut cols = vec![0.0f32; k * oh * ow];
+    let mut out = vec![0.0f32; n * cout * oh * ow];
+    for i in 0..n {
+        im2col(
+            &xs[i * cin * h * w..(i + 1) * cin * h * w],
+            cin,
+            h,
+            w,
+            kh,
+            kw,
+            spec,
+            oh,
+            ow,
+            &mut cols,
+        );
+        // out[i] [cout, oh*ow] = W [cout, k] · cols [k, oh*ow]
+        sgemm(
+            cout,
+            k,
+            oh * ow,
+            ws,
+            &cols,
+            &mut out[i * cout * oh * ow..(i + 1) * cout * oh * ow],
+        );
+    }
+    Tensor::from_vec(out, &[n, cout, oh, ow])
+}
+
+/// Gradient of conv2d w.r.t. the input: `dx = Wᵀ · dy`, folded by col2im.
+pub fn conv2d_backward_input(
+    grad_out: &Tensor,
+    weight: &Tensor,
+    input_dims: &[usize],
+    spec: Conv2dSpec,
+) -> Result<Tensor> {
+    let (n, cout, oh, ow) = dims4(grad_out, "conv2d grad_out")?;
+    let (cout_w, cin, kh, kw) = dims4(weight, "conv2d weight")?;
+    if cout != cout_w {
+        return Err(Error::ShapeMismatch {
+            op: "conv2d_backward_input",
+            expected: format!("cout {cout_w}"),
+            got: format!("{cout}"),
+        });
+    }
+    let (h, w) = (input_dims[2], input_dims[3]);
+    let k = cin * kh * kw;
+
+    let gc = grad_out.contiguous();
+    let gs = gc.contiguous_data().unwrap();
+    // Wᵀ [k, cout]: transpose once.
+    let wc = weight.contiguous();
+    let ws = wc.contiguous_data().unwrap();
+    let mut wt = vec![0.0f32; k * cout];
+    for o in 0..cout {
+        for p in 0..k {
+            wt[p * cout + o] = ws[o * k + p];
+        }
+    }
+
+    let mut dx = vec![0.0f32; input_dims.iter().product()];
+    let mut cols = vec![0.0f32; k * oh * ow];
+    for i in 0..n {
+        cols.iter_mut().for_each(|v| *v = 0.0);
+        // cols [k, oh*ow] = Wᵀ [k, cout] · dy[i] [cout, oh*ow]
+        sgemm(
+            k,
+            cout,
+            oh * ow,
+            &wt,
+            &gs[i * cout * oh * ow..(i + 1) * cout * oh * ow],
+            &mut cols,
+        );
+        col2im(
+            &cols,
+            cin,
+            h,
+            w,
+            kh,
+            kw,
+            spec,
+            oh,
+            ow,
+            &mut dx[i * cin * h * w..(i + 1) * cin * h * w],
+        );
+    }
+    Tensor::from_vec(dx, input_dims)
+}
+
+/// Gradient of conv2d w.r.t. the weight: `dW = dy · colsᵀ` summed over the
+/// batch.
+pub fn conv2d_backward_weight(
+    grad_out: &Tensor,
+    x: &Tensor,
+    weight_dims: &[usize],
+    spec: Conv2dSpec,
+) -> Result<Tensor> {
+    let (n, cin, h, w) = dims4(x, "conv2d input")?;
+    let (_, cout, oh, ow) = dims4(grad_out, "conv2d grad_out")?;
+    let (kh, kw) = (weight_dims[2], weight_dims[3]);
+    let k = cin * kh * kw;
+
+    let xc = x.contiguous();
+    let xs = xc.contiguous_data().unwrap();
+    let gc = grad_out.contiguous();
+    let gs = gc.contiguous_data().unwrap();
+
+    let mut dw = vec![0.0f32; cout * k];
+    let mut cols = vec![0.0f32; k * oh * ow];
+    let mut colst = vec![0.0f32; oh * ow * k];
+    for i in 0..n {
+        im2col(
+            &xs[i * cin * h * w..(i + 1) * cin * h * w],
+            cin,
+            h,
+            w,
+            kh,
+            kw,
+            spec,
+            oh,
+            ow,
+            &mut cols,
+        );
+        // transpose cols → [oh*ow, k]
+        for p in 0..k {
+            for q in 0..oh * ow {
+                colst[q * k + p] = cols[p * oh * ow + q];
+            }
+        }
+        // dW [cout, k] += dy[i] [cout, oh*ow] · colsᵀ [oh*ow, k]
+        sgemm(
+            cout,
+            oh * ow,
+            k,
+            &gs[i * cout * oh * ow..(i + 1) * cout * oh * ow],
+            &colst,
+            &mut dw,
+        );
+    }
+    Tensor::from_vec(dw, weight_dims)
+}
+
+/// Max-pool 2-D with square window `k` and stride `k` (the common case).
+/// Returns `(output, argmax_indices)`; indices feed the pullback.
+pub fn max_pool2d(x: &Tensor, k: usize) -> Result<(Tensor, Vec<usize>)> {
+    let (n, c, h, w) = dims4(x, "max_pool2d input")?;
+    if h % k != 0 || w % k != 0 {
+        return Err(Error::ShapeMismatch {
+            op: "max_pool2d",
+            expected: format!("h,w divisible by {k}"),
+            got: format!("{h}x{w}"),
+        });
+    }
+    let (oh, ow) = (h / k, w / k);
+    let xc = x.contiguous();
+    let xs = xc.contiguous_data().unwrap();
+    let mut out = vec![0.0f32; n * c * oh * ow];
+    let mut arg = vec![0usize; n * c * oh * ow];
+    for img in 0..n * c {
+        let base = img * h * w;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut bv = f32::NEG_INFINITY;
+                let mut bi = 0usize;
+                for dy in 0..k {
+                    for dx in 0..k {
+                        let idx = base + (oy * k + dy) * w + ox * k + dx;
+                        if xs[idx] > bv {
+                            bv = xs[idx];
+                            bi = idx;
+                        }
+                    }
+                }
+                let o = img * oh * ow + oy * ow + ox;
+                out[o] = bv;
+                arg[o] = bi;
+            }
+        }
+    }
+    Ok((Tensor::from_vec(out, &[n, c, oh, ow])?, arg))
+}
+
+/// Average-pool 2-D with square window `k`, stride `k`.
+pub fn avg_pool2d(x: &Tensor, k: usize) -> Result<Tensor> {
+    let (n, c, h, w) = dims4(x, "avg_pool2d input")?;
+    if h % k != 0 || w % k != 0 {
+        return Err(Error::ShapeMismatch {
+            op: "avg_pool2d",
+            expected: format!("h,w divisible by {k}"),
+            got: format!("{h}x{w}"),
+        });
+    }
+    let (oh, ow) = (h / k, w / k);
+    let xc = x.contiguous();
+    let xs = xc.contiguous_data().unwrap();
+    let inv = 1.0 / (k * k) as f32;
+    let mut out = vec![0.0f32; n * c * oh * ow];
+    for img in 0..n * c {
+        let base = img * h * w;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = 0.0f32;
+                for dy in 0..k {
+                    for dx in 0..k {
+                        acc += xs[base + (oy * k + dy) * w + ox * k + dx];
+                    }
+                }
+                out[img * oh * ow + oy * ow + ox] = acc * inv;
+            }
+        }
+    }
+    Tensor::from_vec(out, &[n, c, oh, ow])
+}
+
+fn dims4(t: &Tensor, what: &'static str) -> Result<(usize, usize, usize, usize)> {
+    if t.rank() != 4 {
+        return Err(Error::ShapeMismatch {
+            op: what,
+            expected: "rank 4 (NCHW)".into(),
+            got: format!("rank {}", t.rank()),
+        });
+    }
+    let d = t.dims();
+    Ok((d[0], d[1], d[2], d[3]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    /// Direct 6-loop reference conv (eq 6 verbatim).
+    fn conv2d_reference(x: &Tensor, w: &Tensor, spec: Conv2dSpec) -> Tensor {
+        let (n, cin, h, wd) = dims4(x, "ref").unwrap();
+        let (cout, _, kh, kw) = dims4(w, "ref").unwrap();
+        let oh = spec.out_size(h, kh).unwrap();
+        let ow = spec.out_size(wd, kw).unwrap();
+        let mut out = vec![0.0f32; n * cout * oh * ow];
+        for b in 0..n {
+            for co in 0..cout {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = 0.0;
+                        for ci in 0..cin {
+                            for u in 0..kh {
+                                for v in 0..kw {
+                                    let iy = (oy * spec.stride + u) as isize - spec.padding as isize;
+                                    let ix = (ox * spec.stride + v) as isize - spec.padding as isize;
+                                    if iy >= 0 && iy < h as isize && ix >= 0 && ix < wd as isize {
+                                        acc += w.at(&[co, ci, u, v]).unwrap()
+                                            * x.at(&[b, ci, iy as usize, ix as usize]).unwrap();
+                                    }
+                                }
+                            }
+                        }
+                        out[((b * cout + co) * oh + oy) * ow + ox] = acc;
+                    }
+                }
+            }
+        }
+        Tensor::from_vec(out, &[n, cout, oh, ow]).unwrap()
+    }
+
+    #[test]
+    fn conv_matches_direct_loop() {
+        let mut rng = Rng::new(1);
+        for (spec, h, w, kh) in [
+            (Conv2dSpec { stride: 1, padding: 0 }, 6, 6, 3),
+            (Conv2dSpec { stride: 1, padding: 1 }, 5, 7, 3),
+            (Conv2dSpec { stride: 2, padding: 1 }, 8, 8, 3),
+            (Conv2dSpec { stride: 2, padding: 2 }, 9, 9, 5),
+        ] {
+            let x = Tensor::randn(&[2, 3, h, w], 0.0, 1.0, &mut rng);
+            let wt = Tensor::randn(&[4, 3, kh, kh], 0.0, 1.0, &mut rng);
+            let fast = conv2d(&x, &wt, spec).unwrap();
+            let slow = conv2d_reference(&x, &wt, spec);
+            assert!(fast.allclose(&slow, 1e-4, 1e-4), "spec {spec:?}");
+        }
+    }
+
+    #[test]
+    fn output_shape() {
+        let x = Tensor::zeros(&[1, 1, 28, 28]);
+        let w = Tensor::zeros(&[8, 1, 3, 3]);
+        let y = conv2d(&x, &w, Conv2dSpec { stride: 1, padding: 1 }).unwrap();
+        assert_eq!(y.dims(), &[1, 8, 28, 28]);
+        let y2 = conv2d(&x, &w, Conv2dSpec { stride: 2, padding: 1 }).unwrap();
+        assert_eq!(y2.dims(), &[1, 8, 14, 14]);
+    }
+
+    #[test]
+    fn identity_kernel_preserves_input() {
+        // 1x1 kernel with weight 1 is the identity on a single channel.
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&[1, 1, 4, 4], 0.0, 1.0, &mut rng);
+        let w = Tensor::ones(&[1, 1, 1, 1]);
+        let y = conv2d(&x, &w, Conv2dSpec::default()).unwrap();
+        assert!(y.allclose(&x, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn backward_input_matches_finite_difference() {
+        let mut rng = Rng::new(3);
+        let spec = Conv2dSpec { stride: 1, padding: 1 };
+        let x = Tensor::randn(&[1, 2, 4, 4], 0.0, 1.0, &mut rng);
+        let w = Tensor::randn(&[3, 2, 3, 3], 0.0, 1.0, &mut rng);
+        // loss = sum(conv(x, w)); dL/dx via finite differences on 5 probes
+        let g = Tensor::ones(&[1, 3, 4, 4]);
+        let dx = conv2d_backward_input(&g, &w, x.dims(), spec).unwrap();
+        let eps = 1e-2;
+        let xv = x.to_vec();
+        for probe in [0usize, 5, 13, 21, 31] {
+            let mut plus = xv.clone();
+            plus[probe] += eps;
+            let mut minus = xv.clone();
+            minus[probe] -= eps;
+            let lp = conv2d(&Tensor::from_vec(plus, x.dims()).unwrap(), &w, spec)
+                .unwrap()
+                .sum()
+                .item()
+                .unwrap();
+            let lm = conv2d(&Tensor::from_vec(minus, x.dims()).unwrap(), &w, spec)
+                .unwrap()
+                .sum()
+                .item()
+                .unwrap();
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = dx.to_vec()[probe];
+            assert!((fd - an).abs() < 1e-2, "probe {probe}: fd={fd} an={an}");
+        }
+    }
+
+    #[test]
+    fn backward_weight_matches_finite_difference() {
+        let mut rng = Rng::new(4);
+        let spec = Conv2dSpec { stride: 2, padding: 1 };
+        let x = Tensor::randn(&[2, 2, 6, 6], 0.0, 1.0, &mut rng);
+        let w = Tensor::randn(&[2, 2, 3, 3], 0.0, 1.0, &mut rng);
+        let y = conv2d(&x, &w, spec).unwrap();
+        let g = Tensor::ones(y.dims());
+        let dw = conv2d_backward_weight(&g, &x, w.dims(), spec).unwrap();
+        let eps = 1e-2;
+        let wv = w.to_vec();
+        for probe in [0usize, 7, 17, 35] {
+            let mut plus = wv.clone();
+            plus[probe] += eps;
+            let mut minus = wv.clone();
+            minus[probe] -= eps;
+            let lp = conv2d(&x, &Tensor::from_vec(plus, w.dims()).unwrap(), spec)
+                .unwrap()
+                .sum()
+                .item()
+                .unwrap();
+            let lm = conv2d(&x, &Tensor::from_vec(minus, w.dims()).unwrap(), spec)
+                .unwrap()
+                .sum()
+                .item()
+                .unwrap();
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = dw.to_vec()[probe];
+            assert!((fd - an).abs() < 2e-2, "probe {probe}: fd={fd} an={an}");
+        }
+    }
+
+    #[test]
+    fn maxpool_values_and_indices() {
+        let x = Tensor::from_vec(
+            vec![
+                1., 2., 5., 6., //
+                3., 4., 7., 8., //
+                9., 10., 13., 14., //
+                11., 12., 15., 16.,
+            ],
+            &[1, 1, 4, 4],
+        )
+        .unwrap();
+        let (y, arg) = max_pool2d(&x, 2).unwrap();
+        assert_eq!(y.dims(), &[1, 1, 2, 2]);
+        assert_eq!(y.to_vec(), vec![4., 8., 12., 16.]);
+        assert_eq!(arg, vec![5, 7, 13, 15]);
+        assert!(max_pool2d(&Tensor::zeros(&[1, 1, 5, 4]), 2).is_err());
+    }
+
+    #[test]
+    fn avgpool() {
+        let x = Tensor::arange(0.0, 16.0).reshape(&[1, 1, 4, 4]).unwrap();
+        let y = avg_pool2d(&x, 2).unwrap();
+        assert_eq!(y.to_vec(), vec![2.5, 4.5, 10.5, 12.5]);
+    }
+
+    #[test]
+    fn shape_validation() {
+        let x3 = Tensor::zeros(&[2, 3, 4]);
+        let w = Tensor::zeros(&[1, 1, 1, 1]);
+        assert!(conv2d(&x3, &w, Conv2dSpec::default()).is_err());
+        let x = Tensor::zeros(&[1, 2, 4, 4]);
+        let w_badc = Tensor::zeros(&[1, 3, 3, 3]);
+        assert!(conv2d(&x, &w_badc, Conv2dSpec::default()).is_err());
+    }
+}

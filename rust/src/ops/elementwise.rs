@@ -1,0 +1,278 @@
+//! Binary elementwise operations with NumPy/PyTorch broadcasting.
+//!
+//! Paper §3.1: elementwise ops map `z_i = f(x_i, y_i)`; broadcasting
+//! virtually expands size-1 dimensions (stride 0) without materializing.
+//! Three execution tiers:
+//!   1. both contiguous + same shape → single fused slice loop (`kernels`),
+//!   2. broadcast where the RHS is a trailing-aligned vector → row loop,
+//!   3. general strided odometer walk.
+
+use crate::dtype::DType;
+use crate::error::Result;
+use crate::shape::StridedIter;
+use crate::tensor::Tensor;
+
+/// Compute `f(a, b)` elementwise with broadcasting; result dtype is
+/// `promote(a, b)` unless overridden by the caller (comparisons retag Bool).
+pub fn binary_op(
+    a: &Tensor,
+    b: &Tensor,
+    f: impl Fn(f32, f32) -> f32 + Copy,
+) -> Result<Tensor> {
+    let out_shape = a.shape().broadcast(b.shape())?;
+    let dtype = a.dtype().promote(b.dtype());
+    let n = out_shape.numel();
+
+    // Tier 1: identical shapes, both contiguous. The output is built by
+    // `collect` from an exact-size iterator — no zero-fill pass, which at
+    // DRAM-resident sizes removes a third of the write traffic
+    // (EXPERIMENTS.md §Perf L3.2).
+    if a.shape() == b.shape() {
+        if let (Some(sa), Some(sb)) = (a.contiguous_data(), b.contiguous_data()) {
+            let mut out = crate::tensor::pool::take(n);
+            out.extend(sa.iter().zip(sb).map(|(&x, &y)| f(x, y)));
+            return Ok(Tensor::from_vec(out, out_shape.dims())?.with_dtype(dtype));
+        }
+    }
+
+    // Tier 2: contiguous LHS of shape [..., k] with RHS of shape [k]
+    // (the paper's x + b bias case) — reuse the RHS row per outer index.
+    if b.rank() == 1
+        && a.shape() == &out_shape
+        && a.rank() >= 1
+        && a.dims()[a.rank() - 1] == b.dims()[0]
+    {
+        if let (Some(sa), Some(sb)) = (a.contiguous_data(), b.contiguous_data()) {
+            let k = sb.len();
+            let mut out = crate::tensor::pool::take(n);
+            for arow in sa.chunks_exact(k) {
+                out.extend(arow.iter().zip(sb).map(|(&x, &y)| f(x, y)));
+            }
+            return Ok(Tensor::from_vec(out, out_shape.dims())?.with_dtype(dtype));
+        }
+    }
+
+    // Tier 3: general strided broadcast walk.
+    let sa = a.shape().broadcast_strides(a.strides(), &out_shape)?;
+    let sb = b.shape().broadcast_strides(b.strides(), &out_shape)?;
+    let da = a.storage_slice();
+    let db = b.storage_slice();
+    let ia = StridedIter::new(&out_shape, &sa, a.offset());
+    let ib = StridedIter::new(&out_shape, &sb, b.offset());
+    let out: Vec<f32> = ia
+        .zip(ib)
+        .map(|(oa, ob)| f(da[oa as usize], db[ob as usize]))
+        .collect();
+    Ok(Tensor::from_vec(out, out_shape.dims())?.with_dtype(dtype))
+}
+
+impl Tensor {
+    pub(crate) fn storage_slice(&self) -> &[f32] {
+        self.storage.as_slice()
+    }
+
+    pub(crate) fn offset(&self) -> isize {
+        self.offset
+    }
+
+    /// Elementwise addition with broadcasting.
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        binary_op(self, other, |a, b| a + b)
+    }
+
+    /// Elementwise subtraction with broadcasting.
+    pub fn sub(&self, other: &Tensor) -> Result<Tensor> {
+        binary_op(self, other, |a, b| a - b)
+    }
+
+    /// Elementwise (Hadamard) product with broadcasting.
+    pub fn mul(&self, other: &Tensor) -> Result<Tensor> {
+        binary_op(self, other, |a, b| a * b)
+    }
+
+    /// Elementwise division with broadcasting.
+    pub fn div(&self, other: &Tensor) -> Result<Tensor> {
+        binary_op(self, other, |a, b| a / b)
+    }
+
+    /// Elementwise power with broadcasting.
+    pub fn pow(&self, other: &Tensor) -> Result<Tensor> {
+        binary_op(self, other, |a, b| a.powf(b))
+    }
+
+    /// Elementwise maximum.
+    pub fn maximum(&self, other: &Tensor) -> Result<Tensor> {
+        binary_op(self, other, f32::max)
+    }
+
+    /// Elementwise minimum.
+    pub fn minimum(&self, other: &Tensor) -> Result<Tensor> {
+        binary_op(self, other, f32::min)
+    }
+
+    /// Add a scalar.
+    pub fn add_scalar(&self, s: f32) -> Tensor {
+        self.map(|v| v + s)
+    }
+
+    /// Multiply by a scalar.
+    pub fn mul_scalar(&self, s: f32) -> Tensor {
+        self.map(|v| v * s)
+    }
+
+    /// Raise to a scalar power.
+    pub fn pow_scalar(&self, s: f32) -> Tensor {
+        self.map(|v| v.powf(s))
+    }
+
+    /// Elementwise equality → Bool tensor.
+    pub fn eq_t(&self, other: &Tensor) -> Result<Tensor> {
+        Ok(binary_op(self, other, |a, b| f32::from(a == b))?.with_dtype(DType::Bool))
+    }
+
+    /// Elementwise greater-than → Bool tensor.
+    pub fn gt(&self, other: &Tensor) -> Result<Tensor> {
+        Ok(binary_op(self, other, |a, b| f32::from(a > b))?.with_dtype(DType::Bool))
+    }
+
+    /// Elementwise less-than → Bool tensor.
+    pub fn lt(&self, other: &Tensor) -> Result<Tensor> {
+        Ok(binary_op(self, other, |a, b| f32::from(a < b))?.with_dtype(DType::Bool))
+    }
+
+    /// Elementwise greater-or-equal → Bool tensor.
+    pub fn ge(&self, other: &Tensor) -> Result<Tensor> {
+        Ok(binary_op(self, other, |a, b| f32::from(a >= b))?.with_dtype(DType::Bool))
+    }
+
+    /// Ternary select: `cond ? self : other`, broadcasting all three.
+    pub fn where_cond(&self, cond: &Tensor, other: &Tensor) -> Result<Tensor> {
+        // two-step broadcast: (cond * self) + (1-cond) * other, fused.
+        let picked = binary_op(cond, self, |c, v| if c != 0.0 { v } else { 0.0 })?;
+        let rest = binary_op(cond, other, |c, v| if c == 0.0 { v } else { 0.0 })?;
+        picked.add(&rest)
+    }
+
+    /// Apply an arbitrary scalar function elementwise (always produces a
+    /// fresh contiguous tensor). Collect-based: no zero-fill of the output.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        let out: Vec<f32> = match self.contiguous_data() {
+            Some(s) => {
+                let mut out = crate::tensor::pool::take(s.len());
+                out.extend(s.iter().map(|&v| f(v)));
+                out
+            }
+            None => self.iter().map(f).collect(),
+        };
+        Tensor::from_vec(out, self.dims())
+            .expect("map preserves shape")
+            .with_dtype(self.dtype)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_same_shape() {
+        let a = Tensor::from_vec(vec![1., 2., 3., 4.], &[2, 2]).unwrap();
+        let b = Tensor::from_vec(vec![10., 20., 30., 40.], &[2, 2]).unwrap();
+        assert_eq!(a.add(&b).unwrap().to_vec(), vec![11., 22., 33., 44.]);
+    }
+
+    #[test]
+    fn bias_broadcast_row_fast_path() {
+        // the paper's (x + b)_{ij} = x_{ij} + b_j example
+        let x = Tensor::from_vec(vec![1., 2., 3., 4., 5., 6.], &[2, 3]).unwrap();
+        let b = Tensor::from_vec(vec![10., 20., 30.], &[3]).unwrap();
+        let y = x.add(&b).unwrap();
+        assert_eq!(y.to_vec(), vec![11., 22., 33., 14., 25., 36.]);
+    }
+
+    #[test]
+    fn column_broadcast_strided_path() {
+        let x = Tensor::from_vec(vec![1., 2., 3., 4., 5., 6.], &[2, 3]).unwrap();
+        let c = Tensor::from_vec(vec![100., 200.], &[2, 1]).unwrap();
+        let y = x.add(&c).unwrap();
+        assert_eq!(y.to_vec(), vec![101., 102., 103., 204., 205., 206.]);
+    }
+
+    #[test]
+    fn two_sided_broadcast() {
+        let a = Tensor::from_vec(vec![1., 2.], &[2, 1]).unwrap();
+        let b = Tensor::from_vec(vec![10., 20., 30.], &[1, 3]).unwrap();
+        let y = a.mul(&b).unwrap();
+        assert_eq!(y.dims(), &[2, 3]);
+        assert_eq!(y.to_vec(), vec![10., 20., 30., 20., 40., 60.]);
+    }
+
+    #[test]
+    fn scalar_tensor_broadcast() {
+        let a = Tensor::from_vec(vec![1., 2.], &[2]).unwrap();
+        let s = Tensor::scalar(3.0);
+        assert_eq!(a.mul(&s).unwrap().to_vec(), vec![3., 6.]);
+    }
+
+    #[test]
+    fn mismatch_errors() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 4]);
+        assert!(a.add(&b).is_err());
+    }
+
+    #[test]
+    fn sub_div_pow() {
+        let a = Tensor::from_vec(vec![4., 9.], &[2]).unwrap();
+        let b = Tensor::from_vec(vec![2., 3.], &[2]).unwrap();
+        assert_eq!(a.sub(&b).unwrap().to_vec(), vec![2., 6.]);
+        assert_eq!(a.div(&b).unwrap().to_vec(), vec![2., 3.]);
+        assert_eq!(a.pow(&b).unwrap().to_vec(), vec![16., 729.]);
+    }
+
+    #[test]
+    fn comparisons_produce_bool() {
+        let a = Tensor::from_vec(vec![1., 5.], &[2]).unwrap();
+        let b = Tensor::from_vec(vec![2., 2.], &[2]).unwrap();
+        let g = a.gt(&b).unwrap();
+        assert_eq!(g.dtype(), DType::Bool);
+        assert_eq!(g.to_vec(), vec![0., 1.]);
+        assert_eq!(a.lt(&b).unwrap().to_vec(), vec![1., 0.]);
+        assert_eq!(a.eq_t(&a).unwrap().to_vec(), vec![1., 1.]);
+        assert_eq!(a.ge(&b).unwrap().to_vec(), vec![0., 1.]);
+    }
+
+    #[test]
+    fn where_cond_selects() {
+        let cond = Tensor::from_vec(vec![1., 0., 1.], &[3]).unwrap();
+        let a = Tensor::from_vec(vec![10., 20., 30.], &[3]).unwrap();
+        let b = Tensor::from_vec(vec![-1., -2., -3.], &[3]).unwrap();
+        assert_eq!(a.where_cond(&cond, &b).unwrap().to_vec(), vec![10., -2., 30.]);
+    }
+
+    #[test]
+    fn maximum_minimum() {
+        let a = Tensor::from_vec(vec![1., 5.], &[2]).unwrap();
+        let b = Tensor::from_vec(vec![3., 2.], &[2]).unwrap();
+        assert_eq!(a.maximum(&b).unwrap().to_vec(), vec![3., 5.]);
+        assert_eq!(a.minimum(&b).unwrap().to_vec(), vec![1., 2.]);
+    }
+
+    #[test]
+    fn ops_on_transposed_views() {
+        let a = Tensor::from_vec(vec![1., 2., 3., 4.], &[2, 2])
+            .unwrap()
+            .t()
+            .unwrap();
+        let b = Tensor::ones(&[2, 2]);
+        assert_eq!(a.add(&b).unwrap().to_vec(), vec![2., 4., 3., 5.]);
+    }
+
+    #[test]
+    fn dtype_promotion_i32_plus_f32() {
+        let i = Tensor::from_vec_i32(vec![1, 2], &[2]).unwrap();
+        let f = Tensor::from_vec(vec![0.5, 0.5], &[2]).unwrap();
+        let y = i.add(&f).unwrap();
+        assert_eq!(y.dtype(), DType::F32);
+    }
+}

@@ -1,0 +1,406 @@
+//! Matrix multiplication (paper §3.1, eq 1).
+//!
+//! The 2-D kernel is a cache-blocked, register-tiled SGEMM written for
+//! LLVM auto-vectorization: the innermost loop is a contiguous
+//! multiply-accumulate over `k` panels with the B matrix pre-packed
+//! row-major per block. Batched (≥3-D) matmul broadcasts leading dims and
+//! loops the 2-D kernel.
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// Cache block sizes (elements). MC×KC panel of A (~128 KiB) and KC×NC
+/// panel of B stay L2-resident on typical CPUs.
+const MC: usize = 64;
+const KC: usize = 512;
+const NC: usize = 256;
+
+/// Register tile: each micro-kernel iteration produces a 4×16 block of C.
+/// 4×16 f32 accumulators = 8 YMM registers, plus 2 for the B row and one
+/// broadcast for A — fits AVX2's 16-register file without spills.
+const MR: usize = 4;
+const NR: usize = 16;
+
+/// `C[m×n] = A[m×k] · B[k×n]` over contiguous row-major slices.
+///
+/// Perf-pass design (EXPERIMENTS.md §Perf L3.1): both operands are packed
+/// — B into row-major KC×NC panels, A into MR-interleaved column panels —
+/// so the micro-kernel reads two contiguous streams and keeps the full
+/// 4×16 accumulator block in registers across the K loop.
+pub fn sgemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+
+    // Small-problem fast path: direct triple loop with contiguous inner
+    // accumulation — packing overhead only pays off once the working set
+    // leaves L1 (measured crossover ≈ 64³, EXPERIMENTS.md §Perf L3.1).
+    if m * n * k <= 64 * 64 * 64 {
+        sgemm_naive(m, k, n, a, b, c);
+        return;
+    }
+
+    let mut packed_b = vec![0.0f32; KC * NC];
+    // A panels are MR-padded so the micro-kernel always runs a full tile.
+    let mut packed_a = vec![0.0f32; MC.div_ceil(MR) * MR * KC];
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kc = KC.min(k - pc);
+            // Pack B[pc..pc+kc, jc..jc+nc] row-major into packed_b.
+            for p in 0..kc {
+                let src = &b[(pc + p) * n + jc..(pc + p) * n + jc + nc];
+                packed_b[p * nc..p * nc + nc].copy_from_slice(src);
+            }
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                pack_a(&a[ic * k + pc..], k, mc, kc, &mut packed_a);
+                macro_kernel(mc, kc, nc, &packed_a, &packed_b, &mut c[ic * n + jc..], n);
+            }
+        }
+    }
+}
+
+/// Pack an mc×kc block of A into MR-row interleaved panels:
+/// `packed[panel][p][i] = A[panel*MR + i, p]`, zero-padding the tail rows.
+/// The micro-kernel then reads A as one contiguous forward stream.
+fn pack_a(a: &[f32], lda: usize, mc: usize, kc: usize, packed: &mut [f32]) {
+    let mut idx = 0;
+    let mut ir = 0;
+    while ir < mc {
+        let mr = MR.min(mc - ir);
+        for p in 0..kc {
+            for i in 0..MR {
+                packed[idx] = if i < mr { a[(ir + i) * lda + p] } else { 0.0 };
+                idx += 1;
+            }
+        }
+        ir += MR;
+    }
+}
+
+/// Multiply packed A panels by a packed KC×NC block of B into C.
+fn macro_kernel(
+    mc: usize,
+    kc: usize,
+    nc: usize,
+    packed_a: &[f32],
+    packed_b: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+) {
+    let mut ir = 0;
+    let mut panel = 0;
+    while ir < mc {
+        let mr = MR.min(mc - ir);
+        let a_panel = &packed_a[panel * MR * kc..(panel + 1) * MR * kc];
+        let mut jr = 0;
+        while jr < nc {
+            let nr = NR.min(nc - jr);
+            if nr == NR {
+                micro_kernel(kc, a_panel, packed_b, jr, nc, c, ir, ldc, mr);
+            } else {
+                // Edge tile: scalar loop over the ragged columns.
+                for i in 0..mr {
+                    for j in 0..nr {
+                        let mut acc = c[(ir + i) * ldc + jr + j];
+                        for p in 0..kc {
+                            acc += a_panel[p * MR + i] * packed_b[p * nc + jr + j];
+                        }
+                        c[(ir + i) * ldc + jr + j] = acc;
+                    }
+                }
+            }
+            jr += NR;
+        }
+        ir += MR;
+        panel += 1;
+    }
+}
+
+/// 4×16 register-tiled micro-kernel over packed panels. Fixed-size array
+/// views (`try_into`) give LLVM exact trip counts, so the j-loops lower to
+/// straight-line FMA on YMM registers.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_kernel(
+    kc: usize,
+    a_panel: &[f32],
+    packed_b: &[f32],
+    jr: usize,
+    nc: usize,
+    c: &mut [f32],
+    ir: usize,
+    ldc: usize,
+    mr: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kc {
+        let av: &[f32; MR] = a_panel[p * MR..p * MR + MR].try_into().unwrap();
+        let brow: &[f32; NR] = packed_b[p * nc + jr..p * nc + jr + NR].try_into().unwrap();
+        for i in 0..MR {
+            let ai = av[i];
+            for j in 0..NR {
+                acc[i][j] += ai * brow[j];
+            }
+        }
+    }
+    for (i, acc_i) in acc.iter().enumerate().take(mr) {
+        let crow = &mut c[(ir + i) * ldc + jr..(ir + i) * ldc + jr + NR];
+        for j in 0..NR {
+            crow[j] += acc_i[j];
+        }
+    }
+}
+
+/// Reference triple-loop GEMM (also the small-size fast path).
+pub fn sgemm_naive(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            let brow = &b[p * n..(p + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// 2-D (or batched ≥3-D with broadcastable leading dims) matrix product.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    if a.rank() < 2 || b.rank() < 2 {
+        return Err(Error::ShapeMismatch {
+            op: "matmul",
+            expected: "rank >= 2".into(),
+            got: format!("{} x {}", a.shape(), b.shape()),
+        });
+    }
+    let (ar, br) = (a.rank(), b.rank());
+    let (m, ka) = (a.dims()[ar - 2], a.dims()[ar - 1]);
+    let (kb, n) = (b.dims()[br - 2], b.dims()[br - 1]);
+    if ka != kb {
+        return Err(Error::ShapeMismatch {
+            op: "matmul",
+            expected: format!("inner dims equal, lhs has k={ka}"),
+            got: format!("rhs has k={kb}"),
+        });
+    }
+
+    if ar == 2 && br == 2 {
+        let ac = a.contiguous();
+        let bc = b.contiguous();
+        let mut c = vec![0.0f32; m * n];
+        sgemm(
+            m,
+            ka,
+            n,
+            ac.contiguous_data().unwrap(),
+            bc.contiguous_data().unwrap(),
+            &mut c,
+        );
+        return Tensor::from_vec(c, &[m, n]);
+    }
+
+    // Batched: broadcast leading dims.
+    let lead_a = crate::shape::Shape::new(&a.dims()[..ar - 2]);
+    let lead_b = crate::shape::Shape::new(&b.dims()[..br - 2]);
+    let lead = lead_a.broadcast(&lead_b)?;
+    let batch = lead.numel();
+
+    let mut a_dims = lead.dims().to_vec();
+    a_dims.extend([m, ka]);
+    let mut b_dims = lead.dims().to_vec();
+    b_dims.extend([ka, n]);
+    let ab = a.broadcast_to(&a_dims)?.contiguous();
+    let bb = b.broadcast_to(&b_dims)?.contiguous();
+    let sa = ab.contiguous_data().unwrap();
+    let sb = bb.contiguous_data().unwrap();
+
+    let mut out = vec![0.0f32; batch * m * n];
+    for i in 0..batch {
+        sgemm(
+            m,
+            ka,
+            n,
+            &sa[i * m * ka..(i + 1) * m * ka],
+            &sb[i * ka * n..(i + 1) * ka * n],
+            &mut out[i * m * n..(i + 1) * m * n],
+        );
+    }
+    let mut out_dims = lead.dims().to_vec();
+    out_dims.extend([m, n]);
+    Tensor::from_vec(out, &out_dims)
+}
+
+/// Batched matmul over explicit 4-D inputs `[b, h, m, k] x [b, h, k, n]`
+/// (attention-style layout), kept as a separate entry point for benches.
+pub fn matmul_4d_batched(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    if a.rank() != 4 || b.rank() != 4 {
+        return Err(Error::ShapeMismatch {
+            op: "matmul_4d_batched",
+            expected: "rank 4".into(),
+            got: format!("{} x {}", a.shape(), b.shape()),
+        });
+    }
+    matmul(a, b)
+}
+
+impl Tensor {
+    /// `self · other` (see [`matmul`]).
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        matmul(self, other)
+    }
+
+    /// `x · Wᵀ` — the Dense-layer product of paper eq (1)/(5), fused so the
+    /// transpose is free (reads W row-major as the RHS panel directly).
+    pub fn matmul_nt(&self, w: &Tensor) -> Result<Tensor> {
+        if self.rank() != 2 || w.rank() != 2 {
+            return Err(Error::ShapeMismatch {
+                op: "matmul_nt",
+                expected: "rank 2 both sides".into(),
+                got: format!("{} x {}", self.shape(), w.shape()),
+            });
+        }
+        let (m, k) = (self.dims()[0], self.dims()[1]);
+        let (d, kw) = (w.dims()[0], w.dims()[1]);
+        if k != kw {
+            return Err(Error::ShapeMismatch {
+                op: "matmul_nt",
+                expected: format!("inner dims equal, x has k={k}"),
+                got: format!("W has k={kw}"),
+            });
+        }
+        let xc = self.contiguous();
+        let wc = w.contiguous();
+        let xs = xc.contiguous_data().unwrap();
+        let ws = wc.contiguous_data().unwrap();
+        // C[i,j] = dot(x[i,:], w[j,:]) — both rows contiguous.
+        let mut out = vec![0.0f32; m * d];
+        for i in 0..m {
+            let xrow = &xs[i * k..(i + 1) * k];
+            let orow = &mut out[i * d..(i + 1) * d];
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o = super::kernels::dot(xrow, &ws[j * k..(j + 1) * k]);
+            }
+        }
+        Tensor::from_vec(out, &[m, d])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    #[test]
+    fn small_matmul_exact() {
+        let a = Tensor::from_vec(vec![1., 2., 3., 4.], &[2, 2]).unwrap();
+        let b = Tensor::from_vec(vec![5., 6., 7., 8.], &[2, 2]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.to_vec(), vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn rectangular() {
+        let a = Tensor::from_vec(vec![1., 2., 3., 4., 5., 6.], &[2, 3]).unwrap();
+        let b = Tensor::from_vec(vec![1., 0., 0., 1., 1., 1.], &[3, 2]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.dims(), &[2, 2]);
+        assert_eq!(c.to_vec(), vec![1. + 3., 2. + 3., 4. + 6., 5. + 6.]);
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[5, 5], 0.0, 1.0, &mut rng);
+        let c = a.matmul(&Tensor::eye(5)).unwrap();
+        assert!(c.allclose(&a, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn blocked_matches_naive_on_large_odd_sizes() {
+        let mut rng = Rng::new(2);
+        for (m, k, n) in [(65, 70, 33), (100, 257, 40), (128, 64, 96)] {
+            let a = Tensor::randn(&[m, k], 0.0, 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 0.0, 1.0, &mut rng);
+            let mut c_naive = vec![0.0f32; m * n];
+            sgemm_naive(
+                m,
+                k,
+                n,
+                a.contiguous_data().unwrap(),
+                b.contiguous_data().unwrap(),
+                &mut c_naive,
+            );
+            let c = a.matmul(&b).unwrap();
+            let expect = Tensor::from_vec(c_naive, &[m, n]).unwrap();
+            assert!(
+                c.allclose(&expect, 1e-4, 1e-4),
+                "mismatch at ({m},{k},{n})"
+            );
+        }
+    }
+
+    #[test]
+    fn shape_errors() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4, 2]);
+        assert!(a.matmul(&b).is_err());
+        let v = Tensor::zeros(&[3]);
+        assert!(a.matmul(&v).is_err());
+    }
+
+    #[test]
+    fn batched_3d() {
+        let a = Tensor::arange(0.0, 12.0).reshape(&[2, 2, 3]).unwrap();
+        let b = Tensor::arange(0.0, 12.0).reshape(&[2, 3, 2]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.dims(), &[2, 2, 2]);
+        // batch 0: [[0,1,2],[3,4,5]] x [[0,1],[2,3],[4,5]]
+        assert_eq!(c.at(&[0, 0, 0]).unwrap(), 0.0 * 0.0 + 1.0 * 2.0 + 2.0 * 4.0);
+        assert_eq!(c.at(&[0, 1, 1]).unwrap(), 3.0 * 1.0 + 4.0 * 3.0 + 5.0 * 5.0);
+    }
+
+    #[test]
+    fn batched_broadcast_lhs() {
+        // [2,2,3] x [3,2] broadcasts the rhs across the batch
+        let a = Tensor::arange(0.0, 12.0).reshape(&[2, 2, 3]).unwrap();
+        let b = Tensor::arange(0.0, 6.0).reshape(&[3, 2]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.dims(), &[2, 2, 2]);
+        let b0 = a.select(0, 0).unwrap().matmul(&b).unwrap();
+        assert_eq!(c.select(0, 0).unwrap().to_vec(), b0.to_vec());
+    }
+
+    #[test]
+    fn matmul_nt_matches_explicit_transpose() {
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[7, 5], 0.0, 1.0, &mut rng);
+        let w = Tensor::randn(&[4, 5], 0.0, 1.0, &mut rng);
+        let direct = x.matmul_nt(&w).unwrap();
+        let via_t = x.matmul(&w.t().unwrap()).unwrap();
+        assert!(direct.allclose(&via_t, 1e-4, 1e-5));
+    }
+
+    #[test]
+    fn matmul_on_transposed_view() {
+        let mut rng = Rng::new(4);
+        let a = Tensor::randn(&[4, 6], 0.0, 1.0, &mut rng);
+        let at = a.t().unwrap(); // [6,4] strided view
+        let b = Tensor::randn(&[4, 3], 0.0, 1.0, &mut rng);
+        let c = at.matmul(&b).unwrap();
+        let c_ref = a.contiguous().t().unwrap().contiguous().matmul(&b).unwrap();
+        assert!(c.allclose(&c_ref, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn matmul_4d() {
+        let a = Tensor::ones(&[2, 3, 4, 5]);
+        let b = Tensor::ones(&[2, 3, 5, 6]);
+        let c = matmul_4d_batched(&a, &b).unwrap();
+        assert_eq!(c.dims(), &[2, 3, 4, 6]);
+        assert_eq!(c.at(&[1, 2, 3, 4]).unwrap(), 5.0);
+        assert!(matmul_4d_batched(&a, &Tensor::ones(&[5, 6])).is_err());
+    }
+}

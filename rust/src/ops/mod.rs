@@ -1,0 +1,21 @@
+//! Bulk tensor operations (paper §3.1): elementwise arithmetic with
+//! broadcasting, unary maps, reductions, matrix multiplication,
+//! convolution, pooling, and softmax.
+//!
+//! Layering: `kernels` holds the raw slice loops; each op first tries the
+//! contiguous fast path through `kernels`, falling back to strided
+//! iteration for views. Autograd (`crate::autograd`) wraps these
+//! non-differentiable primitives with pullbacks.
+
+pub mod attention;
+pub mod conv;
+pub mod elementwise;
+pub mod kernels;
+pub mod matmul;
+pub mod reduce;
+pub mod softmax;
+pub mod unary;
+
+pub use attention::attention;
+pub use conv::{avg_pool2d, conv2d, max_pool2d, Conv2dSpec};
+pub use matmul::{matmul, matmul_4d_batched};

@@ -1,0 +1,362 @@
+//! Reductions: sum, mean, max, min, prod, argmax, variance — full and
+//! per-axis with optional kept dims (paper §3.1: "reductions implement
+//! linear functionals such as sum and averages such as mean").
+//!
+//! Axis reductions are decomposed as `[outer, axis, inner]` loops; when
+//! `inner == 1` (reducing the last axis of a contiguous tensor) the inner
+//! loop is a contiguous slice reduction through `kernels`.
+
+use super::kernels;
+use crate::dtype::DType;
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// How a reduction combines elements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceKind {
+    Sum,
+    Max,
+    Min,
+    Prod,
+}
+
+impl ReduceKind {
+    fn identity(self) -> f32 {
+        match self {
+            ReduceKind::Sum => 0.0,
+            ReduceKind::Max => f32::NEG_INFINITY,
+            ReduceKind::Min => f32::INFINITY,
+            ReduceKind::Prod => 1.0,
+        }
+    }
+
+    #[inline]
+    fn combine(self, a: f32, b: f32) -> f32 {
+        match self {
+            ReduceKind::Sum => a + b,
+            ReduceKind::Max => a.max(b),
+            ReduceKind::Min => a.min(b),
+            ReduceKind::Prod => a * b,
+        }
+    }
+}
+
+/// Reduce every element to a scalar tensor.
+pub fn reduce_all(t: &Tensor, kind: ReduceKind) -> Tensor {
+    let v = match (kind, t.contiguous_data()) {
+        (ReduceKind::Sum, Some(s)) => kernels::sum(s),
+        (ReduceKind::Max, Some(s)) => kernels::max(s),
+        (ReduceKind::Min, Some(s)) => kernels::min(s),
+        _ => t
+            .iter()
+            .fold(kind.identity(), |acc, v| kind.combine(acc, v)),
+    };
+    Tensor::scalar(v)
+}
+
+/// Reduce along one axis. `keepdim` keeps the reduced axis with size 1.
+pub fn reduce_axis(t: &Tensor, axis: isize, kind: ReduceKind, keepdim: bool) -> Result<Tensor> {
+    let ax = t.shape().normalize_axis(axis)?;
+    let dims = t.dims();
+    let outer: usize = dims[..ax].iter().product();
+    let len = dims[ax];
+    let inner: usize = dims[ax + 1..].iter().product();
+
+    let src = t.contiguous();
+    let s = src.contiguous_data().unwrap();
+    let mut out = vec![kind.identity(); outer * inner];
+
+    if inner == 1 {
+        // Fast path: reduce contiguous rows.
+        for (o, row) in out.iter_mut().zip(s.chunks_exact(len)) {
+            *o = match kind {
+                ReduceKind::Sum => kernels::sum(row),
+                ReduceKind::Max => kernels::max(row),
+                ReduceKind::Min => kernels::min(row),
+                ReduceKind::Prod => row.iter().product(),
+            };
+        }
+    } else {
+        // Strided: accumulate axis slices onto the inner panel. The inner
+        // loop is contiguous, so it vectorizes.
+        for o in 0..outer {
+            let base = o * len * inner;
+            let panel = &mut out[o * inner..(o + 1) * inner];
+            for a in 0..len {
+                let row = &s[base + a * inner..base + (a + 1) * inner];
+                for (pv, &rv) in panel.iter_mut().zip(row) {
+                    *pv = kind.combine(*pv, rv);
+                }
+            }
+        }
+    }
+
+    let mut out_dims = dims.to_vec();
+    if keepdim {
+        out_dims[ax] = 1;
+    } else {
+        out_dims.remove(ax);
+    }
+    Tensor::from_vec(out, &out_dims)
+}
+
+impl Tensor {
+    /// Sum of all elements → scalar tensor.
+    pub fn sum(&self) -> Tensor {
+        reduce_all(self, ReduceKind::Sum)
+    }
+
+    /// Mean of all elements → scalar tensor.
+    pub fn mean(&self) -> Tensor {
+        self.sum().mul_scalar(1.0 / self.numel() as f32)
+    }
+
+    /// Max of all elements → scalar tensor.
+    pub fn max_all(&self) -> Tensor {
+        reduce_all(self, ReduceKind::Max)
+    }
+
+    /// Min of all elements → scalar tensor.
+    pub fn min_all(&self) -> Tensor {
+        reduce_all(self, ReduceKind::Min)
+    }
+
+    /// Product of all elements → scalar tensor.
+    pub fn prod_all(&self) -> Tensor {
+        reduce_all(self, ReduceKind::Prod)
+    }
+
+    /// Sum along `axis`.
+    pub fn sum_axis(&self, axis: isize, keepdim: bool) -> Result<Tensor> {
+        reduce_axis(self, axis, ReduceKind::Sum, keepdim)
+    }
+
+    /// Mean along `axis`.
+    pub fn mean_axis(&self, axis: isize, keepdim: bool) -> Result<Tensor> {
+        let ax = self.shape().normalize_axis(axis)?;
+        let n = self.dims()[ax] as f32;
+        Ok(self.sum_axis(axis, keepdim)?.mul_scalar(1.0 / n))
+    }
+
+    /// Max along `axis`.
+    pub fn max_axis(&self, axis: isize, keepdim: bool) -> Result<Tensor> {
+        reduce_axis(self, axis, ReduceKind::Max, keepdim)
+    }
+
+    /// Min along `axis`.
+    pub fn min_axis(&self, axis: isize, keepdim: bool) -> Result<Tensor> {
+        reduce_axis(self, axis, ReduceKind::Min, keepdim)
+    }
+
+    /// Index of the max along `axis` (I32 tensor, axis removed).
+    pub fn argmax_axis(&self, axis: isize) -> Result<Tensor> {
+        let ax = self.shape().normalize_axis(axis)?;
+        let dims = self.dims();
+        let outer: usize = dims[..ax].iter().product();
+        let len = dims[ax];
+        let inner: usize = dims[ax + 1..].iter().product();
+        let src = self.contiguous();
+        let s = src.contiguous_data().unwrap();
+        let mut out = vec![0.0f32; outer * inner];
+        for o in 0..outer {
+            for i in 0..inner {
+                let mut best = 0usize;
+                let mut bv = f32::NEG_INFINITY;
+                for a in 0..len {
+                    let v = s[o * len * inner + a * inner + i];
+                    if v > bv {
+                        bv = v;
+                        best = a;
+                    }
+                }
+                out[o * inner + i] = best as f32;
+            }
+        }
+        let mut out_dims = dims.to_vec();
+        out_dims.remove(ax);
+        Ok(Tensor::from_vec(out, &out_dims)?.with_dtype(DType::I32))
+    }
+
+    /// Index of the min along `axis` (I32 tensor, axis removed).
+    pub fn argmin_axis(&self, axis: isize) -> Result<Tensor> {
+        self.neg().argmax_axis(axis)
+    }
+
+    /// Standard deviation along `axis` (population, ddof=0).
+    pub fn std_axis(&self, axis: isize, keepdim: bool) -> Result<Tensor> {
+        Ok(self.var_axis(axis, keepdim)?.sqrt())
+    }
+
+    /// L2 norm of all elements → scalar tensor.
+    pub fn norm(&self) -> Tensor {
+        self.square().sum().sqrt()
+    }
+
+    /// Cumulative sum along the last axis (contiguous rows).
+    pub fn cumsum_lastdim(&self) -> Result<Tensor> {
+        let k = *self
+            .dims()
+            .last()
+            .ok_or_else(|| Error::msg("cumsum: rank must be >= 1"))?;
+        let src = self.contiguous();
+        let s = src.contiguous_data().unwrap();
+        let mut out = Vec::with_capacity(s.len());
+        for row in s.chunks_exact(k) {
+            let mut acc = 0.0f32;
+            out.extend(row.iter().map(|&v| {
+                acc += v;
+                acc
+            }));
+        }
+        Tensor::from_vec(out, self.dims())
+    }
+
+    /// Population variance along `axis` (ddof=0, as in BatchNorm eq 7).
+    pub fn var_axis(&self, axis: isize, keepdim: bool) -> Result<Tensor> {
+        let mean = self.mean_axis(axis, true)?;
+        let centered = self.sub(&mean)?;
+        let sq = centered.square();
+        sq.mean_axis(axis, keepdim)
+    }
+
+    /// Sum over a *set* of axes (used by broadcast pullbacks), keeping dims.
+    pub fn sum_axes_keepdim(&self, axes: &[usize]) -> Result<Tensor> {
+        let mut cur = self.clone();
+        for &ax in axes {
+            cur = cur.sum_axis(ax as isize, true)?;
+        }
+        Ok(cur)
+    }
+
+    /// Reduce a gradient of `target` shape back to this tensor's shape by
+    /// summing the broadcast axes — the generic broadcast pullback.
+    pub fn reduce_grad_to(&self, grad: &Tensor) -> Result<Tensor> {
+        if grad.shape() == self.shape() {
+            return Ok(grad.clone());
+        }
+        let axes = self.shape().broadcast_reduce_axes(grad.shape());
+        let summed = grad.sum_axes_keepdim(&axes)?;
+        summed.reshape(self.dims())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t23() -> Tensor {
+        Tensor::from_vec(vec![1., 2., 3., 4., 5., 6.], &[2, 3]).unwrap()
+    }
+
+    #[test]
+    fn full_reductions() {
+        let t = t23();
+        assert_eq!(t.sum().item().unwrap(), 21.0);
+        assert_eq!(t.mean().item().unwrap(), 3.5);
+        assert_eq!(t.max_all().item().unwrap(), 6.0);
+        assert_eq!(t.min_all().item().unwrap(), 1.0);
+        assert_eq!(t.prod_all().item().unwrap(), 720.0);
+    }
+
+    #[test]
+    fn axis_reductions_last_axis() {
+        let t = t23();
+        let s = t.sum_axis(1, false).unwrap();
+        assert_eq!(s.dims(), &[2]);
+        assert_eq!(s.to_vec(), vec![6., 15.]);
+        let m = t.mean_axis(-1, false).unwrap();
+        assert_eq!(m.to_vec(), vec![2., 5.]);
+    }
+
+    #[test]
+    fn axis_reductions_leading_axis() {
+        let t = t23();
+        let s = t.sum_axis(0, false).unwrap();
+        assert_eq!(s.dims(), &[3]);
+        assert_eq!(s.to_vec(), vec![5., 7., 9.]);
+        let mx = t.max_axis(0, false).unwrap();
+        assert_eq!(mx.to_vec(), vec![4., 5., 6.]);
+        let mn = t.min_axis(0, false).unwrap();
+        assert_eq!(mn.to_vec(), vec![1., 2., 3.]);
+    }
+
+    #[test]
+    fn keepdim_shapes() {
+        let t = t23();
+        assert_eq!(t.sum_axis(1, true).unwrap().dims(), &[2, 1]);
+        assert_eq!(t.sum_axis(0, true).unwrap().dims(), &[1, 3]);
+    }
+
+    #[test]
+    fn middle_axis_3d() {
+        let t = Tensor::arange(0.0, 24.0).reshape(&[2, 3, 4]).unwrap();
+        let s = t.sum_axis(1, false).unwrap();
+        assert_eq!(s.dims(), &[2, 4]);
+        // manual check: sum over axis 1 for [0,0,:] = 0+4+8 = 12
+        assert_eq!(s.at(&[0, 0]).unwrap(), 12.0);
+        assert_eq!(s.at(&[1, 3]).unwrap(), 15.0 + 19.0 + 23.0);
+    }
+
+    #[test]
+    fn argmax() {
+        let t = Tensor::from_vec(vec![1., 9., 3., 7., 5., 2.], &[2, 3]).unwrap();
+        let a = t.argmax_axis(1).unwrap();
+        assert_eq!(a.dtype(), DType::I32);
+        assert_eq!(a.to_vec(), vec![1.0, 0.0]);
+        let a0 = t.argmax_axis(0).unwrap();
+        assert_eq!(a0.to_vec(), vec![1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn variance() {
+        let t = Tensor::from_vec(vec![1., 2., 3., 4.], &[2, 2]).unwrap();
+        let v = t.var_axis(1, false).unwrap();
+        assert_eq!(v.to_vec(), vec![0.25, 0.25]);
+    }
+
+    #[test]
+    fn argmin_std_norm_cumsum() {
+        let t = Tensor::from_vec(vec![3., 1., 2., 0., 5., 4.], &[2, 3]).unwrap();
+        assert_eq!(t.argmin_axis(1).unwrap().to_vec(), vec![1.0, 0.0]);
+        let s = t.std_axis(1, false).unwrap();
+        let expect = ((2.0f32 / 3.0) as f32).sqrt(); // var of [3,1,2] = 2/3
+        assert!((s.to_vec()[0] - expect).abs() < 1e-5);
+        let n = Tensor::from_vec(vec![3.0, 4.0], &[2]).unwrap().norm();
+        assert!((n.item().unwrap() - 5.0).abs() < 1e-6);
+        let c = t.cumsum_lastdim().unwrap();
+        assert_eq!(c.to_vec(), vec![3., 4., 6., 0., 5., 9.]);
+    }
+
+    #[test]
+    fn reduce_grad_to_inverts_broadcast() {
+        let b = Tensor::from_vec(vec![1., 2., 3.], &[3]).unwrap();
+        let grad = Tensor::ones(&[4, 3]);
+        let g = b.reduce_grad_to(&grad).unwrap();
+        assert_eq!(g.dims(), &[3]);
+        assert_eq!(g.to_vec(), vec![4., 4., 4.]);
+
+        let k = Tensor::zeros(&[2, 1]);
+        let grad2 = Tensor::ones(&[2, 5]);
+        let g2 = k.reduce_grad_to(&grad2).unwrap();
+        assert_eq!(g2.dims(), &[2, 1]);
+        assert_eq!(g2.to_vec(), vec![5., 5.]);
+
+        // scalar case
+        let s = Tensor::scalar(1.0);
+        let g3 = s.reduce_grad_to(&Tensor::ones(&[2, 2])).unwrap();
+        assert_eq!(g3.item().unwrap(), 4.0);
+    }
+
+    #[test]
+    fn reductions_on_views() {
+        let t = t23().t().unwrap(); // [3,2] strided
+        let s = t.sum_axis(0, false).unwrap();
+        assert_eq!(s.to_vec(), vec![6., 15.]);
+    }
+
+    #[test]
+    fn sum_matches_kernel_on_large() {
+        let t = Tensor::arange(0.0, 1000.0);
+        assert_eq!(t.sum().item().unwrap(), 499500.0);
+    }
+}

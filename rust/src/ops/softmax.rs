@@ -1,0 +1,169 @@
+//! Numerically stable softmax / log-softmax along the last axis, plus the
+//! fused softmax-cross-entropy forward used by the loss (paper eq 8).
+
+use super::kernels;
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// Softmax along the last axis, computed row-wise with the max-shift trick.
+pub fn softmax_lastdim(t: &Tensor) -> Result<Tensor> {
+    let src = t.contiguous();
+    let s = src.contiguous_data().unwrap();
+    let k = *t
+        .dims()
+        .last()
+        .ok_or_else(|| Error::msg("softmax: rank must be >= 1"))?;
+    // Independent passes over each (L1-resident) row: the exp pass
+    // carries no serial dependency, so fast_exp pipelines; a fused
+    // exp+sum loop is ~2x slower (EXPERIMENTS.md §Perf L3.3). The output
+    // comes from the buffer pool and is written by `extend` — no
+    // zero-fill.
+    let mut out = crate::tensor::pool::take(s.len());
+    for row in s.chunks_exact(k) {
+        let m = kernels::max(row);
+        out.extend(row.iter().map(|&v| kernels::fast_exp(v - m)));
+    }
+    for orow in out.chunks_exact_mut(k) {
+        let inv = 1.0 / kernels::sum(orow);
+        kernels::scale(orow, inv);
+    }
+    Tensor::from_vec(out, t.dims())
+}
+
+/// Log-softmax along the last axis (stable: `x - m - ln Σ exp(x-m)`).
+pub fn log_softmax_lastdim(t: &Tensor) -> Result<Tensor> {
+    let src = t.contiguous();
+    let s = src.contiguous_data().unwrap();
+    let k = *t
+        .dims()
+        .last()
+        .ok_or_else(|| Error::msg("log_softmax: rank must be >= 1"))?;
+    let mut out = vec![0.0f32; s.len()];
+    for (orow, row) in out.chunks_exact_mut(k).zip(s.chunks_exact(k)) {
+        let lse = kernels::logsumexp(row);
+        for (o, &v) in orow.iter_mut().zip(row) {
+            *o = v - lse;
+        }
+    }
+    Tensor::from_vec(out, t.dims())
+}
+
+/// Fused forward of mean cross-entropy over logits `[b, C]` with integer
+/// labels `[b]` (paper eq 8). Returns `(loss_scalar, softmax_probs)`; the
+/// probs feed the well-known `softmax - onehot` pullback.
+pub fn cross_entropy_forward(logits: &Tensor, labels: &Tensor) -> Result<(Tensor, Tensor)> {
+    if logits.rank() != 2 || labels.rank() != 1 || logits.dims()[0] != labels.dims()[0] {
+        return Err(Error::ShapeMismatch {
+            op: "cross_entropy",
+            expected: "logits [b, C] with labels [b]".into(),
+            got: format!("{} with {}", logits.shape(), labels.shape()),
+        });
+    }
+    let b = logits.dims()[0];
+    let c = logits.dims()[1];
+    let src = logits.contiguous();
+    let s = src.contiguous_data().unwrap();
+    let mut probs = vec![0.0f32; b * c];
+    let mut loss = 0.0f32;
+    for (i, y) in labels.iter().enumerate() {
+        let yi = y as usize;
+        if yi >= c {
+            return Err(Error::IndexOutOfBounds { index: yi, size: c });
+        }
+        let row = &s[i * c..(i + 1) * c];
+        let lse = kernels::logsumexp(row);
+        loss -= row[yi] - lse;
+        let prow = &mut probs[i * c..(i + 1) * c];
+        for (p, &v) in prow.iter_mut().zip(row) {
+            *p = kernels::fast_exp(v - lse);
+        }
+    }
+    Ok((
+        Tensor::scalar(loss / b as f32),
+        Tensor::from_vec(probs, &[b, c])?,
+    ))
+}
+
+impl Tensor {
+    /// Softmax along the last axis.
+    pub fn softmax(&self) -> Result<Tensor> {
+        softmax_lastdim(self)
+    }
+
+    /// Log-softmax along the last axis.
+    pub fn log_softmax(&self) -> Result<Tensor> {
+        log_softmax_lastdim(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_sum_to_one() {
+        let t = Tensor::from_vec(vec![1., 2., 3., 1., 1., 1.], &[2, 3]).unwrap();
+        let p = t.softmax().unwrap();
+        let sums = p.sum_axis(1, false).unwrap();
+        assert!(sums.allclose(&Tensor::ones(&[2]), 1e-5, 1e-6));
+        // uniform row → uniform probs
+        assert!((p.at(&[1, 0]).unwrap() - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stable_for_huge_logits() {
+        let t = Tensor::from_vec(vec![1000., 1000., -1000.], &[1, 3]).unwrap();
+        let p = t.softmax().unwrap();
+        assert!(p.iter().all(|v| v.is_finite()));
+        assert!((p.at(&[0, 0]).unwrap() - 0.5).abs() < 1e-5);
+        assert!(p.at(&[0, 2]).unwrap().abs() < 1e-6);
+    }
+
+    #[test]
+    fn log_softmax_is_log_of_softmax() {
+        let t = Tensor::from_vec(vec![0.5, -1.2, 3.3, 0.0], &[2, 2]).unwrap();
+        let ls = t.log_softmax().unwrap();
+        let p = t.softmax().unwrap().log();
+        assert!(ls.allclose(&p, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn softmax_shift_invariance() {
+        let t = Tensor::from_vec(vec![1., 2., 3.], &[1, 3]).unwrap();
+        let shifted = t.add_scalar(100.0);
+        assert!(t
+            .softmax()
+            .unwrap()
+            .allclose(&shifted.softmax().unwrap(), 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn cross_entropy_uniform_logits() {
+        // loss over uniform logits = ln(C)
+        let logits = Tensor::zeros(&[4, 10]);
+        let labels = Tensor::from_vec_i32(vec![0, 3, 5, 9], &[4]).unwrap();
+        let (loss, probs) = cross_entropy_forward(&logits, &labels).unwrap();
+        assert!((loss.item().unwrap() - 10f32.ln()).abs() < 1e-5);
+        assert!((probs.at(&[0, 0]).unwrap() - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cross_entropy_confident_correct_is_small() {
+        let mut logits = vec![0.0f32; 2 * 3];
+        logits[0] = 20.0; // row 0 very confident class 0
+        logits[3 + 1] = 20.0; // row 1 very confident class 1
+        let logits = Tensor::from_vec(logits, &[2, 3]).unwrap();
+        let labels = Tensor::from_vec_i32(vec![0, 1], &[2]).unwrap();
+        let (loss, _) = cross_entropy_forward(&logits, &labels).unwrap();
+        assert!(loss.item().unwrap() < 1e-3);
+    }
+
+    #[test]
+    fn cross_entropy_errors() {
+        let logits = Tensor::zeros(&[2, 3]);
+        let bad_shape = Tensor::zeros(&[3]);
+        assert!(cross_entropy_forward(&logits, &bad_shape).is_err());
+        let bad_label = Tensor::from_vec_i32(vec![0, 7], &[2]).unwrap();
+        assert!(cross_entropy_forward(&logits, &bad_label).is_err());
+    }
+}

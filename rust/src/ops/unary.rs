@@ -1,0 +1,203 @@
+//! Unary elementwise operations: negation, exp/log family, and the
+//! nonlinearities of paper §3.3 (ReLU, Sigmoid, Tanh, GELU).
+
+use crate::tensor::Tensor;
+
+/// `sqrt(2/π)` constant used by the tanh-approximated GELU.
+const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+
+/// Scalar GELU (tanh approximation, the one used by the major frameworks).
+#[inline]
+pub fn gelu_scalar(x: f32) -> f32 {
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Derivative of the tanh-approximated GELU.
+#[inline]
+pub fn gelu_grad_scalar(x: f32) -> f32 {
+    let u = SQRT_2_OVER_PI * (x + 0.044715 * x * x * x);
+    let t = u.tanh();
+    let du = SQRT_2_OVER_PI * (1.0 + 3.0 * 0.044715 * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+}
+
+/// Scalar logistic sigmoid, stable for large |x| (fast_exp inside — see
+/// EXPERIMENTS.md §Perf L3.3).
+#[inline]
+pub fn sigmoid_scalar(x: f32) -> f32 {
+    use crate::ops::kernels::fast_exp;
+    if x >= 0.0 {
+        1.0 / (1.0 + fast_exp(-x))
+    } else {
+        let e = fast_exp(x);
+        e / (1.0 + e)
+    }
+}
+
+impl Tensor {
+    /// Elementwise negation.
+    pub fn neg(&self) -> Tensor {
+        self.map(|v| -v)
+    }
+
+    /// Elementwise exponential.
+    pub fn exp(&self) -> Tensor {
+        self.map(f32::exp)
+    }
+
+    /// Elementwise natural log.
+    pub fn log(&self) -> Tensor {
+        self.map(f32::ln)
+    }
+
+    /// Elementwise square root.
+    pub fn sqrt(&self) -> Tensor {
+        self.map(f32::sqrt)
+    }
+
+    /// Elementwise absolute value.
+    pub fn abs(&self) -> Tensor {
+        self.map(f32::abs)
+    }
+
+    /// Elementwise sine.
+    pub fn sin(&self) -> Tensor {
+        self.map(f32::sin)
+    }
+
+    /// Elementwise cosine.
+    pub fn cos(&self) -> Tensor {
+        self.map(f32::cos)
+    }
+
+    /// Elementwise square.
+    pub fn square(&self) -> Tensor {
+        self.map(|v| v * v)
+    }
+
+    /// Elementwise reciprocal.
+    pub fn recip(&self) -> Tensor {
+        self.map(|v| 1.0 / v)
+    }
+
+    /// Clamp values into `[lo, hi]`.
+    pub fn clamp(&self, lo: f32, hi: f32) -> Tensor {
+        self.map(|v| v.clamp(lo, hi))
+    }
+
+    /// ReLU: `max(x, 0)` (paper §3.3).
+    pub fn relu(&self) -> Tensor {
+        self.map(|v| v.max(0.0))
+    }
+
+    /// Logistic sigmoid (stable).
+    pub fn sigmoid(&self) -> Tensor {
+        self.map(sigmoid_scalar)
+    }
+
+    /// Hyperbolic tangent.
+    pub fn tanh(&self) -> Tensor {
+        self.map(f32::tanh)
+    }
+
+    /// GELU, tanh approximation (paper §3.3).
+    pub fn gelu(&self) -> Tensor {
+        self.map(gelu_scalar)
+    }
+
+    /// Leaky ReLU with slope `alpha` for negative inputs.
+    pub fn leaky_relu(&self, alpha: f32) -> Tensor {
+        self.map(move |v| if v > 0.0 { v } else { alpha * v })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: Vec<f32>) -> Tensor {
+        let n = v.len();
+        Tensor::from_vec(v, &[n]).unwrap()
+    }
+
+    #[test]
+    fn basic_unary() {
+        assert_eq!(t(vec![1., -2.]).neg().to_vec(), vec![-1., 2.]);
+        assert_eq!(t(vec![0., 1.]).exp().to_vec()[0], 1.0);
+        assert_eq!(t(vec![4.]).sqrt().to_vec(), vec![2.0]);
+        assert_eq!(t(vec![-3.]).abs().to_vec(), vec![3.0]);
+        assert_eq!(t(vec![3.]).square().to_vec(), vec![9.0]);
+        assert_eq!(t(vec![4.]).recip().to_vec(), vec![0.25]);
+        assert_eq!(t(vec![-5., 0.5, 5.]).clamp(-1.0, 1.0).to_vec(), vec![-1., 0.5, 1.]);
+    }
+
+    #[test]
+    fn exp_log_roundtrip() {
+        let x = t(vec![0.1, 1.0, 5.0]);
+        let y = x.exp().log();
+        assert!(y.allclose(&x, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn relu_kink() {
+        assert_eq!(t(vec![-1., 0., 2.]).relu().to_vec(), vec![0., 0., 2.]);
+        assert_eq!(
+            t(vec![-2., 3.]).leaky_relu(0.1).to_vec(),
+            vec![-0.2, 3.0]
+        );
+    }
+
+    #[test]
+    fn sigmoid_properties() {
+        let s = t(vec![0.0]).sigmoid();
+        assert!((s.to_vec()[0] - 0.5).abs() < 1e-6);
+        // stability at extremes
+        let big = t(vec![100.0, -100.0]).sigmoid().to_vec();
+        assert!((big[0] - 1.0).abs() < 1e-6);
+        assert!(big[1].abs() < 1e-6);
+        assert!(big.iter().all(|v| v.is_finite()));
+        // symmetry: σ(-x) = 1 - σ(x)
+        let a = sigmoid_scalar(1.7);
+        let b = sigmoid_scalar(-1.7);
+        assert!((a + b - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tanh_matches_std() {
+        let x = t(vec![0.5, -1.0]);
+        let y = x.tanh().to_vec();
+        assert!((y[0] - 0.5f32.tanh()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gelu_reference_values() {
+        // gelu(0) = 0, gelu(large) ≈ identity, gelu(-large) ≈ 0
+        assert_eq!(gelu_scalar(0.0), 0.0);
+        assert!((gelu_scalar(10.0) - 10.0).abs() < 1e-3);
+        assert!(gelu_scalar(-10.0).abs() < 1e-3);
+        // known value: gelu(1) ≈ 0.8412 (tanh approx)
+        assert!((gelu_scalar(1.0) - 0.8412).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.3, 1.5] {
+            let eps = 1e-3;
+            let fd = (gelu_scalar(x + eps) - gelu_scalar(x - eps)) / (2.0 * eps);
+            assert!(
+                (gelu_grad_scalar(x) - fd).abs() < 1e-3,
+                "x={x}: {} vs {fd}",
+                gelu_grad_scalar(x)
+            );
+        }
+    }
+
+    #[test]
+    fn trig() {
+        let x = t(vec![0.0, std::f32::consts::FRAC_PI_2]);
+        let s = x.sin().to_vec();
+        assert!(s[0].abs() < 1e-6 && (s[1] - 1.0).abs() < 1e-6);
+        let c = x.cos().to_vec();
+        assert!((c[0] - 1.0).abs() < 1e-6 && c[1].abs() < 1e-6);
+    }
+}

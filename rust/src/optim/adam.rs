@@ -1,0 +1,212 @@
+//! Adam and AdamW (paper eq 10, Kingma & Ba 2015):
+//!
+//! ```text
+//! m_t = β₁ m_{t-1} + (1−β₁) g_t
+//! v_t = β₂ v_{t-1} + (1−β₂) g_t²
+//! θ_{t+1} = θ_t − η m̂_t / (√v̂_t + ε)
+//! ```
+//! with bias-corrected `m̂ = m/(1−β₁ᵗ)`, `v̂ = v/(1−β₂ᵗ)`.
+
+use super::Optimizer;
+use crate::autograd::{no_grad, Var};
+use crate::error::Result;
+use crate::tensor::Tensor;
+
+/// Hyper-parameters for [`Adam`].
+#[derive(Debug, Clone, Copy)]
+pub struct AdamConfig {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// L2 coupled decay (classic Adam) — added to the gradient.
+    pub weight_decay: f32,
+    /// Decoupled decay (AdamW) — applied directly to θ.
+    pub decoupled_weight_decay: f32,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig {
+            lr: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            decoupled_weight_decay: 0.0,
+        }
+    }
+}
+
+/// Adam optimizer with optional (decoupled) weight decay.
+pub struct Adam {
+    params: Vec<Var>,
+    cfg: AdamConfig,
+    m: Vec<Option<Vec<f32>>>,
+    v: Vec<Option<Vec<f32>>>,
+    t: u32,
+}
+
+impl Adam {
+    /// Adam with default betas and the given learning rate.
+    pub fn new(params: Vec<Var>, lr: f32) -> Adam {
+        Adam::with_config(
+            params,
+            AdamConfig {
+                lr,
+                ..AdamConfig::default()
+            },
+        )
+    }
+
+    /// AdamW: decoupled weight decay.
+    pub fn adamw(params: Vec<Var>, lr: f32, weight_decay: f32) -> Adam {
+        Adam::with_config(
+            params,
+            AdamConfig {
+                lr,
+                decoupled_weight_decay: weight_decay,
+                ..AdamConfig::default()
+            },
+        )
+    }
+
+    /// Fully explicit configuration.
+    pub fn with_config(params: Vec<Var>, cfg: AdamConfig) -> Adam {
+        let n = params.len();
+        Adam {
+            params,
+            cfg,
+            m: vec![None; n],
+            v: vec![None; n],
+            t: 0,
+        }
+    }
+
+    /// Steps taken so far.
+    pub fn steps(&self) -> u32 {
+        self.t
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self) -> Result<()> {
+        self.t += 1;
+        let c = self.cfg;
+        let bc1 = 1.0 - c.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - c.beta2.powi(self.t as i32);
+        no_grad(|| {
+            for (i, p) in self.params.iter().enumerate() {
+                let Some(grad) = p.grad() else { continue };
+                let mut theta = p.data().to_vec();
+                let gt = grad.contiguous();
+                let gs = gt.contiguous_data().unwrap();
+                let m = self.m[i].get_or_insert_with(|| vec![0.0; theta.len()]);
+                let v = self.v[i].get_or_insert_with(|| vec![0.0; theta.len()]);
+
+                for (((ti, &g0), mi), vi) in
+                    theta.iter_mut().zip(gs).zip(m.iter_mut()).zip(v.iter_mut())
+                {
+                    let g = g0 + c.weight_decay * *ti;
+                    *mi = c.beta1 * *mi + (1.0 - c.beta1) * g;
+                    *vi = c.beta2 * *vi + (1.0 - c.beta2) * g * g;
+                    let mhat = *mi / bc1;
+                    let vhat = *vi / bc2;
+                    *ti -= c.lr * mhat / (vhat.sqrt() + c.eps)
+                        + c.lr * c.decoupled_weight_decay * *ti;
+                }
+                p.set_data(Tensor::from_vec(theta, &p.dims())?);
+            }
+            Ok(())
+        })
+    }
+
+    fn zero_grad(&mut self) {
+        for p in &self.params {
+            p.zero_grad();
+        }
+    }
+
+    fn lr(&self) -> f32 {
+        self.cfg.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.cfg.lr = lr;
+    }
+
+    fn params(&self) -> &[Var] {
+        &self.params
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_size_is_lr() {
+        // With bias correction, the very first Adam step ≈ lr·sign(g).
+        let p = Var::from_tensor(Tensor::scalar(1.0), true);
+        let mut opt = Adam::new(vec![p.clone()], 0.1);
+        opt.zero_grad();
+        p.square().sum().unwrap().backward().unwrap();
+        opt.step().unwrap();
+        let step = 1.0 - p.data().item().unwrap();
+        assert!((step - 0.1).abs() < 1e-4, "step={step}");
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let p = Var::from_tensor(
+            Tensor::from_vec(vec![3.0, -2.0, 0.7], &[3]).unwrap(),
+            true,
+        );
+        let mut opt = Adam::new(vec![p.clone()], 0.05);
+        for _ in 0..400 {
+            opt.zero_grad();
+            p.square().sum().unwrap().backward().unwrap();
+            opt.step().unwrap();
+        }
+        let norm: f32 = p.data().to_vec().iter().map(|v| v * v).sum();
+        assert!(norm < 1e-4, "norm={norm}");
+    }
+
+    #[test]
+    fn adamw_decay_without_gradient_signal() {
+        let p = Var::from_tensor(Tensor::scalar(1.0), true);
+        let mut opt = Adam::adamw(vec![p.clone()], 0.1, 0.1);
+        opt.zero_grad();
+        p.mul_scalar(0.0).sum().unwrap().backward().unwrap(); // zero grad values
+        opt.step().unwrap();
+        // pure decoupled decay: θ = 1 − lr·wd·θ = 0.99
+        assert!((p.data().item().unwrap() - 0.99).abs() < 1e-5);
+    }
+
+    #[test]
+    fn adaptive_scaling_equalizes_unequal_gradients() {
+        // Two coords with very different gradient scales should move at
+        // roughly the same rate under Adam.
+        let p = Var::from_tensor(Tensor::from_vec(vec![1.0, 1.0], &[2]).unwrap(), true);
+        let scale = Tensor::from_vec(vec![100.0, 0.01], &[2]).unwrap();
+        let mut opt = Adam::new(vec![p.clone()], 0.01);
+        for _ in 0..10 {
+            opt.zero_grad();
+            p.mul_mask(&scale).unwrap().sum().unwrap().backward().unwrap();
+            opt.step().unwrap();
+        }
+        let moved = p.data().to_vec();
+        let d0 = 1.0 - moved[0];
+        let d1 = 1.0 - moved[1];
+        assert!((d0 / d1 - 1.0).abs() < 0.2, "d0={d0} d1={d1}");
+    }
+
+    #[test]
+    fn steps_counter() {
+        let mut opt = Adam::new(vec![], 0.1);
+        assert_eq!(opt.steps(), 0);
+        opt.step().unwrap();
+        opt.step().unwrap();
+        assert_eq!(opt.steps(), 2);
+    }
+}

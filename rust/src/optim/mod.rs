@@ -1,0 +1,40 @@
+//! Optimizers (paper §3.3, eqs 9–10): SGD with momentum and weight decay,
+//! Adam/AdamW, RMSprop, plus learning-rate schedulers.
+
+mod adagrad;
+mod adam;
+mod rmsprop;
+mod scheduler;
+mod sgd;
+
+pub use adagrad::{clip_grad_norm, AdaGrad};
+pub use adam::{Adam, AdamConfig};
+pub use rmsprop::RmsProp;
+pub use scheduler::{CosineLr, LrSchedule, StepLr};
+pub use sgd::Sgd;
+
+use crate::autograd::Var;
+use crate::error::Result;
+
+/// A first-order optimizer over a fixed parameter list.
+///
+/// `step()` reads each parameter's accumulated `.grad` and updates the
+/// value in place (no graph recording — updates are not differentiated
+/// through). `zero_grad()` drops the gradient buffers so the next backward
+/// reallocates them lazily (§3.5).
+pub trait Optimizer {
+    /// Apply one update step using the current gradients.
+    fn step(&mut self) -> Result<()>;
+
+    /// Clear gradients of all managed parameters.
+    fn zero_grad(&mut self);
+
+    /// Current learning rate.
+    fn lr(&self) -> f32;
+
+    /// Override the learning rate (used by schedulers).
+    fn set_lr(&mut self, lr: f32);
+
+    /// Managed parameters.
+    fn params(&self) -> &[Var];
+}

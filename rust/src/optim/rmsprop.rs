@@ -1,0 +1,108 @@
+//! RMSprop (Tieleman & Hinton 2012, paper §3.3): exponential average of
+//! squared gradients, steps scaled by `(v_t + ε)^{-1/2}`.
+
+use super::Optimizer;
+use crate::autograd::{no_grad, Var};
+use crate::error::Result;
+use crate::tensor::Tensor;
+
+/// RMSprop optimizer.
+pub struct RmsProp {
+    params: Vec<Var>,
+    lr: f32,
+    alpha: f32,
+    eps: f32,
+    v: Vec<Option<Vec<f32>>>,
+}
+
+impl RmsProp {
+    /// RMSprop with smoothing constant `alpha` (default 0.99 in most
+    /// frameworks).
+    pub fn new(params: Vec<Var>, lr: f32, alpha: f32) -> RmsProp {
+        let n = params.len();
+        RmsProp {
+            params,
+            lr,
+            alpha,
+            eps: 1e-8,
+            v: vec![None; n],
+        }
+    }
+}
+
+impl Optimizer for RmsProp {
+    fn step(&mut self) -> Result<()> {
+        no_grad(|| {
+            for (i, p) in self.params.iter().enumerate() {
+                let Some(grad) = p.grad() else { continue };
+                let mut theta = p.data().to_vec();
+                let gt = grad.contiguous();
+                let gs = gt.contiguous_data().unwrap();
+                let v = self.v[i].get_or_insert_with(|| vec![0.0; theta.len()]);
+                for ((ti, &g), vi) in theta.iter_mut().zip(gs).zip(v.iter_mut()) {
+                    *vi = self.alpha * *vi + (1.0 - self.alpha) * g * g;
+                    *ti -= self.lr * g / (vi.sqrt() + self.eps);
+                }
+                p.set_data(Tensor::from_vec(theta, &p.dims())?);
+            }
+            Ok(())
+        })
+    }
+
+    fn zero_grad(&mut self) {
+        for p in &self.params {
+            p.zero_grad();
+        }
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+
+    fn params(&self) -> &[Var] {
+        &self.params
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_on_quadratic() {
+        let p = Var::from_tensor(Tensor::from_vec(vec![4.0, -4.0], &[2]).unwrap(), true);
+        let mut opt = RmsProp::new(vec![p.clone()], 0.05, 0.9);
+        for _ in 0..300 {
+            opt.zero_grad();
+            p.square().sum().unwrap().backward().unwrap();
+            opt.step().unwrap();
+        }
+        let norm: f32 = p.data().to_vec().iter().map(|v| v * v).sum();
+        assert!(norm < 1e-2, "norm={norm}");
+    }
+
+    #[test]
+    fn first_step_magnitude() {
+        // v₁ = (1-α) g² ⇒ step = lr·g/(√((1-α))·|g| + ε) ≈ lr/√(1-α)
+        let p = Var::from_tensor(Tensor::scalar(1.0), true);
+        let mut opt = RmsProp::new(vec![p.clone()], 0.01, 0.9);
+        opt.zero_grad();
+        p.square().sum().unwrap().backward().unwrap();
+        opt.step().unwrap();
+        let step = 1.0 - p.data().item().unwrap();
+        let expect = 0.01 / (0.1f32).sqrt();
+        assert!((step - expect).abs() < 1e-3, "step={step} expect={expect}");
+    }
+
+    #[test]
+    fn no_grad_no_update() {
+        let p = Var::from_tensor(Tensor::scalar(1.0), true);
+        let mut opt = RmsProp::new(vec![p.clone()], 0.1, 0.9);
+        opt.step().unwrap();
+        assert_eq!(p.data().item().unwrap(), 1.0);
+    }
+}

@@ -1,0 +1,92 @@
+//! Learning-rate schedules: step decay and cosine annealing with warmup.
+
+/// A learning-rate schedule: maps a step counter to a multiplier of the
+/// base learning rate.
+pub trait LrSchedule {
+    /// LR at `step` given the base rate.
+    fn lr_at(&self, step: usize, base_lr: f32) -> f32;
+}
+
+/// Multiply the LR by `gamma` every `every` steps.
+pub struct StepLr {
+    pub every: usize,
+    pub gamma: f32,
+}
+
+impl LrSchedule for StepLr {
+    fn lr_at(&self, step: usize, base_lr: f32) -> f32 {
+        base_lr * self.gamma.powi((step / self.every) as i32)
+    }
+}
+
+/// Cosine annealing from base LR to `min_lr` over `total` steps, with
+/// linear warmup for the first `warmup` steps.
+pub struct CosineLr {
+    pub total: usize,
+    pub warmup: usize,
+    pub min_lr: f32,
+}
+
+impl LrSchedule for CosineLr {
+    fn lr_at(&self, step: usize, base_lr: f32) -> f32 {
+        if step < self.warmup {
+            return base_lr * (step + 1) as f32 / self.warmup as f32;
+        }
+        let t = (step - self.warmup) as f32 / (self.total - self.warmup).max(1) as f32;
+        let t = t.min(1.0);
+        self.min_lr
+            + 0.5 * (base_lr - self.min_lr) * (1.0 + (std::f32::consts::PI * t).cos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_decay() {
+        let s = StepLr {
+            every: 10,
+            gamma: 0.1,
+        };
+        assert_eq!(s.lr_at(0, 1.0), 1.0);
+        assert_eq!(s.lr_at(9, 1.0), 1.0);
+        assert!((s.lr_at(10, 1.0) - 0.1).abs() < 1e-7);
+        assert!((s.lr_at(25, 1.0) - 0.01).abs() < 1e-7);
+    }
+
+    #[test]
+    fn cosine_warmup_then_decay() {
+        let s = CosineLr {
+            total: 100,
+            warmup: 10,
+            min_lr: 0.0,
+        };
+        // warmup ramps up linearly
+        assert!(s.lr_at(0, 1.0) < s.lr_at(5, 1.0));
+        assert!((s.lr_at(9, 1.0) - 1.0).abs() < 1e-6);
+        // midpoint of cosine ≈ half
+        let mid = s.lr_at(55, 1.0);
+        assert!((mid - 0.5).abs() < 0.02, "mid={mid}");
+        // end hits min
+        assert!(s.lr_at(100, 1.0) < 1e-6);
+        // past the end stays at min
+        assert!(s.lr_at(500, 1.0) < 1e-6);
+    }
+
+    #[test]
+    fn cosine_is_monotone_after_warmup() {
+        let s = CosineLr {
+            total: 50,
+            warmup: 5,
+            min_lr: 0.01,
+        };
+        let mut last = f32::INFINITY;
+        for step in 5..50 {
+            let lr = s.lr_at(step, 1.0);
+            assert!(lr <= last + 1e-6);
+            last = lr;
+        }
+        assert!(last >= 0.01 - 1e-6);
+    }
+}

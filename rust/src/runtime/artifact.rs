@@ -1,0 +1,163 @@
+//! Artifact manifest: what `python/compile/aot.py` wrote and how to call
+//! each entry point.
+//!
+//! The manifest is a deliberately simple line-oriented format (no JSON
+//! dependency in the vendor set):
+//!
+//! ```text
+//! # name | hlo file | input shapes ; output shapes
+//! matmul | matmul.hlo.txt | 128x128,128x128 ; 128x128
+//! mlp_forward | mlp_forward.hlo.txt | 32x64,256x64,256,10x256,10 ; 32x10
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Artifact {
+    /// Logical name (e.g. "mlp_train_step").
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: PathBuf,
+    /// Expected input shapes, in call order.
+    pub input_shapes: Vec<Vec<usize>>,
+    /// Produced output shapes, in tuple order.
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+/// Parsed artifacts manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<Artifact>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (separated out for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('|').map(str::trim).collect();
+            if parts.len() != 3 {
+                return Err(Error::Artifact(format!(
+                    "manifest line {}: expected 3 '|'-separated fields, got {}",
+                    lineno + 1,
+                    parts.len()
+                )));
+            }
+            let (ins, outs) = parts[2].split_once(';').ok_or_else(|| {
+                Error::Artifact(format!(
+                    "manifest line {}: missing ';' between input and output shapes",
+                    lineno + 1
+                ))
+            })?;
+            artifacts.push(Artifact {
+                name: parts[0].to_string(),
+                file: PathBuf::from(parts[1]),
+                input_shapes: parse_shapes(ins)?,
+                output_shapes: parse_shapes(outs)?,
+            });
+        }
+        Ok(Manifest { artifacts, dir })
+    }
+
+    /// Find an artifact by name.
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| {
+                Error::Artifact(format!(
+                    "no artifact named '{name}' (available: {})",
+                    self.artifacts
+                        .iter()
+                        .map(|a| a.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ))
+            })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, a: &Artifact) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+}
+
+fn parse_shapes(s: &str) -> Result<Vec<Vec<usize>>> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Ok(Vec::new());
+    }
+    s.split(',')
+        .map(|shape| {
+            let shape = shape.trim();
+            if shape == "scalar" {
+                return Ok(Vec::new());
+            }
+            shape
+                .split('x')
+                .map(|d| {
+                    d.trim()
+                        .parse::<usize>()
+                        .map_err(|e| Error::Artifact(format!("bad dim '{d}': {e}")))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let text = "\
+# comment
+matmul | matmul.hlo.txt | 128x128,128x128 ; 128x128
+loss | loss.hlo.txt | 32x10,32 ; scalar
+";
+        let m = Manifest::parse(text, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let mm = m.get("matmul").unwrap();
+        assert_eq!(mm.input_shapes, vec![vec![128, 128], vec![128, 128]]);
+        assert_eq!(mm.output_shapes, vec![vec![128, 128]]);
+        let loss = m.get("loss").unwrap();
+        assert_eq!(loss.output_shapes, vec![Vec::<usize>::new()]);
+        assert_eq!(m.path_of(mm), PathBuf::from("/tmp/matmul.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_name_errors() {
+        let m = Manifest::parse("", PathBuf::new()).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(Manifest::parse("just one field", PathBuf::new()).is_err());
+        assert!(Manifest::parse("a | b | no-semicolon", PathBuf::new()).is_err());
+        assert!(Manifest::parse("a | b | 2xbad ; 1", PathBuf::new()).is_err());
+    }
+}

@@ -1,0 +1,162 @@
+//! PJRT execution engine: one process-wide CPU client, compiled
+//! executables cached per artifact, `Tensor` ⇄ `Literal` conversion.
+
+use std::collections::HashMap;
+
+use super::artifact::{Artifact, Manifest};
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// A compiled, ready-to-run AOT model.
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    artifact: Artifact,
+}
+
+impl LoadedModel {
+    /// Execute with `Tensor` inputs, returning all tuple outputs as
+    /// `Tensor`s (the exporter lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.artifact.input_shapes.len() {
+            return Err(Error::Xla(format!(
+                "artifact '{}' expects {} inputs, got {}",
+                self.artifact.name,
+                self.artifact.input_shapes.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (t, expect)) in inputs.iter().zip(&self.artifact.input_shapes).enumerate() {
+            if t.dims() != expect.as_slice() {
+                return Err(Error::Xla(format!(
+                    "artifact '{}' input {i}: expected shape {expect:?}, got {:?}",
+                    self.artifact.name,
+                    t.dims()
+                )));
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| tensor_to_literal(t))
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts
+            .into_iter()
+            .zip(&self.artifact.output_shapes)
+            .map(|(lit, dims)| literal_to_tensor(&lit, dims))
+            .collect()
+    }
+
+    /// The artifact this executable came from.
+    pub fn artifact(&self) -> &Artifact {
+        &self.artifact
+    }
+}
+
+/// Process-wide PJRT engine: owns the client and an executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, LoadedModel>,
+}
+
+impl Engine {
+    /// Build a CPU engine over an artifacts directory (expects
+    /// `manifest.txt` inside, produced by `make artifacts`).
+    pub fn cpu(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// PJRT platform string (e.g. "cpu"/"Host").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The artifact manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedModel> {
+        if !self.cache.contains_key(name) {
+            let artifact = self.manifest.get(name)?.clone();
+            let path = self.manifest.path_of(&artifact);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache
+                .insert(name.to_string(), LoadedModel { exe, artifact });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// One-shot convenience: load (cached) and run.
+    pub fn run(&mut self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.load(name)?;
+        self.cache[name].run(inputs)
+    }
+
+    /// Names of all artifacts in the manifest.
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest
+            .artifacts
+            .iter()
+            .map(|a| a.name.clone())
+            .collect()
+    }
+}
+
+/// Convert a `Tensor` to an f32 `Literal` of the same shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let flat = t.to_vec();
+    let lit = xla::Literal::vec1(&flat);
+    if t.rank() == 0 {
+        // jax scalars lower as rank-0; reshape accordingly.
+        Ok(lit.reshape(&[])?)
+    } else {
+        let dims: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// Convert a `Literal` back to a `Tensor` with the given shape.
+pub fn literal_to_tensor(lit: &xla::Literal, dims: &[usize]) -> Result<Tensor> {
+    let v: Vec<f32> = lit.to_vec()?;
+    Tensor::from_vec(v, dims)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let t = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        let lit = tensor_to_literal(&t).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        let back = literal_to_tensor(&lit, &[2, 3]).unwrap();
+        assert_eq!(back.to_vec(), t.to_vec());
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let t = Tensor::scalar(7.5);
+        let lit = tensor_to_literal(&t).unwrap();
+        assert_eq!(lit.element_count(), 1);
+        let back = literal_to_tensor(&lit, &[]).unwrap();
+        assert_eq!(back.item().unwrap(), 7.5);
+    }
+
+    // Engine tests that require actual artifacts live in
+    // rust/tests/runtime_xla.rs (they need `make artifacts` to have run).
+}

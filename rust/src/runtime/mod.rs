@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts (produced by
+//! `python/compile/aot.py`) and execute them from Rust.
+//!
+//! Python never runs on this path — the artifacts are HLO *text* (the
+//! interchange format that survives the jax≥0.5 / xla_extension 0.5.1
+//! proto-id mismatch; see DESIGN.md), parsed and compiled once per process
+//! by the PJRT CPU client, then executed with `Tensor` inputs.
+
+mod artifact;
+mod engine;
+
+pub use artifact::{Artifact, Manifest};
+pub use engine::{Engine, LoadedModel};

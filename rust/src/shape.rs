@@ -1,0 +1,339 @@
+//! Shapes, strides, and NumPy/PyTorch broadcasting (paper §3.1).
+//!
+//! A tensor is an n-dimensional array with shape `s = (s_1, …, s_n)` and a
+//! contiguous row-major layout by default; views carry explicit strides.
+//! Broadcasting follows the NumPy rule: shapes are right-aligned, and two
+//! dimensions are compatible when they are equal or one of them is 1. A
+//! broadcast dimension of size 1 is *virtually* expanded by giving it
+//! stride 0 — the engine never materializes the expansion, exactly as the
+//! paper describes for `x + b` with `x ∈ R^{b×d}`, `b ∈ R^d`.
+
+use crate::error::{Error, Result};
+
+/// Shape of a tensor: dimension sizes, row-major.
+///
+/// Rank 0 (scalar) is represented by an empty dims vector and has one
+/// element.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape {
+    dims: Vec<usize>,
+}
+
+impl Shape {
+    /// Build a shape from a slice of dimension sizes.
+    pub fn new(dims: &[usize]) -> Shape {
+        Shape {
+            dims: dims.to_vec(),
+        }
+    }
+
+    /// Scalar shape (rank 0, one element).
+    pub fn scalar() -> Shape {
+        Shape { dims: Vec::new() }
+    }
+
+    /// Dimension sizes.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Number of dimensions.
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Total number of elements (product of dims; 1 for scalars).
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Size along `axis`, supporting negative (from-the-end) indexing.
+    pub fn dim(&self, axis: isize) -> Result<usize> {
+        let ax = self.normalize_axis(axis)?;
+        Ok(self.dims[ax])
+    }
+
+    /// Convert a possibly-negative axis into a concrete index.
+    pub fn normalize_axis(&self, axis: isize) -> Result<usize> {
+        let rank = self.rank() as isize;
+        let ax = if axis < 0 { axis + rank } else { axis };
+        if ax < 0 || ax >= rank {
+            return Err(Error::AxisOutOfRange {
+                axis,
+                rank: self.rank(),
+            });
+        }
+        Ok(ax as usize)
+    }
+
+    /// Contiguous row-major strides (in elements, not bytes).
+    pub fn contiguous_strides(&self) -> Vec<isize> {
+        let mut strides = vec![0isize; self.rank()];
+        let mut acc = 1isize;
+        for (i, &d) in self.dims.iter().enumerate().rev() {
+            strides[i] = acc;
+            acc *= d as isize;
+        }
+        strides
+    }
+
+    /// Broadcast two shapes under the NumPy rule, returning the result
+    /// shape. Errors when any right-aligned dimension pair disagrees and
+    /// neither side is 1.
+    pub fn broadcast(&self, other: &Shape) -> Result<Shape> {
+        let r = self.rank().max(other.rank());
+        let mut out = vec![0usize; r];
+        for i in 0..r {
+            let a = self.dim_right_aligned(i, r);
+            let b = other.dim_right_aligned(i, r);
+            out[i] = match (a, b) {
+                (x, y) if x == y => x,
+                (1, y) => y,
+                (x, 1) => x,
+                _ => {
+                    return Err(Error::BroadcastMismatch {
+                        lhs: self.dims.clone(),
+                        rhs: other.dims.clone(),
+                    })
+                }
+            };
+        }
+        Ok(Shape::new(&out))
+    }
+
+    /// Dimension `i` of this shape when right-aligned to total rank `r`
+    /// (missing leading dims read as 1).
+    fn dim_right_aligned(&self, i: usize, r: usize) -> usize {
+        let pad = r - self.rank();
+        if i < pad {
+            1
+        } else {
+            self.dims[i - pad]
+        }
+    }
+
+    /// Strides for *reading this shape as if it were `target`*: broadcast
+    /// dimensions get stride 0 (the virtual expansion of §3.1).
+    ///
+    /// `base` holds this tensor's actual strides. `target` must be a valid
+    /// broadcast of `self`.
+    pub fn broadcast_strides(&self, base: &[isize], target: &Shape) -> Result<Vec<isize>> {
+        if target.rank() < self.rank() {
+            return Err(Error::BroadcastMismatch {
+                lhs: self.dims.clone(),
+                rhs: target.dims.clone(),
+            });
+        }
+        let pad = target.rank() - self.rank();
+        let mut out = vec![0isize; target.rank()];
+        for i in 0..target.rank() {
+            if i < pad {
+                out[i] = 0;
+            } else {
+                let own = self.dims[i - pad];
+                let tgt = target.dims[i];
+                out[i] = if own == tgt {
+                    base[i - pad]
+                } else if own == 1 {
+                    0
+                } else {
+                    return Err(Error::BroadcastMismatch {
+                        lhs: self.dims.clone(),
+                        rhs: target.dims.clone(),
+                    });
+                };
+            }
+        }
+        Ok(out)
+    }
+
+    /// The axes along which `self` was expanded to reach `target`
+    /// (including padded leading axes). These are exactly the axes a
+    /// gradient must be summed over in the broadcast pullback.
+    pub fn broadcast_reduce_axes(&self, target: &Shape) -> Vec<usize> {
+        let pad = target.rank() - self.rank();
+        let mut axes = Vec::new();
+        for i in 0..target.rank() {
+            if i < pad {
+                axes.push(i);
+            } else if self.dims[i - pad] == 1 && target.dims[i] != 1 {
+                axes.push(i);
+            }
+        }
+        axes
+    }
+}
+
+impl From<&[usize]> for Shape {
+    fn from(d: &[usize]) -> Shape {
+        Shape::new(d)
+    }
+}
+
+impl From<Vec<usize>> for Shape {
+    fn from(d: Vec<usize>) -> Shape {
+        Shape { dims: d }
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "(")?;
+        for (i, d) in self.dims.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, ")")
+    }
+}
+
+/// Iterator over the multi-dimensional indices of a shape in row-major
+/// order, yielding the linear offset under a given stride vector.
+///
+/// This is the strided fallback path for non-contiguous tensors; contiguous
+/// tensors take bulk slice kernels instead (see `ops::kernels`).
+pub struct StridedIter {
+    dims: Vec<usize>,
+    strides: Vec<isize>,
+    index: Vec<usize>,
+    offset: isize,
+    remaining: usize,
+}
+
+impl StridedIter {
+    /// Iterate `shape` using `strides`, starting at element offset `offset`.
+    pub fn new(shape: &Shape, strides: &[isize], offset: isize) -> StridedIter {
+        StridedIter {
+            dims: shape.dims().to_vec(),
+            strides: strides.to_vec(),
+            index: vec![0; shape.rank()],
+            offset,
+            remaining: shape.numel(),
+        }
+    }
+}
+
+impl Iterator for StridedIter {
+    type Item = isize;
+
+    fn next(&mut self) -> Option<isize> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let current = self.offset;
+        self.remaining -= 1;
+        // Advance the odometer from the innermost axis.
+        for ax in (0..self.dims.len()).rev() {
+            self.index[ax] += 1;
+            self.offset += self.strides[ax];
+            if self.index[ax] < self.dims[ax] {
+                break;
+            }
+            self.offset -= self.strides[ax] * self.dims[ax] as isize;
+            self.index[ax] = 0;
+        }
+        Some(current)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
+}
+
+impl ExactSizeIterator for StridedIter {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_strides_row_major() {
+        let s = Shape::new(&[2, 3, 4]);
+        assert_eq!(s.contiguous_strides(), vec![12, 4, 1]);
+        assert_eq!(Shape::scalar().contiguous_strides(), Vec::<isize>::new());
+    }
+
+    #[test]
+    fn numel_and_rank() {
+        assert_eq!(Shape::new(&[2, 3, 4]).numel(), 24);
+        assert_eq!(Shape::scalar().numel(), 1);
+        assert_eq!(Shape::new(&[0, 5]).numel(), 0);
+        assert_eq!(Shape::new(&[2, 3]).rank(), 2);
+    }
+
+    #[test]
+    fn broadcast_basic() {
+        let a = Shape::new(&[4, 1]);
+        let b = Shape::new(&[3]);
+        assert_eq!(a.broadcast(&b).unwrap(), Shape::new(&[4, 3]));
+        // paper's example: (b, d) + (d,)
+        let x = Shape::new(&[32, 10]);
+        let bias = Shape::new(&[10]);
+        assert_eq!(x.broadcast(&bias).unwrap(), Shape::new(&[32, 10]));
+    }
+
+    #[test]
+    fn broadcast_scalar() {
+        let a = Shape::new(&[2, 2]);
+        assert_eq!(a.broadcast(&Shape::scalar()).unwrap(), a);
+    }
+
+    #[test]
+    fn broadcast_mismatch_errors() {
+        let a = Shape::new(&[3, 2]);
+        let b = Shape::new(&[4, 2]);
+        assert!(matches!(
+            a.broadcast(&b),
+            Err(Error::BroadcastMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn broadcast_strides_zero_on_expanded_axes() {
+        let b = Shape::new(&[3]);
+        let target = Shape::new(&[4, 3]);
+        let strides = b.broadcast_strides(&[1], &target).unwrap();
+        assert_eq!(strides, vec![0, 1]);
+    }
+
+    #[test]
+    fn broadcast_reduce_axes_identifies_summed_dims() {
+        let b = Shape::new(&[3]);
+        let target = Shape::new(&[4, 3]);
+        assert_eq!(b.broadcast_reduce_axes(&target), vec![0]);
+
+        let k = Shape::new(&[1, 3]);
+        assert_eq!(k.broadcast_reduce_axes(&target), vec![0]);
+
+        let full = Shape::new(&[4, 3]);
+        assert!(full.broadcast_reduce_axes(&target).is_empty());
+    }
+
+    #[test]
+    fn negative_axis_normalization() {
+        let s = Shape::new(&[2, 3, 4]);
+        assert_eq!(s.normalize_axis(-1).unwrap(), 2);
+        assert_eq!(s.normalize_axis(-3).unwrap(), 0);
+        assert!(s.normalize_axis(3).is_err());
+        assert!(s.normalize_axis(-4).is_err());
+    }
+
+    #[test]
+    fn strided_iter_visits_row_major() {
+        let s = Shape::new(&[2, 3]);
+        let offsets: Vec<isize> = StridedIter::new(&s, &[3, 1], 0).collect();
+        assert_eq!(offsets, vec![0, 1, 2, 3, 4, 5]);
+        // transposed view: strides swapped
+        let t: Vec<isize> = StridedIter::new(&Shape::new(&[3, 2]), &[1, 3], 0).collect();
+        assert_eq!(t, vec![0, 3, 1, 4, 2, 5]);
+    }
+
+    #[test]
+    fn strided_iter_broadcast_stride_zero() {
+        let s = Shape::new(&[2, 3]);
+        let offsets: Vec<isize> = StridedIter::new(&s, &[0, 1], 0).collect();
+        assert_eq!(offsets, vec![0, 1, 2, 0, 1, 2]);
+    }
+}

@@ -1,0 +1,224 @@
+//! Tensor constructors: zeros/ones/full/arange/linspace/eye/from_vec and
+//! random initializers (uniform/normal via the engine RNG).
+
+use super::{Storage, Tensor};
+use crate::data::Rng;
+use crate::dtype::DType;
+use crate::error::{Error, Result};
+use crate::shape::Shape;
+
+impl Tensor {
+    /// Build a tensor from a flat row-major buffer and a shape.
+    pub fn from_vec(data: Vec<f32>, dims: &[usize]) -> Result<Tensor> {
+        let shape = Shape::new(dims);
+        if data.len() != shape.numel() {
+            return Err(Error::ReshapeNumel {
+                numel: data.len(),
+                target: dims.to_vec(),
+            });
+        }
+        let strides = shape.contiguous_strides();
+        Ok(Tensor::from_parts(
+            Storage::from_vec(data),
+            shape,
+            strides,
+            0,
+            DType::F32,
+        ))
+    }
+
+    /// Build an i32-tagged tensor (labels / indices).
+    pub fn from_vec_i32(data: Vec<i32>, dims: &[usize]) -> Result<Tensor> {
+        let f: Vec<f32> = data.into_iter().map(|v| v as f32).collect();
+        Ok(Tensor::from_vec(f, dims)?.with_dtype(DType::I32))
+    }
+
+    /// Rank-0 scalar tensor.
+    pub fn scalar(value: f32) -> Tensor {
+        Tensor::from_parts(
+            Storage::from_vec(vec![value]),
+            Shape::scalar(),
+            Vec::new(),
+            0,
+            DType::F32,
+        )
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(dims: &[usize]) -> Tensor {
+        Tensor::full(dims, 0.0)
+    }
+
+    /// All-ones tensor.
+    pub fn ones(dims: &[usize]) -> Tensor {
+        Tensor::full(dims, 1.0)
+    }
+
+    /// Constant-filled tensor.
+    pub fn full(dims: &[usize], value: f32) -> Tensor {
+        let shape = Shape::new(dims);
+        let strides = shape.contiguous_strides();
+        Tensor::from_parts(
+            Storage::full(shape.numel(), value),
+            shape,
+            strides,
+            0,
+            DType::F32,
+        )
+    }
+
+    /// Zeros with the same shape as `other`.
+    pub fn zeros_like(other: &Tensor) -> Tensor {
+        Tensor::zeros(other.dims())
+    }
+
+    /// Ones with the same shape as `other`.
+    pub fn ones_like(other: &Tensor) -> Tensor {
+        Tensor::ones(other.dims())
+    }
+
+    /// `[start, stop)` with unit step, 1-D.
+    pub fn arange(start: f32, stop: f32) -> Tensor {
+        Tensor::arange_step(start, stop, 1.0)
+    }
+
+    /// `[start, stop)` with the given step, 1-D.
+    pub fn arange_step(start: f32, stop: f32, step: f32) -> Tensor {
+        assert!(step != 0.0, "arange step must be nonzero");
+        let n = if (stop - start) / step > 0.0 {
+            ((stop - start) / step).ceil() as usize
+        } else {
+            0
+        };
+        let data: Vec<f32> = (0..n).map(|i| start + i as f32 * step).collect();
+        Tensor::from_vec(data, &[n]).expect("arange shape always matches")
+    }
+
+    /// `n` evenly spaced points over `[start, stop]`, 1-D.
+    pub fn linspace(start: f32, stop: f32, n: usize) -> Tensor {
+        let data: Vec<f32> = if n <= 1 {
+            vec![start]
+        } else {
+            let step = (stop - start) / (n - 1) as f32;
+            (0..n).map(|i| start + i as f32 * step).collect()
+        };
+        let len = data.len();
+        Tensor::from_vec(data, &[len]).expect("linspace shape always matches")
+    }
+
+    /// Identity matrix of size `n`.
+    pub fn eye(n: usize) -> Tensor {
+        let mut data = vec![0.0; n * n];
+        for i in 0..n {
+            data[i * n + i] = 1.0;
+        }
+        Tensor::from_vec(data, &[n, n]).expect("eye shape always matches")
+    }
+
+    /// Uniform samples in `[lo, hi)`.
+    pub fn rand(dims: &[usize], lo: f32, hi: f32, rng: &mut Rng) -> Tensor {
+        let shape = Shape::new(dims);
+        let data: Vec<f32> = (0..shape.numel())
+            .map(|_| lo + (hi - lo) * rng.next_f32())
+            .collect();
+        Tensor::from_vec(data, dims).expect("rand shape always matches")
+    }
+
+    /// Standard-normal samples scaled by `std` around `mean`.
+    pub fn randn(dims: &[usize], mean: f32, std: f32, rng: &mut Rng) -> Tensor {
+        let shape = Shape::new(dims);
+        let data: Vec<f32> = (0..shape.numel())
+            .map(|_| mean + std * rng.next_normal())
+            .collect();
+        Tensor::from_vec(data, dims).expect("randn shape always matches")
+    }
+
+    /// One-hot encode a 1-D i32 label tensor into `[n, classes]`.
+    pub fn one_hot(labels: &Tensor, classes: usize) -> Result<Tensor> {
+        if labels.rank() != 1 {
+            return Err(Error::ShapeMismatch {
+                op: "one_hot",
+                expected: "rank-1 labels".into(),
+                got: format!("rank {}", labels.rank()),
+            });
+        }
+        let n = labels.numel();
+        let mut data = vec![0.0; n * classes];
+        for (i, v) in labels.iter().enumerate() {
+            let c = v as usize;
+            if c >= classes {
+                return Err(Error::IndexOutOfBounds {
+                    index: c,
+                    size: classes,
+                });
+            }
+            data[i * classes + c] = 1.0;
+        }
+        Tensor::from_vec(data, &[n, classes])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_validates_numel() {
+        assert!(Tensor::from_vec(vec![1.0; 5], &[2, 3]).is_err());
+        assert!(Tensor::from_vec(vec![1.0; 6], &[2, 3]).is_ok());
+    }
+
+    #[test]
+    fn fills() {
+        assert_eq!(Tensor::zeros(&[2, 2]).to_vec(), vec![0.0; 4]);
+        assert_eq!(Tensor::ones(&[3]).to_vec(), vec![1.0; 3]);
+        assert_eq!(Tensor::full(&[2], -2.5).to_vec(), vec![-2.5, -2.5]);
+    }
+
+    #[test]
+    fn arange_and_linspace() {
+        assert_eq!(Tensor::arange(0.0, 4.0).to_vec(), vec![0., 1., 2., 3.]);
+        assert_eq!(Tensor::arange_step(1.0, 0.0, -0.5).to_vec(), vec![1.0, 0.5]);
+        assert_eq!(Tensor::linspace(0.0, 1.0, 3).to_vec(), vec![0.0, 0.5, 1.0]);
+        assert_eq!(Tensor::linspace(2.0, 9.0, 1).to_vec(), vec![2.0]);
+    }
+
+    #[test]
+    fn eye_diagonal() {
+        let e = Tensor::eye(3);
+        assert_eq!(e.at(&[1, 1]).unwrap(), 1.0);
+        assert_eq!(e.at(&[0, 2]).unwrap(), 0.0);
+        assert_eq!(e.to_vec().iter().sum::<f32>(), 3.0);
+    }
+
+    #[test]
+    fn rand_within_bounds_and_deterministic() {
+        let mut rng = Rng::new(42);
+        let t = Tensor::rand(&[100], -1.0, 1.0, &mut rng);
+        assert!(t.iter().all(|v| (-1.0..1.0).contains(&v)));
+        let mut rng2 = Rng::new(42);
+        let t2 = Tensor::rand(&[100], -1.0, 1.0, &mut rng2);
+        assert_eq!(t.to_vec(), t2.to_vec());
+    }
+
+    #[test]
+    fn randn_moments_roughly_standard() {
+        let mut rng = Rng::new(7);
+        let t = Tensor::randn(&[10000], 0.0, 1.0, &mut rng);
+        let v = t.to_vec();
+        let mean = v.iter().sum::<f32>() / v.len() as f32;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / v.len() as f32;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn one_hot_encodes() {
+        let labels = Tensor::from_vec_i32(vec![0, 2, 1], &[3]).unwrap();
+        let oh = Tensor::one_hot(&labels, 3).unwrap();
+        assert_eq!(oh.dims(), &[3, 3]);
+        assert_eq!(oh.to_vec(), vec![1., 0., 0., 0., 0., 1., 0., 1., 0.]);
+        let bad = Tensor::from_vec_i32(vec![5], &[1]).unwrap();
+        assert!(Tensor::one_hot(&bad, 3).is_err());
+    }
+}

@@ -1,0 +1,85 @@
+//! Pretty printing of tensors, NumPy-style with truncation for large
+//! tensors.
+
+use super::Tensor;
+
+/// Maximum elements per dimension shown before eliding with `...`.
+const EDGE_ITEMS: usize = 3;
+/// Tensors at or under this numel print in full.
+const FULL_PRINT_LIMIT: usize = 64;
+
+impl std::fmt::Display for Tensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let truncate = self.numel() > FULL_PRINT_LIMIT;
+        fmt_rec(self, f, &mut Vec::new(), truncate)?;
+        write!(f, " {}{}", self.dtype(), self.shape())
+    }
+}
+
+fn fmt_rec(
+    t: &Tensor,
+    f: &mut std::fmt::Formatter<'_>,
+    index: &mut Vec<usize>,
+    truncate: bool,
+) -> std::fmt::Result {
+    let depth = index.len();
+    if depth == t.rank() {
+        let v = t.at(index).map_err(|_| std::fmt::Error)?;
+        return write!(f, "{v:.4}");
+    }
+    let dim = t.dims()[depth];
+    write!(f, "[")?;
+    let mut printed_ellipsis = false;
+    for i in 0..dim {
+        let elide = truncate && dim > 2 * EDGE_ITEMS && i >= EDGE_ITEMS && i < dim - EDGE_ITEMS;
+        if elide {
+            if !printed_ellipsis {
+                write!(f, ", ...")?;
+                printed_ellipsis = true;
+            }
+            continue;
+        }
+        if i > 0 {
+            write!(f, ", ")?;
+        }
+        index.push(i);
+        fmt_rec(t, f, index, truncate)?;
+        index.pop();
+    }
+    write!(f, "]")
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn scalar_display() {
+        let s = format!("{}", Tensor::scalar(1.5));
+        assert!(s.contains("1.5000"), "{s}");
+        assert!(s.contains("float32"), "{s}");
+    }
+
+    #[test]
+    fn matrix_display_nested_brackets() {
+        let t = Tensor::from_vec(vec![1., 2., 3., 4.], &[2, 2]).unwrap();
+        let s = format!("{t}");
+        assert!(s.starts_with("[[1.0000, 2.0000], [3.0000, 4.0000]]"), "{s}");
+        assert!(s.contains("(2, 2)"), "{s}");
+    }
+
+    #[test]
+    fn large_tensor_truncates() {
+        let t = Tensor::zeros(&[100]);
+        let s = format!("{t}");
+        assert!(s.contains("..."), "{s}");
+        assert!(s.len() < 200, "{s}");
+    }
+
+    #[test]
+    fn int_dtype_shown() {
+        let t = Tensor::from_vec_i32(vec![1, 2], &[2]).unwrap();
+        let s = format!("{t}");
+        assert!(s.contains("int32"), "{s}");
+    }
+}

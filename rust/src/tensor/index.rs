@@ -1,0 +1,159 @@
+//! Indexing operations: row gather, index-select, masked select, and the
+//! scatter-add adjoint that backs the Embedding layer's pullback.
+
+use super::Tensor;
+use crate::error::{Error, Result};
+
+impl Tensor {
+    /// Gather rows (axis 0) by an i32 index tensor: `out[i, …] =
+    /// self[idx[i], …]`. This is the embedding-lookup primitive.
+    pub fn index_select0(&self, idx: &Tensor) -> Result<Tensor> {
+        if idx.rank() != 1 {
+            return Err(Error::ShapeMismatch {
+                op: "index_select0",
+                expected: "rank-1 index tensor".into(),
+                got: format!("rank {}", idx.rank()),
+            });
+        }
+        let n_rows = self.dims()[0];
+        let row: usize = self.dims()[1..].iter().product();
+        let src = self.contiguous();
+        let s = src.contiguous_data().unwrap();
+        let mut out = Vec::with_capacity(idx.numel() * row);
+        for v in idx.iter() {
+            let i = v as usize;
+            if i >= n_rows {
+                return Err(Error::IndexOutOfBounds {
+                    index: i,
+                    size: n_rows,
+                });
+            }
+            out.extend_from_slice(&s[i * row..(i + 1) * row]);
+        }
+        let mut dims = self.dims().to_vec();
+        dims[0] = idx.numel();
+        Tensor::from_vec(out, &dims)
+    }
+
+    /// Scatter-add rows of `src` into a zeros tensor of `n_rows` rows:
+    /// `out[idx[i], …] += src[i, …]`. The adjoint of [`Tensor::index_select0`].
+    pub fn scatter_add0(src: &Tensor, idx: &Tensor, n_rows: usize) -> Result<Tensor> {
+        if idx.rank() != 1 || idx.numel() != src.dims()[0] {
+            return Err(Error::ShapeMismatch {
+                op: "scatter_add0",
+                expected: format!("rank-1 index of length {}", src.dims()[0]),
+                got: format!("{:?}", idx.dims()),
+            });
+        }
+        let row: usize = src.dims()[1..].iter().product();
+        let sc = src.contiguous();
+        let s = sc.contiguous_data().unwrap();
+        let mut out = vec![0.0f32; n_rows * row];
+        for (i, v) in idx.iter().enumerate() {
+            let r = v as usize;
+            if r >= n_rows {
+                return Err(Error::IndexOutOfBounds {
+                    index: r,
+                    size: n_rows,
+                });
+            }
+            for j in 0..row {
+                out[r * row + j] += s[i * row + j];
+            }
+        }
+        let mut dims = src.dims().to_vec();
+        dims[0] = n_rows;
+        Tensor::from_vec(out, &dims)
+    }
+
+    /// Keep elements where `mask != 0`, flattened to 1-D.
+    pub fn masked_select(&self, mask: &Tensor) -> Result<Tensor> {
+        if self.dims() != mask.dims() {
+            return Err(Error::ShapeMismatch {
+                op: "masked_select",
+                expected: format!("mask of shape {:?}", self.dims()),
+                got: format!("{:?}", mask.dims()),
+            });
+        }
+        let out: Vec<f32> = self
+            .iter()
+            .zip(mask.iter())
+            .filter(|(_, m)| *m != 0.0)
+            .map(|(v, _)| v)
+            .collect();
+        let n = out.len();
+        Tensor::from_vec(out, &[n])
+    }
+
+    /// Indices (as i32 tensor) where `self != 0`, flattened order.
+    pub fn nonzero(&self) -> Tensor {
+        let out: Vec<f32> = self
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| *v != 0.0)
+            .map(|(i, _)| i as f32)
+            .collect();
+        let n = out.len();
+        Tensor::from_vec(out, &[n])
+            .expect("nonzero shape always matches")
+            .with_dtype(crate::DType::I32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_select_rows() {
+        let t = Tensor::from_vec(vec![1., 2., 3., 4., 5., 6.], &[3, 2]).unwrap();
+        let idx = Tensor::from_vec_i32(vec![2, 0, 2], &[3]).unwrap();
+        let out = t.index_select0(&idx).unwrap();
+        assert_eq!(out.dims(), &[3, 2]);
+        assert_eq!(out.to_vec(), vec![5., 6., 1., 2., 5., 6.]);
+        let bad = Tensor::from_vec_i32(vec![7], &[1]).unwrap();
+        assert!(t.index_select0(&bad).is_err());
+    }
+
+    #[test]
+    fn scatter_add_is_adjoint_of_gather() {
+        // <gather(W, idx), G> == <W, scatter(G, idx)> for random data.
+        let w = Tensor::from_vec(vec![1., 2., 3., 4., 5., 6.], &[3, 2]).unwrap();
+        let idx = Tensor::from_vec_i32(vec![1, 1, 0], &[3]).unwrap();
+        let g = Tensor::from_vec(vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6], &[3, 2]).unwrap();
+        let gathered = w.index_select0(&idx).unwrap();
+        let lhs: f32 = gathered
+            .to_vec()
+            .iter()
+            .zip(g.to_vec())
+            .map(|(a, b)| a * b)
+            .sum();
+        let scattered = Tensor::scatter_add0(&g, &idx, 3).unwrap();
+        let rhs: f32 = w
+            .to_vec()
+            .iter()
+            .zip(scattered.to_vec())
+            .map(|(a, b)| a * b)
+            .sum();
+        assert!((lhs - rhs).abs() < 1e-5);
+    }
+
+    #[test]
+    fn scatter_add_accumulates_duplicates() {
+        let src = Tensor::ones(&[3, 1]);
+        let idx = Tensor::from_vec_i32(vec![0, 0, 1], &[3]).unwrap();
+        let out = Tensor::scatter_add0(&src, &idx, 2).unwrap();
+        assert_eq!(out.to_vec(), vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn masked_select_and_nonzero() {
+        let t = Tensor::from_vec(vec![1., -2., 0., 4.], &[2, 2]).unwrap();
+        let mask = t.gt(&Tensor::zeros(&[2, 2])).unwrap();
+        let sel = t.masked_select(&mask).unwrap();
+        assert_eq!(sel.to_vec(), vec![1., 4.]);
+        let nz = t.nonzero();
+        assert_eq!(nz.to_vec(), vec![0., 1., 3.]);
+        assert!(t.masked_select(&Tensor::zeros(&[4])).is_err());
+    }
+}

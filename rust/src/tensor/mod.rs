@@ -1,0 +1,234 @@
+//! Dense n-dimensional tensors (paper §3.1).
+//!
+//! A [`Tensor`] is a shape + strides + offset view over a shared
+//! [`Storage`] buffer. Freshly constructed tensors are contiguous
+//! row-major; views produced by `reshape`/`transpose`/`slice`/
+//! `broadcast_to` share the buffer and only rewrite metadata.
+
+mod construct;
+mod display;
+mod index;
+pub mod pool;
+mod storage;
+mod view;
+
+pub use storage::Storage;
+
+use crate::dtype::DType;
+use crate::error::Result;
+use crate::shape::{Shape, StridedIter};
+
+/// Dense n-dimensional array over f32-backed storage.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub(crate) storage: Storage,
+    pub(crate) shape: Shape,
+    pub(crate) strides: Vec<isize>,
+    pub(crate) offset: isize,
+    pub(crate) dtype: DType,
+}
+
+impl Tensor {
+    /// Assemble a tensor from raw parts. `strides` must address only valid
+    /// elements of `storage` for every index of `shape` — callers inside
+    /// the crate uphold this.
+    pub(crate) fn from_parts(
+        storage: Storage,
+        shape: Shape,
+        strides: Vec<isize>,
+        offset: isize,
+        dtype: DType,
+    ) -> Tensor {
+        Tensor {
+            storage,
+            shape,
+            strides,
+            offset,
+            dtype,
+        }
+    }
+
+    /// The tensor's shape.
+    #[inline]
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    /// Dimension sizes as a slice.
+    #[inline]
+    pub fn dims(&self) -> &[usize] {
+        self.shape.dims()
+    }
+
+    /// Number of dimensions.
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.shape.rank()
+    }
+
+    /// Total element count.
+    #[inline]
+    pub fn numel(&self) -> usize {
+        self.shape.numel()
+    }
+
+    /// Element dtype tag.
+    #[inline]
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    /// Strides in elements (not bytes).
+    #[inline]
+    pub fn strides(&self) -> &[isize] {
+        &self.strides
+    }
+
+    /// True when the view is contiguous row-major starting at its offset.
+    pub fn is_contiguous(&self) -> bool {
+        self.strides == self.shape.contiguous_strides()
+    }
+
+    /// Fast path: the underlying storage slice for a contiguous view.
+    /// Returns `None` for strided/broadcast views.
+    #[inline]
+    pub fn contiguous_data(&self) -> Option<&[f32]> {
+        if self.is_contiguous() {
+            let start = self.offset as usize;
+            Some(&self.storage.as_slice()[start..start + self.numel()])
+        } else {
+            None
+        }
+    }
+
+    /// Iterate element values in row-major logical order (works for any
+    /// view; prefer [`Tensor::contiguous_data`] in kernels).
+    pub fn iter(&self) -> impl Iterator<Item = f32> + '_ {
+        let data = self.storage.as_slice();
+        StridedIter::new(&self.shape, &self.strides, self.offset).map(move |o| data[o as usize])
+    }
+
+    /// Materialize the logical contents into a fresh `Vec<f32>` in
+    /// row-major order.
+    pub fn to_vec(&self) -> Vec<f32> {
+        match self.contiguous_data() {
+            Some(s) => s.to_vec(),
+            None => self.iter().collect(),
+        }
+    }
+
+    /// Return self if contiguous, otherwise copy into a contiguous tensor.
+    pub fn contiguous(&self) -> Tensor {
+        if self.is_contiguous() {
+            self.clone()
+        } else {
+            Tensor::from_parts(
+                Storage::from_vec(self.to_vec()),
+                self.shape.clone(),
+                self.shape.contiguous_strides(),
+                0,
+                self.dtype,
+            )
+        }
+    }
+
+    /// Read a single element by multi-dimensional index.
+    pub fn at(&self, index: &[usize]) -> Result<f32> {
+        if index.len() != self.rank() {
+            return Err(crate::Error::ShapeMismatch {
+                op: "at",
+                expected: format!("index of rank {}", self.rank()),
+                got: format!("rank {}", index.len()),
+            });
+        }
+        let mut off = self.offset;
+        for (ax, (&i, &d)) in index.iter().zip(self.dims()).enumerate() {
+            if i >= d {
+                return Err(crate::Error::IndexOutOfBounds { index: i, size: d });
+            }
+            off += i as isize * self.strides[ax];
+        }
+        Ok(self.storage.as_slice()[off as usize])
+    }
+
+    /// Extract the value of a one-element tensor.
+    pub fn item(&self) -> Result<f32> {
+        if self.numel() != 1 {
+            return Err(crate::Error::ShapeMismatch {
+                op: "item",
+                expected: "1 element".into(),
+                got: format!("{} elements", self.numel()),
+            });
+        }
+        Ok(self.iter().next().unwrap())
+    }
+
+    /// Retag the dtype without touching data (values must already be valid
+    /// for the target dtype; comparisons produce exact 0.0/1.0 etc.).
+    pub fn with_dtype(mut self, dtype: DType) -> Tensor {
+        self.dtype = dtype;
+        self
+    }
+
+    /// Whether two tensors share the same storage allocation.
+    pub fn shares_storage(&self, other: &Tensor) -> bool {
+        self.storage.ptr_eq(&other.storage)
+    }
+
+    /// Approximate equality between two tensors (shape equal, all elements
+    /// within `atol + rtol*|b|`). The workhorse of the test suite.
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.iter()
+            .zip(other.iter())
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguity_and_to_vec() {
+        let t = Tensor::from_vec(vec![1., 2., 3., 4., 5., 6.], &[2, 3]).unwrap();
+        assert!(t.is_contiguous());
+        assert_eq!(t.to_vec(), vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.transpose(0, 1).unwrap();
+        assert!(!tt.is_contiguous());
+        assert_eq!(tt.to_vec(), vec![1., 4., 2., 5., 3., 6.]);
+        assert!(tt.contiguous().is_contiguous());
+    }
+
+    #[test]
+    fn at_and_item() {
+        let t = Tensor::from_vec(vec![1., 2., 3., 4.], &[2, 2]).unwrap();
+        assert_eq!(t.at(&[1, 0]).unwrap(), 3.0);
+        assert!(t.at(&[2, 0]).is_err());
+        assert!(t.at(&[0]).is_err());
+        assert!(t.item().is_err());
+        assert_eq!(Tensor::scalar(5.0).item().unwrap(), 5.0);
+    }
+
+    #[test]
+    fn views_share_storage() {
+        let t = Tensor::zeros(&[4, 4]);
+        let v = t.reshape(&[16]).unwrap();
+        assert!(t.shares_storage(&v));
+        let c = v.contiguous();
+        assert!(c.shares_storage(&t)); // already contiguous: no copy
+    }
+
+    #[test]
+    fn allclose_detects_mismatch() {
+        let a = Tensor::from_vec(vec![1.0, 2.0], &[2]).unwrap();
+        let b = Tensor::from_vec(vec![1.0, 2.0 + 1e-7], &[2]).unwrap();
+        assert!(a.allclose(&b, 1e-5, 1e-6));
+        let c = Tensor::from_vec(vec![1.0, 3.0], &[2]).unwrap();
+        assert!(!a.allclose(&c, 1e-5, 1e-6));
+        let d = Tensor::from_vec(vec![1.0, 2.0], &[2, 1]).unwrap();
+        assert!(!a.allclose(&d, 1e-5, 1e-6));
+    }
+}

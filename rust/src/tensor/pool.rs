@@ -1,0 +1,101 @@
+//! Thread-local buffer pool for tensor storage.
+//!
+//! Large elementwise chains allocate and free one output buffer per op;
+//! above ~L2 size every allocation becomes a fresh kernel mapping whose
+//! pages are zeroed and soft-faulted on first touch — that, not the
+//! arithmetic, dominated the 1M-element benchmarks (EXPERIMENTS.md §Perf
+//! L3.2). The pool recycles the backing `Vec<f32>`s: [`Storage`] returns
+//! its buffer here when the last reference drops, and the bulk ops
+//! request buffers from here instead of the allocator.
+//!
+//! [`Storage`]: super::Storage
+
+use std::cell::RefCell;
+
+/// Keep at most this many buffers per thread.
+const MAX_POOLED: usize = 16;
+/// Don't pool buffers smaller than this (allocator handles them fine).
+const MIN_BYTES: usize = 1 << 14; // 16 KiB
+/// Cap on total pooled bytes per thread.
+const MAX_TOTAL_BYTES: usize = 256 << 20; // 256 MiB
+
+thread_local! {
+    static POOL: RefCell<Pool> = const {
+        RefCell::new(Pool {
+            buffers: Vec::new(),
+            total_bytes: 0,
+        })
+    };
+}
+
+struct Pool {
+    buffers: Vec<Vec<f32>>,
+    total_bytes: usize,
+}
+
+/// Get a cleared buffer with at least `capacity` elements of capacity.
+/// Reuses a pooled buffer when one fits; the contents are cleared, so
+/// callers `extend`/`push` into it without any zero-fill pass.
+pub fn take(capacity: usize) -> Vec<f32> {
+    POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        if let Some(i) = p.buffers.iter().position(|v| v.capacity() >= capacity) {
+            let mut v = p.buffers.swap_remove(i);
+            p.total_bytes -= v.capacity() * 4;
+            v.clear();
+            return v;
+        }
+        Vec::with_capacity(capacity)
+    })
+}
+
+/// Return a buffer to the pool (no-op for small or overflow buffers).
+pub fn put(v: Vec<f32>) {
+    let bytes = v.capacity() * 4;
+    if bytes < MIN_BYTES {
+        return;
+    }
+    POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        if p.buffers.len() < MAX_POOLED && p.total_bytes + bytes <= MAX_TOTAL_BYTES {
+            p.total_bytes += bytes;
+            p.buffers.push(v);
+        }
+    });
+}
+
+/// Number of buffers currently pooled on this thread (for tests).
+pub fn pooled_count() -> usize {
+    POOL.with(|p| p.borrow().buffers.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_reuses_allocation() {
+        let v = take(10_000);
+        assert!(v.capacity() >= 10_000);
+        let ptr = v.as_ptr();
+        put(v);
+        let v2 = take(10_000);
+        assert_eq!(v2.as_ptr(), ptr, "should reuse the pooled buffer");
+        assert!(v2.is_empty());
+        put(v2);
+    }
+
+    #[test]
+    fn small_buffers_not_pooled() {
+        let before = pooled_count();
+        put(Vec::with_capacity(8));
+        assert_eq!(pooled_count(), before);
+    }
+
+    #[test]
+    fn take_larger_than_pooled_allocates_fresh() {
+        put(Vec::with_capacity(10_000));
+        let v = take(1_000_000);
+        assert!(v.capacity() >= 1_000_000);
+    }
+}

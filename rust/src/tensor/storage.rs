@@ -1,0 +1,117 @@
+//! Reference-counted flat buffers backing tensors.
+//!
+//! The paper's engine stores "a typed buffer and lightweight metadata"
+//! (§3.1). `Storage` is that buffer: a flat `Vec<f32>` behind an `Arc` so
+//! views (reshape/transpose/slice/broadcast) share memory with zero copies.
+//! Gradient buffers are *not* allocated here eagerly — the autograd tape
+//! delays them until a backward pass needs them (§3.5).
+
+use std::sync::Arc;
+
+/// Shared, immutable-once-shared flat buffer of f32 elements.
+///
+/// Mutation is only allowed through [`Storage::make_mut`], which performs
+/// copy-on-write when the buffer is shared — this gives eager PyTorch-like
+/// in-place semantics without aliasing bugs.
+///
+/// When the last reference drops, the backing buffer is recycled through
+/// the thread-local [`pool`](super::pool) instead of returning to the
+/// allocator (large-tensor hot-loop optimization, EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+pub struct Storage {
+    data: Arc<Vec<f32>>,
+}
+
+impl Drop for Storage {
+    fn drop(&mut self) {
+        // Last owner: salvage the allocation for the pool.
+        if let Some(data) = Arc::get_mut(&mut self.data) {
+            super::pool::put(std::mem::take(data));
+        }
+    }
+}
+
+impl Storage {
+    /// Take ownership of a buffer.
+    pub fn from_vec(data: Vec<f32>) -> Storage {
+        Storage {
+            data: Arc::new(data),
+        }
+    }
+
+    /// Allocate `n` zeroed elements.
+    pub fn zeros(n: usize) -> Storage {
+        Storage::from_vec(vec![0.0; n])
+    }
+
+    /// Allocate `n` elements of `value`.
+    pub fn full(n: usize, value: f32) -> Storage {
+        Storage::from_vec(vec![value; n])
+    }
+
+    /// Read access to the raw buffer.
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Number of elements in the underlying buffer (may exceed the numel of
+    /// a view into it).
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the buffer is empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Mutable access with copy-on-write: if another tensor shares this
+    /// buffer the data is cloned first, so in-place ops never alias.
+    pub fn make_mut(&mut self) -> &mut [f32] {
+        Arc::make_mut(&mut self.data).as_mut_slice()
+    }
+
+    /// Whether two storages share the same allocation (used by tests to
+    /// assert zero-copy view behaviour).
+    pub fn ptr_eq(&self, other: &Storage) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clone_is_zero_copy() {
+        let a = Storage::from_vec(vec![1.0, 2.0]);
+        let b = a.clone();
+        assert!(a.ptr_eq(&b));
+    }
+
+    #[test]
+    fn make_mut_copies_on_write_when_shared() {
+        let mut a = Storage::from_vec(vec![1.0, 2.0]);
+        let b = a.clone();
+        a.make_mut()[0] = 9.0;
+        assert!(!a.ptr_eq(&b));
+        assert_eq!(b.as_slice()[0], 1.0);
+        assert_eq!(a.as_slice()[0], 9.0);
+    }
+
+    #[test]
+    fn make_mut_in_place_when_unique() {
+        let mut a = Storage::from_vec(vec![1.0]);
+        let p = a.as_slice().as_ptr();
+        a.make_mut()[0] = 5.0;
+        assert_eq!(a.as_slice().as_ptr(), p);
+    }
+
+    #[test]
+    fn constructors() {
+        assert_eq!(Storage::zeros(3).as_slice(), &[0.0, 0.0, 0.0]);
+        assert_eq!(Storage::full(2, 7.5).as_slice(), &[7.5, 7.5]);
+        assert!(Storage::from_vec(vec![]).is_empty());
+    }
+}

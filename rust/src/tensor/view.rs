@@ -1,0 +1,399 @@
+//! Zero-copy view operations: reshape, permute, transpose, slice, squeeze,
+//! unsqueeze, broadcast_to, narrow. All of these only rewrite metadata
+//! (shape/strides/offset) and share the underlying storage when possible —
+//! the "lightweight metadata" design of paper §3.1.
+
+use super::Tensor;
+use crate::error::{Error, Result};
+use crate::shape::Shape;
+
+impl Tensor {
+    /// Reinterpret the tensor with a new shape of the same numel.
+    ///
+    /// A single `-1`-style inferred dimension is supported via
+    /// [`Tensor::reshape_infer`]. Contiguous tensors reshape with zero
+    /// copies; strided views fall back to one materializing copy.
+    pub fn reshape(&self, dims: &[usize]) -> Result<Tensor> {
+        let target = Shape::new(dims);
+        if target.numel() != self.numel() {
+            return Err(Error::ReshapeNumel {
+                numel: self.numel(),
+                target: dims.to_vec(),
+            });
+        }
+        let base = if self.is_contiguous() {
+            self.clone()
+        } else {
+            self.contiguous()
+        };
+        Ok(Tensor::from_parts(
+            base.storage.clone(),
+            target.clone(),
+            target.contiguous_strides(),
+            base.offset,
+            self.dtype,
+        ))
+    }
+
+    /// Reshape where at most one entry may be `-1` (inferred).
+    pub fn reshape_infer(&self, dims: &[isize]) -> Result<Tensor> {
+        let neg = dims.iter().filter(|&&d| d == -1).count();
+        if neg > 1 {
+            return Err(Error::msg("reshape: at most one dimension may be -1"));
+        }
+        let known: usize = dims.iter().filter(|&&d| d != -1).map(|&d| d as usize).product();
+        let resolved: Vec<usize> = dims
+            .iter()
+            .map(|&d| {
+                if d == -1 {
+                    if known == 0 {
+                        0
+                    } else {
+                        self.numel() / known
+                    }
+                } else {
+                    d as usize
+                }
+            })
+            .collect();
+        self.reshape(&resolved)
+    }
+
+    /// Flatten to 1-D.
+    pub fn flatten(&self) -> Result<Tensor> {
+        self.reshape(&[self.numel()])
+    }
+
+    /// Permute dimensions. `perm` must be a permutation of `0..rank`.
+    pub fn permute(&self, perm: &[usize]) -> Result<Tensor> {
+        if perm.len() != self.rank() {
+            return Err(Error::ShapeMismatch {
+                op: "permute",
+                expected: format!("permutation of length {}", self.rank()),
+                got: format!("length {}", perm.len()),
+            });
+        }
+        let mut seen = vec![false; self.rank()];
+        for &p in perm {
+            if p >= self.rank() || seen[p] {
+                return Err(Error::msg(format!("permute: invalid permutation {perm:?}")));
+            }
+            seen[p] = true;
+        }
+        let dims: Vec<usize> = perm.iter().map(|&p| self.dims()[p]).collect();
+        let strides: Vec<isize> = perm.iter().map(|&p| self.strides[p]).collect();
+        Ok(Tensor::from_parts(
+            self.storage.clone(),
+            Shape::new(&dims),
+            strides,
+            self.offset,
+            self.dtype,
+        ))
+    }
+
+    /// Swap two axes (negative axes allowed).
+    pub fn transpose(&self, a: isize, b: isize) -> Result<Tensor> {
+        let a = self.shape.normalize_axis(a)?;
+        let b = self.shape.normalize_axis(b)?;
+        let mut perm: Vec<usize> = (0..self.rank()).collect();
+        perm.swap(a, b);
+        self.permute(&perm)
+    }
+
+    /// Matrix transpose of a 2-D tensor.
+    pub fn t(&self) -> Result<Tensor> {
+        if self.rank() != 2 {
+            return Err(Error::ShapeMismatch {
+                op: "t",
+                expected: "rank 2".into(),
+                got: format!("rank {}", self.rank()),
+            });
+        }
+        self.transpose(0, 1)
+    }
+
+    /// Remove all size-1 dimensions (or a specific one with
+    /// [`Tensor::squeeze_axis`]).
+    pub fn squeeze(&self) -> Tensor {
+        let mut dims = Vec::new();
+        let mut strides = Vec::new();
+        for (i, &d) in self.dims().iter().enumerate() {
+            if d != 1 {
+                dims.push(d);
+                strides.push(self.strides[i]);
+            }
+        }
+        Tensor::from_parts(
+            self.storage.clone(),
+            Shape::new(&dims),
+            strides,
+            self.offset,
+            self.dtype,
+        )
+    }
+
+    /// Remove one size-1 dimension.
+    pub fn squeeze_axis(&self, axis: isize) -> Result<Tensor> {
+        let ax = self.shape.normalize_axis(axis)?;
+        if self.dims()[ax] != 1 {
+            return Err(Error::ShapeMismatch {
+                op: "squeeze_axis",
+                expected: "dimension of size 1".into(),
+                got: format!("size {}", self.dims()[ax]),
+            });
+        }
+        let mut dims = self.dims().to_vec();
+        let mut strides = self.strides.clone();
+        dims.remove(ax);
+        strides.remove(ax);
+        Ok(Tensor::from_parts(
+            self.storage.clone(),
+            Shape::new(&dims),
+            strides,
+            self.offset,
+            self.dtype,
+        ))
+    }
+
+    /// Insert a size-1 dimension at `axis` (0..=rank).
+    pub fn unsqueeze(&self, axis: isize) -> Result<Tensor> {
+        let rank = self.rank() as isize;
+        let ax = if axis < 0 { axis + rank + 1 } else { axis };
+        if ax < 0 || ax > rank {
+            return Err(Error::AxisOutOfRange {
+                axis,
+                rank: self.rank(),
+            });
+        }
+        let ax = ax as usize;
+        let mut dims = self.dims().to_vec();
+        let mut strides = self.strides.clone();
+        dims.insert(ax, 1);
+        strides.insert(ax, 0);
+        Ok(Tensor::from_parts(
+            self.storage.clone(),
+            Shape::new(&dims),
+            strides,
+            self.offset,
+            self.dtype,
+        ))
+    }
+
+    /// Zero-copy broadcast view to `target` (stride-0 on expanded axes).
+    pub fn broadcast_to(&self, dims: &[usize]) -> Result<Tensor> {
+        let target = Shape::new(dims);
+        let strides = self.shape.broadcast_strides(&self.strides, &target)?;
+        Ok(Tensor::from_parts(
+            self.storage.clone(),
+            target,
+            strides,
+            self.offset,
+            self.dtype,
+        ))
+    }
+
+    /// View of `len` indices starting at `start` along `axis`.
+    pub fn narrow(&self, axis: isize, start: usize, len: usize) -> Result<Tensor> {
+        let ax = self.shape.normalize_axis(axis)?;
+        let size = self.dims()[ax];
+        if start + len > size {
+            return Err(Error::IndexOutOfBounds {
+                index: start + len,
+                size,
+            });
+        }
+        let mut dims = self.dims().to_vec();
+        dims[ax] = len;
+        Ok(Tensor::from_parts(
+            self.storage.clone(),
+            Shape::new(&dims),
+            self.strides.clone(),
+            self.offset + start as isize * self.strides[ax],
+            self.dtype,
+        ))
+    }
+
+    /// Select one index along `axis`, dropping that axis.
+    pub fn select(&self, axis: isize, index: usize) -> Result<Tensor> {
+        let ax = self.shape.normalize_axis(axis)?;
+        self.narrow(axis, index, 1)?.squeeze_axis(ax as isize)
+    }
+
+    /// Row `i` of a rank-≥1 tensor (alias for `select(0, i)`).
+    pub fn row(&self, i: usize) -> Result<Tensor> {
+        self.select(0, i)
+    }
+
+    /// Concatenate tensors along `axis` (copies; not a view).
+    pub fn cat(tensors: &[&Tensor], axis: isize) -> Result<Tensor> {
+        if tensors.is_empty() {
+            return Err(Error::msg("cat: need at least one tensor"));
+        }
+        let first = tensors[0];
+        let ax = first.shape.normalize_axis(axis)?;
+        let mut cat_dim = 0usize;
+        for t in tensors {
+            if t.rank() != first.rank() {
+                return Err(Error::ShapeMismatch {
+                    op: "cat",
+                    expected: format!("rank {}", first.rank()),
+                    got: format!("rank {}", t.rank()),
+                });
+            }
+            for (i, (&a, &b)) in t.dims().iter().zip(first.dims()).enumerate() {
+                if i != ax && a != b {
+                    return Err(Error::ShapeMismatch {
+                        op: "cat",
+                        expected: format!("{:?} (except axis {ax})", first.dims()),
+                        got: format!("{:?}", t.dims()),
+                    });
+                }
+            }
+            cat_dim += t.dims()[ax];
+        }
+        let mut out_dims = first.dims().to_vec();
+        out_dims[ax] = cat_dim;
+        let out_shape = Shape::new(&out_dims);
+
+        // Copy slice-by-slice: iterate the leading (pre-axis) index space,
+        // and for each, append each tensor's trailing block.
+        let lead: usize = first.dims()[..ax].iter().product();
+        let mut data = Vec::with_capacity(out_shape.numel());
+        let contigs: Vec<Tensor> = tensors.iter().map(|t| t.contiguous()).collect();
+        for l in 0..lead {
+            for t in &contigs {
+                let tail: usize = t.dims()[ax..].iter().product();
+                let s = t.contiguous_data().unwrap();
+                data.extend_from_slice(&s[l * tail..(l + 1) * tail]);
+            }
+        }
+        Tensor::from_vec(data, &out_dims)
+    }
+
+    /// Stack tensors of identical shape along a new leading axis.
+    pub fn stack(tensors: &[&Tensor], axis: isize) -> Result<Tensor> {
+        let unsq: Vec<Tensor> = tensors
+            .iter()
+            .map(|t| t.unsqueeze(axis))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&Tensor> = unsq.iter().collect();
+        Tensor::cat(&refs, axis)
+    }
+
+    /// Split into equal chunks along `axis`.
+    pub fn chunk(&self, chunks: usize, axis: isize) -> Result<Vec<Tensor>> {
+        let ax = self.shape.normalize_axis(axis)?;
+        let size = self.dims()[ax];
+        if chunks == 0 || size % chunks != 0 {
+            return Err(Error::msg(format!(
+                "chunk: cannot split size {size} into {chunks} equal chunks"
+            )));
+        }
+        let step = size / chunks;
+        (0..chunks)
+            .map(|i| self.narrow(ax as isize, i * step, step))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t23() -> Tensor {
+        Tensor::from_vec(vec![1., 2., 3., 4., 5., 6.], &[2, 3]).unwrap()
+    }
+
+    #[test]
+    fn reshape_zero_copy_when_contiguous() {
+        let t = t23();
+        let r = t.reshape(&[3, 2]).unwrap();
+        assert!(t.shares_storage(&r));
+        assert_eq!(r.to_vec(), t.to_vec());
+        assert!(t.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn reshape_infer() {
+        let t = t23();
+        assert_eq!(t.reshape_infer(&[-1]).unwrap().dims(), &[6]);
+        assert_eq!(t.reshape_infer(&[3, -1]).unwrap().dims(), &[3, 2]);
+        assert!(t.reshape_infer(&[-1, -1]).is_err());
+    }
+
+    #[test]
+    fn permute_and_transpose() {
+        let t = t23();
+        let p = t.permute(&[1, 0]).unwrap();
+        assert_eq!(p.dims(), &[3, 2]);
+        assert_eq!(p.at(&[2, 1]).unwrap(), 6.0);
+        assert!(t.permute(&[0, 0]).is_err());
+        assert!(t.permute(&[0]).is_err());
+        let tt = t.t().unwrap();
+        assert_eq!(tt.to_vec(), vec![1., 4., 2., 5., 3., 6.]);
+        assert!(Tensor::zeros(&[2]).t().is_err());
+    }
+
+    #[test]
+    fn squeeze_unsqueeze_roundtrip() {
+        let t = Tensor::zeros(&[1, 3, 1]);
+        assert_eq!(t.squeeze().dims(), &[3]);
+        assert_eq!(t.squeeze_axis(0).unwrap().dims(), &[3, 1]);
+        assert!(t.squeeze_axis(1).is_err());
+        let u = t.squeeze().unsqueeze(0).unwrap();
+        assert_eq!(u.dims(), &[1, 3]);
+        let v = t.squeeze().unsqueeze(-1).unwrap();
+        assert_eq!(v.dims(), &[3, 1]);
+    }
+
+    #[test]
+    fn broadcast_to_is_zero_copy() {
+        let b = Tensor::from_vec(vec![1., 2., 3.], &[3]).unwrap();
+        let big = b.broadcast_to(&[4, 3]).unwrap();
+        assert!(b.shares_storage(&big));
+        assert_eq!(big.numel(), 12);
+        assert_eq!(big.at(&[3, 2]).unwrap(), 3.0);
+        assert!(b.broadcast_to(&[4, 5]).is_err());
+    }
+
+    #[test]
+    fn narrow_select_row() {
+        let t = t23();
+        let n = t.narrow(1, 1, 2).unwrap();
+        assert_eq!(n.to_vec(), vec![2., 3., 5., 6.]);
+        assert!(t.narrow(1, 2, 2).is_err());
+        let r = t.row(1).unwrap();
+        assert_eq!(r.to_vec(), vec![4., 5., 6.]);
+        let c = t.select(1, 0).unwrap();
+        assert_eq!(c.to_vec(), vec![1., 4.]);
+    }
+
+    #[test]
+    fn cat_and_stack() {
+        let a = Tensor::from_vec(vec![1., 2.], &[1, 2]).unwrap();
+        let b = Tensor::from_vec(vec![3., 4.], &[1, 2]).unwrap();
+        let c = Tensor::cat(&[&a, &b], 0).unwrap();
+        assert_eq!(c.dims(), &[2, 2]);
+        assert_eq!(c.to_vec(), vec![1., 2., 3., 4.]);
+        let d = Tensor::cat(&[&a, &b], 1).unwrap();
+        assert_eq!(d.dims(), &[1, 4]);
+
+        let x = Tensor::from_vec(vec![1., 2.], &[2]).unwrap();
+        let y = Tensor::from_vec(vec![3., 4.], &[2]).unwrap();
+        let s = Tensor::stack(&[&x, &y], 0).unwrap();
+        assert_eq!(s.dims(), &[2, 2]);
+        assert_eq!(s.to_vec(), vec![1., 2., 3., 4.]);
+
+        let bad = Tensor::zeros(&[2, 3]);
+        assert!(Tensor::cat(&[&a, &bad], 0).is_err());
+    }
+
+    #[test]
+    fn chunk_splits_evenly() {
+        let t = Tensor::arange(0.0, 6.0).reshape(&[6, 1]).unwrap();
+        let parts = t.chunk(3, 0).unwrap();
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[1].to_vec(), vec![2., 3.]);
+        assert!(t.chunk(4, 0).is_err());
+    }
+}

@@ -1,0 +1,361 @@
+//! Cross-module integration tests: end-to-end training, serving, layer
+//! composition, and engine-vs-baseline agreement — the paper's §5
+//! "end-to-end examples that train small models and confirm consistent
+//! loss descent".
+
+use minitensor::autograd::{gradcheck, Var};
+use minitensor::baselines::NaiveTensor;
+use minitensor::coordinator::{
+    Config, InferenceServer, NativeBatchModel, ServeConfig, TrainConfig, Trainer,
+};
+use minitensor::data::{self, DataLoader, Rng};
+use minitensor::nn::{losses, Activation, BatchNorm1d, Conv2d, Dense, Dropout, Module, Sequential};
+use minitensor::optim::{Adam, Optimizer, Sgd};
+use minitensor::tensor::Tensor;
+
+#[test]
+fn train_mlp_on_blobs_reaches_high_accuracy() {
+    let cfg = Config::parse(
+        "[train]\ndataset = blobs\nn_examples = 512\ninput_side = 2\nhidden = 32\nclasses = 4\nsteps = 150\nbatch_size = 64\nlr = 0.005\noptimizer = adam\n",
+    )
+    .unwrap();
+    let tc = TrainConfig::from_config(&cfg).unwrap();
+    let report = Trainer::new(tc).run().unwrap();
+    assert!(report.descended(1.5), "{report:?}");
+    assert!(report.accuracy.unwrap() > 0.9, "{report:?}");
+}
+
+#[test]
+fn train_spiral_with_sgd_momentum() {
+    let cfg = Config::parse(
+        "[train]\ndataset = spiral\nn_examples = 300\nclasses = 3\nhidden = 32,16\nsteps = 200\nbatch_size = 50\nlr = 0.05\noptimizer = sgd\nmomentum = 0.9\n",
+    )
+    .unwrap();
+    let tc = TrainConfig::from_config(&cfg).unwrap();
+    let report = Trainer::new(tc).run().unwrap();
+    assert!(
+        report.final_loss < report.initial_loss,
+        "spiral loss should descend: {report:?}"
+    );
+}
+
+#[test]
+fn regression_with_mse_converges_to_ground_truth() {
+    // y = x·w* + b*; a linear model must recover it almost exactly.
+    let ds = data::regression_linear(512, 4, 0.01, 3);
+    let mut rng = Rng::new(4);
+    let layer = Dense::new(4, 1, &mut rng);
+    let mut opt = Adam::new(layer.parameters(), 0.05);
+    let mut loader = DataLoader::new(ds.clone(), 64, true, 1);
+    let mut final_loss = f32::INFINITY;
+    for _ in 0..300 {
+        let Some(batch) = loader.next() else {
+            loader.reset();
+            continue;
+        };
+        let x = Var::from_tensor(batch.x, false);
+        let pred = layer.forward(&x, true).unwrap();
+        let loss = losses::mse(&pred, &batch.y).unwrap();
+        final_loss = loss.item().unwrap();
+        opt.zero_grad();
+        loss.backward().unwrap();
+        opt.step().unwrap();
+    }
+    assert!(final_loss < 0.01, "final mse {final_loss}");
+}
+
+#[test]
+fn cnn_stack_trains_on_synthetic_images() {
+    // Tiny conv net on 8×8 synthetic digits: conv→relu→pool→dense.
+    let mut rng = Rng::new(5);
+    let ds = data::synthetic_mnist(128, 8, 6);
+    let conv = Conv2d::new(1, 4, 3, 1, 1, &mut rng);
+    let head = Dense::new(4 * 4 * 4, 10, &mut rng);
+
+    let mut params = conv.parameters();
+    params.extend(head.parameters());
+    let mut opt = Adam::new(params, 2e-3);
+
+    let mut losses_log = Vec::new();
+    let mut loader = DataLoader::new(ds, 32, true, 7).drop_last();
+    for _ in 0..40 {
+        let Some(batch) = loader.next() else {
+            loader.reset();
+            continue;
+        };
+        let b = batch.x.dims()[0];
+        let img = Var::from_tensor(batch.x.reshape(&[b, 1, 8, 8]).unwrap(), false);
+        let c = conv.forward(&img, true).unwrap().relu();
+        let p = c.max_pool2d(2).unwrap(); // [b,4,4,4]
+        let flat = p.reshape(&[b, 4 * 4 * 4]).unwrap();
+        let logits = head.forward(&flat, true).unwrap();
+        let loss = losses::cross_entropy(&logits, &batch.y).unwrap();
+        losses_log.push(loss.item().unwrap());
+        opt.zero_grad();
+        loss.backward().unwrap();
+        opt.step().unwrap();
+    }
+    let first = losses_log[0];
+    let last = *losses_log.last().unwrap();
+    assert!(last < first, "cnn loss descend: {first} -> {last}");
+}
+
+#[test]
+fn deep_stack_with_batchnorm_dropout_trains() {
+    let mut rng = Rng::new(8);
+    let model = Sequential::new()
+        .add(Dense::new(2, 32, &mut rng))
+        .add(BatchNorm1d::new(32))
+        .add(Activation::Relu)
+        .add(Dropout::new(0.2, 9))
+        .add(Dense::new(32, 2, &mut rng));
+    let ds = data::two_moons(256, 0.1, 10);
+    let mut opt = Adam::new(model.parameters(), 5e-3);
+    let mut loader = DataLoader::new(ds.clone(), 64, true, 11).drop_last();
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..100 {
+        let Some(batch) = loader.next() else {
+            loader.reset();
+            continue;
+        };
+        let x = Var::from_tensor(batch.x, false);
+        let logits = model.forward(&x, true).unwrap();
+        let loss = losses::cross_entropy(&logits, &batch.y).unwrap();
+        last = loss.item().unwrap();
+        first.get_or_insert(last);
+        opt.zero_grad();
+        loss.backward().unwrap();
+        opt.step().unwrap();
+    }
+    assert!(last < first.unwrap(), "{:?} -> {last}", first);
+
+    // Eval mode must be deterministic (dropout off, running stats).
+    let x = Var::from_tensor(ds.x.narrow(0, 0, 8).unwrap().contiguous(), false);
+    let a = model.forward(&x, false).unwrap().data().to_vec();
+    let b = model.forward(&x, false).unwrap().data().to_vec();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn whole_model_gradcheck() {
+    // Finite differences through a 2-layer MLP + CE loss (eq 11 at system
+    // level, not just per-op).
+    let mut rng = Rng::new(12);
+    let model = Sequential::new()
+        .add(Dense::new(3, 8, &mut rng))
+        .add(Activation::Tanh)
+        .add(Dense::new(8, 3, &mut rng));
+    let labels = Tensor::from_vec_i32(vec![0, 2, 1, 0], &[4]).unwrap();
+    let x0 = Tensor::randn(&[4, 3], 0.0, 1.0, &mut rng);
+    let report = gradcheck(
+        |v| {
+            let logits = model.forward(v, true)?;
+            losses::cross_entropy(&logits, &labels)
+        },
+        &x0,
+        1e-3,
+        1e-2,
+    )
+    .unwrap();
+    assert!(report.pass, "{report:?}");
+}
+
+#[test]
+fn serving_trained_model_end_to_end() {
+    // Train on moons, then serve and check classification through the
+    // batching server matches direct inference.
+    let cfg = Config::parse(
+        "[train]\ndataset = moons\nn_examples = 256\nclasses = 2\nhidden = 16\nsteps = 150\nbatch_size = 64\nlr = 0.01\noptimizer = adam\n",
+    )
+    .unwrap();
+    let tc = TrainConfig::from_config(&cfg).unwrap();
+    let trainer = Trainer::new(tc);
+    let ds = trainer.dataset().unwrap();
+    let model = trainer.build_model(2, 2);
+    // quick manual training so we keep the model afterwards
+    let mut opt = Adam::new(model.parameters(), 0.01);
+    let mut loader = DataLoader::new(ds.clone(), 64, true, 1).drop_last();
+    for _ in 0..150 {
+        let Some(batch) = loader.next() else {
+            loader.reset();
+            continue;
+        };
+        let x = Var::from_tensor(batch.x, false);
+        let loss =
+            losses::cross_entropy(&model.forward(&x, true).unwrap(), &batch.y).unwrap();
+        opt.zero_grad();
+        loss.backward().unwrap();
+        opt.step().unwrap();
+    }
+
+    let server = InferenceServer::start(
+        Box::new(NativeBatchModel::new(model, 2)),
+        ServeConfig::default(),
+    );
+    let mut correct = 0;
+    let n = 64;
+    for i in 0..n {
+        let feats = ds.x.row(i).unwrap().to_vec();
+        let label = ds.y.at(&[i]).unwrap() as usize;
+        let logits = server.infer(feats).unwrap();
+        let pred = if logits[1] > logits[0] { 1 } else { 0 };
+        if pred == label {
+            correct += 1;
+        }
+    }
+    assert!(correct >= 55, "served accuracy {correct}/{n}");
+    let stats = server.stats();
+    assert_eq!(stats.requests, n as u64);
+    server.shutdown();
+}
+
+#[test]
+fn engine_and_naive_baseline_agree_on_mlp_forward() {
+    // The C2 baseline must be numerically equivalent, just slow.
+    let mut rng = Rng::new(13);
+    let x = Tensor::randn(&[4, 6], 0.0, 1.0, &mut rng);
+    let w = Tensor::randn(&[6, 3], 0.0, 1.0, &mut rng);
+    let engine_out = x.matmul(&w).unwrap().relu();
+
+    let nx = NaiveTensor::from_vec(&x.to_vec(), &[4, 6]);
+    let nw = NaiveTensor::from_vec(&w.to_vec(), &[6, 3]);
+    let naive_out = nx.matmul(&nw).relu();
+    for (a, b) in engine_out.to_vec().iter().zip(naive_out.values()) {
+        assert!((a - b).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn optimizer_comparison_all_converge_on_same_problem() {
+    // eq 9 vs eq 10 vs RMSprop on the same quadratic bowl.
+    for name in ["sgd", "adam", "rmsprop"] {
+        let p = Var::from_tensor(
+            Tensor::from_vec(vec![2.0, -1.5, 0.5], &[3]).unwrap(),
+            true,
+        );
+        let mut opt: Box<dyn Optimizer> = match name {
+            "sgd" => Box::new(Sgd::with_momentum(vec![p.clone()], 0.1, 0.9, 0.0)),
+            "adam" => Box::new(Adam::new(vec![p.clone()], 0.1)),
+            _ => Box::new(minitensor::optim::RmsProp::new(vec![p.clone()], 0.05, 0.9)),
+        };
+        for _ in 0..200 {
+            opt.zero_grad();
+            p.square().sum().unwrap().backward().unwrap();
+            opt.step().unwrap();
+        }
+        let norm: f32 = p.data().to_vec().iter().map(|v| v * v).sum();
+        assert!(norm < 1e-2, "{name} failed to converge: {norm}");
+    }
+}
+
+#[test]
+fn train_save_load_serve_workflow() {
+    // The full downstream-user loop: train → checkpoint → fresh model →
+    // load → serve; the served outputs must match the trained model.
+    let mut rng = Rng::new(21);
+    let ds = data::gaussian_blobs(256, 4, 3, 0.4, 22);
+    let build = |rng: &mut Rng| {
+        Sequential::new()
+            .add(Dense::new(4, 16, rng))
+            .add(Activation::Relu)
+            .add(Dense::new(16, 3, rng))
+    };
+    let model = build(&mut rng);
+    let mut opt = Adam::new(model.parameters(), 0.01);
+    let mut loader = DataLoader::new(ds.clone(), 64, true, 23).drop_last();
+    for _ in 0..80 {
+        let Some(batch) = loader.next() else {
+            loader.reset();
+            continue;
+        };
+        let x = Var::from_tensor(batch.x, false);
+        let loss =
+            losses::cross_entropy(&model.forward(&x, true).unwrap(), &batch.y).unwrap();
+        opt.zero_grad();
+        loss.backward().unwrap();
+        opt.step().unwrap();
+    }
+    let path = std::env::temp_dir().join(format!("mt_ckpt_{}", std::process::id()));
+    minitensor::nn::save_parameters(&model.parameters(), &path).unwrap();
+
+    // Fresh model, different init; load the checkpoint, then serve it.
+    let model2 = build(&mut rng);
+    minitensor::nn::load_parameters(&model2.parameters(), &path).unwrap();
+    let expect = model
+        .forward(&Var::from_tensor(ds.x.row(0).unwrap().reshape(&[1, 4]).unwrap(), false), false)
+        .unwrap()
+        .data()
+        .to_vec();
+    let server = InferenceServer::start(
+        Box::new(NativeBatchModel::new(model2, 4)),
+        ServeConfig::default(),
+    );
+    let got = server.infer(ds.x.row(0).unwrap().to_vec()).unwrap();
+    for (g, e) in got.iter().zip(&expect) {
+        assert!((g - e).abs() < 1e-5, "served {g} vs trained {e}");
+    }
+    server.shutdown();
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn embedding_attention_pipeline_trains() {
+    // Embedding + recorded mean-pool + Dense on a token task (the
+    // examples/train_seq.rs pipeline, condensed).
+    use minitensor::nn::Embedding;
+    use minitensor::optim::{clip_grad_norm, AdaGrad};
+    let mut rng = Rng::new(31);
+    let emb = Embedding::new(16, 8, &mut rng);
+    let head = Dense::new(8, 2, &mut rng);
+    let mut params = emb.parameters();
+    params.extend(head.parameters());
+    let mut opt = AdaGrad::new(params.clone(), 0.2);
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..120 {
+        // class c sequences contain token c (0/1); fillers from 2..16
+        let mut ids = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..32 {
+            let c = (i % 2) as i32;
+            for s in 0..4 {
+                ids.push(if s == 0 { c } else { 2 + ((i * 7 + s) % 14) as i32 });
+            }
+            labels.push(c);
+        }
+        let ids = Tensor::from_vec_i32(ids, &[32 * 4]).unwrap();
+        let labels = Tensor::from_vec_i32(labels, &[32]).unwrap();
+        let tokens = emb.lookup(&ids).unwrap();
+        let pooled = tokens
+            .reshape(&[32, 4, 8])
+            .unwrap()
+            .mean_axis(1, false)
+            .unwrap();
+        let loss =
+            losses::cross_entropy(&head.forward(&pooled, true).unwrap(), &labels).unwrap();
+        last = loss.item().unwrap();
+        first.get_or_insert(last);
+        opt.zero_grad();
+        loss.backward().unwrap();
+        clip_grad_norm(&params, 10.0).unwrap();
+        opt.step().unwrap();
+    }
+    assert!(
+        last < first.unwrap() * 0.5,
+        "embedding pipeline should learn: {:?} -> {last}",
+        first
+    );
+}
+
+#[test]
+fn loss_curve_reproducible_from_seed() {
+    let cfg = Config::parse(
+        "[train]\ndataset = blobs\nn_examples = 128\ninput_side = 2\nhidden = 8\nclasses = 2\nsteps = 30\nbatch_size = 32\nseed = 99\n",
+    )
+    .unwrap();
+    let tc = TrainConfig::from_config(&cfg).unwrap();
+    let r1 = Trainer::new(tc.clone()).run().unwrap();
+    let r2 = Trainer::new(tc).run().unwrap();
+    assert_eq!(r1.losses, r2.losses, "same seed must reproduce the curve");
+}

@@ -1,0 +1,274 @@
+//! Property-based tests (hand-rolled generator; proptest is not in the
+//! offline vendor set). Each property is checked over many random
+//! shapes/values from a seeded RNG — shrinking is approximated by testing
+//! small shapes first.
+//!
+//! Invariants covered: broadcasting algebra, view round-trips, reduction
+//! linearity, matmul algebra, autograd-vs-finite-difference on random
+//! expressions, softmax simplex properties, and optimizer descent.
+
+use minitensor::autograd::{gradcheck, Var};
+use minitensor::data::Rng;
+use minitensor::tensor::Tensor;
+
+/// Random shape with rank 1..=4, numel ≤ 512 (small first).
+fn random_shape(rng: &mut Rng, case: usize) -> Vec<usize> {
+    let rank = 1 + (case % 4).min(rng.next_below(4) as usize);
+    let budget = if case < 8 { 8 } else { 512 };
+    let mut dims = Vec::with_capacity(rank);
+    let mut numel = 1usize;
+    for _ in 0..rank {
+        let max = (budget / numel).max(1).min(8);
+        let d = 1 + rng.next_below(max as u32) as usize;
+        dims.push(d);
+        numel *= d;
+    }
+    dims
+}
+
+fn random_tensor(rng: &mut Rng, dims: &[usize]) -> Tensor {
+    Tensor::randn(dims, 0.0, 1.0, rng)
+}
+
+#[test]
+fn prop_add_commutative_and_associative() {
+    let mut rng = Rng::new(100);
+    for case in 0..50 {
+        let dims = random_shape(&mut rng, case);
+        let a = random_tensor(&mut rng, &dims);
+        let b = random_tensor(&mut rng, &dims);
+        let c = random_tensor(&mut rng, &dims);
+        let ab = a.add(&b).unwrap();
+        let ba = b.add(&a).unwrap();
+        assert!(ab.allclose(&ba, 1e-6, 1e-6), "commutativity at {dims:?}");
+        let left = ab.add(&c).unwrap();
+        let right = a.add(&b.add(&c).unwrap()).unwrap();
+        assert!(left.allclose(&right, 1e-4, 1e-4), "associativity at {dims:?}");
+    }
+}
+
+#[test]
+fn prop_mul_distributes_over_add() {
+    let mut rng = Rng::new(101);
+    for case in 0..50 {
+        let dims = random_shape(&mut rng, case);
+        let a = random_tensor(&mut rng, &dims);
+        let b = random_tensor(&mut rng, &dims);
+        let c = random_tensor(&mut rng, &dims);
+        let left = a.mul(&b.add(&c).unwrap()).unwrap();
+        let right = a.mul(&b).unwrap().add(&a.mul(&c).unwrap()).unwrap();
+        assert!(left.allclose(&right, 1e-4, 1e-4), "{dims:?}");
+    }
+}
+
+#[test]
+fn prop_broadcast_equals_materialized() {
+    // x op broadcast(b) == x op materialize(broadcast(b)) for all ops.
+    let mut rng = Rng::new(102);
+    for _case in 0..40 {
+        let rows = 1 + rng.next_below(6) as usize;
+        let cols = 1 + rng.next_below(6) as usize;
+        let x = random_tensor(&mut rng, &[rows, cols]);
+        let b = random_tensor(&mut rng, &[cols]);
+        let virt = x.add(&b).unwrap();
+        let mat = x
+            .add(&b.broadcast_to(&[rows, cols]).unwrap().contiguous())
+            .unwrap();
+        assert!(virt.allclose(&mat, 1e-6, 1e-6));
+    }
+}
+
+#[test]
+fn prop_reshape_transpose_roundtrip_preserves_values() {
+    let mut rng = Rng::new(103);
+    for case in 0..50 {
+        let dims = random_shape(&mut rng, case);
+        let t = random_tensor(&mut rng, &dims);
+        // flatten → reshape back
+        let rt = t.flatten().unwrap().reshape(&dims).unwrap();
+        assert_eq!(rt.to_vec(), t.to_vec());
+        // double transpose is identity (rank ≥ 2)
+        if dims.len() >= 2 {
+            let tt = t.transpose(0, 1).unwrap().transpose(0, 1).unwrap();
+            assert_eq!(tt.to_vec(), t.to_vec());
+        }
+    }
+}
+
+#[test]
+fn prop_sum_axis_composition_equals_total_sum() {
+    // Reducing every axis one at a time equals the full reduction.
+    let mut rng = Rng::new(104);
+    for case in 0..40 {
+        let dims = random_shape(&mut rng, case);
+        let t = random_tensor(&mut rng, &dims);
+        let total = t.sum().item().unwrap();
+        let mut cur = t.clone();
+        while cur.rank() > 0 {
+            cur = cur.sum_axis(0, false).unwrap();
+        }
+        let via_axes = cur.item().unwrap();
+        assert!(
+            (total - via_axes).abs() <= 1e-3 * total.abs().max(1.0),
+            "{dims:?}: {total} vs {via_axes}"
+        );
+    }
+}
+
+#[test]
+fn prop_mean_is_sum_over_numel() {
+    let mut rng = Rng::new(105);
+    for case in 0..30 {
+        let dims = random_shape(&mut rng, case);
+        let t = random_tensor(&mut rng, &dims);
+        let mean = t.mean().item().unwrap();
+        let sum = t.sum().item().unwrap();
+        assert!((mean - sum / t.numel() as f32).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn prop_matmul_associative_and_identity() {
+    let mut rng = Rng::new(106);
+    for _case in 0..25 {
+        let m = 1 + rng.next_below(8) as usize;
+        let k = 1 + rng.next_below(8) as usize;
+        let n = 1 + rng.next_below(8) as usize;
+        let p = 1 + rng.next_below(8) as usize;
+        let a = random_tensor(&mut rng, &[m, k]);
+        let b = random_tensor(&mut rng, &[k, n]);
+        let c = random_tensor(&mut rng, &[n, p]);
+        let left = a.matmul(&b).unwrap().matmul(&c).unwrap();
+        let right = a.matmul(&b.matmul(&c).unwrap()).unwrap();
+        assert!(left.allclose(&right, 1e-2, 1e-2), "({m},{k},{n},{p})");
+        // identity
+        let ai = a.matmul(&Tensor::eye(k)).unwrap();
+        assert!(ai.allclose(&a, 1e-5, 1e-5));
+    }
+}
+
+#[test]
+fn prop_matmul_transpose_identity() {
+    // (A·B)ᵀ == Bᵀ·Aᵀ
+    let mut rng = Rng::new(107);
+    for _ in 0..25 {
+        let m = 1 + rng.next_below(10) as usize;
+        let k = 1 + rng.next_below(10) as usize;
+        let n = 1 + rng.next_below(10) as usize;
+        let a = random_tensor(&mut rng, &[m, k]);
+        let b = random_tensor(&mut rng, &[k, n]);
+        let left = a.matmul(&b).unwrap().t().unwrap().contiguous();
+        let right = b.t().unwrap().matmul(&a.t().unwrap()).unwrap();
+        assert!(left.allclose(&right, 1e-4, 1e-4));
+    }
+}
+
+#[test]
+fn prop_softmax_rows_on_simplex() {
+    let mut rng = Rng::new(108);
+    for _ in 0..30 {
+        let rows = 1 + rng.next_below(10) as usize;
+        let cols = 2 + rng.next_below(12) as usize;
+        let t = Tensor::randn(&[rows, cols], 0.0, 3.0, &mut rng);
+        let p = t.softmax().unwrap();
+        assert!(p.iter().all(|v| (0.0..=1.0).contains(&v)));
+        let sums = p.sum_axis(-1, false).unwrap();
+        assert!(sums.allclose(&Tensor::ones(&[rows]), 1e-4, 1e-4));
+    }
+}
+
+#[test]
+fn prop_gradcheck_random_expressions() {
+    // Random smooth expression trees vs finite differences (eq 11).
+    let mut rng = Rng::new(109);
+    for case in 0..12 {
+        let dims = vec![2 + (case % 3), 3];
+        let x0 = Tensor::randn(&dims, 0.0, 0.7, &mut rng);
+        let which = rng.next_below(5);
+        let report = gradcheck(
+            move |v: &Var| {
+                let y = match which {
+                    0 => v.tanh().square(),
+                    1 => v.sigmoid().mul_scalar(3.0),
+                    2 => v.exp().log(),
+                    3 => v.square().add_scalar(1.0).sqrt(),
+                    _ => v.gelu(),
+                };
+                y.sum()
+            },
+            &x0,
+            1e-3,
+            2e-2,
+        )
+        .unwrap();
+        assert!(report.pass, "case {case} ({which}): {report:?}");
+    }
+}
+
+#[test]
+fn prop_bias_grad_equals_batch_sum() {
+    // For y = x + b (bias broadcast), dL/db with L = Σ w⊙y must be Σ_batch w.
+    let mut rng = Rng::new(110);
+    for _ in 0..20 {
+        let rows = 1 + rng.next_below(8) as usize;
+        let cols = 1 + rng.next_below(8) as usize;
+        let x = Var::from_tensor(Tensor::randn(&[rows, cols], 0.0, 1.0, &mut rng), false);
+        let b = Var::from_tensor(Tensor::randn(&[cols], 0.0, 1.0, &mut rng), true);
+        let w = Tensor::randn(&[rows, cols], 0.0, 1.0, &mut rng);
+        x.add(&b)
+            .unwrap()
+            .mul_mask(&w)
+            .unwrap()
+            .sum()
+            .unwrap()
+            .backward()
+            .unwrap();
+        let expect = w.sum_axis(0, false).unwrap();
+        assert!(b.grad().unwrap().allclose(&expect, 1e-4, 1e-4));
+    }
+}
+
+#[test]
+fn prop_view_ops_never_copy() {
+    let mut rng = Rng::new(111);
+    for case in 0..30 {
+        let mut dims = random_shape(&mut rng, case);
+        if dims.len() < 2 {
+            dims.push(2);
+        }
+        let t = random_tensor(&mut rng, &dims);
+        assert!(t.shares_storage(&t.transpose(0, 1).unwrap()));
+        assert!(t.shares_storage(&t.unsqueeze(0).unwrap()));
+        assert!(t.shares_storage(&t.narrow(0, 0, dims[0]).unwrap()));
+        let flat_numel = t.numel();
+        assert!(t.shares_storage(&t.reshape(&[flat_numel]).unwrap()));
+    }
+}
+
+#[test]
+fn prop_sgd_descends_any_psd_quadratic() {
+    // L = ||Aθ||² is convex; SGD with small lr must descend monotonically.
+    let mut rng = Rng::new(112);
+    for _ in 0..10 {
+        let d = 2 + rng.next_below(4) as usize;
+        let a = Tensor::randn(&[d, d], 0.0, 1.0, &mut rng);
+        let theta = Var::from_tensor(Tensor::randn(&[d, 1], 0.0, 1.0, &mut rng), true);
+        let mut opt = minitensor::optim::Sgd::new(vec![theta.clone()], 0.01);
+        let mut last = f32::INFINITY;
+        for _ in 0..30 {
+            use minitensor::optim::Optimizer;
+            opt.zero_grad();
+            let loss = Var::from_tensor(a.clone(), false)
+                .matmul(&theta)
+                .unwrap()
+                .square()
+                .sum()
+                .unwrap();
+            let l = loss.item().unwrap();
+            assert!(l <= last * 1.001, "ascent detected: {last} -> {l}");
+            last = l;
+            loss.backward().unwrap();
+            opt.step().unwrap();
+        }
+    }
+}

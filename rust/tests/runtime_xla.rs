@@ -1,0 +1,183 @@
+//! Integration tests for the AOT path: rust loads the HLO-text artifacts
+//! produced by `make artifacts` and executes them via PJRT, checking
+//! numerics against the native engine.
+//!
+//! These tests require `artifacts/` to exist (run `make artifacts`); they
+//! are skipped gracefully otherwise so `cargo test` works standalone.
+
+use minitensor::data::Rng;
+use minitensor::runtime::Engine;
+use minitensor::tensor::Tensor;
+
+fn engine() -> Option<Engine> {
+    match Engine::cpu(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("skipping xla test (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_all_entry_points() {
+    let Some(engine) = engine() else { return };
+    let names = engine.artifact_names();
+    for expected in [
+        "mlp_forward",
+        "mlp_loss",
+        "mlp_train_step",
+        "matmul_256",
+        "elementwise_1m",
+        "reduction_1m",
+    ] {
+        assert!(names.iter().any(|n| n == expected), "missing {expected}");
+    }
+}
+
+#[test]
+fn xla_matmul_matches_native_engine() {
+    let Some(mut engine) = engine() else { return };
+    let mut rng = Rng::new(1);
+    let a = Tensor::randn(&[256, 256], 0.0, 1.0, &mut rng);
+    let b = Tensor::randn(&[256, 256], 0.0, 1.0, &mut rng);
+    let xla_out = engine.run("matmul_256", &[&a, &b]).unwrap();
+    let native = a.matmul(&b).unwrap();
+    assert_eq!(xla_out.len(), 1);
+    assert!(
+        xla_out[0].allclose(&native, 1e-3, 1e-3),
+        "xla and native matmul disagree"
+    );
+}
+
+#[test]
+fn xla_elementwise_matches_native() {
+    let Some(mut engine) = engine() else { return };
+    let mut rng = Rng::new(2);
+    let n = 1_048_576;
+    let a = Tensor::randn(&[n], 0.0, 1.0, &mut rng);
+    let b = Tensor::randn(&[n], 0.0, 1.0, &mut rng);
+    // artifact computes relu(a*b + a)
+    let xla_out = engine.run("elementwise_1m", &[&a, &b]).unwrap();
+    let native = a.mul(&b).unwrap().add(&a).unwrap().relu();
+    assert!(xla_out[0].allclose(&native, 1e-4, 1e-5));
+}
+
+#[test]
+fn xla_reduction_matches_native() {
+    let Some(mut engine) = engine() else { return };
+    let mut rng = Rng::new(3);
+    let a = Tensor::randn(&[1_048_576], 0.0, 1.0, &mut rng);
+    let out = engine.run("reduction_1m", &[&a]).unwrap();
+    assert_eq!(out.len(), 2);
+    let sum_native = a.sum().item().unwrap();
+    let mean_native = a.mean().item().unwrap();
+    assert!(
+        (out[0].item().unwrap() - sum_native).abs() < 0.5,
+        "sum: {} vs {}",
+        out[0].item().unwrap(),
+        sum_native
+    );
+    assert!((out[1].item().unwrap() - mean_native).abs() < 1e-4);
+}
+
+#[test]
+fn xla_forward_matches_native_dense_stack() {
+    let Some(mut engine) = engine() else { return };
+    let art = engine.manifest().get("mlp_forward").unwrap().clone();
+    let mut rng = Rng::new(4);
+    let inputs: Vec<Tensor> = art
+        .input_shapes
+        .iter()
+        .map(|s| Tensor::randn(s, 0.0, 0.5, &mut rng))
+        .collect();
+    let refs: Vec<&Tensor> = inputs.iter().collect();
+    let xla_logits = engine.run("mlp_forward", &refs).unwrap();
+
+    // Native replica: x · W1ᵀ + b1 → relu → … → logits
+    let x = &inputs[0];
+    let mut h = x.clone();
+    let n_layers = (inputs.len() - 1) / 2;
+    for i in 0..n_layers {
+        let w = &inputs[1 + 2 * i];
+        let b = &inputs[2 + 2 * i];
+        h = h.matmul_nt(w).unwrap().add(b).unwrap();
+        if i < n_layers - 1 {
+            h = h.relu();
+        }
+    }
+    assert!(
+        xla_logits[0].allclose(&h, 1e-3, 1e-3),
+        "xla forward != native forward"
+    );
+}
+
+#[test]
+fn xla_train_step_decreases_loss() {
+    let Some(mut engine) = engine() else { return };
+    let art = engine.manifest().get("mlp_train_step").unwrap().clone();
+    let mut rng = Rng::new(5);
+    let x = Tensor::rand(&art.input_shapes[0], 0.0, 1.0, &mut rng);
+    // labels: one-hot of i % classes
+    let classes = art.input_shapes[1][1];
+    let batch = art.input_shapes[1][0];
+    let labels: Vec<i32> = (0..batch).map(|i| (i % classes) as i32).collect();
+    let y = Tensor::one_hot(
+        &Tensor::from_vec_i32(labels, &[batch]).unwrap(),
+        classes,
+    )
+    .unwrap();
+    let mut params: Vec<Tensor> = art.input_shapes[2..]
+        .iter()
+        .map(|s| {
+            if s.len() == 2 {
+                minitensor::nn::kaiming_uniform(s, s[1], &mut rng)
+            } else {
+                Tensor::zeros(s)
+            }
+        })
+        .collect();
+
+    let mut losses = Vec::new();
+    for _ in 0..10 {
+        let mut inputs: Vec<&Tensor> = vec![&x, &y];
+        inputs.extend(params.iter());
+        let mut outs = engine.run("mlp_train_step", &inputs).unwrap();
+        losses.push(outs.remove(0).item().unwrap());
+        params = outs;
+    }
+    assert!(
+        losses[9] < losses[0],
+        "loss should descend on a fixed batch: {losses:?}"
+    );
+    assert!(losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn xla_attention_matches_native_composition() {
+    let Some(mut engine) = engine() else { return };
+    if engine.manifest().get("attention_128x64").is_err() {
+        eprintln!("skipping: attention artifact not built yet");
+        return;
+    }
+    let mut rng = Rng::new(6);
+    let q = Tensor::randn(&[128, 64], 0.0, 1.0, &mut rng);
+    let k = Tensor::randn(&[128, 64], 0.0, 1.0, &mut rng);
+    let v = Tensor::randn(&[128, 64], 0.0, 1.0, &mut rng);
+    let xla_out = engine.run("attention_128x64", &[&q, &k, &v]).unwrap();
+    let native = q.attention(&k, &v).unwrap();
+    assert!(
+        xla_out[0].allclose(&native, 1e-3, 1e-3),
+        "fused Pallas attention != native composition"
+    );
+}
+
+#[test]
+fn wrong_input_shape_is_rejected() {
+    let Some(mut engine) = engine() else { return };
+    let a = Tensor::zeros(&[2, 2]);
+    let b = Tensor::zeros(&[2, 2]);
+    assert!(engine.run("matmul_256", &[&a, &b]).is_err());
+    assert!(engine.run("matmul_256", &[&a]).is_err());
+    assert!(engine.run("nonexistent", &[]).is_err());
+}
