@@ -1,22 +1,25 @@
 //! Experiment C1a — §6 "competitive constant factors for many elementwise
 //! operations": native engine vs the AOT-XLA executable (the production-
-//! backend stand-in) vs the naive scalar baseline, over sizes 1e3..1e7.
+//! backend stand-in, `--features xla` only) vs the naive scalar baseline,
+//! over sizes 1e3..1e7. Set `MINITENSOR_NUM_THREADS` to sweep the
+//! execution layer's worker count (1 = the serial baseline).
 
 use minitensor::baselines::NaiveTensor;
-use minitensor::bench_util::{bench, fmt_ns, Table};
+use minitensor::bench_util::{bench, bench_artifact, engine_threads, fmt_ns, Table};
 use minitensor::data::Rng;
-use minitensor::runtime::Engine;
 use minitensor::tensor::Tensor;
 
 fn main() {
     let mut rng = Rng::new(1);
     let mut t = Table::new(
-        "C1a — elementwise relu(a*b+a), median time per op",
+        &format!(
+            "C1a — elementwise relu(a*b+a), median time per op ({} thread(s))",
+            engine_threads()
+        ),
         &["N", "native", "xla-aot", "naive-scalar", "native GB/s", "xla/native"],
     );
 
     // XLA artifact is fixed at N=2^20; measure it once at that size.
-    let mut engine = Engine::cpu(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).ok();
     let xla_n = 1_048_576usize;
 
     for n in [1_000usize, 10_000, 100_000, 1_048_576, 10_000_000] {
@@ -27,18 +30,17 @@ fn main() {
             std::hint::black_box(a.mul(&b).unwrap().add(&a).unwrap().relu());
         });
 
-        let xla_str = if n == xla_n {
-            if let Some(engine) = engine.as_mut() {
-                engine.load("elementwise_1m").expect("artifact");
-                let s = bench("xla", 60.0, 7, || {
-                    std::hint::black_box(engine.run("elementwise_1m", &[&a, &b]).unwrap());
-                });
-                (fmt_ns(s.median_ns), s.median_ns)
-            } else {
-                ("n/a".into(), f64::NAN)
-            }
+        let xla_ns = if n == xla_n {
+            bench_artifact("elementwise_1m", 60.0, &[&a, &b]).unwrap_or(f64::NAN)
         } else {
-            ("-".into(), f64::NAN)
+            f64::NAN
+        };
+        let xla_str = if n != xla_n {
+            "-".to_string()
+        } else if xla_ns.is_nan() {
+            "n/a".to_string()
+        } else {
+            fmt_ns(xla_ns)
         };
 
         // Naive baseline only at small sizes (it is orders of magnitude
@@ -58,15 +60,15 @@ fn main() {
 
         // 3 reads + 1 write per element, 4 bytes each ≈ 16 B/elem of traffic.
         let gbps = 16.0 * n as f64 / native.median_ns;
-        let ratio = if xla_str.1.is_nan() {
+        let ratio = if xla_ns.is_nan() {
             "-".to_string()
         } else {
-            format!("{:.2}x", xla_str.1 / native.median_ns)
+            format!("{:.2}x", xla_ns / native.median_ns)
         };
         t.row(&[
             format!("{n}"),
             fmt_ns(native.median_ns),
-            xla_str.0,
+            xla_str,
             naive_str,
             format!("{gbps:.2}"),
             ratio,

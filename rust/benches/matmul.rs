@@ -1,21 +1,23 @@
 //! Experiment C4 — matmul throughput (paper eq 1, §3.5 engine claims):
-//! blocked native SGEMM vs the naive triple loop vs the XLA-AOT
-//! executable, GFLOP/s across sizes.
+//! blocked native SGEMM (panel-parallel over the worker pool) vs the
+//! naive triple loop vs the XLA-AOT executable (`--features xla` only),
+//! GFLOP/s across sizes. Set `MINITENSOR_NUM_THREADS` to sweep the
+//! execution layer's worker count (1 = the serial baseline).
 
-use minitensor::bench_util::{bench, fmt_ns, Table};
+use minitensor::bench_util::{bench, bench_artifact, engine_threads, fmt_ns, Table};
 use minitensor::data::Rng;
 use minitensor::ops::matmul::sgemm_naive;
-use minitensor::runtime::Engine;
 use minitensor::tensor::Tensor;
 
 fn main() {
     let mut rng = Rng::new(3);
     let mut t = Table::new(
-        "C4 — SGEMM, median time and GFLOP/s",
+        &format!(
+            "C4 — SGEMM, median time and GFLOP/s ({} thread(s))",
+            engine_threads()
+        ),
         &["size", "blocked", "GFLOP/s", "naive-loop", "GFLOP/s", "xla-aot", "speedup vs naive"],
     );
-
-    let mut engine = Engine::cpu(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).ok();
 
     for n in [32usize, 64, 128, 256, 512] {
         let a = Tensor::randn(&[n, n], 0.0, 1.0, &mut rng);
@@ -34,13 +36,10 @@ fn main() {
         });
 
         let xla = if n == 256 {
-            engine.as_mut().map_or("n/a".into(), |e| {
-                e.load("matmul_256").expect("artifact");
-                let s = bench("xla 256", 80.0, 7, || {
-                    std::hint::black_box(e.run("matmul_256", &[&a, &b]).unwrap());
-                });
-                format!("{} ({:.2} GF/s)", fmt_ns(s.median_ns), flops / s.median_ns)
-            })
+            match bench_artifact("matmul_256", 80.0, &[&a, &b]) {
+                Some(ns) => format!("{} ({:.2} GF/s)", fmt_ns(ns), flops / ns),
+                None => "n/a".into(),
+            }
         } else {
             "-".into()
         };

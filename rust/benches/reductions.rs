@@ -1,19 +1,22 @@
 //! Experiment C1b — §6 constant factors for reductions: sum/mean/max over
-//! 1e3..1e7 elements, native vs XLA-AOT; plus per-axis reductions.
+//! 1e3..1e7 elements, native vs XLA-AOT (`--features xla` only); plus
+//! per-axis reductions. Set `MINITENSOR_NUM_THREADS` to sweep the
+//! execution layer's worker count (1 = the serial baseline).
 
-use minitensor::bench_util::{bench, fmt_ns, Table};
+use minitensor::bench_util::{bench, bench_artifact, engine_threads, fmt_ns, Table};
 use minitensor::data::Rng;
-use minitensor::runtime::Engine;
 use minitensor::tensor::Tensor;
 
 fn main() {
     let mut rng = Rng::new(2);
     let mut t = Table::new(
-        "C1b — full reductions, median time",
+        &format!(
+            "C1b — full reductions, median time ({} thread(s))",
+            engine_threads()
+        ),
         &["N", "sum", "mean", "max", "sum GB/s", "xla sum+mean"],
     );
 
-    let mut engine = Engine::cpu(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).ok();
     let xla_n = 1_048_576usize;
 
     for n in [1_000usize, 10_000, 100_000, 1_048_576, 10_000_000] {
@@ -28,13 +31,9 @@ fn main() {
             std::hint::black_box(a.max_all());
         });
         let xla = if n == xla_n {
-            engine.as_mut().map_or("n/a".into(), |e| {
-                e.load("reduction_1m").expect("artifact");
-                let s = bench("xla", 50.0, 7, || {
-                    std::hint::black_box(e.run("reduction_1m", &[&a]).unwrap());
-                });
-                fmt_ns(s.median_ns)
-            })
+            bench_artifact("reduction_1m", 50.0, &[&a])
+                .map(fmt_ns)
+                .unwrap_or_else(|| "n/a".into())
         } else {
             "-".into()
         };

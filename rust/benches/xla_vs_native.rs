@@ -1,16 +1,30 @@
 //! Ablation — the three-layer design choice (DESIGN.md): per-call cost of
 //! the native engine vs the AOT-XLA path for the same MLP forward/train
-//! step, plus executable-compile (load) cost amortization.
+//! step, plus executable-compile (load) cost amortization. Requires
+//! `--features xla`; without it the bench prints a notice and exits.
 
+#[cfg(feature = "xla")]
 use std::time::Instant;
 
+#[cfg(feature = "xla")]
 use minitensor::autograd::Var;
+#[cfg(feature = "xla")]
 use minitensor::bench_util::{bench, fmt_ns, Table};
+#[cfg(feature = "xla")]
 use minitensor::data::Rng;
+#[cfg(feature = "xla")]
 use minitensor::nn::{losses, Activation, Dense, Module, Sequential};
+#[cfg(feature = "xla")]
 use minitensor::runtime::Engine;
+#[cfg(feature = "xla")]
 use minitensor::tensor::Tensor;
 
+#[cfg(not(feature = "xla"))]
+fn main() {
+    eprintln!("xla_vs_native requires `--features xla` (PJRT runtime not built)");
+}
+
+#[cfg(feature = "xla")]
 fn main() {
     let Ok(mut engine) = Engine::cpu(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")) else {
         eprintln!("artifacts missing — run `make artifacts`");

@@ -6,6 +6,42 @@
 
 use std::time::Instant;
 
+/// Worker-thread count the execution layer will use. Benches print this
+/// so reported numbers are comparable across machines and
+/// `MINITENSOR_NUM_THREADS` settings.
+pub fn engine_threads() -> usize {
+    crate::runtime::parallel::num_threads()
+}
+
+/// Bench one AOT artifact end-to-end through the PJRT engine, returning
+/// the median ns. `None` when the artifact can't run — built without the
+/// `xla` feature, or `artifacts/` missing/incomplete — so bench tables
+/// can print "n/a" from one shared code path.
+#[cfg(feature = "xla")]
+pub fn bench_artifact(
+    name: &str,
+    target_ms: f64,
+    inputs: &[&crate::tensor::Tensor],
+) -> Option<f64> {
+    let mut engine =
+        crate::runtime::Engine::cpu(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).ok()?;
+    engine.load(name).ok()?;
+    let s = bench(name, target_ms, 7, || {
+        std::hint::black_box(engine.run(name, inputs).unwrap());
+    });
+    Some(s.median_ns)
+}
+
+/// Without the `xla` feature there is no PJRT engine to bench.
+#[cfg(not(feature = "xla"))]
+pub fn bench_artifact(
+    _name: &str,
+    _target_ms: f64,
+    _inputs: &[&crate::tensor::Tensor],
+) -> Option<f64> {
+    None
+}
+
 /// Result of timing one benchmark case.
 #[derive(Debug, Clone)]
 pub struct Sample {

@@ -149,6 +149,10 @@ pub struct TrainConfig {
     pub backend: Backend,
     pub log_every: usize,
     pub artifacts_dir: String,
+    /// Worker threads for the native kernels' execution layer
+    /// (`runtime::parallel`). 0 = leave the process-wide setting alone
+    /// (i.e. `MINITENSOR_NUM_THREADS` or all cores); 1 = exact serial.
+    pub threads: usize,
 }
 
 impl TrainConfig {
@@ -170,6 +174,7 @@ impl TrainConfig {
             backend: Backend::Native,
             log_every: 20,
             artifacts_dir: "artifacts".into(),
+            threads: 0,
         }
     }
 
@@ -192,6 +197,7 @@ impl TrainConfig {
             backend: Backend::parse(&cfg.get_or("train.backend", "native"))?,
             log_every: cfg.get_parse_or("train.log_every", d.log_every)?,
             artifacts_dir: cfg.get_or("train.artifacts_dir", &d.artifacts_dir),
+            threads: cfg.get_parse_or("train.threads", d.threads)?,
         })
     }
 
@@ -239,7 +245,7 @@ mod tests {
     #[test]
     fn train_config_roundtrip() {
         let cfg = Config::parse(
-            "[train]\ndataset = blobs\nhidden = 8\nbackend = xla\nsteps = 10\n",
+            "[train]\ndataset = blobs\nhidden = 8\nbackend = xla\nsteps = 10\nthreads = 4\n",
         )
         .unwrap();
         let tc = TrainConfig::from_config(&cfg).unwrap();
@@ -248,6 +254,9 @@ mod tests {
         assert_eq!(tc.backend, Backend::Xla);
         assert_eq!(tc.steps, 10);
         assert_eq!(tc.lr, 1e-3); // default preserved
+        assert_eq!(tc.threads, 4);
+        let d = TrainConfig::defaults();
+        assert_eq!(d.threads, 0); // 0 = inherit process-wide setting
     }
 
     #[test]

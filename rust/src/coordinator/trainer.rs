@@ -17,7 +17,9 @@ use crate::data::{self, DataLoader, Dataset};
 use crate::error::{Error, Result};
 use crate::nn::{losses, Activation, Dense, Module, Sequential};
 use crate::optim::{Adam, Optimizer, RmsProp, Sgd};
+#[cfg(feature = "xla")]
 use crate::runtime::Engine;
+#[cfg(feature = "xla")]
 use crate::tensor::Tensor;
 
 /// Result of a training run.
@@ -98,11 +100,21 @@ impl Trainer {
         })
     }
 
-    /// Run the configured training job.
+    /// Run the configured training job. `train.threads` (when nonzero)
+    /// pins the execution layer's worker count for the whole process
+    /// before any kernel runs.
     pub fn run(&self) -> Result<TrainReport> {
+        if self.cfg.threads > 0 {
+            crate::runtime::parallel::set_num_threads(self.cfg.threads);
+        }
         match self.cfg.backend {
             Backend::Native => self.run_native(),
+            #[cfg(feature = "xla")]
             Backend::Xla => self.run_xla(),
+            #[cfg(not(feature = "xla"))]
+            Backend::Xla => Err(Error::Config(
+                "backend 'xla' requires building with `--features xla`".into(),
+            )),
         }
     }
 
@@ -160,6 +172,7 @@ impl Trainer {
 
     /// XLA backend: the fused `mlp_train_step` artifact carries
     /// forward+backward+update; Rust owns parameters and the data loop.
+    #[cfg(feature = "xla")]
     pub fn run_xla(&self) -> Result<TrainReport> {
         let c = &self.cfg;
         let mut engine = Engine::cpu(&c.artifacts_dir)?;
@@ -231,6 +244,7 @@ impl Trainer {
         })
     }
 
+    #[cfg(feature = "xla")]
     fn xla_accuracy(
         &self,
         engine: &mut Engine,

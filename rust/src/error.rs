@@ -1,6 +1,9 @@
 //! Error type shared across the whole engine.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`): the crate builds
+//! with zero dependencies so the offline vendor set is never a problem.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Library-wide error enumeration.
 ///
@@ -8,14 +11,12 @@ use thiserror::Error;
 /// variants mirror the failure classes the paper's engine must detect:
 /// shape/broadcast mismatches (§3.1), autograd misuse (§3.2), and runtime
 /// (artifact/PJRT) failures for the AOT backend.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Two shapes could not be broadcast together (NumPy/PyTorch rules).
-    #[error("cannot broadcast shapes {lhs:?} and {rhs:?}")]
     BroadcastMismatch { lhs: Vec<usize>, rhs: Vec<usize> },
 
     /// An op received a tensor of the wrong rank or dimension sizes.
-    #[error("shape mismatch in {op}: expected {expected}, got {got}")]
     ShapeMismatch {
         op: &'static str,
         expected: String,
@@ -23,27 +24,21 @@ pub enum Error {
     },
 
     /// Reshape target has a different number of elements.
-    #[error("cannot reshape {numel} elements into {target:?}")]
     ReshapeNumel { numel: usize, target: Vec<usize> },
 
     /// Axis out of range for the tensor's rank.
-    #[error("axis {axis} out of range for rank {rank}")]
     AxisOutOfRange { axis: isize, rank: usize },
 
     /// Index out of bounds.
-    #[error("index {index} out of bounds for dimension of size {size}")]
     IndexOutOfBounds { index: usize, size: usize },
 
     /// backward() called on a non-scalar without an explicit seed.
-    #[error("backward() requires a scalar output (got shape {shape:?}); pass an explicit gradient")]
     NonScalarBackward { shape: Vec<usize> },
 
     /// backward() called on a Var that does not require gradients.
-    #[error("called backward() on a Var with requires_grad=false")]
     NoGradRequired,
 
     /// Mixed-dtype operation that the engine does not support.
-    #[error("dtype mismatch in {op}: {lhs:?} vs {rhs:?}")]
     DTypeMismatch {
         op: &'static str,
         lhs: crate::DType,
@@ -51,26 +46,74 @@ pub enum Error {
     },
 
     /// An AOT artifact was missing or malformed.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// PJRT / XLA runtime failure (wraps the `xla` crate error).
-    #[error("xla runtime error: {0}")]
     Xla(String),
 
     /// Configuration parsing / validation failure.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Anything I/O.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Catch-all for invariant violations.
-    #[error("{0}")]
     Msg(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::BroadcastMismatch { lhs, rhs } => {
+                write!(f, "cannot broadcast shapes {lhs:?} and {rhs:?}")
+            }
+            Error::ShapeMismatch { op, expected, got } => {
+                write!(f, "shape mismatch in {op}: expected {expected}, got {got}")
+            }
+            Error::ReshapeNumel { numel, target } => {
+                write!(f, "cannot reshape {numel} elements into {target:?}")
+            }
+            Error::AxisOutOfRange { axis, rank } => {
+                write!(f, "axis {axis} out of range for rank {rank}")
+            }
+            Error::IndexOutOfBounds { index, size } => {
+                write!(f, "index {index} out of bounds for dimension of size {size}")
+            }
+            Error::NonScalarBackward { shape } => write!(
+                f,
+                "backward() requires a scalar output (got shape {shape:?}); pass an explicit gradient"
+            ),
+            Error::NoGradRequired => {
+                write!(f, "called backward() on a Var with requires_grad=false")
+            }
+            Error::DTypeMismatch { op, lhs, rhs } => {
+                write!(f, "dtype mismatch in {op}: {lhs:?} vs {rhs:?}")
+            }
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Xla(m) => write!(f, "xla runtime error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Msg(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -86,3 +129,30 @@ impl Error {
 
 /// Library-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_are_stable() {
+        let e = Error::BroadcastMismatch {
+            lhs: vec![2, 3],
+            rhs: vec![4],
+        };
+        assert_eq!(e.to_string(), "cannot broadcast shapes [2, 3] and [4]");
+        assert_eq!(
+            Error::msg("boom").to_string(),
+            "boom"
+        );
+        assert!(Error::Config("bad".into()).to_string().contains("config"));
+    }
+
+    #[test]
+    fn io_errors_chain_source() {
+        use std::error::Error as _;
+        let e: Error = std::io::Error::from(std::io::ErrorKind::NotFound).into();
+        assert!(e.source().is_some());
+        assert!(e.to_string().starts_with("io error:"));
+    }
+}

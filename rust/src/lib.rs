@@ -18,6 +18,31 @@
 //! Python never runs on the request path: the [`runtime`] module loads the
 //! AOT artifacts via PJRT (the `xla` crate) and executes them from Rust.
 //!
+//! ## Execution layer & threading
+//!
+//! Every bulk kernel (elementwise, unary maps, reductions, softmax,
+//! matmul, conv, pooling) dispatches through the unified execution layer
+//! in [`ops::exec`]: one shared implementation of the contiguous /
+//! bias-row / strided tier dispatch, pooled output buffers
+//! ([`tensor::pool`]), and chunked data-parallel execution on the
+//! persistent worker pool in [`runtime::parallel`].
+//!
+//! The worker count comes from, in priority order:
+//! [`runtime::parallel::set_num_threads`] (also reachable as the
+//! `train.threads` config key), the `MINITENSOR_NUM_THREADS` environment
+//! variable, then all available cores. **One thread reproduces the serial
+//! kernels bit-for-bit**; elementwise, matmul, and conv kernels keep
+//! their per-element accumulation order and are thread-count-invariant,
+//! while full reductions combine fixed per-chunk partials
+//! (deterministic for a fixed thread count).
+//!
+//! ## Feature flags
+//!
+//! - `xla` (default off): compiles the PJRT runtime ([`runtime::Engine`]),
+//!   the `backend = xla` training path, and the AOT comparison benches.
+//!   Requires the `xla` crate, which is not in the offline vendor set —
+//!   see `rust/README.md`.
+//!
 //! ## Quickstart
 //!
 //! (`no_run`: cargo doesn't forward the PJRT rpath rustflags to doctest

@@ -11,7 +11,9 @@ use minitensor::coordinator::{
     Config, InferenceServer, NativeBatchModel, ServeConfig, TrainConfig, Trainer,
 };
 use minitensor::data::Rng;
+#[cfg(feature = "xla")]
 use minitensor::runtime::Engine;
+use minitensor::runtime::parallel;
 use minitensor::tensor::Tensor;
 
 fn main() {
@@ -87,8 +89,11 @@ fn load_config(args: &[String]) -> minitensor::Result<Config> {
 fn cmd_train(args: &[String]) -> minitensor::Result<()> {
     let cfg = load_config(args)?;
     let tc = TrainConfig::from_config(&cfg)?;
+    // Trainer::run owns applying train.threads; the banner only mirrors
+    // the value it will take effect as.
+    let threads = parallel::effective_threads(tc.threads);
     println!(
-        "training: dataset={} hidden={:?} optimizer={} lr={} steps={} backend={}",
+        "training: dataset={} hidden={:?} optimizer={} lr={} steps={} backend={} threads={threads}",
         tc.dataset, tc.hidden, tc.optimizer, tc.lr, tc.steps, tc.backend
     );
     let trainer = Trainer::new(tc);
@@ -176,6 +181,11 @@ fn cmd_info(args: &[String]) -> minitensor::Result<()> {
         .map(String::as_str)
         .unwrap_or("artifacts");
     println!("minitensor v{}", env!("CARGO_PKG_VERSION"));
+    println!(
+        "exec layer: {} worker thread(s) (MINITENSOR_NUM_THREADS to override)",
+        parallel::num_threads()
+    );
+    #[cfg(feature = "xla")]
     match Engine::cpu(dir) {
         Ok(engine) => {
             println!("pjrt platform: {}", engine.platform());
@@ -192,11 +202,14 @@ fn cmd_info(args: &[String]) -> minitensor::Result<()> {
         }
         Err(e) => println!("no artifacts loaded ({e})"),
     }
+    #[cfg(not(feature = "xla"))]
+    println!("built without the `xla` feature — no PJRT runtime (artifacts dir: {dir})");
     Ok(())
 }
 
 fn cmd_bench_quick() -> minitensor::Result<()> {
     use minitensor::bench_util::{bench, fmt_ns};
+    println!("threads: {}", parallel::num_threads());
     let mut rng = Rng::new(1);
     let a = Tensor::randn(&[1_000_000], 0.0, 1.0, &mut rng);
     let b = Tensor::randn(&[1_000_000], 0.0, 1.0, &mut rng);

@@ -3,10 +3,16 @@
 //! Layout is NCHW. The forward lowers to im2col + SGEMM — the standard
 //! reduction that turns the 6-nested conv loop into one large matrix
 //! product handled by the blocked [`super::matmul::sgemm`] kernel. The
-//! backward passes (w.r.t. input and weight) reuse col2im / the transposed
-//! GEMM, exactly the "standard pullbacks with respect to x and w" the
-//! paper implements.
+//! forward parallelizes over the batch through the execution layer (each
+//! image's `[cout, oh*ow]` output slab is disjoint and each task owns a
+//! private im2col buffer); for batch-1 inputs the nested SGEMM's panel
+//! parallelism takes over instead. The backward passes (w.r.t. input and
+//! weight) reuse col2im / the transposed GEMM, exactly the "standard
+//! pullbacks with respect to x and w" the paper implements; they stay
+//! batch-serial (the weight gradient accumulates across images) and
+//! inherit the SGEMM's panel parallelism.
 
+use super::exec;
 use super::matmul::sgemm;
 use crate::error::{Error, Result};
 use crate::tensor::Tensor;
@@ -148,31 +154,32 @@ pub fn conv2d(x: &Tensor, weight: &Tensor, spec: Conv2dSpec) -> Result<Tensor> {
     let ws = wc.contiguous_data().unwrap();
 
     let k = cin * kh * kw;
-    let mut cols = vec![0.0f32; k * oh * ow];
     let mut out = vec![0.0f32; n * cout * oh * ow];
-    for i in 0..n {
-        im2col(
-            &xs[i * cin * h * w..(i + 1) * cin * h * w],
-            cin,
-            h,
-            w,
-            kh,
-            kw,
-            spec,
-            oh,
-            ow,
-            &mut cols,
-        );
-        // out[i] [cout, oh*ow] = W [cout, k] · cols [k, oh*ow]
-        sgemm(
-            cout,
-            k,
-            oh * ow,
-            ws,
-            &cols,
-            &mut out[i * cout * oh * ow..(i + 1) * cout * oh * ow],
-        );
-    }
+    let optr = exec::SyncPtr::new_raw(out.as_mut_ptr());
+    exec::for_chunks(n, 2 * cout * k * oh * ow, |i0, i1| {
+        // Per-task im2col buffer, recycled through the worker-local pool.
+        let mut cols = crate::tensor::pool::take(k * oh * ow);
+        cols.resize(k * oh * ow, 0.0);
+        for i in i0..i1 {
+            im2col(
+                &xs[i * cin * h * w..(i + 1) * cin * h * w],
+                cin,
+                h,
+                w,
+                kh,
+                kw,
+                spec,
+                oh,
+                ow,
+                &mut cols,
+            );
+            // out[i] [cout, oh*ow] = W [cout, k] · cols [k, oh*ow]
+            // SAFETY: each image owns a disjoint slab of `out`.
+            let o = unsafe { optr.band(i * cout * oh * ow, cout * oh * ow) };
+            sgemm(cout, k, oh * ow, ws, &cols, o);
+        }
+        crate::tensor::pool::put(cols);
+    });
     Tensor::from_vec(out, &[n, cout, oh, ow])
 }
 
@@ -305,27 +312,34 @@ pub fn max_pool2d(x: &Tensor, k: usize) -> Result<(Tensor, Vec<usize>)> {
     let xs = xc.contiguous_data().unwrap();
     let mut out = vec![0.0f32; n * c * oh * ow];
     let mut arg = vec![0usize; n * c * oh * ow];
-    for img in 0..n * c {
-        let base = img * h * w;
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let mut bv = f32::NEG_INFINITY;
-                let mut bi = 0usize;
-                for dy in 0..k {
-                    for dx in 0..k {
-                        let idx = base + (oy * k + dy) * w + ox * k + dx;
-                        if xs[idx] > bv {
-                            bv = xs[idx];
-                            bi = idx;
+    let optr = exec::SyncPtr::new(&mut out);
+    let aptr = exec::SyncPtr::new(&mut arg);
+    exec::for_chunks(n * c, h * w, |img0, img1| {
+        for img in img0..img1 {
+            let base = img * h * w;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut bv = f32::NEG_INFINITY;
+                    let mut bi = 0usize;
+                    for dy in 0..k {
+                        for dx in 0..k {
+                            let idx = base + (oy * k + dy) * w + ox * k + dx;
+                            if xs[idx] > bv {
+                                bv = xs[idx];
+                                bi = idx;
+                            }
                         }
                     }
+                    let o = img * oh * ow + oy * ow + ox;
+                    // SAFETY: each image owns a disjoint output range.
+                    unsafe {
+                        optr.write(o, bv);
+                        aptr.write(o, bi);
+                    }
                 }
-                let o = img * oh * ow + oy * ow + ox;
-                out[o] = bv;
-                arg[o] = bi;
             }
         }
-    }
+    });
     Ok((Tensor::from_vec(out, &[n, c, oh, ow])?, arg))
 }
 
@@ -344,20 +358,24 @@ pub fn avg_pool2d(x: &Tensor, k: usize) -> Result<Tensor> {
     let xs = xc.contiguous_data().unwrap();
     let inv = 1.0 / (k * k) as f32;
     let mut out = vec![0.0f32; n * c * oh * ow];
-    for img in 0..n * c {
-        let base = img * h * w;
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let mut acc = 0.0f32;
-                for dy in 0..k {
-                    for dx in 0..k {
-                        acc += xs[base + (oy * k + dy) * w + ox * k + dx];
+    let optr = exec::SyncPtr::new(&mut out);
+    exec::for_chunks(n * c, h * w, |img0, img1| {
+        for img in img0..img1 {
+            let base = img * h * w;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0f32;
+                    for dy in 0..k {
+                        for dx in 0..k {
+                            acc += xs[base + (oy * k + dy) * w + ox * k + dx];
+                        }
                     }
+                    // SAFETY: each image owns a disjoint output range.
+                    unsafe { optr.write(img * oh * ow + oy * ow + ox, acc * inv) };
                 }
-                out[img * oh * ow + oy * ow + ox] = acc * inv;
             }
         }
-    }
+    });
     Tensor::from_vec(out, &[n, c, oh, ow])
 }
 

@@ -2,68 +2,24 @@
 //!
 //! Paper §3.1: elementwise ops map `z_i = f(x_i, y_i)`; broadcasting
 //! virtually expands size-1 dimensions (stride 0) without materializing.
-//! Three execution tiers:
-//!   1. both contiguous + same shape → single fused slice loop (`kernels`),
-//!   2. broadcast where the RHS is a trailing-aligned vector → row loop,
-//!   3. general strided odometer walk.
+//! Tier dispatch (contiguous fused / bias-row / strided walk), pooled
+//! output allocation, and data-parallel chunking all live in the unified
+//! execution layer — this file only defines the operator surface.
 
+use super::exec;
 use crate::dtype::DType;
 use crate::error::Result;
-use crate::shape::StridedIter;
 use crate::tensor::Tensor;
 
 /// Compute `f(a, b)` elementwise with broadcasting; result dtype is
 /// `promote(a, b)` unless overridden by the caller (comparisons retag Bool).
+/// Thin alias for [`exec::binary_op`], kept as the historical entry point.
 pub fn binary_op(
     a: &Tensor,
     b: &Tensor,
-    f: impl Fn(f32, f32) -> f32 + Copy,
+    f: impl Fn(f32, f32) -> f32 + Copy + Sync,
 ) -> Result<Tensor> {
-    let out_shape = a.shape().broadcast(b.shape())?;
-    let dtype = a.dtype().promote(b.dtype());
-    let n = out_shape.numel();
-
-    // Tier 1: identical shapes, both contiguous. The output is built by
-    // `collect` from an exact-size iterator — no zero-fill pass, which at
-    // DRAM-resident sizes removes a third of the write traffic
-    // (EXPERIMENTS.md §Perf L3.2).
-    if a.shape() == b.shape() {
-        if let (Some(sa), Some(sb)) = (a.contiguous_data(), b.contiguous_data()) {
-            let mut out = crate::tensor::pool::take(n);
-            out.extend(sa.iter().zip(sb).map(|(&x, &y)| f(x, y)));
-            return Ok(Tensor::from_vec(out, out_shape.dims())?.with_dtype(dtype));
-        }
-    }
-
-    // Tier 2: contiguous LHS of shape [..., k] with RHS of shape [k]
-    // (the paper's x + b bias case) — reuse the RHS row per outer index.
-    if b.rank() == 1
-        && a.shape() == &out_shape
-        && a.rank() >= 1
-        && a.dims()[a.rank() - 1] == b.dims()[0]
-    {
-        if let (Some(sa), Some(sb)) = (a.contiguous_data(), b.contiguous_data()) {
-            let k = sb.len();
-            let mut out = crate::tensor::pool::take(n);
-            for arow in sa.chunks_exact(k) {
-                out.extend(arow.iter().zip(sb).map(|(&x, &y)| f(x, y)));
-            }
-            return Ok(Tensor::from_vec(out, out_shape.dims())?.with_dtype(dtype));
-        }
-    }
-
-    // Tier 3: general strided broadcast walk.
-    let sa = a.shape().broadcast_strides(a.strides(), &out_shape)?;
-    let sb = b.shape().broadcast_strides(b.strides(), &out_shape)?;
-    let da = a.storage_slice();
-    let db = b.storage_slice();
-    let ia = StridedIter::new(&out_shape, &sa, a.offset());
-    let ib = StridedIter::new(&out_shape, &sb, b.offset());
-    let out: Vec<f32> = ia
-        .zip(ib)
-        .map(|(oa, ob)| f(da[oa as usize], db[ob as usize]))
-        .collect();
-    Ok(Tensor::from_vec(out, out_shape.dims())?.with_dtype(dtype))
+    exec::binary_op(a, b, f)
 }
 
 impl Tensor {
@@ -154,19 +110,10 @@ impl Tensor {
     }
 
     /// Apply an arbitrary scalar function elementwise (always produces a
-    /// fresh contiguous tensor). Collect-based: no zero-fill of the output.
-    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
-        let out: Vec<f32> = match self.contiguous_data() {
-            Some(s) => {
-                let mut out = crate::tensor::pool::take(s.len());
-                out.extend(s.iter().map(|&v| f(v)));
-                out
-            }
-            None => self.iter().map(f).collect(),
-        };
-        Tensor::from_vec(out, self.dims())
-            .expect("map preserves shape")
-            .with_dtype(self.dtype)
+    /// fresh contiguous tensor). Runs through the execution layer:
+    /// pool-backed output, no zero-fill, chunk-parallel on large inputs.
+    pub fn map(&self, f: impl Fn(f32) -> f32 + Sync) -> Tensor {
+        exec::unary_op(self, f)
     }
 }
 

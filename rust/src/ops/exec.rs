@@ -1,0 +1,391 @@
+//! Unified kernel-execution layer (paper §3.1/§3.5).
+//!
+//! Every bulk op in `ops/` used to own a private copy of the same three
+//! concerns: (a) the contiguous / bias-row / strided **tier dispatch**,
+//! (b) output allocation, and (c) the loop itself. This module centralizes
+//! all three and adds **data-parallel dispatch**: loops are split into
+//! contiguous chunks and executed on the persistent worker pool
+//! ([`crate::runtime::parallel`]), controlled by `MINITENSOR_NUM_THREADS`
+//! (1 ⇒ exact serial behavior, bit-identical to the old per-op loops).
+//!
+//! The three tiers, unchanged in spirit from the per-op copies:
+//!   1. contiguous same-shape → fused slice loop, chunk-parallel;
+//!   2. contiguous LHS `[..., k]` ⊕ vector RHS `[k]` (the paper's `x + b`
+//!      bias case) → row loop, row-parallel;
+//!   3. general strided odometer walk → output-chunked via
+//!      [`StridedIter::starting_at`].
+//!
+//! Outputs draw from the thread-local [`pool`] and are written exactly
+//! once through [`SyncPtr`] — no zero-fill pass (EXPERIMENTS.md §Perf
+//! L3.2), no allocator round-trip in hot loops.
+
+use crate::error::{Error, Result};
+use crate::runtime::parallel;
+use crate::shape::StridedIter;
+use crate::tensor::{pool, Tensor};
+
+/// Minimum total elements of work before an op engages the worker pool;
+/// below this the fork/join overhead exceeds the loop itself.
+pub const PAR_THRESHOLD: usize = 1 << 15;
+
+/// Target elements per parallel chunk (grain) for unit-cost loops.
+pub const PAR_GRAIN: usize = 1 << 13;
+
+/// Raw output pointer shareable across pool workers for **disjoint**
+/// writes into a freshly [`pool::take`]n (or pre-initialized) buffer.
+///
+/// Safety contract (upheld by every caller in this module and the op
+/// files): concurrent tasks write non-overlapping index ranges, every
+/// index in `0..len` is written before `set_len`, and the buffer outlives
+/// the `parallel_for` call that uses the pointer (guaranteed because
+/// `parallel_for` joins before returning).
+pub(crate) struct SyncPtr<T = f32>(*mut T);
+
+unsafe impl<T: Send> Send for SyncPtr<T> {}
+unsafe impl<T: Send> Sync for SyncPtr<T> {}
+
+impl<T> SyncPtr<T> {
+    /// Capture the base pointer of an output buffer.
+    pub(crate) fn new(v: &mut Vec<T>) -> SyncPtr<T> {
+        SyncPtr(v.as_mut_ptr())
+    }
+
+    /// Capture an already-initialized output pointer (accumulator outputs
+    /// like the SGEMM C matrix, which kernels read-modify-write).
+    pub(crate) fn new_raw(p: *mut T) -> SyncPtr<T> {
+        SyncPtr(p)
+    }
+
+    /// Mutable view of `len` initialized elements starting at `start`.
+    ///
+    /// # Safety
+    /// The region must be initialized, inside the captured allocation, and
+    /// disjoint from every band handed to a concurrently running task.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn band(&self, start: usize, len: usize) -> &mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(start), len)
+    }
+
+    /// Write element `i`.
+    ///
+    /// # Safety
+    /// `i` must be inside the captured buffer's capacity and written by
+    /// exactly one task.
+    #[inline]
+    pub(crate) unsafe fn write(&self, i: usize, v: T) {
+        self.0.add(i).write(v);
+    }
+
+    /// Mutable view of `[start, end)`.
+    ///
+    /// # Safety
+    /// Ranges handed to concurrent tasks must be disjoint and inside the
+    /// captured buffer's capacity; the caller must write every element it
+    /// reads.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn slice(&self, start: usize, end: usize) -> &mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(start), end - start)
+    }
+}
+
+/// The single funnel every migrated kernel dispatches through: run
+/// `body(start, end)` over `0..count` items of approximate per-item cost
+/// `unit` (in element-ops). Serial below [`PAR_THRESHOLD`] total work,
+/// chunked onto the pool above it, with the grain scaled so each chunk
+/// carries at least [`PAR_GRAIN`] element-ops.
+pub fn for_chunks(count: usize, unit: usize, body: impl Fn(usize, usize) + Sync) {
+    if count == 0 {
+        return;
+    }
+    let unit = unit.max(1);
+    if count.saturating_mul(unit) < PAR_THRESHOLD {
+        body(0, count);
+    } else {
+        let grain = (PAR_GRAIN / unit).max(1);
+        parallel::parallel_for(count, grain, &body);
+    }
+}
+
+/// Order-stable chunk-parallel reduction: compute `part(start, end)` over
+/// the chunks [`for_chunks`] would cut, then combine the partials in
+/// ascending chunk order. Deterministic for a fixed thread count; with a
+/// single chunk (including every 1-thread run) the sole partial is
+/// returned untouched, so the serial value is exact. `None` iff
+/// `count == 0`. `part` may carry side effects (e.g. cross-entropy also
+/// writes its probability rows) — chunks never overlap.
+pub fn reduce_chunks(
+    count: usize,
+    unit: usize,
+    part: impl Fn(usize, usize) -> f32 + Sync,
+    combine: impl Fn(f32, f32) -> f32,
+) -> Option<f32> {
+    if count == 0 {
+        return None;
+    }
+    // Serial fast path: small reductions (per-step loss scalars, metric
+    // reads) skip the mutex/vec/sort machinery entirely.
+    if count.saturating_mul(unit.max(1)) < PAR_THRESHOLD || parallel::num_threads() == 1 {
+        return Some(part(0, count));
+    }
+    let parts = std::sync::Mutex::new(Vec::new());
+    for_chunks(count, unit, |a, b| {
+        let v = part(a, b);
+        parts
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push((a, v));
+    });
+    let mut parts = parts.into_inner().unwrap_or_else(|e| e.into_inner());
+    parts.sort_unstable_by_key(|&(a, _)| a);
+    parts.into_iter().map(|(_, v)| v).reduce(combine)
+}
+
+/// Compute `f(a, b)` elementwise with broadcasting; result dtype is
+/// `promote(a, b)` unless retagged by the caller (comparisons → Bool).
+/// This is the engine behind `Tensor::add/sub/mul/…`.
+pub fn binary_op(
+    a: &Tensor,
+    b: &Tensor,
+    f: impl Fn(f32, f32) -> f32 + Copy + Sync,
+) -> Result<Tensor> {
+    let out_shape = a.shape().broadcast(b.shape())?;
+    let dtype = a.dtype().promote(b.dtype());
+    let n = out_shape.numel();
+
+    // Degenerate: any zero-sized dimension → empty result, no kernel run
+    // (also shields the row tier from `k == 0` chunking).
+    if n == 0 {
+        return Ok(Tensor::from_vec(Vec::new(), out_shape.dims())?.with_dtype(dtype));
+    }
+
+    // Tier 1: identical shapes, both contiguous — fused chunk-parallel
+    // slice loop.
+    if a.shape() == b.shape() {
+        if let (Some(sa), Some(sb)) = (a.contiguous_data(), b.contiguous_data()) {
+            let mut out = pool::take(n);
+            let ptr = SyncPtr::new(&mut out);
+            for_chunks(n, 1, |s, e| {
+                for (i, (&x, &y)) in sa[s..e].iter().zip(&sb[s..e]).enumerate() {
+                    // SAFETY: chunks are disjoint and inside `out`.
+                    unsafe { ptr.write(s + i, f(x, y)) };
+                }
+            });
+            // SAFETY: for_chunks covered every index in 0..n exactly once.
+            unsafe { out.set_len(n) };
+            return Ok(Tensor::from_vec(out, out_shape.dims())?.with_dtype(dtype));
+        }
+    }
+
+    // Tier 2: contiguous LHS of shape [..., k] with RHS of shape [k]
+    // (the paper's x + b bias case) — reuse the RHS row per outer index,
+    // parallel over rows.
+    if b.rank() == 1
+        && a.shape() == &out_shape
+        && a.rank() >= 1
+        && a.dims()[a.rank() - 1] == b.dims()[0]
+    {
+        if let (Some(sa), Some(sb)) = (a.contiguous_data(), b.contiguous_data()) {
+            let k = sb.len();
+            let rows = n / k;
+            let mut out = pool::take(n);
+            let ptr = SyncPtr::new(&mut out);
+            for_chunks(rows, k, |r0, r1| {
+                for (arow, r) in sa[r0 * k..r1 * k].chunks_exact(k).zip(r0..r1) {
+                    for (i, (&x, &y)) in arow.iter().zip(sb).enumerate() {
+                        // SAFETY: row ranges are disjoint per chunk.
+                        unsafe { ptr.write(r * k + i, f(x, y)) };
+                    }
+                }
+            });
+            // SAFETY: every row of every chunk was written.
+            unsafe { out.set_len(n) };
+            return Ok(Tensor::from_vec(out, out_shape.dims())?.with_dtype(dtype));
+        }
+    }
+
+    // Tier 3: general strided broadcast walk, chunked over the output's
+    // row-major linear order.
+    let sa = a.shape().broadcast_strides(a.strides(), &out_shape)?;
+    let sb = b.shape().broadcast_strides(b.strides(), &out_shape)?;
+    let da = a.storage_slice();
+    let db = b.storage_slice();
+    let mut out = pool::take(n);
+    let ptr = SyncPtr::new(&mut out);
+    for_chunks(n, 1, |s, e| {
+        let ia = StridedIter::starting_at(&out_shape, &sa, a.offset(), s);
+        let ib = StridedIter::starting_at(&out_shape, &sb, b.offset(), s);
+        for (i, (oa, ob)) in ia.zip(ib).take(e - s).enumerate() {
+            // SAFETY: chunks are disjoint and inside `out`.
+            unsafe { ptr.write(s + i, f(da[oa as usize], db[ob as usize])) };
+        }
+    });
+    // SAFETY: the strided chunks covered 0..n exactly once.
+    unsafe { out.set_len(n) };
+    Ok(Tensor::from_vec(out, out_shape.dims())?.with_dtype(dtype))
+}
+
+/// Apply `f` elementwise over any view, producing a fresh contiguous
+/// tensor of the same shape and dtype. Contiguous sources run the fused
+/// chunk-parallel loop; strided views fall back to the odometer walk.
+pub fn unary_op(t: &Tensor, f: impl Fn(f32) -> f32 + Sync) -> Tensor {
+    let n = t.numel();
+    let out: Vec<f32> = match t.contiguous_data() {
+        Some(s) if n > 0 => {
+            let mut out = pool::take(n);
+            let ptr = SyncPtr::new(&mut out);
+            for_chunks(n, 1, |a, b| {
+                for (i, &x) in s[a..b].iter().enumerate() {
+                    // SAFETY: chunks are disjoint and inside `out`.
+                    unsafe { ptr.write(a + i, f(x)) };
+                }
+            });
+            // SAFETY: for_chunks covered every index in 0..n exactly once.
+            unsafe { out.set_len(n) };
+            out
+        }
+        Some(_) => Vec::new(),
+        None => t.iter().map(f).collect(),
+    };
+    Tensor::from_vec(out, t.dims())
+        .expect("unary_op preserves shape")
+        .with_dtype(t.dtype())
+}
+
+/// Row kernel over the last axis (the softmax/log-softmax family),
+/// row-parallel, in three phases per row: `prep(src_row)` computes one
+/// row statistic (max, logsumexp, …), `emit(stat, v)` produces each
+/// output element exactly once (written through the raw pointer — no
+/// zero-fill pass over the output, EXPERIMENTS.md §Perf L3.2), and
+/// `finish(dst_row)` may rewrite the now-initialized row in place
+/// (normalization).
+pub fn map_rows(
+    t: &Tensor,
+    op: &'static str,
+    prep: impl Fn(&[f32]) -> f32 + Sync,
+    emit: impl Fn(f32, f32) -> f32 + Sync,
+    finish: impl Fn(&mut [f32]) + Sync,
+) -> Result<Tensor> {
+    let k = *t
+        .dims()
+        .last()
+        .ok_or_else(|| Error::msg(format!("{op}: rank must be >= 1")))?;
+    let n = t.numel();
+    if k == 0 || n == 0 {
+        return Tensor::from_vec(Vec::new(), t.dims());
+    }
+    let src = t.contiguous();
+    let s = src.contiguous_data().unwrap();
+    let rows = n / k;
+    let mut out = pool::take(n);
+    let ptr = SyncPtr::new(&mut out);
+    for_chunks(rows, k, |r0, r1| {
+        for r in r0..r1 {
+            let srow = &s[r * k..(r + 1) * k];
+            let stat = prep(srow);
+            for (j, &v) in srow.iter().enumerate() {
+                // SAFETY: rows are disjoint per chunk; each element is
+                // written exactly once.
+                unsafe { ptr.write(r * k + j, emit(stat, v)) };
+            }
+            // SAFETY: the row was fully initialized by the writes above.
+            finish(unsafe { ptr.slice(r * k, (r + 1) * k) });
+        }
+    });
+    // SAFETY: every row of every chunk was written by `emit`.
+    unsafe { out.set_len(n) };
+    Tensor::from_vec(out, t.dims())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_chunks_small_work_is_single_call() {
+        let calls = std::sync::atomic::AtomicUsize::new(0);
+        for_chunks(100, 1, |s, e| {
+            assert_eq!((s, e), (0, 100));
+            calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert_eq!(calls.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn for_chunks_zero_count_is_noop() {
+        for_chunks(0, 1, |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn binary_op_matches_scalar_reference_across_tiers() {
+        // tier 1
+        let a = Tensor::arange(0.0, 24.0).reshape(&[4, 6]).unwrap();
+        let b = Tensor::arange(24.0, 48.0).reshape(&[4, 6]).unwrap();
+        let y = binary_op(&a, &b, |x, y| x + 2.0 * y).unwrap();
+        let want: Vec<f32> = a
+            .to_vec()
+            .iter()
+            .zip(b.to_vec())
+            .map(|(&x, y)| x + 2.0 * y)
+            .collect();
+        assert_eq!(y.to_vec(), want);
+
+        // tier 2 (bias row)
+        let bias = Tensor::from_vec(vec![1., 2., 3., 4., 5., 6.], &[6]).unwrap();
+        let y2 = binary_op(&a, &bias, |x, y| x * y).unwrap();
+        assert_eq!(y2.at(&[2, 3]).unwrap(), a.at(&[2, 3]).unwrap() * 4.0);
+
+        // tier 3 (column broadcast → strided walk)
+        let col = Tensor::from_vec(vec![10., 20., 30., 40.], &[4, 1]).unwrap();
+        let y3 = binary_op(&a, &col, |x, y| x + y).unwrap();
+        assert_eq!(y3.at(&[3, 5]).unwrap(), 23.0 + 40.0);
+
+        // tier 3 (same shape but non-contiguous operands)
+        let at = a.t().unwrap();
+        let bt = b.t().unwrap();
+        let y4 = binary_op(&at, &bt, |x, y| x - y).unwrap();
+        assert_eq!(y4.to_vec(), vec![-24.0; 24]);
+    }
+
+    #[test]
+    fn unary_op_keeps_dtype_and_shape() {
+        let t = Tensor::from_vec_i32(vec![1, -2, 3, -4], &[2, 2]).unwrap();
+        let y = unary_op(&t, |v| -v);
+        assert_eq!(y.dims(), &[2, 2]);
+        assert_eq!(y.dtype(), crate::dtype::DType::I32);
+        assert_eq!(y.to_vec(), vec![-1., 2., -3., 4.]);
+    }
+
+    #[test]
+    fn map_rows_empty_and_scalar_edges() {
+        let empty = Tensor::from_vec(Vec::new(), &[2, 0]).unwrap();
+        let y = map_rows(
+            &empty,
+            "rowop",
+            |_| panic!("no rows to run"),
+            |_, v| v,
+            |_| (),
+        )
+        .unwrap();
+        assert_eq!(y.dims(), &[2, 0]);
+        let scalar = Tensor::scalar(1.0);
+        assert!(map_rows(&scalar, "rowop", |_| 0.0, |_, v| v, |_| ()).is_err());
+    }
+
+    #[test]
+    fn map_rows_three_phase_composition() {
+        // Subtract the row max, then negate in place: exercises prep,
+        // emit, and finish together.
+        let t = Tensor::from_vec(vec![1., 3., 2., -1., 0., 5.], &[2, 3]).unwrap();
+        let y = map_rows(
+            &t,
+            "rowop",
+            |row| row.iter().copied().fold(f32::NEG_INFINITY, f32::max),
+            |m, v| v - m,
+            |dst| dst.iter_mut().for_each(|v| *v = -*v),
+        )
+        .unwrap();
+        assert_eq!(y.to_vec(), vec![2., 0., 1., 6., 5., 0.]);
+    }
+}

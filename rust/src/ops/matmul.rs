@@ -3,9 +3,15 @@
 //! The 2-D kernel is a cache-blocked, register-tiled SGEMM written for
 //! LLVM auto-vectorization: the innermost loop is a contiguous
 //! multiply-accumulate over `k` panels with the B matrix pre-packed
-//! row-major per block. Batched (≥3-D) matmul broadcasts leading dims and
-//! loops the 2-D kernel.
+//! row-major per block. MC row-panels of C are independent, so the panel
+//! loop fans out over the worker pool (each task packs its own A panel;
+//! the packed B block is shared read-only). Per-element accumulation
+//! order is unchanged, so results are identical at any thread count.
+//! Batched (≥3-D) matmul broadcasts leading dims and parallelizes over
+//! the batch instead (the per-batch SGEMM then runs serially on its
+//! worker).
 
+use super::exec;
 use crate::error::{Error, Result};
 use crate::tensor::Tensor;
 
@@ -41,8 +47,7 @@ pub fn sgemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) 
     }
 
     let mut packed_b = vec![0.0f32; KC * NC];
-    // A panels are MR-padded so the micro-kernel always runs a full tile.
-    let mut packed_a = vec![0.0f32; MC.div_ceil(MR) * MR * KC];
+    let n_panels = m.div_ceil(MC);
     for jc in (0..n).step_by(NC) {
         let nc = NC.min(n - jc);
         for pc in (0..k).step_by(KC) {
@@ -52,11 +57,31 @@ pub fn sgemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) 
                 let src = &b[(pc + p) * n + jc..(pc + p) * n + jc + nc];
                 packed_b[p * nc..p * nc + nc].copy_from_slice(src);
             }
-            for ic in (0..m).step_by(MC) {
-                let mc = MC.min(m - ic);
-                pack_a(&a[ic * k + pc..], k, mc, kc, &mut packed_a);
-                macro_kernel(mc, kc, nc, &packed_a, &packed_b, &mut c[ic * n + jc..], n);
-            }
+            // MC row-panels write disjoint row bands of C: fan the panel
+            // loop out over the pool. Each task owns a private MR-padded
+            // A pack buffer; packed_b is shared read-only.
+            let c_ptr = exec::SyncPtr::new_raw(c.as_mut_ptr());
+            let pb = &packed_b;
+            exec::for_chunks(n_panels, 2 * MC * kc * nc, |p0, p1| {
+                // Per-task A pack buffer, recycled through the (worker-
+                // thread-local) pool so repeated blocks don't churn the
+                // allocator with 128 KiB mmaps.
+                let pa_len = MC.div_ceil(MR) * MR * KC;
+                let mut packed_a = crate::tensor::pool::take(pa_len);
+                packed_a.resize(pa_len, 0.0);
+                for panel in p0..p1 {
+                    let ic = panel * MC;
+                    let mc = MC.min(m - ic);
+                    pack_a(&a[ic * k + pc..], k, mc, kc, &mut packed_a);
+                    // SAFETY: the macro kernel touches rows ic..ic+mc and
+                    // columns jc..jc+nc only — panels are row-disjoint.
+                    let c_band = unsafe {
+                        c_ptr.band(ic * n + jc, (mc - 1) * n + nc)
+                    };
+                    macro_kernel(mc, kc, nc, &packed_a, pb, c_band, n);
+                }
+                crate::tensor::pool::put(packed_a);
+            });
         }
     }
 }
@@ -217,17 +242,24 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     let sa = ab.contiguous_data().unwrap();
     let sb = bb.contiguous_data().unwrap();
 
+    // Batch entries are independent: fan out over the pool (the nested
+    // SGEMM detects it is on a worker and stays serial).
     let mut out = vec![0.0f32; batch * m * n];
-    for i in 0..batch {
-        sgemm(
-            m,
-            ka,
-            n,
-            &sa[i * m * ka..(i + 1) * m * ka],
-            &sb[i * ka * n..(i + 1) * ka * n],
-            &mut out[i * m * n..(i + 1) * m * n],
-        );
-    }
+    let optr = exec::SyncPtr::new_raw(out.as_mut_ptr());
+    exec::for_chunks(batch, 2 * m * ka * n, |b0, b1| {
+        for i in b0..b1 {
+            // SAFETY: each batch index owns a disjoint slab of `out`.
+            let c = unsafe { optr.band(i * m * n, m * n) };
+            sgemm(
+                m,
+                ka,
+                n,
+                &sa[i * m * ka..(i + 1) * m * ka],
+                &sb[i * ka * n..(i + 1) * ka * n],
+                c,
+            );
+        }
+    });
     let mut out_dims = lead.dims().to_vec();
     out_dims.extend([m, n]);
     Tensor::from_vec(out, &out_dims)
@@ -275,15 +307,27 @@ impl Tensor {
         let wc = w.contiguous();
         let xs = xc.contiguous_data().unwrap();
         let ws = wc.contiguous_data().unwrap();
-        // C[i,j] = dot(x[i,:], w[j,:]) — both rows contiguous.
-        let mut out = vec![0.0f32; m * d];
-        for i in 0..m {
-            let xrow = &xs[i * k..(i + 1) * k];
-            let orow = &mut out[i * d..(i + 1) * d];
-            for (j, o) in orow.iter_mut().enumerate() {
-                *o = super::kernels::dot(xrow, &ws[j * k..(j + 1) * k]);
-            }
+        // C[i,j] = dot(x[i,:], w[j,:]) — both rows contiguous; output rows
+        // are independent, so the row loop fans out over the pool.
+        let out_len = m * d;
+        if out_len == 0 {
+            return Tensor::from_vec(Vec::new(), &[m, d]);
         }
+        let mut out = crate::tensor::pool::take(out_len);
+        let ptr = exec::SyncPtr::new(&mut out);
+        exec::for_chunks(m, 2 * k * d, |i0, i1| {
+            for i in i0..i1 {
+                let xrow = &xs[i * k..(i + 1) * k];
+                for j in 0..d {
+                    // SAFETY: row ranges are disjoint per chunk.
+                    unsafe {
+                        ptr.write(i * d + j, super::kernels::dot(xrow, &ws[j * k..(j + 1) * k]))
+                    };
+                }
+            }
+        });
+        // SAFETY: every output row was written above.
+        unsafe { out.set_len(out_len) };
         Tensor::from_vec(out, &[m, d])
     }
 }

@@ -2,14 +2,17 @@
 //! broadcasting, unary maps, reductions, matrix multiplication,
 //! convolution, pooling, and softmax.
 //!
-//! Layering: `kernels` holds the raw slice loops; each op first tries the
-//! contiguous fast path through `kernels`, falling back to strided
-//! iteration for views. Autograd (`crate::autograd`) wraps these
-//! non-differentiable primitives with pullbacks.
+//! Layering: `kernels` holds the raw slice loops; `exec` owns tier
+//! dispatch (contiguous / bias-row / strided), pooled output allocation,
+//! and data-parallel chunking over the persistent worker pool — every op
+//! file funnels through it instead of hand-rolling its own dispatch.
+//! Autograd (`crate::autograd`) wraps these non-differentiable primitives
+//! with pullbacks.
 
 pub mod attention;
 pub mod conv;
 pub mod elementwise;
+pub mod exec;
 pub mod kernels;
 pub mod matmul;
 pub mod reduce;

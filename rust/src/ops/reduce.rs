@@ -4,9 +4,14 @@
 //!
 //! Axis reductions are decomposed as `[outer, axis, inner]` loops; when
 //! `inner == 1` (reducing the last axis of a contiguous tensor) the inner
-//! loop is a contiguous slice reduction through `kernels`.
+//! loop is a contiguous slice reduction through `kernels`. Both axis and
+//! full reductions dispatch through the execution layer: axis reductions
+//! parallelize over the outer index (per-output arithmetic order is
+//! unchanged, so results are identical at any thread count); full
+//! reductions combine per-chunk partials in chunk order (deterministic
+//! for a fixed thread count, exact serial sum at one thread).
 
-use super::kernels;
+use super::{exec, kernels};
 use crate::dtype::DType;
 use crate::error::{Error, Result};
 use crate::tensor::Tensor;
@@ -41,15 +46,34 @@ impl ReduceKind {
     }
 }
 
+/// Reduce one contiguous slice with the tuned slice kernels.
+#[inline]
+fn reduce_slice(s: &[f32], kind: ReduceKind) -> f32 {
+    match kind {
+        ReduceKind::Sum => kernels::sum(s),
+        ReduceKind::Max => kernels::max(s),
+        ReduceKind::Min => kernels::min(s),
+        ReduceKind::Prod => s.iter().product(),
+    }
+}
+
 /// Reduce every element to a scalar tensor.
 pub fn reduce_all(t: &Tensor, kind: ReduceKind) -> Tensor {
     let v = match (kind, t.contiguous_data()) {
-        (ReduceKind::Sum, Some(s)) => kernels::sum(s),
-        (ReduceKind::Max, Some(s)) => kernels::max(s),
-        (ReduceKind::Min, Some(s)) => kernels::min(s),
-        _ => t
+        (ReduceKind::Prod, _) | (_, None) => t
             .iter()
             .fold(kind.identity(), |acc, v| kind.combine(acc, v)),
+        (_, Some(s)) => {
+            // Chunk-parallel partial reductions, combined in chunk order
+            // (single chunk ⇒ exactly the serial kernel's value).
+            exec::reduce_chunks(
+                s.len(),
+                1,
+                |a, b| reduce_slice(&s[a..b], kind),
+                |x, y| kind.combine(x, y),
+            )
+            .unwrap_or_else(|| kind.identity())
+        }
     };
     Tensor::scalar(v)
 }
@@ -61,35 +85,7 @@ pub fn reduce_axis(t: &Tensor, axis: isize, kind: ReduceKind, keepdim: bool) -> 
     let outer: usize = dims[..ax].iter().product();
     let len = dims[ax];
     let inner: usize = dims[ax + 1..].iter().product();
-
-    let src = t.contiguous();
-    let s = src.contiguous_data().unwrap();
-    let mut out = vec![kind.identity(); outer * inner];
-
-    if inner == 1 {
-        // Fast path: reduce contiguous rows.
-        for (o, row) in out.iter_mut().zip(s.chunks_exact(len)) {
-            *o = match kind {
-                ReduceKind::Sum => kernels::sum(row),
-                ReduceKind::Max => kernels::max(row),
-                ReduceKind::Min => kernels::min(row),
-                ReduceKind::Prod => row.iter().product(),
-            };
-        }
-    } else {
-        // Strided: accumulate axis slices onto the inner panel. The inner
-        // loop is contiguous, so it vectorizes.
-        for o in 0..outer {
-            let base = o * len * inner;
-            let panel = &mut out[o * inner..(o + 1) * inner];
-            for a in 0..len {
-                let row = &s[base + a * inner..base + (a + 1) * inner];
-                for (pv, &rv) in panel.iter_mut().zip(row) {
-                    *pv = kind.combine(*pv, rv);
-                }
-            }
-        }
-    }
+    let out_len = outer * inner;
 
     let mut out_dims = dims.to_vec();
     if keepdim {
@@ -97,7 +93,57 @@ pub fn reduce_axis(t: &Tensor, axis: isize, kind: ReduceKind, keepdim: bool) -> 
     } else {
         out_dims.remove(ax);
     }
-    Tensor::from_vec(out, &out_dims)
+
+    // Degenerate axes: nothing to combine — every output is the identity
+    // (an empty reduced axis), or there are no outputs at all.
+    if out_len == 0 || len == 0 {
+        return Tensor::from_vec(vec![kind.identity(); out_len], &out_dims);
+    }
+
+    let src = t.contiguous();
+    let s = src.contiguous_data().unwrap();
+
+    if inner == 1 {
+        // Fast path: each output reduces one contiguous row; rows split
+        // across the pool, per-row order untouched (thread-count
+        // independent results). Raw single-element writes, so the pooled
+        // buffer needs no initialization pass.
+        let mut out = crate::tensor::pool::take(out_len);
+        let ptr = exec::SyncPtr::new(&mut out);
+        exec::for_chunks(outer, len, |o0, o1| {
+            for (o, row) in (o0..o1).zip(s[o0 * len..o1 * len].chunks_exact(len)) {
+                // SAFETY: output ranges are disjoint per chunk.
+                unsafe { ptr.write(o, reduce_slice(row, kind)) };
+            }
+        });
+        // SAFETY: every output element was written exactly once.
+        unsafe { out.set_len(out_len) };
+        Tensor::from_vec(out, &out_dims)
+    } else {
+        // Strided: accumulate axis slices onto the inner panel — the
+        // inner loop is contiguous, so it vectorizes; panels are disjoint
+        // per outer index, so the outer loop parallelizes. The panels
+        // need the identity as their starting value anyway, so the
+        // resize doubles as the initialization that makes the parallel
+        // slice hand-off sound.
+        let mut out = crate::tensor::pool::take(out_len);
+        out.resize(out_len, kind.identity());
+        let ptr = exec::SyncPtr::new(&mut out);
+        exec::for_chunks(outer, len * inner, |o0, o1| {
+            // SAFETY: panel ranges are disjoint per chunk and initialized.
+            let panels = unsafe { ptr.slice(o0 * inner, o1 * inner) };
+            for (panel, o) in panels.chunks_exact_mut(inner).zip(o0..o1) {
+                let base = o * len * inner;
+                for a in 0..len {
+                    let row = &s[base + a * inner..base + (a + 1) * inner];
+                    for (pv, &rv) in panel.iter_mut().zip(row) {
+                        *pv = kind.combine(*pv, rv);
+                    }
+                }
+            }
+        });
+        Tensor::from_vec(out, &out_dims)
+    }
 }
 
 impl Tensor {

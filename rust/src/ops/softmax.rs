@@ -1,51 +1,35 @@
 //! Numerically stable softmax / log-softmax along the last axis, plus the
 //! fused softmax-cross-entropy forward used by the loss (paper eq 8).
+//!
+//! All three route through the execution layer's row dispatcher
+//! ([`exec::map_rows`] / [`exec::for_chunks`]): rows are independent, so
+//! they parallelize across the worker pool with no change in per-row
+//! arithmetic order (bit-identical at one thread).
 
-use super::kernels;
+use super::{exec, kernels};
 use crate::error::{Error, Result};
 use crate::tensor::Tensor;
 
 /// Softmax along the last axis, computed row-wise with the max-shift trick.
 pub fn softmax_lastdim(t: &Tensor) -> Result<Tensor> {
-    let src = t.contiguous();
-    let s = src.contiguous_data().unwrap();
-    let k = *t
-        .dims()
-        .last()
-        .ok_or_else(|| Error::msg("softmax: rank must be >= 1"))?;
-    // Independent passes over each (L1-resident) row: the exp pass
-    // carries no serial dependency, so fast_exp pipelines; a fused
-    // exp+sum loop is ~2x slower (EXPERIMENTS.md §Perf L3.3). The output
-    // comes from the buffer pool and is written by `extend` — no
-    // zero-fill.
-    let mut out = crate::tensor::pool::take(s.len());
-    for row in s.chunks_exact(k) {
-        let m = kernels::max(row);
-        out.extend(row.iter().map(|&v| kernels::fast_exp(v - m)));
-    }
-    for orow in out.chunks_exact_mut(k) {
-        let inv = 1.0 / kernels::sum(orow);
-        kernels::scale(orow, inv);
-    }
-    Tensor::from_vec(out, t.dims())
+    // Per row: a branch-free exp pass (no serial dependency, so fast_exp
+    // pipelines — a fused exp+sum loop is ~2x slower, EXPERIMENTS.md §Perf
+    // L3.3), then one normalization pass over the freshly written row.
+    exec::map_rows(
+        t,
+        "softmax",
+        kernels::max,
+        |m, v| kernels::fast_exp(v - m),
+        |dst| {
+            let inv = 1.0 / kernels::sum(dst);
+            kernels::scale(dst, inv);
+        },
+    )
 }
 
 /// Log-softmax along the last axis (stable: `x - m - ln Σ exp(x-m)`).
 pub fn log_softmax_lastdim(t: &Tensor) -> Result<Tensor> {
-    let src = t.contiguous();
-    let s = src.contiguous_data().unwrap();
-    let k = *t
-        .dims()
-        .last()
-        .ok_or_else(|| Error::msg("log_softmax: rank must be >= 1"))?;
-    let mut out = vec![0.0f32; s.len()];
-    for (orow, row) in out.chunks_exact_mut(k).zip(s.chunks_exact(k)) {
-        let lse = kernels::logsumexp(row);
-        for (o, &v) in orow.iter_mut().zip(row) {
-            *o = v - lse;
-        }
-    }
-    Tensor::from_vec(out, t.dims())
+    exec::map_rows(t, "log_softmax", kernels::logsumexp, |lse, v| v - lse, |_| ())
 }
 
 /// Fused forward of mean cross-entropy over logits `[b, C]` with integer
@@ -63,25 +47,42 @@ pub fn cross_entropy_forward(logits: &Tensor, labels: &Tensor) -> Result<(Tensor
     let c = logits.dims()[1];
     let src = logits.contiguous();
     let s = src.contiguous_data().unwrap();
-    let mut probs = vec![0.0f32; b * c];
-    let mut loss = 0.0f32;
-    for (i, y) in labels.iter().enumerate() {
-        let yi = y as usize;
-        if yi >= c {
-            return Err(Error::IndexOutOfBounds { index: yi, size: c });
-        }
-        let row = &s[i * c..(i + 1) * c];
-        let lse = kernels::logsumexp(row);
-        loss -= row[yi] - lse;
-        let prow = &mut probs[i * c..(i + 1) * c];
-        for (p, &v) in prow.iter_mut().zip(row) {
-            *p = kernels::fast_exp(v - lse);
-        }
+
+    // Validate labels up front so the parallel row loop is infallible.
+    let lab: Vec<usize> = labels.iter().map(|y| y as usize).collect();
+    if let Some(&bad) = lab.iter().find(|&&yi| yi >= c) {
+        return Err(Error::IndexOutOfBounds { index: bad, size: c });
     }
-    Ok((
-        Tensor::scalar(loss / b as f32),
-        Tensor::from_vec(probs, &[b, c])?,
-    ))
+
+    // Rows are independent: probs write disjoint slices, the loss is a
+    // sum of per-chunk partials combined in row order (deterministic for
+    // a fixed thread count; single-threaded it is the exact serial sum).
+    let mut probs = crate::tensor::pool::take(b * c);
+    let ptr = exec::SyncPtr::new(&mut probs);
+    let loss = exec::reduce_chunks(
+        b,
+        4 * c.max(1),
+        |r0, r1| {
+            let mut part = 0.0f32;
+            for i in r0..r1 {
+                let row = &s[i * c..(i + 1) * c];
+                let lse = kernels::logsumexp(row);
+                part -= row[lab[i]] - lse;
+                for (j, &v) in row.iter().enumerate() {
+                    // SAFETY: row ranges are disjoint per chunk.
+                    unsafe { ptr.write(i * c + j, kernels::fast_exp(v - lse)) };
+                }
+            }
+            part
+        },
+        |x, y| x + y,
+    )
+    .unwrap_or(0.0);
+    // SAFETY: every row of every chunk was written above.
+    unsafe { probs.set_len(b * c) };
+    // Empty batch: mean over nothing is 0, not 0/0 = NaN.
+    let mean = if b == 0 { 0.0 } else { loss / b as f32 };
+    Ok((Tensor::scalar(mean), Tensor::from_vec(probs, &[b, c])?))
 }
 
 impl Tensor {

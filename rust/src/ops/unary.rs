@@ -1,5 +1,9 @@
 //! Unary elementwise operations: negation, exp/log family, and the
 //! nonlinearities of paper §3.3 (ReLU, Sigmoid, Tanh, GELU).
+//!
+//! Every method delegates to [`Tensor::map`], which routes through the
+//! unified execution layer (`ops::exec`): pooled output buffers and
+//! chunk-parallel dispatch on large contiguous inputs.
 
 use crate::tensor::Tensor;
 

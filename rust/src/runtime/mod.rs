@@ -1,13 +1,19 @@
-//! PJRT runtime: load AOT-compiled HLO artifacts (produced by
-//! `python/compile/aot.py`) and execute them from Rust.
+//! Runtime services: the parallel execution pool that powers the native
+//! kernels, and (behind the `xla` feature) the PJRT engine that loads
+//! AOT-compiled HLO artifacts produced by `python/compile/aot.py`.
 //!
-//! Python never runs on this path — the artifacts are HLO *text* (the
-//! interchange format that survives the jax≥0.5 / xla_extension 0.5.1
-//! proto-id mismatch; see DESIGN.md), parsed and compiled once per process
-//! by the PJRT CPU client, then executed with `Tensor` inputs.
+//! The PJRT path: artifacts are HLO *text* (the interchange format that
+//! survives the jax≥0.5 / xla_extension 0.5.1 proto-id mismatch; see
+//! DESIGN.md), parsed and compiled once per process by the PJRT CPU
+//! client, then executed with `Tensor` inputs. Python never runs on that
+//! path. The `xla` crate is not in the offline vendor set, so the engine
+//! is compiled only with `--features xla`.
 
 mod artifact;
+#[cfg(feature = "xla")]
 mod engine;
+pub mod parallel;
 
 pub use artifact::{Artifact, Manifest};
+#[cfg(feature = "xla")]
 pub use engine::{Engine, LoadedModel};

@@ -1,0 +1,352 @@
+//! Persistent worker pool and the chunked `parallel_for` beneath the
+//! unified kernel-execution layer (`ops::exec`).
+//!
+//! Design: one process-wide pool of `N-1` workers (lazily spawned on the
+//! first parallel dispatch) plus the calling thread, fed from a single
+//! shared queue. Kernels never talk to the pool directly — they go through
+//! [`parallel_for`], which splits an index range into at most
+//! [`num_threads`] contiguous chunks and blocks until every chunk has run.
+//!
+//! The worker count is configurable: [`set_num_threads`] wins, then the
+//! `MINITENSOR_NUM_THREADS` environment variable, then the machine's
+//! available cores. A count of **1 reproduces the serial kernels exactly**
+//! (`parallel_for` degenerates to a direct call, so results are
+//! bit-identical to the pre-pool engine) — that invariant is what the
+//! `exec_parallel` integration tests pin down.
+//!
+//! Nested dispatch is safe: a `parallel_for` issued from inside another
+//! `parallel_for`'s chunk — on a worker *or* on the calling thread's own
+//! inline chunk (e.g. the batched conv loop calling the panel-parallel
+//! SGEMM) — runs serially instead of re-entering the finite pool, which
+//! avoids deadlock, keeps the outer-loop parallelism as the one that
+//! owns the cores, and never leaves the caller stalled behind queued
+//! outer tasks.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// A unit of work shipped to a worker.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Configured thread count; 0 means "not resolved yet" (resolve from the
+/// environment on first read).
+static NUM_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Hard ceiling on the configured thread count. It bounds the number of
+/// chunks `parallel_for` cuts (physical concurrency is already capped by
+/// the core-sized pool), so absurd `MINITENSOR_NUM_THREADS` values can't
+/// flood the queue with micro-chunks.
+const MAX_THREADS: usize = 256;
+
+thread_local! {
+    /// True on pool worker threads, so nested `parallel_for` calls run
+    /// serially instead of blocking the (finite) pool on itself.
+    static IN_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// The effective worker-thread count: the last [`set_num_threads`] value,
+/// else `MINITENSOR_NUM_THREADS`, else the number of available cores
+/// (clamped to `1..=256` either way).
+pub fn num_threads() -> usize {
+    let n = NUM_THREADS.load(Ordering::Relaxed);
+    if n != 0 {
+        return n;
+    }
+    // A parseable env value is clamped like set_num_threads (so `0`
+    // means serial, not "ignore me"); unparseable/unset falls back to
+    // the core count.
+    let resolved = std::env::var("MINITENSOR_NUM_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .map(|v| v.clamp(1, MAX_THREADS))
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(std::num::NonZeroUsize::get)
+                .unwrap_or(1)
+        })
+        .min(MAX_THREADS);
+    // compare_exchange, not store: a concurrent set_num_threads() must
+    // not be clobbered by this lazy default resolution.
+    match NUM_THREADS.compare_exchange(0, resolved, Ordering::Relaxed, Ordering::Relaxed) {
+        Ok(_) => resolved,
+        Err(current) => current,
+    }
+}
+
+/// Override the worker count for the whole process (clamped to
+/// `1..=256`). `1` forces exact serial execution (bit-identical to the
+/// pre-pool kernels). Counts above the machine's cores only change how
+/// finely work is chunked — physical concurrency is capped by the pool,
+/// which is sized to the available cores on first parallel dispatch.
+pub fn set_num_threads(n: usize) {
+    NUM_THREADS.store(n.clamp(1, MAX_THREADS), Ordering::Relaxed);
+}
+
+/// The count [`set_num_threads`]`(n)` would take effect as (`0` means
+/// "inherit the current setting") — for banners and reports that print a
+/// configured value before applying it, so they can't misreport the
+/// clamp.
+pub fn effective_threads(n: usize) -> usize {
+    if n == 0 {
+        num_threads()
+    } else {
+        n.clamp(1, MAX_THREADS)
+    }
+}
+
+/// Countdown latch: `parallel_for` blocks on it until every shipped chunk
+/// has finished, which is what makes the borrowed-closure hand-off sound.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch {
+            remaining: Mutex::new(n),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        }
+    }
+
+    fn count_down(&self) {
+        let mut r = self.remaining.lock().unwrap_or_else(|e| e.into_inner());
+        *r -= 1;
+        if *r == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut r = self.remaining.lock().unwrap_or_else(|e| e.into_inner());
+        while *r > 0 {
+            r = self
+                .done
+                .wait(r)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// The process-wide pool: a shared injector queue and detached workers
+/// that live for the rest of the process.
+struct Pool {
+    queue: Mutex<Sender<Task>>,
+}
+
+impl Pool {
+    fn submit(&self, task: Task) {
+        // The receiver lives in the detached workers and the sender in a
+        // static, so the channel can never be closed: send cannot fail.
+        let _ = self
+            .queue
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .send(task);
+    }
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        // Sized to the machine, independent of the configured thread
+        // count: the calling thread is always worker zero, and counts
+        // beyond the cores would only oversubscribe. Excess chunks queue
+        // and drain, so a later set_num_threads() never needs new threads.
+        let cores = std::thread::available_parallelism()
+            .map(std::num::NonZeroUsize::get)
+            .unwrap_or(1);
+        let workers = cores.saturating_sub(1).max(1);
+        let (tx, rx) = channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..workers {
+            let rx = Arc::clone(&rx);
+            std::thread::Builder::new()
+                .name(format!("minitensor-worker-{i}"))
+                .spawn(move || {
+                    IN_WORKER.with(|w| w.set(true));
+                    loop {
+                        // One idle worker at a time holds the queue mutex
+                        // while blocked in recv() (a lock hand-off); the
+                        // guard drops before task() runs, so slow kernels
+                        // never hold up dispatch to the other workers.
+                        let task = {
+                            let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
+                            guard.recv()
+                        };
+                        match task {
+                            Ok(task) => task(),
+                            Err(_) => break,
+                        }
+                    }
+                })
+                .expect("minitensor: failed to spawn pool worker");
+        }
+        Pool {
+            queue: Mutex::new(tx),
+        }
+    })
+}
+
+/// Run `body(start, end)` over a partition of `0..len` into contiguous
+/// chunks of at least `grain` elements, using at most [`num_threads`]
+/// chunks. Blocks until every chunk completes. With one effective thread
+/// (or when already on a pool worker) this is exactly `body(0, len)`.
+///
+/// Chunk boundaries depend only on `(len, grain, num_threads)`, so results
+/// are deterministic for a fixed thread count.
+pub fn parallel_for(len: usize, grain: usize, body: &(dyn Fn(usize, usize) + Sync)) {
+    if len == 0 {
+        return;
+    }
+    let grain = grain.max(1);
+    let chunks = num_threads().min(len.div_ceil(grain));
+    if chunks <= 1 || IN_WORKER.with(|w| w.get()) {
+        body(0, len);
+        return;
+    }
+
+    let pool = pool();
+    let latch = Arc::new(Latch::new(chunks - 1));
+    // SAFETY: every task signals `latch` when done and this function does
+    // not return before `latch.wait()` observes all of them, so the
+    // borrows captured by `body` strictly outlive every worker access.
+    // The calling thread's own chunk runs under `catch_unwind` so an
+    // unwinding kernel still waits for the workers before propagating.
+    let body_static: &'static (dyn Fn(usize, usize) + Sync) =
+        unsafe { std::mem::transmute(body) };
+
+    let base = len / chunks;
+    let extra = len % chunks;
+    let first_end = base + usize::from(extra > 0);
+    let mut start = first_end;
+    for i in 1..chunks {
+        let size = base + usize::from(i < extra);
+        let (s, e) = (start, start + size);
+        start = e;
+        let latch = Arc::clone(&latch);
+        pool.submit(Box::new(move || {
+            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                body_static(s, e);
+            }))
+            .is_ok();
+            if !ok {
+                latch.panicked.store(true, Ordering::Relaxed);
+            }
+            latch.count_down();
+        }));
+    }
+    debug_assert_eq!(start, len);
+
+    // Run the caller's own chunk with the worker flag set: a nested
+    // parallel_for inside it must degrade to serial (like on the
+    // workers) rather than queue subtasks behind the outer tasks and
+    // stall this thread on a nested latch. The flag was necessarily
+    // false to get here, so resetting to false is correct; catch_unwind
+    // ensures the reset happens even when the chunk panics.
+    IN_WORKER.with(|w| w.set(true));
+    let main_result =
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(0, first_end)));
+    IN_WORKER.with(|w| w.set(false));
+    latch.wait();
+    if let Err(payload) = main_result {
+        std::panic::resume_unwind(payload);
+    }
+    if latch.panicked.load(Ordering::Relaxed) {
+        panic!("minitensor: parallel_for worker chunk panicked");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::sync::MutexGuard;
+
+    /// Tests that mutate the global thread count take this lock so they
+    /// cannot race each other inside the multi-threaded test harness.
+    fn nt_lock() -> MutexGuard<'static, ()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| Mutex::new(()))
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn covers_every_index_exactly_once() {
+        // Correct partition at any thread count, including odd sizes.
+        for &len in &[1usize, 2, 7, 1000, 4097] {
+            let hits: Vec<AtomicUsize> = (0..len).map(|_| AtomicUsize::new(0)).collect();
+            parallel_for(len, 8, &|s, e| {
+                for h in &hits[s..e] {
+                    h.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "len={len}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_thread_runs_inline() {
+        let _guard = nt_lock();
+        let before = num_threads();
+        set_num_threads(1);
+        let tid = std::thread::current().id();
+        let ran = AtomicUsize::new(0);
+        parallel_for(100, 1, &|s, e| {
+            assert_eq!((s, e), (0, 100));
+            assert_eq!(std::thread::current().id(), tid);
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        set_num_threads(before);
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn nested_parallel_for_does_not_deadlock() {
+        let _guard = nt_lock();
+        let before = num_threads();
+        set_num_threads(4);
+        let total = AtomicU64::new(0);
+        parallel_for(64, 1, &|s, e| {
+            // Nested dispatch: must run serially on workers, never hang.
+            parallel_for(10, 1, &|s2, e2| {
+                total.fetch_add(((e - s) * (e2 - s2)) as u64, Ordering::Relaxed);
+            });
+        });
+        set_num_threads(before);
+        assert_eq!(total.load(Ordering::Relaxed), 64 * 10);
+    }
+
+    #[test]
+    fn grain_caps_chunk_count() {
+        let _guard = nt_lock();
+        let before = num_threads();
+        set_num_threads(8);
+        let calls = AtomicUsize::new(0);
+        parallel_for(100, 60, &|_, _| {
+            calls.fetch_add(1, Ordering::Relaxed);
+        });
+        set_num_threads(before);
+        // 100 elements at grain 60 → at most ceil(100/60) = 2 chunks.
+        assert!(calls.load(Ordering::Relaxed) <= 2);
+    }
+
+    #[test]
+    fn thread_count_never_zero() {
+        assert!(num_threads() >= 1);
+        let _guard = nt_lock();
+        let before = num_threads();
+        set_num_threads(0); // clamps to 1
+        assert_eq!(num_threads(), 1);
+        set_num_threads(before);
+    }
+}

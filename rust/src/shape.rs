@@ -213,6 +213,35 @@ impl StridedIter {
             remaining: shape.numel(),
         }
     }
+
+    /// Like [`StridedIter::new`], but positioned at row-major logical
+    /// index `linear` (yields `numel - linear` offsets). This is what lets
+    /// the execution layer split one strided walk across worker chunks
+    /// without replaying the odometer from zero.
+    pub fn starting_at(
+        shape: &Shape,
+        strides: &[isize],
+        offset: isize,
+        linear: usize,
+    ) -> StridedIter {
+        let dims = shape.dims().to_vec();
+        let mut index = vec![0usize; dims.len()];
+        let mut off = offset;
+        let mut rem = linear;
+        for ax in (0..dims.len()).rev() {
+            let d = dims[ax].max(1);
+            index[ax] = rem % d;
+            rem /= d;
+            off += index[ax] as isize * strides[ax];
+        }
+        StridedIter {
+            dims,
+            strides: strides.to_vec(),
+            index,
+            offset: off,
+            remaining: shape.numel().saturating_sub(linear),
+        }
+    }
 }
 
 impl Iterator for StridedIter {
@@ -335,5 +364,21 @@ mod tests {
         let s = Shape::new(&[2, 3]);
         let offsets: Vec<isize> = StridedIter::new(&s, &[0, 1], 0).collect();
         assert_eq!(offsets, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn starting_at_matches_skip() {
+        let s = Shape::new(&[3, 2, 4]);
+        let strides = [8isize, 4, 1]; // contiguous
+        let t_strides = [1isize, 12, 3]; // arbitrary permuted view
+        for strides in [&strides, &t_strides] {
+            for skip in [0usize, 1, 5, 11, 23, 24] {
+                let want: Vec<isize> =
+                    StridedIter::new(&s, strides.as_slice(), 2).skip(skip).collect();
+                let got: Vec<isize> =
+                    StridedIter::starting_at(&s, strides.as_slice(), 2, skip).collect();
+                assert_eq!(got, want, "skip={skip} strides={strides:?}");
+            }
+        }
     }
 }

@@ -37,15 +37,30 @@ struct Pool {
 /// Reuses a pooled buffer when one fits; the contents are cleared, so
 /// callers `extend`/`push` into it without any zero-fill pass.
 pub fn take(capacity: usize) -> Vec<f32> {
+    try_take(capacity).unwrap_or_else(|| Vec::with_capacity(capacity))
+}
+
+/// Like [`take`], but returns `None` instead of allocating on a pool
+/// miss — callers that have a cheaper fresh-allocation path (e.g.
+/// `vec![0.0; n]`, which gets lazily-zeroed pages from the OS) use this
+/// to only pay the recycle cost when there is something to recycle.
+///
+/// Selection is best-fit (smallest pooled buffer that is large enough),
+/// so a small long-lived tensor does not pin a giant recycled buffer.
+pub fn try_take(capacity: usize) -> Option<Vec<f32>> {
     POOL.with(|p| {
         let mut p = p.borrow_mut();
-        if let Some(i) = p.buffers.iter().position(|v| v.capacity() >= capacity) {
-            let mut v = p.buffers.swap_remove(i);
-            p.total_bytes -= v.capacity() * 4;
-            v.clear();
-            return v;
-        }
-        Vec::with_capacity(capacity)
+        let best = p
+            .buffers
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.capacity() >= capacity)
+            .min_by_key(|(_, v)| v.capacity())
+            .map(|(i, _)| i)?;
+        let mut v = p.buffers.swap_remove(best);
+        p.total_bytes -= v.capacity() * 4;
+        v.clear();
+        Some(v)
     })
 }
 
@@ -97,5 +112,18 @@ mod tests {
         put(Vec::with_capacity(10_000));
         let v = take(1_000_000);
         assert!(v.capacity() >= 1_000_000);
+    }
+
+    #[test]
+    fn take_prefers_best_fit() {
+        // A small request must not pin the big pooled buffer.
+        let big = Vec::with_capacity(1 << 20);
+        let small = Vec::with_capacity(8192);
+        let small_ptr = small.as_ptr();
+        put(big);
+        put(small);
+        let v = try_take(5000).expect("a pooled buffer fits");
+        assert_eq!(v.as_ptr(), small_ptr, "best-fit should pick the 8K buffer");
+        assert!(try_take(1 << 21).is_none(), "nothing big enough pooled");
     }
 }

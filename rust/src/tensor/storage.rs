@@ -39,14 +39,24 @@ impl Storage {
         }
     }
 
-    /// Allocate `n` zeroed elements.
+    /// Allocate `n` zeroed elements. Recycles a buffer from the
+    /// thread-local [`pool`](super::pool) when one fits (best-fit), so
+    /// zero-construction in hot loops (gradients, optimizer state) stops
+    /// hitting the allocator; on a pool miss it falls back to `vec!`,
+    /// which gets lazily-zeroed pages straight from the OS.
     pub fn zeros(n: usize) -> Storage {
-        Storage::from_vec(vec![0.0; n])
+        Storage::full(n, 0.0)
     }
 
-    /// Allocate `n` elements of `value`.
+    /// Allocate `n` elements of `value` (pool-backed, see [`Storage::zeros`]).
     pub fn full(n: usize, value: f32) -> Storage {
-        Storage::from_vec(vec![value; n])
+        match super::pool::try_take(n) {
+            Some(mut v) => {
+                v.resize(n, value);
+                Storage::from_vec(v)
+            }
+            None => Storage::from_vec(vec![value; n]),
+        }
     }
 
     /// Read access to the raw buffer.
@@ -113,5 +123,20 @@ mod tests {
         assert_eq!(Storage::zeros(3).as_slice(), &[0.0, 0.0, 0.0]);
         assert_eq!(Storage::full(2, 7.5).as_slice(), &[7.5, 7.5]);
         assert!(Storage::from_vec(vec![]).is_empty());
+    }
+
+    #[test]
+    fn zeros_recycles_pooled_buffers() {
+        // A pool-eligible buffer (≥ MIN_BYTES) must be reused by zeros()
+        // and come back fully cleared.
+        let n = 10_000;
+        let mut dirty = super::super::pool::take(n);
+        dirty.resize(n, 3.5);
+        let ptr = dirty.as_ptr();
+        super::super::pool::put(dirty);
+        let s = Storage::zeros(n);
+        assert_eq!(s.as_slice().as_ptr(), ptr, "should reuse the pooled buffer");
+        assert!(s.as_slice().iter().all(|&v| v == 0.0));
+        assert_eq!(s.len(), n);
     }
 }

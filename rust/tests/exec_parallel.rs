@@ -1,0 +1,246 @@
+//! Integration tests for the unified kernel-execution layer:
+//! broadcasting edge cases that the tier dispatch must survive (empty
+//! tensors, zero-length bias rows, strided fallbacks) and
+//! parallel-vs-serial equivalence for every kernel family migrated onto
+//! the worker pool (`MINITENSOR_NUM_THREADS=1` vs `=4` semantics via
+//! `runtime::parallel::set_num_threads`).
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use minitensor::data::Rng;
+use minitensor::ops::softmax::cross_entropy_forward;
+use minitensor::ops::{avg_pool2d, conv2d, max_pool2d, Conv2dSpec};
+use minitensor::runtime::parallel;
+use minitensor::tensor::Tensor;
+
+/// The thread count is process-global: tests that flip it serialize here.
+fn nt_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `f` once at 1 thread and once at 4, returning both results.
+fn serial_vs_parallel<T>(f: impl Fn() -> T) -> (T, T) {
+    let before = parallel::num_threads();
+    parallel::set_num_threads(1);
+    let serial = f();
+    parallel::set_num_threads(4);
+    let par = f();
+    parallel::set_num_threads(before);
+    (serial, par)
+}
+
+// ---------------------------------------------------------------------
+// Broadcasting / tier-dispatch edge cases
+// ---------------------------------------------------------------------
+
+#[test]
+fn empty_tensors_broadcast_to_empty() {
+    let a = Tensor::from_vec(Vec::new(), &[0]).unwrap();
+    let b = Tensor::from_vec(Vec::new(), &[0]).unwrap();
+    let y = a.add(&b).unwrap();
+    assert_eq!(y.dims(), &[0]);
+    assert_eq!(y.numel(), 0);
+
+    let m = Tensor::from_vec(Vec::new(), &[2, 0]).unwrap();
+    let v = Tensor::from_vec(Vec::new(), &[0]).unwrap();
+    // k = 0 bias row: must dispatch to the empty result, not chunk by 0.
+    let y = m.add(&v).unwrap();
+    assert_eq!(y.dims(), &[2, 0]);
+
+    let w = Tensor::from_vec(Vec::new(), &[0, 3]).unwrap();
+    let bias = Tensor::from_vec(vec![1.0, 2.0, 3.0], &[3]).unwrap();
+    let y = w.add(&bias).unwrap();
+    assert_eq!(y.dims(), &[0, 3]);
+    assert_eq!(y.numel(), 0);
+}
+
+#[test]
+fn empty_unary_softmax_and_reduce() {
+    let m = Tensor::from_vec(Vec::new(), &[2, 0]).unwrap();
+    assert_eq!(m.relu().dims(), &[2, 0]);
+    assert_eq!(m.softmax().unwrap().dims(), &[2, 0]);
+    // Reducing an empty axis yields the reduction identity per output.
+    let s = m.sum_axis(1, false).unwrap();
+    assert_eq!(s.dims(), &[2]);
+    assert_eq!(s.to_vec(), vec![0.0, 0.0]);
+    let mx = m.max_axis(1, false).unwrap();
+    assert_eq!(mx.to_vec(), vec![f32::NEG_INFINITY; 2]);
+    // No outputs at all.
+    let z = Tensor::from_vec(Vec::new(), &[0, 5]).unwrap();
+    assert_eq!(z.sum_axis(0, false).unwrap().dims(), &[5]);
+    assert_eq!(z.sum_axis(1, false).unwrap().dims(), &[0]);
+    // Full reduction over nothing is the identity.
+    assert_eq!(m.sum().item().unwrap(), 0.0);
+}
+
+#[test]
+fn non_contiguous_rhs_falls_to_strided_tier() {
+    // Same shapes but a transposed RHS: tier 1 must reject it (no
+    // contiguous slice) and tier 3 must produce the materialized answer.
+    let mut rng = Rng::new(11);
+    let a = Tensor::randn(&[6, 4], 0.0, 1.0, &mut rng);
+    let b = Tensor::randn(&[4, 6], 0.0, 1.0, &mut rng).t().unwrap();
+    assert!(!b.is_contiguous());
+    let direct = a.add(&b).unwrap();
+    let via_copy = a.add(&b.contiguous()).unwrap();
+    assert_eq!(direct.to_vec(), via_copy.to_vec());
+
+    // Rank-1 RHS over a non-contiguous LHS likewise skips the row tier.
+    let at = a.t().unwrap(); // [4, 6]
+    let bias = Tensor::from_vec(vec![1., 2., 3., 4., 5., 6.], &[6]).unwrap();
+    let y = at.add(&bias).unwrap();
+    let y_ref = at.contiguous().add(&bias).unwrap();
+    assert_eq!(y.to_vec(), y_ref.to_vec());
+}
+
+// ---------------------------------------------------------------------
+// Parallel-vs-serial equivalence, one test per migrated kernel family.
+// Elementwise, matmul, and conv kernels keep per-element accumulation
+// order, so they must match bit-for-bit at any thread count; reductions
+// and the loss combine chunk partials, so they get a tight tolerance.
+// ---------------------------------------------------------------------
+
+#[test]
+fn elementwise_tiers_match_across_thread_counts() {
+    let _guard = nt_lock();
+    let mut rng = Rng::new(1);
+    let n = 1 << 17; // comfortably above the parallel threshold
+    let a = Tensor::randn(&[n], 0.0, 1.0, &mut rng);
+    let b = Tensor::randn(&[n], 0.0, 1.0, &mut rng);
+    let (s, p) = serial_vs_parallel(|| a.mul(&b).unwrap().add(&a).unwrap().to_vec());
+    assert_eq!(s, p, "tier 1 fused loop");
+
+    let rows = Tensor::randn(&[512, 300], 0.0, 1.0, &mut rng);
+    let bias = Tensor::randn(&[300], 0.0, 1.0, &mut rng);
+    let (s, p) = serial_vs_parallel(|| rows.add(&bias).unwrap().to_vec());
+    assert_eq!(s, p, "tier 2 bias rows");
+
+    let col = Tensor::randn(&[512, 1], 0.0, 1.0, &mut rng);
+    let (s, p) = serial_vs_parallel(|| rows.mul(&col).unwrap().to_vec());
+    assert_eq!(s, p, "tier 3 strided broadcast");
+}
+
+#[test]
+fn unary_map_matches_across_thread_counts() {
+    let _guard = nt_lock();
+    let mut rng = Rng::new(2);
+    let a = Tensor::randn(&[1 << 17], 0.0, 1.0, &mut rng);
+    let (s, p) = serial_vs_parallel(|| a.gelu().to_vec());
+    assert_eq!(s, p);
+}
+
+#[test]
+fn softmax_family_matches_across_thread_counts() {
+    let _guard = nt_lock();
+    let mut rng = Rng::new(3);
+    let logits = Tensor::randn(&[1024, 128], 0.0, 2.0, &mut rng);
+    let (s, p) = serial_vs_parallel(|| logits.softmax().unwrap().to_vec());
+    assert_eq!(s, p, "softmax rows are independent");
+    let (s, p) = serial_vs_parallel(|| logits.log_softmax().unwrap().to_vec());
+    assert_eq!(s, p, "log_softmax rows are independent");
+
+    let labels_vec: Vec<i32> = (0..1024).map(|i| (i % 128) as i32).collect();
+    let labels = Tensor::from_vec_i32(labels_vec, &[1024]).unwrap();
+    let ((ls, ps), (lp, pp)) = serial_vs_parallel(|| {
+        let (loss, probs) = cross_entropy_forward(&logits, &labels).unwrap();
+        (loss.item().unwrap(), probs.to_vec())
+    });
+    assert_eq!(ps, pp, "probs rows are independent");
+    assert!((ls - lp).abs() <= 1e-4 * ls.abs(), "loss partials: {ls} vs {lp}");
+}
+
+#[test]
+fn reductions_match_across_thread_counts() {
+    let _guard = nt_lock();
+    let mut rng = Rng::new(4);
+    let a = Tensor::randn(&[1 << 17], 0.0, 1.0, &mut rng);
+    let (s, p) = serial_vs_parallel(|| a.sum().item().unwrap());
+    assert!((s - p).abs() <= 0.05, "sum {s} vs {p}");
+    let (s, p) = serial_vs_parallel(|| a.max_all().item().unwrap());
+    assert_eq!(s, p, "max is order-free");
+
+    let m = Tensor::randn(&[512, 300], 0.0, 1.0, &mut rng);
+    let (s, p) = serial_vs_parallel(|| m.sum_axis(1, false).unwrap().to_vec());
+    assert_eq!(s, p, "last-axis rows keep serial order");
+    let (s, p) = serial_vs_parallel(|| m.sum_axis(0, false).unwrap().to_vec());
+    assert_eq!(s, p, "panel accumulation keeps serial order");
+
+    let cube = Tensor::randn(&[32, 64, 48], 0.0, 1.0, &mut rng);
+    let (s, p) = serial_vs_parallel(|| cube.sum_axis(1, true).unwrap().to_vec());
+    assert_eq!(s, p, "middle axis");
+}
+
+#[test]
+fn matmul_matches_bitwise_across_thread_counts() {
+    let _guard = nt_lock();
+    let mut rng = Rng::new(5);
+    // Above the 64³ small-problem cutoff so the blocked panel path runs,
+    // with ragged edges in every blocking dimension.
+    let a = Tensor::randn(&[161, 140], 0.0, 1.0, &mut rng);
+    let b = Tensor::randn(&[140, 120], 0.0, 1.0, &mut rng);
+    let (s, p) = serial_vs_parallel(|| a.matmul(&b).unwrap().to_vec());
+    assert_eq!(s, p, "panel-parallel SGEMM keeps accumulation order");
+
+    let x = Tensor::randn(&[96, 200], 0.0, 1.0, &mut rng);
+    let w = Tensor::randn(&[64, 200], 0.0, 1.0, &mut rng);
+    let (s, p) = serial_vs_parallel(|| x.matmul_nt(&w).unwrap().to_vec());
+    assert_eq!(s, p, "row-parallel x·Wᵀ");
+
+    let ba = Tensor::randn(&[8, 48, 40], 0.0, 1.0, &mut rng);
+    let bb = Tensor::randn(&[8, 40, 32], 0.0, 1.0, &mut rng);
+    let (s, p) = serial_vs_parallel(|| ba.matmul(&bb).unwrap().to_vec());
+    assert_eq!(s, p, "batch-parallel matmul");
+}
+
+#[test]
+fn conv_and_pool_match_bitwise_across_thread_counts() {
+    let _guard = nt_lock();
+    let mut rng = Rng::new(6);
+    let x = Tensor::randn(&[6, 3, 20, 20], 0.0, 1.0, &mut rng);
+    let w = Tensor::randn(&[8, 3, 3, 3], 0.0, 1.0, &mut rng);
+    let spec = Conv2dSpec { stride: 1, padding: 1 };
+    let (s, p) = serial_vs_parallel(|| conv2d(&x, &w, spec).unwrap().to_vec());
+    assert_eq!(s, p, "batch-parallel conv2d");
+
+    let (s, p) = serial_vs_parallel(|| {
+        let (y, arg) = max_pool2d(&x, 2).unwrap();
+        (y.to_vec(), arg)
+    });
+    assert_eq!(s, p, "image-parallel max_pool2d");
+    let (s, p) = serial_vs_parallel(|| avg_pool2d(&x, 2).unwrap().to_vec());
+    assert_eq!(s, p, "image-parallel avg_pool2d");
+}
+
+#[test]
+fn training_is_equivalent_across_thread_counts() {
+    let _guard = nt_lock();
+    // End-to-end: a short native training run must descend identically in
+    // shape (losses combine partials, so compare loosely) at 1 vs 4
+    // threads — the whole tape runs through the exec layer.
+    use minitensor::coordinator::{Config, TrainConfig, Trainer};
+    let cfg = Config::parse(
+        "[train]\ndataset = blobs\nn_examples = 256\ninput_side = 2\nhidden = 16\nclasses = 3\nsteps = 40\nbatch_size = 32\nlr = 0.01\noptimizer = adam\n",
+    )
+    .unwrap();
+    let tc = TrainConfig::from_config(&cfg).unwrap();
+    let run = |threads: usize| {
+        let mut tc = tc.clone();
+        tc.threads = threads;
+        Trainer::new(tc).run().unwrap()
+    };
+    let before = parallel::num_threads();
+    let r1 = run(1);
+    let r4 = run(4);
+    parallel::set_num_threads(before);
+    assert!(r1.final_loss < r1.initial_loss);
+    assert!(r4.final_loss < r4.initial_loss);
+    assert!(
+        (r1.final_loss - r4.final_loss).abs() < 0.05,
+        "{} vs {}",
+        r1.final_loss,
+        r4.final_loss
+    );
+}

@@ -2,8 +2,12 @@
 //! produced by `make artifacts` and executes them via PJRT, checking
 //! numerics against the native engine.
 //!
-//! These tests require `artifacts/` to exist (run `make artifacts`); they
-//! are skipped gracefully otherwise so `cargo test` works standalone.
+//! These tests require building with `--features xla` (the whole file is
+//! compiled out otherwise) and `artifacts/` to exist (run
+//! `make artifacts`); they are skipped gracefully when artifacts are
+//! missing so `cargo test` works standalone.
+
+#![cfg(feature = "xla")]
 
 use minitensor::data::Rng;
 use minitensor::runtime::Engine;
