@@ -12,6 +12,7 @@
 
 use super::var::{BackwardOp, Var};
 use crate::error::Result;
+use crate::ops::attention::{attention_backward, attention_forward};
 use crate::ops::conv::{
     avg_pool2d, conv2d, conv2d_backward_input, conv2d_backward_weight, max_pool2d, Conv2dSpec,
 };
@@ -669,6 +670,34 @@ impl Var {
     }
 
     // ---------------------------------------------------------------
+    // Attention
+    // ---------------------------------------------------------------
+
+    /// Scaled-dot-product attention `softmax(q kᵀ / √d) v` with recorded
+    /// pullbacks w.r.t. q, k, and v. The forward saves the softmax
+    /// probability rows so the backward reuses them instead of re-running
+    /// the softmax; every gradient product dispatches through the
+    /// execution layer (see `ops::attention`).
+    pub fn attention(&self, key: &Var, value: &Var) -> Result<Var> {
+        let (out, probs) = attention_forward(&self.data(), &key.data(), &value.data())?;
+        if !Var::any_requires_grad(&[self, key, value]) {
+            return Ok(constant(out));
+        }
+        let (q, k, v) = (self.data(), key.data(), value.data());
+        Ok(Var::from_op(
+            out,
+            BackwardOp {
+                parents: vec![self.clone(), key.clone(), value.clone()],
+                name: "attention",
+                pullback: Box::new(move |g| {
+                    let (dq, dk, dv) = attention_backward(g, &q, &k, &v, &probs).unwrap();
+                    vec![Some(dq), Some(dk), Some(dv)]
+                }),
+            },
+        ))
+    }
+
+    // ---------------------------------------------------------------
     // Convolution / pooling (paper eq 6)
     // ---------------------------------------------------------------
 
@@ -948,6 +977,39 @@ mod tests {
         p.sum().unwrap().backward().unwrap();
         assert_eq!(x.grad().unwrap().dims(), &[1, 1, 4, 4]);
         assert_eq!(w.grad().unwrap().dims(), &[2, 1, 3, 3]);
+    }
+
+    #[test]
+    fn attention_records_and_matches_gradcheck() {
+        use crate::autograd::gradcheck::gradcheck;
+        let mut rng = Rng::new(7);
+        let q0 = Tensor::randn(&[3, 4], 0.0, 1.0, &mut rng);
+        let k = Tensor::randn(&[5, 4], 0.0, 1.0, &mut rng);
+        let v = Tensor::randn(&[5, 4], 0.0, 1.0, &mut rng);
+
+        // All three grads flow and have the right shapes.
+        let (qv, kv, vv) = (
+            Var::from_tensor(q0.clone(), true),
+            Var::from_tensor(k.clone(), true),
+            Var::from_tensor(v.clone(), true),
+        );
+        let out = qv.attention(&kv, &vv).unwrap();
+        assert_eq!(out.op_name(), "attention");
+        out.sum().unwrap().backward().unwrap();
+        assert_eq!(qv.grad().unwrap().dims(), &[3, 4]);
+        assert_eq!(kv.grad().unwrap().dims(), &[5, 4]);
+        assert_eq!(vv.grad().unwrap().dims(), &[5, 4]);
+
+        // Finite-difference check w.r.t. each input through the tape.
+        let kc = Var::from_tensor(k.clone(), false);
+        let vc = Var::from_tensor(v.clone(), false);
+        let rq = gradcheck(|x| x.attention(&kc, &vc)?.sum(), &q0, 1e-2, 1e-2).unwrap();
+        assert!(rq.pass, "dq: {rq:?}");
+        let qc = Var::from_tensor(q0.clone(), false);
+        let rk = gradcheck(|x| qc.attention(x, &vc)?.sum(), &k, 1e-2, 1e-2).unwrap();
+        assert!(rk.pass, "dk: {rk:?}");
+        let rv = gradcheck(|x| qc.attention(&kc, x)?.sum(), &v, 1e-2, 1e-2).unwrap();
+        assert!(rv.pass, "dv: {rv:?}");
     }
 
     #[test]

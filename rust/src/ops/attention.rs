@@ -1,15 +1,32 @@
-//! Native scaled-dot-product attention: `softmax(q kᵀ / √d) v`.
+//! Native scaled-dot-product attention: `softmax(q kᵀ / √d) v`, forward
+//! **and** backward.
 //!
-//! Composition of the blocked SGEMM and the row-softmax kernels; the
-//! XLA-AOT counterpart is the fused `attention_128x64` Pallas artifact
+//! Both passes are compositions of execution-layer kernels — the
+//! row-parallel fused `x·Wᵀ` product, the panel-parallel blocked SGEMM,
+//! the row-parallel softmax, and chunk-parallel elementwise maps — so the
+//! whole op (QK scores, softmax, V mix, and every gradient product) fans
+//! out over the worker pool and is bit-identical at any
+//! `MINITENSOR_NUM_THREADS` (each constituent kernel keeps per-element
+//! accumulation order; the softmax pullback is row-local). The forward
+//! saves the probability rows so the backward never re-runs the softmax.
+//!
+//! The XLA-AOT counterpart is the fused `attention_128x64` Pallas artifact
 //! (see `python/compile/kernels/attention.py`), cross-checked in
 //! `rust/tests/runtime_xla.rs`.
 
 use crate::error::{Error, Result};
 use crate::tensor::Tensor;
 
-/// Single-head attention over `[seq_q, d]`, `[seq_k, d]`, `[seq_k, d]`.
+/// Single-head attention over `[seq_q, d]`, `[seq_k, d]`, `[seq_k, dv]`.
 pub fn attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Result<Tensor> {
+    attention_forward(q, k, v).map(|(out, _)| out)
+}
+
+/// Forward pass that also returns the softmax probability matrix
+/// `P = softmax(q kᵀ / √d)` (`[seq_q, seq_k]`) — the residual
+/// [`attention_backward`] consumes, saved exactly like the conv forward
+/// saves its argmax indices.
+pub fn attention_forward(q: &Tensor, k: &Tensor, v: &Tensor) -> Result<(Tensor, Tensor)> {
     if q.rank() != 2 || k.rank() != 2 || v.rank() != 2 {
         return Err(Error::ShapeMismatch {
             op: "attention",
@@ -28,7 +45,44 @@ pub fn attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Result<Tensor> {
     let scale = 1.0 / (d as f32).sqrt();
     let scores = q.matmul_nt(k)?.mul_scalar(scale);
     let probs = scores.softmax()?;
-    probs.matmul(v)
+    let out = probs.matmul(v)?;
+    Ok((out, probs))
+}
+
+/// Gradient of [`attention_forward`] w.r.t. `(q, k, v)` given the output
+/// cotangent `grad_out` (`[seq_q, dv]`) and the saved `probs`.
+///
+/// With `P = softmax(S)`, `S = q kᵀ / √d`, `O = P v`:
+///
+/// ```text
+/// v̄ = Pᵀ ḡ
+/// P̄ = ḡ vᵀ
+/// S̄ = (P̄ − rowsum(P̄ ⊙ P)) ⊙ P / √d     (row-local softmax pullback)
+/// q̄ = S̄ k       k̄ = S̄ᵀ q
+/// ```
+///
+/// Every product dispatches through the execution layer, so the gradients
+/// inherit its determinism guarantee (bit-identical at any thread count).
+pub fn attention_backward(
+    grad_out: &Tensor,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    probs: &Tensor,
+) -> Result<(Tensor, Tensor, Tensor)> {
+    let d = q.dims()[1];
+    let scale = 1.0 / (d as f32).sqrt();
+    // v̄ = Pᵀ ḡ  [seq_k, dv]
+    let dv = probs.t()?.matmul(grad_out)?;
+    // P̄ = ḡ vᵀ  [seq_q, seq_k] — fused transpose via the x·Wᵀ kernel.
+    let dp = grad_out.matmul_nt(v)?;
+    // Softmax pullback, then undo the 1/√d scaling of the scores.
+    let dot = dp.mul(probs)?.sum_axis(-1, true)?;
+    let ds = dp.sub(&dot)?.mul(probs)?.mul_scalar(scale);
+    // q̄ = S̄ k  [seq_q, d];  k̄ = S̄ᵀ q  [seq_k, d]
+    let dq = ds.matmul(k)?;
+    let dk = ds.t()?.matmul(q)?;
+    Ok((dq, dk, dv))
 }
 
 impl Tensor {
@@ -92,5 +146,79 @@ mod tests {
         let v = Tensor::zeros(&[16, 8]);
         assert!(q.attention(&k, &v).is_err());
         assert!(q.attention(&Tensor::zeros(&[8]), &v).is_err());
+    }
+
+    #[test]
+    fn forward_saves_the_softmax_rows() {
+        let mut rng = Rng::new(4);
+        let q = Tensor::randn(&[3, 8], 0.0, 1.0, &mut rng);
+        let k = Tensor::randn(&[5, 8], 0.0, 1.0, &mut rng);
+        let v = Tensor::randn(&[5, 6], 0.0, 1.0, &mut rng);
+        let (out, probs) = attention_forward(&q, &k, &v).unwrap();
+        assert_eq!(probs.dims(), &[3, 5]);
+        let scale = 1.0 / 8f32.sqrt();
+        let expect = q.matmul_nt(&k).unwrap().mul_scalar(scale).softmax().unwrap();
+        assert_eq!(probs.to_vec(), expect.to_vec());
+        assert_eq!(out.to_vec(), probs.matmul(&v).unwrap().to_vec());
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        // Probe dq, dk, dv against central differences of
+        // L = Σ attention(q, k, v) (unit output cotangent).
+        let mut rng = Rng::new(5);
+        let q = Tensor::randn(&[3, 4], 0.0, 1.0, &mut rng);
+        let k = Tensor::randn(&[5, 4], 0.0, 1.0, &mut rng);
+        let v = Tensor::randn(&[5, 4], 0.0, 1.0, &mut rng);
+        let (out, probs) = attention_forward(&q, &k, &v).unwrap();
+        let g = Tensor::ones(out.dims());
+        let (dq, dk, dv) = attention_backward(&g, &q, &k, &v, &probs).unwrap();
+        let eps = 1e-2;
+        let loss = |q: &Tensor, k: &Tensor, v: &Tensor| {
+            attention(q, k, v).unwrap().sum().item().unwrap()
+        };
+        for (which, base, an) in [("q", &q, &dq), ("k", &k, &dk), ("v", &v, &dv)] {
+            let bv = base.to_vec();
+            for probe in [0usize, 3, 7, 11] {
+                let mut plus = bv.clone();
+                plus[probe] += eps;
+                let mut minus = bv.clone();
+                minus[probe] -= eps;
+                let tp = Tensor::from_vec(plus, base.dims()).unwrap();
+                let tm = Tensor::from_vec(minus, base.dims()).unwrap();
+                let (lp, lm) = match which {
+                    "q" => (loss(&tp, &k, &v), loss(&tm, &k, &v)),
+                    "k" => (loss(&q, &tp, &v), loss(&q, &tm, &v)),
+                    _ => (loss(&q, &k, &tp), loss(&q, &k, &tm)),
+                };
+                let fd = (lp - lm) / (2.0 * eps);
+                let got = an.to_vec()[probe];
+                assert!(
+                    (fd - got).abs() < 2e-2,
+                    "d{which} probe {probe}: fd={fd} an={got}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backward_accepts_non_contiguous_views() {
+        // Transposed-view q/k/v must produce the same grads as their
+        // materialized copies (the exec tiers re-dispatch, values agree).
+        let mut rng = Rng::new(6);
+        let qt = Tensor::randn(&[4, 6], 0.0, 1.0, &mut rng).t().unwrap();
+        let kt = Tensor::randn(&[4, 8], 0.0, 1.0, &mut rng).t().unwrap();
+        let vt = Tensor::randn(&[4, 8], 0.0, 1.0, &mut rng).t().unwrap();
+        assert!(!qt.is_contiguous());
+        let (out, probs) = attention_forward(&qt, &kt, &vt).unwrap();
+        let g = Tensor::ones(out.dims());
+        let (dq, dk, dv) = attention_backward(&g, &qt, &kt, &vt, &probs).unwrap();
+        let (qc, kc, vc) = (qt.contiguous(), kt.contiguous(), vt.contiguous());
+        let (out_c, probs_c) = attention_forward(&qc, &kc, &vc).unwrap();
+        let (dq_c, dk_c, dv_c) = attention_backward(&g, &qc, &kc, &vc, &probs_c).unwrap();
+        assert_eq!(out.to_vec(), out_c.to_vec());
+        assert_eq!(dq.to_vec(), dq_c.to_vec());
+        assert_eq!(dk.to_vec(), dk_c.to_vec());
+        assert_eq!(dv.to_vec(), dv_c.to_vec());
     }
 }

@@ -6,11 +6,21 @@
 //! forward parallelizes over the batch through the execution layer (each
 //! image's `[cout, oh*ow]` output slab is disjoint and each task owns a
 //! private im2col buffer); for batch-1 inputs the nested SGEMM's panel
-//! parallelism takes over instead. The backward passes (w.r.t. input and
-//! weight) reuse col2im / the transposed GEMM, exactly the "standard
-//! pullbacks with respect to x and w" the paper implements; they stay
-//! batch-serial (the weight gradient accumulates across images) and
-//! inherit the SGEMM's panel parallelism.
+//! parallelism takes over instead.
+//!
+//! The backward passes (w.r.t. input and weight) reuse col2im / the
+//! transposed GEMM, exactly the "standard pullbacks with respect to x and
+//! w" the paper implements, and both fan out through the execution layer:
+//!
+//! - `dx`: each image's `[cin, h, w]` slab is disjoint, so the batch loop
+//!   chunks over the pool like the forward ([`exec::for_chunks`]), each
+//!   task owning private pooled scratch.
+//! - `dW`: the weight gradient *sums over the batch*, so the batch is cut
+//!   into a **fixed partition** ([`exec::for_partials`], boundaries
+//!   independent of the thread count), each chunk accumulates a private
+//!   pooled dW partial, and the partials are folded in a fixed-order
+//!   binary tree — the result is bit-identical at any
+//!   `MINITENSOR_NUM_THREADS`.
 
 use super::exec;
 use super::matmul::sgemm;
@@ -199,6 +209,16 @@ pub fn conv2d_backward_input(
             got: format!("{cout}"),
         });
     }
+    // The fan-out below writes dx through raw disjoint bands sized from
+    // input_dims, so a caller-supplied mismatch must fail here rather
+    // than walk past the allocation.
+    if input_dims.len() != 4 || input_dims[0] != n || input_dims[1] != cin {
+        return Err(Error::ShapeMismatch {
+            op: "conv2d_backward_input",
+            expected: format!("input_dims [{n}, {cin}, h, w]"),
+            got: format!("{input_dims:?}"),
+        });
+    }
     let (h, w) = (input_dims[2], input_dims[3]);
     let k = cin * kh * kw;
 
@@ -214,57 +234,60 @@ pub fn conv2d_backward_input(
         }
     }
 
+    // Each image's dx slab is disjoint: fan the batch out over the pool
+    // (mirrors the forward). Per-image arithmetic is unchanged, so the
+    // gradient is bit-identical at any thread count.
     let mut dx = vec![0.0f32; input_dims.iter().product()];
-    let mut cols = vec![0.0f32; k * oh * ow];
-    for i in 0..n {
-        cols.iter_mut().for_each(|v| *v = 0.0);
-        // cols [k, oh*ow] = Wᵀ [k, cout] · dy[i] [cout, oh*ow]
-        sgemm(
-            k,
-            cout,
-            oh * ow,
-            &wt,
-            &gs[i * cout * oh * ow..(i + 1) * cout * oh * ow],
-            &mut cols,
-        );
-        col2im(
-            &cols,
-            cin,
-            h,
-            w,
-            kh,
-            kw,
-            spec,
-            oh,
-            ow,
-            &mut dx[i * cin * h * w..(i + 1) * cin * h * w],
-        );
-    }
+    let dxptr = exec::SyncPtr::new_raw(dx.as_mut_ptr());
+    let wt = &wt;
+    exec::for_chunks(n, 2 * cout * k * oh * ow, |i0, i1| {
+        // Per-task scratch, recycled through the worker-local pool.
+        let mut cols = crate::tensor::pool::take(k * oh * ow);
+        cols.resize(k * oh * ow, 0.0);
+        for i in i0..i1 {
+            cols.iter_mut().for_each(|v| *v = 0.0);
+            // cols [k, oh*ow] = Wᵀ [k, cout] · dy[i] [cout, oh*ow]
+            sgemm(
+                k,
+                cout,
+                oh * ow,
+                wt,
+                &gs[i * cout * oh * ow..(i + 1) * cout * oh * ow],
+                &mut cols,
+            );
+            // SAFETY: each image owns a disjoint, zero-initialized slab.
+            let dxi = unsafe { dxptr.band(i * cin * h * w, cin * h * w) };
+            col2im(&cols, cin, h, w, kh, kw, spec, oh, ow, dxi);
+        }
+        crate::tensor::pool::put(cols);
+    });
     Tensor::from_vec(dx, input_dims)
 }
 
-/// Gradient of conv2d w.r.t. the weight: `dW = dy · colsᵀ` summed over the
-/// batch.
-pub fn conv2d_backward_weight(
-    grad_out: &Tensor,
-    x: &Tensor,
-    weight_dims: &[usize],
+/// Cap on the number of dW partial buffers `conv2d_backward_weight` cuts
+/// the batch into. Bounds partial memory at `MAX_DW_PARTIALS × |W|` while
+/// keeping the partition — and therefore the combine tree and the float
+/// result — a pure function of the batch size, never the thread count.
+const MAX_DW_PARTIALS: usize = 16;
+
+/// Accumulate `dW += dy[i] · colsᵀ` for images `i0..i1` into `dw`, using
+/// the provided per-task scratch buffers.
+#[allow(clippy::too_many_arguments)]
+fn backward_weight_range(
+    i0: usize,
+    i1: usize,
+    xs: &[f32],
+    gs: &[f32],
+    (cin, h, w): (usize, usize, usize),
+    (cout, oh, ow): (usize, usize, usize),
+    (kh, kw): (usize, usize),
     spec: Conv2dSpec,
-) -> Result<Tensor> {
-    let (n, cin, h, w) = dims4(x, "conv2d input")?;
-    let (_, cout, oh, ow) = dims4(grad_out, "conv2d grad_out")?;
-    let (kh, kw) = (weight_dims[2], weight_dims[3]);
+    cols: &mut [f32],
+    colst: &mut [f32],
+    dw: &mut [f32],
+) {
     let k = cin * kh * kw;
-
-    let xc = x.contiguous();
-    let xs = xc.contiguous_data().unwrap();
-    let gc = grad_out.contiguous();
-    let gs = gc.contiguous_data().unwrap();
-
-    let mut dw = vec![0.0f32; cout * k];
-    let mut cols = vec![0.0f32; k * oh * ow];
-    let mut colst = vec![0.0f32; oh * ow * k];
-    for i in 0..n {
+    for i in i0..i1 {
         im2col(
             &xs[i * cin * h * w..(i + 1) * cin * h * w],
             cin,
@@ -275,7 +298,7 @@ pub fn conv2d_backward_weight(
             spec,
             oh,
             ow,
-            &mut cols,
+            cols,
         );
         // transpose cols → [oh*ow, k]
         for p in 0..k {
@@ -289,10 +312,134 @@ pub fn conv2d_backward_weight(
             oh * ow,
             k,
             &gs[i * cout * oh * ow..(i + 1) * cout * oh * ow],
-            &colst,
-            &mut dw,
+            colst,
+            dw,
         );
     }
+}
+
+/// Gradient of conv2d w.r.t. the weight: `dW = dy · colsᵀ` summed over the
+/// batch.
+///
+/// The batch sum is parallelized with per-chunk dW partials drawn from the
+/// thread-local pool and combined in a fixed-order binary tree. Both the
+/// partition and the tree depend only on `n` (see [`MAX_DW_PARTIALS`]), so
+/// the gradient is **bit-identical at any thread count** — the invariant
+/// the `exec_parallel` 1-vs-4-thread tests pin down.
+pub fn conv2d_backward_weight(
+    grad_out: &Tensor,
+    x: &Tensor,
+    weight_dims: &[usize],
+    spec: Conv2dSpec,
+) -> Result<Tensor> {
+    let (n, cin, h, w) = dims4(x, "conv2d input")?;
+    let (ng, cout, oh, ow) = dims4(grad_out, "conv2d grad_out")?;
+    // The batch fan-out slices gs by absolute image index and sizes the
+    // partial slabs from weight_dims, so inconsistent geometry must fail
+    // here, not as a slice panic on a pool worker.
+    if ng != n || weight_dims.len() != 4 || weight_dims[0] != cout || weight_dims[1] != cin {
+        return Err(Error::ShapeMismatch {
+            op: "conv2d_backward_weight",
+            expected: format!("grad_out [{n}, cout, oh, ow], weight_dims [cout, {cin}, kh, kw]"),
+            got: format!("{} with {weight_dims:?}", grad_out.shape()),
+        });
+    }
+    let (kh, kw) = (weight_dims[2], weight_dims[3]);
+    let k = cin * kh * kw;
+
+    let xc = x.contiguous();
+    let xs = xc.contiguous_data().unwrap();
+    let gc = grad_out.contiguous();
+    let gs = gc.contiguous_data().unwrap();
+
+    let wlen = cout * k;
+    let per_image = 2 * cout * k * oh * ow + k * oh * ow; // GEMM + transpose
+
+    // Serial fast path (small problems, and any n <= 1): accumulate
+    // straight into dw — no partials to combine. The branch depends only
+    // on the problem size, so every thread count takes the same path.
+    if n <= 1 || n.saturating_mul(per_image) < exec::PAR_THRESHOLD {
+        let mut dw = vec![0.0f32; wlen];
+        let mut cols = crate::tensor::pool::take(k * oh * ow);
+        cols.resize(k * oh * ow, 0.0);
+        let mut colst = crate::tensor::pool::take(oh * ow * k);
+        colst.resize(oh * ow * k, 0.0);
+        backward_weight_range(
+            0,
+            n,
+            xs,
+            gs,
+            (cin, h, w),
+            (cout, oh, ow),
+            (kh, kw),
+            spec,
+            &mut cols,
+            &mut colst,
+            &mut dw,
+        );
+        crate::tensor::pool::put(cols);
+        crate::tensor::pool::put(colst);
+        return Tensor::from_vec(dw, weight_dims);
+    }
+
+    // Fixed partition of the batch into at most MAX_DW_PARTIALS chunks;
+    // each chunk owns a disjoint pooled dW slab sized via the exec
+    // layer's own partition arithmetic.
+    let chunk = n.div_ceil(MAX_DW_PARTIALS.min(n));
+    let n_chunks = exec::partials_count(n, chunk);
+    let mut partials = crate::tensor::pool::take(n_chunks * wlen);
+    partials.resize(n_chunks * wlen, 0.0);
+    let pptr = exec::SyncPtr::new_raw(partials.as_mut_ptr());
+    exec::for_partials(n, chunk, |ci, i0, i1| {
+        // Per-task scratch from the worker-local pool (no vec![0.0; ..]
+        // churn in the hot loop).
+        let mut cols = crate::tensor::pool::take(k * oh * ow);
+        cols.resize(k * oh * ow, 0.0);
+        let mut colst = crate::tensor::pool::take(oh * ow * k);
+        colst.resize(oh * ow * k, 0.0);
+        // SAFETY: chunk `ci` owns the disjoint, zero-initialized slab
+        // `[ci*wlen, (ci+1)*wlen)` of `partials`.
+        let dwp = unsafe { pptr.band(ci * wlen, wlen) };
+        backward_weight_range(
+            i0,
+            i1,
+            xs,
+            gs,
+            (cin, h, w),
+            (cout, oh, ow),
+            (kh, kw),
+            spec,
+            &mut cols,
+            &mut colst,
+            dwp,
+        );
+        crate::tensor::pool::put(cols);
+        crate::tensor::pool::put(colst);
+    });
+
+    // Fixed-order binary-tree combine: fold partial (i + stride) into
+    // partial i with stride doubling. The tree shape depends only on
+    // n_chunks, so the floating-point result is thread-count invariant.
+    let mut stride = 1;
+    while stride < n_chunks {
+        let mut i = 0;
+        while i + stride < n_chunks {
+            let (head, tail) = partials.split_at_mut((i + stride) * wlen);
+            let dst = &mut head[i * wlen..i * wlen + wlen];
+            let src = &tail[..wlen];
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d += *s;
+            }
+            i += 2 * stride;
+        }
+        stride *= 2;
+    }
+    // Copy the root partial out instead of truncating: truncate would
+    // keep the full n_chunks × wlen capacity alive behind the gradient
+    // tensor for its whole lifetime; this returns the slab to the pool.
+    let mut dw = crate::tensor::pool::take(wlen);
+    dw.extend_from_slice(&partials[..wlen]);
+    crate::tensor::pool::put(partials);
     Tensor::from_vec(dw, weight_dims)
 }
 
@@ -563,5 +710,17 @@ mod tests {
         let x = Tensor::zeros(&[1, 2, 4, 4]);
         let w_badc = Tensor::zeros(&[1, 3, 3, 3]);
         assert!(conv2d(&x, &w_badc, Conv2dSpec::default()).is_err());
+    }
+
+    #[test]
+    fn backward_input_rejects_mismatched_input_dims() {
+        // The banded dx fan-out must error on inconsistent geometry, not
+        // write past the allocation.
+        let g = Tensor::zeros(&[4, 1, 4, 4]);
+        let w = Tensor::zeros(&[1, 2, 3, 3]);
+        let spec = Conv2dSpec::default();
+        assert!(conv2d_backward_input(&g, &w, &[2, 2, 4, 4], spec).is_err());
+        assert!(conv2d_backward_input(&g, &w, &[4, 3, 4, 4], spec).is_err());
+        assert!(conv2d_backward_input(&g, &w, &[4, 2, 4], spec).is_err());
     }
 }

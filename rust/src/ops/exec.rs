@@ -108,6 +108,38 @@ pub fn for_chunks(count: usize, unit: usize, body: impl Fn(usize, usize) + Sync)
     }
 }
 
+/// Deterministic fan-out over a **fixed partition**: cut `0..count` into
+/// `ceil(count/chunk)` contiguous chunks whose boundaries depend only on
+/// `(count, chunk)` — never on the thread count — and run
+/// `body(chunk_idx, start, end)` once per chunk, possibly concurrently
+/// (indices are handed to the pool through an atomic cursor, so load
+/// balance is dynamic but the decomposition is not).
+///
+/// Pair it with a fixed-order combine of per-chunk partials to get
+/// **thread-count-invariant** reductions: the same partials are produced
+/// and folded in the same order whether `MINITENSOR_NUM_THREADS` is 1 or
+/// 64. The conv2d weight gradient is the canonical user.
+pub fn for_partials(count: usize, chunk: usize, body: impl Fn(usize, usize, usize) + Sync) {
+    if count == 0 {
+        return;
+    }
+    let chunk = chunk.max(1);
+    let n_chunks = partials_count(count, chunk);
+    parallel::parallel_for_indexed(n_chunks, &|i| {
+        let start = i * chunk;
+        let end = count.min(start + chunk);
+        body(i, start, end);
+    });
+}
+
+/// Number of chunks [`for_partials`] cuts for `(count, chunk)`. Callers
+/// that preallocate one partial slot per chunk size their buffer with
+/// this — the single source of truth for the partition arithmetic that
+/// their disjoint-write safety rests on.
+pub fn partials_count(count: usize, chunk: usize) -> usize {
+    count.div_ceil(chunk.max(1))
+}
+
 /// Order-stable chunk-parallel reduction: compute `part(start, end)` over
 /// the chunks [`for_chunks`] would cut, then combine the partials in
 /// ascending chunk order. Deterministic for a fixed thread count; with a
@@ -228,7 +260,10 @@ pub fn binary_op(
 
 /// Apply `f` elementwise over any view, producing a fresh contiguous
 /// tensor of the same shape and dtype. Contiguous sources run the fused
-/// chunk-parallel loop; strided views fall back to the odometer walk.
+/// chunk-parallel loop; strided views take the tier-3 odometer walk,
+/// chunked over the output's row-major order via
+/// [`StridedIter::starting_at`] — same fan-out as the binary tier 3, so
+/// transposed-view activations no longer serialize the whole map.
 pub fn unary_op(t: &Tensor, f: impl Fn(f32) -> f32 + Sync) -> Tensor {
     let n = t.numel();
     let out: Vec<f32> = match t.contiguous_data() {
@@ -246,7 +281,24 @@ pub fn unary_op(t: &Tensor, f: impl Fn(f32) -> f32 + Sync) -> Tensor {
             out
         }
         Some(_) => Vec::new(),
-        None => t.iter().map(f).collect(),
+        None => {
+            let shape = t.shape();
+            let strides = t.strides();
+            let offset = t.offset();
+            let data = t.storage_slice();
+            let mut out = pool::take(n);
+            let ptr = SyncPtr::new(&mut out);
+            for_chunks(n, 1, |a, b| {
+                let it = StridedIter::starting_at(shape, strides, offset, a);
+                for (i, o) in it.take(b - a).enumerate() {
+                    // SAFETY: chunks are disjoint and inside `out`.
+                    unsafe { ptr.write(a + i, f(data[o as usize])) };
+                }
+            });
+            // SAFETY: the strided chunks covered 0..n exactly once.
+            unsafe { out.set_len(n) };
+            out
+        }
     };
     Tensor::from_vec(out, t.dims())
         .expect("unary_op preserves shape")
@@ -315,6 +367,36 @@ mod tests {
     #[test]
     fn for_chunks_zero_count_is_noop() {
         for_chunks(0, 1, |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn for_partials_boundaries_are_fixed_by_count_and_chunk() {
+        // The partition must not depend on the thread count: collect the
+        // (idx, start, end) triples and check them against the closed form.
+        let seen = std::sync::Mutex::new(Vec::new());
+        for_partials(10, 4, |i, s, e| {
+            seen.lock().unwrap().push((i, s, e));
+        });
+        let mut seen = seen.into_inner().unwrap();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![(0, 0, 4), (1, 4, 8), (2, 8, 10)]);
+        for_partials(0, 4, |_, _, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn strided_unary_matches_contiguous_reference() {
+        // Large transposed view: the chunked odometer walk must agree with
+        // mapping the materialized copy, element for element.
+        let t = Tensor::arange(0.0, (512 * 300) as f32)
+            .reshape(&[512, 300])
+            .unwrap()
+            .t()
+            .unwrap();
+        assert!(!t.is_contiguous());
+        let y = unary_op(&t, |v| v * 0.5 - 1.0);
+        let want = unary_op(&t.contiguous(), |v| v * 0.5 - 1.0);
+        assert_eq!(y.to_vec(), want.to_vec());
+        assert_eq!(y.dims(), &[300, 512]);
     }
 
     #[test]

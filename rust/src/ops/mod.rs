@@ -19,6 +19,6 @@ pub mod reduce;
 pub mod softmax;
 pub mod unary;
 
-pub use attention::attention;
+pub use attention::{attention, attention_backward, attention_forward};
 pub use conv::{avg_pool2d, conv2d, max_pool2d, Conv2dSpec};
 pub use matmul::{matmul, matmul_4d_batched};

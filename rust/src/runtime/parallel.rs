@@ -262,6 +262,77 @@ pub fn parallel_for(len: usize, grain: usize, body: &(dyn Fn(usize, usize) + Syn
     }
 }
 
+/// Run `body(i)` once for every index in `0..tasks`, handing indices to
+/// the pool through a shared atomic cursor. Unlike [`parallel_for`], the
+/// *work decomposition* is fixed by the caller — exactly one call per
+/// index, regardless of `num_threads()` — so per-index outputs cannot
+/// depend on the thread count; only the index→thread assignment varies.
+/// Use it when each index owns a private output slot (e.g. per-chunk
+/// gradient partials) that a fixed-order combine pass folds afterwards.
+///
+/// Blocks until every index has run. With one effective thread (or when
+/// already on a pool worker) the indices run serially in ascending order
+/// on the calling thread.
+pub fn parallel_for_indexed(tasks: usize, body: &(dyn Fn(usize) + Sync)) {
+    if tasks == 0 {
+        return;
+    }
+    let helpers = num_threads().min(tasks).saturating_sub(1);
+    if helpers == 0 || IN_WORKER.with(|w| w.get()) {
+        for i in 0..tasks {
+            body(i);
+        }
+        return;
+    }
+
+    let pool = pool();
+    let latch = Arc::new(Latch::new(helpers));
+    let cursor = Arc::new(AtomicUsize::new(0));
+    // SAFETY: the same borrowed-closure hand-off as `parallel_for` —
+    // every helper signals `latch` when done and this function blocks on
+    // `latch.wait()` before returning, so the borrows captured by `body`
+    // strictly outlive every worker access.
+    let body_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(body) };
+
+    for _ in 0..helpers {
+        let latch = Arc::clone(&latch);
+        let cursor = Arc::clone(&cursor);
+        pool.submit(Box::new(move || {
+            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= tasks {
+                    break;
+                }
+                body_static(i);
+            }))
+            .is_ok();
+            if !ok {
+                latch.panicked.store(true, Ordering::Relaxed);
+            }
+            latch.count_down();
+        }));
+    }
+
+    // The calling thread drains the same cursor, with the worker flag set
+    // so nested dispatch degrades to serial (see `parallel_for`).
+    IN_WORKER.with(|w| w.set(true));
+    let main_result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+        let i = cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= tasks {
+            break;
+        }
+        body(i);
+    }));
+    IN_WORKER.with(|w| w.set(false));
+    latch.wait();
+    if let Err(payload) = main_result {
+        std::panic::resume_unwind(payload);
+    }
+    if latch.panicked.load(Ordering::Relaxed) {
+        panic!("minitensor: parallel_for_indexed worker task panicked");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -338,6 +409,50 @@ mod tests {
         set_num_threads(before);
         // 100 elements at grain 60 → at most ceil(100/60) = 2 chunks.
         assert!(calls.load(Ordering::Relaxed) <= 2);
+    }
+
+    #[test]
+    fn indexed_covers_every_index_exactly_once() {
+        for &tasks in &[1usize, 2, 5, 63, 200] {
+            let hits: Vec<AtomicUsize> = (0..tasks).map(|_| AtomicUsize::new(0)).collect();
+            parallel_for_indexed(tasks, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "tasks={tasks}"
+            );
+        }
+    }
+
+    #[test]
+    fn indexed_runs_serially_at_one_thread() {
+        let _guard = nt_lock();
+        let before = num_threads();
+        set_num_threads(1);
+        let tid = std::thread::current().id();
+        let order = Mutex::new(Vec::new());
+        parallel_for_indexed(8, &|i| {
+            assert_eq!(std::thread::current().id(), tid);
+            order.lock().unwrap().push(i);
+        });
+        set_num_threads(before);
+        assert_eq!(*order.lock().unwrap(), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn indexed_nested_inside_parallel_for_stays_serial() {
+        let _guard = nt_lock();
+        let before = num_threads();
+        set_num_threads(4);
+        let total = AtomicU64::new(0);
+        parallel_for(16, 1, &|s, e| {
+            parallel_for_indexed(5, &|_| {
+                total.fetch_add((e - s) as u64, Ordering::Relaxed);
+            });
+        });
+        set_num_threads(before);
+        assert_eq!(total.load(Ordering::Relaxed), 16 * 5);
     }
 
     #[test]

@@ -3,13 +3,20 @@
 //! tensors, zero-length bias rows, strided fallbacks) and
 //! parallel-vs-serial equivalence for every kernel family migrated onto
 //! the worker pool (`MINITENSOR_NUM_THREADS=1` vs `=4` semantics via
-//! `runtime::parallel::set_num_threads`).
+//! `runtime::parallel::set_num_threads`) — forward **and** backward: the
+//! conv2d pullbacks, attention end-to-end, and the strided unary walk are
+//! pinned bit-identical across thread counts, with finite-difference
+//! gradchecks run under parallel dispatch.
 
 use std::sync::{Mutex, MutexGuard, OnceLock};
 
+use minitensor::autograd::{gradcheck, Var};
 use minitensor::data::Rng;
+use minitensor::ops::conv::{conv2d_backward_input, conv2d_backward_weight};
 use minitensor::ops::softmax::cross_entropy_forward;
-use minitensor::ops::{avg_pool2d, conv2d, max_pool2d, Conv2dSpec};
+use minitensor::ops::{
+    attention_backward, attention_forward, avg_pool2d, conv2d, max_pool2d, Conv2dSpec,
+};
 use minitensor::runtime::parallel;
 use minitensor::tensor::Tensor;
 
@@ -212,6 +219,139 @@ fn conv_and_pool_match_bitwise_across_thread_counts() {
     assert_eq!(s, p, "image-parallel max_pool2d");
     let (s, p) = serial_vs_parallel(|| avg_pool2d(&x, 2).unwrap().to_vec());
     assert_eq!(s, p, "image-parallel avg_pool2d");
+}
+
+#[test]
+fn strided_unary_matches_across_thread_counts() {
+    let _guard = nt_lock();
+    let mut rng = Rng::new(12);
+    // Transposed view well above the parallel threshold: the tier-3
+    // odometer walk chunks over the pool and must stay bit-identical.
+    let base = Tensor::randn(&[300, 512], 0.0, 1.0, &mut rng);
+    let view = base.t().unwrap();
+    assert!(!view.is_contiguous());
+    let (s, p) = serial_vs_parallel(|| view.gelu().to_vec());
+    assert_eq!(s, p, "chunked tier-3 strided unary walk");
+    // ... and the walk agrees with the contiguous fused loop elementwise.
+    assert_eq!(s, view.contiguous().gelu().to_vec());
+}
+
+// ---------------------------------------------------------------------
+// Gradient-path equivalence: the migrated backward kernels must produce
+// bit-identical cotangents at any thread count. conv2d_backward_input
+// and attention keep per-element accumulation order; the weight gradient
+// sums per-chunk partials over a partition and combine tree that depend
+// only on the batch size, never the thread count.
+// ---------------------------------------------------------------------
+
+#[test]
+fn conv_backward_passes_match_bitwise_across_thread_counts() {
+    let _guard = nt_lock();
+    let mut rng = Rng::new(13);
+    // Big enough that both backwards take their parallel paths.
+    let x = Tensor::randn(&[6, 3, 20, 20], 0.0, 1.0, &mut rng);
+    let w = Tensor::randn(&[8, 3, 3, 3], 0.0, 1.0, &mut rng);
+    let spec = Conv2dSpec { stride: 1, padding: 1 };
+    let y = conv2d(&x, &w, spec).unwrap();
+    let g = Tensor::randn(y.dims(), 0.0, 1.0, &mut rng);
+    let (s, p) = serial_vs_parallel(|| {
+        let dx = conv2d_backward_input(&g, &w, x.dims(), spec).unwrap();
+        let dw = conv2d_backward_weight(&g, &x, w.dims(), spec).unwrap();
+        (dx.to_vec(), dw.to_vec())
+    });
+    assert_eq!(s.0, p.0, "batch-parallel conv2d_backward_input");
+    assert_eq!(s.1, p.1, "fixed-partition conv2d_backward_weight");
+}
+
+#[test]
+fn attention_matches_bitwise_across_thread_counts() {
+    let _guard = nt_lock();
+    let mut rng = Rng::new(14);
+    // Above the SGEMM small-problem cutoff and the parallel threshold, so
+    // QKᵀ, the softmax rows, the V mix, and every gradient product all
+    // engage the pool.
+    let q = Tensor::randn(&[128, 64], 0.0, 1.0, &mut rng);
+    let k = Tensor::randn(&[160, 64], 0.0, 1.0, &mut rng);
+    let v = Tensor::randn(&[160, 96], 0.0, 1.0, &mut rng);
+    let g = Tensor::randn(&[128, 96], 0.0, 1.0, &mut rng);
+    let (s, p) = serial_vs_parallel(|| {
+        let (out, probs) = attention_forward(&q, &k, &v).unwrap();
+        let (dq, dk, dv) = attention_backward(&g, &q, &k, &v, &probs).unwrap();
+        (out.to_vec(), dq.to_vec(), dk.to_vec(), dv.to_vec())
+    });
+    assert_eq!(s.0, p.0, "attention forward");
+    assert_eq!(s.1, p.1, "attention dq");
+    assert_eq!(s.2, p.2, "attention dk");
+    assert_eq!(s.3, p.3, "attention dv");
+}
+
+#[test]
+fn conv_attention_net_backward_matches_bitwise_across_thread_counts() {
+    let _guard = nt_lock();
+    // End-to-end tape: conv → relu → reshape → self-attention → sum, so
+    // `.backward()` exercises the migrated conv and attention pullbacks
+    // through autograd exactly as a training step would.
+    let mut rng = Rng::new(15);
+    let x = Tensor::randn(&[4, 3, 12, 12], 0.0, 1.0, &mut rng);
+    let w = Tensor::randn(&[8, 3, 3, 3], 0.0, 1.0, &mut rng);
+    let run = || {
+        let xv = Var::from_tensor(x.clone(), true);
+        let wv = Var::from_tensor(w.clone(), true);
+        let y = xv
+            .conv2d(&wv, Conv2dSpec { stride: 1, padding: 1 })
+            .unwrap()
+            .relu()
+            .reshape(&[4 * 8, 144])
+            .unwrap();
+        let out = y.attention(&y, &y).unwrap();
+        out.sum().unwrap().backward().unwrap();
+        (xv.grad().unwrap().to_vec(), wv.grad().unwrap().to_vec())
+    };
+    let (s, p) = serial_vs_parallel(run);
+    assert_eq!(s.0, p.0, "net dL/dx");
+    assert_eq!(s.1, p.1, "net dL/dW");
+}
+
+#[test]
+fn migrated_backwards_match_finite_difference_under_parallel_dispatch() {
+    let _guard = nt_lock();
+    let before = parallel::num_threads();
+    parallel::set_num_threads(4);
+    let mut rng = Rng::new(16);
+
+    // conv2d: dL/dx and dL/dW through the recorded pullbacks.
+    let x = Tensor::randn(&[2, 2, 6, 6], 0.0, 1.0, &mut rng);
+    let w = Tensor::randn(&[3, 2, 3, 3], 0.0, 1.0, &mut rng);
+    let spec = Conv2dSpec { stride: 1, padding: 1 };
+    let wc = Var::from_tensor(w.clone(), false);
+    let r = gradcheck(|t| t.conv2d(&wc, spec)?.sum(), &x, 1e-2, 1e-2).unwrap();
+    assert!(r.pass, "conv dx: {r:?}");
+    let xc = Var::from_tensor(x.clone(), false);
+    let r = gradcheck(|t| xc.conv2d(t, spec)?.sum(), &w, 1e-2, 1e-2).unwrap();
+    assert!(r.pass, "conv dW: {r:?}");
+
+    // attention: all three inputs…
+    let q = Tensor::randn(&[3, 4], 0.0, 1.0, &mut rng);
+    let k = Tensor::randn(&[5, 4], 0.0, 1.0, &mut rng);
+    let v = Tensor::randn(&[5, 4], 0.0, 1.0, &mut rng);
+    let qc = Var::from_tensor(q.clone(), false);
+    let kc = Var::from_tensor(k.clone(), false);
+    let vc = Var::from_tensor(v.clone(), false);
+    let r = gradcheck(|t| t.attention(&kc, &vc)?.sum(), &q, 1e-2, 1e-2).unwrap();
+    assert!(r.pass, "attention dq: {r:?}");
+    let r = gradcheck(|t| qc.attention(t, &vc)?.sum(), &k, 1e-2, 1e-2).unwrap();
+    assert!(r.pass, "attention dk: {r:?}");
+    let r = gradcheck(|t| qc.attention(&kc, t)?.sum(), &v, 1e-2, 1e-2).unwrap();
+    assert!(r.pass, "attention dv: {r:?}");
+
+    // …including a non-contiguous (transposed-view) query: the leaf is
+    // [d, seq_q] and the graph transposes it before the attention call.
+    let qt = Tensor::randn(&[4, 3], 0.0, 1.0, &mut rng);
+    let via_view = |t: &Var| t.transpose(0, 1)?.attention(&kc, &vc)?.sum();
+    let r = gradcheck(via_view, &qt, 1e-2, 1e-2).unwrap();
+    assert!(r.pass, "attention transposed-view dq: {r:?}");
+
+    parallel::set_num_threads(before);
 }
 
 #[test]

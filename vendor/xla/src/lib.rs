@@ -1,0 +1,201 @@
+//! No-op stub of the `xla` PJRT binding crate (see `Cargo.toml` for why).
+//!
+//! Two layers:
+//!
+//! - [`Literal`] is **functional**: a host-side f32 buffer with shape
+//!   metadata, enough for `Tensor ⇄ Literal` conversion code and its unit
+//!   tests to work unchanged.
+//! - The PJRT plane ([`PjRtClient`], [`PjRtLoadedExecutable`],
+//!   [`PjRtBuffer`], [`HloModuleProto`], [`XlaComputation`]) type-checks
+//!   but every constructor/executor returns [`Error`], so callers hit
+//!   their existing "no runtime available" fallbacks instead of UB.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type mirroring the real crate's: stringly, `Display`-able.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} requires the real PJRT runtime; this build links the \
+         vendored no-op stub (patch in the actual `xla` crate to run AOT \
+         artifacts)"
+    ))
+}
+
+/// Element types a [`Literal`] can be read back as.
+pub trait NativeType: Copy {
+    /// Convert from the stub's f32 backing store.
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+}
+
+/// Host-side tensor literal: flat f32 data plus dimensions.
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1(values: &[f32]) -> Literal {
+        Literal {
+            data: values.to_vec(),
+            dims: vec![values.len() as i64],
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Number of elements.
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Dimensions of the literal.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Copy the data out as `Vec<T>`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    /// Destructure a tuple literal. The stub never produces tuples (only
+    /// [`PjRtBuffer::to_literal_sync`] would, and it always errors), so
+    /// reaching this on a non-tuple is a stub-usage error.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module proto (opaque in the stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file. Always errors in the stub.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation handle (opaque in the stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed proto. Constructible only from [`HloModuleProto`],
+    /// which the stub never yields.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device buffer handle (opaque in the stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal. Always errors in the stub.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle (opaque in the stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with literal arguments. Always errors in the stub.
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle (opaque in the stub).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Construct a CPU client. Always errors in the stub, which is what
+    /// routes `Engine::cpu` callers to their graceful skip paths.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    /// Platform name of the backing runtime.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation. Always errors in the stub.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(lit.element_count(), 6);
+        let m = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.dims(), &[2, 3]);
+        let back: Vec<f32> = m.to_vec().unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(lit.reshape(&[7]).is_err());
+        // rank-0 reshape of a single element is legal (scalar literals).
+        let s = Literal::vec1(&[7.5]).reshape(&[]).unwrap();
+        assert_eq!(s.element_count(), 1);
+    }
+
+    #[test]
+    fn pjrt_plane_errors_descriptively() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("stub"));
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}
