@@ -12,6 +12,7 @@
 
 use super::var::{BackwardOp, Var};
 use crate::error::Result;
+use crate::graph::LazyTensor;
 use crate::ops::attention::{attention_backward, attention_forward};
 use crate::ops::conv::{
     avg_pool2d, conv2d, conv2d_backward_input, conv2d_backward_weight, max_pool2d, Conv2dSpec,
@@ -698,6 +699,73 @@ impl Var {
     }
 
     // ---------------------------------------------------------------
+    // Fused lazy regions (graph subsystem)
+    // ---------------------------------------------------------------
+
+    /// Run a fused lazy region as one recorded autograd op: `build`
+    /// records a [`LazyTensor`] expression over one leaf per input var,
+    /// the forward evaluates it with single-pass kernel fusion
+    /// (`graph::LazyTensor::eval` — one exec dispatch and one output
+    /// allocation per region, bitwise-equal to the eager chain), and the
+    /// pullback **replays the region's VJP** (`graph::grad::vjp`):
+    /// intermediates are recomputed eagerly on backward rather than
+    /// saved, so the fused forward stays allocation-free.
+    ///
+    /// ```
+    /// # use minitensor::prelude::*;
+    /// let a = Var::from_tensor(Tensor::arange(-4.0, 4.0), true);
+    /// let b = Var::from_tensor(Tensor::arange(1.0, 9.0), false);
+    /// let y = Var::fused(&[&a, &b], |l| Ok(l[0].mul(&l[1])?.relu().sum()))
+    ///     .unwrap();
+    /// y.backward().unwrap();
+    /// assert!(a.grad().is_some());
+    /// ```
+    ///
+    /// An input the expression never touches gets no gradient, and —
+    /// like the eager tape skipping constant branches — inputs with
+    /// `requires_grad = false` at backward time cost nothing: the VJP
+    /// replay never descends their dead paths. Passing the same var
+    /// twice yields two leaves whose partials both accumulate into that
+    /// var, exactly like using it twice eagerly.
+    pub fn fused(
+        inputs: &[&Var],
+        build: impl FnOnce(&[LazyTensor]) -> Result<LazyTensor>,
+    ) -> Result<Var> {
+        let leaves: Vec<LazyTensor> = inputs.iter().map(|v| v.data().lazy()).collect();
+        let expr = build(&leaves)?;
+        let out = expr.eval()?;
+        if !Var::any_requires_grad(inputs) {
+            return Ok(constant(out));
+        }
+        let leaf_ids: Vec<usize> = leaves.iter().map(LazyTensor::node_id).collect();
+        let root = expr.node().clone();
+        let parents: Vec<Var> = inputs.iter().map(|v| (*v).clone()).collect();
+        let handles = parents.clone();
+        Ok(Var::from_op(
+            out,
+            BackwardOp {
+                parents,
+                name: "fused",
+                pullback: Box::new(move |g| {
+                    // Liveness is read at pullback time (like the eager
+                    // tape's runtime requires_grad checks), so flipping
+                    // a leaf's requires_grad after recording behaves
+                    // identically to the eager ops.
+                    let live: std::collections::HashSet<usize> = leaf_ids
+                        .iter()
+                        .zip(&handles)
+                        .filter(|(_, v)| v.requires_grad())
+                        .map(|(id, _)| *id)
+                        .collect();
+                    let mut grads = crate::graph::grad::vjp_for(&root, g, Some(&live))
+                        .expect("fused region VJP");
+                    leaf_ids.iter().map(|id| grads.remove(id)).collect()
+                }),
+            },
+        ))
+    }
+
+    // ---------------------------------------------------------------
     // Convolution / pooling (paper eq 6)
     // ---------------------------------------------------------------
 
@@ -1010,6 +1078,81 @@ mod tests {
         assert!(rk.pass, "dk: {rk:?}");
         let rv = gradcheck(|x| qc.attention(&kc, x)?.sum(), &v, 1e-2, 1e-2).unwrap();
         assert!(rv.pass, "dv: {rv:?}");
+    }
+
+    #[test]
+    fn fused_forward_matches_eager_and_backward_matches_tape() {
+        // y = sum(relu(a*b + a)) — fused vs the eager Var chain: same
+        // value, same gradients.
+        let mut rng = Rng::new(11);
+        let a0 = Tensor::randn(&[5, 3], 0.0, 1.0, &mut rng);
+        let b0 = Tensor::randn(&[5, 3], 0.0, 1.0, &mut rng);
+
+        let (ae, be) = (
+            Var::from_tensor(a0.clone(), true),
+            Var::from_tensor(b0.clone(), true),
+        );
+        let eager = ae.mul(&be).unwrap().add(&ae).unwrap().relu().sum().unwrap();
+        eager.backward().unwrap();
+
+        let (af, bf) = (
+            Var::from_tensor(a0.clone(), true),
+            Var::from_tensor(b0.clone(), true),
+        );
+        let fused = Var::fused(&[&af, &bf], |l| {
+            Ok(l[0].mul(&l[1])?.add(&l[0])?.relu().sum())
+        })
+        .unwrap();
+        assert_eq!(fused.op_name(), "fused");
+        assert_eq!(
+            fused.item().unwrap().to_bits(),
+            eager.item().unwrap().to_bits(),
+            "fused forward is bitwise-equal to the eager chain"
+        );
+        fused.backward().unwrap();
+        assert!(af
+            .grad()
+            .unwrap()
+            .allclose(&ae.grad().unwrap(), 1e-6, 1e-6));
+        assert!(bf
+            .grad()
+            .unwrap()
+            .allclose(&be.grad().unwrap(), 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn fused_gradcheck_broadcast_bias() {
+        use crate::autograd::gradcheck::gradcheck;
+        let mut rng = Rng::new(12);
+        let x = Tensor::randn(&[4, 3], 0.0, 0.5, &mut rng);
+        let bias0 = Tensor::randn(&[3], 0.0, 0.5, &mut rng);
+        let xc = Var::from_tensor(x, false);
+        let r = gradcheck(
+            |b: &Var| Var::fused(&[&xc, b], |l| Ok(l[0].add(&l[1])?.tanh().square().mean())),
+            &bias0,
+            1e-3,
+            2e-2,
+        )
+        .unwrap();
+        assert!(r.pass, "{r:?}");
+    }
+
+    #[test]
+    fn fused_unused_input_gets_no_grad() {
+        let a = Var::from_tensor(Tensor::ones(&[2]), true);
+        let b = Var::from_tensor(Tensor::ones(&[2]), true);
+        let y = Var::fused(&[&a, &b], |l| Ok(l[0].sum())).unwrap();
+        y.backward().unwrap();
+        assert!(a.grad().is_some());
+        assert!(b.grad().is_none());
+    }
+
+    #[test]
+    fn fused_constant_inputs_skip_recording() {
+        let a = Var::from_tensor(Tensor::ones(&[3]), false);
+        let y = Var::fused(&[&a], |l| Ok(l[0].relu().sum())).unwrap();
+        assert!(y.is_leaf());
+        assert!(!y.requires_grad());
     }
 
     #[test]

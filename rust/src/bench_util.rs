@@ -95,6 +95,65 @@ pub fn bench(name: &str, target_ms: f64, reps: usize, mut f: impl FnMut()) -> Sa
     }
 }
 
+/// One JSON scalar for [`json_rows`]: number, string, or bool.
+pub enum Json {
+    N(f64),
+    S(String),
+    B(bool),
+}
+
+/// Render rows of key→value pairs as a JSON array of flat objects —
+/// hand-rolled because serde is not in the offline vendor set. Strings
+/// are escaped (quotes, backslashes, control chars); non-finite numbers
+/// render as `null`. The perf-trajectory files (`BENCH_*.json`) are
+/// written with this.
+pub fn json_rows(rows: &[Vec<(&str, Json)>]) -> String {
+    fn escape(s: &str) -> String {
+        let mut out = String::with_capacity(s.len());
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\t' => out.push_str("\\t"),
+                '\r' => out.push_str("\\r"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out
+    }
+    let mut out = String::from("[\n");
+    for (i, row) in rows.iter().enumerate() {
+        out.push_str("  {");
+        for (j, (k, v)) in row.iter().enumerate() {
+            if j > 0 {
+                out.push_str(", ");
+            }
+            out.push('"');
+            out.push_str(&escape(k));
+            out.push_str("\": ");
+            match v {
+                Json::N(x) if x.is_finite() => out.push_str(&format!("{x}")),
+                Json::N(_) => out.push_str("null"),
+                Json::S(s) => {
+                    out.push('"');
+                    out.push_str(&escape(s));
+                    out.push('"');
+                }
+                Json::B(b) => out.push_str(if *b { "true" } else { "false" }),
+            }
+        }
+        out.push('}');
+        if i + 1 < rows.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("]\n");
+    out
+}
+
 /// Pretty-print a nanosecond figure.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -174,6 +233,27 @@ mod tests {
         assert!(s.median_ns > 0.0);
         assert!(s.p10_ns <= s.p90_ns);
         assert!(s.iters >= 1);
+    }
+
+    #[test]
+    fn json_rows_renders_valid_flat_objects() {
+        let rows = vec![
+            vec![
+                ("name", Json::S("a \"b\"\n".into())),
+                ("x", Json::N(1.5)),
+                ("ok", Json::B(true)),
+            ],
+            vec![("x", Json::N(f64::NAN))],
+        ];
+        let s = json_rows(&rows);
+        assert!(s.starts_with("[\n"));
+        assert!(s.trim_end().ends_with(']'));
+        assert!(s.contains(r#""name": "a \"b\"\n""#), "{s}");
+        assert!(s.contains(r#""x": 1.5"#));
+        assert!(s.contains(r#""ok": true"#));
+        assert!(s.contains(r#""x": null"#));
+        assert_eq!(s.matches('{').count(), 2);
+        assert_eq!(s.matches("},").count(), 1);
     }
 
     #[test]

@@ -1,0 +1,577 @@
+//! Region partitioner and fused evaluator.
+//!
+//! `eval` cuts the recorded DAG into **fusable regions** and dispatches
+//! each region as one composed kernel through the execution layer:
+//!
+//! - a region is a maximal elementwise (unary/binary) tree whose interior
+//!   nodes have exactly one consumer; its frontier — leaves, shared nodes
+//!   (consumed more than once), and reduce results — become the region's
+//!   tensor inputs;
+//! - shared nodes are materialized once and reused (compute-once beats
+//!   recompute-per-consumer);
+//! - a `Reduce` root fuses its private elementwise subtree as an epilogue
+//!   (`exec::fused_reduce`) — no intermediate tensor, order-stable
+//!   partials; a reduce over an already-materialized tensor replays the
+//!   exact eager `reduce_all` path instead (same numerics, no copy);
+//! - regions that would exceed [`exec::MAX_FUSED_INPUTS`] distinct inputs
+//!   degrade gracefully to single-op regions (still one dispatch per op,
+//!   exactly like eager execution).
+//!
+//! Evaluation is worklist-based (no recursion), memoized by node id, so
+//! arbitrarily deep chains and DAG sharing both work.
+
+use std::collections::{HashMap, HashSet};
+
+use super::kernel::{self, Instr, Program};
+use super::node::{NodeKind, NodeRef};
+use crate::error::Result;
+use crate::ops::exec;
+use crate::tensor::Tensor;
+
+/// Operands-before-consumers order over the DAG reachable from `root`
+/// (iterative post-order DFS, like `Var::topo_order`).
+pub(crate) fn topo_order(root: &NodeRef) -> Vec<NodeRef> {
+    let mut visited: HashSet<usize> = HashSet::new();
+    let mut order: Vec<NodeRef> = Vec::new();
+    let mut stack: Vec<(NodeRef, bool)> = vec![(root.clone(), false)];
+    while let Some((n, expanded)) = stack.pop() {
+        if expanded {
+            order.push(n);
+            continue;
+        }
+        if !visited.insert(n.id) {
+            continue;
+        }
+        stack.push((n.clone(), true));
+        for c in n.children() {
+            if !visited.contains(&c.id) {
+                stack.push((c.clone(), false));
+            }
+        }
+    }
+    order
+}
+
+/// Consumer counts per node id (edges, not unique parents: a node used
+/// twice by one binary op counts twice — it is still shared work).
+fn count_uses(root: &NodeRef) -> HashMap<usize, usize> {
+    let mut uses: HashMap<usize, usize> = HashMap::new();
+    let mut visited: HashSet<usize> = HashSet::new();
+    let mut stack: Vec<NodeRef> = vec![root.clone()];
+    visited.insert(root.id);
+    while let Some(n) = stack.pop() {
+        for c in n.children() {
+            *uses.entry(c.id).or_insert(0) += 1;
+            if visited.insert(c.id) {
+                stack.push(c.clone());
+            }
+        }
+    }
+    uses
+}
+
+/// A collected fusable region: compiled program + frontier input nodes
+/// (first-seen order, deduplicated by id — `Load` indices match) +
+/// per-input edge counts (`Load` occurrences), which the evaluator uses
+/// to evict materialized inputs once their last consumer has run.
+struct Region {
+    program: Program,
+    inputs: Vec<NodeRef>,
+    input_uses: Vec<usize>,
+}
+
+/// Collect the maximal region rooted at elementwise node `root`:
+/// iterative postorder walk that stops at leaves, shared nodes, and
+/// reduces (they become inputs). Deterministic and cache-independent, so
+/// re-collection after materializing pending inputs yields the same
+/// region.
+///
+/// Two resource caps guard the dispatch path, checked incrementally so a
+/// pathological region bails in O(cap) work instead of walking its whole
+/// subtree first: at most [`exec::MAX_FUSED_INPUTS`] distinct inputs
+/// (the slice-table bound) and at most [`kernel::MAX_STACK`] value-stack
+/// rows (the register-file bound — right-nested binary chains need depth
+/// proportional to nesting). Either overflow degrades to a single-op
+/// region ([`single_op_region`]): eager-equivalent cost, bounded
+/// scratch, and the operand subtrees still fuse among themselves.
+fn collect_region(root: &NodeRef, uses: &HashMap<usize, usize>) -> Region {
+    enum Step {
+        Visit(NodeRef),
+        Emit(NodeRef),
+    }
+    debug_assert!(root.is_elementwise());
+    let mut code: Vec<Instr> = Vec::new();
+    let mut inputs: Vec<NodeRef> = Vec::new();
+    let mut input_uses: Vec<usize> = Vec::new();
+    let mut input_idx: HashMap<usize, usize> = HashMap::new();
+    let mut depth = 0usize;
+    let mut stack = vec![Step::Visit(root.clone())];
+    while let Some(step) = stack.pop() {
+        match step {
+            Step::Visit(n) => {
+                let shared = uses.get(&n.id).copied().unwrap_or(0) > 1;
+                if n.id != root.id && (!n.is_elementwise() || shared) {
+                    let idx = match input_idx.get(&n.id) {
+                        Some(&i) => i,
+                        None => {
+                            if inputs.len() == exec::MAX_FUSED_INPUTS {
+                                return single_op_region(root);
+                            }
+                            inputs.push(n.clone());
+                            input_uses.push(0);
+                            input_idx.insert(n.id, inputs.len() - 1);
+                            inputs.len() - 1
+                        }
+                    };
+                    input_uses[idx] += 1;
+                    code.push(Instr::Load(idx));
+                    depth += 1;
+                    if depth > kernel::MAX_STACK {
+                        return single_op_region(root);
+                    }
+                } else {
+                    match &n.kind {
+                        NodeKind::Unary { x, .. } => {
+                            stack.push(Step::Emit(n.clone()));
+                            stack.push(Step::Visit(x.clone()));
+                        }
+                        NodeKind::Binary { a, b, .. } => {
+                            stack.push(Step::Emit(n.clone()));
+                            // `a` evaluates first (lower on the stack):
+                            // LIFO — push b then a so a pops (and emits)
+                            // first.
+                            stack.push(Step::Visit(b.clone()));
+                            stack.push(Step::Visit(a.clone()));
+                        }
+                        _ => unreachable!("region roots are elementwise"),
+                    }
+                }
+            }
+            Step::Emit(n) => match &n.kind {
+                NodeKind::Unary { k, .. } => code.push(Instr::Un(*k)),
+                NodeKind::Binary { k, .. } => {
+                    code.push(Instr::Bin(*k));
+                    depth -= 1;
+                }
+                _ => unreachable!(),
+            },
+        }
+    }
+    debug_assert_eq!(depth, 1, "region tape must leave exactly one value");
+    Region {
+        program: Program::compile(code, inputs.len()),
+        inputs,
+        input_uses,
+    }
+}
+
+/// Degenerate one-op region (the > MAX_FUSED_INPUTS fallback): the
+/// node's direct operands become the inputs, so evaluation proceeds
+/// exactly like eager execution for this node while the operand subtrees
+/// still fuse among themselves.
+fn single_op_region(root: &NodeRef) -> Region {
+    match &root.kind {
+        NodeKind::Unary { k, x } => Region {
+            program: Program::compile(vec![Instr::Load(0), Instr::Un(*k)], 1),
+            inputs: vec![x.clone()],
+            input_uses: vec![1],
+        },
+        NodeKind::Binary { k, a, b } => {
+            if a.id == b.id {
+                Region {
+                    program: Program::compile(
+                        vec![Instr::Load(0), Instr::Load(0), Instr::Bin(*k)],
+                        1,
+                    ),
+                    inputs: vec![a.clone()],
+                    input_uses: vec![2],
+                }
+            } else {
+                Region {
+                    program: Program::compile(
+                        vec![Instr::Load(0), Instr::Load(1), Instr::Bin(*k)],
+                        2,
+                    ),
+                    inputs: vec![a.clone(), b.clone()],
+                    input_uses: vec![1, 1],
+                }
+            }
+        }
+        _ => unreachable!("region roots are elementwise"),
+    }
+}
+
+/// Region inputs that still need materialization (non-leaf, not cached).
+fn pending_inputs(region: &Region, cache: &HashMap<usize, Tensor>) -> Vec<NodeRef> {
+    region
+        .inputs
+        .iter()
+        .filter(|n| !matches!(n.kind, NodeKind::Leaf(_)) && !cache.contains_key(&n.id))
+        .cloned()
+        .collect()
+}
+
+/// Resolve the region's input tensors (leaf tensors or cached results).
+fn input_tensors<'a>(region: &'a Region, cache: &'a HashMap<usize, Tensor>) -> Vec<&'a Tensor> {
+    region
+        .inputs
+        .iter()
+        .map(|n| match &n.kind {
+            NodeKind::Leaf(t) => t,
+            _ => cache.get(&n.id).expect("pending inputs were materialized"),
+        })
+        .collect()
+}
+
+/// After a region's kernel has run, consume its input edges: decrement
+/// each materialized input's remaining-consumer count and evict it from
+/// the memo once no future dispatch can read it — the dropped storage
+/// returns to the thread-local pool for reuse by later regions, so peak
+/// memory tracks the *live* set like eager execution, not the whole DAG.
+/// Safe because decrements only happen at dispatch, each region
+/// dispatches exactly once, and the per-region edge counts sum to the
+/// node's total consumer count.
+fn consume_inputs(
+    region: &Region,
+    remaining: &mut HashMap<usize, usize>,
+    cache: &mut HashMap<usize, Tensor>,
+) {
+    for (input, &cnt) in region.inputs.iter().zip(&region.input_uses) {
+        if matches!(input.kind, NodeKind::Leaf(_)) {
+            continue; // leaves are owned by the DAG, never evicted
+        }
+        if let Some(r) = remaining.get_mut(&input.id) {
+            *r = r.saturating_sub(cnt);
+            if *r == 0 {
+                cache.remove(&input.id);
+            }
+        }
+    }
+}
+
+/// Evaluate the DAG rooted at `root` with single-pass kernel fusion.
+pub(crate) fn eval(root: &NodeRef) -> Result<Tensor> {
+    let uses = count_uses(root);
+    // Remaining consumer edges per node, decremented as dispatches
+    // consume them (drives cache eviction in `consume_inputs`).
+    let mut remaining: HashMap<usize, usize> = uses.clone();
+    let mut cache: HashMap<usize, Tensor> = HashMap::new();
+    // Regions are collected once per materialization point and memoized,
+    // so a region with pending inputs is not re-walked after they
+    // materialize. Entries are dropped once dispatched.
+    let mut regions: HashMap<usize, Region> = HashMap::new();
+    let mut stack: Vec<NodeRef> = vec![root.clone()];
+    while let Some(n) = stack.last().cloned() {
+        if cache.contains_key(&n.id) {
+            stack.pop();
+            continue;
+        }
+        match &n.kind {
+            NodeKind::Leaf(t) => {
+                cache.insert(n.id, t.clone());
+                stack.pop();
+            }
+            NodeKind::Unary { .. } | NodeKind::Binary { .. } => {
+                let region = regions
+                    .entry(n.id)
+                    .or_insert_with(|| collect_region(&n, &uses));
+                let pending = pending_inputs(region, &cache);
+                if pending.is_empty() {
+                    let tensors = input_tensors(region, &cache);
+                    let prog = &region.program;
+                    let t = exec::fused_op(&tensors, &n.shape, n.dtype, prog.n_ops, |ins, out| {
+                        prog.eval(ins, out)
+                    })?;
+                    drop(tensors);
+                    let region = regions.remove(&n.id).expect("region just inserted");
+                    consume_inputs(&region, &mut remaining, &mut cache);
+                    cache.insert(n.id, t);
+                    stack.pop();
+                } else {
+                    stack.extend(pending);
+                }
+            }
+            NodeKind::Reduce { k, x } => {
+                let private_elem = x.is_elementwise()
+                    && uses.get(&x.id).copied().unwrap_or(0) <= 1;
+                if private_elem {
+                    // Fused epilogue over the private elementwise subtree.
+                    let region = regions
+                        .entry(n.id)
+                        .or_insert_with(|| collect_region(x, &uses));
+                    let pending = pending_inputs(region, &cache);
+                    if pending.is_empty() {
+                        let tensors = input_tensors(region, &cache);
+                        let prog = &region.program;
+                        let total = exec::fused_reduce(
+                            &tensors,
+                            &x.shape,
+                            prog.n_ops + 1,
+                            |ins, out| prog.eval(ins, out),
+                            k.slice_kernel(),
+                            |p, q| k.combine(p, q),
+                        )?;
+                        drop(tensors);
+                        let v = k.finish(total.unwrap_or_else(|| k.identity()), x.shape.numel());
+                        let region = regions.remove(&n.id).expect("region just inserted");
+                        consume_inputs(&region, &mut remaining, &mut cache);
+                        cache.insert(n.id, Tensor::scalar(v));
+                        stack.pop();
+                    } else {
+                        stack.extend(pending);
+                    }
+                } else {
+                    // Boundary input (leaf / shared / reduce result):
+                    // materialize it, then replay the exact eager
+                    // reduction (identical numerics for any layout).
+                    let xt = match &x.kind {
+                        NodeKind::Leaf(t) => Some(t.clone()),
+                        _ => cache.get(&x.id).cloned(),
+                    };
+                    match xt {
+                        Some(t) => {
+                            cache.insert(n.id, k.eval_eager(&t));
+                            // Consume the reduce→input edge directly (no
+                            // region models it).
+                            if !matches!(x.kind, NodeKind::Leaf(_)) {
+                                if let Some(r) = remaining.get_mut(&x.id) {
+                                    *r = r.saturating_sub(1);
+                                    if *r == 0 {
+                                        cache.remove(&x.id);
+                                    }
+                                }
+                            }
+                            stack.pop();
+                        }
+                        None => stack.push(x.clone()),
+                    }
+                }
+            }
+            NodeKind::Nil => unreachable!("Nil exists only during drop"),
+        }
+    }
+    Ok(cache.remove(&root.id).expect("root was evaluated"))
+}
+
+/// Reference evaluation: replay every node through the eager kernels in
+/// topological order (memoized over the DAG). This is the bitwise
+/// yardstick `eval` is tested against, and the path `Var::fused` uses to
+/// recompute intermediates for the backward replay.
+pub(crate) fn eval_eager(root: &NodeRef) -> Result<Tensor> {
+    let mut cache: HashMap<usize, Tensor> = HashMap::new();
+    eval_eager_cached(root, &mut cache)
+}
+
+/// [`eval_eager`] with an external memo table (shared by the VJP replay).
+pub(crate) fn eval_eager_cached(
+    root: &NodeRef,
+    cache: &mut HashMap<usize, Tensor>,
+) -> Result<Tensor> {
+    for n in topo_order(root) {
+        if cache.contains_key(&n.id) {
+            continue;
+        }
+        let t = match &n.kind {
+            NodeKind::Leaf(t) => t.clone(),
+            NodeKind::Unary { k, x } => k.eval_eager(&cache[&x.id]),
+            NodeKind::Binary { k, a, b } => k.eval_eager(&cache[&a.id], &cache[&b.id])?,
+            NodeKind::Reduce { k, x } => k.eval_eager(&cache[&x.id]),
+            NodeKind::Nil => unreachable!("Nil exists only during drop"),
+        };
+        cache.insert(n.id, t);
+    }
+    Ok(cache[&root.id].clone())
+}
+
+/// Count the nodes reachable from `root` (diagnostics / tests).
+pub(crate) fn node_count(root: &NodeRef) -> usize {
+    topo_order(root).len()
+}
+
+/// Count the fused regions `eval` would dispatch for this DAG without
+/// running any kernels: leaves are free; every materialization point
+/// (root, shared node, reduce, elementwise region root) costs one
+/// dispatch. Used by stats-minded callers and tests. Regions wider than
+/// [`exec::MAX_FUSED_INPUTS`] degrade to per-op dispatch at eval time,
+/// which this estimate does not model (it reports the ideal count).
+pub(crate) fn region_count(root: &NodeRef) -> usize {
+    let uses = count_uses(root);
+    let mut regions = 0usize;
+    for n in topo_order(root) {
+        let shared = uses.get(&n.id).copied().unwrap_or(0) > 1;
+        match &n.kind {
+            NodeKind::Leaf(_) => {}
+            NodeKind::Reduce { .. } => regions += 1,
+            _ => {
+                // Elementwise: a region root iff it is the DAG root or
+                // consumed by a reduce/boundary... equivalently: counted
+                // when shared or when its (unique) consumer cannot absorb
+                // it. Conservatively: count nodes that `eval` would
+                // materialize — root, shared elementwise nodes, and
+                // elementwise nodes consumed only by reduces are covered
+                // by the reduce itself (fused epilogue).
+                let is_root = n.id == root.id;
+                if is_root || shared {
+                    regions += 1;
+                }
+            }
+        }
+    }
+    regions
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::node::{BinaryKind, Node, ReduceOp, UnaryKind};
+    use super::*;
+
+    fn leaf(v: Vec<f32>, dims: &[usize]) -> NodeRef {
+        Node::leaf(Tensor::from_vec(v, dims).unwrap())
+    }
+
+    #[test]
+    fn fused_chain_matches_eager_bitwise() {
+        let a = leaf(vec![1.0, -2.0, 3.0, -4.0], &[4]);
+        let b = leaf(vec![0.5, 2.0, -1.5, 4.0], &[4]);
+        let m = Node::binary(BinaryKind::Mul, &a, &b).unwrap();
+        let s = Node::binary(BinaryKind::Add, &m, &a).unwrap();
+        let r = Node::unary(UnaryKind::Relu, &s);
+        let fused = eval(&r).unwrap();
+        let eager = eval_eager(&r).unwrap();
+        let (f, e) = (fused.to_vec(), eager.to_vec());
+        for i in 0..4 {
+            assert_eq!(f[i].to_bits(), e[i].to_bits(), "i={i}");
+        }
+        assert_eq!(fused.dims(), &[4]);
+    }
+
+    #[test]
+    fn shared_subexpression_is_materialized_once_and_reused() {
+        // c = tanh(a); y = c * c  — c is shared, so it becomes its own
+        // region and the square reads it twice through one input slot.
+        let a = leaf(vec![0.3, -0.7, 1.1], &[3]);
+        let c = Node::unary(UnaryKind::Tanh, &a);
+        let y = Node::binary(BinaryKind::Mul, &c, &c).unwrap();
+        let fused = eval(&y).unwrap();
+        let eager = eval_eager(&y).unwrap();
+        for (f, e) in fused.to_vec().iter().zip(eager.to_vec()) {
+            assert_eq!(f.to_bits(), e.to_bits());
+        }
+        assert_eq!(region_count(&y), 2);
+    }
+
+    #[test]
+    fn nested_shared_nodes_evict_safely() {
+        // c shared 3x (twice inside one region), d shared 2x: the
+        // remaining-edge bookkeeping must evict each exactly after its
+        // last consuming dispatch, never before — any premature eviction
+        // would panic input_tensors' expect.
+        let a = leaf((0..256).map(|i| i as f32 * 0.01 - 1.0).collect(), &[256]);
+        let c = Node::unary(UnaryKind::Tanh, &a);
+        let d = Node::binary(BinaryKind::Mul, &c, &c).unwrap();
+        let e = Node::binary(BinaryKind::Add, &d, &c).unwrap();
+        let f = Node::binary(BinaryKind::Mul, &e, &d).unwrap();
+        let fused = eval(&f).unwrap();
+        let eager = eval_eager(&f).unwrap();
+        for (x, y) in fused.to_vec().iter().zip(eager.to_vec()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn reduce_epilogue_matches_eager_bitwise() {
+        let n = exec::REDUCE_CHUNK + 333; // multiple fixed chunks
+        let av: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+        let bv: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).cos()).collect();
+        let a = leaf(av, &[n]);
+        let b = leaf(bv, &[n]);
+        let m = Node::binary(BinaryKind::Mul, &a, &b).unwrap();
+        let r = Node::unary(UnaryKind::Relu, &m);
+        let s = Node::reduce(ReduceOp::Sum, &r);
+        let fused = eval(&s).unwrap().item().unwrap();
+        let eager = eval_eager(&s).unwrap().item().unwrap();
+        assert_eq!(fused.to_bits(), eager.to_bits());
+    }
+
+    #[test]
+    fn reduce_over_leaf_replays_eager_path() {
+        // Non-contiguous leaf: the eager reduce takes the strided
+        // iterator fold; the lazy eval must produce the same bits.
+        let t = Tensor::arange(0.0, 64.0)
+            .reshape(&[8, 8])
+            .unwrap()
+            .t()
+            .unwrap();
+        let l = Node::leaf(t);
+        let s = Node::reduce(ReduceOp::Sum, &l);
+        let fused = eval(&s).unwrap().item().unwrap();
+        let eager = eval_eager(&s).unwrap().item().unwrap();
+        assert_eq!(fused.to_bits(), eager.to_bits());
+    }
+
+    #[test]
+    fn broadcast_inside_region() {
+        let a = leaf(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let bias = leaf(vec![10.0, -20.0, 30.0], &[3]);
+        let s = Node::binary(BinaryKind::Add, &a, &bias).unwrap();
+        let y = Node::unary(UnaryKind::Relu, &s);
+        let fused = eval(&y).unwrap();
+        let eager = eval_eager(&y).unwrap();
+        assert_eq!(fused.dims(), &[2, 3]);
+        for (f, e) in fused.to_vec().iter().zip(eager.to_vec()) {
+            assert_eq!(f.to_bits(), e.to_bits());
+        }
+    }
+
+    #[test]
+    fn deep_chain_does_not_overflow_stack() {
+        // Deep enough that recursive evaluation *or* recursive Rc drop
+        // would blow the 2 MiB default test-thread stack: both paths
+        // must be worklist-based (eval loop + Node's iterative Drop).
+        let mut n = leaf(vec![1.0; 8], &[8]);
+        for _ in 0..50_000 {
+            n = Node::unary(UnaryKind::AddScalar(0.001), &n);
+        }
+        let fused = eval(&n).unwrap();
+        let eager = eval_eager(&n).unwrap();
+        assert_eq!(fused.to_vec(), eager.to_vec());
+        assert_eq!(node_count(&n), 50_001);
+        drop(n); // exercises the iterative teardown explicitly
+    }
+
+    #[test]
+    fn deep_binary_nesting_exceeding_stack_cap_degrades_gracefully() {
+        // Right-nested adds of one shared leaf: distinct inputs stay at
+        // 1, but tape stack depth grows with nesting — past MAX_STACK
+        // the fuser must fall back to per-op regions, keeping worker
+        // register scratch bounded while results stay bitwise-eager.
+        let a = leaf(vec![0.5, -1.5, 2.5], &[3]);
+        let mut acc = a.clone();
+        for _ in 0..200 {
+            acc = Node::binary(BinaryKind::Add, &a, &acc).unwrap();
+        }
+        let fused = eval(&acc).unwrap();
+        let eager = eval_eager(&acc).unwrap();
+        for (f, e) in fused.to_vec().iter().zip(eager.to_vec()) {
+            assert_eq!(f.to_bits(), e.to_bits());
+        }
+    }
+
+    #[test]
+    fn wide_tree_exceeding_input_cap_degrades_gracefully() {
+        // 20 distinct leaves summed pairwise: > MAX_FUSED_INPUTS distinct
+        // inputs in the root region — must still evaluate correctly.
+        let leaves: Vec<NodeRef> = (0..20)
+            .map(|i| leaf(vec![i as f32 + 0.5; 4], &[4]))
+            .collect();
+        let mut acc = leaves[0].clone();
+        for l in &leaves[1..] {
+            acc = Node::binary(BinaryKind::Add, &acc, l).unwrap();
+        }
+        let fused = eval(&acc).unwrap();
+        let eager = eval_eager(&acc).unwrap();
+        for (f, e) in fused.to_vec().iter().zip(eager.to_vec()) {
+            assert_eq!(f.to_bits(), e.to_bits());
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Backward replay for fused forwards: given the recorded region DAG and
+//! an output cotangent, propagate VJPs in reverse topological order using
+//! the eager kernels (`Var::fused` wraps this as its pullback).
+//!
+//! Intermediates are recomputed eagerly (memoized over the DAG) rather
+//! than saved by the fused forward — fusion's whole point is not to
+//! materialize them; recomputing on the (rare, training-only) backward
+//! keeps the forward allocation-free. The VJP rules mirror
+//! `autograd::ops` rule for rule, so fused gradients match the gradients
+//! the eager tape would produce for the same expression.
+
+use std::collections::HashMap;
+
+use super::fuse::{eval_eager_cached, topo_order};
+use super::node::{NodeKind, NodeRef};
+use crate::error::Result;
+use crate::tensor::Tensor;
+
+/// Accumulate `g` into `map[id]` (`x̄ += ḡ`).
+fn accumulate(map: &mut HashMap<usize, Tensor>, id: usize, g: Tensor) {
+    match map.remove(&id) {
+        None => {
+            map.insert(id, g);
+        }
+        Some(acc) => {
+            map.insert(id, acc.add(&g).expect("cotangent shapes match"));
+        }
+    }
+}
+
+/// Propagate the scalar-or-tensor cotangent `seed` from `root` back to
+/// every leaf, returning a map from **leaf node id** to its accumulated
+/// cotangent. Leaves the expression never touches simply have no entry.
+pub(crate) fn vjp(root: &NodeRef, seed: &Tensor) -> Result<HashMap<usize, Tensor>> {
+    vjp_for(root, seed, None)
+}
+
+/// [`vjp`] restricted to the leaves in `live` (`None` = all): cotangents
+/// are only computed along paths that reach a live leaf, so frozen
+/// (`requires_grad = false`) inputs cost nothing on backward — matching
+/// the eager tape, which skips constant branches. Forward values are
+/// still replayed for the whole DAG because VJP rules read operand
+/// *values* even on dead sides (e.g. `ḡ_a = ḡ ⊙ b` for a product).
+pub(crate) fn vjp_for(
+    root: &NodeRef,
+    seed: &Tensor,
+    live: Option<&std::collections::HashSet<usize>>,
+) -> Result<HashMap<usize, Tensor>> {
+    let order = topo_order(root);
+
+    // A node needs a cotangent iff its subtree contains a live leaf
+    // (children precede parents in `order`, so one forward scan works).
+    let mut needed: std::collections::HashSet<usize> = std::collections::HashSet::new();
+    for n in &order {
+        let wanted = match &n.kind {
+            NodeKind::Leaf(_) => live.is_none_or(|l| l.contains(&n.id)),
+            _ => n.children().iter().any(|c| needed.contains(&c.id)),
+        };
+        if wanted {
+            needed.insert(n.id);
+        }
+    }
+    if !needed.contains(&root.id) {
+        return Ok(HashMap::new());
+    }
+
+    // Forward values for every node (eager replay, memoized).
+    let mut vals: HashMap<usize, Tensor> = HashMap::new();
+    eval_eager_cached(root, &mut vals)?;
+
+    let mut cot: HashMap<usize, Tensor> = HashMap::new();
+    let mut leaf_grads: HashMap<usize, Tensor> = HashMap::new();
+    cot.insert(root.id, seed.clone());
+
+    for n in order.iter().rev() {
+        let Some(g) = cot.remove(&n.id) else {
+            continue; // not reachable from the seed, or a dead branch
+        };
+        match &n.kind {
+            NodeKind::Leaf(_) => accumulate(&mut leaf_grads, n.id, g),
+            NodeKind::Unary { k, x } => {
+                if needed.contains(&x.id) {
+                    let gx = k.vjp(&vals[&x.id], &vals[&n.id], &g);
+                    accumulate(&mut cot, x.id, gx);
+                }
+            }
+            NodeKind::Binary { k, a, b } => {
+                // Broadcast pullback per live side: sum the cotangent
+                // over expanded axes; dead sides are never computed.
+                if needed.contains(&a.id) {
+                    let ga = k.vjp_a(&vals[&a.id], &vals[&b.id], &g)?;
+                    accumulate(&mut cot, a.id, vals[&a.id].reduce_grad_to(&ga)?);
+                }
+                if needed.contains(&b.id) {
+                    let gb = k.vjp_b(&vals[&a.id], &vals[&b.id], &g)?;
+                    accumulate(&mut cot, b.id, vals[&b.id].reduce_grad_to(&gb)?);
+                }
+            }
+            NodeKind::Reduce { k, x } => {
+                if needed.contains(&x.id) {
+                    let gx = k.vjp(&vals[&x.id], &g);
+                    accumulate(&mut cot, x.id, gx);
+                }
+            }
+            NodeKind::Nil => unreachable!("Nil exists only during drop"),
+        }
+    }
+    Ok(leaf_grads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::node::{BinaryKind, Node, ReduceOp, UnaryKind};
+    use super::*;
+
+    #[test]
+    fn vjp_of_fused_chain_matches_manual_derivative() {
+        // y = sum(relu(a * b + a)); dy/da = (b + 1) * 1{a*b+a > 0},
+        // dy/db = a * 1{a*b+a > 0}
+        let av = vec![1.0f32, -2.0, 3.0, 0.5];
+        let bv = vec![0.5f32, 2.0, -3.0, 1.0];
+        let a = Node::leaf(Tensor::from_vec(av.clone(), &[4]).unwrap());
+        let b = Node::leaf(Tensor::from_vec(bv.clone(), &[4]).unwrap());
+        let m = Node::binary(BinaryKind::Mul, &a, &b).unwrap();
+        let s = Node::binary(BinaryKind::Add, &m, &a).unwrap();
+        let r = Node::unary(UnaryKind::Relu, &s);
+        let y = Node::reduce(ReduceOp::Sum, &r);
+        let grads = vjp(&y, &Tensor::scalar(1.0)).unwrap();
+        let ga = grads[&a.id].to_vec();
+        let gb = grads[&b.id].to_vec();
+        for i in 0..4 {
+            let active = f32::from(av[i] * bv[i] + av[i] > 0.0);
+            assert!((ga[i] - (bv[i] + 1.0) * active).abs() < 1e-6, "da[{i}]");
+            assert!((gb[i] - av[i] * active).abs() < 1e-6, "db[{i}]");
+        }
+    }
+
+    #[test]
+    fn vjp_broadcast_reduces_bias_grad() {
+        // y = sum(x + bias) with x [2,3], bias [3]: dbias = per-column 2.
+        let x = Node::leaf(Tensor::ones(&[2, 3]));
+        let bias = Node::leaf(Tensor::from_vec(vec![0.1, 0.2, 0.3], &[3]).unwrap());
+        let s = Node::binary(BinaryKind::Add, &x, &bias).unwrap();
+        let y = Node::reduce(ReduceOp::Sum, &s);
+        let grads = vjp(&y, &Tensor::scalar(1.0)).unwrap();
+        assert_eq!(grads[&bias.id].dims(), &[3]);
+        assert_eq!(grads[&bias.id].to_vec(), vec![2.0, 2.0, 2.0]);
+        assert_eq!(grads[&x.id].to_vec(), vec![1.0; 6]);
+    }
+
+    #[test]
+    fn vjp_shared_node_accumulates_both_paths() {
+        // y = sum(c * c) with c = tanh(a): dy/da = 2 c (1 - c²)
+        let a0 = Tensor::from_vec(vec![0.3f32, -0.8], &[2]).unwrap();
+        let a = Node::leaf(a0.clone());
+        let c = Node::unary(UnaryKind::Tanh, &a);
+        let y0 = Node::binary(BinaryKind::Mul, &c, &c).unwrap();
+        let y = Node::reduce(ReduceOp::Sum, &y0);
+        let grads = vjp(&y, &Tensor::scalar(1.0)).unwrap();
+        let ga = grads[&a.id].to_vec();
+        for (i, &v) in a0.to_vec().iter().enumerate() {
+            let t = v.tanh();
+            assert!((ga[i] - 2.0 * t * (1.0 - t * t)).abs() < 1e-6, "i={i}");
+        }
+    }
+
+    #[test]
+    fn vjp_unused_leaf_has_no_entry() {
+        let a = Node::leaf(Tensor::ones(&[2]));
+        let b = Node::leaf(Tensor::ones(&[2]));
+        let y = Node::reduce(ReduceOp::Sum, &a);
+        let grads = vjp(&y, &Tensor::scalar(1.0)).unwrap();
+        assert!(grads.contains_key(&a.id));
+        assert!(!grads.contains_key(&b.id));
+    }
+}

@@ -1,0 +1,204 @@
+//! Region → composed-kernel compiler and its block interpreter.
+//!
+//! A fused region is compiled to a tiny postorder **instruction tape**
+//! over its inputs (a stack machine: `Load` pushes an input, `Un`
+//! rewrites the top of stack, `Bin` folds the top two). The interpreter
+//! evaluates the tape over [`FUSE_BLOCK`]-element register blocks held in
+//! thread-local scratch, so per-instruction dispatch cost is amortized
+//! over a whole block, every op loop is monomorphic (auto-vectorizes),
+//! and all intermediates live in L1 — one pass over main memory per
+//! region, which is the entire point of fusion (conceptually this *is*
+//! the composed `Fn(&[f32]) -> f32`, vectorized).
+
+use std::cell::RefCell;
+use std::mem::MaybeUninit;
+
+use super::node::{BinaryKind, UnaryKind};
+use crate::ops::exec::FUSE_BLOCK;
+
+/// One stack-machine instruction of a compiled region.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum Instr {
+    /// Push input `j`'s current block.
+    Load(usize),
+    /// Apply a unary op to the top block in place.
+    Un(UnaryKind),
+    /// Fold the top block into the second-from-top: `a = op(a, b)`.
+    Bin(BinaryKind),
+}
+
+/// Maximum register-file rows (stack depth) a fused region may use:
+/// bounds thread-local [`REGS`] at `MAX_STACK * FUSE_BLOCK` f32s
+/// (128 KiB). Deep *unary* chains need depth 1, but right-nested binary
+/// chains need depth proportional to nesting — the fuser degrades such
+/// regions to per-op dispatch instead of letting worker scratch grow
+/// unboundedly.
+pub(crate) const MAX_STACK: usize = 32;
+
+/// A compiled fused region: the tape plus its static facts.
+#[derive(Clone, Debug)]
+pub(crate) struct Program {
+    code: Vec<Instr>,
+    n_inputs: usize,
+    /// Peak value-stack depth the tape reaches (register rows needed).
+    pub stack_depth: usize,
+    /// Number of `Un`/`Bin` instructions (= graph ops folded).
+    pub n_ops: usize,
+}
+
+thread_local! {
+    /// Register file: `stack_depth` rows of FUSE_BLOCK f32s. Thread-local
+    /// so pool workers evaluate allocation-free after warm-up.
+    static REGS: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+impl Program {
+    /// Wrap a postorder tape, computing stack depth and op count.
+    /// Debug-asserts the tape is well formed (leaves exactly one value).
+    pub fn compile(code: Vec<Instr>, n_inputs: usize) -> Program {
+        let mut depth = 0usize;
+        let mut stack_depth = 0usize;
+        let mut n_ops = 0usize;
+        for instr in &code {
+            match instr {
+                Instr::Load(j) => {
+                    debug_assert!(*j < n_inputs, "Load index out of range");
+                    depth += 1;
+                    stack_depth = stack_depth.max(depth);
+                }
+                Instr::Un(_) => {
+                    debug_assert!(depth >= 1);
+                    n_ops += 1;
+                }
+                Instr::Bin(_) => {
+                    debug_assert!(depth >= 2);
+                    n_ops += 1;
+                    depth -= 1;
+                }
+            }
+        }
+        debug_assert_eq!(depth, 1, "program must leave exactly one value");
+        Program {
+            code,
+            n_inputs,
+            stack_depth,
+            n_ops,
+        }
+    }
+
+    /// Evaluate the tape over equal-length input blocks, initializing
+    /// every element of `out` (the contract `exec::fused_op` relies on).
+    /// Arbitrary lengths are handled by blocking at [`FUSE_BLOCK`]
+    /// internally.
+    pub fn eval(&self, ins: &[&[f32]], out: &mut [MaybeUninit<f32>]) {
+        debug_assert_eq!(ins.len(), self.n_inputs);
+        REGS.with(|r| {
+            let mut regs = r.borrow_mut();
+            let need = self.stack_depth * FUSE_BLOCK;
+            if regs.len() < need {
+                regs.resize(need, 0.0);
+            }
+            let n = out.len();
+            let mut pos = 0usize;
+            while pos < n {
+                let len = FUSE_BLOCK.min(n - pos);
+                let mut sp = 0usize;
+                for instr in &self.code {
+                    match *instr {
+                        Instr::Load(j) => {
+                            let dst = &mut regs[sp * FUSE_BLOCK..sp * FUSE_BLOCK + len];
+                            dst.copy_from_slice(&ins[j][pos..pos + len]);
+                            sp += 1;
+                        }
+                        Instr::Un(k) => {
+                            let top = (sp - 1) * FUSE_BLOCK;
+                            k.apply_block(&mut regs[top..top + len]);
+                        }
+                        Instr::Bin(k) => {
+                            // a = op(a, b): split so `a` (second from
+                            // top) and `b` (top) borrow disjointly.
+                            let (lo, hi) = regs.split_at_mut((sp - 1) * FUSE_BLOCK);
+                            let a0 = (sp - 2) * FUSE_BLOCK;
+                            k.apply_block(&mut lo[a0..a0 + len], &hi[..len]);
+                            sp -= 1;
+                        }
+                    }
+                }
+                debug_assert_eq!(sp, 1);
+                for (o, &v) in out[pos..pos + len].iter_mut().zip(regs[..len].iter()) {
+                    o.write(v);
+                }
+                pos += len;
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Evaluate into an initialized buffer for test convenience.
+    fn run(p: &Program, ins: &[&[f32]], n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n];
+        let view = unsafe {
+            std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut MaybeUninit<f32>, n)
+        };
+        p.eval(ins, view);
+        out
+    }
+
+    #[test]
+    fn tape_computes_relu_of_fma() {
+        // relu(a * b + a)
+        let p = Program::compile(
+            vec![
+                Instr::Load(0),
+                Instr::Load(1),
+                Instr::Bin(BinaryKind::Mul),
+                Instr::Load(0),
+                Instr::Bin(BinaryKind::Add),
+                Instr::Un(UnaryKind::Relu),
+            ],
+            2,
+        );
+        assert_eq!(p.n_ops, 3);
+        let a = [1.0f32, -2.0, 3.0];
+        let b = [4.0f32, 5.0, -6.0];
+        let got = run(&p, &[&a, &b], 3);
+        for i in 0..3 {
+            assert_eq!(got[i], (a[i] * b[i] + a[i]).max(0.0));
+        }
+    }
+
+    #[test]
+    fn blocks_larger_than_fuse_block() {
+        let n = FUSE_BLOCK * 2 + 17;
+        let a: Vec<f32> = (0..n).map(|i| i as f32 * 0.25 - 100.0).collect();
+        let p = Program::compile(
+            vec![Instr::Load(0), Instr::Un(UnaryKind::MulScalar(2.0))],
+            1,
+        );
+        let got = run(&p, &[&a], n);
+        for i in 0..n {
+            assert_eq!(got[i], a[i] * 2.0, "i={i}");
+        }
+    }
+
+    #[test]
+    fn sub_and_div_are_order_sensitive_correct() {
+        // (a - b) / b — checks Bin operand order (a below b on the stack).
+        let p = Program::compile(
+            vec![
+                Instr::Load(0),
+                Instr::Load(1),
+                Instr::Bin(BinaryKind::Sub),
+                Instr::Load(1),
+                Instr::Bin(BinaryKind::Div),
+            ],
+            2,
+        );
+        let got = run(&p, &[&[9.0f32], &[2.0f32]], 1);
+        assert_eq!(got[0], (9.0 - 2.0) / 2.0);
+    }
+}

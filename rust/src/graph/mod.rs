@@ -1,0 +1,401 @@
+//! Lazy expression graphs with single-pass kernel fusion (LoopStack-style
+//! fusion over the unified execution layer).
+//!
+//! Eagerly, a chain like `relu(a*b + c)` runs three kernels and writes
+//! two full intermediate tensors — at large sizes the chain is memory-
+//! bandwidth-bound, not compute-bound. [`Tensor::lazy`] instead records a
+//! small expression DAG of [`LazyTensor`] handles; [`LazyTensor::eval`]
+//! partitions the DAG into fusable regions and dispatches **each region
+//! as one composed kernel** through `ops::exec::fused_op` /
+//! `fused_reduce`: one pooled output allocation, one pass over memory,
+//! intermediates living in L1 register blocks.
+//!
+//! ```
+//! use minitensor::tensor::Tensor;
+//! let a = Tensor::arange(0.0, 6.0);
+//! let b = Tensor::arange(6.0, 12.0);
+//! let y = a.lazy().mul(&b.lazy()).unwrap()   // record …
+//!     .add(&a.lazy()).unwrap()
+//!     .relu()
+//!     .eval().unwrap();                       // … fuse + dispatch once
+//! assert_eq!(y.to_vec(), a.mul(&b).unwrap().add(&a).unwrap().relu().to_vec());
+//! ```
+//!
+//! Guarantees (pinned by unit, integration, and property tests):
+//!
+//! - **Bitwise parity with eager:** `eval()` equals the eager op chain
+//!   bit for bit — the fused interpreter applies the *same scalar
+//!   functions* in the same per-element order, and reductions fold the
+//!   same fixed-partition partials (`exec::REDUCE_CHUNK`) the eager
+//!   `sum`/`mean`/`max_all`/`min_all` fold.
+//! - **Thread-count invariance:** results are bit-identical at any
+//!   `MINITENSOR_NUM_THREADS` (elementwise partitioning never changes
+//!   per-element arithmetic; reductions use the fixed partition).
+//! - **Sharing:** a node consumed more than once is materialized once
+//!   and reused, never recomputed per consumer.
+//! - **Autograd:** `Var::fused` runs a fused forward and replays the
+//!   region's VJP on backward (`grad::vjp`), so fused forwards remain
+//!   differentiable.
+//!
+//! Opting out is just not calling `lazy()` — eager ops are untouched —
+//! or calling [`LazyTensor::eval_eager`], which replays the recorded DAG
+//! through the eager kernels (the reference path the tests compare
+//! against).
+
+pub(crate) mod fuse;
+pub(crate) mod grad;
+pub(crate) mod kernel;
+pub(crate) mod node;
+
+use crate::dtype::DType;
+use crate::error::Result;
+use crate::shape::Shape;
+use crate::tensor::Tensor;
+
+use node::{BinaryKind, Node, NodeRef, ReduceOp, UnaryKind};
+
+/// Handle to one node of a recorded lazy expression DAG. Cloning is
+/// cheap (shares the node); all ops record new nodes without running any
+/// kernels until [`LazyTensor::eval`].
+#[derive(Clone)]
+pub struct LazyTensor {
+    node: NodeRef,
+}
+
+impl LazyTensor {
+    pub(crate) fn from_node(node: NodeRef) -> LazyTensor {
+        LazyTensor { node }
+    }
+
+    pub(crate) fn node(&self) -> &NodeRef {
+        &self.node
+    }
+
+    pub(crate) fn node_id(&self) -> usize {
+        self.node.id
+    }
+
+    /// Inferred result shape.
+    pub fn shape(&self) -> &Shape {
+        &self.node.shape
+    }
+
+    /// Inferred dimension sizes.
+    pub fn dims(&self) -> &[usize] {
+        self.node.shape.dims()
+    }
+
+    /// Inferred element count.
+    pub fn numel(&self) -> usize {
+        self.node.shape.numel()
+    }
+
+    /// Inferred result dtype (same promotion rules as the eager ops).
+    pub fn dtype(&self) -> DType {
+        self.node.dtype
+    }
+
+    /// Name of the op this handle records ("leaf" for inputs).
+    pub fn op_name(&self) -> &'static str {
+        self.node.op_name()
+    }
+
+    /// Number of nodes in the recorded DAG reachable from this handle.
+    pub fn node_count(&self) -> usize {
+        fuse::node_count(&self.node)
+    }
+
+    /// The *ideal* number of fused kernels [`LazyTensor::eval`] would
+    /// dispatch for this DAG (leaves are free; shared nodes add one
+    /// region each). Regions exceeding the per-kernel input or
+    /// stack-depth caps degrade to per-op dispatch at eval time, which
+    /// this estimate does not model — for exact counts, diff
+    /// [`crate::runtime::stats::snapshot`] around an `eval()`.
+    pub fn region_count(&self) -> usize {
+        fuse::region_count(&self.node)
+    }
+
+    // -- recording: binary elementwise (broadcasting) --------------------
+
+    fn binary(&self, k: BinaryKind, other: &LazyTensor) -> Result<LazyTensor> {
+        Ok(LazyTensor::from_node(Node::binary(
+            k,
+            &self.node,
+            &other.node,
+        )?))
+    }
+
+    /// Record elementwise addition with broadcasting.
+    pub fn add(&self, other: &LazyTensor) -> Result<LazyTensor> {
+        self.binary(BinaryKind::Add, other)
+    }
+
+    /// Record elementwise subtraction with broadcasting.
+    pub fn sub(&self, other: &LazyTensor) -> Result<LazyTensor> {
+        self.binary(BinaryKind::Sub, other)
+    }
+
+    /// Record the elementwise (Hadamard) product with broadcasting.
+    pub fn mul(&self, other: &LazyTensor) -> Result<LazyTensor> {
+        self.binary(BinaryKind::Mul, other)
+    }
+
+    /// Record elementwise division with broadcasting.
+    pub fn div(&self, other: &LazyTensor) -> Result<LazyTensor> {
+        self.binary(BinaryKind::Div, other)
+    }
+
+    /// Record the elementwise maximum.
+    pub fn maximum(&self, other: &LazyTensor) -> Result<LazyTensor> {
+        self.binary(BinaryKind::Max, other)
+    }
+
+    /// Record the elementwise minimum.
+    pub fn minimum(&self, other: &LazyTensor) -> Result<LazyTensor> {
+        self.binary(BinaryKind::Min, other)
+    }
+
+    // -- recording: unary elementwise ------------------------------------
+
+    fn unary(&self, k: UnaryKind) -> LazyTensor {
+        LazyTensor::from_node(Node::unary(k, &self.node))
+    }
+
+    /// Record elementwise negation.
+    pub fn neg(&self) -> LazyTensor {
+        self.unary(UnaryKind::Neg)
+    }
+
+    /// Record ReLU.
+    pub fn relu(&self) -> LazyTensor {
+        self.unary(UnaryKind::Relu)
+    }
+
+    /// Record the elementwise exponential.
+    pub fn exp(&self) -> LazyTensor {
+        self.unary(UnaryKind::Exp)
+    }
+
+    /// Record the elementwise natural log.
+    pub fn log(&self) -> LazyTensor {
+        self.unary(UnaryKind::Log)
+    }
+
+    /// Record the elementwise square root.
+    pub fn sqrt(&self) -> LazyTensor {
+        self.unary(UnaryKind::Sqrt)
+    }
+
+    /// Record the elementwise square.
+    pub fn square(&self) -> LazyTensor {
+        self.unary(UnaryKind::Square)
+    }
+
+    /// Record the elementwise absolute value.
+    pub fn abs(&self) -> LazyTensor {
+        self.unary(UnaryKind::Abs)
+    }
+
+    /// Record the logistic sigmoid.
+    pub fn sigmoid(&self) -> LazyTensor {
+        self.unary(UnaryKind::Sigmoid)
+    }
+
+    /// Record the hyperbolic tangent.
+    pub fn tanh(&self) -> LazyTensor {
+        self.unary(UnaryKind::Tanh)
+    }
+
+    /// Record GELU (tanh approximation, like the eager op).
+    pub fn gelu(&self) -> LazyTensor {
+        self.unary(UnaryKind::Gelu)
+    }
+
+    /// Record adding a scalar constant.
+    pub fn add_scalar(&self, s: f32) -> LazyTensor {
+        self.unary(UnaryKind::AddScalar(s))
+    }
+
+    /// Record multiplying by a scalar constant.
+    pub fn mul_scalar(&self, s: f32) -> LazyTensor {
+        self.unary(UnaryKind::MulScalar(s))
+    }
+
+    // -- recording: full reductions --------------------------------------
+
+    /// Record the sum of all elements (fused as an order-stable epilogue
+    /// — no intermediate tensor, bit-identical at any thread count).
+    pub fn sum(&self) -> LazyTensor {
+        LazyTensor::from_node(Node::reduce(ReduceOp::Sum, &self.node))
+    }
+
+    /// Record the mean of all elements.
+    pub fn mean(&self) -> LazyTensor {
+        LazyTensor::from_node(Node::reduce(ReduceOp::Mean, &self.node))
+    }
+
+    /// Record the maximum of all elements.
+    pub fn max_all(&self) -> LazyTensor {
+        LazyTensor::from_node(Node::reduce(ReduceOp::Max, &self.node))
+    }
+
+    /// Record the minimum of all elements.
+    pub fn min_all(&self) -> LazyTensor {
+        LazyTensor::from_node(Node::reduce(ReduceOp::Min, &self.node))
+    }
+
+    // -- evaluation ------------------------------------------------------
+
+    /// Evaluate the recorded DAG with single-pass kernel fusion: one
+    /// exec-layer dispatch and one pooled output allocation per fused
+    /// region. Bitwise-equal to [`LazyTensor::eval_eager`].
+    pub fn eval(&self) -> Result<Tensor> {
+        fuse::eval(&self.node)
+    }
+
+    /// Reference evaluation: replay every recorded op through the eager
+    /// kernels (one dispatch and one intermediate per op). This is the
+    /// opt-out and the yardstick the fusion tests compare against.
+    pub fn eval_eager(&self) -> Result<Tensor> {
+        fuse::eval_eager(&self.node)
+    }
+}
+
+impl std::fmt::Debug for LazyTensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "LazyTensor(op={}, shape={}, dtype={}, nodes={})",
+            self.op_name(),
+            self.shape(),
+            self.dtype(),
+            self.node_count()
+        )
+    }
+}
+
+impl Tensor {
+    /// Enter the lazy expression graph: wrap this tensor as a leaf. Ops
+    /// on the returned handle record instead of executing; call
+    /// [`LazyTensor::eval`] to fuse and run. The tensor is captured by
+    /// cheap storage-sharing clone — no copy.
+    pub fn lazy(&self) -> LazyTensor {
+        LazyTensor::from_node(Node::leaf(self.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::stats;
+
+    #[test]
+    fn record_then_eval_matches_eager_chain() {
+        let a = Tensor::arange(-8.0, 8.0);
+        let b = Tensor::arange(0.0, 16.0);
+        let y = a
+            .lazy()
+            .mul(&b.lazy())
+            .unwrap()
+            .add(&a.lazy())
+            .unwrap()
+            .relu()
+            .eval()
+            .unwrap();
+        let want = a.mul(&b).unwrap().add(&a).unwrap().relu();
+        let (yv, wv) = (y.to_vec(), want.to_vec());
+        for i in 0..yv.len() {
+            assert_eq!(yv[i].to_bits(), wv[i].to_bits(), "i={i}");
+        }
+    }
+
+    #[test]
+    fn three_op_chain_is_one_dispatch_one_alloc() {
+        let a = Tensor::arange(0.0, 256.0);
+        let b = Tensor::arange(256.0, 512.0);
+        let c = Tensor::arange(-128.0, 128.0);
+        let expr = a
+            .lazy()
+            .mul(&b.lazy())
+            .unwrap()
+            .add(&c.lazy())
+            .unwrap()
+            .relu();
+        let before = stats::snapshot();
+        let y = expr.eval().unwrap();
+        let d = stats::snapshot().delta(&before);
+        assert_eq!(d.exec_dispatches, 1, "one exec-layer dispatch");
+        assert_eq!(d.output_allocs, 1, "one output allocation");
+        assert_eq!(d.fused_kernels, 1);
+        assert_eq!(d.fused_ops, 3);
+        // And the eager chain costs 3 dispatches / 3 allocations.
+        let before = stats::snapshot();
+        let want = a.mul(&b).unwrap().add(&c).unwrap().relu();
+        let d = stats::snapshot().delta(&before);
+        assert_eq!(d.exec_dispatches, 3);
+        assert_eq!(d.output_allocs, 3);
+        assert_eq!(d.fused_kernels, 0);
+        assert_eq!(y.to_vec(), want.to_vec());
+    }
+
+    #[test]
+    fn fused_sum_epilogue_is_one_dispatch_zero_allocs() {
+        let a = Tensor::arange(0.0, 100_000.0).mul_scalar(1e-4);
+        let expr = a.lazy().square().add_scalar(1.0).sum();
+        let before = stats::snapshot();
+        let y = expr.eval().unwrap();
+        let d = stats::snapshot().delta(&before);
+        assert_eq!(d.exec_dispatches, 1, "reduce fused into the region");
+        assert_eq!(d.output_allocs, 0, "scalar output needs no pool buffer");
+        let want = a.square().add_scalar(1.0).sum();
+        assert_eq!(
+            y.item().unwrap().to_bits(),
+            want.item().unwrap().to_bits(),
+            "bitwise-equal to the eager reduction"
+        );
+    }
+
+    #[test]
+    fn dtype_propagates_like_eager() {
+        let i = Tensor::from_vec_i32(vec![1, -2, 3], &[3]).unwrap();
+        let y = i.lazy().neg().eval().unwrap();
+        assert_eq!(y.dtype(), DType::I32);
+        let f = Tensor::from_vec(vec![0.5, 0.5, 0.5], &[3]).unwrap();
+        let p = i.lazy().add(&f.lazy()).unwrap();
+        assert_eq!(p.dtype(), DType::F32);
+        assert_eq!(p.eval().unwrap().dtype(), DType::F32);
+        assert_eq!(i.lazy().sum().eval().unwrap().dtype(), DType::F32);
+    }
+
+    #[test]
+    fn record_time_shape_errors_match_eager() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4]);
+        assert!(a.lazy().add(&b.lazy()).is_err());
+        assert!(a.add(&b).is_err());
+    }
+
+    #[test]
+    fn eval_of_leaf_is_free() {
+        let a = Tensor::arange(0.0, 10.0);
+        let before = stats::snapshot();
+        let y = a.lazy().eval().unwrap();
+        let d = stats::snapshot().delta(&before);
+        assert_eq!(d.exec_dispatches, 0);
+        assert_eq!(d.output_allocs, 0);
+        assert!(y.shares_storage(&a), "leaf eval shares storage");
+    }
+
+    #[test]
+    fn debug_and_introspection() {
+        let a = Tensor::zeros(&[4]);
+        let e = a.lazy().relu().add_scalar(1.0);
+        assert_eq!(e.op_name(), "add_scalar");
+        assert_eq!(e.dims(), &[4]);
+        assert_eq!(e.numel(), 4);
+        assert_eq!(e.node_count(), 3);
+        assert_eq!(e.region_count(), 1);
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("add_scalar"), "{dbg}");
+    }
+}

@@ -1,0 +1,644 @@
+//! Expression-graph IR: the node kinds a [`super::LazyTensor`] records.
+//!
+//! Every op kind carries three synchronized definitions — the scalar
+//! semantics the fused interpreter applies (`apply_block`, with a
+//! test-only per-element `apply` that pins each arm against the eager
+//! method bit for bit), the eager replay (`eval_eager`, literally the
+//! `Tensor` method the eager engine runs), and the VJP used by
+//! `Var::fused`. The scalar functions are the *same functions* the
+//! eager kernels close over, which is what makes fused evaluation
+//! bitwise-equal to the eager op chain: identical f32 operations in
+//! identical per-element order, just without the intermediate
+//! materializations.
+
+use std::rc::Rc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::dtype::DType;
+use crate::error::Result;
+use crate::ops::kernels;
+use crate::ops::unary::{gelu_grad_scalar, gelu_scalar, sigmoid_scalar};
+use crate::shape::Shape;
+use crate::tensor::Tensor;
+
+/// Unary elementwise ops (including scalar-parameterized ones).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(crate) enum UnaryKind {
+    Neg,
+    Relu,
+    Exp,
+    Log,
+    Sqrt,
+    Square,
+    Abs,
+    Sigmoid,
+    Tanh,
+    Gelu,
+    AddScalar(f32),
+    MulScalar(f32),
+}
+
+impl UnaryKind {
+    /// Scalar semantics — must match the closure the eager `Tensor`
+    /// method passes to `exec::unary_op`, expression for expression.
+    /// Test-only: the hot path is `apply_block`; this is the per-element
+    /// spec the unit tests pin both paths against.
+    #[cfg(test)]
+    pub fn apply(self, v: f32) -> f32 {
+        match self {
+            UnaryKind::Neg => -v,
+            UnaryKind::Relu => v.max(0.0),
+            UnaryKind::Exp => v.exp(),
+            UnaryKind::Log => v.ln(),
+            UnaryKind::Sqrt => v.sqrt(),
+            UnaryKind::Square => v * v,
+            UnaryKind::Abs => v.abs(),
+            UnaryKind::Sigmoid => sigmoid_scalar(v),
+            UnaryKind::Tanh => v.tanh(),
+            UnaryKind::Gelu => gelu_scalar(v),
+            UnaryKind::AddScalar(s) => v + s,
+            UnaryKind::MulScalar(s) => v * s,
+        }
+    }
+
+    /// In-place block form (one match arm per kind so each loop body is
+    /// monomorphic and auto-vectorizes).
+    #[inline]
+    pub fn apply_block(self, dst: &mut [f32]) {
+        match self {
+            UnaryKind::Neg => {
+                for v in dst.iter_mut() {
+                    *v = -*v;
+                }
+            }
+            UnaryKind::Relu => {
+                for v in dst.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+            UnaryKind::Exp => {
+                for v in dst.iter_mut() {
+                    *v = v.exp();
+                }
+            }
+            UnaryKind::Log => {
+                for v in dst.iter_mut() {
+                    *v = v.ln();
+                }
+            }
+            UnaryKind::Sqrt => {
+                for v in dst.iter_mut() {
+                    *v = v.sqrt();
+                }
+            }
+            UnaryKind::Square => {
+                for v in dst.iter_mut() {
+                    *v = *v * *v;
+                }
+            }
+            UnaryKind::Abs => {
+                for v in dst.iter_mut() {
+                    *v = v.abs();
+                }
+            }
+            UnaryKind::Sigmoid => {
+                for v in dst.iter_mut() {
+                    *v = sigmoid_scalar(*v);
+                }
+            }
+            UnaryKind::Tanh => {
+                for v in dst.iter_mut() {
+                    *v = v.tanh();
+                }
+            }
+            UnaryKind::Gelu => {
+                for v in dst.iter_mut() {
+                    *v = gelu_scalar(*v);
+                }
+            }
+            UnaryKind::AddScalar(s) => {
+                for v in dst.iter_mut() {
+                    *v += s;
+                }
+            }
+            UnaryKind::MulScalar(s) => {
+                for v in dst.iter_mut() {
+                    *v *= s;
+                }
+            }
+        }
+    }
+
+    /// Replay through the eager kernel (the bitwise reference path).
+    pub fn eval_eager(self, x: &Tensor) -> Tensor {
+        match self {
+            UnaryKind::Neg => x.neg(),
+            UnaryKind::Relu => x.relu(),
+            UnaryKind::Exp => x.exp(),
+            UnaryKind::Log => x.log(),
+            UnaryKind::Sqrt => x.sqrt(),
+            UnaryKind::Square => x.square(),
+            UnaryKind::Abs => x.abs(),
+            UnaryKind::Sigmoid => x.sigmoid(),
+            UnaryKind::Tanh => x.tanh(),
+            UnaryKind::Gelu => x.gelu(),
+            UnaryKind::AddScalar(s) => x.add_scalar(s),
+            UnaryKind::MulScalar(s) => x.mul_scalar(s),
+        }
+    }
+
+    /// Cotangent w.r.t. `x` given `(x, y, ḡ)` — mirrors the pullbacks in
+    /// `autograd::ops` rule for rule.
+    pub fn vjp(self, x: &Tensor, y: &Tensor, g: &Tensor) -> Tensor {
+        match self {
+            UnaryKind::Neg => g.neg(),
+            UnaryKind::Relu => g.mul(&x.map(|v| f32::from(v > 0.0))).unwrap(),
+            UnaryKind::Exp => g.mul(y).unwrap(),
+            UnaryKind::Log => g.div(x).unwrap(),
+            UnaryKind::Sqrt => g.div(&y.mul_scalar(2.0)).unwrap(),
+            UnaryKind::Square => g.mul(&x.mul_scalar(2.0)).unwrap(),
+            UnaryKind::Abs => g
+                .mul(&x.map(|v| {
+                    if v > 0.0 {
+                        1.0
+                    } else if v < 0.0 {
+                        -1.0
+                    } else {
+                        0.0
+                    }
+                }))
+                .unwrap(),
+            UnaryKind::Sigmoid => {
+                let one_minus = y.map(|v| 1.0 - v);
+                g.mul(y).unwrap().mul(&one_minus).unwrap()
+            }
+            UnaryKind::Tanh => g.mul(&y.map(|t| 1.0 - t * t)).unwrap(),
+            UnaryKind::Gelu => g.mul(&x.map(gelu_grad_scalar)).unwrap(),
+            UnaryKind::AddScalar(_) => g.clone(),
+            UnaryKind::MulScalar(s) => g.mul_scalar(s),
+        }
+    }
+
+    /// Op name for graph dumps and `Debug`.
+    pub fn name(self) -> &'static str {
+        match self {
+            UnaryKind::Neg => "neg",
+            UnaryKind::Relu => "relu",
+            UnaryKind::Exp => "exp",
+            UnaryKind::Log => "log",
+            UnaryKind::Sqrt => "sqrt",
+            UnaryKind::Square => "square",
+            UnaryKind::Abs => "abs",
+            UnaryKind::Sigmoid => "sigmoid",
+            UnaryKind::Tanh => "tanh",
+            UnaryKind::Gelu => "gelu",
+            UnaryKind::AddScalar(_) => "add_scalar",
+            UnaryKind::MulScalar(_) => "mul_scalar",
+        }
+    }
+}
+
+/// Binary elementwise ops (broadcasting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum BinaryKind {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+}
+
+impl BinaryKind {
+    /// Scalar semantics — must match the closure the eager `Tensor`
+    /// method passes to `exec::binary_op`. Test-only: the hot path is
+    /// `apply_block`; this is the per-element spec the unit tests pin
+    /// both paths against.
+    #[cfg(test)]
+    pub fn apply(self, a: f32, b: f32) -> f32 {
+        match self {
+            BinaryKind::Add => a + b,
+            BinaryKind::Sub => a - b,
+            BinaryKind::Mul => a * b,
+            BinaryKind::Div => a / b,
+            BinaryKind::Max => a.max(b),
+            BinaryKind::Min => a.min(b),
+        }
+    }
+
+    /// In-place block form: `dst[i] = apply(dst[i], rhs[i])`.
+    #[inline]
+    pub fn apply_block(self, dst: &mut [f32], rhs: &[f32]) {
+        debug_assert_eq!(dst.len(), rhs.len());
+        match self {
+            BinaryKind::Add => {
+                for (a, &b) in dst.iter_mut().zip(rhs) {
+                    *a += b;
+                }
+            }
+            BinaryKind::Sub => {
+                for (a, &b) in dst.iter_mut().zip(rhs) {
+                    *a -= b;
+                }
+            }
+            BinaryKind::Mul => {
+                for (a, &b) in dst.iter_mut().zip(rhs) {
+                    *a *= b;
+                }
+            }
+            BinaryKind::Div => {
+                for (a, &b) in dst.iter_mut().zip(rhs) {
+                    *a /= b;
+                }
+            }
+            BinaryKind::Max => {
+                for (a, &b) in dst.iter_mut().zip(rhs) {
+                    *a = a.max(b);
+                }
+            }
+            BinaryKind::Min => {
+                for (a, &b) in dst.iter_mut().zip(rhs) {
+                    *a = a.min(b);
+                }
+            }
+        }
+    }
+
+    /// Replay through the eager kernel (the bitwise reference path).
+    pub fn eval_eager(self, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+        match self {
+            BinaryKind::Add => a.add(b),
+            BinaryKind::Sub => a.sub(b),
+            BinaryKind::Mul => a.mul(b),
+            BinaryKind::Div => a.div(b),
+            BinaryKind::Max => a.maximum(b),
+            BinaryKind::Min => a.minimum(b),
+        }
+    }
+
+    /// Full-shape cotangent w.r.t. the **left** operand before broadcast
+    /// reduction — mirrors `autograd::ops`; Max/Min use the standard
+    /// subgradient (ties route to the side the forward selects). Split
+    /// per side so the VJP replay can skip operands that don't require
+    /// gradients without computing their cotangent at all.
+    pub fn vjp_a(self, a: &Tensor, b: &Tensor, g: &Tensor) -> Result<Tensor> {
+        match self {
+            BinaryKind::Add | BinaryKind::Sub => Ok(g.clone()),
+            BinaryKind::Mul => g.mul(b),
+            BinaryKind::Div => g.div(b),
+            BinaryKind::Max => g.mul(&a.ge(b)?), // 1.0 where a wins (ties -> a)
+            BinaryKind::Min => g.mul(&b.ge(a)?), // 1.0 where a <= b
+        }
+    }
+
+    /// Full-shape cotangent w.r.t. the **right** operand before
+    /// broadcast reduction (see [`BinaryKind::vjp_a`]).
+    pub fn vjp_b(self, a: &Tensor, b: &Tensor, g: &Tensor) -> Result<Tensor> {
+        match self {
+            BinaryKind::Add => Ok(g.clone()),
+            BinaryKind::Sub => Ok(g.neg()),
+            BinaryKind::Mul => g.mul(a),
+            BinaryKind::Div => Ok(g.mul(a)?.div(&b.square())?.neg()),
+            BinaryKind::Max => g.mul(&a.ge(b)?.map(|v| 1.0 - v)),
+            BinaryKind::Min => g.mul(&b.ge(a)?.map(|v| 1.0 - v)),
+        }
+    }
+
+    /// Op name for graph dumps and `Debug`.
+    pub fn name(self) -> &'static str {
+        match self {
+            BinaryKind::Add => "add",
+            BinaryKind::Sub => "sub",
+            BinaryKind::Mul => "mul",
+            BinaryKind::Div => "div",
+            BinaryKind::Max => "maximum",
+            BinaryKind::Min => "minimum",
+        }
+    }
+}
+
+/// Full reductions (to a rank-0 scalar) a lazy expression may end in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum ReduceOp {
+    Sum,
+    Mean,
+    Max,
+    Min,
+}
+
+impl ReduceOp {
+    /// Identity element of the underlying fold (what an empty reduction
+    /// yields before [`ReduceOp::finish`]).
+    pub fn identity(self) -> f32 {
+        match self {
+            ReduceOp::Sum | ReduceOp::Mean => 0.0,
+            ReduceOp::Max => f32::NEG_INFINITY,
+            ReduceOp::Min => f32::INFINITY,
+        }
+    }
+
+    /// Contiguous-slice kernel producing one chunk partial — the same
+    /// kernel the eager `reduce_all` uses over the same [`fixed
+    /// partition`](crate::ops::exec::reduce_fixed), which is what keeps
+    /// fused and eager reductions bitwise-equal.
+    pub fn slice_kernel(self) -> fn(&[f32]) -> f32 {
+        match self {
+            ReduceOp::Sum | ReduceOp::Mean => kernels::sum,
+            ReduceOp::Max => kernels::max,
+            ReduceOp::Min => kernels::min,
+        }
+    }
+
+    /// Fold two chunk partials (applied in ascending chunk order).
+    pub fn combine(self, a: f32, b: f32) -> f32 {
+        match self {
+            ReduceOp::Sum | ReduceOp::Mean => a + b,
+            ReduceOp::Max => a.max(b),
+            ReduceOp::Min => a.min(b),
+        }
+    }
+
+    /// Finalize the folded total (`Mean` applies the same `* (1/n)` the
+    /// eager `Tensor::mean` applies after its sum).
+    pub fn finish(self, total: f32, n: usize) -> f32 {
+        match self {
+            ReduceOp::Mean => total * (1.0 / n as f32),
+            _ => total,
+        }
+    }
+
+    /// Replay through the eager kernel (the bitwise reference path —
+    /// also used directly when the reduce input is already a
+    /// materialized tensor, so non-contiguous inputs take the exact
+    /// eager code path).
+    pub fn eval_eager(self, x: &Tensor) -> Tensor {
+        match self {
+            ReduceOp::Sum => x.sum(),
+            ReduceOp::Mean => x.mean(),
+            ReduceOp::Max => x.max_all(),
+            ReduceOp::Min => x.min_all(),
+        }
+    }
+
+    /// Cotangent w.r.t. the reduce input given the scalar `ḡ` — mirrors
+    /// `Var::sum`/`mean`/`max_all` (Max/Min route to the first arg
+    /// extremum, like `Var::max_all`).
+    pub fn vjp(self, x: &Tensor, g: &Tensor) -> Tensor {
+        let seed = g.item().expect("reduce cotangent is scalar");
+        match self {
+            ReduceOp::Sum => Tensor::full(x.dims(), seed),
+            ReduceOp::Mean => Tensor::full(x.dims(), seed * (1.0 / x.numel() as f32)),
+            ReduceOp::Max | ReduceOp::Min => {
+                let flat = x.to_vec();
+                let arg = match self {
+                    ReduceOp::Max => kernels::argmax(&flat),
+                    _ => {
+                        let neg: Vec<f32> = flat.iter().map(|v| -v).collect();
+                        kernels::argmax(&neg)
+                    }
+                };
+                let mut grad = vec![0.0f32; flat.len()];
+                if !grad.is_empty() {
+                    grad[arg] = seed;
+                }
+                Tensor::from_vec(grad, x.dims()).expect("grad shape matches input")
+            }
+        }
+    }
+
+    /// Op name for graph dumps and `Debug`.
+    pub fn name(self) -> &'static str {
+        match self {
+            ReduceOp::Sum => "sum",
+            ReduceOp::Mean => "mean",
+            ReduceOp::Max => "max_all",
+            ReduceOp::Min => "min_all",
+        }
+    }
+}
+
+/// One recorded expression node.
+pub(crate) enum NodeKind {
+    /// Concrete tensor input.
+    Leaf(Tensor),
+    Unary { k: UnaryKind, x: NodeRef },
+    Binary { k: BinaryKind, a: NodeRef, b: NodeRef },
+    Reduce { k: ReduceOp, x: NodeRef },
+    /// Drop-stolen marker: the iterative [`Drop`] below replaces a
+    /// node's kind with this while unlinking children, so a deep chain
+    /// is torn down with an explicit worklist instead of `Rc` recursion.
+    /// Never observable outside `Drop`.
+    Nil,
+}
+
+/// A DAG node: kind plus the inferred output shape/dtype and a unique id
+/// (creation order — ids are the keys of every evaluator-side map).
+pub(crate) struct Node {
+    pub kind: NodeKind,
+    pub shape: Shape,
+    pub dtype: DType,
+    pub id: usize,
+}
+
+/// Shared handle; `LazyTensor` clones are cheap and alias the node.
+pub(crate) type NodeRef = Rc<Node>;
+
+static NEXT_ID: AtomicUsize = AtomicUsize::new(1);
+
+fn next_id() -> usize {
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+impl Node {
+    pub fn leaf(t: Tensor) -> NodeRef {
+        Rc::new(Node {
+            shape: t.shape().clone(),
+            dtype: t.dtype(),
+            kind: NodeKind::Leaf(t),
+            id: next_id(),
+        })
+    }
+
+    /// Unary node: same shape and dtype as the input (the eager unary
+    /// kernels preserve both).
+    pub fn unary(k: UnaryKind, x: &NodeRef) -> NodeRef {
+        Rc::new(Node {
+            shape: x.shape.clone(),
+            dtype: x.dtype,
+            kind: NodeKind::Unary { k, x: Rc::clone(x) },
+            id: next_id(),
+        })
+    }
+
+    /// Binary node: broadcast shape, promoted dtype — errors now (at
+    /// record time) exactly where the eager op would error.
+    pub fn binary(k: BinaryKind, a: &NodeRef, b: &NodeRef) -> Result<NodeRef> {
+        let shape = a.shape.broadcast(&b.shape)?;
+        Ok(Rc::new(Node {
+            shape,
+            dtype: a.dtype.promote(b.dtype),
+            kind: NodeKind::Binary {
+                k,
+                a: Rc::clone(a),
+                b: Rc::clone(b),
+            },
+            id: next_id(),
+        }))
+    }
+
+    /// Full reduction node: rank-0 scalar, F32 (like `Tensor::scalar`).
+    pub fn reduce(k: ReduceOp, x: &NodeRef) -> NodeRef {
+        Rc::new(Node {
+            shape: Shape::scalar(),
+            dtype: DType::F32,
+            kind: NodeKind::Reduce { k, x: Rc::clone(x) },
+            id: next_id(),
+        })
+    }
+
+    /// Operand nodes (empty for leaves).
+    pub fn children(&self) -> Vec<&NodeRef> {
+        match &self.kind {
+            NodeKind::Leaf(_) | NodeKind::Nil => Vec::new(),
+            NodeKind::Unary { x, .. } | NodeKind::Reduce { x, .. } => vec![x],
+            NodeKind::Binary { a, b, .. } => vec![a, b],
+        }
+    }
+
+    /// True for nodes a fused region can absorb (unary/binary).
+    pub fn is_elementwise(&self) -> bool {
+        matches!(self.kind, NodeKind::Unary { .. } | NodeKind::Binary { .. })
+    }
+
+    /// Op name ("leaf" for leaves).
+    pub fn op_name(&self) -> &'static str {
+        match &self.kind {
+            NodeKind::Leaf(_) => "leaf",
+            NodeKind::Unary { k, .. } => k.name(),
+            NodeKind::Binary { k, .. } => k.name(),
+            NodeKind::Reduce { k, .. } => k.name(),
+            NodeKind::Nil => "nil",
+        }
+    }
+}
+
+/// Move `kind`'s operand references into `out`, leaving [`NodeKind::Nil`]
+/// behind (the drop worklist's unlink step).
+fn take_children(kind: &mut NodeKind, out: &mut Vec<NodeRef>) {
+    match std::mem::replace(kind, NodeKind::Nil) {
+        NodeKind::Leaf(_) | NodeKind::Nil => {}
+        NodeKind::Unary { x, .. } | NodeKind::Reduce { x, .. } => out.push(x),
+        NodeKind::Binary { a, b, .. } => {
+            out.push(a);
+            out.push(b);
+        }
+    }
+}
+
+/// Iterative teardown: without this, dropping the root of a long
+/// recorded chain recurses (`Rc<Node>` → `Node` → `Rc<Node>` → …) and a
+/// deep-enough expression overflows the stack even though evaluation
+/// itself is worklist-based. Stealing children into an explicit stack —
+/// and only for nodes this handle uniquely owns (`Rc::into_inner`) —
+/// makes teardown O(1) stack at any depth.
+impl Drop for Node {
+    fn drop(&mut self) {
+        let mut stack: Vec<NodeRef> = Vec::new();
+        take_children(&mut self.kind, &mut stack);
+        while let Some(n) = stack.pop() {
+            if let Some(mut node) = std::rc::Rc::into_inner(n) {
+                take_children(&mut node.kind, &mut stack);
+                // `node` drops here with its children already stolen.
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_semantics_match_eager_methods() {
+        let xs = [-2.5f32, -0.3, 0.0, 0.7, 3.1];
+        let t = Tensor::from_vec(xs.to_vec(), &[5]).unwrap();
+        let unaries = [
+            UnaryKind::Neg,
+            UnaryKind::Relu,
+            UnaryKind::Exp,
+            UnaryKind::Sqrt,
+            UnaryKind::Square,
+            UnaryKind::Abs,
+            UnaryKind::Sigmoid,
+            UnaryKind::Tanh,
+            UnaryKind::Gelu,
+            UnaryKind::AddScalar(1.5),
+            UnaryKind::MulScalar(-0.25),
+        ];
+        for k in unaries {
+            let eager = k.eval_eager(&t).to_vec();
+            let scalar: Vec<f32> = xs.iter().map(|&v| k.apply(v)).collect();
+            let mut block = xs.to_vec();
+            k.apply_block(&mut block);
+            for i in 0..xs.len() {
+                assert_eq!(eager[i].to_bits(), scalar[i].to_bits(), "{:?}", k);
+                assert_eq!(eager[i].to_bits(), block[i].to_bits(), "{:?} block", k);
+            }
+        }
+    }
+
+    #[test]
+    fn binary_semantics_match_eager_methods() {
+        let a = Tensor::from_vec(vec![1.0, -2.0, 0.5, 4.0], &[4]).unwrap();
+        let b = Tensor::from_vec(vec![-3.0, 2.0, 0.5, -0.25], &[4]).unwrap();
+        let kinds = [
+            BinaryKind::Add,
+            BinaryKind::Sub,
+            BinaryKind::Mul,
+            BinaryKind::Div,
+            BinaryKind::Max,
+            BinaryKind::Min,
+        ];
+        for k in kinds {
+            let eager = k.eval_eager(&a, &b).unwrap().to_vec();
+            let mut block = a.to_vec();
+            k.apply_block(&mut block, &b.to_vec());
+            for i in 0..4 {
+                assert_eq!(eager[i].to_bits(), block[i].to_bits(), "{:?}", k);
+                assert_eq!(
+                    eager[i].to_bits(),
+                    k.apply(a.to_vec()[i], b.to_vec()[i]).to_bits(),
+                    "{:?} scalar",
+                    k
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn node_shape_dtype_inference() {
+        let a = Node::leaf(Tensor::zeros(&[4, 1]));
+        let b = Node::leaf(Tensor::zeros(&[3]));
+        let m = Node::binary(BinaryKind::Mul, &a, &b).unwrap();
+        assert_eq!(m.shape.dims(), &[4, 3]);
+        let r = Node::reduce(ReduceOp::Sum, &m);
+        assert_eq!(r.shape.numel(), 1);
+        assert_eq!(r.dtype, DType::F32);
+        let bad = Node::leaf(Tensor::zeros(&[5]));
+        assert!(Node::binary(BinaryKind::Add, &a, &bad).is_err());
+        assert!(m.is_elementwise());
+        assert!(!r.is_elementwise());
+        assert_eq!(r.op_name(), "sum");
+        assert_eq!(a.op_name(), "leaf");
+        assert_eq!(a.children().len(), 0);
+        assert_eq!(m.children().len(), 2);
+    }
+
+    #[test]
+    fn reduce_finish_and_identity() {
+        assert_eq!(ReduceOp::Sum.finish(10.0, 4), 10.0);
+        assert_eq!(ReduceOp::Mean.finish(10.0, 4), 2.5);
+        assert_eq!(ReduceOp::Max.identity(), f32::NEG_INFINITY);
+        assert_eq!(ReduceOp::Min.combine(3.0, -1.0), -1.0);
+    }
+}

@@ -18,6 +18,17 @@
 //! Python never runs on the request path: the [`runtime`] module loads the
 //! AOT artifacts via PJRT (the `xla` crate) and executes them from Rust.
 //!
+//! ## Lazy graphs & kernel fusion
+//!
+//! [`Tensor::lazy`] enters the lazy expression-graph subsystem
+//! ([`graph`]): ops record a small DAG instead of executing, and
+//! [`graph::LazyTensor::eval`] fuses each region of elementwise ops —
+//! optionally ending in a full reduction — into **one composed kernel**
+//! dispatched once through the execution layer: one output allocation,
+//! one pass over memory, intermediates in L1 blocks. Results are
+//! bitwise-equal to the eager op chain and bit-identical at any thread
+//! count; `Var::fused` keeps fused forwards differentiable.
+//!
 //! ## Execution layer & threading
 //!
 //! Every bulk kernel (elementwise, unary maps, reductions, softmax,
@@ -30,11 +41,12 @@
 //! The worker count comes from, in priority order:
 //! [`runtime::parallel::set_num_threads`] (also reachable as the
 //! `train.threads` config key), the `MINITENSOR_NUM_THREADS` environment
-//! variable, then all available cores. **One thread reproduces the serial
-//! kernels bit-for-bit**; elementwise, matmul, and conv kernels keep
-//! their per-element accumulation order and are thread-count-invariant,
-//! while full reductions combine fixed per-chunk partials
-//! (deterministic for a fixed thread count).
+//! variable, then all available cores. Elementwise, matmul, and conv
+//! kernels keep their per-element accumulation order and are
+//! thread-count-invariant (one thread reproduces the pre-pool serial
+//! kernels bit-for-bit), and full reductions fold fixed
+//! `REDUCE_CHUNK`-partition partials in order — bit-identical at any
+//! thread count, matching the lazy graph's fused reduce epilogues.
 //!
 //! ## Feature flags
 //!
@@ -74,6 +86,8 @@ pub mod tensor;
 
 pub mod ops;
 
+pub mod graph;
+
 pub mod autograd;
 
 pub mod nn;
@@ -90,6 +104,7 @@ pub mod coordinator;
 
 pub use dtype::DType;
 pub use error::{Error, Result};
+pub use graph::LazyTensor;
 pub use shape::Shape;
 pub use tensor::Tensor;
 
@@ -101,6 +116,7 @@ pub mod prelude {
     pub use crate::data::{DataLoader, Dataset, Rng};
     pub use crate::dtype::DType;
     pub use crate::error::{Error, Result};
+    pub use crate::graph::LazyTensor;
     pub use crate::nn::{
         losses, Activation, BatchNorm1d, Conv2d, Dense, Dropout, Module, Sequential,
     };

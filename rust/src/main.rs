@@ -113,6 +113,10 @@ fn cmd_train(args: &[String]) -> minitensor::Result<()> {
         report.steps_per_sec
     );
     print!("{}", trainer.metrics.report());
+    // Engine-level counters: dispatches/allocations of the fusable
+    // kernel families (elementwise/unary/rows/reduce/fused — matmul and
+    // conv are not yet instrumented) plus lazy-graph fusion totals.
+    print!("{}", minitensor::runtime::stats::report());
     Ok(())
 }
 
@@ -224,5 +228,19 @@ fn cmd_bench_quick() -> minitensor::Result<()> {
     });
     let gflops = 2.0 * 256f64.powi(3) / s.median_ns;
     println!("matmul 256³: {} ({gflops:.2} GFLOP/s)", fmt_ns(s.median_ns));
+    let s = bench("fused 3-op 1e6", 50.0, 5, || {
+        std::hint::black_box(
+            a.lazy()
+                .mul(&b.lazy())
+                .unwrap()
+                .add(&a.lazy())
+                .unwrap()
+                .relu()
+                .eval()
+                .unwrap(),
+        );
+    });
+    println!("fused relu(a*b+a) 1e6: {}", fmt_ns(s.median_ns));
+    print!("{}", minitensor::runtime::stats::report());
     Ok(())
 }

@@ -356,8 +356,13 @@ pub fn conv2d_backward_weight(
     let per_image = 2 * cout * k * oh * ow + k * oh * ow; // GEMM + transpose
 
     // Serial fast path (small problems, and any n <= 1): accumulate
-    // straight into dw — no partials to combine. The branch depends only
-    // on the problem size, so every thread count takes the same path.
+    // straight into dw — no partials to combine. The two branches fold
+    // dW in different float orders, so this cutoff is part of the
+    // numeric contract: it stays the compile-time const (NOT the
+    // runtime-tunable `parallel::par_threshold()`), exactly like
+    // `exec::REDUCE_CHUNK` — a given problem always picks the same
+    // branch and produces the same gradient bits regardless of
+    // `MINITENSOR_PAR_THRESHOLD` or thread count.
     if n <= 1 || n.saturating_mul(per_image) < exec::PAR_THRESHOLD {
         let mut dw = vec![0.0f32; wlen];
         let mut cols = crate::tensor::pool::take(k * oh * ow);

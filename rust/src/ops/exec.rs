@@ -18,18 +18,62 @@
 //! Outputs draw from the thread-local [`pool`] and are written exactly
 //! once through [`SyncPtr`] — no zero-fill pass (EXPERIMENTS.md §Perf
 //! L3.2), no allocator round-trip in hot loops.
+//!
+//! The lazy expression-graph subsystem ([`crate::graph`]) enters here
+//! too: [`fused_op`] dispatches one composed kernel over N inputs
+//! (single pass, single pooled output), and [`fused_reduce`] adds a
+//! full-reduction epilogue over the fixed [`REDUCE_CHUNK`] partition —
+//! the same partition the eager [`reduce_fixed`] reductions use, which
+//! is what makes fused and eager results bitwise-equal. Dispatches and
+//! output allocations are counted in [`crate::runtime::stats`].
 
+use std::cell::RefCell;
+use std::mem::MaybeUninit;
+
+use crate::dtype::DType;
 use crate::error::{Error, Result};
-use crate::runtime::parallel;
-use crate::shape::StridedIter;
+use crate::runtime::{parallel, stats};
+use crate::shape::{Shape, StridedIter};
 use crate::tensor::{pool, Tensor};
 
-/// Minimum total elements of work before an op engages the worker pool;
-/// below this the fork/join overhead exceeds the loop itself.
-pub const PAR_THRESHOLD: usize = 1 << 15;
+/// Default minimum total elements of work before an op engages the worker
+/// pool; below this the fork/join overhead exceeds the loop itself.
+/// The live value is [`parallel::par_threshold`], overridable via
+/// `MINITENSOR_PAR_THRESHOLD` / [`parallel::set_par_threshold`].
+pub const PAR_THRESHOLD: usize = parallel::DEFAULT_PAR_THRESHOLD;
 
-/// Target elements per parallel chunk (grain) for unit-cost loops.
-pub const PAR_GRAIN: usize = 1 << 13;
+/// Default target elements per parallel chunk (grain) for unit-cost
+/// loops. The live value is [`parallel::par_grain`], overridable via
+/// `MINITENSOR_PAR_GRAIN` / [`parallel::set_par_grain`].
+pub const PAR_GRAIN: usize = parallel::DEFAULT_PAR_GRAIN;
+
+/// Fixed chunk size of the order-stable full reductions ([`reduce_fixed`]
+/// and the fused-reduce epilogue). The partition this induces is **part of
+/// the numeric contract**: per-chunk partials are computed over exactly
+/// these boundaries and folded in ascending chunk order, so the result is
+/// a pure function of the data — bit-identical at any
+/// `MINITENSOR_NUM_THREADS`. Do not derive it from thread count or the
+/// tunable grain.
+pub const REDUCE_CHUNK: usize = 1 << 15;
+
+/// Maximum number of distinct tensor inputs one fused kernel may read
+/// (bounds the stack-allocated slice table in the dispatch loops; the
+/// graph fuser splits regions that would exceed it).
+pub const MAX_FUSED_INPUTS: usize = 16;
+
+/// Block length (elements) for the gather phase of strided fused
+/// dispatch: inputs are staged into L1-resident scratch blocks of this
+/// size before the composed kernel runs over them.
+pub const FUSE_BLOCK: usize = 1024;
+
+thread_local! {
+    /// Gather scratch for strided fused inputs (one FUSE_BLOCK row per
+    /// input). Thread-local so pool workers reuse it allocation-free.
+    static GATHER: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    /// Chunk scratch for the fused-reduce epilogue (one REDUCE_CHUNK of
+    /// materialized elementwise results per in-flight chunk).
+    static RCHUNK: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
 
 /// Raw output pointer shareable across pool workers for **disjoint**
 /// writes into a freshly [`pool::take`]n (or pre-initialized) buffer.
@@ -67,6 +111,21 @@ impl<T> SyncPtr<T> {
         std::slice::from_raw_parts_mut(self.0.add(start), len)
     }
 
+    /// Uninitialized-view of `len` elements starting at `start`, for
+    /// kernels that fill a band through `MaybeUninit::write` (the fused
+    /// dispatch path) — no zero-fill pass, no references to
+    /// uninitialized `f32`s.
+    ///
+    /// # Safety
+    /// The band must be inside the captured allocation and disjoint from
+    /// every band handed to a concurrently running task; the caller must
+    /// write every element before the buffer's length is set over it.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn band_uninit(&self, start: usize, len: usize) -> &mut [MaybeUninit<T>] {
+        std::slice::from_raw_parts_mut(self.0.add(start) as *mut MaybeUninit<T>, len)
+    }
+
     /// Write element `i`.
     ///
     /// # Safety
@@ -92,18 +151,21 @@ impl<T> SyncPtr<T> {
 
 /// The single funnel every migrated kernel dispatches through: run
 /// `body(start, end)` over `0..count` items of approximate per-item cost
-/// `unit` (in element-ops). Serial below [`PAR_THRESHOLD`] total work,
-/// chunked onto the pool above it, with the grain scaled so each chunk
-/// carries at least [`PAR_GRAIN`] element-ops.
+/// `unit` (in element-ops). Serial below [`parallel::par_threshold`]
+/// total work (default [`PAR_THRESHOLD`], tunable via
+/// `MINITENSOR_PAR_THRESHOLD`), chunked onto the pool above it, with the
+/// grain scaled so each chunk carries at least [`parallel::par_grain`]
+/// element-ops (default [`PAR_GRAIN`], tunable via
+/// `MINITENSOR_PAR_GRAIN`).
 pub fn for_chunks(count: usize, unit: usize, body: impl Fn(usize, usize) + Sync) {
     if count == 0 {
         return;
     }
     let unit = unit.max(1);
-    if count.saturating_mul(unit) < PAR_THRESHOLD {
+    if count.saturating_mul(unit) < parallel::par_threshold() {
         body(0, count);
     } else {
-        let grain = (PAR_GRAIN / unit).max(1);
+        let grain = (parallel::par_grain() / unit).max(1);
         parallel::parallel_for(count, grain, &body);
     }
 }
@@ -115,11 +177,22 @@ pub fn for_chunks(count: usize, unit: usize, body: impl Fn(usize, usize) + Sync)
 /// (indices are handed to the pool through an atomic cursor, so load
 /// balance is dynamic but the decomposition is not).
 ///
-/// Pair it with a fixed-order combine of per-chunk partials to get
-/// **thread-count-invariant** reductions: the same partials are produced
-/// and folded in the same order whether `MINITENSOR_NUM_THREADS` is 1 or
-/// 64. The conv2d weight gradient is the canonical user.
+/// **Fixed-partition contract:** the chunk size is part of the
+/// determinism guarantee, not a tuning knob. Callers that promise
+/// thread-count-invariant results (the conv2d weight gradient, the
+/// order-stable full reductions in [`reduce_fixed`]) must pass a `chunk`
+/// that is a pure function of the problem — a constant like
+/// [`REDUCE_CHUNK`] or a value derived only from sizes — never anything
+/// involving `num_threads()` or the tunable grain. Changing the chunk
+/// changes which partials exist and therefore the folded float result.
+/// Pair the fixed partition with a fixed-order combine of the per-chunk
+/// partials and the same values come out whether `MINITENSOR_NUM_THREADS`
+/// is 1 or 64.
+///
+/// `chunk` must be nonzero (a zero chunk is a caller bug — it would make
+/// the partition arithmetic meaningless); debug builds assert this.
 pub fn for_partials(count: usize, chunk: usize, body: impl Fn(usize, usize, usize) + Sync) {
+    debug_assert!(chunk > 0, "for_partials: chunk must be > 0");
     if count == 0 {
         return;
     }
@@ -132,12 +205,52 @@ pub fn for_partials(count: usize, chunk: usize, body: impl Fn(usize, usize, usiz
     });
 }
 
-/// Number of chunks [`for_partials`] cuts for `(count, chunk)`. Callers
-/// that preallocate one partial slot per chunk size their buffer with
-/// this — the single source of truth for the partition arithmetic that
-/// their disjoint-write safety rests on.
+/// Number of chunks [`for_partials`] cuts for `(count, chunk)`:
+/// `ceil(count/chunk)`, a pure function of its arguments (the
+/// fixed-partition contract above — no thread-count term). Callers that
+/// preallocate one partial slot per chunk size their buffer with this —
+/// the single source of truth for the partition arithmetic that their
+/// disjoint-write safety and determinism guarantees rest on.
 pub fn partials_count(count: usize, chunk: usize) -> usize {
+    debug_assert!(chunk > 0, "partials_count: chunk must be > 0");
     count.div_ceil(chunk.max(1))
+}
+
+/// Order-stable **thread-count-invariant** full reduction: compute
+/// `part(start, end)` over the fixed [`for_partials`] partition of
+/// `0..count` into `chunk`-sized pieces, then fold the partials in
+/// ascending chunk order. Because neither the partition nor the fold
+/// order depends on `num_threads()`, the result is bit-identical at any
+/// `MINITENSOR_NUM_THREADS` — unlike [`reduce_chunks`], whose partition
+/// follows the dispatch grain. A single chunk (every `count <= chunk`
+/// reduction) returns `part`'s value untouched, so small reductions are
+/// exactly the serial kernel. `None` iff `count == 0`.
+///
+/// This is the engine behind eager `Tensor::sum`/`max_all`/`min_all`
+/// *and* the fused-reduce epilogue ([`fused_reduce`]) — both sides
+/// produce identical partials over identical boundaries, which is what
+/// makes fused evaluation bitwise-equal to the eager chain.
+pub fn reduce_fixed(
+    count: usize,
+    chunk: usize,
+    part: impl Fn(usize, usize) -> f32 + Sync,
+    combine: impl Fn(f32, f32) -> f32,
+) -> Option<f32> {
+    if count == 0 {
+        return None;
+    }
+    let chunk = chunk.max(1);
+    let n_chunks = partials_count(count, chunk);
+    if n_chunks == 1 {
+        return Some(part(0, count));
+    }
+    let mut partials = vec![0.0f32; n_chunks];
+    let ptr = SyncPtr::new(&mut partials);
+    for_partials(count, chunk, |i, s, e| {
+        // SAFETY: chunk indices are distinct, each inside `partials`.
+        unsafe { ptr.write(i, part(s, e)) };
+    });
+    partials.into_iter().reduce(combine)
 }
 
 /// Order-stable chunk-parallel reduction: compute `part(start, end)` over
@@ -158,7 +271,9 @@ pub fn reduce_chunks(
     }
     // Serial fast path: small reductions (per-step loss scalars, metric
     // reads) skip the mutex/vec/sort machinery entirely.
-    if count.saturating_mul(unit.max(1)) < PAR_THRESHOLD || parallel::num_threads() == 1 {
+    if count.saturating_mul(unit.max(1)) < parallel::par_threshold()
+        || parallel::num_threads() == 1
+    {
         return Some(part(0, count));
     }
     let parts = std::sync::Mutex::new(Vec::new());
@@ -174,6 +289,18 @@ pub fn reduce_chunks(
     parts.into_iter().map(|(_, v)| v).reduce(combine)
 }
 
+/// Draw an op output buffer from the pool, counting it in the engine
+/// stats (`output_allocs`). Every output allocation of the *counted*
+/// funnels — the elementwise/unary/rows/reduce/fused kernels here and
+/// in `ops::reduce` — goes through this, so the fusion tests can assert
+/// exact counts. Matmul/conv/softmax/attention manage their own buffers
+/// and are not yet instrumented (see the stats scope note in
+/// `runtime::stats`).
+pub(crate) fn take_output(n: usize) -> Vec<f32> {
+    stats::record_output_alloc();
+    pool::take(n)
+}
+
 /// Compute `f(a, b)` elementwise with broadcasting; result dtype is
 /// `promote(a, b)` unless retagged by the caller (comparisons → Bool).
 /// This is the engine behind `Tensor::add/sub/mul/…`.
@@ -185,6 +312,7 @@ pub fn binary_op(
     let out_shape = a.shape().broadcast(b.shape())?;
     let dtype = a.dtype().promote(b.dtype());
     let n = out_shape.numel();
+    stats::record_dispatch();
 
     // Degenerate: any zero-sized dimension → empty result, no kernel run
     // (also shields the row tier from `k == 0` chunking).
@@ -196,7 +324,7 @@ pub fn binary_op(
     // slice loop.
     if a.shape() == b.shape() {
         if let (Some(sa), Some(sb)) = (a.contiguous_data(), b.contiguous_data()) {
-            let mut out = pool::take(n);
+            let mut out = take_output(n);
             let ptr = SyncPtr::new(&mut out);
             for_chunks(n, 1, |s, e| {
                 for (i, (&x, &y)) in sa[s..e].iter().zip(&sb[s..e]).enumerate() {
@@ -221,7 +349,7 @@ pub fn binary_op(
         if let (Some(sa), Some(sb)) = (a.contiguous_data(), b.contiguous_data()) {
             let k = sb.len();
             let rows = n / k;
-            let mut out = pool::take(n);
+            let mut out = take_output(n);
             let ptr = SyncPtr::new(&mut out);
             for_chunks(rows, k, |r0, r1| {
                 for (arow, r) in sa[r0 * k..r1 * k].chunks_exact(k).zip(r0..r1) {
@@ -243,7 +371,7 @@ pub fn binary_op(
     let sb = b.shape().broadcast_strides(b.strides(), &out_shape)?;
     let da = a.storage_slice();
     let db = b.storage_slice();
-    let mut out = pool::take(n);
+    let mut out = take_output(n);
     let ptr = SyncPtr::new(&mut out);
     for_chunks(n, 1, |s, e| {
         let ia = StridedIter::starting_at(&out_shape, &sa, a.offset(), s);
@@ -266,9 +394,10 @@ pub fn binary_op(
 /// transposed-view activations no longer serialize the whole map.
 pub fn unary_op(t: &Tensor, f: impl Fn(f32) -> f32 + Sync) -> Tensor {
     let n = t.numel();
+    stats::record_dispatch();
     let out: Vec<f32> = match t.contiguous_data() {
         Some(s) if n > 0 => {
-            let mut out = pool::take(n);
+            let mut out = take_output(n);
             let ptr = SyncPtr::new(&mut out);
             for_chunks(n, 1, |a, b| {
                 for (i, &x) in s[a..b].iter().enumerate() {
@@ -286,7 +415,7 @@ pub fn unary_op(t: &Tensor, f: impl Fn(f32) -> f32 + Sync) -> Tensor {
             let strides = t.strides();
             let offset = t.offset();
             let data = t.storage_slice();
-            let mut out = pool::take(n);
+            let mut out = take_output(n);
             let ptr = SyncPtr::new(&mut out);
             for_chunks(n, 1, |a, b| {
                 let it = StridedIter::starting_at(shape, strides, offset, a);
@@ -324,13 +453,14 @@ pub fn map_rows(
         .last()
         .ok_or_else(|| Error::msg(format!("{op}: rank must be >= 1")))?;
     let n = t.numel();
+    stats::record_dispatch();
     if k == 0 || n == 0 {
         return Tensor::from_vec(Vec::new(), t.dims());
     }
     let src = t.contiguous();
     let s = src.contiguous_data().unwrap();
     let rows = n / k;
-    let mut out = pool::take(n);
+    let mut out = take_output(n);
     let ptr = SyncPtr::new(&mut out);
     for_chunks(rows, k, |r0, r1| {
         for r in r0..r1 {
@@ -348,6 +478,209 @@ pub fn map_rows(
     // SAFETY: every row of every chunk was written by `emit`.
     unsafe { out.set_len(n) };
     Tensor::from_vec(out, t.dims())
+}
+
+/// Per-input access plan for one fused dispatch: either a direct
+/// contiguous slice of exactly the output shape, or a strided/broadcast
+/// walk (storage + projected strides + offset) staged through gather
+/// scratch.
+struct InputPlan<'a> {
+    direct: Option<&'a [f32]>,
+    data: &'a [f32],
+    strides: Vec<isize>,
+    offset: isize,
+}
+
+/// Validate and plan the inputs of a fused kernel **before any side
+/// effects** (stats, allocations): arity within `1..=`
+/// [`MAX_FUSED_INPUTS`], and every input broadcastable to `out_shape`.
+fn plan_fused_inputs<'a>(
+    inputs: &[&'a Tensor],
+    out_shape: &Shape,
+) -> Result<Vec<InputPlan<'a>>> {
+    if inputs.is_empty() || inputs.len() > MAX_FUSED_INPUTS {
+        return Err(Error::msg(format!(
+            "fused kernel: {} inputs outside 1..={MAX_FUSED_INPUTS}",
+            inputs.len()
+        )));
+    }
+    inputs
+        .iter()
+        .map(|t| {
+            let strides = t.shape().broadcast_strides(t.strides(), out_shape)?;
+            Ok(InputPlan {
+                direct: if t.shape() == out_shape {
+                    t.contiguous_data()
+                } else {
+                    None
+                },
+                data: t.storage_slice(),
+                strides,
+                offset: t.offset(),
+            })
+        })
+        .collect()
+}
+
+/// Run the composed kernel over virtual elements `[s, s + dst.len())` of
+/// the broadcast view described by `plans`, staging non-direct inputs
+/// through thread-local [`GATHER`] scratch in [`FUSE_BLOCK`] pieces so
+/// the kernel always sees equal-length, broadcast-projected blocks.
+/// `eval` must initialize every element of each destination block.
+fn eval_gathered<F>(
+    plans: &[InputPlan<'_>],
+    out_shape: &Shape,
+    s: usize,
+    dst: &mut [MaybeUninit<f32>],
+    eval: &F,
+) where
+    F: Fn(&[&[f32]], &mut [MaybeUninit<f32>]) + Sync,
+{
+    let k = plans.len();
+    GATHER.with(|g| {
+        let mut g = g.borrow_mut();
+        if g.len() < k * FUSE_BLOCK {
+            g.resize(k * FUSE_BLOCK, 0.0);
+        }
+        let e = s + dst.len();
+        let mut pos = s;
+        let mut rel = 0usize;
+        while pos < e {
+            let len = FUSE_BLOCK.min(e - pos);
+            // Phase 1: gather strided/broadcast inputs into scratch rows.
+            for (j, p) in plans.iter().enumerate() {
+                if p.direct.is_none() {
+                    let row = &mut g[j * FUSE_BLOCK..j * FUSE_BLOCK + len];
+                    let it = StridedIter::starting_at(out_shape, &p.strides, p.offset, pos);
+                    for (slot, o) in row.iter_mut().zip(it) {
+                        *slot = p.data[o as usize];
+                    }
+                }
+            }
+            // Phase 2: point the slice table at storage (direct inputs)
+            // or the freshly gathered rows, and run the composed kernel.
+            let mut bufs: [&[f32]; MAX_FUSED_INPUTS] = [&[]; MAX_FUSED_INPUTS];
+            for (j, p) in plans.iter().enumerate() {
+                bufs[j] = match p.direct {
+                    Some(d) => &d[pos..pos + len],
+                    None => &g[j * FUSE_BLOCK..j * FUSE_BLOCK + len],
+                };
+            }
+            eval(&bufs[..k], &mut dst[rel..rel + len]);
+            pos += len;
+            rel += len;
+        }
+    });
+}
+
+/// Dispatch one composed elementwise kernel over `inputs` in a **single
+/// pass with a single pooled output allocation** — the lazy graph's
+/// fused-region entry point (paper §3.5 / LoopStack-style fusion). The
+/// kernel is the block form of a composed `Fn(&[f32]) -> f32` over N
+/// inputs: `eval` receives one equal-length, broadcast-projected block
+/// per input and must write every element of the output block,
+/// conceptually `out[i] = f(in_0[i], …, in_{k-1}[i])`.
+///
+/// Tiering mirrors [`binary_op`]: when every input is contiguous and
+/// exactly `out_shape`-shaped the kernel runs directly over raw chunk
+/// slices; otherwise inputs are staged through L1-resident
+/// [`FUSE_BLOCK`] gather blocks ([`eval_gathered`]). Chunk-parallel
+/// either way, and because the partition never changes per-element
+/// arithmetic, results are bit-identical at any `MINITENSOR_NUM_THREADS`.
+///
+/// `fused_ops` is the number of graph ops the kernel folds — it feeds
+/// the engine stats and the threshold/grain cost model.
+pub fn fused_op(
+    inputs: &[&Tensor],
+    out_shape: &Shape,
+    dtype: DType,
+    fused_ops: usize,
+    eval: impl Fn(&[&[f32]], &mut [MaybeUninit<f32>]) + Sync,
+) -> Result<Tensor> {
+    let plans = plan_fused_inputs(inputs, out_shape)?;
+    let n = out_shape.numel();
+    stats::record_dispatch();
+    stats::record_fused(fused_ops, n);
+    if n == 0 {
+        return Ok(Tensor::from_vec(Vec::new(), out_shape.dims())?.with_dtype(dtype));
+    }
+    let unit = (plans.len() + fused_ops).max(1);
+    let mut out = take_output(n);
+    let ptr = SyncPtr::new(&mut out);
+    if plans.iter().all(|p| p.direct.is_some()) {
+        for_chunks(n, unit, |s, e| {
+            let mut bufs: [&[f32]; MAX_FUSED_INPUTS] = [&[]; MAX_FUSED_INPUTS];
+            for (j, p) in plans.iter().enumerate() {
+                bufs[j] = &p.direct.unwrap()[s..e];
+            }
+            // SAFETY: chunks are disjoint and inside `out`'s capacity;
+            // `eval`'s contract is to write every element of the band.
+            let band = unsafe { ptr.band_uninit(s, e - s) };
+            eval(&bufs[..plans.len()], band);
+        });
+    } else {
+        for_chunks(n, unit, |s, e| {
+            // SAFETY: as above.
+            let band = unsafe { ptr.band_uninit(s, e - s) };
+            eval_gathered(&plans, out_shape, s, band, &eval);
+        });
+    }
+    // SAFETY: the chunks covered 0..n exactly once and `eval`
+    // initialized every element of each band.
+    unsafe { out.set_len(n) };
+    Ok(Tensor::from_vec(out, out_shape.dims())?.with_dtype(dtype))
+}
+
+/// Fused elementwise region with a full-reduction **epilogue** in one
+/// dispatch and zero intermediate tensors: the virtual
+/// `virt_shape`-shaped result of `eval` is materialized chunk by chunk
+/// into thread-local scratch and reduced with `slice_reduce`, over the
+/// fixed [`REDUCE_CHUNK`] partition of [`reduce_fixed`], partials folded
+/// in ascending chunk order by `combine`.
+///
+/// Order-stable by construction: the partition and fold order are pure
+/// functions of the element count, so the result is bit-identical at any
+/// `MINITENSOR_NUM_THREADS` — and bitwise equal to materializing the
+/// region with [`fused_op`] (or the eager op chain) and reducing that
+/// tensor through [`reduce_fixed`], because identical partials are
+/// computed with the same kernel over the same boundaries. `None` iff
+/// the virtual result is empty.
+pub fn fused_reduce(
+    inputs: &[&Tensor],
+    virt_shape: &Shape,
+    fused_ops: usize,
+    eval: impl Fn(&[&[f32]], &mut [MaybeUninit<f32>]) + Sync,
+    slice_reduce: impl Fn(&[f32]) -> f32 + Sync,
+    combine: impl Fn(f32, f32) -> f32,
+) -> Result<Option<f32>> {
+    let plans = plan_fused_inputs(inputs, virt_shape)?;
+    let n = virt_shape.numel();
+    stats::record_dispatch();
+    stats::record_fused(fused_ops, n);
+    Ok(reduce_fixed(
+        n,
+        REDUCE_CHUNK,
+        |s, e| {
+            RCHUNK.with(|scr| {
+                let mut scr = scr.borrow_mut();
+                if scr.len() < e - s {
+                    scr.resize(REDUCE_CHUNK.min(n), 0.0);
+                }
+                let chunk = &mut scr[..e - s];
+                // MaybeUninit view of already-initialized scratch:
+                // writing through it keeps every element initialized.
+                let view = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        chunk.as_mut_ptr() as *mut MaybeUninit<f32>,
+                        chunk.len(),
+                    )
+                };
+                eval_gathered(&plans, virt_shape, s, view, &eval);
+                slice_reduce(&*chunk)
+            })
+        },
+        combine,
+    ))
 }
 
 #[cfg(test)]
@@ -469,5 +802,105 @@ mod tests {
         )
         .unwrap();
         assert_eq!(y.to_vec(), vec![2., 0., 1., 6., 5., 0.]);
+    }
+
+    /// Reference composed kernel for the fused tests: relu(a*b + a).
+    fn relu_fma(ins: &[&[f32]], out: &mut [MaybeUninit<f32>]) {
+        for (i, o) in out.iter_mut().enumerate() {
+            o.write((ins[0][i] * ins[1][i] + ins[0][i]).max(0.0));
+        }
+    }
+
+    #[test]
+    fn fused_op_matches_eager_chain_contiguous() {
+        let a = Tensor::arange(-6.0, 6.0).reshape(&[3, 4]).unwrap();
+        let b = Tensor::arange(0.0, 12.0).reshape(&[3, 4]).unwrap();
+        let y = fused_op(&[&a, &b], a.shape(), DType::F32, 2, relu_fma).unwrap();
+        let want = a.mul(&b).unwrap().add(&a).unwrap().relu();
+        assert_eq!(y.to_vec(), want.to_vec());
+        assert_eq!(y.dims(), &[3, 4]);
+    }
+
+    #[test]
+    fn fused_op_gathers_broadcast_and_strided_inputs() {
+        // bias-broadcast rhs and a transposed (strided) lhs
+        let a = Tensor::arange(0.0, 12.0)
+            .reshape(&[4, 3])
+            .unwrap()
+            .t()
+            .unwrap(); // [3, 4], non-contiguous
+        let b = Tensor::from_vec(vec![1., -2., 3., -4.], &[4]).unwrap();
+        let out_shape = a.shape().broadcast(b.shape()).unwrap();
+        let y = fused_op(&[&a, &b], &out_shape, DType::F32, 2, relu_fma).unwrap();
+        let want = a.mul(&b).unwrap().add(&a).unwrap().relu();
+        assert_eq!(y.to_vec(), want.to_vec());
+    }
+
+    #[test]
+    fn fused_op_rejects_bad_inputs_before_side_effects() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4]); // not broadcastable to [2, 3]
+        let before = stats::snapshot();
+        assert!(fused_op(&[&a, &b], a.shape(), DType::F32, 1, relu_fma).is_err());
+        assert!(fused_op(&[], a.shape(), DType::F32, 0, relu_fma).is_err());
+        let after = stats::snapshot();
+        assert_eq!(after, before, "failed validation must not count");
+    }
+
+    #[test]
+    fn fused_op_empty_output() {
+        let a = Tensor::from_vec(Vec::new(), &[0, 3]).unwrap();
+        let y = fused_op(&[&a], a.shape(), DType::F32, 1, |ins, out| {
+            for (i, o) in out.iter_mut().enumerate() {
+                o.write(ins[0][i]);
+            }
+        })
+        .unwrap();
+        assert_eq!(y.dims(), &[0, 3]);
+        assert_eq!(y.numel(), 0);
+    }
+
+    #[test]
+    fn reduce_fixed_single_chunk_is_exact_serial() {
+        let v: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let got = reduce_fixed(v.len(), REDUCE_CHUNK, |a, b| v[a..b].iter().sum(), |x, y| {
+            x + y
+        })
+        .unwrap();
+        assert_eq!(got, 499500.0);
+        assert!(reduce_fixed(0, REDUCE_CHUNK, |_, _| 0.0, |x, y| x + y).is_none());
+    }
+
+    #[test]
+    fn fused_reduce_matches_materialize_then_reduce_fixed() {
+        // Large enough for several REDUCE_CHUNK partials.
+        let n = REDUCE_CHUNK * 2 + 123;
+        let a = Tensor::arange(0.0, n as f32).mul_scalar(1e-3);
+        let b = Tensor::arange(0.0, n as f32).mul_scalar(-2e-3);
+        let kernel = |ins: &[&[f32]], out: &mut [MaybeUninit<f32>]| {
+            for (i, o) in out.iter_mut().enumerate() {
+                o.write((ins[0][i] * ins[1][i] + ins[0][i]).max(0.0));
+            }
+        };
+        let fused = fused_reduce(
+            &[&a, &b],
+            a.shape(),
+            3,
+            kernel,
+            crate::ops::kernels::sum,
+            |x, y| x + y,
+        )
+        .unwrap()
+        .unwrap();
+        let mat = a.mul(&b).unwrap().add(&a).unwrap().relu();
+        let md = mat.contiguous_data().unwrap();
+        let want = reduce_fixed(
+            md.len(),
+            REDUCE_CHUNK,
+            |s, e| crate::ops::kernels::sum(&md[s..e]),
+            |x, y| x + y,
+        )
+        .unwrap();
+        assert_eq!(fused.to_bits(), want.to_bits(), "bitwise partial parity");
     }
 }

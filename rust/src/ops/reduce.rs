@@ -8,8 +8,13 @@
 //! full reductions dispatch through the execution layer: axis reductions
 //! parallelize over the outer index (per-output arithmetic order is
 //! unchanged, so results are identical at any thread count); full
-//! reductions combine per-chunk partials in chunk order (deterministic
-//! for a fixed thread count, exact serial sum at one thread).
+//! reductions fold per-chunk partials over the **fixed**
+//! [`exec::REDUCE_CHUNK`] partition in ascending chunk order
+//! ([`exec::reduce_fixed`]), so they too are bit-identical at any
+//! `MINITENSOR_NUM_THREADS` — and bitwise-equal to the lazy graph's
+//! fused-reduce epilogue, which computes the same partials over the same
+//! boundaries. Reductions of at most one chunk (≤ 32768 elements) are
+//! exactly the serial slice kernel.
 
 use super::{exec, kernels};
 use crate::dtype::DType;
@@ -59,16 +64,18 @@ fn reduce_slice(s: &[f32], kind: ReduceKind) -> f32 {
 
 /// Reduce every element to a scalar tensor.
 pub fn reduce_all(t: &Tensor, kind: ReduceKind) -> Tensor {
+    crate::runtime::stats::record_dispatch();
     let v = match (kind, t.contiguous_data()) {
         (ReduceKind::Prod, _) | (_, None) => t
             .iter()
             .fold(kind.identity(), |acc, v| kind.combine(acc, v)),
         (_, Some(s)) => {
-            // Chunk-parallel partial reductions, combined in chunk order
+            // Order-stable partials over the fixed REDUCE_CHUNK partition,
+            // folded in chunk order: bit-identical at any thread count
             // (single chunk ⇒ exactly the serial kernel's value).
-            exec::reduce_chunks(
+            exec::reduce_fixed(
                 s.len(),
-                1,
+                exec::REDUCE_CHUNK,
                 |a, b| reduce_slice(&s[a..b], kind),
                 |x, y| kind.combine(x, y),
             )
@@ -81,6 +88,7 @@ pub fn reduce_all(t: &Tensor, kind: ReduceKind) -> Tensor {
 /// Reduce along one axis. `keepdim` keeps the reduced axis with size 1.
 pub fn reduce_axis(t: &Tensor, axis: isize, kind: ReduceKind, keepdim: bool) -> Result<Tensor> {
     let ax = t.shape().normalize_axis(axis)?;
+    crate::runtime::stats::record_dispatch();
     let dims = t.dims();
     let outer: usize = dims[..ax].iter().product();
     let len = dims[ax];
@@ -108,7 +116,7 @@ pub fn reduce_axis(t: &Tensor, axis: isize, kind: ReduceKind, keepdim: bool) -> 
         // across the pool, per-row order untouched (thread-count
         // independent results). Raw single-element writes, so the pooled
         // buffer needs no initialization pass.
-        let mut out = crate::tensor::pool::take(out_len);
+        let mut out = exec::take_output(out_len);
         let ptr = exec::SyncPtr::new(&mut out);
         exec::for_chunks(outer, len, |o0, o1| {
             for (o, row) in (o0..o1).zip(s[o0 * len..o1 * len].chunks_exact(len)) {
@@ -126,7 +134,7 @@ pub fn reduce_axis(t: &Tensor, axis: isize, kind: ReduceKind, keepdim: bool) -> 
         // need the identity as their starting value anyway, so the
         // resize doubles as the initialization that makes the parallel
         // slice hand-off sound.
-        let mut out = crate::tensor::pool::take(out_len);
+        let mut out = exec::take_output(out_len);
         out.resize(out_len, kind.identity());
         let ptr = exec::SyncPtr::new(&mut out);
         exec::for_chunks(outer, len * inner, |o0, o1| {

@@ -96,6 +96,66 @@ pub fn effective_threads(n: usize) -> usize {
     }
 }
 
+/// Default minimum total element-ops before a kernel engages the pool.
+pub const DEFAULT_PAR_THRESHOLD: usize = 1 << 15;
+
+/// Default target element-ops per parallel chunk (grain).
+pub const DEFAULT_PAR_GRAIN: usize = 1 << 13;
+
+/// Dispatch cutoffs; 0 means "not resolved yet" (resolve from the
+/// environment on first read, like [`NUM_THREADS`]).
+static PAR_THRESHOLD_V: AtomicUsize = AtomicUsize::new(0);
+static PAR_GRAIN_V: AtomicUsize = AtomicUsize::new(0);
+
+/// Shared lazy-resolution for the dispatch cutoffs: programmatic setter
+/// wins, then the environment variable, then the built-in default
+/// (clamped to ≥ 1 so the chunk arithmetic never divides by zero).
+fn resolve_tunable(cell: &AtomicUsize, env: &str, default: usize) -> usize {
+    let v = cell.load(Ordering::Relaxed);
+    if v != 0 {
+        return v;
+    }
+    let resolved = std::env::var(env)
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .map(|v| v.max(1))
+        .unwrap_or(default);
+    match cell.compare_exchange(0, resolved, Ordering::Relaxed, Ordering::Relaxed) {
+        Ok(_) => resolved,
+        Err(current) => current,
+    }
+}
+
+/// Minimum total element-ops of work before a kernel engages the worker
+/// pool; below it the fork/join overhead exceeds the loop itself.
+/// Override order: [`set_par_threshold`], then `MINITENSOR_PAR_THRESHOLD`,
+/// then [`DEFAULT_PAR_THRESHOLD`]. First step toward auto-tuning these
+/// from a startup microbenchmark (ROADMAP).
+pub fn par_threshold() -> usize {
+    resolve_tunable(
+        &PAR_THRESHOLD_V,
+        "MINITENSOR_PAR_THRESHOLD",
+        DEFAULT_PAR_THRESHOLD,
+    )
+}
+
+/// Target element-ops per parallel chunk. Override order:
+/// [`set_par_grain`], then `MINITENSOR_PAR_GRAIN`, then
+/// [`DEFAULT_PAR_GRAIN`].
+pub fn par_grain() -> usize {
+    resolve_tunable(&PAR_GRAIN_V, "MINITENSOR_PAR_GRAIN", DEFAULT_PAR_GRAIN)
+}
+
+/// Override the parallelism threshold for the whole process (clamped ≥ 1).
+pub fn set_par_threshold(n: usize) {
+    PAR_THRESHOLD_V.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Override the parallel grain for the whole process (clamped ≥ 1).
+pub fn set_par_grain(n: usize) {
+    PAR_GRAIN_V.store(n.max(1), Ordering::Relaxed);
+}
+
 /// Countdown latch: `parallel_for` blocks on it until every shipped chunk
 /// has finished, which is what makes the borrowed-closure hand-off sound.
 struct Latch {
@@ -453,6 +513,26 @@ mod tests {
         });
         set_num_threads(before);
         assert_eq!(total.load(Ordering::Relaxed), 16 * 5);
+    }
+
+    #[test]
+    fn par_tunables_setters_clamp_and_stick() {
+        // No std::env mutation here (the test harness is multi-threaded);
+        // the env-var path shares resolve_tunable with the setter path,
+        // which this exercises end to end.
+        let _guard = nt_lock();
+        let t0 = par_threshold();
+        let g0 = par_grain();
+        set_par_threshold(12345);
+        set_par_grain(77);
+        assert_eq!(par_threshold(), 12345);
+        assert_eq!(par_grain(), 77);
+        set_par_threshold(0); // clamps to 1
+        set_par_grain(0);
+        assert_eq!(par_threshold(), 1);
+        assert_eq!(par_grain(), 1);
+        set_par_threshold(t0);
+        set_par_grain(g0);
     }
 
     #[test]

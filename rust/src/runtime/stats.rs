@@ -1,0 +1,151 @@
+//! Engine-level execution statistics.
+//!
+//! Thread-local counters fed by the execution layer (`ops::exec`) and the
+//! lazy expression-graph subsystem (`crate::graph`), surfaced in the CLI's
+//! engine report and asserted by the fusion tests ("a fused 3-op chain is
+//! exactly one dispatch and one output allocation").
+//!
+//! **Scope:** the instrumented funnels are the elementwise / unary /
+//! row-map / reduction / fused entry points — the kernel families the
+//! lazy graph can fuse, where eager-vs-fused dispatch counts are the
+//! signal. Matmul, conv, softmax, attention, and pooling drive
+//! `parallel_for` directly and are not yet counted (ROADMAP follow-on),
+//! so on a conv/MLP training run the report reflects the fusable subset
+//! of kernel launches, not every launch in the step.
+//!
+//! The counters are **thread-local** on purpose: dispatches happen on the
+//! thread that calls into the execution layer (pool workers never dispatch
+//! — nested parallelism degrades to serial), so a test or a bench reads an
+//! exact count for the work *it* issued, immune to whatever the other test
+//! threads are doing. The report therefore describes the calling thread's
+//! view, which for the single-threaded CLI path is the whole process.
+
+use std::cell::Cell;
+
+thread_local! {
+    static EXEC_DISPATCHES: Cell<u64> = const { Cell::new(0) };
+    static OUTPUT_ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static FUSED_KERNELS: Cell<u64> = const { Cell::new(0) };
+    static FUSED_OPS: Cell<u64> = const { Cell::new(0) };
+    static FUSED_ELEMS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Point-in-time snapshot of this thread's execution counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ExecStats {
+    /// Kernel dispatches through the exec-layer funnels (`binary_op`,
+    /// `unary_op`, `map_rows`, the reduction drivers, `fused_op`,
+    /// `fused_reduce`). One eager op = one dispatch; one fused region =
+    /// one dispatch regardless of how many ops it contains.
+    pub exec_dispatches: u64,
+    /// Output buffers taken from the tensor pool (or freshly allocated)
+    /// by those funnels. A fused region takes exactly one.
+    pub output_allocs: u64,
+    /// Fused-region kernels launched by the lazy graph subsystem.
+    pub fused_kernels: u64,
+    /// Total graph ops folded into those kernels (the intermediates a
+    /// fused kernel avoided materializing is `fused_ops - fused_kernels`).
+    pub fused_ops: u64,
+    /// Output elements produced by fused kernels.
+    pub fused_elems: u64,
+}
+
+impl ExecStats {
+    /// Counter increments since an earlier snapshot on the same thread.
+    pub fn delta(&self, since: &ExecStats) -> ExecStats {
+        ExecStats {
+            exec_dispatches: self.exec_dispatches - since.exec_dispatches,
+            output_allocs: self.output_allocs - since.output_allocs,
+            fused_kernels: self.fused_kernels - since.fused_kernels,
+            fused_ops: self.fused_ops - since.fused_ops,
+            fused_elems: self.fused_elems - since.fused_elems,
+        }
+    }
+}
+
+/// Snapshot this thread's counters.
+pub fn snapshot() -> ExecStats {
+    ExecStats {
+        exec_dispatches: EXEC_DISPATCHES.with(Cell::get),
+        output_allocs: OUTPUT_ALLOCS.with(Cell::get),
+        fused_kernels: FUSED_KERNELS.with(Cell::get),
+        fused_ops: FUSED_OPS.with(Cell::get),
+        fused_elems: FUSED_ELEMS.with(Cell::get),
+    }
+}
+
+/// One exec-layer kernel dispatch (called by the funnels in `ops::exec`).
+pub(crate) fn record_dispatch() {
+    EXEC_DISPATCHES.with(|c| c.set(c.get() + 1));
+}
+
+/// One output buffer drawn for an exec-layer kernel.
+pub(crate) fn record_output_alloc() {
+    OUTPUT_ALLOCS.with(|c| c.set(c.get() + 1));
+}
+
+/// One fused-region kernel covering `ops` graph ops and `elems` output
+/// elements (called by the graph evaluator through `ops::exec`).
+pub(crate) fn record_fused(ops: usize, elems: usize) {
+    FUSED_KERNELS.with(|c| c.set(c.get() + 1));
+    FUSED_OPS.with(|c| c.set(c.get() + ops as u64));
+    FUSED_ELEMS.with(|c| c.set(c.get() + elems as u64));
+}
+
+/// Render the engine report block: worker-thread count, dispatch
+/// counters, and graph-fusion totals for this thread.
+pub fn report() -> String {
+    let s = snapshot();
+    let saved = s.fused_ops.saturating_sub(s.fused_kernels);
+    format!(
+        "engine: threads={} dispatches={} output_allocs={}\n\
+         graph:  fused_kernels={} fused_ops={} intermediates_avoided={} fused_elems={}\n",
+        super::parallel::num_threads(),
+        s.exec_dispatches,
+        s.output_allocs,
+        s.fused_kernels,
+        s.fused_ops,
+        saved,
+        s.fused_elems,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_are_monotonic_and_delta_subtracts() {
+        let a = snapshot();
+        record_dispatch();
+        record_output_alloc();
+        record_fused(3, 100);
+        let b = snapshot();
+        let d = b.delta(&a);
+        assert_eq!(d.exec_dispatches, 1);
+        assert_eq!(d.output_allocs, 1);
+        assert_eq!(d.fused_kernels, 1);
+        assert_eq!(d.fused_ops, 3);
+        assert_eq!(d.fused_elems, 100);
+    }
+
+    #[test]
+    fn report_mentions_threads_and_fusion() {
+        let r = report();
+        assert!(r.contains("threads="));
+        assert!(r.contains("fused_kernels="));
+    }
+
+    #[test]
+    fn counters_are_thread_local() {
+        let before = snapshot();
+        std::thread::spawn(|| {
+            record_dispatch();
+            record_fused(5, 10);
+        })
+        .join()
+        .unwrap();
+        // The other thread's increments must not leak into this thread.
+        assert_eq!(snapshot(), before);
+    }
+}

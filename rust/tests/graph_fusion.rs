@@ -1,0 +1,175 @@
+//! Integration tests for the lazy expression-graph subsystem: fused
+//! evaluation through the public API, bitwise parity with eager chains
+//! across explicit thread counts, dispatch/allocation accounting, and
+//! differentiability of fused forwards.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use minitensor::autograd::{gradcheck, Var};
+use minitensor::data::Rng;
+use minitensor::runtime::{parallel, stats};
+use minitensor::tensor::Tensor;
+
+/// The thread count is process-global: tests that flip it serialize here.
+fn nt_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.to_vec().into_iter().map(f32::to_bits).collect()
+}
+
+#[test]
+fn six_op_chain_bitwise_identical_across_thread_counts() {
+    let _guard = nt_lock();
+    let before = parallel::num_threads();
+    let mut rng = Rng::new(21);
+    let a = Tensor::randn(&[100_000], 0.0, 1.0, &mut rng);
+    let b = Tensor::randn(&[100_000], 0.0, 1.0, &mut rng);
+    let run_fused = || {
+        let (la, lb) = (a.lazy(), b.lazy());
+        la.mul(&lb)
+            .unwrap()
+            .add(&la)
+            .unwrap()
+            .relu()
+            .mul(&lb)
+            .unwrap()
+            .sub(&la)
+            .unwrap()
+            .relu()
+            .eval()
+            .unwrap()
+    };
+    let run_eager = || {
+        a.mul(&b)
+            .unwrap()
+            .add(&a)
+            .unwrap()
+            .relu()
+            .mul(&b)
+            .unwrap()
+            .sub(&a)
+            .unwrap()
+            .relu()
+    };
+    let mut reference: Option<Vec<u32>> = None;
+    for threads in [1usize, 2, 4] {
+        parallel::set_num_threads(threads);
+        let f = bits(&run_fused());
+        assert_eq!(f, bits(&run_eager()), "fused vs eager at {threads} threads");
+        match &reference {
+            None => reference = Some(f),
+            Some(r) => assert_eq!(&f, r, "thread-count invariance at {threads}"),
+        }
+    }
+    parallel::set_num_threads(before);
+}
+
+#[test]
+fn shared_subexpression_costs_one_extra_dispatch() {
+    // y = tanh(a) * tanh(a) (same node reused): two fused kernels —
+    // one materializing tanh(a), one for the product — never three.
+    let a = Tensor::arange(0.0, 512.0).mul_scalar(0.01);
+    let c = a.lazy().tanh();
+    let expr = c.mul(&c).unwrap();
+    assert_eq!(expr.region_count(), 2);
+    let before = stats::snapshot();
+    let y = expr.eval().unwrap();
+    let d = stats::snapshot().delta(&before);
+    assert_eq!(d.exec_dispatches, 2);
+    assert_eq!(d.output_allocs, 2);
+    let want = a.tanh();
+    let want = want.mul(&want).unwrap();
+    assert_eq!(bits(&y), bits(&want));
+}
+
+#[test]
+fn fused_epilogue_and_eager_reduction_agree_at_scale() {
+    let _guard = nt_lock();
+    let before = parallel::num_threads();
+    let mut rng = Rng::new(22);
+    // Straddles several REDUCE_CHUNK boundaries.
+    let a = Tensor::randn(&[200_000], 0.0, 1.0, &mut rng);
+    for threads in [1usize, 2, 4] {
+        parallel::set_num_threads(threads);
+        for reduce in ["sum", "mean", "max", "min"] {
+            let l = a.lazy().square().add_scalar(-0.5);
+            let fused = match reduce {
+                "sum" => l.sum(),
+                "mean" => l.mean(),
+                "max" => l.max_all(),
+                _ => l.min_all(),
+            }
+            .eval()
+            .unwrap()
+            .item()
+            .unwrap();
+            let m = a.square().add_scalar(-0.5);
+            let eager = match reduce {
+                "sum" => m.sum(),
+                "mean" => m.mean(),
+                "max" => m.max_all(),
+                _ => m.min_all(),
+            }
+            .item()
+            .unwrap();
+            assert_eq!(
+                fused.to_bits(),
+                eager.to_bits(),
+                "{reduce} at {threads} threads"
+            );
+        }
+    }
+    parallel::set_num_threads(before);
+}
+
+#[test]
+fn var_fused_composite_passes_gradcheck() {
+    let mut rng = Rng::new(23);
+    let x0 = Tensor::randn(&[3, 4], 0.0, 0.6, &mut rng);
+    let w = Var::from_tensor(Tensor::randn(&[4], 0.0, 0.6, &mut rng), false);
+    let report = gradcheck(
+        |x: &Var| {
+            Var::fused(&[x, &w], |l| {
+                Ok(l[0].mul(&l[1])?.sigmoid().add(&l[0].gelu())?.mean())
+            })
+        },
+        &x0,
+        1e-3,
+        2e-2,
+    )
+    .unwrap();
+    assert!(report.pass, "{report:?}");
+}
+
+#[test]
+fn var_fused_inside_larger_tape_composes() {
+    // A fused region feeding an eager matmul: gradients flow through both.
+    let mut rng = Rng::new(24);
+    let a = Var::from_tensor(Tensor::randn(&[3, 4], 0.0, 1.0, &mut rng), true);
+    let b = Var::from_tensor(Tensor::randn(&[3, 4], 0.0, 1.0, &mut rng), true);
+    let w = Var::from_tensor(Tensor::randn(&[4, 2], 0.0, 1.0, &mut rng), true);
+    let h = Var::fused(&[&a, &b], |l| l[0].mul(&l[1])?.relu().add(&l[0])).unwrap();
+    assert_eq!(h.dims(), vec![3, 4]);
+    let loss = h.matmul(&w).unwrap().square().sum().unwrap();
+    loss.backward().unwrap();
+    assert_eq!(a.grad().unwrap().dims(), &[3, 4]);
+    assert_eq!(b.grad().unwrap().dims(), &[3, 4]);
+    assert_eq!(w.grad().unwrap().dims(), &[4, 2]);
+}
+
+#[test]
+fn lazy_handles_are_reusable_and_observable() {
+    let a = Tensor::arange(0.0, 16.0);
+    let expr = a.lazy().relu().add_scalar(1.0).sum();
+    // eval twice: same value, no hidden state.
+    let v1 = expr.eval().unwrap().item().unwrap();
+    let v2 = expr.eval().unwrap().item().unwrap();
+    assert_eq!(v1.to_bits(), v2.to_bits());
+    assert_eq!(expr.node_count(), 4);
+    assert_eq!(expr.dims(), &[] as &[usize]);
+}

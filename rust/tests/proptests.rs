@@ -9,7 +9,22 @@
 
 use minitensor::autograd::{gradcheck, Var};
 use minitensor::data::Rng;
+use minitensor::graph::LazyTensor;
+use minitensor::runtime::parallel;
 use minitensor::tensor::Tensor;
+
+/// The worker-thread count is process-global: the fusion properties
+/// that flip it serialize here so one test's "1-thread" reference can't
+/// be computed under another test's 4-thread setting (which would turn
+/// the 1-vs-4 invariance check into a vacuous 4-vs-4), and so the
+/// restore can't race.
+fn nt_lock() -> std::sync::MutexGuard<'static, ()> {
+    use std::sync::{Mutex, OnceLock};
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
 
 /// Random shape with rank 1..=4, numel ≤ 512 (small first).
 fn random_shape(rng: &mut Rng, case: usize) -> Vec<usize> {
@@ -242,6 +257,185 @@ fn prop_view_ops_never_copy() {
         assert!(t.shares_storage(&t.narrow(0, 0, dims[0]).unwrap()));
         let flat_numel = t.numel();
         assert!(t.shares_storage(&t.reshape(&[flat_numel]).unwrap()));
+    }
+}
+
+/// Random expression DAG over {add, mul, neg, relu, exp} with
+/// broadcastable random leaf shapes, built simultaneously as a lazy
+/// recording and as the eager op chain. Returns both so properties can
+/// compare them bit for bit.
+fn gen_fusion_case(rng: &mut Rng, dims: &[usize], depth: usize) -> (LazyTensor, Tensor) {
+    if depth == 0 || rng.next_below(4) == 0 {
+        // Leaf: drop random leading axes and shrink random axes to 1 so
+        // broadcasting happens inside the DAG.
+        let keep = rng.next_below(dims.len() as u32 + 1) as usize;
+        let mut shape: Vec<usize> = dims[keep..].to_vec();
+        for d in shape.iter_mut() {
+            if rng.next_below(3) == 0 {
+                *d = 1;
+            }
+        }
+        let t = Tensor::randn(&shape, 0.0, 1.0, rng);
+        return (t.lazy(), t);
+    }
+    match rng.next_below(5) {
+        0 => {
+            let (l1, t1) = gen_fusion_case(rng, dims, depth - 1);
+            let (l2, t2) = gen_fusion_case(rng, dims, depth - 1);
+            (l1.add(&l2).unwrap(), t1.add(&t2).unwrap())
+        }
+        1 => {
+            let (l1, t1) = gen_fusion_case(rng, dims, depth - 1);
+            let (l2, t2) = gen_fusion_case(rng, dims, depth - 1);
+            (l1.mul(&l2).unwrap(), t1.mul(&t2).unwrap())
+        }
+        2 => {
+            let (l, t) = gen_fusion_case(rng, dims, depth - 1);
+            (l.neg(), t.neg())
+        }
+        3 => {
+            let (l, t) = gen_fusion_case(rng, dims, depth - 1);
+            (l.relu(), t.relu())
+        }
+        _ => {
+            let (l, t) = gen_fusion_case(rng, dims, depth - 1);
+            (l.exp(), t.exp())
+        }
+    }
+}
+
+fn assert_bits_eq(a: &Tensor, b: &Tensor, ctx: &str) {
+    assert_eq!(a.dims(), b.dims(), "{ctx}: shape");
+    let (av, bv) = (a.to_vec(), b.to_vec());
+    for i in 0..av.len() {
+        assert_eq!(av[i].to_bits(), bv[i].to_bits(), "{ctx}: elem {i}");
+    }
+}
+
+#[test]
+fn prop_fused_eval_bitwise_equals_eager_chain() {
+    // Random DAGs of {add, mul, neg, relu, exp, sum}: fused eval() must
+    // be bitwise-equal to the eager op chain, at 1 and at 4 threads.
+    let _guard = nt_lock();
+    let mut rng = Rng::new(200);
+    let before = parallel::num_threads();
+    for case in 0..40 {
+        let dims = random_shape(&mut rng, case);
+        let (lazy, eager) = gen_fusion_case(&mut rng, &dims, 2 + case % 3);
+        let with_sum = rng.next_below(2) == 0;
+        let (lazy, eager) = if with_sum {
+            (lazy.sum(), eager.sum())
+        } else {
+            (lazy, eager)
+        };
+        for threads in [1usize, 4] {
+            parallel::set_num_threads(threads);
+            let fused = lazy.eval().unwrap();
+            let replay = lazy.eval_eager().unwrap();
+            assert_bits_eq(
+                &fused,
+                &eager,
+                &format!("case {case} ({dims:?}, sum={with_sum}, t={threads}) vs eager chain"),
+            );
+            assert_bits_eq(
+                &fused,
+                &replay,
+                &format!("case {case} ({dims:?}, sum={with_sum}, t={threads}) vs replay"),
+            );
+        }
+    }
+    parallel::set_num_threads(before);
+}
+
+#[test]
+fn prop_fused_reduce_thread_invariant_on_large_inputs() {
+    // Multi-chunk fused sums (n > REDUCE_CHUNK) must be bit-identical
+    // across thread counts and equal to the eager chain at each count.
+    let _guard = nt_lock();
+    let mut rng = Rng::new(201);
+    let before = parallel::num_threads();
+    for &n in &[40_000usize, 100_000] {
+        let a = Tensor::randn(&[n], 0.0, 1.0, &mut rng);
+        let b = Tensor::randn(&[n], 0.0, 1.0, &mut rng);
+        let value_at = |threads: usize| {
+            parallel::set_num_threads(threads);
+            let (la, lb) = (a.lazy(), b.lazy());
+            let fused = la
+                .mul(&lb)
+                .unwrap()
+                .add(&la)
+                .unwrap()
+                .relu()
+                .sum()
+                .eval()
+                .unwrap()
+                .item()
+                .unwrap();
+            let eager = a
+                .mul(&b)
+                .unwrap()
+                .add(&a)
+                .unwrap()
+                .relu()
+                .sum()
+                .item()
+                .unwrap();
+            assert_eq!(
+                fused.to_bits(),
+                eager.to_bits(),
+                "fused vs eager at {threads} threads (n={n})"
+            );
+            fused
+        };
+        let v1 = value_at(1);
+        let v2 = value_at(2);
+        let v4 = value_at(4);
+        assert_eq!(v1.to_bits(), v2.to_bits(), "1 vs 2 threads (n={n})");
+        assert_eq!(v1.to_bits(), v4.to_bits(), "1 vs 4 threads (n={n})");
+    }
+    parallel::set_num_threads(before);
+}
+
+#[test]
+fn prop_fused_var_grads_match_eager_tape() {
+    // Var::fused gradients equal the eager Var chain's gradients on
+    // random inputs (same VJP rules, replayed).
+    let mut rng = Rng::new(202);
+    for _case in 0..10 {
+        let rows = 1 + rng.next_below(6) as usize;
+        let cols = 1 + rng.next_below(6) as usize;
+        let a0 = Tensor::randn(&[rows, cols], 0.0, 1.0, &mut rng);
+        let b0 = Tensor::randn(&[cols], 0.0, 1.0, &mut rng);
+
+        let (ae, be) = (
+            Var::from_tensor(a0.clone(), true),
+            Var::from_tensor(b0.clone(), true),
+        );
+        ae.mul(&be)
+            .unwrap()
+            .relu()
+            .sum()
+            .unwrap()
+            .backward()
+            .unwrap();
+
+        let (af, bf) = (
+            Var::from_tensor(a0, true),
+            Var::from_tensor(b0, true),
+        );
+        Var::fused(&[&af, &bf], |l| Ok(l[0].mul(&l[1])?.relu().sum()))
+            .unwrap()
+            .backward()
+            .unwrap();
+
+        assert!(af
+            .grad()
+            .unwrap()
+            .allclose(&ae.grad().unwrap(), 1e-6, 1e-6));
+        assert!(bf
+            .grad()
+            .unwrap()
+            .allclose(&be.grad().unwrap(), 1e-6, 1e-6));
     }
 }
 
