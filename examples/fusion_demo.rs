@@ -39,6 +39,16 @@ fn main() -> Result<()> {
     assert_eq!(total.item()?, eager.sum().item()?);
     println!("fused sum epilogue = {}", total.item()?);
 
+    // Re-evaluating a structurally identical expression hits the
+    // compiled-program cache: no region partitioning, no tape build.
+    let before = stats::snapshot();
+    let _ = la.mul(&lb)?.add(&la)?.relu().eval()?;
+    let d = stats::snapshot().delta(&before);
+    println!(
+        "program cache on re-eval: {} hit(s), {} miss(es)",
+        d.program_cache_hits, d.program_cache_misses
+    );
+
     // --- Fused forwards stay differentiable ----------------------------
     let av = Var::from_tensor(a.clone(), true);
     let bv = Var::from_tensor(Tensor::ones(&[3]), true);

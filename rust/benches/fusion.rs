@@ -8,9 +8,23 @@
 //! verifies the fused results are bitwise-equal to eager *and*
 //! bit-identical across thread counts, and writes the perf-trajectory
 //! file `BENCH_fusion.json` at the repository root.
+//!
+//! Two further experiments ride along:
+//!
+//! - **F2, program cache:** cold `eval()` (cache disabled — every call
+//!   re-partitions and re-compiles its tape) vs cached `eval()` (the
+//!   structurally identical graph hits the compiled-plan LRU) on the
+//!   3-op chain at 1e4 elements.
+//! - **F3, fused softmax:** the one-dispatch softmax row kernel vs the
+//!   unfused primitive chain (`x - rowmax → exp → / rowsum`) at 1e6
+//!   elements, in ns/row.
+//!
+//! Pass `--quick` for the CI smoke mode: same sweep grid and the same
+//! JSON schema, just much shorter measurement windows.
 
 use minitensor::bench_util::{bench, fmt_ns, json_rows, Json, Table};
 use minitensor::data::Rng;
+use minitensor::graph;
 use minitensor::runtime::parallel;
 use minitensor::tensor::Tensor;
 
@@ -56,6 +70,10 @@ fn bits(t: &Tensor) -> Vec<u32> {
 }
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    // Quick mode shrinks the measurement window, not the sweep grid, so
+    // the JSON keeps every (experiment, n, threads) row CI expects.
+    let (ms, reps) = if quick { (4.0, 2) } else { (40.0, 5) };
     let before_threads = parallel::num_threads();
     let mut rng = Rng::new(3);
     let mut table = Table::new(
@@ -90,10 +108,10 @@ fn main() {
                 };
                 let bitwise = ok_eager && ok_threads;
 
-                let se = bench(&format!("eager {name} {n} t{threads}"), 40.0, 5, || {
+                let se = bench(&format!("eager {name} {n} t{threads}"), ms, reps, || {
                     std::hint::black_box(eager(&a, &b));
                 });
-                let sf = bench(&format!("fused {name} {n} t{threads}"), 40.0, 5, || {
+                let sf = bench(&format!("fused {name} {n} t{threads}"), ms, reps, || {
                     std::hint::black_box(fused(&a, &b));
                 });
                 let speedup = se.median_ns / sf.median_ns;
@@ -122,12 +140,125 @@ fn main() {
             }
         }
     }
-    parallel::set_num_threads(before_threads);
     table.print();
+
+    // F2 — program cache: cold compile-every-eval vs cached plans, on a
+    // small 3-op chain where per-eval overhead dominates the kernel.
+    let mut cache_table = Table::new(
+        "F2 — cold vs cached eval() (3-op chain)",
+        &["N", "threads", "cold", "cached", "speedup", "bitwise"],
+    );
+    {
+        let n = 10_000usize;
+        let before_cap = graph::program_cache_capacity();
+        let a = Tensor::randn(&[n], 0.0, 1.0, &mut rng);
+        let b = Tensor::randn(&[n], 0.0, 1.0, &mut rng);
+        for &threads in &[1usize, 2, 4] {
+            parallel::set_num_threads(threads);
+            let ok = bits(&fused3(&a, &b)) == bits(&eager3(&a, &b));
+            // Cold: cache capacity 0 — every eval re-partitions the DAG
+            // and rebuilds the instruction tape.
+            graph::set_program_cache_capacity(0);
+            let sc = bench(&format!("cold eval {n} t{threads}"), ms, reps, || {
+                std::hint::black_box(fused3(&a, &b));
+            });
+            // Cached: restore the real capacity, warm with one call —
+            // each timed eval walks the signature and reuses the plan.
+            graph::set_program_cache_capacity(before_cap.max(1));
+            std::hint::black_box(fused3(&a, &b));
+            let sw = bench(&format!("cached eval {n} t{threads}"), ms, reps, || {
+                std::hint::black_box(fused3(&a, &b));
+            });
+            let speedup = sc.median_ns / sw.median_ns;
+            cache_table.row(&[
+                format!("{n}"),
+                format!("{threads}"),
+                fmt_ns(sc.median_ns),
+                fmt_ns(sw.median_ns),
+                format!("{speedup:.2}x"),
+                if ok { "ok".into() } else { "MISMATCH".into() },
+            ]);
+            graph::set_program_cache_capacity(before_cap);
+            rows.push(vec![
+                ("bench", Json::S("fusion_cache".into())),
+                ("n", Json::N(n as f64)),
+                ("threads", Json::N(threads as f64)),
+                ("cold_eval_ns", Json::N(sc.median_ns)),
+                ("cached_eval_ns", Json::N(sw.median_ns)),
+                ("speedup", Json::N(speedup)),
+                ("bitwise_identical", Json::B(ok)),
+            ]);
+        }
+    }
+    cache_table.print();
+
+    // F3 — fused softmax (one row-kernel dispatch) vs the unfused
+    // primitive chain: x - rowmax → exp → / rowsum (4 dispatches, 3
+    // materialized intermediates). Not bitwise (the chain uses libm exp,
+    // the row kernel fast_exp) — verified allclose instead; the fused
+    // kernel itself is pinned bitwise against mul_scalar+softmax in the
+    // test suite.
+    let mut sm_table = Table::new(
+        "F3 — eager-chain vs fused softmax (1e6 elems)",
+        &[
+            "rows", "k", "threads", "eager", "fused", "eager ns/row", "fused ns/row", "speedup",
+            "close",
+        ],
+    );
+    {
+        let (rows_n, k) = (4096usize, 256usize);
+        let t = Tensor::randn(&[rows_n, k], 0.0, 2.0, &mut rng);
+        let eager_sm = |t: &Tensor| {
+            let m = t.max_axis(-1, true).unwrap();
+            let e = t.sub(&m).unwrap().exp();
+            let s = e.sum_axis(-1, true).unwrap();
+            e.div(&s).unwrap()
+        };
+        for &threads in &[1usize, 2, 4] {
+            parallel::set_num_threads(threads);
+            let close = t
+                .softmax()
+                .unwrap()
+                .allclose(&eager_sm(&t), 1e-5, 1e-6);
+            let se = bench(&format!("eager softmax t{threads}"), ms, reps, || {
+                std::hint::black_box(eager_sm(&t));
+            });
+            let sf = bench(&format!("fused softmax t{threads}"), ms, reps, || {
+                std::hint::black_box(t.softmax().unwrap());
+            });
+            let speedup = se.median_ns / sf.median_ns;
+            sm_table.row(&[
+                format!("{rows_n}"),
+                format!("{k}"),
+                format!("{threads}"),
+                fmt_ns(se.median_ns),
+                fmt_ns(sf.median_ns),
+                format!("{:.1}", se.median_ns / rows_n as f64),
+                format!("{:.1}", sf.median_ns / rows_n as f64),
+                format!("{speedup:.2}x"),
+                if close { "ok".into() } else { "MISMATCH".into() },
+            ]);
+            rows.push(vec![
+                ("bench", Json::S("softmax_fused".into())),
+                ("rows", Json::N(rows_n as f64)),
+                ("k", Json::N(k as f64)),
+                ("n", Json::N((rows_n * k) as f64)),
+                ("threads", Json::N(threads as f64)),
+                ("eager_ns_per_row", Json::N(se.median_ns / rows_n as f64)),
+                ("fused_ns_per_row", Json::N(sf.median_ns / rows_n as f64)),
+                ("speedup", Json::N(speedup)),
+                ("allclose", Json::B(close)),
+            ]);
+        }
+    }
+    sm_table.print();
+    parallel::set_num_threads(before_threads);
 
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fusion.json");
     std::fs::write(path, json_rows(&rows)).expect("write BENCH_fusion.json");
     println!("\nwrote {path}");
     println!("fusion claim: one pass over memory per region — the 6-op chain at 1e6");
-    println!("elements should run well over 1.5x faster fused on 2+ threads.");
+    println!("elements should run well over 1.5x faster fused on 2+ threads; cached");
+    println!("eval() must beat cold eval(), and the fused softmax row kernel must");
+    println!("beat the unfused primitive chain, at every thread count.");
 }

@@ -1,23 +1,28 @@
-//! Region partitioner and fused evaluator.
+//! Region partitioner and eager replay.
 //!
-//! `eval` cuts the recorded DAG into **fusable regions** and dispatches
-//! each region as one composed kernel through the execution layer:
+//! [`collect_region`] cuts the recorded DAG into **fusable regions**; the
+//! plan compiler ([`super::plan`]) strings the regions into a compiled,
+//! cacheable step list and dispatches each region as one composed kernel
+//! through the execution layer:
 //!
-//! - a region is a maximal elementwise (unary/binary) tree whose interior
-//!   nodes have exactly one consumer; its frontier — leaves, shared nodes
-//!   (consumed more than once), and reduce results — become the region's
-//!   tensor inputs;
+//! - a region is a maximal elementwise (unary/binary/ternary) tree whose
+//!   interior nodes have exactly one consumer; its frontier — leaves,
+//!   shared nodes (consumed more than once), and reduce results — become
+//!   the region's tensor inputs;
 //! - shared nodes are materialized once and reused (compute-once beats
 //!   recompute-per-consumer);
 //! - a `Reduce` root fuses its private elementwise subtree as an epilogue
 //!   (`exec::fused_reduce`) — no intermediate tensor, order-stable
-//!   partials; a reduce over an already-materialized tensor replays the
-//!   exact eager `reduce_all` path instead (same numerics, no copy);
+//!   partials — and a `ReduceAxis` root does the same per row
+//!   (`exec::fused_axis_reduce`); a reduce over an already-materialized
+//!   tensor replays the exact eager path instead (same numerics, no
+//!   copy);
 //! - regions that would exceed [`exec::MAX_FUSED_INPUTS`] distinct inputs
-//!   degrade gracefully to single-op regions (still one dispatch per op,
-//!   exactly like eager execution).
+//!   or [`kernel::MAX_STACK`] register rows degrade gracefully to
+//!   single-op regions (still one dispatch per op, exactly like eager
+//!   execution), counted in `runtime::stats` as `fusion_bailouts`.
 //!
-//! Evaluation is worklist-based (no recursion), memoized by node id, so
+//! Everything is worklist-based (no recursion), memoized by node id, so
 //! arbitrarily deep chains and DAG sharing both work.
 
 use std::collections::{HashMap, HashSet};
@@ -26,6 +31,7 @@ use super::kernel::{self, Instr, Program};
 use super::node::{NodeKind, NodeRef};
 use crate::error::Result;
 use crate::ops::exec;
+use crate::runtime::stats;
 use crate::tensor::Tensor;
 
 /// Operands-before-consumers order over the DAG reachable from `root`
@@ -54,7 +60,7 @@ pub(crate) fn topo_order(root: &NodeRef) -> Vec<NodeRef> {
 
 /// Consumer counts per node id (edges, not unique parents: a node used
 /// twice by one binary op counts twice — it is still shared work).
-fn count_uses(root: &NodeRef) -> HashMap<usize, usize> {
+pub(crate) fn count_uses(root: &NodeRef) -> HashMap<usize, usize> {
     let mut uses: HashMap<usize, usize> = HashMap::new();
     let mut visited: HashSet<usize> = HashSet::new();
     let mut stack: Vec<NodeRef> = vec![root.clone()];
@@ -71,13 +77,10 @@ fn count_uses(root: &NodeRef) -> HashMap<usize, usize> {
 }
 
 /// A collected fusable region: compiled program + frontier input nodes
-/// (first-seen order, deduplicated by id — `Load` indices match) +
-/// per-input edge counts (`Load` occurrences), which the evaluator uses
-/// to evict materialized inputs once their last consumer has run.
-struct Region {
-    program: Program,
-    inputs: Vec<NodeRef>,
-    input_uses: Vec<usize>,
+/// (first-seen order, deduplicated by id — `Load` indices match).
+pub(crate) struct Region {
+    pub program: Program,
+    pub inputs: Vec<NodeRef>,
 }
 
 /// Collect the maximal region rooted at elementwise node `root`:
@@ -94,7 +97,7 @@ struct Region {
 /// proportional to nesting). Either overflow degrades to a single-op
 /// region ([`single_op_region`]): eager-equivalent cost, bounded
 /// scratch, and the operand subtrees still fuse among themselves.
-fn collect_region(root: &NodeRef, uses: &HashMap<usize, usize>) -> Region {
+pub(crate) fn collect_region(root: &NodeRef, uses: &HashMap<usize, usize>) -> Region {
     enum Step {
         Visit(NodeRef),
         Emit(NodeRef),
@@ -102,7 +105,6 @@ fn collect_region(root: &NodeRef, uses: &HashMap<usize, usize>) -> Region {
     debug_assert!(root.is_elementwise());
     let mut code: Vec<Instr> = Vec::new();
     let mut inputs: Vec<NodeRef> = Vec::new();
-    let mut input_uses: Vec<usize> = Vec::new();
     let mut input_idx: HashMap<usize, usize> = HashMap::new();
     let mut depth = 0usize;
     let mut stack = vec![Step::Visit(root.clone())];
@@ -115,18 +117,18 @@ fn collect_region(root: &NodeRef, uses: &HashMap<usize, usize>) -> Region {
                         Some(&i) => i,
                         None => {
                             if inputs.len() == exec::MAX_FUSED_INPUTS {
+                                stats::record_fusion_bailout();
                                 return single_op_region(root);
                             }
                             inputs.push(n.clone());
-                            input_uses.push(0);
                             input_idx.insert(n.id, inputs.len() - 1);
                             inputs.len() - 1
                         }
                     };
-                    input_uses[idx] += 1;
                     code.push(Instr::Load(idx));
                     depth += 1;
                     if depth > kernel::MAX_STACK {
+                        stats::record_fusion_bailout();
                         return single_op_region(root);
                     }
                 } else {
@@ -143,6 +145,13 @@ fn collect_region(root: &NodeRef, uses: &HashMap<usize, usize>) -> Region {
                             stack.push(Step::Visit(b.clone()));
                             stack.push(Step::Visit(a.clone()));
                         }
+                        NodeKind::Where { c, a, b } => {
+                            stack.push(Step::Emit(n.clone()));
+                            // cond lowest on the value stack, then a, b.
+                            stack.push(Step::Visit(b.clone()));
+                            stack.push(Step::Visit(a.clone()));
+                            stack.push(Step::Visit(c.clone()));
+                        }
                         _ => unreachable!("region roots are elementwise"),
                     }
                 }
@@ -153,6 +162,10 @@ fn collect_region(root: &NodeRef, uses: &HashMap<usize, usize>) -> Region {
                     code.push(Instr::Bin(*k));
                     depth -= 1;
                 }
+                NodeKind::Where { .. } => {
+                    code.push(Instr::Where);
+                    depth -= 2;
+                }
                 _ => unreachable!(),
             },
         }
@@ -161,196 +174,43 @@ fn collect_region(root: &NodeRef, uses: &HashMap<usize, usize>) -> Region {
     Region {
         program: Program::compile(code, inputs.len()),
         inputs,
-        input_uses,
     }
 }
 
-/// Degenerate one-op region (the > MAX_FUSED_INPUTS fallback): the
-/// node's direct operands become the inputs, so evaluation proceeds
-/// exactly like eager execution for this node while the operand subtrees
-/// still fuse among themselves.
+/// Degenerate one-op region (the resource-cap fallback): the node's
+/// direct operands become the inputs, so evaluation proceeds exactly
+/// like eager execution for this node while the operand subtrees still
+/// fuse among themselves.
 fn single_op_region(root: &NodeRef) -> Region {
-    match &root.kind {
-        NodeKind::Unary { k, x } => Region {
-            program: Program::compile(vec![Instr::Load(0), Instr::Un(*k)], 1),
-            inputs: vec![x.clone()],
-            input_uses: vec![1],
-        },
-        NodeKind::Binary { k, a, b } => {
-            if a.id == b.id {
-                Region {
-                    program: Program::compile(
-                        vec![Instr::Load(0), Instr::Load(0), Instr::Bin(*k)],
-                        1,
-                    ),
-                    inputs: vec![a.clone()],
-                    input_uses: vec![2],
-                }
-            } else {
-                Region {
-                    program: Program::compile(
-                        vec![Instr::Load(0), Instr::Load(1), Instr::Bin(*k)],
-                        2,
-                    ),
-                    inputs: vec![a.clone(), b.clone()],
-                    input_uses: vec![1, 1],
-                }
-            }
-        }
+    let (operands, tail): (Vec<&NodeRef>, Instr) = match &root.kind {
+        NodeKind::Unary { k, x } => (vec![x], Instr::Un(*k)),
+        NodeKind::Binary { k, a, b } => (vec![a, b], Instr::Bin(*k)),
+        NodeKind::Where { c, a, b } => (vec![c, a, b], Instr::Where),
         _ => unreachable!("region roots are elementwise"),
-    }
-}
-
-/// Region inputs that still need materialization (non-leaf, not cached).
-fn pending_inputs(region: &Region, cache: &HashMap<usize, Tensor>) -> Vec<NodeRef> {
-    region
-        .inputs
-        .iter()
-        .filter(|n| !matches!(n.kind, NodeKind::Leaf(_)) && !cache.contains_key(&n.id))
-        .cloned()
-        .collect()
-}
-
-/// Resolve the region's input tensors (leaf tensors or cached results).
-fn input_tensors<'a>(region: &'a Region, cache: &'a HashMap<usize, Tensor>) -> Vec<&'a Tensor> {
-    region
-        .inputs
-        .iter()
-        .map(|n| match &n.kind {
-            NodeKind::Leaf(t) => t,
-            _ => cache.get(&n.id).expect("pending inputs were materialized"),
-        })
-        .collect()
-}
-
-/// After a region's kernel has run, consume its input edges: decrement
-/// each materialized input's remaining-consumer count and evict it from
-/// the memo once no future dispatch can read it — the dropped storage
-/// returns to the thread-local pool for reuse by later regions, so peak
-/// memory tracks the *live* set like eager execution, not the whole DAG.
-/// Safe because decrements only happen at dispatch, each region
-/// dispatches exactly once, and the per-region edge counts sum to the
-/// node's total consumer count.
-fn consume_inputs(
-    region: &Region,
-    remaining: &mut HashMap<usize, usize>,
-    cache: &mut HashMap<usize, Tensor>,
-) {
-    for (input, &cnt) in region.inputs.iter().zip(&region.input_uses) {
-        if matches!(input.kind, NodeKind::Leaf(_)) {
-            continue; // leaves are owned by the DAG, never evicted
-        }
-        if let Some(r) = remaining.get_mut(&input.id) {
-            *r = r.saturating_sub(cnt);
-            if *r == 0 {
-                cache.remove(&input.id);
+    };
+    let mut inputs: Vec<NodeRef> = Vec::new();
+    let mut code: Vec<Instr> = Vec::new();
+    for opnd in operands {
+        let idx = match inputs.iter().position(|i| i.id == opnd.id) {
+            Some(i) => i,
+            None => {
+                inputs.push(NodeRef::clone(opnd));
+                inputs.len() - 1
             }
-        }
+        };
+        code.push(Instr::Load(idx));
+    }
+    code.push(tail);
+    Region {
+        program: Program::compile(code, inputs.len()),
+        inputs,
     }
 }
 
-/// Evaluate the DAG rooted at `root` with single-pass kernel fusion.
+/// Evaluate the DAG rooted at `root` with single-pass kernel fusion,
+/// through the compiled-program cache (see [`super::plan`]).
 pub(crate) fn eval(root: &NodeRef) -> Result<Tensor> {
-    let uses = count_uses(root);
-    // Remaining consumer edges per node, decremented as dispatches
-    // consume them (drives cache eviction in `consume_inputs`).
-    let mut remaining: HashMap<usize, usize> = uses.clone();
-    let mut cache: HashMap<usize, Tensor> = HashMap::new();
-    // Regions are collected once per materialization point and memoized,
-    // so a region with pending inputs is not re-walked after they
-    // materialize. Entries are dropped once dispatched.
-    let mut regions: HashMap<usize, Region> = HashMap::new();
-    let mut stack: Vec<NodeRef> = vec![root.clone()];
-    while let Some(n) = stack.last().cloned() {
-        if cache.contains_key(&n.id) {
-            stack.pop();
-            continue;
-        }
-        match &n.kind {
-            NodeKind::Leaf(t) => {
-                cache.insert(n.id, t.clone());
-                stack.pop();
-            }
-            NodeKind::Unary { .. } | NodeKind::Binary { .. } => {
-                let region = regions
-                    .entry(n.id)
-                    .or_insert_with(|| collect_region(&n, &uses));
-                let pending = pending_inputs(region, &cache);
-                if pending.is_empty() {
-                    let tensors = input_tensors(region, &cache);
-                    let prog = &region.program;
-                    let t = exec::fused_op(&tensors, &n.shape, n.dtype, prog.n_ops, |ins, out| {
-                        prog.eval(ins, out)
-                    })?;
-                    drop(tensors);
-                    let region = regions.remove(&n.id).expect("region just inserted");
-                    consume_inputs(&region, &mut remaining, &mut cache);
-                    cache.insert(n.id, t);
-                    stack.pop();
-                } else {
-                    stack.extend(pending);
-                }
-            }
-            NodeKind::Reduce { k, x } => {
-                let private_elem = x.is_elementwise()
-                    && uses.get(&x.id).copied().unwrap_or(0) <= 1;
-                if private_elem {
-                    // Fused epilogue over the private elementwise subtree.
-                    let region = regions
-                        .entry(n.id)
-                        .or_insert_with(|| collect_region(x, &uses));
-                    let pending = pending_inputs(region, &cache);
-                    if pending.is_empty() {
-                        let tensors = input_tensors(region, &cache);
-                        let prog = &region.program;
-                        let total = exec::fused_reduce(
-                            &tensors,
-                            &x.shape,
-                            prog.n_ops + 1,
-                            |ins, out| prog.eval(ins, out),
-                            k.slice_kernel(),
-                            |p, q| k.combine(p, q),
-                        )?;
-                        drop(tensors);
-                        let v = k.finish(total.unwrap_or_else(|| k.identity()), x.shape.numel());
-                        let region = regions.remove(&n.id).expect("region just inserted");
-                        consume_inputs(&region, &mut remaining, &mut cache);
-                        cache.insert(n.id, Tensor::scalar(v));
-                        stack.pop();
-                    } else {
-                        stack.extend(pending);
-                    }
-                } else {
-                    // Boundary input (leaf / shared / reduce result):
-                    // materialize it, then replay the exact eager
-                    // reduction (identical numerics for any layout).
-                    let xt = match &x.kind {
-                        NodeKind::Leaf(t) => Some(t.clone()),
-                        _ => cache.get(&x.id).cloned(),
-                    };
-                    match xt {
-                        Some(t) => {
-                            cache.insert(n.id, k.eval_eager(&t));
-                            // Consume the reduce→input edge directly (no
-                            // region models it).
-                            if !matches!(x.kind, NodeKind::Leaf(_)) {
-                                if let Some(r) = remaining.get_mut(&x.id) {
-                                    *r = r.saturating_sub(1);
-                                    if *r == 0 {
-                                        cache.remove(&x.id);
-                                    }
-                                }
-                            }
-                            stack.pop();
-                        }
-                        None => stack.push(x.clone()),
-                    }
-                }
-            }
-            NodeKind::Nil => unreachable!("Nil exists only during drop"),
-        }
-    }
-    Ok(cache.remove(&root.id).expect("root was evaluated"))
+    super::plan::eval(root)
 }
 
 /// Reference evaluation: replay every node through the eager kernels in
@@ -375,7 +235,13 @@ pub(crate) fn eval_eager_cached(
             NodeKind::Leaf(t) => t.clone(),
             NodeKind::Unary { k, x } => k.eval_eager(&cache[&x.id]),
             NodeKind::Binary { k, a, b } => k.eval_eager(&cache[&a.id], &cache[&b.id])?,
+            NodeKind::Where { c, a, b } => {
+                cache[&a.id].where_cond(&cache[&c.id], &cache[&b.id])?
+            }
             NodeKind::Reduce { k, x } => k.eval_eager(&cache[&x.id]),
+            NodeKind::ReduceAxis { k, x, keepdim } => {
+                k.eval_eager_axis(&cache[&x.id], *keepdim)?
+            }
             NodeKind::Nil => unreachable!("Nil exists only during drop"),
         };
         cache.insert(n.id, t);
@@ -401,7 +267,7 @@ pub(crate) fn region_count(root: &NodeRef) -> usize {
         let shared = uses.get(&n.id).copied().unwrap_or(0) > 1;
         match &n.kind {
             NodeKind::Leaf(_) => {}
-            NodeKind::Reduce { .. } => regions += 1,
+            NodeKind::Reduce { .. } | NodeKind::ReduceAxis { .. } => regions += 1,
             _ => {
                 // Elementwise: a region root iff it is the DAG root or
                 // consumed by a reduce/boundary... equivalently: counted
@@ -465,7 +331,7 @@ mod tests {
         // c shared 3x (twice inside one region), d shared 2x: the
         // remaining-edge bookkeeping must evict each exactly after its
         // last consuming dispatch, never before — any premature eviction
-        // would panic input_tensors' expect.
+        // would panic the executor's live-slot expect.
         let a = leaf((0..256).map(|i| i as f32 * 0.01 - 1.0).collect(), &[256]);
         let c = Node::unary(UnaryKind::Tanh, &a);
         let d = Node::binary(BinaryKind::Mul, &c, &c).unwrap();

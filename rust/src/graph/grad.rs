@@ -50,10 +50,16 @@ pub(crate) fn vjp_for(
 
     // A node needs a cotangent iff its subtree contains a live leaf
     // (children precede parents in `order`, so one forward scan works).
+    // A select's condition is not differentiable — like an argmax, it
+    // only routes values — so live leaves reachable *only* through a
+    // `Where` condition never receive a cotangent.
     let mut needed: std::collections::HashSet<usize> = std::collections::HashSet::new();
     for n in &order {
         let wanted = match &n.kind {
             NodeKind::Leaf(_) => live.is_none_or(|l| l.contains(&n.id)),
+            NodeKind::Where { a, b, .. } => {
+                needed.contains(&a.id) || needed.contains(&b.id)
+            }
             _ => n.children().iter().any(|c| needed.contains(&c.id)),
         };
         if wanted {
@@ -96,9 +102,28 @@ pub(crate) fn vjp_for(
                     accumulate(&mut cot, b.id, vals[&b.id].reduce_grad_to(&gb)?);
                 }
             }
+            NodeKind::Where { c, a, b } => {
+                // Gradient routes to whichever side each element selected;
+                // the condition itself gets none (it only routes values).
+                let mask = vals[&c.id].map(|v| f32::from(v != 0.0));
+                if needed.contains(&a.id) {
+                    let ga = g.mul(&mask)?;
+                    accumulate(&mut cot, a.id, vals[&a.id].reduce_grad_to(&ga)?);
+                }
+                if needed.contains(&b.id) {
+                    let gb = g.mul(&mask.map(|v| 1.0 - v))?;
+                    accumulate(&mut cot, b.id, vals[&b.id].reduce_grad_to(&gb)?);
+                }
+            }
             NodeKind::Reduce { k, x } => {
                 if needed.contains(&x.id) {
                     let gx = k.vjp(&vals[&x.id], &g);
+                    accumulate(&mut cot, x.id, gx);
+                }
+            }
+            NodeKind::ReduceAxis { k, x, keepdim } => {
+                if needed.contains(&x.id) {
+                    let gx = k.vjp_axis(&vals[&x.id], &g, *keepdim);
                     accumulate(&mut cot, x.id, gx);
                 }
             }
@@ -162,6 +187,43 @@ mod tests {
             let t = v.tanh();
             assert!((ga[i] - 2.0 * t * (1.0 - t * t)).abs() < 1e-6, "i={i}");
         }
+    }
+
+    #[test]
+    fn vjp_where_routes_by_condition_and_skips_cond() {
+        // y = sum(where(c, a, b)): da = 1{c != 0}, db = 1{c == 0}, and the
+        // condition leaf gets no gradient at all.
+        let c = Node::leaf(Tensor::from_vec(vec![1.0, 0.0, 2.0, 0.0], &[4]).unwrap());
+        let a = Node::leaf(Tensor::from_vec(vec![5.0, 6.0, 7.0, 8.0], &[4]).unwrap());
+        let b = Node::leaf(Tensor::from_vec(vec![-1.0, -2.0, -3.0, -4.0], &[4]).unwrap());
+        let w = Node::where_cond(&c, &a, &b).unwrap();
+        let y = Node::reduce(ReduceOp::Sum, &w);
+        let grads = vjp(&y, &Tensor::scalar(1.0)).unwrap();
+        assert_eq!(grads[&a.id].to_vec(), vec![1.0, 0.0, 1.0, 0.0]);
+        assert_eq!(grads[&b.id].to_vec(), vec![0.0, 1.0, 0.0, 1.0]);
+        assert!(!grads.contains_key(&c.id), "condition is not differentiable");
+    }
+
+    #[test]
+    fn vjp_axis_reduce_broadcasts_back_per_row() {
+        // y = sum(sum_axis(x * 2, -1)): dx = 2 everywhere; mean_axis
+        // scales by 1/k.
+        let x = Node::leaf(Tensor::ones(&[2, 4]));
+        let d = Node::unary(UnaryKind::MulScalar(2.0), &x);
+        let r = Node::reduce_axis(ReduceOp::Sum, &d, false).unwrap();
+        let y = Node::reduce(ReduceOp::Sum, &r);
+        let grads = vjp(&y, &Tensor::scalar(1.0)).unwrap();
+        assert_eq!(grads[&x.id].to_vec(), vec![2.0; 8]);
+
+        let x2 = Node::leaf(Tensor::from_vec(vec![3.0, 1.0, 2.0, 0.0, 5.0, 4.0], &[2, 3]).unwrap());
+        let m = Node::reduce_axis(ReduceOp::Max, &x2, true).unwrap();
+        let y2 = Node::reduce(ReduceOp::Sum, &m);
+        let grads = vjp(&y2, &Tensor::scalar(1.0)).unwrap();
+        assert_eq!(
+            grads[&x2.id].to_vec(),
+            vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0],
+            "max routes to the row extremum"
+        );
     }
 
     #[test]

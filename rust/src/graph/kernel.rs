@@ -25,6 +25,9 @@ pub(crate) enum Instr {
     Un(UnaryKind),
     /// Fold the top block into the second-from-top: `a = op(a, b)`.
     Bin(BinaryKind),
+    /// Ternary select folding the top three blocks (`cond`, `a`, `b` from
+    /// bottom to top) into the `cond` slot: `c = c != 0 ? a : b`.
+    Where,
 }
 
 /// Maximum register-file rows (stack depth) a fused region may use:
@@ -75,6 +78,11 @@ impl Program {
                     n_ops += 1;
                     depth -= 1;
                 }
+                Instr::Where => {
+                    debug_assert!(depth >= 3);
+                    n_ops += 1;
+                    depth -= 2;
+                }
             }
         }
         debug_assert_eq!(depth, 1, "program must leave exactly one value");
@@ -121,6 +129,21 @@ impl Program {
                             let a0 = (sp - 2) * FUSE_BLOCK;
                             k.apply_block(&mut lo[a0..a0 + len], &hi[..len]);
                             sp -= 1;
+                        }
+                        Instr::Where => {
+                            // c = select(c, a, b): split below `a` so the
+                            // `c` row (third from top) borrows mutably,
+                            // disjoint from the read-only a/b rows.
+                            let (lo, hi) = regs.split_at_mut((sp - 2) * FUSE_BLOCK);
+                            let c0 = (sp - 3) * FUSE_BLOCK;
+                            let crow = &mut lo[c0..c0 + len];
+                            let arow = &hi[..len];
+                            let brow = &hi[FUSE_BLOCK..FUSE_BLOCK + len];
+                            for i in 0..len {
+                                crow[i] =
+                                    crate::ops::kernels::select(crow[i], arow[i], brow[i]);
+                            }
+                            sp -= 2;
                         }
                     }
                 }
@@ -183,6 +206,28 @@ mod tests {
         for i in 0..n {
             assert_eq!(got[i], a[i] * 2.0, "i={i}");
         }
+    }
+
+    #[test]
+    fn where_folds_three_stack_rows() {
+        // select(c, a*2, b) — checks operand order (c third from top).
+        let p = Program::compile(
+            vec![
+                Instr::Load(0),
+                Instr::Load(1),
+                Instr::Un(UnaryKind::MulScalar(2.0)),
+                Instr::Load(2),
+                Instr::Where,
+            ],
+            3,
+        );
+        assert_eq!(p.n_ops, 2);
+        assert_eq!(p.stack_depth, 3);
+        let c = [1.0f32, 0.0, -2.0];
+        let a = [10.0f32, 20.0, 30.0];
+        let b = [-1.0f32, -2.0, -3.0];
+        let got = run(&p, &[&c, &a, &b], 3);
+        assert_eq!(got, vec![20.0, -2.0, 60.0]);
     }
 
     #[test]

@@ -25,27 +25,48 @@
 //!
 //! - **Bitwise parity with eager:** `eval()` equals the eager op chain
 //!   bit for bit — the fused interpreter applies the *same scalar
-//!   functions* in the same per-element order, and reductions fold the
+//!   functions* in the same per-element order, full reductions fold the
 //!   same fixed-partition partials (`exec::REDUCE_CHUNK`) the eager
-//!   `sum`/`mean`/`max_all`/`min_all` fold.
+//!   `sum`/`mean`/`max_all`/`min_all` fold, and last-axis reductions
+//!   apply the same per-row slice kernels the eager `reduce_axis(-1)`
+//!   fast path applies.
 //! - **Thread-count invariance:** results are bit-identical at any
 //!   `MINITENSOR_NUM_THREADS` (elementwise partitioning never changes
-//!   per-element arithmetic; reductions use the fixed partition).
+//!   per-element arithmetic; reductions use the fixed partition or are
+//!   row-local).
 //! - **Sharing:** a node consumed more than once is materialized once
 //!   and reused, never recomputed per consumer.
 //! - **Autograd:** `Var::fused` runs a fused forward and replays the
 //!   region's VJP on backward (`grad::vjp`), so fused forwards remain
 //!   differentiable.
 //!
-//! Opting out is just not calling `lazy()` — eager ops are untouched —
-//! or calling [`LazyTensor::eval_eager`], which replays the recorded DAG
-//! through the eager kernels (the reference path the tests compare
-//! against).
+//! Repeated evaluation is cheap: every `eval()` goes through a bounded
+//! per-thread **program cache** ([`plan`]) keyed by the DAG's structural
+//! signature, so a serving loop that rebuilds the same expression every
+//! request compiles it once and re-dispatches the cached instruction
+//! tapes (`MINITENSOR_PROGRAM_CACHE` sets the capacity; hits and misses
+//! are counted in [`crate::runtime::stats`]).
+//!
+//! Fusion is also the **default `nn::` hot path**: `Sequential` fuses
+//! Dense→activation chains and the losses build fused expressions
+//! internally (see [`nn_fusion_enabled`]; `MINITENSOR_NO_FUSION=1` is
+//! the escape hatch). For hand-written tensor code, opting out is just
+//! not calling `lazy()` — eager ops are untouched — or calling
+//! [`LazyTensor::eval_eager`], which replays the recorded DAG through
+//! the eager kernels (the reference path the tests compare against).
 
 pub(crate) mod fuse;
 pub(crate) mod grad;
 pub(crate) mod kernel;
 pub(crate) mod node;
+pub(crate) mod plan;
+
+pub use plan::{
+    program_cache_capacity, program_cache_clear, program_cache_len, set_program_cache_capacity,
+    DEFAULT_CACHE_CAP,
+};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::dtype::DType;
 use crate::error::Result;
@@ -53,6 +74,58 @@ use crate::shape::Shape;
 use crate::tensor::Tensor;
 
 use node::{BinaryKind, Node, NodeRef, ReduceOp, UnaryKind};
+
+/// `nn::` fusion-by-default switch; 0 = unresolved (read the
+/// `MINITENSOR_NO_FUSION` env var on first use), 1 = on, 2 = off.
+static NN_FUSION: AtomicUsize = AtomicUsize::new(0);
+
+/// Whether `nn::` forwards (Dense→activation chains, the fused losses)
+/// build lazy expressions internally. **On by default**; opt out with
+/// `MINITENSOR_NO_FUSION=1` (or `true`) or [`set_nn_fusion_enabled`].
+/// Results are bitwise-identical either way — the switch only trades
+/// fused dispatches for the eager op-per-kernel path.
+pub fn nn_fusion_enabled() -> bool {
+    match NN_FUSION.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let off = std::env::var("MINITENSOR_NO_FUSION")
+                .map(|v| {
+                    let v = v.trim();
+                    v == "1" || v.eq_ignore_ascii_case("true")
+                })
+                .unwrap_or(false);
+            let resolved = if off { 2 } else { 1 };
+            // compare_exchange, not store: a concurrent setter must not
+            // be clobbered by this lazy default resolution.
+            match NN_FUSION.compare_exchange(0, resolved, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => !off,
+                Err(current) => current == 1,
+            }
+        }
+    }
+}
+
+/// Override the `nn::` fusion default for the whole process (see
+/// [`nn_fusion_enabled`]).
+pub fn set_nn_fusion_enabled(on: bool) {
+    NN_FUSION.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+}
+
+/// The fusion switch is process-global: unit tests that flip it
+/// serialize here so a toggle in one test thread can't be observed
+/// mid-assertion by another (results are bitwise-identical either way,
+/// so only tests that *assert on the flag or on dispatch counts* need
+/// the lock).
+#[cfg(test)]
+pub(crate) fn nn_fusion_test_lock() -> std::sync::MutexGuard<'static, ()> {
+    use std::sync::{Mutex, OnceLock};
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
 
 /// Handle to one node of a recorded lazy expression DAG. Cloning is
 /// cheap (shares the node); all ops record new nodes without running any
@@ -221,6 +294,31 @@ impl LazyTensor {
         self.unary(UnaryKind::MulScalar(s))
     }
 
+    /// Record clamping into `[lo, hi]` (the bounds ride along as tape
+    /// immediates — no mask tensors).
+    pub fn clamp(&self, lo: f32, hi: f32) -> LazyTensor {
+        self.unary(UnaryKind::Clamp(lo, hi))
+    }
+
+    /// Record leaky ReLU with negative-side slope `alpha` (an immediate).
+    pub fn leaky_relu(&self, alpha: f32) -> LazyTensor {
+        self.unary(UnaryKind::LeakyRelu(alpha))
+    }
+
+    // -- recording: ternary select ----------------------------------------
+
+    /// Record the ternary select `cond != 0 ? self : other`
+    /// (broadcasting all three) — one `where_cond` instruction in the
+    /// fused tape, mirroring the eager [`Tensor::where_cond`] signature
+    /// and matching it bit for bit.
+    pub fn where_cond(&self, cond: &LazyTensor, other: &LazyTensor) -> Result<LazyTensor> {
+        Ok(LazyTensor::from_node(Node::where_cond(
+            &cond.node,
+            &self.node,
+            &other.node,
+        )?))
+    }
+
     // -- recording: full reductions --------------------------------------
 
     /// Record the sum of all elements (fused as an order-stable epilogue
@@ -242,6 +340,45 @@ impl LazyTensor {
     /// Record the minimum of all elements.
     pub fn min_all(&self) -> LazyTensor {
         LazyTensor::from_node(Node::reduce(ReduceOp::Min, &self.node))
+    }
+
+    // -- recording: last-axis reductions ----------------------------------
+
+    fn reduce_axis(&self, k: ReduceOp, axis: isize, keepdim: bool) -> Result<LazyTensor> {
+        let ax = self.node.shape.normalize_axis(axis)?;
+        let rank = self.node.shape.dims().len();
+        if ax + 1 != rank {
+            return Err(crate::error::Error::msg(format!(
+                "lazy {}: only the last axis fuses (got axis {ax} of rank {rank})",
+                k.axis_name()
+            )));
+        }
+        Ok(LazyTensor::from_node(Node::reduce_axis(
+            k, &self.node, keepdim,
+        )?))
+    }
+
+    /// Record a sum along the **last axis**: a private elementwise
+    /// pipeline ending here fuses into one per-row dispatch with one
+    /// pooled output, bitwise-equal to the eager `sum_axis(-1, keepdim)`
+    /// (shared pipeline nodes still materialize once, as always).
+    pub fn sum_axis(&self, axis: isize, keepdim: bool) -> Result<LazyTensor> {
+        self.reduce_axis(ReduceOp::Sum, axis, keepdim)
+    }
+
+    /// Record a mean along the **last axis** (see [`LazyTensor::sum_axis`]).
+    pub fn mean_axis(&self, axis: isize, keepdim: bool) -> Result<LazyTensor> {
+        self.reduce_axis(ReduceOp::Mean, axis, keepdim)
+    }
+
+    /// Record a maximum along the **last axis** (see [`LazyTensor::sum_axis`]).
+    pub fn max_axis(&self, axis: isize, keepdim: bool) -> Result<LazyTensor> {
+        self.reduce_axis(ReduceOp::Max, axis, keepdim)
+    }
+
+    /// Record a minimum along the **last axis** (see [`LazyTensor::sum_axis`]).
+    pub fn min_axis(&self, axis: isize, keepdim: bool) -> Result<LazyTensor> {
+        self.reduce_axis(ReduceOp::Min, axis, keepdim)
     }
 
     // -- evaluation ------------------------------------------------------
@@ -384,6 +521,70 @@ mod tests {
         assert_eq!(d.exec_dispatches, 0);
         assert_eq!(d.output_allocs, 0);
         assert!(y.shares_storage(&a), "leaf eval shares storage");
+    }
+
+    #[test]
+    fn lazy_row_pipeline_matches_eager_chain() {
+        // Softmax-shaped pipeline over lazy axis reduces: bitwise-equal
+        // to the same eager op chain.
+        let t = Tensor::arange(0.0, 24.0).mul_scalar(0.3).reshape(&[4, 6]).unwrap();
+        let l = t.lazy();
+        let m = l.max_axis(-1, true).unwrap();
+        let e = l.sub(&m).unwrap().exp();
+        let s = e.sum_axis(-1, true).unwrap();
+        let p = e.div(&s).unwrap().eval().unwrap();
+        let em = t.max_axis(-1, true).unwrap();
+        let ee = t.sub(&em).unwrap().exp();
+        let es = ee.sum_axis(-1, true).unwrap();
+        let want = ee.div(&es).unwrap();
+        let (pv, wv) = (p.to_vec(), want.to_vec());
+        for i in 0..pv.len() {
+            assert_eq!(pv[i].to_bits(), wv[i].to_bits(), "i={i}");
+        }
+    }
+
+    #[test]
+    fn lazy_axis_reduce_validates_axis() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert!(t.lazy().sum_axis(0, false).is_err(), "only last axis fuses");
+        assert!(t.lazy().sum_axis(-1, false).is_ok());
+        assert!(t.lazy().sum_axis(1, true).is_ok());
+        assert!(t.lazy().sum_axis(5, false).is_err());
+    }
+
+    #[test]
+    fn lazy_clamp_leaky_relu_where_match_eager() {
+        let a = Tensor::arange(-6.0, 6.0);
+        let b = Tensor::arange(0.0, 12.0);
+        let cond = a.gt(&Tensor::zeros(&[12])).unwrap();
+        let fused = a
+            .lazy()
+            .clamp(-2.5, 3.5)
+            .leaky_relu(0.1)
+            .where_cond(&cond.lazy(), &b.lazy())
+            .unwrap()
+            .eval()
+            .unwrap();
+        let want = a
+            .clamp(-2.5, 3.5)
+            .leaky_relu(0.1)
+            .where_cond(&cond, &b)
+            .unwrap();
+        let (f, w) = (fused.to_vec(), want.to_vec());
+        for i in 0..f.len() {
+            assert_eq!(f[i].to_bits(), w[i].to_bits(), "i={i}");
+        }
+    }
+
+    #[test]
+    fn nn_fusion_toggle_round_trips() {
+        let _guard = nn_fusion_test_lock();
+        let initial = nn_fusion_enabled();
+        set_nn_fusion_enabled(false);
+        assert!(!nn_fusion_enabled());
+        set_nn_fusion_enabled(true);
+        assert!(nn_fusion_enabled());
+        set_nn_fusion_enabled(initial);
     }
 
     #[test]

@@ -15,7 +15,7 @@ use std::rc::Rc;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::dtype::DType;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::ops::kernels;
 use crate::ops::unary::{gelu_grad_scalar, gelu_scalar, sigmoid_scalar};
 use crate::shape::Shape;
@@ -36,6 +36,10 @@ pub(crate) enum UnaryKind {
     Gelu,
     AddScalar(f32),
     MulScalar(f32),
+    /// Clamp into `[lo, hi]` (two tape immediates).
+    Clamp(f32, f32),
+    /// Leaky ReLU with the negative-side slope as an immediate.
+    LeakyRelu(f32),
 }
 
 impl UnaryKind {
@@ -58,6 +62,14 @@ impl UnaryKind {
             UnaryKind::Gelu => gelu_scalar(v),
             UnaryKind::AddScalar(s) => v + s,
             UnaryKind::MulScalar(s) => v * s,
+            UnaryKind::Clamp(lo, hi) => v.clamp(lo, hi),
+            UnaryKind::LeakyRelu(a) => {
+                if v > 0.0 {
+                    v
+                } else {
+                    a * v
+                }
+            }
         }
     }
 
@@ -126,6 +138,16 @@ impl UnaryKind {
                     *v *= s;
                 }
             }
+            UnaryKind::Clamp(lo, hi) => {
+                for v in dst.iter_mut() {
+                    *v = v.clamp(lo, hi);
+                }
+            }
+            UnaryKind::LeakyRelu(a) => {
+                for v in dst.iter_mut() {
+                    *v = if *v > 0.0 { *v } else { a * *v };
+                }
+            }
         }
     }
 
@@ -144,6 +166,8 @@ impl UnaryKind {
             UnaryKind::Gelu => x.gelu(),
             UnaryKind::AddScalar(s) => x.add_scalar(s),
             UnaryKind::MulScalar(s) => x.mul_scalar(s),
+            UnaryKind::Clamp(lo, hi) => x.clamp(lo, hi),
+            UnaryKind::LeakyRelu(a) => x.leaky_relu(a),
         }
     }
 
@@ -176,6 +200,12 @@ impl UnaryKind {
             UnaryKind::Gelu => g.mul(&x.map(gelu_grad_scalar)).unwrap(),
             UnaryKind::AddScalar(_) => g.clone(),
             UnaryKind::MulScalar(s) => g.mul_scalar(s),
+            UnaryKind::Clamp(lo, hi) => g
+                .mul(&x.map(move |v| f32::from(v > lo && v < hi)))
+                .unwrap(),
+            UnaryKind::LeakyRelu(a) => g
+                .mul(&x.map(move |v| if v > 0.0 { 1.0 } else { a }))
+                .unwrap(),
         }
     }
 
@@ -194,6 +224,34 @@ impl UnaryKind {
             UnaryKind::Gelu => "gelu",
             UnaryKind::AddScalar(_) => "add_scalar",
             UnaryKind::MulScalar(_) => "mul_scalar",
+            UnaryKind::Clamp(..) => "clamp",
+            UnaryKind::LeakyRelu(_) => "leaky_relu",
+        }
+    }
+
+    /// Append this kind's structural-signature words (tag + immediate
+    /// bits) — part of the program-cache key, so every immediate that
+    /// changes the compiled tape must be encoded here.
+    pub fn encode_sig(self, sig: &mut Vec<u64>) {
+        let (tag, imms): (u64, [Option<f32>; 2]) = match self {
+            UnaryKind::Neg => (0, [None, None]),
+            UnaryKind::Relu => (1, [None, None]),
+            UnaryKind::Exp => (2, [None, None]),
+            UnaryKind::Log => (3, [None, None]),
+            UnaryKind::Sqrt => (4, [None, None]),
+            UnaryKind::Square => (5, [None, None]),
+            UnaryKind::Abs => (6, [None, None]),
+            UnaryKind::Sigmoid => (7, [None, None]),
+            UnaryKind::Tanh => (8, [None, None]),
+            UnaryKind::Gelu => (9, [None, None]),
+            UnaryKind::AddScalar(s) => (10, [Some(s), None]),
+            UnaryKind::MulScalar(s) => (11, [Some(s), None]),
+            UnaryKind::Clamp(lo, hi) => (12, [Some(lo), Some(hi)]),
+            UnaryKind::LeakyRelu(a) => (13, [Some(a), None]),
+        };
+        sig.push(tag);
+        for imm in imms.into_iter().flatten() {
+            sig.push(u64::from(imm.to_bits()));
         }
     }
 }
@@ -315,6 +373,18 @@ impl BinaryKind {
             BinaryKind::Min => "minimum",
         }
     }
+
+    /// Structural-signature tag (program-cache key component).
+    pub fn sig_tag(self) -> u64 {
+        match self {
+            BinaryKind::Add => 0,
+            BinaryKind::Sub => 1,
+            BinaryKind::Mul => 2,
+            BinaryKind::Div => 3,
+            BinaryKind::Max => 4,
+            BinaryKind::Min => 5,
+        }
+    }
 }
 
 /// Full reductions (to a rank-0 scalar) a lazy expression may end in.
@@ -359,7 +429,9 @@ impl ReduceOp {
     }
 
     /// Finalize the folded total (`Mean` applies the same `* (1/n)` the
-    /// eager `Tensor::mean` applies after its sum).
+    /// eager `Tensor::mean` applies after its sum — and, with `n` = the
+    /// row length, the same `* (1/k)` the eager `mean_axis` applies per
+    /// row, so the fused axis epilogue reuses this rule).
     pub fn finish(self, total: f32, n: usize) -> f32 {
         match self {
             ReduceOp::Mean => total * (1.0 / n as f32),
@@ -377,6 +449,76 @@ impl ReduceOp {
             ReduceOp::Mean => x.mean(),
             ReduceOp::Max => x.max_all(),
             ReduceOp::Min => x.min_all(),
+        }
+    }
+
+    /// Replay a **last-axis** reduction through the eager kernel — the
+    /// bitwise reference for the fused per-row epilogue, and the path
+    /// taken when the reduce input is already materialized.
+    pub fn eval_eager_axis(self, x: &Tensor, keepdim: bool) -> Result<Tensor> {
+        match self {
+            ReduceOp::Sum => x.sum_axis(-1, keepdim),
+            ReduceOp::Mean => x.mean_axis(-1, keepdim),
+            ReduceOp::Max => x.max_axis(-1, keepdim),
+            ReduceOp::Min => x.min_axis(-1, keepdim),
+        }
+    }
+
+    /// Cotangent w.r.t. a last-axis reduce input given the reduced
+    /// cotangent `g` — mirrors `Var::sum_axis` / `Var::mean_axis`
+    /// (unsqueeze the reduced axis, broadcast back, scale for Mean);
+    /// Max/Min route each row's cotangent to the row's first extremum,
+    /// like the full-reduction rule.
+    pub fn vjp_axis(self, x: &Tensor, g: &Tensor, keepdim: bool) -> Tensor {
+        let rank = x.dims().len();
+        debug_assert!(rank >= 1, "axis reduce requires rank >= 1");
+        match self {
+            ReduceOp::Sum | ReduceOp::Mean => {
+                let g2 = if keepdim {
+                    g.clone()
+                } else {
+                    g.unsqueeze((rank - 1) as isize).expect("unsqueeze last axis")
+                };
+                let full = g2
+                    .broadcast_to(x.dims())
+                    .expect("cotangent broadcasts to input")
+                    .contiguous();
+                match self {
+                    ReduceOp::Mean => full.mul_scalar(1.0 / x.dims()[rank - 1] as f32),
+                    _ => full,
+                }
+            }
+            ReduceOp::Max | ReduceOp::Min => {
+                let k = x.dims()[rank - 1];
+                let flat = x.contiguous();
+                let xv = flat.contiguous_data().expect("contiguous input");
+                let gv = g.to_vec();
+                let mut grad = vec![0.0f32; xv.len()];
+                if k > 0 {
+                    for (r, row) in xv.chunks_exact(k).enumerate() {
+                        // First-occurrence extremum with the same init and
+                        // strict-compare tie-breaking as `kernels::argmax`
+                        // (no per-row negated copy for Min).
+                        let mut arg = 0usize;
+                        let mut best = match self {
+                            ReduceOp::Max => f32::NEG_INFINITY,
+                            _ => f32::INFINITY,
+                        };
+                        for (i, &v) in row.iter().enumerate() {
+                            let wins = match self {
+                                ReduceOp::Max => v > best,
+                                _ => v < best,
+                            };
+                            if wins {
+                                best = v;
+                                arg = i;
+                            }
+                        }
+                        grad[r * k + arg] = gv[r];
+                    }
+                }
+                Tensor::from_vec(grad, x.dims()).expect("grad shape matches input")
+            }
         }
     }
 
@@ -415,6 +557,27 @@ impl ReduceOp {
             ReduceOp::Min => "min_all",
         }
     }
+
+    /// Op name of the **last-axis** form ("sum_axis", …) for graph dumps
+    /// and record-time errors.
+    pub fn axis_name(self) -> &'static str {
+        match self {
+            ReduceOp::Sum => "sum_axis",
+            ReduceOp::Mean => "mean_axis",
+            ReduceOp::Max => "max_axis",
+            ReduceOp::Min => "min_axis",
+        }
+    }
+
+    /// Structural-signature tag (program-cache key component).
+    pub fn sig_tag(self) -> u64 {
+        match self {
+            ReduceOp::Sum => 0,
+            ReduceOp::Mean => 1,
+            ReduceOp::Max => 2,
+            ReduceOp::Min => 3,
+        }
+    }
 }
 
 /// One recorded expression node.
@@ -423,7 +586,12 @@ pub(crate) enum NodeKind {
     Leaf(Tensor),
     Unary { k: UnaryKind, x: NodeRef },
     Binary { k: BinaryKind, a: NodeRef, b: NodeRef },
+    /// Ternary select `cond != 0 ? a : b` (the `where_cond` instruction).
+    Where { c: NodeRef, a: NodeRef, b: NodeRef },
     Reduce { k: ReduceOp, x: NodeRef },
+    /// Reduction along the **last axis** (rows stay independent, so the
+    /// fused epilogue runs per row and stays thread-count-invariant).
+    ReduceAxis { k: ReduceOp, x: NodeRef, keepdim: bool },
     /// Drop-stolen marker: the iterative [`Drop`] below replaces a
     /// node's kind with this while unlinking children, so a deep chain
     /// is torn down with an explicit worklist instead of `Rc` recursion.
@@ -496,18 +664,70 @@ impl Node {
         })
     }
 
+    /// Ternary select node: broadcast shape over all three operands,
+    /// promoted value dtype — errors now (at record time) exactly where
+    /// the eager `Tensor::where_cond` would error.
+    pub fn where_cond(c: &NodeRef, a: &NodeRef, b: &NodeRef) -> Result<NodeRef> {
+        let shape = c.shape.broadcast(&a.shape)?.broadcast(&b.shape)?;
+        Ok(Rc::new(Node {
+            shape,
+            dtype: c.dtype.promote(a.dtype).promote(b.dtype),
+            kind: NodeKind::Where {
+                c: Rc::clone(c),
+                a: Rc::clone(a),
+                b: Rc::clone(b),
+            },
+            id: next_id(),
+        }))
+    }
+
+    /// Last-axis reduction node: input dims with the last axis dropped
+    /// (or kept as 1), F32 like the eager `reduce_axis`. Errors at record
+    /// time on rank-0 inputs, where `Tensor::sum_axis(-1, _)` errors.
+    pub fn reduce_axis(k: ReduceOp, x: &NodeRef, keepdim: bool) -> Result<NodeRef> {
+        let rank = x.shape.dims().len();
+        if rank == 0 {
+            return Err(Error::msg(format!(
+                "{}: rank must be >= 1",
+                k.axis_name()
+            )));
+        }
+        let mut dims = x.shape.dims().to_vec();
+        if keepdim {
+            dims[rank - 1] = 1;
+        } else {
+            dims.pop();
+        }
+        Ok(Rc::new(Node {
+            shape: Shape::new(&dims),
+            dtype: DType::F32,
+            kind: NodeKind::ReduceAxis {
+                k,
+                x: Rc::clone(x),
+                keepdim,
+            },
+            id: next_id(),
+        }))
+    }
+
     /// Operand nodes (empty for leaves).
     pub fn children(&self) -> Vec<&NodeRef> {
         match &self.kind {
             NodeKind::Leaf(_) | NodeKind::Nil => Vec::new(),
-            NodeKind::Unary { x, .. } | NodeKind::Reduce { x, .. } => vec![x],
+            NodeKind::Unary { x, .. }
+            | NodeKind::Reduce { x, .. }
+            | NodeKind::ReduceAxis { x, .. } => vec![x],
             NodeKind::Binary { a, b, .. } => vec![a, b],
+            NodeKind::Where { c, a, b } => vec![c, a, b],
         }
     }
 
-    /// True for nodes a fused region can absorb (unary/binary).
+    /// True for nodes a fused region can absorb (unary/binary/ternary).
     pub fn is_elementwise(&self) -> bool {
-        matches!(self.kind, NodeKind::Unary { .. } | NodeKind::Binary { .. })
+        matches!(
+            self.kind,
+            NodeKind::Unary { .. } | NodeKind::Binary { .. } | NodeKind::Where { .. }
+        )
     }
 
     /// Op name ("leaf" for leaves).
@@ -516,7 +736,9 @@ impl Node {
             NodeKind::Leaf(_) => "leaf",
             NodeKind::Unary { k, .. } => k.name(),
             NodeKind::Binary { k, .. } => k.name(),
+            NodeKind::Where { .. } => "where_cond",
             NodeKind::Reduce { k, .. } => k.name(),
+            NodeKind::ReduceAxis { k, .. } => k.axis_name(),
             NodeKind::Nil => "nil",
         }
     }
@@ -527,8 +749,15 @@ impl Node {
 fn take_children(kind: &mut NodeKind, out: &mut Vec<NodeRef>) {
     match std::mem::replace(kind, NodeKind::Nil) {
         NodeKind::Leaf(_) | NodeKind::Nil => {}
-        NodeKind::Unary { x, .. } | NodeKind::Reduce { x, .. } => out.push(x),
+        NodeKind::Unary { x, .. }
+        | NodeKind::Reduce { x, .. }
+        | NodeKind::ReduceAxis { x, .. } => out.push(x),
         NodeKind::Binary { a, b, .. } => {
+            out.push(a);
+            out.push(b);
+        }
+        NodeKind::Where { c, a, b } => {
+            out.push(c);
             out.push(a);
             out.push(b);
         }
@@ -574,6 +803,8 @@ mod tests {
             UnaryKind::Gelu,
             UnaryKind::AddScalar(1.5),
             UnaryKind::MulScalar(-0.25),
+            UnaryKind::Clamp(-1.0, 1.0),
+            UnaryKind::LeakyRelu(0.01),
         ];
         for k in unaries {
             let eager = k.eval_eager(&t).to_vec();
@@ -640,5 +871,59 @@ mod tests {
         assert_eq!(ReduceOp::Mean.finish(10.0, 4), 2.5);
         assert_eq!(ReduceOp::Max.identity(), f32::NEG_INFINITY);
         assert_eq!(ReduceOp::Min.combine(3.0, -1.0), -1.0);
+    }
+
+    #[test]
+    fn where_and_reduce_axis_nodes_infer_shapes() {
+        let c = Node::leaf(Tensor::from_vec(vec![1.0, 0.0, 1.0], &[3]).unwrap());
+        let a = Node::leaf(Tensor::zeros(&[2, 3]));
+        let b = Node::leaf(Tensor::ones(&[3]));
+        let w = Node::where_cond(&c, &a, &b).unwrap();
+        assert_eq!(w.shape.dims(), &[2, 3]);
+        assert!(w.is_elementwise());
+        assert_eq!(w.op_name(), "where_cond");
+        assert_eq!(w.children().len(), 3);
+
+        let r = Node::reduce_axis(ReduceOp::Sum, &a, false).unwrap();
+        assert_eq!(r.shape.dims(), &[2]);
+        assert_eq!(r.op_name(), "sum_axis");
+        let rk = Node::reduce_axis(ReduceOp::Max, &a, true).unwrap();
+        assert_eq!(rk.shape.dims(), &[2, 1]);
+        assert!(!rk.is_elementwise());
+        let scalar = Node::leaf(Tensor::scalar(1.0));
+        assert!(Node::reduce_axis(ReduceOp::Sum, &scalar, false).is_err());
+
+        let bad = Node::leaf(Tensor::zeros(&[5]));
+        assert!(Node::where_cond(&c, &a, &bad).is_err());
+    }
+
+    #[test]
+    fn reduce_axis_eager_replay_and_vjp() {
+        let x = Tensor::from_vec(vec![1.0, 5.0, 2.0, -4.0, 0.0, 3.0], &[2, 3]).unwrap();
+        let s = ReduceOp::Sum.eval_eager_axis(&x, false).unwrap();
+        assert_eq!(s.to_vec(), vec![8.0, -1.0]);
+        let m = ReduceOp::Max.eval_eager_axis(&x, true).unwrap();
+        assert_eq!(m.dims(), &[2, 1]);
+        assert_eq!(m.to_vec(), vec![5.0, 3.0]);
+
+        let g = Tensor::from_vec(vec![2.0, -1.0], &[2]).unwrap();
+        let gs = ReduceOp::Sum.vjp_axis(&x, &g, false);
+        assert_eq!(gs.to_vec(), vec![2.0, 2.0, 2.0, -1.0, -1.0, -1.0]);
+        let gm = ReduceOp::Mean.vjp_axis(&x, &g, false);
+        let third = 1.0f32 / 3.0;
+        for (got, want) in gm.to_vec().iter().zip([
+            2.0 * third,
+            2.0 * third,
+            2.0 * third,
+            -third,
+            -third,
+            -third,
+        ]) {
+            assert!((got - want).abs() < 1e-6);
+        }
+        let gmax = ReduceOp::Max.vjp_axis(&x, &g, false);
+        assert_eq!(gmax.to_vec(), vec![0.0, 2.0, 0.0, 0.0, 0.0, -1.0]);
+        let gmin = ReduceOp::Min.vjp_axis(&x, &g, false);
+        assert_eq!(gmin.to_vec(), vec![2.0, 0.0, 0.0, -1.0, 0.0, 0.0]);
     }
 }

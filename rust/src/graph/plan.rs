@@ -1,0 +1,710 @@
+//! Compiled evaluation plans and the bounded per-thread program cache.
+//!
+//! Partitioning a DAG into fusable regions and building instruction
+//! tapes is cheap, but it is pure overhead when a serving loop evaluates
+//! the *same* expression every request. This module compiles the whole
+//! DAG once into a [`Plan`] — an ordered list of region dispatches with
+//! slot-based value flow — and memoizes it in a bounded LRU keyed by the
+//! DAG's **structural signature**: op kinds, immediates, topology
+//! (including sharing), and leaf shape/dtype classes — never leaf data.
+//! A later `eval()` of a structurally identical expression (even one
+//! rebuilt from scratch, over different tensors of the same shapes)
+//! binds its leaves to the cached plan and skips region partitioning and
+//! tape construction entirely.
+//!
+//! Cache behavior:
+//!
+//! - **per-thread** (like the engine stats and the `Rc`-based graph
+//!   itself): no locks on the hot path, and a test or bench observes
+//!   exactly its own hits/misses (`runtime::stats`:
+//!   `program_cache_hits` / `program_cache_misses`).
+//! - **bounded LRU**: capacity from `MINITENSOR_PROGRAM_CACHE` (default
+//!   [`DEFAULT_CACHE_CAP`] plans; `0` disables caching), adjustable via
+//!   [`set_program_cache_capacity`]. Eviction is a linear scan — caps
+//!   are small and misses already pay a compile.
+//! - **exact keys**: the signature is a full structural encoding (not a
+//!   hash), so two different DAGs can never collide into the same plan.
+//!
+//! Execution reproduces the uncached evaluator exactly: the same
+//! regions, dispatched through the same exec entry points, with slots
+//! evicted after their last consumer so peak memory tracks the live set.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use super::fuse::{collect_region, topo_order};
+use super::kernel::Program;
+use super::node::{NodeKind, NodeRef, ReduceOp};
+use crate::dtype::DType;
+use crate::error::Result;
+use crate::ops::exec;
+use crate::runtime::stats;
+use crate::shape::Shape;
+use crate::tensor::Tensor;
+
+/// Default capacity (compiled plans) of the per-thread program cache.
+pub const DEFAULT_CACHE_CAP: usize = 64;
+
+/// Where a step input lives at execution time.
+#[derive(Clone, Copy)]
+enum PlanInput {
+    /// The i-th leaf of the current binding (first-seen topo order).
+    Leaf(usize),
+    /// The output slot of an earlier step.
+    Slot(usize),
+}
+
+/// What a step dispatches.
+enum StepKind {
+    /// Fused elementwise region → tensor (`exec::fused_op`).
+    Map { dtype: DType },
+    /// Fused region + full-reduction epilogue → scalar
+    /// (`exec::fused_reduce`).
+    Reduce { k: ReduceOp },
+    /// Fused region + per-row last-axis epilogue
+    /// (`exec::fused_axis_reduce`).
+    AxisReduce { k: ReduceOp, out_dims: Vec<usize> },
+    /// Eager replay of a full reduction over one materialized input.
+    EagerReduce { k: ReduceOp },
+    /// Eager replay of a last-axis reduction over one materialized input.
+    EagerAxisReduce { k: ReduceOp, keepdim: bool },
+}
+
+/// One compiled dispatch.
+struct Step {
+    /// Compiled region tape (`None` for the eager-replay step kinds).
+    program: Option<Program>,
+    inputs: Vec<PlanInput>,
+    /// Shape of the virtual elementwise result the tape runs over (= the
+    /// output shape for `Map`).
+    virt: Shape,
+    kind: StepKind,
+}
+
+/// A compiled, reusable evaluation plan: steps in dependency order (the
+/// root's step is last), plus per-step eviction lists.
+pub(crate) struct Plan {
+    steps: Vec<Step>,
+    /// Slots whose last consumer is step `i` — dropped right after it
+    /// runs, so freed buffers return to the pool for later steps.
+    evict_after: Vec<Vec<usize>>,
+    n_leaves: usize,
+    /// Regions the partitioner degraded to per-op dispatch while
+    /// compiling this plan. Re-recorded into `runtime::stats` on every
+    /// cache-hit execution, so `fusion_bailouts` counts degraded regions
+    /// *dispatched* per eval, not merely compiled once.
+    bailouts: u64,
+}
+
+/// Stable tag per dtype for the structural signature.
+fn dtype_tag(d: DType) -> u64 {
+    match d {
+        DType::F32 => 0,
+        DType::I32 => 1,
+        DType::Bool => 2,
+    }
+}
+
+/// Structural signature of the DAG plus its leaf tensors in first-seen
+/// topo order (the binding order [`Plan::execute`] expects), plus the
+/// topo order itself so a cache miss can compile without re-walking the
+/// DAG.
+///
+/// The encoding is uniquely decodable — every record starts with a tag
+/// that fixes its field count (leaf records carry their rank) — so equal
+/// signatures imply structurally identical DAGs; no hash collisions can
+/// alias two different plans.
+fn signature(root: &NodeRef) -> (Vec<u64>, Vec<Tensor>, Vec<NodeRef>) {
+    let order = topo_order(root);
+    let mut pos: HashMap<usize, usize> = HashMap::with_capacity(order.len());
+    let mut sig: Vec<u64> = Vec::with_capacity(order.len() * 4);
+    let mut leaves: Vec<Tensor> = Vec::new();
+    for (i, n) in order.iter().enumerate() {
+        pos.insert(n.id, i);
+        match &n.kind {
+            NodeKind::Leaf(t) => {
+                sig.push(0);
+                sig.push(dtype_tag(t.dtype()));
+                sig.push(t.dims().len() as u64);
+                sig.extend(t.dims().iter().map(|&d| d as u64));
+                leaves.push(t.clone());
+            }
+            NodeKind::Unary { k, x } => {
+                sig.push(1);
+                k.encode_sig(&mut sig);
+                sig.push(pos[&x.id] as u64);
+            }
+            NodeKind::Binary { k, a, b } => {
+                sig.push(2);
+                sig.push(k.sig_tag());
+                sig.push(pos[&a.id] as u64);
+                sig.push(pos[&b.id] as u64);
+            }
+            NodeKind::Where { c, a, b } => {
+                sig.push(3);
+                sig.push(pos[&c.id] as u64);
+                sig.push(pos[&a.id] as u64);
+                sig.push(pos[&b.id] as u64);
+            }
+            NodeKind::Reduce { k, x } => {
+                sig.push(4);
+                sig.push(k.sig_tag());
+                sig.push(pos[&x.id] as u64);
+            }
+            NodeKind::ReduceAxis { k, x, keepdim } => {
+                sig.push(5);
+                sig.push(k.sig_tag());
+                sig.push(u64::from(*keepdim));
+                sig.push(pos[&x.id] as u64);
+            }
+            NodeKind::Nil => unreachable!("Nil exists only during drop"),
+        }
+    }
+    (sig, leaves, order)
+}
+
+/// Working state of one [`compile`] walk.
+struct Compiler {
+    uses: HashMap<usize, usize>,
+    bound: HashMap<usize, PlanInput>,
+    regions: HashMap<usize, super::fuse::Region>,
+    steps: Vec<Step>,
+    stack: Vec<NodeRef>,
+}
+
+impl Compiler {
+    /// Append `step` as node `n_id`'s materialization and bind its slot.
+    fn emit(&mut self, n_id: usize, step: Step) {
+        self.steps.push(step);
+        self.bound.insert(n_id, PlanInput::Slot(self.steps.len() - 1));
+    }
+
+    /// Try to emit the fused region rooted at `region_root` as node
+    /// `n_id`'s step (`make_kind` builds the step kind once the region's
+    /// inputs are all bound): returns true when emitted, false after
+    /// pushing the still-unbound inputs onto the walk stack.
+    fn try_emit_region(
+        &mut self,
+        n_id: usize,
+        region_root: &NodeRef,
+        make_kind: impl FnOnce() -> StepKind,
+    ) -> bool {
+        // Borrow fields separately so the memoization closure captures a
+        // plain local reference, not `self`.
+        let uses = &self.uses;
+        let region = self
+            .regions
+            .entry(n_id)
+            .or_insert_with(|| collect_region(region_root, uses));
+        let pending: Vec<NodeRef> = region
+            .inputs
+            .iter()
+            .filter(|i| !self.bound.contains_key(&i.id))
+            .cloned()
+            .collect();
+        if !pending.is_empty() {
+            self.stack.extend(pending);
+            return false;
+        }
+        let region = self.regions.remove(&n_id).expect("region just inserted");
+        let inputs = region.inputs.iter().map(|i| self.bound[&i.id]).collect();
+        self.emit(
+            n_id,
+            Step {
+                program: Some(region.program),
+                inputs,
+                virt: region_root.shape.clone(),
+                kind: make_kind(),
+            },
+        );
+        true
+    }
+}
+
+/// Compile the DAG into a plan: the same demand-driven walk the
+/// pre-cache evaluator ran, except regions are *emitted as steps*
+/// instead of dispatched — so a cached plan replays exactly the
+/// dispatch sequence (and therefore the numerics) of an uncached eval.
+fn compile(root: &NodeRef, order: &[NodeRef]) -> Plan {
+    // Canonical leaf indices: first appearance in the `signature` topo
+    // order (each node appears exactly once), which is the order the
+    // leaf tensors were collected in — what makes a cached plan bind a
+    // rebuilt graph's leaves correctly. Reusing `order` also yields the
+    // consumer-edge counts in one pass instead of re-walking the DAG.
+    let mut leaf_idx: HashMap<usize, usize> = HashMap::new();
+    let mut uses: HashMap<usize, usize> = HashMap::new();
+    for n in order {
+        if matches!(n.kind, NodeKind::Leaf(_)) {
+            let next = leaf_idx.len();
+            leaf_idx.entry(n.id).or_insert(next);
+        }
+        for ch in n.children() {
+            *uses.entry(ch.id).or_insert(0) += 1;
+        }
+    }
+    let n_leaves = leaf_idx.len();
+
+    let mut c = Compiler {
+        uses,
+        bound: HashMap::new(),
+        regions: HashMap::new(),
+        steps: Vec::new(),
+        stack: vec![root.clone()],
+    };
+    while let Some(n) = c.stack.last().cloned() {
+        if c.bound.contains_key(&n.id) {
+            c.stack.pop();
+            continue;
+        }
+        match &n.kind {
+            NodeKind::Leaf(_) => {
+                c.bound.insert(n.id, PlanInput::Leaf(leaf_idx[&n.id]));
+                c.stack.pop();
+            }
+            NodeKind::Unary { .. } | NodeKind::Binary { .. } | NodeKind::Where { .. } => {
+                if c.try_emit_region(n.id, &n, || StepKind::Map { dtype: n.dtype }) {
+                    c.stack.pop();
+                }
+            }
+            NodeKind::Reduce { k, x } => {
+                let private_elem =
+                    x.is_elementwise() && c.uses.get(&x.id).copied().unwrap_or(0) <= 1;
+                if private_elem {
+                    // Fused epilogue over the private elementwise subtree.
+                    if c.try_emit_region(n.id, x, || StepKind::Reduce { k: *k }) {
+                        c.stack.pop();
+                    }
+                } else if let Some(&input) = c.bound.get(&x.id) {
+                    // Boundary input (leaf / shared / reduce result):
+                    // replay the exact eager reduction over it.
+                    c.emit(
+                        n.id,
+                        Step {
+                            program: None,
+                            inputs: vec![input],
+                            virt: x.shape.clone(),
+                            kind: StepKind::EagerReduce { k: *k },
+                        },
+                    );
+                    c.stack.pop();
+                } else {
+                    c.stack.push(x.clone());
+                }
+            }
+            NodeKind::ReduceAxis { k, x, keepdim } => {
+                let private_elem =
+                    x.is_elementwise() && c.uses.get(&x.id).copied().unwrap_or(0) <= 1;
+                if private_elem {
+                    let kind = || StepKind::AxisReduce {
+                        k: *k,
+                        out_dims: n.shape.dims().to_vec(),
+                    };
+                    if c.try_emit_region(n.id, x, kind) {
+                        c.stack.pop();
+                    }
+                } else if let Some(&input) = c.bound.get(&x.id) {
+                    c.emit(
+                        n.id,
+                        Step {
+                            program: None,
+                            inputs: vec![input],
+                            virt: x.shape.clone(),
+                            kind: StepKind::EagerAxisReduce {
+                                k: *k,
+                                keepdim: *keepdim,
+                            },
+                        },
+                    );
+                    c.stack.pop();
+                } else {
+                    c.stack.push(x.clone());
+                }
+            }
+            NodeKind::Nil => unreachable!("Nil exists only during drop"),
+        }
+    }
+    let (steps, bound) = (c.steps, c.bound);
+    debug_assert!(
+        matches!(bound.get(&root.id), Some(PlanInput::Slot(s)) if *s == steps.len() - 1),
+        "root step must be emitted last"
+    );
+
+    // Last consumer per slot → eviction lists (the root slot is read by
+    // no step and survives to be taken as the result).
+    let mut last_read: Vec<Option<usize>> = vec![None; steps.len()];
+    for (i, step) in steps.iter().enumerate() {
+        for input in &step.inputs {
+            if let PlanInput::Slot(s) = input {
+                last_read[*s] = Some(i);
+            }
+        }
+    }
+    let mut evict_after: Vec<Vec<usize>> = vec![Vec::new(); steps.len()];
+    for (s, lr) in last_read.iter().enumerate() {
+        if let Some(i) = lr {
+            evict_after[*i].push(s);
+        }
+    }
+
+    Plan {
+        steps,
+        evict_after,
+        n_leaves,
+        bailouts: 0, // filled in by the caller from the stats delta
+    }
+}
+
+impl Plan {
+    /// Run the plan over a leaf binding (tensors in the `signature` leaf
+    /// order). Dispatch-for-dispatch identical to an uncached eval of
+    /// the same DAG.
+    fn execute(&self, leaves: &[Tensor]) -> Result<Tensor> {
+        debug_assert_eq!(leaves.len(), self.n_leaves, "leaf binding arity");
+        let mut slots: Vec<Option<Tensor>> = Vec::new();
+        slots.resize_with(self.steps.len(), || None);
+        for (i, step) in self.steps.iter().enumerate() {
+            let t = {
+                let ins: Vec<&Tensor> = step
+                    .inputs
+                    .iter()
+                    .map(|pi| match pi {
+                        PlanInput::Leaf(j) => &leaves[*j],
+                        PlanInput::Slot(s) => slots[*s].as_ref().expect("slot is live"),
+                    })
+                    .collect();
+                match &step.kind {
+                    StepKind::Map { dtype } => {
+                        let prog = step.program.as_ref().expect("map step has a program");
+                        exec::fused_op(&ins, &step.virt, *dtype, prog.n_ops, |bufs, out| {
+                            prog.eval(bufs, out)
+                        })?
+                    }
+                    StepKind::Reduce { k } => {
+                        let kk = *k;
+                        let prog = step.program.as_ref().expect("reduce step has a program");
+                        let total = exec::fused_reduce(
+                            &ins,
+                            &step.virt,
+                            prog.n_ops + 1,
+                            |bufs, out| prog.eval(bufs, out),
+                            kk.slice_kernel(),
+                            |p, q| kk.combine(p, q),
+                        )?;
+                        Tensor::scalar(
+                            kk.finish(total.unwrap_or_else(|| kk.identity()), step.virt.numel()),
+                        )
+                    }
+                    StepKind::AxisReduce { k, out_dims } => {
+                        let kk = *k;
+                        let prog = step
+                            .program
+                            .as_ref()
+                            .expect("axis-reduce step has a program");
+                        exec::fused_axis_reduce(
+                            &ins,
+                            &step.virt,
+                            prog.n_ops + 1,
+                            |bufs, out| prog.eval(bufs, out),
+                            kk.slice_kernel(),
+                            move |total, klen| kk.finish(total, klen),
+                            kk.identity(),
+                            out_dims,
+                        )?
+                    }
+                    StepKind::EagerReduce { k } => k.eval_eager(ins[0]),
+                    StepKind::EagerAxisReduce { k, keepdim } => {
+                        k.eval_eager_axis(ins[0], *keepdim)?
+                    }
+                }
+            };
+            for &s in &self.evict_after[i] {
+                slots[s] = None;
+            }
+            slots[i] = Some(t);
+        }
+        Ok(slots
+            .last_mut()
+            .and_then(Option::take)
+            .expect("root step was executed"))
+    }
+}
+
+/// The per-thread bounded LRU of compiled plans.
+struct ProgramCache {
+    map: HashMap<Vec<u64>, (Rc<Plan>, u64)>,
+    tick: u64,
+    cap: usize,
+}
+
+impl ProgramCache {
+    fn new() -> ProgramCache {
+        let cap = std::env::var("MINITENSOR_PROGRAM_CACHE")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .unwrap_or(DEFAULT_CACHE_CAP);
+        ProgramCache {
+            map: HashMap::new(),
+            tick: 0,
+            cap,
+        }
+    }
+
+    fn evict_lru(&mut self) {
+        let victim = self
+            .map
+            .iter()
+            .min_by_key(|(_, (_, t))| *t)
+            .map(|(k, _)| k.clone());
+        if let Some(k) = victim {
+            self.map.remove(&k);
+        }
+    }
+
+    fn get(&mut self, key: &[u64]) -> Option<Rc<Plan>> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(key).map(|e| {
+            e.1 = tick;
+            Rc::clone(&e.0)
+        })
+    }
+
+    fn insert(&mut self, key: Vec<u64>, plan: Rc<Plan>) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.map.len() >= self.cap && !self.map.contains_key(&key) {
+            self.evict_lru();
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.insert(key, (plan, tick));
+    }
+}
+
+thread_local! {
+    static CACHE: RefCell<ProgramCache> = RefCell::new(ProgramCache::new());
+}
+
+/// Drop every cached plan on this thread (benchmarks and tests that
+/// measure the cold-compile path).
+pub fn program_cache_clear() {
+    CACHE.with(|c| c.borrow_mut().map.clear());
+}
+
+/// Number of plans currently cached on this thread.
+pub fn program_cache_len() -> usize {
+    CACHE.with(|c| c.borrow().map.len())
+}
+
+/// This thread's current program-cache capacity (for save/restore
+/// around capacity experiments).
+pub fn program_cache_capacity() -> usize {
+    CACHE.with(|c| c.borrow().cap)
+}
+
+/// Override this thread's program-cache capacity (`0` disables caching
+/// — every `eval()` compiles, which is exactly the pre-cache behavior).
+/// The startup default is `MINITENSOR_PROGRAM_CACHE`, else
+/// [`DEFAULT_CACHE_CAP`].
+pub fn set_program_cache_capacity(cap: usize) {
+    CACHE.with(|c| {
+        let mut c = c.borrow_mut();
+        c.cap = cap;
+        while c.map.len() > cap {
+            c.evict_lru();
+        }
+    });
+}
+
+/// Evaluate the DAG rooted at `root`: look the structural signature up
+/// in the program cache (hit ⇒ skip region partitioning and tape
+/// construction entirely), compile + memoize on miss, then execute the
+/// plan over the current leaf binding.
+pub(crate) fn eval(root: &NodeRef) -> Result<Tensor> {
+    if let NodeKind::Leaf(t) = &root.kind {
+        // Leaf eval is free: share storage, no dispatch, no cache entry.
+        return Ok(t.clone());
+    }
+    let (sig, leaves, order) = signature(root);
+    let cached = CACHE.with(|c| c.borrow_mut().get(&sig));
+    let plan = match cached {
+        Some(p) => {
+            stats::record_program_cache_hit();
+            // Degraded regions dispatch per-op on every execution, so a
+            // cached degraded plan keeps showing up in the counter.
+            stats::record_fusion_bailouts(p.bailouts);
+            p
+        }
+        None => {
+            stats::record_program_cache_miss();
+            // collect_region records each cap degradation as it happens;
+            // the delta pins this plan's count for cache-hit re-runs.
+            let before = stats::snapshot().fusion_bailouts;
+            let mut plan = compile(root, &order);
+            plan.bailouts = stats::snapshot().fusion_bailouts - before;
+            let p = Rc::new(plan);
+            CACHE.with(|c| c.borrow_mut().insert(sig, Rc::clone(&p)));
+            p
+        }
+    };
+    plan.execute(&leaves)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::node::{BinaryKind, Node, ReduceOp, UnaryKind};
+    use super::*;
+
+    fn leaf(v: Vec<f32>, dims: &[usize]) -> NodeRef {
+        Node::leaf(Tensor::from_vec(v, dims).unwrap())
+    }
+
+    /// relu(a * b + a) over fresh nodes each call (same structure,
+    /// different node ids — the cache must still hit).
+    fn chain(a: &Tensor, b: &Tensor) -> NodeRef {
+        let la = Node::leaf(a.clone());
+        let lb = Node::leaf(b.clone());
+        let m = Node::binary(BinaryKind::Mul, &la, &lb).unwrap();
+        let s = Node::binary(BinaryKind::Add, &m, &la).unwrap();
+        Node::unary(UnaryKind::Relu, &s)
+    }
+
+    #[test]
+    fn structurally_equal_dags_share_one_signature() {
+        let a = Tensor::arange(0.0, 8.0);
+        let b = Tensor::arange(8.0, 16.0);
+        let (s1, l1, _) = signature(&chain(&a, &b));
+        let (s2, l2, _) = signature(&chain(&a, &b));
+        assert_eq!(s1, s2);
+        assert_eq!(l1.len(), 2);
+        assert_eq!(l2.len(), 2);
+        // Different immediate ⇒ different signature.
+        let c = Node::unary(UnaryKind::AddScalar(1.0), &chain(&a, &b));
+        let d = Node::unary(UnaryKind::AddScalar(2.0), &chain(&a, &b));
+        assert_ne!(signature(&c).0, signature(&d).0);
+        // Different leaf shape ⇒ different signature.
+        let short = Tensor::arange(0.0, 4.0);
+        assert_ne!(signature(&chain(&short, &short)).0, s1);
+    }
+
+    #[test]
+    fn second_eval_hits_the_cache_and_matches_bitwise() {
+        let a = Tensor::arange(-8.0, 8.0);
+        let b = Tensor::arange(0.0, 16.0);
+        program_cache_clear();
+        let before = stats::snapshot();
+        let y1 = eval(&chain(&a, &b)).unwrap();
+        let d1 = stats::snapshot().delta(&before);
+        assert_eq!(d1.program_cache_misses, 1);
+        assert_eq!(d1.program_cache_hits, 0);
+        let before = stats::snapshot();
+        let y2 = eval(&chain(&a, &b)).unwrap();
+        let d2 = stats::snapshot().delta(&before);
+        assert_eq!(d2.program_cache_misses, 0, "no new tape builds");
+        assert_eq!(d2.program_cache_hits, 1);
+        assert_eq!(d2.exec_dispatches, 1, "cached plan still one dispatch");
+        for (x, y) in y1.to_vec().iter().zip(y2.to_vec()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn cached_plan_reused_across_different_leaf_data() {
+        // Same structure, new data: hit, and the result reflects the
+        // *new* tensors (plans capture structure, never data).
+        program_cache_clear();
+        let a = Tensor::arange(0.0, 6.0);
+        let b = Tensor::arange(6.0, 12.0);
+        eval(&chain(&a, &b)).unwrap();
+        let a2 = Tensor::arange(100.0, 106.0);
+        let b2 = Tensor::arange(-6.0, 0.0);
+        let before = stats::snapshot();
+        let got = eval(&chain(&a2, &b2)).unwrap();
+        assert_eq!(stats::snapshot().delta(&before).program_cache_hits, 1);
+        let want = a2.mul(&b2).unwrap().add(&a2).unwrap().relu();
+        for (x, y) in got.to_vec().iter().zip(want.to_vec()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn capacity_bounds_and_lru_eviction() {
+        program_cache_clear();
+        let old_cap = CACHE.with(|c| c.borrow().cap);
+        set_program_cache_capacity(2);
+        let a = Tensor::arange(0.0, 4.0);
+        for s in [1.0f32, 2.0, 3.0] {
+            let n = Node::unary(UnaryKind::AddScalar(s), &Node::leaf(a.clone()));
+            eval(&n).unwrap();
+        }
+        assert_eq!(program_cache_len(), 2, "LRU stays at capacity");
+        // The oldest entry (s = 1.0) was evicted: re-eval misses.
+        let before = stats::snapshot();
+        let n = Node::unary(UnaryKind::AddScalar(1.0), &Node::leaf(a.clone()));
+        eval(&n).unwrap();
+        assert_eq!(stats::snapshot().delta(&before).program_cache_misses, 1);
+        // Capacity 0 disables caching entirely.
+        set_program_cache_capacity(0);
+        assert_eq!(program_cache_len(), 0);
+        let before = stats::snapshot();
+        let n = Node::unary(UnaryKind::AddScalar(9.0), &Node::leaf(a.clone()));
+        eval(&n).unwrap();
+        eval(&n).unwrap();
+        let d = stats::snapshot().delta(&before);
+        assert_eq!(d.program_cache_misses, 2);
+        assert_eq!(d.program_cache_hits, 0);
+        set_program_cache_capacity(old_cap);
+    }
+
+    #[test]
+    fn plan_slots_evict_after_last_use() {
+        // tanh(a) shared by two consumers: its slot must stay live for
+        // both reads, then free — and the value must still be right.
+        let a = leaf(vec![0.25, -0.75, 1.5], &[3]);
+        let c = Node::unary(UnaryKind::Tanh, &a);
+        let d = Node::binary(BinaryKind::Mul, &c, &c).unwrap();
+        let e = Node::binary(BinaryKind::Add, &d, &c).unwrap();
+        let fused = eval(&e).unwrap();
+        let eager = super::super::fuse::eval_eager(&e).unwrap();
+        for (x, y) in fused.to_vec().iter().zip(eager.to_vec()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn reduce_and_axis_reduce_steps_execute_through_plans() {
+        let v: Vec<f32> = (0..60).map(|i| (i as f32) * 0.1 - 3.0).collect();
+        let a = leaf(v, &[5, 12]);
+        // Full reduce over a private subtree.
+        let s = Node::reduce(ReduceOp::Sum, &Node::unary(UnaryKind::Square, &a));
+        let fused = eval(&s).unwrap();
+        let eager = super::super::fuse::eval_eager(&s).unwrap();
+        assert_eq!(
+            fused.item().unwrap().to_bits(),
+            eager.item().unwrap().to_bits()
+        );
+        // Axis reduce over a private subtree, and over a raw leaf.
+        for keepdim in [false, true] {
+            let r = Node::reduce_axis(
+                ReduceOp::Max,
+                &Node::unary(UnaryKind::Abs, &a),
+                keepdim,
+            )
+            .unwrap();
+            let fused = eval(&r).unwrap();
+            let eager = super::super::fuse::eval_eager(&r).unwrap();
+            assert_eq!(fused.dims(), eager.dims());
+            for (x, y) in fused.to_vec().iter().zip(eager.to_vec()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            let rl = Node::reduce_axis(ReduceOp::Mean, &a, keepdim).unwrap();
+            let fused = eval(&rl).unwrap();
+            let eager = super::super::fuse::eval_eager(&rl).unwrap();
+            for (x, y) in fused.to_vec().iter().zip(eager.to_vec()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+}

@@ -23,11 +23,16 @@
 //! [`Tensor::lazy`] enters the lazy expression-graph subsystem
 //! ([`graph`]): ops record a small DAG instead of executing, and
 //! [`graph::LazyTensor::eval`] fuses each region of elementwise ops —
-//! optionally ending in a full reduction — into **one composed kernel**
-//! dispatched once through the execution layer: one output allocation,
-//! one pass over memory, intermediates in L1 blocks. Results are
-//! bitwise-equal to the eager op chain and bit-identical at any thread
-//! count; `Var::fused` keeps fused forwards differentiable.
+//! optionally ending in a full or last-axis reduction — into **one
+//! composed kernel** dispatched once through the execution layer: one
+//! output allocation, one pass over memory, intermediates in L1 blocks.
+//! Compiled programs are memoized in a bounded per-thread cache keyed by
+//! DAG structure, so repeated evaluation of the same expression (the
+//! serving-loop case) skips partitioning and tape construction. Results
+//! are bitwise-equal to the eager op chain and bit-identical at any
+//! thread count; `Var::fused` keeps fused forwards differentiable, and
+//! the `nn::` forwards and losses fuse by default
+//! (`MINITENSOR_NO_FUSION=1` opts out).
 //!
 //! ## Execution layer & threading
 //!

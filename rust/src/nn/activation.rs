@@ -4,6 +4,7 @@
 use super::Module;
 use crate::autograd::Var;
 use crate::error::Result;
+use crate::graph::LazyTensor;
 
 /// Parameter-free activation module.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -42,6 +43,21 @@ impl Activation {
             Activation::Identity => x.clone(),
         }
     }
+
+    /// Record this activation onto a lazy expression (`None` for
+    /// Identity, which has nothing to fuse). The recorded unary applies
+    /// the *same scalar function* as the eager `Var` op, so fused
+    /// Dense→activation forwards are bitwise-equal to the eager pair.
+    pub(crate) fn record_lazy(&self, x: &LazyTensor) -> Option<LazyTensor> {
+        match self {
+            Activation::Relu => Some(x.relu()),
+            Activation::Sigmoid => Some(x.sigmoid()),
+            Activation::Tanh => Some(x.tanh()),
+            Activation::Gelu => Some(x.gelu()),
+            Activation::LeakyRelu(a) => Some(x.leaky_relu(*a)),
+            Activation::Identity => None,
+        }
+    }
 }
 
 impl Module for Activation {
@@ -51,6 +67,10 @@ impl Module for Activation {
 
     fn parameters(&self) -> Vec<Var> {
         Vec::new()
+    }
+
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self)
     }
 }
 

@@ -1,6 +1,12 @@
-//! Sequential container: chains modules, mirroring `torch.nn.Sequential`.
+//! Sequential container: chains modules, mirroring `torch.nn.Sequential`
+//! — with **fusion by default**: adjacent Dense→activation pairs forward
+//! as one fused region (matmul, then bias-add + nonlinearity in a single
+//! exec dispatch with a single pooled output) instead of one kernel per
+//! op. Outputs and gradients are bitwise-equal to the unfused chain;
+//! `MINITENSOR_NO_FUSION=1` (or `graph::set_nn_fusion_enabled(false)`)
+//! restores the op-per-kernel path.
 
-use super::Module;
+use super::{Activation, Dense, Module};
 use crate::autograd::Var;
 use crate::error::Result;
 
@@ -38,11 +44,41 @@ impl Default for Sequential {
     }
 }
 
+impl Sequential {
+    /// The fusion peephole: when layer `i` is a [`Dense`] and layer
+    /// `i + 1` a fusable [`Activation`], return the pair.
+    fn fusable_pair(&self, i: usize) -> Option<(&Dense, &Activation)> {
+        let dense = self
+            .layers
+            .get(i)?
+            .as_any()
+            .and_then(|a| a.downcast_ref::<Dense>())?;
+        let act = self
+            .layers
+            .get(i + 1)?
+            .as_any()
+            .and_then(|a| a.downcast_ref::<Activation>())?;
+        Some((dense, act))
+    }
+}
+
 impl Module for Sequential {
     fn forward(&self, x: &Var, train: bool) -> Result<Var> {
+        let fuse = crate::graph::nn_fusion_enabled();
         let mut cur = x.clone();
-        for layer in &self.layers {
-            cur = layer.forward(&cur, train)?;
+        let mut i = 0;
+        while i < self.layers.len() {
+            if fuse {
+                if let Some((dense, act)) = self.fusable_pair(i) {
+                    if let Some(y) = dense.forward_fused(&cur, act)? {
+                        cur = y;
+                        i += 2;
+                        continue;
+                    }
+                }
+            }
+            cur = self.layers[i].forward(&cur, train)?;
+            i += 1;
         }
         Ok(cur)
     }
@@ -90,6 +126,53 @@ mod tests {
         let x = Var::from_tensor(Tensor::ones(&[2]), false);
         let y = model.forward(&x, true).unwrap();
         assert_eq!(y.data().to_vec(), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn fused_forward_matches_unfused_bitwise() {
+        // Same model, fusion on vs off: outputs and every parameter
+        // gradient must be bit-identical (the fused region applies the
+        // same scalar ops in the same order).
+        let mut rng = Rng::new(7);
+        let model = Sequential::new()
+            .add(Dense::new(5, 8, &mut rng))
+            .add(Activation::Gelu)
+            .add(Dense::new(8, 3, &mut rng))
+            .add(Activation::LeakyRelu(0.05));
+        let x = Var::from_tensor(Tensor::randn(&[4, 5], 0.0, 1.0, &mut rng), false);
+        let _guard = crate::graph::nn_fusion_test_lock();
+        let run = |fuse: bool| {
+            crate::graph::set_nn_fusion_enabled(fuse);
+            model.zero_grad();
+            let y = model.forward(&x, true).unwrap();
+            y.square().sum().unwrap().backward().unwrap();
+            let grads: Vec<Vec<u32>> = model
+                .parameters()
+                .iter()
+                .map(|p| p.grad().unwrap().to_vec().iter().map(|v| v.to_bits()).collect())
+                .collect();
+            let out: Vec<u32> = y.data().to_vec().iter().map(|v| v.to_bits()).collect();
+            (out, grads)
+        };
+        let initial = crate::graph::nn_fusion_enabled();
+        let (yf, gf) = run(true);
+        let (ye, ge) = run(false);
+        crate::graph::set_nn_fusion_enabled(initial);
+        assert_eq!(yf, ye, "fused forward == eager forward, bit for bit");
+        assert_eq!(gf, ge, "fused gradients == eager gradients, bit for bit");
+    }
+
+    #[test]
+    fn identity_and_no_bias_pairs_fall_back_to_eager() {
+        let mut rng = Rng::new(8);
+        let model = Sequential::new()
+            .add(Dense::new_no_bias(4, 4, &mut rng))
+            .add(Activation::Relu)
+            .add(Dense::new(4, 2, &mut rng))
+            .add(Activation::Identity);
+        let x = Var::from_tensor(Tensor::ones(&[2, 4]), false);
+        let y = model.forward(&x, true).unwrap();
+        assert_eq!(y.dims(), vec![2, 2]);
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Fully-connected (dense) layer, paper eq (5):
 //! `Dense(x; W, b) = x Wᵀ + 1 bᵀ` with `W ∈ R^{d_out × d_in}`.
 
-use super::{kaiming_uniform, Module};
+use super::{kaiming_uniform, Activation, Module};
 use crate::autograd::Var;
 use crate::data::Rng;
 use crate::error::Result;
@@ -59,6 +59,33 @@ impl Dense {
     pub fn d_out(&self) -> usize {
         self.d_out
     }
+
+    /// Dense forward with the following activation **fused**: the bias
+    /// add and the nonlinearity run as one lazy region — one exec
+    /// dispatch, one pooled output — instead of two eager kernels, with
+    /// `Var::fused` keeping the pair differentiable (the VJP replay
+    /// applies the same pullback rules as the eager tape). Returns
+    /// `Ok(None)` when there is nothing to fuse (no bias, or an Identity
+    /// activation), in which case the caller should take the eager path.
+    /// Outputs and gradients are bitwise-equal to the eager
+    /// `forward` + `activation` pair — the fused kernel applies the same
+    /// scalar functions in the same per-element order.
+    pub fn forward_fused(&self, x: &Var, act: &Activation) -> Result<Option<Var>> {
+        let Some(bias) = &self.bias else {
+            return Ok(None);
+        };
+        if matches!(act, Activation::Identity) {
+            return Ok(None);
+        }
+        let y = x.matmul_nt(&self.weight)?; // x Wᵀ (eq 1/5)
+        let fused = Var::fused(&[&y, bias], |l| {
+            let with_bias = l[0].add(&l[1])?;
+            Ok(act
+                .record_lazy(&with_bias)
+                .expect("non-Identity activation records"))
+        })?;
+        Ok(Some(fused))
+    }
 }
 
 impl Module for Dense {
@@ -76,6 +103,10 @@ impl Module for Dense {
             ps.push(b.clone());
         }
         ps
+    }
+
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self)
     }
 }
 

@@ -1,8 +1,17 @@
 //! Loss functions (paper §3.3): cross-entropy (eq 8), MSE, and binary
 //! cross-entropy.
+//!
+//! MSE and BCE build **fused lazy expressions** by default (see
+//! `graph::nn_fusion_enabled`): the whole elementwise pipeline plus the
+//! mean epilogue runs as one or a few exec dispatches with no
+//! intermediate loss tensors, and `Var::fused` keeps it differentiable.
+//! Values and gradients are bitwise-equal to the eager op chains (same
+//! scalar functions, same per-element order, same fixed-partition
+//! reduction); `MINITENSOR_NO_FUSION=1` restores the eager path.
 
 use crate::autograd::Var;
 use crate::error::Result;
+use crate::graph::nn_fusion_enabled;
 use crate::tensor::Tensor;
 
 /// Mean cross-entropy over logits `[b, C]` and integer labels `[b]`
@@ -11,18 +20,35 @@ pub fn cross_entropy(logits: &Var, labels: &Tensor) -> Result<Var> {
     logits.cross_entropy(labels)
 }
 
-/// Mean squared error `L = 1/N Σ (x − x̂)²`.
+/// Mean squared error `L = 1/N Σ (x − x̂)²` — one fused
+/// sub→square→mean dispatch by default.
 pub fn mse(pred: &Var, target: &Tensor) -> Result<Var> {
     let t = Var::from_tensor(target.clone(), false);
+    if nn_fusion_enabled() {
+        return Var::fused(&[pred, &t], |l| Ok(l[0].sub(&l[1])?.square().mean()));
+    }
     pred.sub(&t)?.square().mean()
 }
 
 /// Binary cross-entropy on probabilities `p ∈ (0,1)` against 0/1 targets,
-/// with clamping for numerical safety.
+/// with clamping for numerical safety (the clamp bounds are tape
+/// immediates on the fused path — no mask tensors).
 pub fn bce(prob: &Var, target: &Tensor) -> Result<Var> {
-    let p = prob.clamp(1e-7, 1.0 - 1e-7);
     let t = Var::from_tensor(target.clone(), false);
     let one_minus_t = Var::from_tensor(target.map(|v| 1.0 - v), false);
+    if nn_fusion_enabled() {
+        // −[t log p + (1−t) log(1−p)] — the clamped p is shared by both
+        // branches, so it materializes once; everything else fuses into
+        // the mean epilogue.
+        return Var::fused(&[prob, &t, &one_minus_t], |l| {
+            let p = l[0].clamp(1e-7, 1.0 - 1e-7);
+            let pos = l[1].mul(&p.log())?;
+            let neg_p = p.mul_scalar(-1.0).add_scalar(1.0);
+            let neg = l[2].mul(&neg_p.log())?;
+            Ok(pos.add(&neg)?.mean().mul_scalar(-1.0))
+        });
+    }
+    let p = prob.clamp(1e-7, 1.0 - 1e-7);
     // −[t log p + (1−t) log(1−p)]
     let pos = t.mul(&p.log())?;
     let neg_p = p.mul_scalar(-1.0).add_scalar(1.0);
@@ -94,6 +120,41 @@ mod tests {
         let t = Tensor::from_vec(vec![0.0, 1.0, 1.0, 0.0], &[4]).unwrap();
         let report = gradcheck(|v| bce(v, &t), &p0, 1e-3, 1e-2).unwrap();
         assert!(report.pass, "{report:?}");
+    }
+
+    #[test]
+    fn fused_losses_match_eager_bitwise() {
+        // mse and bce, fusion on vs off: identical loss bits and
+        // identical input-gradient bits (the fused expressions apply the
+        // same scalar ops in the same order as the eager chains).
+        let mut rng = Rng::new(9);
+        let _guard = crate::graph::nn_fusion_test_lock();
+        let initial = crate::graph::nn_fusion_enabled();
+        let tgt = Tensor::randn(&[6, 4], 0.0, 1.0, &mut rng);
+        let p0 = Tensor::randn(&[6, 4], 0.0, 1.0, &mut rng).sigmoid();
+        let bt = tgt.map(|v| f32::from(v > 0.0));
+        let run = |fuse: bool| {
+            crate::graph::set_nn_fusion_enabled(fuse);
+            let pm = Var::from_tensor(p0.clone(), true);
+            let lm = mse(&pm, &tgt).unwrap();
+            lm.backward().unwrap();
+            let pb = Var::from_tensor(p0.clone(), true);
+            let lb = bce(&pb, &bt).unwrap();
+            lb.backward().unwrap();
+            (
+                lm.item().unwrap().to_bits(),
+                pm.grad().unwrap().to_vec().iter().map(|v| v.to_bits()).collect::<Vec<u32>>(),
+                lb.item().unwrap().to_bits(),
+                pb.grad().unwrap().to_vec().iter().map(|v| v.to_bits()).collect::<Vec<u32>>(),
+            )
+        };
+        let fused = run(true);
+        let eager = run(false);
+        crate::graph::set_nn_fusion_enabled(initial);
+        assert_eq!(fused.0, eager.0, "mse loss bits");
+        assert_eq!(fused.1, eager.1, "mse grad bits");
+        assert_eq!(fused.2, eager.2, "bce loss bits");
+        assert_eq!(fused.3, eager.3, "bce grad bits");
     }
 
     #[test]

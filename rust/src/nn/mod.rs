@@ -38,6 +38,14 @@ pub trait Module {
     /// All trainable parameters (leaf `Var`s with `requires_grad`).
     fn parameters(&self) -> Vec<Var>;
 
+    /// Downcasting hook for container-level fusion peepholes:
+    /// [`Sequential`] uses it to recognize Dense→activation pairs and
+    /// fuse them into one dispatch (see `graph::nn_fusion_enabled`).
+    /// Modules that never participate keep the `None` default.
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        None
+    }
+
     /// Total number of scalar parameters.
     fn num_parameters(&self) -> usize {
         self.parameters()

@@ -8,7 +8,12 @@
 //! out over the worker pool and is bit-identical at any
 //! `MINITENSOR_NUM_THREADS` (each constituent kernel keeps per-element
 //! accumulation order; the softmax pullback is row-local). The forward
-//! saves the probability rows so the backward never re-runs the softmax.
+//! saves the probability rows so the backward never re-runs the softmax,
+//! and the 1/√d score scaling is fused into the softmax row kernel
+//! (`softmax_scaled_lastdim`) — three dispatches total, no scaled-scores
+//! intermediate, bitwise-equal to the unfused `mul_scalar` + `softmax`
+//! pair. Every constituent kernel is instrumented, so `runtime::stats`
+//! counts attention's launches through them.
 //!
 //! The XLA-AOT counterpart is the fused `attention_128x64` Pallas artifact
 //! (see `python/compile/kernels/attention.py`), cross-checked in
@@ -43,8 +48,10 @@ pub fn attention_forward(q: &Tensor, k: &Tensor, v: &Tensor) -> Result<(Tensor, 
         });
     }
     let scale = 1.0 / (d as f32).sqrt();
-    let scores = q.matmul_nt(k)?.mul_scalar(scale);
-    let probs = scores.softmax()?;
+    // The 1/√d scaling runs inside the softmax row kernel (one dispatch,
+    // no scaled-scores tensor) — bitwise-equal to mul_scalar + softmax.
+    let scores = q.matmul_nt(k)?;
+    let probs = crate::ops::softmax::softmax_scaled_lastdim(&scores, scale)?;
     let out = probs.matmul(v)?;
     Ok((out, probs))
 }

@@ -158,6 +158,8 @@ pub fn conv2d(x: &Tensor, weight: &Tensor, spec: Conv2dSpec) -> Result<Tensor> {
     let oh = spec.out_size(h, kh)?;
     let ow = spec.out_size(w, kw)?;
 
+    crate::runtime::stats::record_dispatch();
+    crate::runtime::stats::record_output_alloc();
     let xc = x.contiguous();
     let wc = weight.contiguous();
     let xs = xc.contiguous_data().unwrap();
@@ -221,6 +223,8 @@ pub fn conv2d_backward_input(
     }
     let (h, w) = (input_dims[2], input_dims[3]);
     let k = cin * kh * kw;
+    crate::runtime::stats::record_dispatch();
+    crate::runtime::stats::record_output_alloc();
 
     let gc = grad_out.contiguous();
     let gs = gc.contiguous_data().unwrap();
@@ -346,6 +350,8 @@ pub fn conv2d_backward_weight(
     }
     let (kh, kw) = (weight_dims[2], weight_dims[3]);
     let k = cin * kh * kw;
+    crate::runtime::stats::record_dispatch();
+    crate::runtime::stats::record_output_alloc();
 
     let xc = x.contiguous();
     let xs = xc.contiguous_data().unwrap();
@@ -460,6 +466,8 @@ pub fn max_pool2d(x: &Tensor, k: usize) -> Result<(Tensor, Vec<usize>)> {
         });
     }
     let (oh, ow) = (h / k, w / k);
+    crate::runtime::stats::record_dispatch();
+    crate::runtime::stats::record_output_alloc();
     let xc = x.contiguous();
     let xs = xc.contiguous_data().unwrap();
     let mut out = vec![0.0f32; n * c * oh * ow];
@@ -506,6 +514,8 @@ pub fn avg_pool2d(x: &Tensor, k: usize) -> Result<Tensor> {
         });
     }
     let (oh, ow) = (h / k, w / k);
+    crate::runtime::stats::record_dispatch();
+    crate::runtime::stats::record_output_alloc();
     let xc = x.contiguous();
     let xs = xc.contiguous_data().unwrap();
     let inv = 1.0 / (k * k) as f32;

@@ -101,12 +101,14 @@ impl Tensor {
         Ok(binary_op(self, other, |a, b| f32::from(a >= b))?.with_dtype(DType::Bool))
     }
 
-    /// Ternary select: `cond ? self : other`, broadcasting all three.
+    /// Ternary select: `cond ? self : other`, broadcasting all three —
+    /// one composed dispatch with one pooled output ([`exec::ternary_op`]),
+    /// applying the same [`crate::ops::kernels::select`] scalar the lazy
+    /// graph's `where_cond` instruction applies (bitwise-equal paths; a
+    /// true select, so `-0.0` and NaN payloads survive unchanged, unlike
+    /// the old mask-multiply-add formulation).
     pub fn where_cond(&self, cond: &Tensor, other: &Tensor) -> Result<Tensor> {
-        // two-step broadcast: (cond * self) + (1-cond) * other, fused.
-        let picked = binary_op(cond, self, |c, v| if c != 0.0 { v } else { 0.0 })?;
-        let rest = binary_op(cond, other, |c, v| if c == 0.0 { v } else { 0.0 })?;
-        picked.add(&rest)
+        exec::ternary_op(cond, self, other, crate::ops::kernels::select)
     }
 
     /// Apply an arbitrary scalar function elementwise (always produces a

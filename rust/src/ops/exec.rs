@@ -73,6 +73,9 @@ thread_local! {
     /// Chunk scratch for the fused-reduce epilogue (one REDUCE_CHUNK of
     /// materialized elementwise results per in-flight chunk).
     static RCHUNK: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    /// Row scratch for the fused axis-reduce epilogue (one materialized
+    /// row of elementwise results per in-flight row).
+    static ROWBUF: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
 }
 
 /// Raw output pointer shareable across pool workers for **disjoint**
@@ -290,12 +293,13 @@ pub fn reduce_chunks(
 }
 
 /// Draw an op output buffer from the pool, counting it in the engine
-/// stats (`output_allocs`). Every output allocation of the *counted*
-/// funnels — the elementwise/unary/rows/reduce/fused kernels here and
-/// in `ops::reduce` — goes through this, so the fusion tests can assert
-/// exact counts. Matmul/conv/softmax/attention manage their own buffers
-/// and are not yet instrumented (see the stats scope note in
-/// `runtime::stats`).
+/// stats (`output_allocs`). Every pooled output allocation — the
+/// elementwise/unary/rows/reduce/fused kernels here, `ops::reduce`,
+/// `matmul_nt`, and the cross-entropy forward — goes through this, so
+/// the fusion tests can assert exact counts. Kernels whose outputs need
+/// zero-initialized accumulators (`matmul`'s C, conv, pooling) allocate
+/// directly but record the same dispatch/alloc counters (see the stats
+/// scope note in `runtime::stats`).
 pub(crate) fn take_output(n: usize) -> Vec<f32> {
     stats::record_output_alloc();
     pool::take(n)
@@ -598,13 +602,53 @@ pub fn fused_op(
     eval: impl Fn(&[&[f32]], &mut [MaybeUninit<f32>]) + Sync,
 ) -> Result<Tensor> {
     let plans = plan_fused_inputs(inputs, out_shape)?;
-    let n = out_shape.numel();
     stats::record_dispatch();
-    stats::record_fused(fused_ops, n);
+    stats::record_fused(fused_ops, out_shape.numel());
+    let unit = (plans.len() + fused_ops).max(1);
+    composed_dispatch(&plans, out_shape, dtype, unit, eval)
+}
+
+/// Ternary select `cond != 0 ? a : b` with broadcasting, in one dispatch
+/// with one pooled output — the eager engine behind
+/// [`Tensor::where_cond`], sharing the composed-kernel tiering with
+/// [`fused_op`] (but counted as a plain dispatch, not a fused region).
+pub fn ternary_op(
+    c: &Tensor,
+    a: &Tensor,
+    b: &Tensor,
+    f: impl Fn(f32, f32, f32) -> f32 + Sync,
+) -> Result<Tensor> {
+    let out_shape = c.shape().broadcast(a.shape())?.broadcast(b.shape())?;
+    let dtype = c.dtype().promote(a.dtype()).promote(b.dtype());
+    let plans = plan_fused_inputs(&[c, a, b], &out_shape)?;
+    stats::record_dispatch();
+    composed_dispatch(&plans, &out_shape, dtype, 3, |ins, out| {
+        for (i, o) in out.iter_mut().enumerate() {
+            o.write(f(ins[0][i], ins[1][i], ins[2][i]));
+        }
+    })
+}
+
+/// Shared body of [`fused_op`] / [`ternary_op`]: run one composed kernel
+/// over planned inputs into a single pooled output. When every input is
+/// contiguous and exactly `out_shape`-shaped the kernel runs directly
+/// over raw chunk slices; otherwise inputs are staged through
+/// L1-resident [`FUSE_BLOCK`] gather blocks ([`eval_gathered`]).
+/// Chunk-parallel either way, and because the partition never changes
+/// per-element arithmetic, results are bit-identical at any
+/// `MINITENSOR_NUM_THREADS`.
+fn composed_dispatch(
+    plans: &[InputPlan<'_>],
+    out_shape: &Shape,
+    dtype: DType,
+    unit: usize,
+    eval: impl Fn(&[&[f32]], &mut [MaybeUninit<f32>]) + Sync,
+) -> Result<Tensor> {
+    let n = out_shape.numel();
     if n == 0 {
         return Ok(Tensor::from_vec(Vec::new(), out_shape.dims())?.with_dtype(dtype));
     }
-    let unit = (plans.len() + fused_ops).max(1);
+    let unit = unit.max(1);
     let mut out = take_output(n);
     let ptr = SyncPtr::new(&mut out);
     if plans.iter().all(|p| p.direct.is_some()) {
@@ -622,7 +666,7 @@ pub fn fused_op(
         for_chunks(n, unit, |s, e| {
             // SAFETY: as above.
             let band = unsafe { ptr.band_uninit(s, e - s) };
-            eval_gathered(&plans, out_shape, s, band, &eval);
+            eval_gathered(plans, out_shape, s, band, &eval);
         });
     }
     // SAFETY: the chunks covered 0..n exactly once and `eval`
@@ -681,6 +725,91 @@ pub fn fused_reduce(
         },
         combine,
     ))
+}
+
+/// Fused elementwise region with a **per-row last-axis reduction
+/// epilogue** in one dispatch and one pooled output: each row of the
+/// `virt_shape = [..., k]`-shaped virtual result of `eval` is
+/// materialized into thread-local scratch, reduced with `slice_reduce`
+/// over the whole contiguous row, and finalized by `finish(total, k)`
+/// (the Mean `* 1/k`). Rows fan out over the worker pool; per-row
+/// arithmetic is serial and fixed, so results are **bit-identical at any
+/// `MINITENSOR_NUM_THREADS`** — and bitwise-equal to materializing the
+/// region and reducing it with the eager `reduce_axis(-1)` fast path,
+/// which applies the same slice kernel to the same contiguous rows.
+///
+/// `out_dims` is the reduced shape (last axis dropped or kept as 1 —
+/// same element count either way). This is the epilogue a lazy
+/// elementwise pipeline ending in a last-axis reduce dispatches through;
+/// the dedicated softmax row kernels (`map_rows`) remain the
+/// single-dispatch path for full-row outputs.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_axis_reduce(
+    inputs: &[&Tensor],
+    virt_shape: &Shape,
+    fused_ops: usize,
+    eval: impl Fn(&[&[f32]], &mut [MaybeUninit<f32>]) + Sync,
+    slice_reduce: impl Fn(&[f32]) -> f32 + Sync,
+    finish: impl Fn(f32, usize) -> f32 + Sync,
+    identity: f32,
+    out_dims: &[usize],
+) -> Result<Tensor> {
+    let k = *virt_shape
+        .dims()
+        .last()
+        .ok_or_else(|| Error::msg("fused_axis_reduce: rank must be >= 1"))?;
+    let plans = plan_fused_inputs(inputs, virt_shape)?;
+    let n = virt_shape.numel();
+    let out_len: usize = out_dims.iter().product();
+    debug_assert!(k == 0 || out_len == n / k, "out_dims must hold one value per row");
+    stats::record_dispatch();
+    stats::record_fused(fused_ops, n);
+    if out_len == 0 {
+        return Tensor::from_vec(Vec::new(), out_dims);
+    }
+    if k == 0 {
+        // Empty rows: every output is the finalized identity, exactly
+        // like the eager reduce_axis degenerate path (for Mean this is
+        // identity * (1/0) — the same NaN the eager chain produces).
+        return Tensor::from_vec(vec![finish(identity, 0); out_len], out_dims);
+    }
+    let rows = n / k;
+    let unit = k.saturating_mul((plans.len() + fused_ops).max(1)).max(1);
+    let mut out = take_output(rows);
+    let ptr = SyncPtr::new(&mut out);
+    // Cap on the row scratch each worker retains between dispatches
+    // (one REDUCE_CHUNK, 128 KiB): wider rows allocate per chunk instead
+    // of pinning megabytes in every pool worker for the process
+    // lifetime.
+    let keep = REDUCE_CHUNK;
+    for_chunks(rows, unit, |r0, r1| {
+        ROWBUF.with(|scr| {
+            let mut scr = scr.borrow_mut();
+            if scr.len() < k {
+                scr.resize(k, 0.0);
+            }
+            for r in r0..r1 {
+                let row = &mut scr[..k];
+                // MaybeUninit view of already-initialized scratch:
+                // writing through it keeps every element initialized.
+                let view = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        row.as_mut_ptr() as *mut MaybeUninit<f32>,
+                        row.len(),
+                    )
+                };
+                eval_gathered(&plans, virt_shape, r * k, view, &eval);
+                // SAFETY: row indices are distinct, each inside `out`.
+                unsafe { ptr.write(r, finish(slice_reduce(&*row), k)) };
+            }
+            if k > keep {
+                *scr = Vec::new();
+            }
+        });
+    });
+    // SAFETY: every row index in 0..rows was written exactly once.
+    unsafe { out.set_len(rows) };
+    Tensor::from_vec(out, out_dims)
 }
 
 #[cfg(test)]
@@ -858,6 +987,93 @@ mod tests {
         .unwrap();
         assert_eq!(y.dims(), &[0, 3]);
         assert_eq!(y.numel(), 0);
+    }
+
+    #[test]
+    fn ternary_op_broadcasts_and_selects() {
+        let c = Tensor::from_vec(vec![1.0, 0.0, 2.0], &[3]).unwrap();
+        let a = Tensor::from_vec((0..6).map(|i| i as f32).collect(), &[2, 3]).unwrap();
+        let b = Tensor::from_vec(vec![-1.0; 6], &[2, 3]).unwrap();
+        let y = ternary_op(&c, &a, &b, crate::ops::kernels::select).unwrap();
+        assert_eq!(y.dims(), &[2, 3]);
+        assert_eq!(y.to_vec(), vec![0.0, -1.0, 2.0, 3.0, -1.0, 5.0]);
+    }
+
+    #[test]
+    fn fused_axis_reduce_matches_eager_rows() {
+        // relu(a*b + a) then per-row sum — against materialize + sum_axis.
+        let rows = 37;
+        let k = 300; // not a FUSE_BLOCK multiple, so row gather wraps
+        let a = Tensor::arange(0.0, (rows * k) as f32)
+            .mul_scalar(1e-3)
+            .reshape(&[rows, k])
+            .unwrap();
+        let b = Tensor::arange(0.0, (rows * k) as f32)
+            .mul_scalar(-2e-3)
+            .reshape(&[rows, k])
+            .unwrap();
+        let fused = fused_axis_reduce(
+            &[&a, &b],
+            a.shape(),
+            3,
+            relu_fma,
+            crate::ops::kernels::sum,
+            |t, _| t,
+            0.0,
+            &[rows],
+        )
+        .unwrap();
+        let want = a
+            .mul(&b)
+            .unwrap()
+            .add(&a)
+            .unwrap()
+            .relu()
+            .sum_axis(-1, false)
+            .unwrap();
+        assert_eq!(fused.dims(), &[rows]);
+        let (f, w) = (fused.to_vec(), want.to_vec());
+        for i in 0..rows {
+            assert_eq!(f[i].to_bits(), w[i].to_bits(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn fused_axis_reduce_empty_rows_and_outputs() {
+        let empty = Tensor::from_vec(Vec::new(), &[0, 4]).unwrap();
+        let y = fused_axis_reduce(
+            &[&empty],
+            empty.shape(),
+            1,
+            |ins, out| {
+                for (i, o) in out.iter_mut().enumerate() {
+                    o.write(ins[0][i]);
+                }
+            },
+            crate::ops::kernels::sum,
+            |t, _| t,
+            0.0,
+            &[0],
+        )
+        .unwrap();
+        assert_eq!(y.dims(), &[0]);
+        let zero_k = Tensor::from_vec(Vec::new(), &[3, 0]).unwrap();
+        let y = fused_axis_reduce(
+            &[&zero_k],
+            zero_k.shape(),
+            1,
+            |ins, out| {
+                for (i, o) in out.iter_mut().enumerate() {
+                    o.write(ins[0][i]);
+                }
+            },
+            crate::ops::kernels::sum,
+            |t, _| t,
+            0.0,
+            &[3],
+        )
+        .unwrap();
+        assert_eq!(y.to_vec(), vec![0.0; 3]);
     }
 
     #[test]

@@ -143,6 +143,18 @@ pub fn fast_exp(x: f32) -> f32 {
     f32::from_bits(bits) * p
 }
 
+/// Ternary select: `cond != 0 ? a : b`. The one definition shared by the
+/// eager `Tensor::where_cond` and the fusion IR's `where_cond`
+/// instruction, which is what keeps the two bitwise-equal.
+#[inline]
+pub fn select(cond: f32, a: f32, b: f32) -> f32 {
+    if cond != 0.0 {
+        a
+    } else {
+        b
+    }
+}
+
 /// In-place scale: `a[i] *= s`.
 #[inline]
 pub fn scale(a: &mut [f32], s: f32) {

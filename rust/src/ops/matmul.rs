@@ -213,6 +213,8 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     }
 
     if ar == 2 && br == 2 {
+        crate::runtime::stats::record_dispatch();
+        crate::runtime::stats::record_output_alloc();
         let ac = a.contiguous();
         let bc = b.contiguous();
         let mut c = vec![0.0f32; m * n];
@@ -244,6 +246,8 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
 
     // Batch entries are independent: fan out over the pool (the nested
     // SGEMM detects it is on a worker and stays serial).
+    crate::runtime::stats::record_dispatch();
+    crate::runtime::stats::record_output_alloc();
     let mut out = vec![0.0f32; batch * m * n];
     let optr = exec::SyncPtr::new_raw(out.as_mut_ptr());
     exec::for_chunks(batch, 2 * m * ka * n, |b0, b1| {
@@ -303,6 +307,7 @@ impl Tensor {
                 got: format!("W has k={kw}"),
             });
         }
+        crate::runtime::stats::record_dispatch();
         let xc = self.contiguous();
         let wc = w.contiguous();
         let xs = xc.contiguous_data().unwrap();
@@ -313,7 +318,7 @@ impl Tensor {
         if out_len == 0 {
             return Tensor::from_vec(Vec::new(), &[m, d]);
         }
-        let mut out = crate::tensor::pool::take(out_len);
+        let mut out = exec::take_output(out_len);
         let ptr = exec::SyncPtr::new(&mut out);
         exec::for_chunks(m, 2 * k * d, |i0, i1| {
             for i in i0..i1 {

@@ -1,10 +1,21 @@
 //! Numerically stable softmax / log-softmax along the last axis, plus the
 //! fused softmax-cross-entropy forward used by the loss (paper eq 8).
 //!
-//! All three route through the execution layer's row dispatcher
-//! ([`exec::map_rows`] / [`exec::for_chunks`]): rows are independent, so
-//! they parallelize across the worker pool with no change in per-row
-//! arithmetic order (bit-identical at one thread).
+//! These are the library's **fused row pipelines**: each op is one
+//! dispatch with one pooled output, with the per-row reduce "epilogues"
+//! (row max, row sum) folded into the row kernel rather than
+//! materialized — the same shape the lazy graph lowers softmax-style
+//! DAGs to through `exec::fused_axis_reduce`. Everything routes through
+//! the execution layer's row dispatcher ([`exec::map_rows`] /
+//! [`exec::for_chunks`]): rows are independent, so they parallelize
+//! across the worker pool with no change in per-row arithmetic order —
+//! bit-identical at any `MINITENSOR_NUM_THREADS`.
+//!
+//! [`softmax_scaled_lastdim`] additionally folds a scalar **prologue**
+//! (`x * scale`) into the row pipeline, so attention's `scores / √d`
+//! costs no extra pass and no extra tensor — bitwise-equal to
+//! `mul_scalar` + `softmax` because the same `v * scale` products feed
+//! the same row kernel.
 
 use super::{exec, kernels};
 use crate::error::{Error, Result};
@@ -20,6 +31,28 @@ pub fn softmax_lastdim(t: &Tensor) -> Result<Tensor> {
         "softmax",
         kernels::max,
         |m, v| kernels::fast_exp(v - m),
+        |dst| {
+            let inv = 1.0 / kernels::sum(dst);
+            kernels::scale(dst, inv);
+        },
+    )
+}
+
+/// Softmax of `t * scale` along the last axis in **one dispatch** — the
+/// `mul_scalar` prologue runs inside the row kernel instead of writing a
+/// scaled copy of the whole tensor first. Bitwise-equal to
+/// `t.mul_scalar(scale).softmax()`: the row max folds the same
+/// `v * scale` products (in the same order `kernels::max` folds the
+/// materialized row) and the exp pass re-applies the identical product.
+pub fn softmax_scaled_lastdim(t: &Tensor, scale: f32) -> Result<Tensor> {
+    exec::map_rows(
+        t,
+        "softmax",
+        move |row| {
+            row.iter()
+                .fold(f32::NEG_INFINITY, |m, &v| m.max(v * scale))
+        },
+        move |m, v| kernels::fast_exp(v * scale - m),
         |dst| {
             let inv = 1.0 / kernels::sum(dst);
             kernels::scale(dst, inv);
@@ -53,11 +86,12 @@ pub fn cross_entropy_forward(logits: &Tensor, labels: &Tensor) -> Result<(Tensor
     if let Some(&bad) = lab.iter().find(|&&yi| yi >= c) {
         return Err(Error::IndexOutOfBounds { index: bad, size: c });
     }
+    crate::runtime::stats::record_dispatch();
 
     // Rows are independent: probs write disjoint slices, the loss is a
     // sum of per-chunk partials combined in row order (deterministic for
     // a fixed thread count; single-threaded it is the exact serial sum).
-    let mut probs = crate::tensor::pool::take(b * c);
+    let mut probs = exec::take_output(b * c);
     let ptr = exec::SyncPtr::new(&mut probs);
     let loss = exec::reduce_chunks(
         b,
@@ -126,6 +160,40 @@ mod tests {
         let ls = t.log_softmax().unwrap();
         let p = t.softmax().unwrap().log();
         assert!(ls.allclose(&p, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn softmax_scaled_is_bitwise_mul_scalar_then_softmax() {
+        let t = Tensor::from_vec(
+            (0..48).map(|i| (i as f32) * 0.37 - 8.0).collect(),
+            &[6, 8],
+        )
+        .unwrap();
+        for &scale in &[1.0f32, 0.125, 1.0 / 8f32.sqrt(), -2.0] {
+            let fused = softmax_scaled_lastdim(&t, scale).unwrap();
+            let eager = t.mul_scalar(scale).softmax().unwrap();
+            let (f, e) = (fused.to_vec(), eager.to_vec());
+            for i in 0..f.len() {
+                assert_eq!(f[i].to_bits(), e[i].to_bits(), "scale={scale} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_scaled_is_one_dispatch() {
+        use crate::runtime::stats;
+        let t = Tensor::from_vec(vec![0.5, -1.0, 2.0, 0.0, 1.0, -2.0], &[2, 3]).unwrap();
+        let before = stats::snapshot();
+        softmax_scaled_lastdim(&t, 0.5).unwrap();
+        let d = stats::snapshot().delta(&before);
+        assert_eq!(d.exec_dispatches, 1);
+        assert_eq!(d.output_allocs, 1);
+        // The unfused pair costs two of each.
+        let before = stats::snapshot();
+        t.mul_scalar(0.5).softmax().unwrap();
+        let d = stats::snapshot().delta(&before);
+        assert_eq!(d.exec_dispatches, 2);
+        assert_eq!(d.output_allocs, 2);
     }
 
     #[test]

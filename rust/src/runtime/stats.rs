@@ -5,13 +5,21 @@
 //! engine report and asserted by the fusion tests ("a fused 3-op chain is
 //! exactly one dispatch and one output allocation").
 //!
-//! **Scope:** the instrumented funnels are the elementwise / unary /
-//! row-map / reduction / fused entry points — the kernel families the
-//! lazy graph can fuse, where eager-vs-fused dispatch counts are the
-//! signal. Matmul, conv, softmax, attention, and pooling drive
-//! `parallel_for` directly and are not yet counted (ROADMAP follow-on),
-//! so on a conv/MLP training run the report reflects the fusable subset
-//! of kernel launches, not every launch in the step.
+//! **Scope:** every bulk-kernel entry point is instrumented — the
+//! elementwise / unary / row-map / reduction / fused funnels in
+//! `ops::exec`, plus matmul (`matmul`, `matmul_nt`), conv2d forward and
+//! both backward passes, pooling, and the fused cross-entropy forward.
+//! Attention is a composition of instrumented kernels (two matmuls and a
+//! softmax), so its launches are counted through its constituents. On a
+//! conv/MLP training step the report therefore reflects *every* kernel
+//! launch, not just the fusable families.
+//!
+//! The program cache of the lazy graph subsystem reports here too:
+//! `program_cache_hits` / `program_cache_misses` count compiled-plan
+//! reuse (a miss is exactly one region-partitioning + tape-construction
+//! pass), and `fusion_bailouts` counts regions the partitioner degraded
+//! to per-op dispatch because they exceeded the fused-input or
+//! stack-depth caps.
 //!
 //! The counters are **thread-local** on purpose: dispatches happen on the
 //! thread that calls into the execution layer (pool workers never dispatch
@@ -28,6 +36,9 @@ thread_local! {
     static FUSED_KERNELS: Cell<u64> = const { Cell::new(0) };
     static FUSED_OPS: Cell<u64> = const { Cell::new(0) };
     static FUSED_ELEMS: Cell<u64> = const { Cell::new(0) };
+    static PROGRAM_CACHE_HITS: Cell<u64> = const { Cell::new(0) };
+    static PROGRAM_CACHE_MISSES: Cell<u64> = const { Cell::new(0) };
+    static FUSION_BAILOUTS: Cell<u64> = const { Cell::new(0) };
 }
 
 /// Point-in-time snapshot of this thread's execution counters.
@@ -48,6 +59,16 @@ pub struct ExecStats {
     pub fused_ops: u64,
     /// Output elements produced by fused kernels.
     pub fused_elems: u64,
+    /// Lazy-graph `eval()` calls that reused a cached compiled program
+    /// (skipping region partitioning and tape construction entirely).
+    pub program_cache_hits: u64,
+    /// Lazy-graph `eval()` calls that compiled a fresh program (exactly
+    /// one region-partitioning + tape-construction pass each).
+    pub program_cache_misses: u64,
+    /// Regions degraded to per-op dispatch because they exceeded the
+    /// fused-input or stack-depth caps, counted per eval: a cached plan
+    /// containing degraded regions re-counts them on every execution.
+    pub fusion_bailouts: u64,
 }
 
 impl ExecStats {
@@ -59,6 +80,9 @@ impl ExecStats {
             fused_kernels: self.fused_kernels - since.fused_kernels,
             fused_ops: self.fused_ops - since.fused_ops,
             fused_elems: self.fused_elems - since.fused_elems,
+            program_cache_hits: self.program_cache_hits - since.program_cache_hits,
+            program_cache_misses: self.program_cache_misses - since.program_cache_misses,
+            fusion_bailouts: self.fusion_bailouts - since.fusion_bailouts,
         }
     }
 }
@@ -71,6 +95,9 @@ pub fn snapshot() -> ExecStats {
         fused_kernels: FUSED_KERNELS.with(Cell::get),
         fused_ops: FUSED_OPS.with(Cell::get),
         fused_elems: FUSED_ELEMS.with(Cell::get),
+        program_cache_hits: PROGRAM_CACHE_HITS.with(Cell::get),
+        program_cache_misses: PROGRAM_CACHE_MISSES.with(Cell::get),
+        fusion_bailouts: FUSION_BAILOUTS.with(Cell::get),
     }
 }
 
@@ -92,6 +119,29 @@ pub(crate) fn record_fused(ops: usize, elems: usize) {
     FUSED_ELEMS.with(|c| c.set(c.get() + elems as u64));
 }
 
+/// One lazy-graph `eval()` that reused a cached compiled program.
+pub(crate) fn record_program_cache_hit() {
+    PROGRAM_CACHE_HITS.with(|c| c.set(c.get() + 1));
+}
+
+/// One lazy-graph `eval()` that compiled (and cached) a fresh program.
+pub(crate) fn record_program_cache_miss() {
+    PROGRAM_CACHE_MISSES.with(|c| c.set(c.get() + 1));
+}
+
+/// One region degraded to per-op dispatch by a partitioner resource cap.
+pub(crate) fn record_fusion_bailout() {
+    FUSION_BAILOUTS.with(|c| c.set(c.get() + 1));
+}
+
+/// Re-record `n` degraded regions at once — used when a cached plan that
+/// contains degraded regions is re-executed, so `fusion_bailouts` keeps
+/// per-eval semantics (degraded regions *dispatched*, not merely
+/// compiled) whether the plan came from the cache or a fresh compile.
+pub(crate) fn record_fusion_bailouts(n: u64) {
+    FUSION_BAILOUTS.with(|c| c.set(c.get() + n));
+}
+
 /// Render the engine report block: worker-thread count, dispatch
 /// counters, and graph-fusion totals for this thread.
 pub fn report() -> String {
@@ -99,7 +149,8 @@ pub fn report() -> String {
     let saved = s.fused_ops.saturating_sub(s.fused_kernels);
     format!(
         "engine: threads={} dispatches={} output_allocs={}\n\
-         graph:  fused_kernels={} fused_ops={} intermediates_avoided={} fused_elems={}\n",
+         graph:  fused_kernels={} fused_ops={} intermediates_avoided={} fused_elems={}\n\
+         cache:  program_hits={} program_misses={} fusion_bailouts={}\n",
         super::parallel::num_threads(),
         s.exec_dispatches,
         s.output_allocs,
@@ -107,6 +158,9 @@ pub fn report() -> String {
         s.fused_ops,
         saved,
         s.fused_elems,
+        s.program_cache_hits,
+        s.program_cache_misses,
+        s.fusion_bailouts,
     )
 }
 
@@ -120,6 +174,9 @@ mod tests {
         record_dispatch();
         record_output_alloc();
         record_fused(3, 100);
+        record_program_cache_hit();
+        record_program_cache_miss();
+        record_fusion_bailout();
         let b = snapshot();
         let d = b.delta(&a);
         assert_eq!(d.exec_dispatches, 1);
@@ -127,6 +184,9 @@ mod tests {
         assert_eq!(d.fused_kernels, 1);
         assert_eq!(d.fused_ops, 3);
         assert_eq!(d.fused_elems, 100);
+        assert_eq!(d.program_cache_hits, 1);
+        assert_eq!(d.program_cache_misses, 1);
+        assert_eq!(d.fusion_bailouts, 1);
     }
 
     #[test]
@@ -134,6 +194,8 @@ mod tests {
         let r = report();
         assert!(r.contains("threads="));
         assert!(r.contains("fused_kernels="));
+        assert!(r.contains("program_hits="));
+        assert!(r.contains("fusion_bailouts="));
     }
 
     #[test]

@@ -163,6 +163,160 @@ fn var_fused_inside_larger_tape_composes() {
 }
 
 #[test]
+fn second_eval_of_same_graph_is_a_cache_hit_with_zero_tape_builds() {
+    // The program cache memoizes compiled plans by DAG structure: the
+    // second eval of a structurally identical graph — even one rebuilt
+    // from scratch — must be a pure cache hit (zero new tape builds)
+    // with the same single dispatch and bit-identical output.
+    let a = Tensor::arange(-64.0, 64.0);
+    let b = Tensor::arange(0.0, 128.0);
+    let build = || {
+        a.lazy()
+            .mul(&b.lazy())
+            .unwrap()
+            .add(&a.lazy())
+            .unwrap()
+            .relu()
+    };
+    minitensor::graph::program_cache_clear();
+    let before = stats::snapshot();
+    let y1 = build().eval().unwrap();
+    let d1 = stats::snapshot().delta(&before);
+    assert_eq!(d1.program_cache_misses, 1, "cold eval compiles once");
+    assert_eq!(d1.program_cache_hits, 0);
+    assert_eq!(d1.exec_dispatches, 1);
+
+    let before = stats::snapshot();
+    let y2 = build().eval().unwrap();
+    let d2 = stats::snapshot().delta(&before);
+    assert_eq!(d2.program_cache_hits, 1, "second eval hits the cache");
+    assert_eq!(d2.program_cache_misses, 0, "zero new tape builds");
+    assert_eq!(d2.exec_dispatches, 1, "cached plan is still one dispatch");
+    assert_eq!(d2.output_allocs, 1);
+    assert_eq!(bits(&y1), bits(&y2));
+}
+
+#[test]
+fn fused_softmax_bitwise_equals_unfused_pair_across_threads() {
+    // The scaled softmax row kernel (used inside attention) vs the
+    // unfused mul_scalar + softmax chain: bit-identical at 1 and 4
+    // threads, and one dispatch instead of two.
+    let _guard = nt_lock();
+    let before_threads = parallel::num_threads();
+    let mut rng = Rng::new(25);
+    let t = Tensor::randn(&[64, 96], 0.0, 2.0, &mut rng);
+    let scale = 1.0 / 96f32.sqrt();
+    let mut reference: Option<Vec<u32>> = None;
+    for threads in [1usize, 4] {
+        parallel::set_num_threads(threads);
+        let before = stats::snapshot();
+        let fused = minitensor::ops::softmax::softmax_scaled_lastdim(&t, scale).unwrap();
+        let d = stats::snapshot().delta(&before);
+        assert_eq!(d.exec_dispatches, 1, "one dispatch at {threads} threads");
+        assert_eq!(d.output_allocs, 1);
+        let eager = t.mul_scalar(scale).softmax().unwrap();
+        assert_eq!(bits(&fused), bits(&eager), "parity at {threads} threads");
+        match &reference {
+            None => reference = Some(bits(&fused)),
+            Some(r) => assert_eq!(&bits(&fused), r, "thread invariance"),
+        }
+    }
+    parallel::set_num_threads(before_threads);
+}
+
+#[test]
+fn mlp_forward_fuses_by_default_with_fewer_dispatches_and_allocs() {
+    // Linear→ReLU→Linear→softmax: the fused-by-default nn:: forward must
+    // execute with strictly fewer dispatches and output allocations than
+    // the eager count, produce bitwise-identical outputs and gradients
+    // at 1 and 4 threads, and never trip a fusion bailout.
+    use minitensor::nn::{Activation, Dense, Module, Sequential};
+    let _guard = nt_lock();
+    let before_threads = parallel::num_threads();
+    let mut rng = Rng::new(26);
+    let model = Sequential::new()
+        .add(Dense::new(16, 32, &mut rng))
+        .add(Activation::Relu)
+        .add(Dense::new(32, 10, &mut rng));
+    let x = Var::from_tensor(Tensor::randn(&[8, 16], 0.0, 1.0, &mut rng), false);
+
+    let run = |fuse: bool| {
+        minitensor::graph::set_nn_fusion_enabled(fuse);
+        model.zero_grad();
+        let before = stats::snapshot();
+        let y = model.forward(&x, false).unwrap().softmax().unwrap();
+        let d = stats::snapshot().delta(&before);
+        y.square().sum().unwrap().backward().unwrap();
+        let grads: Vec<Vec<u32>> = model
+            .parameters()
+            .iter()
+            .map(|p| bits(&p.grad().unwrap()))
+            .collect();
+        (d, bits(&y.data()), grads)
+    };
+
+    let initial = minitensor::graph::nn_fusion_enabled();
+    for threads in [1usize, 4] {
+        parallel::set_num_threads(threads);
+        let (df, yf, gf) = run(true);
+        let (de, ye, ge) = run(false);
+        assert!(
+            df.exec_dispatches < de.exec_dispatches,
+            "fused must dispatch strictly less: {} vs {} (threads={threads})",
+            df.exec_dispatches,
+            de.exec_dispatches
+        );
+        assert!(
+            df.output_allocs < de.output_allocs,
+            "fused must allocate strictly less: {} vs {} (threads={threads})",
+            df.output_allocs,
+            de.output_allocs
+        );
+        assert_eq!(df.fusion_bailouts, 0, "MLP forward must not bail out");
+        assert_eq!(yf, ye, "fused output == eager output (threads={threads})");
+        assert_eq!(gf, ge, "fused grads == eager grads (threads={threads})");
+    }
+    minitensor::graph::set_nn_fusion_enabled(initial);
+    parallel::set_num_threads(before_threads);
+}
+
+#[test]
+fn fusion_bailout_counter_tracks_degraded_regions() {
+    // A wider-than-MAX_FUSED_INPUTS tree must still evaluate correctly
+    // and must account for the degradation in the stats — including on
+    // cache-hit re-evals, which still dispatch the degraded plan.
+    minitensor::graph::program_cache_clear();
+    let leaves: Vec<Tensor> = (0..20)
+        .map(|i| Tensor::full(&[8], i as f32 + 0.5))
+        .collect();
+    let build = || {
+        let mut acc = leaves[0].lazy();
+        for l in &leaves[1..] {
+            acc = acc.add(&l.lazy()).unwrap();
+        }
+        acc
+    };
+    let before = stats::snapshot();
+    let y = build().eval().unwrap();
+    let cold = stats::snapshot().delta(&before);
+    assert!(cold.fusion_bailouts > 0, "wide tree must record its bailouts");
+    let before = stats::snapshot();
+    let y2 = build().eval().unwrap();
+    let warm = stats::snapshot().delta(&before);
+    assert_eq!(warm.program_cache_hits, 1);
+    assert_eq!(
+        warm.fusion_bailouts, cold.fusion_bailouts,
+        "cached degraded plans keep counting per eval"
+    );
+    let mut want = leaves[0].clone();
+    for l in &leaves[1..] {
+        want = want.add(l).unwrap();
+    }
+    assert_eq!(bits(&y), bits(&want));
+    assert_eq!(bits(&y2), bits(&want));
+}
+
+#[test]
 fn lazy_handles_are_reusable_and_observable() {
     let a = Tensor::arange(0.0, 16.0);
     let expr = a.lazy().relu().add_scalar(1.0).sum();

@@ -397,6 +397,69 @@ fn prop_fused_reduce_thread_invariant_on_large_inputs() {
 }
 
 #[test]
+fn prop_fused_row_pipelines_bitwise_equal_eager() {
+    // Random row-pipeline DAGs — a random elementwise prefix feeding a
+    // last-axis reduction (sum/mean/max/min, keepdim or not) or the full
+    // softmax pattern (x - rowmax -> exp -> / rowsum) — must be
+    // bitwise-equal to the eager op chain at 1 and at 4 threads.
+    let _guard = nt_lock();
+    let mut rng = Rng::new(203);
+    let before = parallel::num_threads();
+    for case in 0..30 {
+        let dims = random_shape(&mut rng, case);
+        // Anchor to the full shape so the virtual result keeps rank >= 1
+        // (gen_fusion_case leaves may drop axes).
+        let anchor = Tensor::randn(&dims, 0.0, 1.0, &mut rng);
+        let (lp, tp) = gen_fusion_case(&mut rng, &dims, 1 + case % 3);
+        let (lazy0, eager0) = (lp.add(&anchor.lazy()).unwrap(), tp.add(&anchor).unwrap());
+        let keepdim = rng.next_below(2) == 0;
+        let softmax_case = rng.next_below(4) == 0;
+        let (lazy, eager) = if softmax_case {
+            // Softmax pattern over the pipeline: shared nodes, two axis
+            // reduces, and a broadcast divide.
+            let lm = lazy0.max_axis(-1, true).unwrap();
+            let le = lazy0.sub(&lm).unwrap().exp();
+            let ls = le.sum_axis(-1, true).unwrap();
+            let lazy = le.div(&ls).unwrap();
+            let em = eager0.max_axis(-1, true).unwrap();
+            let ee = eager0.sub(&em).unwrap().exp();
+            let es = ee.sum_axis(-1, true).unwrap();
+            (lazy, ee.div(&es).unwrap())
+        } else {
+            match rng.next_below(4) {
+                0 => (
+                    lazy0.sum_axis(-1, keepdim).unwrap(),
+                    eager0.sum_axis(-1, keepdim).unwrap(),
+                ),
+                1 => (
+                    lazy0.mean_axis(-1, keepdim).unwrap(),
+                    eager0.mean_axis(-1, keepdim).unwrap(),
+                ),
+                2 => (
+                    lazy0.max_axis(-1, keepdim).unwrap(),
+                    eager0.max_axis(-1, keepdim).unwrap(),
+                ),
+                _ => (
+                    lazy0.min_axis(-1, keepdim).unwrap(),
+                    eager0.min_axis(-1, keepdim).unwrap(),
+                ),
+            }
+        };
+        for threads in [1usize, 4] {
+            parallel::set_num_threads(threads);
+            let fused = lazy.eval().unwrap();
+            let replay = lazy.eval_eager().unwrap();
+            let ctx = format!(
+                "case {case} ({dims:?}, softmax={softmax_case}, keepdim={keepdim}, t={threads})"
+            );
+            assert_bits_eq(&fused, &eager, &format!("{ctx} vs eager chain"));
+            assert_bits_eq(&fused, &replay, &format!("{ctx} vs replay"));
+        }
+    }
+    parallel::set_num_threads(before);
+}
+
+#[test]
 fn prop_fused_var_grads_match_eager_tape() {
     // Var::fused gradients equal the eager Var chain's gradients on
     // random inputs (same VJP rules, replayed).
