@@ -25,7 +25,7 @@
 use minitensor::bench_util::{bench, fmt_ns, json_rows, Json, Table};
 use minitensor::data::Rng;
 use minitensor::graph;
-use minitensor::runtime::parallel;
+use minitensor::runtime::{parallel, simd};
 use minitensor::tensor::Tensor;
 
 /// 3-op chain: relu(a*b + a).
@@ -75,6 +75,11 @@ fn main() {
     // the JSON keeps every (experiment, n, threads) row CI expects.
     let (ms, reps) = if quick { (4.0, 2) } else { (40.0, 5) };
     let before_threads = parallel::num_threads();
+    // Every JSON row records the detected dispatch path so perf
+    // trajectories are comparable across hosts (and against the
+    // committed scalar baseline at the repo root).
+    let simd_path = simd::path().name();
+    println!("simd: {simd_path} ({} lanes)\n", simd::LANES);
     let mut rng = Rng::new(3);
     let mut table = Table::new(
         "F1 — eager vs fused elementwise chains",
@@ -128,6 +133,7 @@ fn main() {
                 ]);
                 rows.push(vec![
                     ("bench", Json::S("fusion".into())),
+                    ("simd", Json::S(simd_path.into())),
                     ("chain", Json::S(name.into())),
                     ("ops", Json::N(ops as f64)),
                     ("n", Json::N(n as f64)),
@@ -181,6 +187,7 @@ fn main() {
             graph::set_program_cache_capacity(before_cap);
             rows.push(vec![
                 ("bench", Json::S("fusion_cache".into())),
+                ("simd", Json::S(simd_path.into())),
                 ("n", Json::N(n as f64)),
                 ("threads", Json::N(threads as f64)),
                 ("cold_eval_ns", Json::N(sc.median_ns)),
@@ -240,6 +247,7 @@ fn main() {
             ]);
             rows.push(vec![
                 ("bench", Json::S("softmax_fused".into())),
+                ("simd", Json::S(simd_path.into())),
                 ("rows", Json::N(rows_n as f64)),
                 ("k", Json::N(k as f64)),
                 ("n", Json::N((rows_n * k) as f64)),
@@ -252,6 +260,65 @@ fn main() {
         }
     }
     sm_table.print();
+
+    // F4 — vector path on vs off, same kernels: the explicit SIMD layer's
+    // headline claim. Results must stay bitwise-identical across the
+    // toggle (scalar blocks mirror the intrinsic lane semantics exactly);
+    // on an AVX2/NEON host the on-leg should clear 1.5x on the
+    // transcendental-heavy rows.
+    let mut simd_table = Table::new(
+        "F4 — SIMD on vs off (1 thread, 1e6 elems)",
+        &["kernel", "off", "on", "speedup", "bitwise"],
+    );
+    {
+        parallel::set_num_threads(1);
+        let n = 1_000_000usize;
+        let a = Tensor::randn(&[n], 0.0, 1.0, &mut rng);
+        let b = Tensor::randn(&[n], 0.0, 1.0, &mut rng);
+        let sm = Tensor::randn(&[4096, 256], 0.0, 2.0, &mut rng);
+        let was_vector = simd::path().is_vector();
+        type Kernel<'t> = (&'static str, Box<dyn Fn() -> Tensor + 't>);
+        let kernels: [Kernel; 5] = [
+            ("add", Box::new(|| a.add(&b).unwrap())),
+            ("exp", Box::new(|| a.exp())),
+            ("gelu", Box::new(|| a.gelu())),
+            ("fused 6op", Box::new(|| fused6(&a, &b))),
+            ("softmax", Box::new(|| sm.softmax().unwrap())),
+        ];
+        for (name, f) in &kernels {
+            simd::set_simd_enabled(false);
+            let off_bits = bits(&f());
+            let off = bench(&format!("{name} simd=off"), ms, reps, || {
+                std::hint::black_box(f());
+            });
+            simd::set_simd_enabled(true);
+            let ok = bits(&f()) == off_bits;
+            let on = bench(&format!("{name} simd=on"), ms, reps, || {
+                std::hint::black_box(f());
+            });
+            let speedup = off.median_ns / on.median_ns;
+            simd_table.row(&[
+                (*name).to_string(),
+                fmt_ns(off.median_ns),
+                fmt_ns(on.median_ns),
+                format!("{speedup:.2}x"),
+                if ok { "ok".into() } else { "MISMATCH".into() },
+            ]);
+            rows.push(vec![
+                ("bench", Json::S("simd_onoff".into())),
+                ("simd", Json::S(simd_path.into())),
+                ("kernel", Json::S((*name).into())),
+                ("n", Json::N(n as f64)),
+                ("threads", Json::N(1.0)),
+                ("off_ns", Json::N(off.median_ns)),
+                ("on_ns", Json::N(on.median_ns)),
+                ("speedup", Json::N(speedup)),
+                ("bitwise_identical", Json::B(ok)),
+            ]);
+        }
+        simd::set_simd_enabled(was_vector);
+    }
+    simd_table.print();
     parallel::set_num_threads(before_threads);
 
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fusion.json");

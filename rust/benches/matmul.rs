@@ -1,22 +1,36 @@
 //! Experiment C4 — matmul throughput (paper eq 1, §3.5 engine claims):
-//! blocked native SGEMM (panel-parallel over the worker pool) vs the
-//! naive triple loop vs the XLA-AOT executable (`--features xla` only),
-//! GFLOP/s across sizes. Set `MINITENSOR_NUM_THREADS` to sweep the
-//! execution layer's worker count (1 = the serial baseline).
+//! blocked native SGEMM (explicit 4×16 FMA micro-kernel, panel-parallel
+//! over the worker pool) vs the scalar-dispatch build of the same kernel
+//! (`MINITENSOR_SIMD=off` semantics) vs the naive triple loop vs the
+//! XLA-AOT executable (`--features xla` only), GFLOP/s across sizes. Set
+//! `MINITENSOR_NUM_THREADS` to sweep the execution layer's worker count
+//! (1 = the serial baseline). Writes `BENCH_matmul.json` at the
+//! repository root, each row tagged with the detected SIMD path.
 
-use minitensor::bench_util::{bench, bench_artifact, engine_threads, fmt_ns, Table};
+use minitensor::bench_util::{
+    bench, bench_artifact, engine_threads, fmt_ns, json_rows, Json, Table,
+};
 use minitensor::data::Rng;
 use minitensor::ops::matmul::sgemm_naive;
+use minitensor::runtime::simd;
 use minitensor::tensor::Tensor;
 
 fn main() {
     let mut rng = Rng::new(3);
+    let simd_path = simd::path().name();
+    let was_vector = simd::path().is_vector();
+    println!("simd: {simd_path} ({} lanes)\n", simd::LANES);
+    let mut rows: Vec<Vec<(&str, Json)>> = Vec::new();
     let mut t = Table::new(
         &format!(
-            "C4 — SGEMM, median time and GFLOP/s ({} thread(s))",
-            engine_threads()
+            "C4 — SGEMM, median time and GFLOP/s ({} thread(s), simd={})",
+            engine_threads(),
+            simd_path
         ),
-        &["size", "blocked", "GFLOP/s", "naive-loop", "GFLOP/s", "xla-aot", "speedup vs naive"],
+        &[
+            "size", "blocked", "GFLOP/s", "scalar", "GFLOP/s", "naive-loop", "GFLOP/s", "xla-aot",
+            "simd speedup",
+        ],
     );
 
     for n in [32usize, 64, 128, 256, 512] {
@@ -27,6 +41,16 @@ fn main() {
         let blocked = bench(&format!("blocked {n}"), 80.0, 7, || {
             std::hint::black_box(a.matmul(&b).unwrap());
         });
+
+        // Same blocked kernel with scalar dispatch forced — isolates the
+        // micro-kernel's vector win from cache blocking and threading.
+        // (`mul_add` scalar blocks are bit-equal to the FMA lanes, so
+        // this leg is also a correctness cross-check.)
+        simd::set_simd_enabled(false);
+        let scalar = bench(&format!("scalar {n}"), 80.0, 5, || {
+            std::hint::black_box(a.matmul(&b).unwrap());
+        });
+        simd::set_simd_enabled(was_vector);
 
         let (av, bv) = (a.to_vec(), b.to_vec());
         let naive = bench(&format!("naive {n}"), 80.0, 5, || {
@@ -44,14 +68,29 @@ fn main() {
             "-".into()
         };
 
+        let simd_speedup = scalar.median_ns / blocked.median_ns;
         t.row(&[
             format!("{n}x{n}"),
             fmt_ns(blocked.median_ns),
             format!("{:.2}", flops / blocked.median_ns),
+            fmt_ns(scalar.median_ns),
+            format!("{:.2}", flops / scalar.median_ns),
             fmt_ns(naive.median_ns),
             format!("{:.2}", flops / naive.median_ns),
             xla,
-            format!("{:.2}x", naive.median_ns / blocked.median_ns),
+            format!("{simd_speedup:.2}x"),
+        ]);
+        rows.push(vec![
+            ("bench", Json::S("sgemm".into())),
+            ("simd", Json::S(simd_path.into())),
+            ("n", Json::N(n as f64)),
+            ("threads", Json::N(engine_threads() as f64)),
+            ("blocked_ns", Json::N(blocked.median_ns)),
+            ("blocked_gflops", Json::N(flops / blocked.median_ns)),
+            ("scalar_ns", Json::N(scalar.median_ns)),
+            ("scalar_gflops", Json::N(flops / scalar.median_ns)),
+            ("naive_ns", Json::N(naive.median_ns)),
+            ("simd_speedup", Json::N(simd_speedup)),
         ]);
     }
     t.print();
@@ -69,6 +108,20 @@ fn main() {
             fmt_ns(s.median_ns),
             format!("{:.2}", 2.0 * (m * k * d) as f64 / s.median_ns),
         ]);
+        rows.push(vec![
+            ("bench", Json::S("dense_nt".into())),
+            ("simd", Json::S(simd_path.into())),
+            ("m", Json::N(m as f64)),
+            ("k", Json::N(k as f64)),
+            ("d", Json::N(d as f64)),
+            ("threads", Json::N(engine_threads() as f64)),
+            ("median_ns", Json::N(s.median_ns)),
+            ("gflops", Json::N(2.0 * (m * k * d) as f64 / s.median_ns)),
+        ]);
     }
     t2.print();
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_matmul.json");
+    std::fs::write(path, json_rows(&rows)).expect("write BENCH_matmul.json");
+    println!("\nwrote {path}");
 }

@@ -5,10 +5,11 @@
 //! rewrites the top of stack, `Bin` folds the top two). The interpreter
 //! evaluates the tape over [`FUSE_BLOCK`]-element register blocks held in
 //! thread-local scratch, so per-instruction dispatch cost is amortized
-//! over a whole block, every op loop is monomorphic (auto-vectorizes),
-//! and all intermediates live in L1 — one pass over main memory per
-//! region, which is the entire point of fusion (conceptually this *is*
-//! the composed `Fn(&[f32]) -> f32`, vectorized).
+//! over a whole block, every op body is the explicit 8-lane kernel from
+//! [`crate::runtime::simd`] (`Un`/`Bin` through the kinds' `apply_block`,
+//! `Where` through `select_ip`), and all intermediates live in L1 — one
+//! pass over main memory per region, which is the entire point of fusion
+//! (conceptually this *is* the composed `Fn(&[f32]) -> f32`, vectorized).
 
 use std::cell::RefCell;
 use std::mem::MaybeUninit;
@@ -139,10 +140,7 @@ impl Program {
                             let crow = &mut lo[c0..c0 + len];
                             let arow = &hi[..len];
                             let brow = &hi[FUSE_BLOCK..FUSE_BLOCK + len];
-                            for i in 0..len {
-                                crow[i] =
-                                    crate::ops::kernels::select(crow[i], arow[i], brow[i]);
-                            }
+                            crate::runtime::simd::select_ip(crow, arow, brow);
                             sp -= 2;
                         }
                     }

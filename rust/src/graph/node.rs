@@ -5,11 +5,11 @@
 //! test-only per-element `apply` that pins each arm against the eager
 //! method bit for bit), the eager replay (`eval_eager`, literally the
 //! `Tensor` method the eager engine runs), and the VJP used by
-//! `Var::fused`. The scalar functions are the *same functions* the
-//! eager kernels close over, which is what makes fused evaluation
-//! bitwise-equal to the eager op chain: identical f32 operations in
-//! identical per-element order, just without the intermediate
-//! materializations.
+//! `Var::fused`. Both `apply_block` and the eager kernels dispatch the
+//! *same* [`crate::runtime::simd`] op kinds (8-lane blocks, scalar-twin
+//! tails), which is what makes fused evaluation bitwise-equal to the
+//! eager op chain: identical f32 operations in identical per-element
+//! order, just without the intermediate materializations.
 
 use std::rc::Rc;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -17,7 +17,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use crate::dtype::DType;
 use crate::error::{Error, Result};
 use crate::ops::kernels;
-use crate::ops::unary::{gelu_grad_scalar, gelu_scalar, sigmoid_scalar};
+use crate::ops::unary::gelu_grad_scalar;
+use crate::runtime::simd;
 use crate::shape::Shape;
 use crate::tensor::Tensor;
 
@@ -43,109 +44,50 @@ pub(crate) enum UnaryKind {
 }
 
 impl UnaryKind {
-    /// Scalar semantics — must match the closure the eager `Tensor`
-    /// method passes to `exec::unary_op`, expression for expression.
-    /// Test-only: the hot path is `apply_block`; this is the per-element
-    /// spec the unit tests pin both paths against.
+    /// The 8-lane kernel kind for this op, when one exists. `Log` is the
+    /// one holdout (libm `ln` has no vector twin here) and keeps a plain
+    /// scalar loop.
+    fn simd_op(self) -> Option<simd::UnOp> {
+        Some(match self {
+            UnaryKind::Neg => simd::UnOp::Neg,
+            UnaryKind::Relu => simd::UnOp::Relu,
+            UnaryKind::Exp => simd::UnOp::Exp,
+            UnaryKind::Log => return None,
+            UnaryKind::Sqrt => simd::UnOp::Sqrt,
+            UnaryKind::Square => simd::UnOp::Square,
+            UnaryKind::Abs => simd::UnOp::Abs,
+            UnaryKind::Sigmoid => simd::UnOp::Sigmoid,
+            UnaryKind::Tanh => simd::UnOp::Tanh,
+            UnaryKind::Gelu => simd::UnOp::Gelu,
+            UnaryKind::AddScalar(s) => simd::UnOp::AddScalar(s),
+            UnaryKind::MulScalar(s) => simd::UnOp::MulScalar(s),
+            UnaryKind::Clamp(lo, hi) => simd::UnOp::Clamp(lo, hi),
+            UnaryKind::LeakyRelu(a) => simd::UnOp::LeakyRelu(a),
+        })
+    }
+
+    /// Scalar semantics — by construction the same [`simd::un_s`] twin
+    /// the eager funnel's tail/strided paths apply. Test-only: the hot
+    /// path is `apply_block`; this is the per-element spec the unit tests
+    /// pin both paths against.
     #[cfg(test)]
     pub fn apply(self, v: f32) -> f32 {
-        match self {
-            UnaryKind::Neg => -v,
-            UnaryKind::Relu => v.max(0.0),
-            UnaryKind::Exp => v.exp(),
-            UnaryKind::Log => v.ln(),
-            UnaryKind::Sqrt => v.sqrt(),
-            UnaryKind::Square => v * v,
-            UnaryKind::Abs => v.abs(),
-            UnaryKind::Sigmoid => sigmoid_scalar(v),
-            UnaryKind::Tanh => v.tanh(),
-            UnaryKind::Gelu => gelu_scalar(v),
-            UnaryKind::AddScalar(s) => v + s,
-            UnaryKind::MulScalar(s) => v * s,
-            UnaryKind::Clamp(lo, hi) => v.clamp(lo, hi),
-            UnaryKind::LeakyRelu(a) => {
-                if v > 0.0 {
-                    v
-                } else {
-                    a * v
-                }
-            }
+        match self.simd_op() {
+            Some(op) => simd::un_s(op, v),
+            None => v.ln(),
         }
     }
 
-    /// In-place block form (one match arm per kind so each loop body is
-    /// monomorphic and auto-vectorizes).
+    /// In-place block form: the 8-lane kernel ([`simd::un_ip`]) for the
+    /// known kinds — the same block kernel the eager `unary_simd` funnel
+    /// runs, so fused tapes and eager chains stay bitwise-equal.
     #[inline]
     pub fn apply_block(self, dst: &mut [f32]) {
-        match self {
-            UnaryKind::Neg => {
-                for v in dst.iter_mut() {
-                    *v = -*v;
-                }
-            }
-            UnaryKind::Relu => {
-                for v in dst.iter_mut() {
-                    *v = v.max(0.0);
-                }
-            }
-            UnaryKind::Exp => {
-                for v in dst.iter_mut() {
-                    *v = v.exp();
-                }
-            }
-            UnaryKind::Log => {
+        match self.simd_op() {
+            Some(op) => simd::un_ip(op, dst),
+            None => {
                 for v in dst.iter_mut() {
                     *v = v.ln();
-                }
-            }
-            UnaryKind::Sqrt => {
-                for v in dst.iter_mut() {
-                    *v = v.sqrt();
-                }
-            }
-            UnaryKind::Square => {
-                for v in dst.iter_mut() {
-                    *v = *v * *v;
-                }
-            }
-            UnaryKind::Abs => {
-                for v in dst.iter_mut() {
-                    *v = v.abs();
-                }
-            }
-            UnaryKind::Sigmoid => {
-                for v in dst.iter_mut() {
-                    *v = sigmoid_scalar(*v);
-                }
-            }
-            UnaryKind::Tanh => {
-                for v in dst.iter_mut() {
-                    *v = v.tanh();
-                }
-            }
-            UnaryKind::Gelu => {
-                for v in dst.iter_mut() {
-                    *v = gelu_scalar(*v);
-                }
-            }
-            UnaryKind::AddScalar(s) => {
-                for v in dst.iter_mut() {
-                    *v += s;
-                }
-            }
-            UnaryKind::MulScalar(s) => {
-                for v in dst.iter_mut() {
-                    *v *= s;
-                }
-            }
-            UnaryKind::Clamp(lo, hi) => {
-                for v in dst.iter_mut() {
-                    *v = v.clamp(lo, hi);
-                }
-            }
-            UnaryKind::LeakyRelu(a) => {
-                for v in dst.iter_mut() {
-                    *v = if *v > 0.0 { *v } else { a * *v };
                 }
             }
         }
@@ -268,58 +210,35 @@ pub(crate) enum BinaryKind {
 }
 
 impl BinaryKind {
-    /// Scalar semantics — must match the closure the eager `Tensor`
-    /// method passes to `exec::binary_op`. Test-only: the hot path is
-    /// `apply_block`; this is the per-element spec the unit tests pin
-    /// both paths against.
-    #[cfg(test)]
-    pub fn apply(self, a: f32, b: f32) -> f32 {
+    /// The 8-lane kernel kind for this op (every binary kind has one).
+    fn simd_op(self) -> simd::BinOp {
         match self {
-            BinaryKind::Add => a + b,
-            BinaryKind::Sub => a - b,
-            BinaryKind::Mul => a * b,
-            BinaryKind::Div => a / b,
-            BinaryKind::Max => a.max(b),
-            BinaryKind::Min => a.min(b),
+            BinaryKind::Add => simd::BinOp::Add,
+            BinaryKind::Sub => simd::BinOp::Sub,
+            BinaryKind::Mul => simd::BinOp::Mul,
+            BinaryKind::Div => simd::BinOp::Div,
+            BinaryKind::Max => simd::BinOp::Max,
+            BinaryKind::Min => simd::BinOp::Min,
         }
     }
 
-    /// In-place block form: `dst[i] = apply(dst[i], rhs[i])`.
+    /// Scalar semantics — by construction the same [`simd::bin_s`] twin
+    /// the eager funnel's tail/strided paths apply (`Max`/`Min` are
+    /// [`simd::max_s`]/[`simd::min_s`], what `maxps`/`minps` compute).
+    /// Test-only: the hot path is `apply_block`; this is the per-element
+    /// spec the unit tests pin both paths against.
+    #[cfg(test)]
+    pub fn apply(self, a: f32, b: f32) -> f32 {
+        simd::bin_s(self.simd_op(), a, b)
+    }
+
+    /// In-place block form: `dst[i] = apply(dst[i], rhs[i])` through the
+    /// 8-lane kernel ([`simd::bin_ip`]) — the same block kernel the eager
+    /// `binary_simd` funnel runs.
     #[inline]
     pub fn apply_block(self, dst: &mut [f32], rhs: &[f32]) {
         debug_assert_eq!(dst.len(), rhs.len());
-        match self {
-            BinaryKind::Add => {
-                for (a, &b) in dst.iter_mut().zip(rhs) {
-                    *a += b;
-                }
-            }
-            BinaryKind::Sub => {
-                for (a, &b) in dst.iter_mut().zip(rhs) {
-                    *a -= b;
-                }
-            }
-            BinaryKind::Mul => {
-                for (a, &b) in dst.iter_mut().zip(rhs) {
-                    *a *= b;
-                }
-            }
-            BinaryKind::Div => {
-                for (a, &b) in dst.iter_mut().zip(rhs) {
-                    *a /= b;
-                }
-            }
-            BinaryKind::Max => {
-                for (a, &b) in dst.iter_mut().zip(rhs) {
-                    *a = a.max(b);
-                }
-            }
-            BinaryKind::Min => {
-                for (a, &b) in dst.iter_mut().zip(rhs) {
-                    *a = a.min(b);
-                }
-            }
-        }
+        simd::bin_ip(self.simd_op(), dst, rhs);
     }
 
     /// Replay through the eager kernel (the bitwise reference path).

@@ -53,6 +53,24 @@
 //! `REDUCE_CHUNK`-partition partials in order — bit-identical at any
 //! thread count, matching the lazy graph's fused reduce epilogues.
 //!
+//! ## SIMD microkernels
+//!
+//! Beneath the exec tiers, [`runtime::simd`] provides an explicit
+//! 8-lane f32 vector layer: each hot kernel is written once and
+//! monomorphized into AVX2 (x86_64, runtime-detected with FMA), NEON
+//! (aarch64), and `[f32; 8]` scalar backends. The contiguous
+//! elementwise/unary tiers, the fused tape interpreter (including the
+//! per-row softmax/reduce epilogues), and the SGEMM 4×16 FMA register
+//! tile all dispatch through it.
+//!
+//! The determinism contract is **bitwise**: scalar ≡ SIMD ≡ any thread
+//! count. Scalar blocks mirror the intrinsic semantics exactly and
+//! reductions fold lanes in one fixed order, so `MINITENSOR_SIMD=off`
+//! (or [`runtime::simd::set_simd_enabled`]) changes speed, never bits.
+//! The transcendentals share polynomial kernels across all paths
+//! (`fast_exp` ≈ 4e-6 max relative error; `tanh` ~2 ULP of libm) — the
+//! approximation is a property of the kernel, not the ISA.
+//!
 //! ## Feature flags
 //!
 //! - `xla` (default off): compiles the PJRT runtime ([`runtime::Engine`]),

@@ -186,8 +186,11 @@ fn cmd_info(args: &[String]) -> minitensor::Result<()> {
         .unwrap_or("artifacts");
     println!("minitensor v{}", env!("CARGO_PKG_VERSION"));
     println!(
-        "exec layer: {} worker thread(s) (MINITENSOR_NUM_THREADS to override)",
-        parallel::num_threads()
+        "exec layer: {} worker thread(s), simd={} lanes={} \
+         (MINITENSOR_NUM_THREADS / MINITENSOR_SIMD to override)",
+        parallel::num_threads(),
+        minitensor::runtime::simd::path().name(),
+        minitensor::runtime::simd::LANES
     );
     #[cfg(feature = "xla")]
     match Engine::cpu(dir) {
@@ -213,7 +216,12 @@ fn cmd_info(args: &[String]) -> minitensor::Result<()> {
 
 fn cmd_bench_quick() -> minitensor::Result<()> {
     use minitensor::bench_util::{bench, fmt_ns};
-    println!("threads: {}", parallel::num_threads());
+    println!(
+        "threads: {}  simd: {} ({} lanes)",
+        parallel::num_threads(),
+        minitensor::runtime::simd::path().name(),
+        minitensor::runtime::simd::LANES
+    );
     let mut rng = Rng::new(1);
     let a = Tensor::randn(&[1_000_000], 0.0, 1.0, &mut rng);
     let b = Tensor::randn(&[1_000_000], 0.0, 1.0, &mut rng);

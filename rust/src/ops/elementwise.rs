@@ -5,10 +5,18 @@
 //! Tier dispatch (contiguous fused / bias-row / strided walk), pooled
 //! output allocation, and data-parallel chunking all live in the unified
 //! execution layer — this file only defines the operator surface.
+//!
+//! The arithmetic families (`add`/`sub`/`mul`/`div`/`maximum`/`minimum`,
+//! scalar add/mul, `where_cond`) dispatch as known [`simd::BinOp`] /
+//! [`simd::UnOp`] kinds through the 8-lane funnels
+//! ([`exec::binary_simd`], [`exec::unary_simd`], [`exec::ternary_select`]);
+//! everything else (pow, comparisons, arbitrary `map`) keeps the
+//! closure-generic paths.
 
 use super::exec;
 use crate::dtype::DType;
 use crate::error::Result;
+use crate::runtime::simd::{BinOp, UnOp};
 use crate::tensor::Tensor;
 
 /// Compute `f(a, b)` elementwise with broadcasting; result dtype is
@@ -33,22 +41,22 @@ impl Tensor {
 
     /// Elementwise addition with broadcasting.
     pub fn add(&self, other: &Tensor) -> Result<Tensor> {
-        binary_op(self, other, |a, b| a + b)
+        exec::binary_simd(self, other, BinOp::Add)
     }
 
     /// Elementwise subtraction with broadcasting.
     pub fn sub(&self, other: &Tensor) -> Result<Tensor> {
-        binary_op(self, other, |a, b| a - b)
+        exec::binary_simd(self, other, BinOp::Sub)
     }
 
     /// Elementwise (Hadamard) product with broadcasting.
     pub fn mul(&self, other: &Tensor) -> Result<Tensor> {
-        binary_op(self, other, |a, b| a * b)
+        exec::binary_simd(self, other, BinOp::Mul)
     }
 
     /// Elementwise division with broadcasting.
     pub fn div(&self, other: &Tensor) -> Result<Tensor> {
-        binary_op(self, other, |a, b| a / b)
+        exec::binary_simd(self, other, BinOp::Div)
     }
 
     /// Elementwise power with broadcasting.
@@ -56,24 +64,25 @@ impl Tensor {
         binary_op(self, other, |a, b| a.powf(b))
     }
 
-    /// Elementwise maximum.
+    /// Elementwise maximum ([`crate::runtime::simd::max_s`] per lane —
+    /// what `maxps` computes; plain maximum on NaN-free data).
     pub fn maximum(&self, other: &Tensor) -> Result<Tensor> {
-        binary_op(self, other, f32::max)
+        exec::binary_simd(self, other, BinOp::Max)
     }
 
-    /// Elementwise minimum.
+    /// Elementwise minimum (same lane kernel family as [`Self::maximum`]).
     pub fn minimum(&self, other: &Tensor) -> Result<Tensor> {
-        binary_op(self, other, f32::min)
+        exec::binary_simd(self, other, BinOp::Min)
     }
 
     /// Add a scalar.
     pub fn add_scalar(&self, s: f32) -> Tensor {
-        self.map(|v| v + s)
+        exec::unary_simd(self, UnOp::AddScalar(s))
     }
 
     /// Multiply by a scalar.
     pub fn mul_scalar(&self, s: f32) -> Tensor {
-        self.map(|v| v * s)
+        exec::unary_simd(self, UnOp::MulScalar(s))
     }
 
     /// Raise to a scalar power.
@@ -102,13 +111,14 @@ impl Tensor {
     }
 
     /// Ternary select: `cond ? self : other`, broadcasting all three —
-    /// one composed dispatch with one pooled output ([`exec::ternary_op`]),
-    /// applying the same [`crate::ops::kernels::select`] scalar the lazy
-    /// graph's `where_cond` instruction applies (bitwise-equal paths; a
-    /// true select, so `-0.0` and NaN payloads survive unchanged, unlike
-    /// the old mask-multiply-add formulation).
+    /// one composed dispatch with one pooled output
+    /// ([`exec::ternary_select`], the 8-lane compare/blend form of
+    /// [`crate::ops::kernels::select`] — same per-element semantics the
+    /// lazy graph's `where_cond` instruction applies, so the paths stay
+    /// bitwise-equal; a true select, so `-0.0` and NaN payloads survive
+    /// unchanged, unlike the old mask-multiply-add formulation).
     pub fn where_cond(&self, cond: &Tensor, other: &Tensor) -> Result<Tensor> {
-        exec::ternary_op(cond, self, other, crate::ops::kernels::select)
+        exec::ternary_select(cond, self, other)
     }
 
     /// Apply an arbitrary scalar function elementwise (always produces a

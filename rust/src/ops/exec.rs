@@ -32,7 +32,7 @@ use std::mem::MaybeUninit;
 
 use crate::dtype::DType;
 use crate::error::{Error, Result};
-use crate::runtime::{parallel, stats};
+use crate::runtime::{parallel, simd, stats};
 use crate::shape::{Shape, StridedIter};
 use crate::tensor::{pool, Tensor};
 
@@ -438,6 +438,137 @@ pub fn unary_op(t: &Tensor, f: impl Fn(f32) -> f32 + Sync) -> Tensor {
         .with_dtype(t.dtype())
 }
 
+/// Count the 8-lane blocks a SIMD-funneled dispatch will process, for the
+/// engine stats (`simd_blocks`). Called on the dispatching thread only,
+/// after validation, and only when a vector path is active — the scalar
+/// fallback contributes nothing, so `MINITENSOR_SIMD=off` runs report 0.
+#[inline]
+fn record_simd(n: usize) {
+    if simd::path().is_vector() {
+        stats::record_simd_blocks((n / simd::LANES) as u64);
+    }
+}
+
+/// Kind-aware twin of [`binary_op`]: when the op is one of the known
+/// [`simd::BinOp`] families and the operands hit tier 1 (contiguous,
+/// same shape) or tier 2 (contiguous `[..., k]` ⊕ bias `[k]`), the loop
+/// body is the explicit 8-lane block kernel [`simd::bin_to`] instead of a
+/// scalar closure. Strided/broadcast operands fall back to [`binary_op`]
+/// with the op's scalar twin [`simd::bin_s`] — per-element arithmetic is
+/// identical on every path, so results are bitwise-equal regardless of
+/// which tier (or `MINITENSOR_SIMD` setting) ran.
+pub fn binary_simd(a: &Tensor, b: &Tensor, op: simd::BinOp) -> Result<Tensor> {
+    let out_shape = a.shape().broadcast(b.shape())?;
+    let dtype = a.dtype().promote(b.dtype());
+    let n = out_shape.numel();
+
+    // Tier 1: identical shapes, both contiguous — block kernel over
+    // chunk slices.
+    if n > 0 && a.shape() == b.shape() {
+        if let (Some(sa), Some(sb)) = (a.contiguous_data(), b.contiguous_data()) {
+            stats::record_dispatch();
+            record_simd(n);
+            let mut out = take_output(n);
+            let ptr = SyncPtr::new(&mut out);
+            for_chunks(n, 1, |s, e| {
+                // SAFETY: chunks are disjoint and inside `out`; `bin_to`
+                // writes every element of the band.
+                unsafe {
+                    let band = ptr.band_uninit(s, e - s);
+                    simd::bin_to(op, &sa[s..e], &sb[s..e], band.as_mut_ptr() as *mut f32);
+                }
+            });
+            // SAFETY: for_chunks covered every index in 0..n exactly once.
+            unsafe { out.set_len(n) };
+            return Ok(Tensor::from_vec(out, out_shape.dims())?.with_dtype(dtype));
+        }
+    }
+
+    // Tier 2: contiguous LHS [..., k] with bias RHS [k] — block kernel
+    // per row against the shared RHS.
+    if n > 0
+        && b.rank() == 1
+        && a.shape() == &out_shape
+        && a.rank() >= 1
+        && a.dims()[a.rank() - 1] == b.dims()[0]
+    {
+        if let (Some(sa), Some(sb)) = (a.contiguous_data(), b.contiguous_data()) {
+            stats::record_dispatch();
+            record_simd(n);
+            let k = sb.len();
+            let rows = n / k;
+            let mut out = take_output(n);
+            let ptr = SyncPtr::new(&mut out);
+            for_chunks(rows, k, |r0, r1| {
+                for r in r0..r1 {
+                    // SAFETY: row ranges are disjoint per chunk; `bin_to`
+                    // writes every element of the row band.
+                    unsafe {
+                        let band = ptr.band_uninit(r * k, k);
+                        simd::bin_to(op, &sa[r * k..(r + 1) * k], sb, band.as_mut_ptr() as *mut f32);
+                    }
+                }
+            });
+            // SAFETY: every row of every chunk was written.
+            unsafe { out.set_len(n) };
+            return Ok(Tensor::from_vec(out, out_shape.dims())?.with_dtype(dtype));
+        }
+    }
+
+    // Tier 3 / degenerate: strided walk with the scalar twin — same
+    // per-element function the vector lanes compute.
+    binary_op(a, b, move |x, y| simd::bin_s(op, x, y))
+}
+
+/// Kind-aware twin of [`unary_op`]: contiguous sources run the 8-lane
+/// block kernel [`simd::un_to`] over chunk slices; strided views fall
+/// back to [`unary_op`] with the scalar twin [`simd::un_s`]. Bitwise
+/// equal on every path (see [`crate::runtime::simd`]).
+pub fn unary_simd(t: &Tensor, op: simd::UnOp) -> Tensor {
+    let n = t.numel();
+    if n > 0 {
+        if let Some(s) = t.contiguous_data() {
+            stats::record_dispatch();
+            record_simd(n);
+            let mut out = take_output(n);
+            let ptr = SyncPtr::new(&mut out);
+            for_chunks(n, 1, |a, b| {
+                // SAFETY: chunks are disjoint and inside `out`; `un_to`
+                // writes every element of the band.
+                unsafe {
+                    let band = ptr.band_uninit(a, b - a);
+                    simd::un_to(op, &s[a..b], band.as_mut_ptr() as *mut f32);
+                }
+            });
+            // SAFETY: for_chunks covered every index in 0..n exactly once.
+            unsafe { out.set_len(n) };
+            return Tensor::from_vec(out, t.dims())
+                .expect("unary_simd preserves shape")
+                .with_dtype(t.dtype());
+        }
+    }
+    unary_op(t, move |v| simd::un_s(op, v))
+}
+
+/// Ternary select `cond != 0 ? a : b` through the 8-lane block kernel
+/// [`simd::select_to`] — the SIMD twin of
+/// [`ternary_op`]`(c, a, b, kernels::select)`, sharing its planning,
+/// tiering ([`composed_dispatch`]) and stats accounting. Both the direct
+/// and the gathered path hand the kernel equal-length blocks, so every
+/// tier vectorizes.
+pub fn ternary_select(c: &Tensor, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let out_shape = c.shape().broadcast(a.shape())?.broadcast(b.shape())?;
+    let dtype = c.dtype().promote(a.dtype()).promote(b.dtype());
+    let plans = plan_fused_inputs(&[c, a, b], &out_shape)?;
+    stats::record_dispatch();
+    record_simd(out_shape.numel());
+    composed_dispatch(&plans, &out_shape, dtype, 3, |ins, out| {
+        // SAFETY: composed blocks are equal-length; `select_to` writes
+        // every element of the band.
+        unsafe { simd::select_to(ins[0], ins[1], ins[2], out.as_mut_ptr() as *mut f32) }
+    })
+}
+
 /// Row kernel over the last axis (the softmax/log-softmax family),
 /// row-parallel, in three phases per row: `prep(src_row)` computes one
 /// row statistic (max, logsumexp, …), `emit(stat, v)` produces each
@@ -480,6 +611,52 @@ pub fn map_rows(
         }
     });
     // SAFETY: every row of every chunk was written by `emit`.
+    unsafe { out.set_len(n) };
+    Tensor::from_vec(out, t.dims())
+}
+
+/// Block-emit variant of [`map_rows`] for row kernels with an 8-lane SIMD
+/// middle phase: `emit_row(stat, src_row, dst_row)` produces the whole
+/// output row in one call (and must initialize every element of
+/// `dst_row`), instead of a per-element closure. Same tiering, stats
+/// accounting, and three-phase contract as [`map_rows`] — this is what
+/// lets the softmax family run its exp pass through
+/// [`simd::exp_scaled_sub_to`] while keeping one dispatch and one pooled
+/// output per op.
+pub fn map_rows_block(
+    t: &Tensor,
+    op: &'static str,
+    prep: impl Fn(&[f32]) -> f32 + Sync,
+    emit_row: impl Fn(f32, &[f32], &mut [MaybeUninit<f32>]) + Sync,
+    finish: impl Fn(&mut [f32]) + Sync,
+) -> Result<Tensor> {
+    let k = *t
+        .dims()
+        .last()
+        .ok_or_else(|| Error::msg(format!("{op}: rank must be >= 1")))?;
+    let n = t.numel();
+    stats::record_dispatch();
+    if k == 0 || n == 0 {
+        return Tensor::from_vec(Vec::new(), t.dims());
+    }
+    record_simd(n);
+    let src = t.contiguous();
+    let s = src.contiguous_data().unwrap();
+    let rows = n / k;
+    let mut out = take_output(n);
+    let ptr = SyncPtr::new(&mut out);
+    for_chunks(rows, k, |r0, r1| {
+        for r in r0..r1 {
+            let srow = &s[r * k..(r + 1) * k];
+            let stat = prep(srow);
+            // SAFETY: rows are disjoint per chunk; `emit_row`'s contract
+            // is to initialize every element of the band.
+            unsafe { emit_row(stat, srow, ptr.band_uninit(r * k, k)) };
+            // SAFETY: the row was fully initialized by `emit_row`.
+            finish(unsafe { ptr.slice(r * k, (r + 1) * k) });
+        }
+    });
+    // SAFETY: every row of every chunk was written by `emit_row`.
     unsafe { out.set_len(n) };
     Tensor::from_vec(out, t.dims())
 }

@@ -1,9 +1,17 @@
 //! Low-level bulk kernels over contiguous `f32` slices.
 //!
-//! These are the §3.5 "inner loops written to encourage auto-vectorization":
-//! simple, bounds-check-free (via exact-length zips), branch-free bodies
-//! that LLVM turns into packed SIMD on x86/Arm. Everything above this layer
-//! (elementwise/reduce/matmul) funnels contiguous fast paths through here.
+//! The bulk entries (`sum`, `dot`, `max`, `min`, `axpy`, `scale`,
+//! `add_assign`, `logsumexp`) dispatch through the explicit 8-lane SIMD
+//! layer in [`crate::runtime::simd`] (AVX2 / NEON / scalar blocks picked
+//! at runtime, `MINITENSOR_SIMD=off` to force scalar). The folds keep the
+//! seed kernels' exact shape — 8 partial accumulators, sequential lane
+//! fold, scalar tail — so results are bit-identical across paths and
+//! bit-identical to the original autovectorized code. `fast_exp` and
+//! `select` stay here as the scalar twins the vector kernels mirror
+//! lane-for-lane; `binary_map`/`unary_map` remain closure-generic helpers
+//! for callers outside the known op families.
+
+use crate::runtime::simd;
 
 /// Apply `f` elementwise over two equal-length inputs into `out`.
 #[inline]
@@ -24,70 +32,45 @@ pub fn unary_map(a: &[f32], out: &mut [f32], f: impl Fn(f32) -> f32) {
     }
 }
 
-/// `out[i] = a[i] * s + out[i]` — fused multiply-accumulate with a scalar.
+/// `out[i] = a[i] * s + out[i]` — multiply-accumulate with a scalar
+/// (plain mul+add per lane, bit-identical to the seed scalar loop).
 #[inline]
 pub fn axpy(s: f32, a: &[f32], out: &mut [f32]) {
     debug_assert_eq!(a.len(), out.len());
-    for (o, &x) in out.iter_mut().zip(a) {
-        *o += s * x;
-    }
+    simd::axpy(s, a, out);
 }
 
 /// Sum with 8-way partial accumulators.
 ///
 /// Splitting the reduction across independent accumulators breaks the
-/// loop-carried dependence so LLVM can vectorize + unroll; it also gives a
-/// fixed summation tree, making results deterministic across runs.
+/// loop-carried dependence (one vector register on the SIMD paths); the
+/// fixed summation tree — lane `j` accumulates elements ≡ `j` mod 8,
+/// sequential lane fold, scalar tail — makes results deterministic across
+/// runs and bit-identical across SIMD paths.
 #[inline]
 pub fn sum(a: &[f32]) -> f32 {
-    const LANES: usize = 8;
-    let mut acc = [0.0f32; LANES];
-    let chunks = a.chunks_exact(LANES);
-    let rem = chunks.remainder();
-    for c in chunks {
-        for i in 0..LANES {
-            acc[i] += c[i];
-        }
-    }
-    let mut tail = 0.0;
-    for &v in rem {
-        tail += v;
-    }
-    acc.iter().sum::<f32>() + tail
+    simd::sum(a)
 }
 
-/// Dot product with 8-way partial accumulators.
+/// Dot product with 8-way partial accumulators (same fold as [`sum`]).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    const LANES: usize = 8;
-    let mut acc = [0.0f32; LANES];
-    let ca = a.chunks_exact(LANES);
-    let cb = b.chunks_exact(LANES);
-    let ra = ca.remainder();
-    let rb = cb.remainder();
-    for (x, y) in ca.zip(cb) {
-        for i in 0..LANES {
-            acc[i] += x[i] * y[i];
-        }
-    }
-    let mut tail = 0.0;
-    for (x, y) in ra.iter().zip(rb) {
-        tail += x * y;
-    }
-    acc.iter().sum::<f32>() + tail
+    simd::dot(a, b)
 }
 
-/// Maximum element (NaN-propagating max is avoided: uses `f32::max`).
+/// Maximum element. Deterministic 8-lane fold of `max_s` (`if a > b { a }
+/// else { b }` — what `maxps` computes); on NaN-free data this is the
+/// plain maximum.
 #[inline]
 pub fn max(a: &[f32]) -> f32 {
-    a.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    simd::max(a)
 }
 
-/// Minimum element.
+/// Minimum element (same fold shape as [`max`]).
 #[inline]
 pub fn min(a: &[f32]) -> f32 {
-    a.iter().copied().fold(f32::INFINITY, f32::min)
+    simd::min(a)
 }
 
 /// Index of the maximum element (first occurrence).
@@ -111,7 +94,7 @@ pub fn logsumexp(a: &[f32]) -> f32 {
     if m.is_infinite() {
         return m;
     }
-    let s: f32 = a.iter().map(|&v| fast_exp(v - m)).sum();
+    let s = simd::sum_exp_sub(a, m);
     m + s.ln()
 }
 
@@ -158,18 +141,14 @@ pub fn select(cond: f32, a: f32, b: f32) -> f32 {
 /// In-place scale: `a[i] *= s`.
 #[inline]
 pub fn scale(a: &mut [f32], s: f32) {
-    for v in a.iter_mut() {
-        *v *= s;
-    }
+    simd::un_ip(simd::UnOp::MulScalar(s), a);
 }
 
 /// In-place add: `a[i] += b[i]`.
 #[inline]
 pub fn add_assign(a: &mut [f32], b: &[f32]) {
     debug_assert_eq!(a.len(), b.len());
-    for (x, &y) in a.iter_mut().zip(b) {
-        *x += y;
-    }
+    simd::bin_ip(simd::BinOp::Add, a, b);
 }
 
 #[cfg(test)]

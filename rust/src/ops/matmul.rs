@@ -1,18 +1,22 @@
 //! Matrix multiplication (paper §3.1, eq 1).
 //!
-//! The 2-D kernel is a cache-blocked, register-tiled SGEMM written for
-//! LLVM auto-vectorization: the innermost loop is a contiguous
-//! multiply-accumulate over `k` panels with the B matrix pre-packed
-//! row-major per block. MC row-panels of C are independent, so the panel
-//! loop fans out over the worker pool (each task packs its own A panel;
-//! the packed B block is shared read-only). Per-element accumulation
-//! order is unchanged, so results are identical at any thread count.
-//! Batched (≥3-D) matmul broadcasts leading dims and parallelizes over
-//! the batch instead (the per-batch SGEMM then runs serially on its
-//! worker).
+//! The 2-D kernel is a cache-blocked, register-tiled SGEMM: full 4×16
+//! tiles run the explicit FMA micro-kernel in [`crate::runtime::simd`]
+//! (8 accumulator vectors held in registers across the K loop — AVX2
+//! `vfmadd` on x86_64, NEON `fmla` on aarch64, correctly-rounded
+//! `f32::mul_add` on the scalar path, so all paths are bit-equal), with
+//! the B matrix pre-packed row-major per block and A packed into
+//! MR-interleaved column panels. Ragged edge tiles keep a shared scalar
+//! loop. MC row-panels of C are independent, so the panel loop fans out
+//! over the worker pool (each task packs its own A panel; the packed B
+//! block is shared read-only). Per-element accumulation order is
+//! unchanged, so results are identical at any thread count. Batched
+//! (≥3-D) matmul broadcasts leading dims and parallelizes over the batch
+//! instead (the per-batch SGEMM then runs serially on its worker).
 
 use super::exec;
 use crate::error::{Error, Result};
+use crate::runtime::simd;
 use crate::tensor::Tensor;
 
 /// Cache block sizes (elements). MC×KC panel of A (~128 KiB) and KC×NC
@@ -122,7 +126,26 @@ fn macro_kernel(
         let mut jr = 0;
         while jr < nc {
             let nr = NR.min(nc - jr);
-            if nr == NR {
+            if nr == NR && mr == MR {
+                // Full 4×16 tile: explicit FMA register tile. The B
+                // operand is the packed kc×nc block starting at column
+                // `jr`, row stride `nc`.
+                // SAFETY: `mr == MR && nr == NR` means rows ir..ir+MR and
+                // columns jr..jr+NR all lie inside this panel's C band
+                // (len `(mc-1)*ldc + nc`), `a_panel` holds `kc * MR`
+                // floats, and `packed_b[jr..]` has `kc` rows of stride
+                // `nc` with `NR` readable floats each (`jr + NR <= nc`).
+                unsafe {
+                    simd::sgemm_micro_4x16(
+                        kc,
+                        a_panel,
+                        &packed_b[jr..],
+                        nc,
+                        c.as_mut_ptr().add(ir * ldc + jr),
+                        ldc,
+                    );
+                }
+            } else if nr == NR {
                 micro_kernel(kc, a_panel, packed_b, jr, nc, c, ir, ldc, mr);
             } else {
                 // Edge tile: scalar loop over the ragged columns.
@@ -143,9 +166,10 @@ fn macro_kernel(
     }
 }
 
-/// 4×16 register-tiled micro-kernel over packed panels. Fixed-size array
-/// views (`try_into`) give LLVM exact trip counts, so the j-loops lower to
-/// straight-line FMA on YMM registers.
+/// Scalar 4×16 register-tiled micro-kernel over packed panels, used for
+/// row-tail panels (`mr < MR`) where the explicit SIMD tile can't write
+/// all four C rows. Fixed-size array views (`try_into`) give LLVM exact
+/// trip counts on the j-loops.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn micro_kernel(

@@ -6,10 +6,12 @@
 //! (row max, row sum) folded into the row kernel rather than
 //! materialized — the same shape the lazy graph lowers softmax-style
 //! DAGs to through `exec::fused_axis_reduce`. Everything routes through
-//! the execution layer's row dispatcher ([`exec::map_rows`] /
-//! [`exec::for_chunks`]): rows are independent, so they parallelize
-//! across the worker pool with no change in per-row arithmetic order —
-//! bit-identical at any `MINITENSOR_NUM_THREADS`.
+//! the execution layer's block row dispatcher ([`exec::map_rows_block`] /
+//! [`exec::for_chunks`]) onto the 8-lane row kernels in
+//! [`crate::runtime::simd`] (`max_scaled`, `exp_scaled_sub_to`): rows are
+//! independent, so they parallelize across the worker pool with no change
+//! in per-row arithmetic order — bit-identical at any
+//! `MINITENSOR_NUM_THREADS` and on every SIMD path.
 //!
 //! [`softmax_scaled_lastdim`] additionally folds a scalar **prologue**
 //! (`x * scale`) into the row pipeline, so attention's `scores / √d`
@@ -19,18 +21,22 @@
 
 use super::{exec, kernels};
 use crate::error::{Error, Result};
+use crate::runtime::simd;
 use crate::tensor::Tensor;
 
 /// Softmax along the last axis, computed row-wise with the max-shift trick.
 pub fn softmax_lastdim(t: &Tensor) -> Result<Tensor> {
-    // Per row: a branch-free exp pass (no serial dependency, so fast_exp
-    // pipelines — a fused exp+sum loop is ~2x slower, EXPERIMENTS.md §Perf
-    // L3.3), then one normalization pass over the freshly written row.
-    exec::map_rows(
+    // Per row: an 8-lane max fold, a branch-free vector exp pass (no
+    // serial dependency, so fast_exp pipelines — a fused exp+sum loop is
+    // ~2x slower, EXPERIMENTS.md §Perf L3.3), then one normalization pass
+    // over the freshly written row.
+    exec::map_rows_block(
         t,
         "softmax",
-        kernels::max,
-        |m, v| kernels::fast_exp(v - m),
+        |row| simd::max_scaled(row, 1.0),
+        |m, src, dst| unsafe {
+            simd::exp_scaled_sub_to(src, 1.0, m, dst.as_mut_ptr() as *mut f32)
+        },
         |dst| {
             let inv = 1.0 / kernels::sum(dst);
             kernels::scale(dst, inv);
@@ -45,14 +51,17 @@ pub fn softmax_lastdim(t: &Tensor) -> Result<Tensor> {
 /// `v * scale` products (in the same order `kernels::max` folds the
 /// materialized row) and the exp pass re-applies the identical product.
 pub fn softmax_scaled_lastdim(t: &Tensor, scale: f32) -> Result<Tensor> {
-    exec::map_rows(
+    // Same vector kernels as [`softmax_lastdim`] with the scale folded in:
+    // `max_scaled` / `exp_scaled_sub_to` compute the identical `v * scale`
+    // products in the identical lane-fold order, which is what makes the
+    // bitwise pin against the unfused pair hold under SIMD.
+    exec::map_rows_block(
         t,
         "softmax",
-        move |row| {
-            row.iter()
-                .fold(f32::NEG_INFINITY, |m, &v| m.max(v * scale))
+        move |row| simd::max_scaled(row, scale),
+        move |m, src, dst| unsafe {
+            simd::exp_scaled_sub_to(src, scale, m, dst.as_mut_ptr() as *mut f32)
         },
-        move |m, v| kernels::fast_exp(v * scale - m),
         |dst| {
             let inv = 1.0 / kernels::sum(dst);
             kernels::scale(dst, inv);
@@ -62,7 +71,21 @@ pub fn softmax_scaled_lastdim(t: &Tensor, scale: f32) -> Result<Tensor> {
 
 /// Log-softmax along the last axis (stable: `x - m - ln Σ exp(x-m)`).
 pub fn log_softmax_lastdim(t: &Tensor) -> Result<Tensor> {
-    exec::map_rows(t, "log_softmax", kernels::logsumexp, |lse, v| v - lse, |_| ())
+    // `v + (-lse)` is IEEE-identical to `v - lse`, so the vector
+    // `AddScalar` kernel reuses the elementwise path bit-for-bit.
+    exec::map_rows_block(
+        t,
+        "log_softmax",
+        kernels::logsumexp,
+        |lse, src, dst| unsafe {
+            simd::un_to(
+                simd::UnOp::AddScalar(-lse),
+                src,
+                dst.as_mut_ptr() as *mut f32,
+            )
+        },
+        |_| (),
+    )
 }
 
 /// Fused forward of mean cross-entropy over logits `[b, C]` with integer
@@ -102,9 +125,11 @@ pub fn cross_entropy_forward(logits: &Tensor, labels: &Tensor) -> Result<(Tensor
                 let row = &s[i * c..(i + 1) * c];
                 let lse = kernels::logsumexp(row);
                 part -= row[lab[i]] - lse;
-                for (j, &v) in row.iter().enumerate() {
-                    // SAFETY: row ranges are disjoint per chunk.
-                    unsafe { ptr.write(i * c + j, kernels::fast_exp(v - lse)) };
+                // SAFETY: row ranges are disjoint per chunk; the vector
+                // exp kernel initializes every element of the band.
+                unsafe {
+                    let band = ptr.band_uninit(i * c, c);
+                    simd::exp_scaled_sub_to(row, 1.0, lse, band.as_mut_ptr() as *mut f32);
                 }
             }
             part

@@ -1,26 +1,35 @@
 //! Unary elementwise operations: negation, exp/log family, and the
 //! nonlinearities of paper §3.3 (ReLU, Sigmoid, Tanh, GELU).
 //!
-//! Every method delegates to [`Tensor::map`], which routes through the
-//! unified execution layer (`ops::exec`): pooled output buffers and
-//! chunk-parallel dispatch on large contiguous inputs.
+//! The known op kinds dispatch through [`exec::unary_simd`] as
+//! [`simd::UnOp`]s — 8-lane blocks on contiguous inputs, the scalar twin
+//! on strided views, bitwise-equal either way. `exp`/`tanh`/`sigmoid`/
+//! `gelu` use the polynomial kernels ([`crate::ops::kernels::fast_exp`],
+//! [`simd::tanh_s`]), which are the one definition shared by every path
+//! (eager, fused tape, SIMD lanes). The long tail (log, trig, recip, pow)
+//! keeps the closure-generic [`Tensor::map`] path.
 
+use crate::ops::exec;
+use crate::runtime::simd::{self, UnOp};
 use crate::tensor::Tensor;
 
-/// `sqrt(2/π)` constant used by the tanh-approximated GELU.
-const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+/// `sqrt(2/π)` constant used by the tanh-approximated GELU (shared with
+/// the vector GELU kernel in `runtime::simd`).
+pub(crate) const SQRT_2_OVER_PI: f32 = 0.797_884_56;
 
-/// Scalar GELU (tanh approximation, the one used by the major frameworks).
+/// Scalar GELU (tanh approximation, the one used by the major
+/// frameworks), on the polynomial [`simd::tanh_s`] so the scalar twin and
+/// the vector lanes agree bit-for-bit.
 #[inline]
 pub fn gelu_scalar(x: f32) -> f32 {
-    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)).tanh())
+    0.5 * x * (1.0 + simd::tanh_s(SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)))
 }
 
 /// Derivative of the tanh-approximated GELU.
 #[inline]
 pub fn gelu_grad_scalar(x: f32) -> f32 {
     let u = SQRT_2_OVER_PI * (x + 0.044715 * x * x * x);
-    let t = u.tanh();
+    let t = simd::tanh_s(u);
     let du = SQRT_2_OVER_PI * (1.0 + 3.0 * 0.044715 * x * x);
     0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
 }
@@ -41,12 +50,14 @@ pub fn sigmoid_scalar(x: f32) -> f32 {
 impl Tensor {
     /// Elementwise negation.
     pub fn neg(&self) -> Tensor {
-        self.map(|v| -v)
+        exec::unary_simd(self, UnOp::Neg)
     }
 
-    /// Elementwise exponential.
+    /// Elementwise exponential ([`crate::ops::kernels::fast_exp`] — the
+    /// polynomial kernel every exp in the engine shares; max relative
+    /// error ≈ 4e-6).
     pub fn exp(&self) -> Tensor {
-        self.map(f32::exp)
+        exec::unary_simd(self, UnOp::Exp)
     }
 
     /// Elementwise natural log.
@@ -56,12 +67,12 @@ impl Tensor {
 
     /// Elementwise square root.
     pub fn sqrt(&self) -> Tensor {
-        self.map(f32::sqrt)
+        exec::unary_simd(self, UnOp::Sqrt)
     }
 
     /// Elementwise absolute value.
     pub fn abs(&self) -> Tensor {
-        self.map(f32::abs)
+        exec::unary_simd(self, UnOp::Abs)
     }
 
     /// Elementwise sine.
@@ -76,7 +87,7 @@ impl Tensor {
 
     /// Elementwise square.
     pub fn square(&self) -> Tensor {
-        self.map(|v| v * v)
+        exec::unary_simd(self, UnOp::Square)
     }
 
     /// Elementwise reciprocal.
@@ -84,34 +95,36 @@ impl Tensor {
         self.map(|v| 1.0 / v)
     }
 
-    /// Clamp values into `[lo, hi]`.
+    /// Clamp values into `[lo, hi]` (exact `f32::clamp` semantics on
+    /// every path, including NaN and signed-zero behavior).
     pub fn clamp(&self, lo: f32, hi: f32) -> Tensor {
-        self.map(|v| v.clamp(lo, hi))
+        exec::unary_simd(self, UnOp::Clamp(lo, hi))
     }
 
     /// ReLU: `max(x, 0)` (paper §3.3).
     pub fn relu(&self) -> Tensor {
-        self.map(|v| v.max(0.0))
+        exec::unary_simd(self, UnOp::Relu)
     }
 
-    /// Logistic sigmoid (stable).
+    /// Logistic sigmoid (stable; [`sigmoid_scalar`] per lane).
     pub fn sigmoid(&self) -> Tensor {
-        self.map(sigmoid_scalar)
+        exec::unary_simd(self, UnOp::Sigmoid)
     }
 
-    /// Hyperbolic tangent.
+    /// Hyperbolic tangent ([`simd::tanh_s`] — Cephes-style polynomial
+    /// core, `1 − 2/(e^{2|x|}+1)` tail; ~2 ULP of `f32::tanh`).
     pub fn tanh(&self) -> Tensor {
-        self.map(f32::tanh)
+        exec::unary_simd(self, UnOp::Tanh)
     }
 
     /// GELU, tanh approximation (paper §3.3).
     pub fn gelu(&self) -> Tensor {
-        self.map(gelu_scalar)
+        exec::unary_simd(self, UnOp::Gelu)
     }
 
     /// Leaky ReLU with slope `alpha` for negative inputs.
     pub fn leaky_relu(&self, alpha: f32) -> Tensor {
-        self.map(move |v| if v > 0.0 { v } else { alpha * v })
+        exec::unary_simd(self, UnOp::LeakyRelu(alpha))
     }
 }
 

@@ -13,6 +13,7 @@ mod artifact;
 #[cfg(feature = "xla")]
 mod engine;
 pub mod parallel;
+pub mod simd;
 pub mod stats;
 
 pub use artifact::{Artifact, Manifest};

@@ -1,0 +1,1457 @@
+//! Explicit 8-lane f32 SIMD layer under the exec tiers.
+//!
+//! One generic kernel body per operation, instantiated for three backends:
+//! AVX2+FMA (`__m256`) on x86_64, NEON (2 × `float32x4_t`) on aarch64, and
+//! a plain `[f32; 8]` scalar fallback everywhere. The backend is picked
+//! **once per process** by runtime feature detection (cached in an atomic,
+//! resolved on first use — i.e. at pool startup for the CLI paths) and can
+//! be forced off with `MINITENSOR_SIMD=off` (or `0` / `false` / `scalar`).
+//!
+//! # Determinism contract
+//!
+//! Every lane operation is defined so the three backends produce the same
+//! bits: arithmetic (`+ - * /`, sqrt) is IEEE-exact on all paths; `max` /
+//! `min` are the branchless `if a > b { a } else { b }` select that x86
+//! `maxps` implements (see [`max_s`]); fused multiply-add is the correctly
+//! rounded `f32::mul_add` on the scalar path and a hardware FMA on the
+//! vector paths (both correctly rounded, hence bit-equal); and the
+//! transcendental kernels ([`vexp`] mirroring `kernels::fast_exp`,
+//! [`vtanh`] mirroring [`tanh_s`]) evaluate the *same* polynomial with the
+//! same fixed association per lane. Reductions use a fixed 8-accumulator
+//! tree with a sequential lane fold and a scalar tail, identical on every
+//! backend. SIMD-on and SIMD-off are therefore bitwise-equal **by
+//! construction**, not merely by test — and since lanes never interact in
+//! map kernels, the equality also holds under any chunk partition, which
+//! is what keeps the 1-vs-N-thread bitwise CI contract intact.
+//!
+//! Accuracy: the polynomial `exp` kernel keeps `fast_exp`'s ≈4e-6 max
+//! relative error (~32 ULP worst case); the Cephes-style `tanh` kernel is
+//! ~2 ULP inside |x| < 0.625 and inherits the `exp` error above it. Both
+//! are far below the 1e-5 tolerances of every consumer (softmax, CE,
+//! GELU).
+
+#![allow(unused_unsafe)] // intrinsics are safe-in-target-feature on newer toolchains
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Vector width in f32 lanes (fixed: AVX2 = 1×8, NEON = 2×4, scalar = 8).
+pub const LANES: usize = 8;
+
+const UNRESOLVED: usize = 0;
+const P_AVX2: usize = 1;
+const P_NEON: usize = 2;
+const P_SCALAR: usize = 3;
+
+/// Which instruction family the block kernels run on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdPath {
+    /// x86_64 AVX2 + FMA (8 × f32 per register).
+    Avx2,
+    /// aarch64 NEON (2 × 4 f32 registers per 8-lane block).
+    Neon,
+    /// Portable `[f32; 8]` blocks — also the `MINITENSOR_SIMD=off` path.
+    Scalar,
+}
+
+impl SimdPath {
+    /// Short name for reports and bench JSON (`avx2` / `neon` / `scalar`).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdPath::Avx2 => "avx2",
+            SimdPath::Neon => "neon",
+            SimdPath::Scalar => "scalar",
+        }
+    }
+
+    /// True when a real vector ISA (not the scalar fallback) is active.
+    pub fn is_vector(self) -> bool {
+        !matches!(self, SimdPath::Scalar)
+    }
+}
+
+/// Resolved path, `UNRESOLVED` until first use.
+static PATH: AtomicUsize = AtomicUsize::new(UNRESOLVED);
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> usize {
+    if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma") {
+        P_AVX2
+    } else {
+        P_SCALAR
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect() -> usize {
+    P_NEON // NEON is baseline on aarch64
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect() -> usize {
+    P_SCALAR
+}
+
+fn env_enabled() -> bool {
+    match std::env::var("MINITENSOR_SIMD") {
+        Ok(v) => !matches!(
+            v.trim().to_ascii_lowercase().as_str(),
+            "off" | "0" | "false" | "scalar"
+        ),
+        Err(_) => true,
+    }
+}
+
+fn decode(v: usize) -> SimdPath {
+    match v {
+        P_AVX2 => SimdPath::Avx2,
+        P_NEON => SimdPath::Neon,
+        _ => SimdPath::Scalar,
+    }
+}
+
+/// The active dispatch path. Detected once (honouring `MINITENSOR_SIMD`),
+/// then cached for the life of the process; bit-equal outputs on every
+/// path make a mid-run override via [`set_simd_enabled`] observable only
+/// in speed, never in results.
+pub fn path() -> SimdPath {
+    let v = PATH.load(Ordering::Relaxed);
+    if v != UNRESOLVED {
+        return decode(v);
+    }
+    let want = if env_enabled() { detect() } else { P_SCALAR };
+    // First resolver wins; concurrent resolvers compute the same value.
+    let _ = PATH.compare_exchange(UNRESOLVED, want, Ordering::Relaxed, Ordering::Relaxed);
+    decode(PATH.load(Ordering::Relaxed))
+}
+
+/// Force the vector path on (re-detect) or off (scalar blocks). Test and
+/// bench hook — the env knob only applies at first resolution.
+pub fn set_simd_enabled(on: bool) {
+    PATH.store(if on { detect() } else { P_SCALAR }, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Op enums + scalar twins
+// ---------------------------------------------------------------------------
+
+/// Binary elementwise op kinds the block kernels understand.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    /// `if a > b { a } else { b }` — see [`max_s`].
+    Max,
+    /// `if a < b { a } else { b }` — see [`min_s`].
+    Min,
+}
+
+/// Unary elementwise op kinds the block kernels understand.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum UnOp {
+    Neg,
+    Relu,
+    /// `kernels::fast_exp` semantics (polynomial, clamped).
+    Exp,
+    Sqrt,
+    Square,
+    Abs,
+    Sigmoid,
+    /// [`tanh_s`] semantics (Cephes polynomial + `fast_exp` tail).
+    Tanh,
+    Gelu,
+    AddScalar(f32),
+    MulScalar(f32),
+    Clamp(f32, f32),
+    LeakyRelu(f32),
+}
+
+/// Deterministic branchless max: `if a > b { a } else { b }`.
+///
+/// This is exactly what x86 `maxps` computes (unordered compares return
+/// the second operand), so the scalar twin and the AVX2 path agree on
+/// every input including NaNs; the NEON path uses an explicit
+/// compare+select to match. Unlike `f32::max`, a NaN in `b` propagates —
+/// identical to `f32::max` whenever `b` is a non-NaN constant (e.g. ReLU).
+#[inline(always)]
+pub fn max_s(a: f32, b: f32) -> f32 {
+    if a > b {
+        a
+    } else {
+        b
+    }
+}
+
+/// Deterministic branchless min: `if a < b { a } else { b }` (x86 `minps`).
+#[inline(always)]
+pub fn min_s(a: f32, b: f32) -> f32 {
+    if a < b {
+        a
+    } else {
+        b
+    }
+}
+
+/// Scalar tanh with the same polynomial split the vector kernel uses:
+/// Cephes rational approximation for |x| < 0.625, `1 − 2/(e^{2|x|}+1)`
+/// via `fast_exp` above it. ~2 ULP in the polynomial range.
+#[inline(always)]
+pub fn tanh_s(x: f32) -> f32 {
+    use crate::ops::kernels::fast_exp;
+    let z = x.abs();
+    if 0.625 > z {
+        let s = x * x;
+        let p = -5.704_988_7e-3_f32;
+        let p = p * s + 2.063_908_9e-2;
+        let p = p * s + -5.373_971_6e-2;
+        let p = p * s + 1.333_144_2e-1;
+        let p = p * s + -3.333_328_2e-1;
+        x + x * s * p
+    } else {
+        let e = fast_exp(z + z);
+        let r = 1.0 - 2.0 / (e + 1.0);
+        if 0.0 > x {
+            -r
+        } else {
+            r
+        }
+    }
+}
+
+/// Per-lane semantics of `op` — the tail / strided / off-path twin of the
+/// vector binary kernels. Every execution path funnels through these
+/// definitions, which is what keeps them bitwise-interchangeable.
+#[inline(always)]
+pub fn bin_s(op: BinOp, a: f32, b: f32) -> f32 {
+    match op {
+        BinOp::Add => a + b,
+        BinOp::Sub => a - b,
+        BinOp::Mul => a * b,
+        BinOp::Div => a / b,
+        BinOp::Max => max_s(a, b),
+        BinOp::Min => min_s(a, b),
+    }
+}
+
+/// Per-lane semantics of `op` — the tail / strided / off-path twin of the
+/// vector unary kernels.
+#[inline(always)]
+pub fn un_s(op: UnOp, v: f32) -> f32 {
+    match op {
+        UnOp::Neg => -v,
+        UnOp::Relu => max_s(v, 0.0),
+        UnOp::Exp => crate::ops::kernels::fast_exp(v),
+        UnOp::Sqrt => v.sqrt(),
+        UnOp::Square => v * v,
+        UnOp::Abs => v.abs(),
+        UnOp::Sigmoid => crate::ops::unary::sigmoid_scalar(v),
+        UnOp::Tanh => tanh_s(v),
+        UnOp::Gelu => crate::ops::unary::gelu_scalar(v),
+        UnOp::AddScalar(c) => v + c,
+        UnOp::MulScalar(c) => v * c,
+        UnOp::Clamp(lo, hi) => v.clamp(lo, hi),
+        UnOp::LeakyRelu(a) => {
+            if v > 0.0 {
+                v
+            } else {
+                a * v
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The 8-lane vector abstraction
+// ---------------------------------------------------------------------------
+
+/// 8 × f32 vector operations. Every lane op matches the scalar twins above
+/// exactly (`max` is [`max_s`], `mul_add` is `f32::mul_add`, compares are
+/// ordered-greater-than), which makes SIMD-on and SIMD-off bit-identical
+/// by construction. All methods are `unsafe` for uniformity; only
+/// `load`/`store` carry real obligations (8 valid f32 slots at `p`).
+trait Simd8: Copy {
+    type F: Copy;
+    unsafe fn load(p: *const f32) -> Self::F;
+    unsafe fn store(p: *mut f32, v: Self::F);
+    unsafe fn splat(x: f32) -> Self::F;
+    unsafe fn add(a: Self::F, b: Self::F) -> Self::F;
+    unsafe fn sub(a: Self::F, b: Self::F) -> Self::F;
+    unsafe fn mul(a: Self::F, b: Self::F) -> Self::F;
+    unsafe fn div(a: Self::F, b: Self::F) -> Self::F;
+    /// `if a > b { a } else { b }` per lane (NaN ⇒ `b`), i.e. [`max_s`].
+    unsafe fn max(a: Self::F, b: Self::F) -> Self::F;
+    /// `if a < b { a } else { b }` per lane (NaN ⇒ `b`), i.e. [`min_s`].
+    unsafe fn min(a: Self::F, b: Self::F) -> Self::F;
+    /// Correctly rounded `a*b + c` (`f32::mul_add` / hardware FMA).
+    unsafe fn mul_add(a: Self::F, b: Self::F, c: Self::F) -> Self::F;
+    unsafe fn floor(a: Self::F) -> Self::F;
+    unsafe fn sqrt(a: Self::F) -> Self::F;
+    unsafe fn abs(a: Self::F) -> Self::F;
+    unsafe fn neg(a: Self::F) -> Self::F;
+    /// Per-lane `if a > b { x } else { y }` (ordered compare, NaN ⇒ `y`).
+    unsafe fn select_gt(a: Self::F, b: Self::F, x: Self::F, y: Self::F) -> Self::F;
+    /// Per-lane `if c != 0.0 { x } else { y }` (NaN counts as ≠ 0).
+    unsafe fn select_neq0(c: Self::F, x: Self::F, y: Self::F) -> Self::F;
+    /// `2^k` for integral-valued lanes `k` via the exponent-bit trick —
+    /// mirrors `((k as i32 + 127) as u32) << 23` in `fast_exp`.
+    unsafe fn exp2i(k: Self::F) -> Self::F;
+    unsafe fn to_array(v: Self::F) -> [f32; LANES];
+}
+
+/// Portable backend: `[f32; 8]` blocks, lane ops written against the same
+/// semantic twins the tails use. This is the `MINITENSOR_SIMD=off` path.
+mod scalar8 {
+    use super::{max_s, min_s, Simd8, LANES};
+
+    #[derive(Clone, Copy)]
+    pub(super) struct Scalar8;
+
+    #[inline(always)]
+    fn map2(a: [f32; LANES], b: [f32; LANES], f: impl Fn(f32, f32) -> f32) -> [f32; LANES] {
+        let mut o = [0.0f32; LANES];
+        for i in 0..LANES {
+            o[i] = f(a[i], b[i]);
+        }
+        o
+    }
+
+    #[inline(always)]
+    fn map1(a: [f32; LANES], f: impl Fn(f32) -> f32) -> [f32; LANES] {
+        let mut o = [0.0f32; LANES];
+        for i in 0..LANES {
+            o[i] = f(a[i]);
+        }
+        o
+    }
+
+    impl Simd8 for Scalar8 {
+        type F = [f32; LANES];
+        #[inline(always)]
+        unsafe fn load(p: *const f32) -> [f32; LANES] {
+            unsafe { *(p as *const [f32; LANES]) }
+        }
+        #[inline(always)]
+        unsafe fn store(p: *mut f32, v: [f32; LANES]) {
+            unsafe {
+                *(p as *mut [f32; LANES]) = v;
+            }
+        }
+        #[inline(always)]
+        unsafe fn splat(x: f32) -> [f32; LANES] {
+            [x; LANES]
+        }
+        #[inline(always)]
+        unsafe fn add(a: [f32; LANES], b: [f32; LANES]) -> [f32; LANES] {
+            map2(a, b, |x, y| x + y)
+        }
+        #[inline(always)]
+        unsafe fn sub(a: [f32; LANES], b: [f32; LANES]) -> [f32; LANES] {
+            map2(a, b, |x, y| x - y)
+        }
+        #[inline(always)]
+        unsafe fn mul(a: [f32; LANES], b: [f32; LANES]) -> [f32; LANES] {
+            map2(a, b, |x, y| x * y)
+        }
+        #[inline(always)]
+        unsafe fn div(a: [f32; LANES], b: [f32; LANES]) -> [f32; LANES] {
+            map2(a, b, |x, y| x / y)
+        }
+        #[inline(always)]
+        unsafe fn max(a: [f32; LANES], b: [f32; LANES]) -> [f32; LANES] {
+            map2(a, b, max_s)
+        }
+        #[inline(always)]
+        unsafe fn min(a: [f32; LANES], b: [f32; LANES]) -> [f32; LANES] {
+            map2(a, b, min_s)
+        }
+        #[inline(always)]
+        unsafe fn mul_add(a: [f32; LANES], b: [f32; LANES], c: [f32; LANES]) -> [f32; LANES] {
+            let mut o = [0.0f32; LANES];
+            for i in 0..LANES {
+                o[i] = a[i].mul_add(b[i], c[i]);
+            }
+            o
+        }
+        #[inline(always)]
+        unsafe fn floor(a: [f32; LANES]) -> [f32; LANES] {
+            map1(a, f32::floor)
+        }
+        #[inline(always)]
+        unsafe fn sqrt(a: [f32; LANES]) -> [f32; LANES] {
+            map1(a, f32::sqrt)
+        }
+        #[inline(always)]
+        unsafe fn abs(a: [f32; LANES]) -> [f32; LANES] {
+            map1(a, f32::abs)
+        }
+        #[inline(always)]
+        unsafe fn neg(a: [f32; LANES]) -> [f32; LANES] {
+            map1(a, |x| -x)
+        }
+        #[inline(always)]
+        unsafe fn select_gt(
+            a: [f32; LANES],
+            b: [f32; LANES],
+            x: [f32; LANES],
+            y: [f32; LANES],
+        ) -> [f32; LANES] {
+            let mut o = [0.0f32; LANES];
+            for i in 0..LANES {
+                o[i] = if a[i] > b[i] { x[i] } else { y[i] };
+            }
+            o
+        }
+        #[inline(always)]
+        unsafe fn select_neq0(
+            c: [f32; LANES],
+            x: [f32; LANES],
+            y: [f32; LANES],
+        ) -> [f32; LANES] {
+            let mut o = [0.0f32; LANES];
+            for i in 0..LANES {
+                o[i] = if c[i] != 0.0 { x[i] } else { y[i] };
+            }
+            o
+        }
+        #[inline(always)]
+        unsafe fn exp2i(k: [f32; LANES]) -> [f32; LANES] {
+            map1(k, |v| f32::from_bits(((v as i32 + 127) as u32) << 23))
+        }
+        #[inline(always)]
+        unsafe fn to_array(v: [f32; LANES]) -> [f32; LANES] {
+            v
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Generic kernel bodies
+// ---------------------------------------------------------------------------
+//
+// Each body is monomorphized once per backend inside the `#[target_feature]`
+// entry wrappers below; with every trait method `#[inline(always)]` the
+// compiler sees straight-line intrinsics and emits real vector code.
+
+#[inline(always)]
+unsafe fn apply_bin<S: Simd8>(op: BinOp, a: S::F, b: S::F) -> S::F {
+    unsafe {
+        match op {
+            BinOp::Add => S::add(a, b),
+            BinOp::Sub => S::sub(a, b),
+            BinOp::Mul => S::mul(a, b),
+            BinOp::Div => S::div(a, b),
+            BinOp::Max => S::max(a, b),
+            BinOp::Min => S::min(a, b),
+        }
+    }
+}
+
+/// Vector `fast_exp`: mirrors `kernels::fast_exp` lane-for-lane — same
+/// clamp (f32::clamp association), same `k + f` split, same Horner chain
+/// (plain mul+add, *not* FMA, to keep the scalar twin's rounding), same
+/// exponent-bit scale.
+#[inline(always)]
+unsafe fn vexp<S: Simd8>(x: S::F) -> S::F {
+    unsafe {
+        let lo = S::splat(-87.0);
+        let hi = S::splat(88.0);
+        // f32::clamp: `if x < lo { lo } else if x > hi { hi } else { x }`.
+        let x = S::select_gt(lo, x, lo, S::select_gt(x, hi, hi, x));
+        let t = S::mul(x, S::splat(std::f32::consts::LOG2_E));
+        let k = S::floor(t);
+        let f = S::sub(t, k);
+        let p = S::splat(1.525_273_4e-5);
+        let p = S::add(S::splat(1.540_353e-4), S::mul(f, p));
+        let p = S::add(S::splat(0.001_333_355_8), S::mul(f, p));
+        let p = S::add(S::splat(0.009_618_129), S::mul(f, p));
+        let p = S::add(S::splat(0.055_504_11), S::mul(f, p));
+        let p = S::add(S::splat(0.240_226_51), S::mul(f, p));
+        let p = S::add(S::splat(0.693_147_18), S::mul(f, p));
+        let p = S::add(S::splat(1.0), S::mul(f, p));
+        S::mul(S::exp2i(k), p)
+    }
+}
+
+/// Vector tanh mirroring [`tanh_s`]: both branches computed, then blended
+/// on the same `0.625 > |x|` predicate the scalar twin branches on.
+#[inline(always)]
+unsafe fn vtanh<S: Simd8>(x: S::F) -> S::F {
+    unsafe {
+        let z = S::abs(x);
+        let s = S::mul(x, x);
+        let p = S::splat(-5.704_988_7e-3);
+        let p = S::add(S::mul(p, s), S::splat(2.063_908_9e-2));
+        let p = S::add(S::mul(p, s), S::splat(-5.373_971_6e-2));
+        let p = S::add(S::mul(p, s), S::splat(1.333_144_2e-1));
+        let p = S::add(S::mul(p, s), S::splat(-3.333_328_2e-1));
+        let poly = S::add(x, S::mul(S::mul(x, s), p));
+        let e = vexp::<S>(S::add(z, z));
+        let r = S::sub(
+            S::splat(1.0),
+            S::div(S::splat(2.0), S::add(e, S::splat(1.0))),
+        );
+        let expb = S::select_gt(S::splat(0.0), x, S::neg(r), r);
+        S::select_gt(S::splat(0.625), z, poly, expb)
+    }
+}
+
+/// Vector sigmoid mirroring `unary::sigmoid_scalar`: both stable branches
+/// computed, blended on the scalar twin's `x >= 0` predicate.
+#[inline(always)]
+unsafe fn vsigmoid<S: Simd8>(x: S::F) -> S::F {
+    unsafe {
+        let one = S::splat(1.0);
+        let pos = S::div(one, S::add(one, vexp::<S>(S::neg(x))));
+        let e = vexp::<S>(x);
+        let neg = S::div(e, S::add(one, e));
+        // x >= 0 ⟺ !(0 > x): pick `neg` where 0 > x, else `pos`.
+        S::select_gt(S::splat(0.0), x, neg, pos)
+    }
+}
+
+/// Vector GELU mirroring `unary::gelu_scalar` (tanh approximation) with
+/// the identical association of every product.
+#[inline(always)]
+unsafe fn vgelu<S: Simd8>(x: S::F) -> S::F {
+    unsafe {
+        // 0.5 * x * (1.0 + tanh(C * (x + 0.044715 * x * x * x)))
+        let x3 = S::mul(S::mul(S::mul(S::splat(0.044715), x), x), x);
+        let u = S::mul(
+            S::splat(crate::ops::unary::SQRT_2_OVER_PI),
+            S::add(x, x3),
+        );
+        let t = vtanh::<S>(u);
+        S::mul(S::mul(S::splat(0.5), x), S::add(S::splat(1.0), t))
+    }
+}
+
+#[inline(always)]
+unsafe fn apply_un<S: Simd8>(op: UnOp, v: S::F) -> S::F {
+    unsafe {
+        match op {
+            UnOp::Neg => S::neg(v),
+            UnOp::Relu => S::max(v, S::splat(0.0)),
+            UnOp::Exp => vexp::<S>(v),
+            UnOp::Sqrt => S::sqrt(v),
+            UnOp::Square => S::mul(v, v),
+            UnOp::Abs => S::abs(v),
+            UnOp::Sigmoid => vsigmoid::<S>(v),
+            UnOp::Tanh => vtanh::<S>(v),
+            UnOp::Gelu => vgelu::<S>(v),
+            UnOp::AddScalar(c) => S::add(v, S::splat(c)),
+            UnOp::MulScalar(c) => S::mul(v, S::splat(c)),
+            UnOp::Clamp(lo, hi) => {
+                let l = S::splat(lo);
+                let h = S::splat(hi);
+                // f32::clamp: `if v < lo { lo } else if v > hi { hi } else { v }`.
+                S::select_gt(l, v, l, S::select_gt(v, h, h, v))
+            }
+            UnOp::LeakyRelu(a) => S::select_gt(v, S::splat(0.0), v, S::mul(S::splat(a), v)),
+        }
+    }
+}
+
+#[inline(always)]
+unsafe fn un_to_impl<S: Simd8>(op: UnOp, src: &[f32], dst: *mut f32) {
+    let n = src.len();
+    let mut i = 0;
+    unsafe {
+        while i + LANES <= n {
+            S::store(dst.add(i), apply_un::<S>(op, S::load(src.as_ptr().add(i))));
+            i += LANES;
+        }
+        while i < n {
+            *dst.add(i) = un_s(op, src[i]);
+            i += 1;
+        }
+    }
+}
+
+#[inline(always)]
+unsafe fn un_ip_impl<S: Simd8>(op: UnOp, dst: &mut [f32]) {
+    let n = dst.len();
+    let p = dst.as_mut_ptr();
+    let mut i = 0;
+    unsafe {
+        while i + LANES <= n {
+            S::store(p.add(i), apply_un::<S>(op, S::load(p.add(i))));
+            i += LANES;
+        }
+        while i < n {
+            *p.add(i) = un_s(op, *p.add(i));
+            i += 1;
+        }
+    }
+}
+
+#[inline(always)]
+unsafe fn bin_to_impl<S: Simd8>(op: BinOp, a: &[f32], b: &[f32], dst: *mut f32) {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut i = 0;
+    unsafe {
+        while i + LANES <= n {
+            let x = S::load(a.as_ptr().add(i));
+            let y = S::load(b.as_ptr().add(i));
+            S::store(dst.add(i), apply_bin::<S>(op, x, y));
+            i += LANES;
+        }
+        while i < n {
+            *dst.add(i) = bin_s(op, a[i], b[i]);
+            i += 1;
+        }
+    }
+}
+
+#[inline(always)]
+unsafe fn bin_ip_impl<S: Simd8>(op: BinOp, dst: &mut [f32], rhs: &[f32]) {
+    debug_assert_eq!(dst.len(), rhs.len());
+    let n = dst.len();
+    let p = dst.as_mut_ptr();
+    let mut i = 0;
+    unsafe {
+        while i + LANES <= n {
+            let x = S::load(p.add(i));
+            let y = S::load(rhs.as_ptr().add(i));
+            S::store(p.add(i), apply_bin::<S>(op, x, y));
+            i += LANES;
+        }
+        while i < n {
+            *p.add(i) = bin_s(op, *p.add(i), rhs[i]);
+            i += 1;
+        }
+    }
+}
+
+#[inline(always)]
+unsafe fn select_to_impl<S: Simd8>(c: &[f32], a: &[f32], b: &[f32], dst: *mut f32) {
+    debug_assert_eq!(c.len(), a.len());
+    debug_assert_eq!(c.len(), b.len());
+    let n = c.len();
+    let mut i = 0;
+    unsafe {
+        while i + LANES <= n {
+            let cv = S::load(c.as_ptr().add(i));
+            let av = S::load(a.as_ptr().add(i));
+            let bv = S::load(b.as_ptr().add(i));
+            S::store(dst.add(i), S::select_neq0(cv, av, bv));
+            i += LANES;
+        }
+        while i < n {
+            *dst.add(i) = crate::ops::kernels::select(c[i], a[i], b[i]);
+            i += 1;
+        }
+    }
+}
+
+/// In-place select: `dst` holds the condition and receives the result.
+#[inline(always)]
+unsafe fn select_ip_impl<S: Simd8>(dst: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert_eq!(dst.len(), a.len());
+    debug_assert_eq!(dst.len(), b.len());
+    let n = dst.len();
+    let p = dst.as_mut_ptr();
+    let mut i = 0;
+    unsafe {
+        while i + LANES <= n {
+            let cv = S::load(p.add(i));
+            let av = S::load(a.as_ptr().add(i));
+            let bv = S::load(b.as_ptr().add(i));
+            S::store(p.add(i), S::select_neq0(cv, av, bv));
+            i += LANES;
+        }
+        while i < n {
+            *p.add(i) = crate::ops::kernels::select(*p.add(i), a[i], b[i]);
+            i += 1;
+        }
+    }
+}
+
+/// Sum with the exact fold of `kernels::sum`: one 8-lane accumulator over
+/// whole blocks (lane j accumulates elements ≡ j mod 8), a scalar tail,
+/// then `lanes.sum() + tail` — bit-identical to the seed scalar kernel.
+#[inline(always)]
+unsafe fn sum_impl<S: Simd8>(xs: &[f32]) -> f32 {
+    let n = xs.len();
+    let mut i = 0;
+    unsafe {
+        let mut vacc = S::splat(0.0);
+        while i + LANES <= n {
+            vacc = S::add(vacc, S::load(xs.as_ptr().add(i)));
+            i += LANES;
+        }
+        let mut tail = 0.0f32;
+        for &v in &xs[i..] {
+            tail += v;
+        }
+        S::to_array(vacc).iter().sum::<f32>() + tail
+    }
+}
+
+/// Dot product with the exact fold of `kernels::dot` (plain mul+add per
+/// lane — not FMA — so the bits match the seed scalar kernel).
+#[inline(always)]
+unsafe fn dot_impl<S: Simd8>(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut i = 0;
+    unsafe {
+        let mut vacc = S::splat(0.0);
+        while i + LANES <= n {
+            let x = S::load(a.as_ptr().add(i));
+            let y = S::load(b.as_ptr().add(i));
+            vacc = S::add(vacc, S::mul(x, y));
+            i += LANES;
+        }
+        let mut tail = 0.0f32;
+        while i < n {
+            tail += a[i] * b[i];
+            i += 1;
+        }
+        S::to_array(vacc).iter().sum::<f32>() + tail
+    }
+}
+
+/// Max of `xs[i] * scale` with a fixed 8-lane fold: blockwise lane maxes,
+/// sequential lane fold, scalar tail. `scale = 1.0` is the plain max
+/// (`v * 1.0` is bit-exact), which is what keeps the fused scaled-softmax
+/// prologue bitwise-equal to `mul_scalar` + softmax.
+#[inline(always)]
+unsafe fn max_scaled_impl<S: Simd8>(xs: &[f32], scale: f32) -> f32 {
+    let n = xs.len();
+    let mut i = 0;
+    unsafe {
+        let sv = S::splat(scale);
+        let mut vacc = S::splat(f32::NEG_INFINITY);
+        while i + LANES <= n {
+            vacc = S::max(vacc, S::mul(S::load(xs.as_ptr().add(i)), sv));
+            i += LANES;
+        }
+        let mut m = f32::NEG_INFINITY;
+        for &a in S::to_array(vacc).iter() {
+            m = max_s(m, a);
+        }
+        while i < n {
+            m = max_s(m, xs[i] * scale);
+            i += 1;
+        }
+        m
+    }
+}
+
+/// Min with the same fixed 8-lane fold shape as [`max_scaled_impl`].
+#[inline(always)]
+unsafe fn min_impl<S: Simd8>(xs: &[f32]) -> f32 {
+    let n = xs.len();
+    let mut i = 0;
+    unsafe {
+        let mut vacc = S::splat(f32::INFINITY);
+        while i + LANES <= n {
+            vacc = S::min(vacc, S::load(xs.as_ptr().add(i)));
+            i += LANES;
+        }
+        let mut m = f32::INFINITY;
+        for &a in S::to_array(vacc).iter() {
+            m = min_s(m, a);
+        }
+        while i < n {
+            m = min_s(m, xs[i]);
+            i += 1;
+        }
+        m
+    }
+}
+
+/// `Σ fast_exp(v − m)` with the fixed 8-lane fold (logsumexp inner sum).
+#[inline(always)]
+unsafe fn sum_exp_sub_impl<S: Simd8>(xs: &[f32], m: f32) -> f32 {
+    let n = xs.len();
+    let mut i = 0;
+    unsafe {
+        let mv = S::splat(m);
+        let mut vacc = S::splat(0.0);
+        while i + LANES <= n {
+            vacc = S::add(vacc, vexp::<S>(S::sub(S::load(xs.as_ptr().add(i)), mv)));
+            i += LANES;
+        }
+        let mut tail = 0.0f32;
+        while i < n {
+            tail += crate::ops::kernels::fast_exp(xs[i] - m);
+            i += 1;
+        }
+        S::to_array(vacc).iter().sum::<f32>() + tail
+    }
+}
+
+/// Row exp pass: `dst[i] = fast_exp(src[i] * scale − m)`. `scale = 1.0`
+/// is the plain shifted-exp row (bit-exact, see [`max_scaled_impl`]).
+#[inline(always)]
+unsafe fn exp_scaled_sub_to_impl<S: Simd8>(src: &[f32], scale: f32, m: f32, dst: *mut f32) {
+    let n = src.len();
+    let mut i = 0;
+    unsafe {
+        let sv = S::splat(scale);
+        let mv = S::splat(m);
+        while i + LANES <= n {
+            let v = S::load(src.as_ptr().add(i));
+            S::store(dst.add(i), vexp::<S>(S::sub(S::mul(v, sv), mv)));
+            i += LANES;
+        }
+        while i < n {
+            *dst.add(i) = crate::ops::kernels::fast_exp(src[i] * scale - m);
+            i += 1;
+        }
+    }
+}
+
+/// `dst[i] += s * x[i]` with the exact association of `kernels::axpy`
+/// (plain mul+add — bit-identical to the seed scalar kernel).
+#[inline(always)]
+unsafe fn axpy_impl<S: Simd8>(s: f32, x: &[f32], dst: &mut [f32]) {
+    debug_assert_eq!(x.len(), dst.len());
+    let n = dst.len();
+    let p = dst.as_mut_ptr();
+    let mut i = 0;
+    unsafe {
+        let sv = S::splat(s);
+        while i + LANES <= n {
+            let o = S::load(p.add(i));
+            let v = S::load(x.as_ptr().add(i));
+            S::store(p.add(i), S::add(o, S::mul(sv, v)));
+            i += LANES;
+        }
+        while i < n {
+            *p.add(i) += s * x[i];
+            i += 1;
+        }
+    }
+}
+
+/// SGEMM micro-kernel: a full 4×16 register tile, `C += Aᵖ·Bᵖ` over a
+/// packed-A column stream (MR-interleaved, 4 floats per k step) and a
+/// packed-B row block (16 contiguous floats per k step, rows `ldb`
+/// apart — the row stride of the caller's packed kc×nc block). 8
+/// accumulator vectors + 2 B vectors + 1 A broadcast stay in registers;
+/// FMA on the vector paths, `f32::mul_add` on the scalar path (both
+/// correctly rounded ⇒ bit-equal).
+#[inline(always)]
+unsafe fn sgemm_micro_4x16_impl<S: Simd8>(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    ldb: usize,
+    c: *mut f32,
+    ldc: usize,
+) {
+    unsafe {
+        let mut acc00 = S::splat(0.0);
+        let mut acc01 = S::splat(0.0);
+        let mut acc10 = S::splat(0.0);
+        let mut acc11 = S::splat(0.0);
+        let mut acc20 = S::splat(0.0);
+        let mut acc21 = S::splat(0.0);
+        let mut acc30 = S::splat(0.0);
+        let mut acc31 = S::splat(0.0);
+        let apreq = ap.as_ptr();
+        let bpreq = bp.as_ptr();
+        for p in 0..kc {
+            let b0 = S::load(bpreq.add(p * ldb));
+            let b1 = S::load(bpreq.add(p * ldb + 8));
+            let a0 = S::splat(*apreq.add(p * 4));
+            acc00 = S::mul_add(a0, b0, acc00);
+            acc01 = S::mul_add(a0, b1, acc01);
+            let a1 = S::splat(*apreq.add(p * 4 + 1));
+            acc10 = S::mul_add(a1, b0, acc10);
+            acc11 = S::mul_add(a1, b1, acc11);
+            let a2 = S::splat(*apreq.add(p * 4 + 2));
+            acc20 = S::mul_add(a2, b0, acc20);
+            acc21 = S::mul_add(a2, b1, acc21);
+            let a3 = S::splat(*apreq.add(p * 4 + 3));
+            acc30 = S::mul_add(a3, b0, acc30);
+            acc31 = S::mul_add(a3, b1, acc31);
+        }
+        let rows = [
+            (acc00, acc01),
+            (acc10, acc11),
+            (acc20, acc21),
+            (acc30, acc31),
+        ];
+        for (i, (lo, hi)) in rows.iter().enumerate() {
+            let crow = c.add(i * ldc);
+            S::store(crow, S::add(S::load(crow), *lo));
+            S::store(crow.add(8), S::add(S::load(crow.add(8)), *hi));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 backend (x86_64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{Simd8, LANES};
+    use std::arch::x86_64::*;
+
+    #[derive(Clone, Copy)]
+    pub(super) struct Avx2;
+
+    impl Simd8 for Avx2 {
+        type F = __m256;
+        #[inline(always)]
+        unsafe fn load(p: *const f32) -> __m256 {
+            unsafe { _mm256_loadu_ps(p) }
+        }
+        #[inline(always)]
+        unsafe fn store(p: *mut f32, v: __m256) {
+            unsafe { _mm256_storeu_ps(p, v) }
+        }
+        #[inline(always)]
+        unsafe fn splat(x: f32) -> __m256 {
+            unsafe { _mm256_set1_ps(x) }
+        }
+        #[inline(always)]
+        unsafe fn add(a: __m256, b: __m256) -> __m256 {
+            unsafe { _mm256_add_ps(a, b) }
+        }
+        #[inline(always)]
+        unsafe fn sub(a: __m256, b: __m256) -> __m256 {
+            unsafe { _mm256_sub_ps(a, b) }
+        }
+        #[inline(always)]
+        unsafe fn mul(a: __m256, b: __m256) -> __m256 {
+            unsafe { _mm256_mul_ps(a, b) }
+        }
+        #[inline(always)]
+        unsafe fn div(a: __m256, b: __m256) -> __m256 {
+            unsafe { _mm256_div_ps(a, b) }
+        }
+        #[inline(always)]
+        unsafe fn max(a: __m256, b: __m256) -> __m256 {
+            // maxps is exactly `if a > b { a } else { b }` (NaN ⇒ b).
+            unsafe { _mm256_max_ps(a, b) }
+        }
+        #[inline(always)]
+        unsafe fn min(a: __m256, b: __m256) -> __m256 {
+            unsafe { _mm256_min_ps(a, b) }
+        }
+        #[inline(always)]
+        unsafe fn mul_add(a: __m256, b: __m256, c: __m256) -> __m256 {
+            unsafe { _mm256_fmadd_ps(a, b, c) }
+        }
+        #[inline(always)]
+        unsafe fn floor(a: __m256) -> __m256 {
+            unsafe { _mm256_floor_ps(a) }
+        }
+        #[inline(always)]
+        unsafe fn sqrt(a: __m256) -> __m256 {
+            unsafe { _mm256_sqrt_ps(a) }
+        }
+        #[inline(always)]
+        unsafe fn abs(a: __m256) -> __m256 {
+            unsafe { _mm256_andnot_ps(_mm256_set1_ps(-0.0), a) }
+        }
+        #[inline(always)]
+        unsafe fn neg(a: __m256) -> __m256 {
+            unsafe { _mm256_xor_ps(_mm256_set1_ps(-0.0), a) }
+        }
+        #[inline(always)]
+        unsafe fn select_gt(a: __m256, b: __m256, x: __m256, y: __m256) -> __m256 {
+            unsafe {
+                let m = _mm256_cmp_ps::<_CMP_GT_OQ>(a, b);
+                _mm256_blendv_ps(y, x, m)
+            }
+        }
+        #[inline(always)]
+        unsafe fn select_neq0(c: __m256, x: __m256, y: __m256) -> __m256 {
+            unsafe {
+                let m = _mm256_cmp_ps::<_CMP_NEQ_UQ>(c, _mm256_setzero_ps());
+                _mm256_blendv_ps(y, x, m)
+            }
+        }
+        #[inline(always)]
+        unsafe fn exp2i(k: __m256) -> __m256 {
+            unsafe {
+                let ki = _mm256_cvtps_epi32(k);
+                let bits = _mm256_slli_epi32::<23>(_mm256_add_epi32(ki, _mm256_set1_epi32(127)));
+                _mm256_castsi256_ps(bits)
+            }
+        }
+        #[inline(always)]
+        unsafe fn to_array(v: __m256) -> [f32; LANES] {
+            let mut out = [0.0f32; LANES];
+            unsafe { _mm256_storeu_ps(out.as_mut_ptr(), v) };
+            out
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON backend (aarch64): an 8-lane block is a pair of float32x4_t.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{Simd8, LANES};
+    use std::arch::aarch64::*;
+
+    #[derive(Clone, Copy)]
+    pub(super) struct Neon;
+
+    type F2 = (float32x4_t, float32x4_t);
+
+    impl Simd8 for Neon {
+        type F = F2;
+        #[inline(always)]
+        unsafe fn load(p: *const f32) -> F2 {
+            unsafe { (vld1q_f32(p), vld1q_f32(p.add(4))) }
+        }
+        #[inline(always)]
+        unsafe fn store(p: *mut f32, v: F2) {
+            unsafe {
+                vst1q_f32(p, v.0);
+                vst1q_f32(p.add(4), v.1);
+            }
+        }
+        #[inline(always)]
+        unsafe fn splat(x: f32) -> F2 {
+            unsafe { (vdupq_n_f32(x), vdupq_n_f32(x)) }
+        }
+        #[inline(always)]
+        unsafe fn add(a: F2, b: F2) -> F2 {
+            unsafe { (vaddq_f32(a.0, b.0), vaddq_f32(a.1, b.1)) }
+        }
+        #[inline(always)]
+        unsafe fn sub(a: F2, b: F2) -> F2 {
+            unsafe { (vsubq_f32(a.0, b.0), vsubq_f32(a.1, b.1)) }
+        }
+        #[inline(always)]
+        unsafe fn mul(a: F2, b: F2) -> F2 {
+            unsafe { (vmulq_f32(a.0, b.0), vmulq_f32(a.1, b.1)) }
+        }
+        #[inline(always)]
+        unsafe fn div(a: F2, b: F2) -> F2 {
+            unsafe { (vdivq_f32(a.0, b.0), vdivq_f32(a.1, b.1)) }
+        }
+        #[inline(always)]
+        unsafe fn max(a: F2, b: F2) -> F2 {
+            // vmaxq would propagate NaN from either side; compare+select
+            // reproduces `if a > b { a } else { b }` (NaN ⇒ b) instead.
+            unsafe {
+                let m0 = vcgtq_f32(a.0, b.0);
+                let m1 = vcgtq_f32(a.1, b.1);
+                (vbslq_f32(m0, a.0, b.0), vbslq_f32(m1, a.1, b.1))
+            }
+        }
+        #[inline(always)]
+        unsafe fn min(a: F2, b: F2) -> F2 {
+            unsafe {
+                let m0 = vcltq_f32(a.0, b.0);
+                let m1 = vcltq_f32(a.1, b.1);
+                (vbslq_f32(m0, a.0, b.0), vbslq_f32(m1, a.1, b.1))
+            }
+        }
+        #[inline(always)]
+        unsafe fn mul_add(a: F2, b: F2, c: F2) -> F2 {
+            // vfmaq_f32(acc, x, y) = acc + x*y
+            unsafe { (vfmaq_f32(c.0, a.0, b.0), vfmaq_f32(c.1, a.1, b.1)) }
+        }
+        #[inline(always)]
+        unsafe fn floor(a: F2) -> F2 {
+            unsafe { (vrndmq_f32(a.0), vrndmq_f32(a.1)) }
+        }
+        #[inline(always)]
+        unsafe fn sqrt(a: F2) -> F2 {
+            unsafe { (vsqrtq_f32(a.0), vsqrtq_f32(a.1)) }
+        }
+        #[inline(always)]
+        unsafe fn abs(a: F2) -> F2 {
+            unsafe { (vabsq_f32(a.0), vabsq_f32(a.1)) }
+        }
+        #[inline(always)]
+        unsafe fn neg(a: F2) -> F2 {
+            unsafe { (vnegq_f32(a.0), vnegq_f32(a.1)) }
+        }
+        #[inline(always)]
+        unsafe fn select_gt(a: F2, b: F2, x: F2, y: F2) -> F2 {
+            unsafe {
+                let m0 = vcgtq_f32(a.0, b.0);
+                let m1 = vcgtq_f32(a.1, b.1);
+                (vbslq_f32(m0, x.0, y.0), vbslq_f32(m1, x.1, y.1))
+            }
+        }
+        #[inline(always)]
+        unsafe fn select_neq0(c: F2, x: F2, y: F2) -> F2 {
+            unsafe {
+                let z = vdupq_n_f32(0.0);
+                // eq-mask picks the else-branch; NaN compares not-equal.
+                let e0 = vceqq_f32(c.0, z);
+                let e1 = vceqq_f32(c.1, z);
+                (vbslq_f32(e0, y.0, x.0), vbslq_f32(e1, y.1, x.1))
+            }
+        }
+        #[inline(always)]
+        unsafe fn exp2i(k: F2) -> F2 {
+            unsafe {
+                let b127 = vdupq_n_s32(127);
+                let k0 = vshlq_n_s32::<23>(vaddq_s32(vcvtq_s32_f32(k.0), b127));
+                let k1 = vshlq_n_s32::<23>(vaddq_s32(vcvtq_s32_f32(k.1), b127));
+                (vreinterpretq_f32_s32(k0), vreinterpretq_f32_s32(k1))
+            }
+        }
+        #[inline(always)]
+        unsafe fn to_array(v: F2) -> [f32; LANES] {
+            let mut out = [0.0f32; LANES];
+            unsafe {
+                vst1q_f32(out.as_mut_ptr(), v.0);
+                vst1q_f32(out.as_mut_ptr().add(4), v.1);
+            }
+            out
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch: one `#[target_feature]` entry per kernel per backend
+// ---------------------------------------------------------------------------
+
+/// Generates, for each listed kernel: an AVX2 entry (monomorphized inside
+/// `#[target_feature(enable = "avx2,fma")]` so the generic body compiles
+/// to real vector code), a NEON entry, and the runtime dispatcher.
+macro_rules! dispatch_kernels {
+    ($(fn $name:ident($($arg:ident: $ty:ty),*) $(-> $ret:ty)? = $impl_fn:ident;)*) => {
+        #[cfg(target_arch = "x86_64")]
+        mod avx2_entry {
+            use super::*;
+            $(
+                #[target_feature(enable = "avx2,fma")]
+                pub(super) unsafe fn $name($($arg: $ty),*) $(-> $ret)? {
+                    unsafe { $impl_fn::<avx2::Avx2>($($arg),*) }
+                }
+            )*
+        }
+        #[cfg(target_arch = "aarch64")]
+        mod neon_entry {
+            use super::*;
+            $(
+                #[target_feature(enable = "neon")]
+                pub(super) unsafe fn $name($($arg: $ty),*) $(-> $ret)? {
+                    unsafe { $impl_fn::<neon::Neon>($($arg),*) }
+                }
+            )*
+        }
+        $(
+            #[inline]
+            pub(crate) unsafe fn $name($($arg: $ty),*) $(-> $ret)? {
+                match path() {
+                    #[cfg(target_arch = "x86_64")]
+                    SimdPath::Avx2 => unsafe { avx2_entry::$name($($arg),*) },
+                    #[cfg(target_arch = "aarch64")]
+                    SimdPath::Neon => unsafe { neon_entry::$name($($arg),*) },
+                    _ => unsafe { $impl_fn::<scalar8::Scalar8>($($arg),*) },
+                }
+            }
+        )*
+    };
+}
+
+dispatch_kernels! {
+    fn un_to(op: UnOp, src: &[f32], dst: *mut f32) = un_to_impl;
+    fn bin_to(op: BinOp, a: &[f32], b: &[f32], dst: *mut f32) = bin_to_impl;
+    fn select_to(c: &[f32], a: &[f32], b: &[f32], dst: *mut f32) = select_to_impl;
+    fn exp_scaled_sub_to(src: &[f32], scale: f32, m: f32, dst: *mut f32) = exp_scaled_sub_to_impl;
+    fn sgemm_micro_4x16(kc: usize, ap: &[f32], bp: &[f32], ldb: usize, c: *mut f32, ldc: usize) = sgemm_micro_4x16_impl;
+    fn un_ip_d(op: UnOp, dst: &mut [f32]) = un_ip_impl;
+    fn bin_ip_d(op: BinOp, dst: &mut [f32], rhs: &[f32]) = bin_ip_impl;
+    fn select_ip_d(dst: &mut [f32], a: &[f32], b: &[f32]) = select_ip_impl;
+    fn sum_d(xs: &[f32]) -> f32 = sum_impl;
+    fn dot_d(a: &[f32], b: &[f32]) -> f32 = dot_impl;
+    fn max_scaled_d(xs: &[f32], scale: f32) -> f32 = max_scaled_impl;
+    fn min_d(xs: &[f32]) -> f32 = min_impl;
+    fn sum_exp_sub_d(xs: &[f32], m: f32) -> f32 = sum_exp_sub_impl;
+    fn axpy_d(s: f32, x: &[f32], dst: &mut [f32]) = axpy_impl;
+}
+
+// Safe wrappers for the slice-only kernels (the `*_to` raw-pointer entries
+// above stay unsafe: callers hand them possibly-uninitialized bands).
+
+/// In-place unary block kernel: `dst[i] = op(dst[i])`.
+#[inline]
+pub(crate) fn un_ip(op: UnOp, dst: &mut [f32]) {
+    unsafe { un_ip_d(op, dst) }
+}
+
+/// In-place binary block kernel: `dst[i] = op(dst[i], rhs[i])`.
+#[inline]
+pub(crate) fn bin_ip(op: BinOp, dst: &mut [f32], rhs: &[f32]) {
+    unsafe { bin_ip_d(op, dst, rhs) }
+}
+
+/// In-place select: `dst[i] = if dst[i] != 0.0 { a[i] } else { b[i] }`.
+#[inline]
+pub(crate) fn select_ip(dst: &mut [f32], a: &[f32], b: &[f32]) {
+    unsafe { select_ip_d(dst, a, b) }
+}
+
+/// Sum — bit-identical to the seed `kernels::sum` fold on every path.
+#[inline]
+pub(crate) fn sum(xs: &[f32]) -> f32 {
+    unsafe { sum_d(xs) }
+}
+
+/// Dot — bit-identical to the seed `kernels::dot` fold on every path.
+#[inline]
+pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    unsafe { dot_d(a, b) }
+}
+
+/// Max of `xs[i] * scale` (fixed 8-lane fold; the scaled-softmax prologue).
+#[inline]
+pub(crate) fn max_scaled(xs: &[f32], scale: f32) -> f32 {
+    unsafe { max_scaled_d(xs, scale) }
+}
+
+/// Max element. Routed through [`max_scaled`] with `scale = 1.0` (bit-exact
+/// multiply) so the plain and scaled row-max folds stay bitwise-equal.
+#[inline]
+pub(crate) fn max(xs: &[f32]) -> f32 {
+    unsafe { max_scaled_d(xs, 1.0) }
+}
+
+/// Min element (same fixed fold shape as [`max`]).
+#[inline]
+pub(crate) fn min(xs: &[f32]) -> f32 {
+    unsafe { min_d(xs) }
+}
+
+/// `Σ fast_exp(xs[i] − m)` — the logsumexp inner sum.
+#[inline]
+pub(crate) fn sum_exp_sub(xs: &[f32], m: f32) -> f32 {
+    unsafe { sum_exp_sub_d(xs, m) }
+}
+
+/// `dst[i] += s * x[i]` — bit-identical to the seed `kernels::axpy`.
+#[inline]
+pub(crate) fn axpy(s: f32, x: &[f32], dst: &mut [f32]) {
+    unsafe { axpy_d(s, x, dst) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    /// Serializes tests that toggle the global path.
+    static TLOCK: Mutex<()> = Mutex::new(());
+
+    fn data(n: usize) -> Vec<f32> {
+        // Deterministic mix of signs, magnitudes, zeros and exact values.
+        (0..n)
+            .map(|i| {
+                let x = (i as f32) * 0.731 - (n as f32) * 0.3;
+                if i % 11 == 0 {
+                    0.0
+                } else {
+                    x
+                }
+            })
+            .collect()
+    }
+
+    fn all_unops() -> Vec<UnOp> {
+        vec![
+            UnOp::Neg,
+            UnOp::Relu,
+            UnOp::Exp,
+            UnOp::Square,
+            UnOp::Abs,
+            UnOp::Sigmoid,
+            UnOp::Tanh,
+            UnOp::Gelu,
+            UnOp::AddScalar(0.37),
+            UnOp::MulScalar(-1.25),
+            UnOp::Clamp(-2.0, 3.0),
+            UnOp::LeakyRelu(0.01),
+        ]
+    }
+
+    #[test]
+    fn active_path_matches_forced_scalar_bitwise() {
+        let _g = TLOCK.lock().unwrap();
+        let was = path();
+        let n = 37; // exercises both the block loop and the tail
+        let src = data(n);
+        for op in all_unops() {
+            set_simd_enabled(true);
+            let mut on = vec![0.0f32; n];
+            unsafe { un_to(op, &src, on.as_mut_ptr()) };
+            set_simd_enabled(false);
+            let mut off = vec![0.0f32; n];
+            unsafe { un_to(op, &src, off.as_mut_ptr()) };
+            for i in 0..n {
+                assert_eq!(on[i].to_bits(), off[i].to_bits(), "{op:?} i={i}");
+            }
+        }
+        // sqrt separately on non-negative inputs (NaN payloads of
+        // sqrt(negative) are hardware-defined and may differ).
+        let pos: Vec<f32> = src.iter().map(|v| v.abs()).collect();
+        set_simd_enabled(true);
+        let mut on = vec![0.0f32; n];
+        unsafe { un_to(UnOp::Sqrt, &pos, on.as_mut_ptr()) };
+        set_simd_enabled(false);
+        let mut off = vec![0.0f32; n];
+        unsafe { un_to(UnOp::Sqrt, &pos, off.as_mut_ptr()) };
+        assert_eq!(on, off);
+
+        let b: Vec<f32> = data(n).iter().rev().cloned().collect();
+        for op in [BinOp::Add, BinOp::Sub, BinOp::Mul, BinOp::Div, BinOp::Max, BinOp::Min] {
+            set_simd_enabled(true);
+            let mut on = vec![0.0f32; n];
+            unsafe { bin_to(op, &src, &b, on.as_mut_ptr()) };
+            set_simd_enabled(false);
+            let mut off = vec![0.0f32; n];
+            unsafe { bin_to(op, &src, &b, off.as_mut_ptr()) };
+            for i in 0..n {
+                assert_eq!(on[i].to_bits(), off[i].to_bits(), "{op:?} i={i}");
+            }
+        }
+        for on_now in [true, false] {
+            set_simd_enabled(on_now);
+            let s1 = sum(&src);
+            let d1 = dot(&src, &b);
+            let m1 = max(&src);
+            let mn1 = min(&src);
+            let se1 = sum_exp_sub(&src, m1);
+            set_simd_enabled(!on_now);
+            assert_eq!(s1.to_bits(), sum(&src).to_bits());
+            assert_eq!(d1.to_bits(), dot(&src, &b).to_bits());
+            assert_eq!(m1.to_bits(), max(&src).to_bits());
+            assert_eq!(mn1.to_bits(), min(&src).to_bits());
+            assert_eq!(se1.to_bits(), sum_exp_sub(&src, m1).to_bits());
+        }
+        set_simd_enabled(was.is_vector());
+    }
+
+    #[test]
+    fn exp_kernel_is_fast_exp_lane_for_lane() {
+        let _g = TLOCK.lock().unwrap();
+        let src = data(41);
+        let mut out = vec![0.0f32; src.len()];
+        unsafe { un_to(UnOp::Exp, &src, out.as_mut_ptr()) };
+        for (i, &v) in src.iter().enumerate() {
+            assert_eq!(
+                out[i].to_bits(),
+                crate::ops::kernels::fast_exp(v).to_bits(),
+                "i={i} v={v}"
+            );
+        }
+    }
+
+    #[test]
+    fn sum_and_max_match_seed_scalar_folds() {
+        let _g = TLOCK.lock().unwrap();
+        let xs = data(100);
+        // The seed `kernels::sum` fold, written out longhand.
+        let mut acc = [0.0f32; 8];
+        let chunks = xs.chunks_exact(8);
+        let rem = chunks.remainder();
+        for c in chunks {
+            for i in 0..8 {
+                acc[i] += c[i];
+            }
+        }
+        let mut tail = 0.0;
+        for &v in rem {
+            tail += v;
+        }
+        let want = acc.iter().sum::<f32>() + tail;
+        assert_eq!(sum(&xs).to_bits(), want.to_bits());
+        // max_scaled(·, 1.0) must equal max of the pre-scaled values.
+        let scaled: Vec<f32> = xs.iter().map(|&v| v * 0.37).collect();
+        assert_eq!(
+            max_scaled(&xs, 0.37).to_bits(),
+            max(&scaled).to_bits()
+        );
+    }
+
+    #[test]
+    fn tanh_kernel_accuracy() {
+        let mut x = -6.0f32;
+        while x < 6.0 {
+            let want = (x as f64).tanh();
+            let got = tanh_s(x) as f64;
+            assert!(
+                (got - want).abs() < 1e-6,
+                "x={x} got={got} want={want}"
+            );
+            x += 0.0173;
+        }
+        assert_eq!(tanh_s(0.0), 0.0);
+        assert_eq!(tanh_s(20.0), 1.0);
+        assert_eq!(tanh_s(-20.0), -1.0);
+    }
+
+    #[test]
+    fn sgemm_micro_tile_matches_mul_add_reference() {
+        let _g = TLOCK.lock().unwrap();
+        let kc = 7;
+        let ap: Vec<f32> = (0..kc * 4).map(|i| (i as f32) * 0.31 - 2.0).collect();
+        let bp: Vec<f32> = (0..kc * 16).map(|i| (i as f32) * 0.17 - 5.0).collect();
+        let ldc = 20;
+        let mut c = vec![1.0f32; 4 * ldc];
+        unsafe { sgemm_micro_4x16(kc, &ap, &bp, 16, c.as_mut_ptr(), ldc) };
+        for i in 0..4 {
+            for j in 0..16 {
+                let mut acc = 0.0f32;
+                for p in 0..kc {
+                    acc = ap[p * 4 + i].mul_add(bp[p * 16 + j], acc);
+                }
+                let want = 1.0 + acc;
+                assert_eq!(
+                    c[i * ldc + j].to_bits(),
+                    want.to_bits(),
+                    "i={i} j={j}"
+                );
+            }
+            // columns beyond the tile untouched
+            for j in 16..ldc {
+                assert_eq!(c[i * ldc + j], 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn select_kernels_match_scalar_select() {
+        let _g = TLOCK.lock().unwrap();
+        let n = 19;
+        let c: Vec<f32> = (0..n).map(|i| (i % 3) as f32 - 1.0).collect();
+        let a = data(n);
+        let b: Vec<f32> = data(n).iter().map(|v| v + 1.0).collect();
+        let mut out = vec![0.0f32; n];
+        unsafe { select_to(&c, &a, &b, out.as_mut_ptr()) };
+        for i in 0..n {
+            let want = crate::ops::kernels::select(c[i], a[i], b[i]);
+            assert_eq!(out[i].to_bits(), want.to_bits(), "i={i}");
+        }
+        let mut ip = c.clone();
+        select_ip(&mut ip, &a, &b);
+        assert_eq!(ip, out);
+    }
+
+    #[test]
+    fn toggle_and_report_names() {
+        let _g = TLOCK.lock().unwrap();
+        let was = path();
+        set_simd_enabled(false);
+        assert_eq!(path(), SimdPath::Scalar);
+        assert!(!path().is_vector());
+        assert_eq!(path().name(), "scalar");
+        set_simd_enabled(true);
+        #[cfg(target_arch = "x86_64")]
+        assert!(matches!(path(), SimdPath::Avx2 | SimdPath::Scalar));
+        #[cfg(target_arch = "aarch64")]
+        assert_eq!(path(), SimdPath::Neon);
+        set_simd_enabled(was.is_vector());
+    }
+}

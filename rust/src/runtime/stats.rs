@@ -39,6 +39,7 @@ thread_local! {
     static PROGRAM_CACHE_HITS: Cell<u64> = const { Cell::new(0) };
     static PROGRAM_CACHE_MISSES: Cell<u64> = const { Cell::new(0) };
     static FUSION_BAILOUTS: Cell<u64> = const { Cell::new(0) };
+    static SIMD_BLOCKS: Cell<u64> = const { Cell::new(0) };
 }
 
 /// Point-in-time snapshot of this thread's execution counters.
@@ -69,6 +70,12 @@ pub struct ExecStats {
     /// fused-input or stack-depth caps, counted per eval: a cached plan
     /// containing degraded regions re-counts them on every execution.
     pub fusion_bailouts: u64,
+    /// Full 8-lane vector blocks processed by the SIMD-funneled kernels
+    /// (`ops::exec::binary_simd` / `unary_simd` / row kernels), counted
+    /// at dispatch on the calling thread. Zero when the scalar path is
+    /// active (`MINITENSOR_SIMD=off` or no AVX2/NEON) — the quickest way
+    /// to confirm which path a bench actually ran.
+    pub simd_blocks: u64,
 }
 
 impl ExecStats {
@@ -83,6 +90,7 @@ impl ExecStats {
             program_cache_hits: self.program_cache_hits - since.program_cache_hits,
             program_cache_misses: self.program_cache_misses - since.program_cache_misses,
             fusion_bailouts: self.fusion_bailouts - since.fusion_bailouts,
+            simd_blocks: self.simd_blocks - since.simd_blocks,
         }
     }
 }
@@ -98,6 +106,7 @@ pub fn snapshot() -> ExecStats {
         program_cache_hits: PROGRAM_CACHE_HITS.with(Cell::get),
         program_cache_misses: PROGRAM_CACHE_MISSES.with(Cell::get),
         fusion_bailouts: FUSION_BAILOUTS.with(Cell::get),
+        simd_blocks: SIMD_BLOCKS.with(Cell::get),
     }
 }
 
@@ -142,18 +151,28 @@ pub(crate) fn record_fusion_bailouts(n: u64) {
     FUSION_BAILOUTS.with(|c| c.set(c.get() + n));
 }
 
-/// Render the engine report block: worker-thread count, dispatch
-/// counters, and graph-fusion totals for this thread.
+/// Vector blocks processed by a SIMD-funneled dispatch (`n / LANES` full
+/// 8-lane blocks; the scalar tail is not counted). Recorded on the
+/// dispatching thread, and only when a vector path is active.
+pub(crate) fn record_simd_blocks(blocks: u64) {
+    SIMD_BLOCKS.with(|c| c.set(c.get() + blocks));
+}
+
+/// Render the engine report block: worker-thread count, detected SIMD
+/// path, dispatch counters, and graph-fusion totals for this thread.
 pub fn report() -> String {
     let s = snapshot();
     let saved = s.fused_ops.saturating_sub(s.fused_kernels);
     format!(
-        "engine: threads={} dispatches={} output_allocs={}\n\
+        "engine: threads={} simd={} lanes={} dispatches={} output_allocs={} simd_blocks={}\n\
          graph:  fused_kernels={} fused_ops={} intermediates_avoided={} fused_elems={}\n\
          cache:  program_hits={} program_misses={} fusion_bailouts={}\n",
         super::parallel::num_threads(),
+        super::simd::path().name(),
+        super::simd::LANES,
         s.exec_dispatches,
         s.output_allocs,
+        s.simd_blocks,
         s.fused_kernels,
         s.fused_ops,
         saved,
@@ -177,6 +196,7 @@ mod tests {
         record_program_cache_hit();
         record_program_cache_miss();
         record_fusion_bailout();
+        record_simd_blocks(4);
         let b = snapshot();
         let d = b.delta(&a);
         assert_eq!(d.exec_dispatches, 1);
@@ -187,12 +207,15 @@ mod tests {
         assert_eq!(d.program_cache_hits, 1);
         assert_eq!(d.program_cache_misses, 1);
         assert_eq!(d.fusion_bailouts, 1);
+        assert_eq!(d.simd_blocks, 4);
     }
 
     #[test]
     fn report_mentions_threads_and_fusion() {
         let r = report();
         assert!(r.contains("threads="));
+        assert!(r.contains("simd="));
+        assert!(r.contains("lanes=8"));
         assert!(r.contains("fused_kernels="));
         assert!(r.contains("program_hits="));
         assert!(r.contains("fusion_bailouts="));

@@ -1,0 +1,278 @@
+//! SIMD ↔ scalar parity suite: every op family must produce **bitwise**
+//! identical results with the vector path on and off
+//! (`simd::set_simd_enabled`, the programmatic twin of
+//! `MINITENSOR_SIMD=off`), at 1 and at 4 worker threads. This is the
+//! determinism contract the library documents: scalar ≡ SIMD ≡ any
+//! thread count, bit for bit — vectorization is observable only in
+//! speed, never in results.
+//!
+//! Both knobs are process-global, so every test serializes on one lock
+//! and restores the entry state on exit (the same discipline as the
+//! thread-flipping properties in `proptests.rs`).
+
+use minitensor::autograd::{gradcheck, Var};
+use minitensor::data::Rng;
+use minitensor::ops::softmax::softmax_scaled_lastdim;
+use minitensor::runtime::{parallel, simd};
+use minitensor::tensor::Tensor;
+
+/// Serialize tests that flip the process-global SIMD path / thread count.
+fn knob_lock() -> std::sync::MutexGuard<'static, ()> {
+    use std::sync::{Mutex, OnceLock};
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// Saved knob state, restored on drop so a failing assert can't leak a
+/// scalar path or 4-thread setting into the next test.
+struct KnobGuard {
+    _lock: std::sync::MutexGuard<'static, ()>,
+    threads: usize,
+    vector: bool,
+}
+
+impl KnobGuard {
+    fn new() -> KnobGuard {
+        let lock = knob_lock();
+        KnobGuard {
+            _lock: lock,
+            threads: parallel::num_threads(),
+            vector: simd::path().is_vector(),
+        }
+    }
+}
+
+impl Drop for KnobGuard {
+    fn drop(&mut self) {
+        parallel::set_num_threads(self.threads);
+        simd::set_simd_enabled(self.vector);
+    }
+}
+
+fn assert_bits_eq(a: &Tensor, b: &Tensor, ctx: &str) {
+    assert_eq!(a.dims(), b.dims(), "{ctx}: shape");
+    let (av, bv) = (a.to_vec(), b.to_vec());
+    for i in 0..av.len() {
+        assert_eq!(
+            av[i].to_bits(),
+            bv[i].to_bits(),
+            "{ctx}: elem {i} ({} vs {})",
+            av[i],
+            bv[i]
+        );
+    }
+}
+
+/// Run `f` with SIMD forced off at 1 thread as the reference, then
+/// assert the same computation is bitwise-equal with SIMD on and off at
+/// 1, 2, and 4 threads. On hosts without AVX2/NEON the "on" legs
+/// re-resolve to scalar and the check degenerates to thread invariance,
+/// which is still a real property.
+fn parity<F: Fn() -> Tensor>(ctx: &str, f: F) {
+    simd::set_simd_enabled(false);
+    parallel::set_num_threads(1);
+    let reference = f();
+    for on in [false, true] {
+        simd::set_simd_enabled(on);
+        for threads in [1usize, 2, 4] {
+            parallel::set_num_threads(threads);
+            let got = f();
+            assert_bits_eq(&reference, &got, &format!("{ctx} simd={on} t={threads}"));
+        }
+    }
+}
+
+/// Lengths that exercise full 8-lane blocks, the scalar tail, and the
+/// empty edge.
+const LENS: [usize; 5] = [1, 7, 8, 65, 1000];
+
+#[test]
+fn elementwise_binary_parity() {
+    let _g = KnobGuard::new();
+    let mut rng = Rng::new(300);
+    for &n in &LENS {
+        let a = Tensor::randn(&[n], 0.0, 2.0, &mut rng);
+        let b = Tensor::randn(&[n], 0.0, 2.0, &mut rng);
+        parity(&format!("add n={n}"), || a.add(&b).unwrap());
+        parity(&format!("sub n={n}"), || a.sub(&b).unwrap());
+        parity(&format!("mul n={n}"), || a.mul(&b).unwrap());
+        parity(&format!("div n={n}"), || a.div(&b).unwrap());
+        parity(&format!("maximum n={n}"), || a.maximum(&b).unwrap());
+        parity(&format!("minimum n={n}"), || a.minimum(&b).unwrap());
+    }
+}
+
+#[test]
+fn elementwise_broadcast_and_strided_parity() {
+    let _g = KnobGuard::new();
+    let mut rng = Rng::new(301);
+    // Tier 2: matrix + row vector (the bias pattern).
+    for &(r, c) in &[(3usize, 5usize), (16, 8), (7, 33)] {
+        let x = Tensor::randn(&[r, c], 0.0, 1.0, &mut rng);
+        let v = Tensor::randn(&[c], 0.0, 1.0, &mut rng);
+        parity(&format!("bias add {r}x{c}"), || x.add(&v).unwrap());
+        parity(&format!("bias mul {r}x{c}"), || x.mul(&v).unwrap());
+    }
+    // Strided fallback: transposed (non-contiguous) views must agree
+    // with the vector tiers because the scalar twins are the same
+    // per-element functions.
+    let x = Tensor::randn(&[9, 11], 0.0, 1.0, &mut rng);
+    let y = Tensor::randn(&[11, 9], 0.0, 1.0, &mut rng);
+    let yt = y.t().unwrap();
+    parity("strided add", || x.add(&yt).unwrap());
+    parity("strided vs contiguous", || {
+        let a = x.add(&yt).unwrap();
+        let b = x.add(&yt.contiguous()).unwrap();
+        assert_bits_eq(&a, &b, "strided == materialized");
+        a
+    });
+    // Ternary select through the composed dispatcher.
+    let c = Tensor::randn(&[9, 11], 0.0, 1.0, &mut rng).gt(&x).unwrap();
+    parity("where_cond", || x.where_cond(&c, &y.t().unwrap()).unwrap());
+}
+
+#[test]
+fn transcendental_unary_parity() {
+    let _g = KnobGuard::new();
+    let mut rng = Rng::new(302);
+    for &n in &LENS {
+        let x = Tensor::randn(&[n], 0.0, 3.0, &mut rng);
+        parity(&format!("neg n={n}"), || x.neg());
+        parity(&format!("abs n={n}"), || x.abs());
+        parity(&format!("square n={n}"), || x.square());
+        parity(&format!("relu n={n}"), || x.relu());
+        parity(&format!("leaky n={n}"), || x.leaky_relu(0.1));
+        parity(&format!("clamp n={n}"), || x.clamp(-0.75, 1.25));
+        parity(&format!("adds n={n}"), || x.add_scalar(0.37));
+        parity(&format!("muls n={n}"), || x.mul_scalar(-1.61));
+        parity(&format!("exp n={n}"), || x.exp());
+        parity(&format!("tanh n={n}"), || x.tanh());
+        parity(&format!("sigmoid n={n}"), || x.sigmoid());
+        parity(&format!("gelu n={n}"), || x.gelu());
+        // sqrt: non-negative inputs only — for negative inputs the
+        // different paths may return NaNs with different payload bits.
+        let nn = x.abs();
+        parity(&format!("sqrt n={n}"), || nn.sqrt());
+    }
+    // Saturation ranges of the polynomial kernels.
+    let extreme = Tensor::from_vec(
+        vec![-1.0e4, -90.0, -20.0, -0.625, 0.0, 0.625, 20.0, 90.0, 1.0e4],
+        &[9],
+    )
+    .unwrap();
+    parity("exp extreme", || extreme.exp());
+    parity("tanh extreme", || extreme.tanh());
+    parity("sigmoid extreme", || extreme.sigmoid());
+}
+
+#[test]
+fn fused_tape_parity() {
+    let _g = KnobGuard::new();
+    let mut rng = Rng::new(303);
+    for &n in &[64usize, 1000] {
+        let a = Tensor::randn(&[n], 0.0, 1.0, &mut rng);
+        let b = Tensor::randn(&[n], 0.0, 1.0, &mut rng);
+        // Multi-op fused region: (a*b + a).relu().tanh() — one tape, the
+        // interpreter runs every instruction over 8-lane blocks.
+        parity(&format!("fused tape n={n}"), || {
+            let (la, lb) = (a.lazy(), b.lazy());
+            la.mul(&lb)
+                .unwrap()
+                .add(&la)
+                .unwrap()
+                .relu()
+                .tanh()
+                .eval()
+                .unwrap()
+        });
+        // Fused region with a sum epilogue (scalar result).
+        parity(&format!("fused sum n={n}"), || {
+            let (la, lb) = (a.lazy(), b.lazy());
+            la.mul(&lb).unwrap().exp().sum().eval().unwrap()
+        });
+    }
+    // Fused where + axis-reduce epilogue over rows.
+    let x = Tensor::randn(&[17, 33], 0.0, 1.0, &mut rng);
+    let y = Tensor::randn(&[17, 33], 0.0, 1.0, &mut rng);
+    let c = x.gt(&y).unwrap();
+    parity("fused where+rowsum", || {
+        let l = x
+            .lazy()
+            .mul(&y.lazy())
+            .unwrap()
+            .where_cond(&c.lazy(), &y.lazy())
+            .unwrap();
+        l.sum_axis(-1, false).unwrap().eval().unwrap()
+    });
+}
+
+#[test]
+fn row_softmax_parity() {
+    let _g = KnobGuard::new();
+    let mut rng = Rng::new(304);
+    for &(r, c) in &[(1usize, 1usize), (4, 7), (8, 8), (13, 65), (3, 1000)] {
+        let t = Tensor::randn(&[r, c], 0.0, 3.0, &mut rng);
+        parity(&format!("softmax {r}x{c}"), || t.softmax().unwrap());
+        parity(&format!("log_softmax {r}x{c}"), || {
+            t.log_softmax().unwrap()
+        });
+        parity(&format!("softmax_scaled {r}x{c}"), || {
+            softmax_scaled_lastdim(&t, 0.125).unwrap()
+        });
+        // The PR 5 fusion pin must keep holding under every path.
+        parity(&format!("scaled==unfused {r}x{c}"), || {
+            let fused = softmax_scaled_lastdim(&t, 0.25).unwrap();
+            let eager = t.mul_scalar(0.25).softmax().unwrap();
+            assert_bits_eq(&fused, &eager, "softmax_scaled pin");
+            fused
+        });
+    }
+}
+
+#[test]
+fn sgemm_parity() {
+    let _g = KnobGuard::new();
+    let mut rng = Rng::new(305);
+    // Shapes straddling the naive-path threshold and the MR/NR edges:
+    // ragged rows (m % 4 != 0), ragged columns (n % 16 != 0), and a
+    // k that spans multiple packed panels.
+    for &(m, k, n) in &[
+        (4usize, 8usize, 16usize),
+        (70, 60, 100),
+        (64, 130, 96),
+        (33, 65, 49),
+    ] {
+        let a = Tensor::randn(&[m, k], 0.0, 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 0.0, 1.0, &mut rng);
+        parity(&format!("sgemm {m}x{k}x{n}"), || a.matmul(&b).unwrap());
+    }
+    // Batched path.
+    let a = Tensor::randn(&[3, 20, 70], 0.0, 1.0, &mut rng);
+    let b = Tensor::randn(&[3, 70, 40], 0.0, 1.0, &mut rng);
+    parity("batched sgemm", || a.matmul(&b).unwrap());
+}
+
+#[test]
+fn gradcheck_through_simd_matmul() {
+    // Finite differences vs autograd through a matmul big enough to hit
+    // the blocked SGEMM (m·k·n > 64³) with the vector path active.
+    let _g = KnobGuard::new();
+    simd::set_simd_enabled(true);
+    parallel::set_num_threads(2);
+    let mut rng = Rng::new(306);
+    let w = Tensor::randn(&[24, 512], 0.0, 0.3, &mut rng);
+    let x0 = Tensor::randn(&[24, 24], 0.0, 0.5, &mut rng);
+    let report = gradcheck(
+        move |v: &Var| {
+            let w = Var::from_tensor(w.clone(), false);
+            v.matmul(&w)?.tanh().sum()
+        },
+        &x0,
+        1e-2,
+        2e-2,
+    )
+    .unwrap();
+    assert!(report.pass, "{report:?}");
+}
