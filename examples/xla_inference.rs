@@ -2,6 +2,10 @@
 //! the full three-layer stack on the request path: Rust coordinator →
 //! PJRT executable ← (built once from JAX + Pallas kernels).
 //!
+//! Each server worker constructs its own [`XlaBatchModel`] (engine +
+//! loaded executable) on its own thread via [`FactoryFn`], so replicas
+//! never cross threads and no `unsafe impl Send` is needed.
+//!
 //! ```bash
 //! make artifacts && cargo run --release --example xla_inference
 //! ```
@@ -9,7 +13,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use minitensor::coordinator::{BatchModel, InferenceServer, ServeConfig};
+use minitensor::coordinator::{BatchModel, FactoryFn, InferenceServer, ServeConfig};
 use minitensor::data::Rng;
 use minitensor::error::Result;
 use minitensor::nn::kaiming_uniform;
@@ -25,15 +29,14 @@ struct XlaBatchModel {
     in_features: usize,
 }
 
-// SAFETY: used only from the single server worker thread.
-unsafe impl Send for XlaBatchModel {}
-
 impl XlaBatchModel {
     fn new(artifacts_dir: &str) -> Result<XlaBatchModel> {
         let mut engine = Engine::cpu(artifacts_dir)?;
         let art = engine.manifest().get("mlp_forward")?.clone();
         let batch = art.input_shapes[0][0];
         let in_features = art.input_shapes[0][1];
+        // Deterministic seed: every worker replica materialises the
+        // same weights, so replies are replica-independent.
         let mut rng = Rng::new(123);
         let params: Vec<Tensor> = art.input_shapes[1..]
             .iter()
@@ -78,27 +81,32 @@ impl BatchModel for XlaBatchModel {
 }
 
 fn main() -> Result<()> {
-    let model = match XlaBatchModel::new("artifacts") {
+    // Probe the artifact once for its fixed shapes (and to fail fast if
+    // it is missing); the serving replicas are built by the factory.
+    let probe = match XlaBatchModel::new("artifacts") {
         Ok(m) => m,
         Err(e) => {
             eprintln!("artifacts not available ({e}); run `make artifacts` first");
             return Ok(());
         }
     };
-    let in_features = model.in_features;
-    let max_batch = model.batch;
+    let in_features = probe.in_features;
+    let max_batch = probe.batch;
+    drop(probe);
     println!(
         "serving mlp_forward artifact (batch={max_batch}, features={in_features}) on PJRT"
     );
 
-    let server = Arc::new(InferenceServer::start(
-        Box::new(model),
-        ServeConfig {
-            max_batch,
-            max_wait: std::time::Duration::from_millis(5),
-            queue_depth: 512,
-        },
-    ));
+    let factory = FactoryFn::new(in_features, |_worker| {
+        let m: Box<dyn BatchModel> = Box::new(XlaBatchModel::new("artifacts")?);
+        Ok(m)
+    });
+    let cfg = ServeConfig::new()
+        .max_batch(max_batch)
+        .max_wait_ms(5)
+        .queue_depth(512)
+        .build()?;
+    let server = Arc::new(InferenceServer::start(factory, cfg)?);
 
     // Closed-loop clients hammer the server.
     let n_clients = 4;
@@ -124,13 +132,14 @@ fn main() -> Result<()> {
     let elapsed = t0.elapsed().as_secs_f64();
     let stats = server.stats();
     println!(
-        "{} requests in {:.2}s — {:.0} req/s | {} batches, mean size {:.1} | latency p50 {:.2} ms, p99 {:.2} ms",
+        "{} requests in {:.2}s — {:.0} req/s | {} batches, mean size {:.1} | latency p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms",
         stats.requests,
         elapsed,
         stats.requests as f64 / elapsed,
         stats.batches,
         stats.mean_batch_size,
         stats.p50_latency_ms,
+        stats.p95_latency_ms,
         stats.p99_latency_ms,
     );
     Ok(())

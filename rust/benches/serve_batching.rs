@@ -1,72 +1,187 @@
-//! Ablation — coordinator batching policy: throughput and latency of the
-//! inference server as `max_batch` sweeps 1..64 (the design choice
-//! DESIGN.md's coordinator section calls out). batch=1 is the no-batching
-//! baseline; the crossover shows where amortizing per-call overhead wins
-//! over queueing delay.
+//! Experiment S1 — serving-stack sustained-load sweep: throughput and
+//! tail latency of the continuous-batching server across worker counts
+//! {1, 2, 4, 8} × `max_batch` {1, 8, 32}, under a fixed closed-loop
+//! client population. Kernel-level threading is pinned to 1
+//! (`parallel::set_num_threads(1)`) so the only parallelism axis being
+//! measured is the worker pool — each worker owns a model replica with
+//! its own warm per-thread program cache.
+//!
+//! A replica-equivalence check rides along (S2): a fixed probe set must
+//! produce byte-identical replies from an N-worker server and the
+//! 1-worker server, at every worker count — per-row math is
+//! batch-composition-invariant and every replica holds the same
+//! parameter snapshot.
+//!
+//! Writes the perf-trajectory file `BENCH_serve.json` at the repository
+//! root (each row records `cores`: worker scaling beyond the machine's
+//! core count measures oversubscription, not speedup). Pass `--quick`
+//! for the CI smoke mode: same sweep grid and JSON schema, fewer
+//! requests per client.
 
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
-use minitensor::bench_util::Table;
-use minitensor::coordinator::{InferenceServer, NativeBatchModel, ServeConfig};
+use minitensor::bench_util::{json_rows, Json, Table};
+use minitensor::coordinator::{InferenceServer, NativeModelFactory, ServeConfig, ServeStats};
 use minitensor::data::Rng;
 use minitensor::nn::{Activation, Dense, Sequential};
+use minitensor::runtime::parallel;
 
-fn model(rng: &mut Rng) -> Sequential {
-    Sequential::new()
-        .add(Dense::new(196, 128, rng))
-        .add(Activation::Relu)
-        .add(Dense::new(128, 64, rng))
-        .add(Activation::Relu)
-        .add(Dense::new(64, 10, rng))
+const IN_FEATURES: usize = 196;
+
+fn factory() -> NativeModelFactory {
+    NativeModelFactory::new(IN_FEATURES, || {
+        let mut rng = Rng::new(42);
+        Sequential::new()
+            .add(Dense::new(IN_FEATURES, 128, &mut rng))
+            .add(Activation::Relu)
+            .add(Dense::new(128, 64, &mut rng))
+            .add(Activation::Relu)
+            .add(Dense::new(64, 10, &mut rng))
+    })
+}
+
+/// One sustained-load measurement: `n_clients` closed-loop clients, each
+/// firing `per_client` requests back-to-back.
+fn run_point(
+    workers: usize,
+    max_batch: usize,
+    n_clients: usize,
+    per_client: usize,
+) -> (f64, ServeStats) {
+    let cfg = ServeConfig::new()
+        .workers(workers)
+        .max_batch(max_batch)
+        .max_wait_ms(2)
+        .queue_depth(1024)
+        .build()
+        .expect("sweep config is valid");
+    let server = Arc::new(InferenceServer::start(factory(), cfg).expect("server starts"));
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let s = server.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + c as u64);
+                for _ in 0..per_client {
+                    let feats: Vec<f32> = (0..IN_FEATURES).map(|_| rng.next_f32()).collect();
+                    s.infer(feats).expect("infer");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client");
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let stats = server.stats();
+    ((n_clients * per_client) as f64 / elapsed, stats)
+}
+
+/// Byte-level reply signature of a fixed probe set served sequentially.
+fn probe_bits(workers: usize) -> Vec<u32> {
+    let cfg = ServeConfig::new()
+        .workers(workers)
+        .max_batch(8)
+        .max_wait_ms(1)
+        .build()
+        .unwrap();
+    let server = InferenceServer::start(factory(), cfg).unwrap();
+    let mut rng = Rng::new(5);
+    let mut bits = Vec::new();
+    for _ in 0..16 {
+        let feats: Vec<f32> = (0..IN_FEATURES).map(|_| rng.next_f32()).collect();
+        let out = server.infer(feats).expect("probe infer");
+        bits.extend(out.iter().map(|v| v.to_bits()));
+    }
+    server.shutdown();
+    bits
 }
 
 fn main() {
-    let mut t = Table::new(
-        "ablation — batching policy (4 closed-loop clients, 196-feat MLP)",
-        &["max_batch", "req/s", "mean batch", "p50 ms", "p99 ms"],
+    let quick = std::env::args().any(|a| a == "--quick");
+    // Quick mode shrinks the request volume, not the sweep grid, so the
+    // JSON keeps every (workers, max_batch) row CI expects.
+    let (n_clients, per_client) = if quick { (8, 30) } else { (16, 300) };
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    // Pin kernel-level threading: worker scaling is the measured axis.
+    let before_threads = parallel::num_threads();
+    parallel::set_num_threads(1);
+    println!(
+        "S1 — sustained load: {n_clients} closed-loop clients × {per_client} requests, \
+         {cores} core(s), kernel threads pinned to 1\n"
     );
 
-    for max_batch in [1usize, 4, 16, 64] {
-        let mut rng = Rng::new(42);
-        let m = model(&mut rng);
-        let server = Arc::new(InferenceServer::start(
-            Box::new(NativeBatchModel::new(m, 196)),
-            ServeConfig {
-                max_batch,
-                max_wait: Duration::from_millis(2),
-                queue_depth: 256,
-            },
-        ));
-        let n_clients = 4;
-        let per_client = 300;
-        let t0 = Instant::now();
-        let handles: Vec<_> = (0..n_clients)
-            .map(|c| {
-                let s = server.clone();
-                std::thread::spawn(move || {
-                    let mut rng = Rng::new(100 + c as u64);
-                    for _ in 0..per_client {
-                        let feats: Vec<f32> = (0..196).map(|_| rng.next_f32()).collect();
-                        s.infer(feats).expect("infer");
-                    }
-                })
-            })
-            .collect();
-        for h in handles {
-            h.join().expect("client");
+    let mut rows: Vec<Vec<(&str, Json)>> = Vec::new();
+    let mut table = Table::new(
+        "S1 — serving sweep (196-feat MLP, req/s and tail latency)",
+        &[
+            "workers", "max_batch", "req/s", "mean batch", "p50 ms", "p95 ms", "p99 ms",
+            "rejected", "shed",
+        ],
+    );
+
+    for &workers in &[1usize, 2, 4, 8] {
+        for &max_batch in &[1usize, 8, 32] {
+            let (req_per_s, stats) = run_point(workers, max_batch, n_clients, per_client);
+            table.row(&[
+                format!("{workers}"),
+                format!("{max_batch}"),
+                format!("{req_per_s:.0}"),
+                format!("{:.1}", stats.mean_batch_size),
+                format!("{:.2}", stats.p50_latency_ms),
+                format!("{:.2}", stats.p95_latency_ms),
+                format!("{:.2}", stats.p99_latency_ms),
+                format!("{}", stats.rejected),
+                format!("{}", stats.shed),
+            ]);
+            rows.push(vec![
+                ("bench", Json::S("serve_sweep".into())),
+                ("workers", Json::N(workers as f64)),
+                ("max_batch", Json::N(max_batch as f64)),
+                ("cores", Json::N(cores as f64)),
+                ("clients", Json::N(n_clients as f64)),
+                ("requests", Json::N((n_clients * per_client) as f64)),
+                ("req_per_s", Json::N(req_per_s)),
+                ("mean_batch", Json::N(stats.mean_batch_size)),
+                ("p50_ms", Json::N(stats.p50_latency_ms)),
+                ("p95_ms", Json::N(stats.p95_latency_ms)),
+                ("p99_ms", Json::N(stats.p99_latency_ms)),
+                ("rejected", Json::N(stats.rejected as f64)),
+                ("shed", Json::N(stats.shed as f64)),
+            ]);
         }
-        let elapsed = t0.elapsed().as_secs_f64();
-        let stats = server.stats();
-        t.row(&[
-            format!("{max_batch}"),
-            format!("{:.0}", stats.requests as f64 / elapsed),
-            format!("{:.1}", stats.mean_batch_size),
-            format!("{:.2}", stats.p50_latency_ms),
-            format!("{:.2}", stats.p99_latency_ms),
+    }
+    table.print();
+
+    // S2 — replica equivalence: every worker count serves byte-identical
+    // replies for the same probe set.
+    let reference = probe_bits(1);
+    let mut eq_table = Table::new(
+        "S2 — N-worker replies vs 1-worker (byte-level)",
+        &["workers", "identical"],
+    );
+    for &workers in &[2usize, 4, 8] {
+        let identical = probe_bits(workers) == reference;
+        eq_table.row(&[
+            format!("{workers}"),
+            if identical { "ok".into() } else { "MISMATCH".to_string() },
+        ]);
+        rows.push(vec![
+            ("bench", Json::S("serve_equivalence".into())),
+            ("workers", Json::N(workers as f64)),
+            ("cores", Json::N(cores as f64)),
+            ("identical_to_1worker", Json::B(identical)),
         ]);
     }
-    t.print();
-    println!("\nreading: batch=1 pays one full forward per request; larger budgets");
-    println!("amortize dispatch until queueing delay dominates (the p99 column).");
+    eq_table.print();
+    parallel::set_num_threads(before_threads);
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    std::fs::write(path, json_rows(&rows)).expect("write BENCH_serve.json");
+    println!("\nwrote {path}");
+    println!("serving claim: with kernel threads pinned, req/s at max_batch=32 should");
+    println!("rise with workers until the core count caps it (the `cores` field marks");
+    println!("where oversubscription starts); batching itself lifts req/s at every");
+    println!("worker count, and the equivalence rows must all read identical.");
 }

@@ -14,6 +14,7 @@
 
 use std::collections::HashMap;
 use std::path::Path;
+use std::time::Duration;
 
 use crate::error::{Error, Result};
 
@@ -207,6 +208,194 @@ impl TrainConfig {
     }
 }
 
+/// Validated serving configuration.
+///
+/// Constructed through the [`ServeConfig::new`] builder — the fields are
+/// private so every live `ServeConfig` has passed validation (no zero
+/// worker pools, no admission queue smaller than one batch). The old
+/// public-struct-literal shape is gone from the API surface; the closest
+/// equivalent is the `#[deprecated]` [`ServeConfig::from_parts`].
+///
+/// ```
+/// use minitensor::coordinator::ServeConfig;
+/// let cfg = ServeConfig::new().max_batch(32).workers(4).max_wait_ms(2).build().unwrap();
+/// assert_eq!(cfg.workers(), 4);
+/// assert!(ServeConfig::new().workers(0).build().is_err());
+/// ```
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    max_batch: usize,
+    max_wait: Duration,
+    queue_depth: usize,
+    workers: usize,
+    deadline: Option<Duration>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig::new().build().expect("default ServeConfig is valid")
+    }
+}
+
+impl ServeConfig {
+    /// Start a builder pre-loaded with the defaults
+    /// (`max_batch=32, max_wait=2ms, queue_depth=1024, workers=1`).
+    #[allow(clippy::new_ret_no_self)]
+    pub fn new() -> ServeConfigBuilder {
+        ServeConfigBuilder {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 1024,
+            workers: 1,
+            deadline: None,
+        }
+    }
+
+    /// Read the `[serve]` section of a [`Config`]: `serve.max_batch`,
+    /// `serve.max_wait_ms`, `serve.queue_depth`, `serve.workers`, and
+    /// `serve.deadline_ms` (0 = no default deadline).
+    pub fn from_config(cfg: &Config) -> Result<ServeConfig> {
+        let mut b = ServeConfig::new()
+            .max_batch(cfg.get_parse_or("serve.max_batch", 32)?)
+            .max_wait_ms(cfg.get_parse_or("serve.max_wait_ms", 2)?)
+            .queue_depth(cfg.get_parse_or("serve.queue_depth", 1024)?)
+            .workers(cfg.get_parse_or("serve.workers", 1)?);
+        let deadline_ms: u64 = cfg.get_parse_or("serve.deadline_ms", 0)?;
+        if deadline_ms > 0 {
+            b = b.deadline_ms(deadline_ms);
+        }
+        b.build()
+    }
+
+    /// The pre-builder construction shape, kept for one deprecation
+    /// cycle. Routes through the builder, so it validates identically.
+    #[deprecated(note = "use the ServeConfig::new() builder")]
+    pub fn from_parts(
+        max_batch: usize,
+        max_wait: Duration,
+        queue_depth: usize,
+    ) -> Result<ServeConfig> {
+        ServeConfig::new()
+            .max_batch(max_batch)
+            .max_wait(max_wait)
+            .queue_depth(queue_depth)
+            .build()
+    }
+
+    /// Maximum examples fused into one forward.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// How long the dispatcher waits to fill a batch before flushing.
+    pub fn max_wait(&self) -> Duration {
+        self.max_wait
+    }
+
+    /// Bounded admission-queue depth (the fast-reject threshold).
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth
+    }
+
+    /// Worker threads, each owning one model replica.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Default per-request deadline applied by `infer` (None = wait
+    /// indefinitely); `infer_deadline` overrides per call.
+    pub fn deadline(&self) -> Option<Duration> {
+        self.deadline
+    }
+}
+
+/// Builder for [`ServeConfig`]; `build()` validates the combination.
+#[derive(Debug, Clone)]
+pub struct ServeConfigBuilder {
+    max_batch: usize,
+    max_wait: Duration,
+    queue_depth: usize,
+    workers: usize,
+    deadline: Option<Duration>,
+}
+
+impl ServeConfigBuilder {
+    /// Maximum examples fused into one forward (≥ 1).
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.max_batch = n;
+        self
+    }
+
+    /// Batch-fill deadline: how long the dispatcher waits for more
+    /// requests before flushing a partial batch. Zero flushes instantly.
+    pub fn max_wait(mut self, d: Duration) -> Self {
+        self.max_wait = d;
+        self
+    }
+
+    /// [`Self::max_wait`] in milliseconds.
+    pub fn max_wait_ms(self, ms: u64) -> Self {
+        self.max_wait(Duration::from_millis(ms))
+    }
+
+    /// Bounded admission-queue depth (≥ max_batch); a full queue
+    /// fast-rejects with `Error::Overloaded`.
+    pub fn queue_depth(mut self, n: usize) -> Self {
+        self.queue_depth = n;
+        self
+    }
+
+    /// Worker threads (≥ 1), each building and exclusively owning one
+    /// model replica with its own warm program cache.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+
+    /// Default per-request deadline (> 0); expired requests are shed at
+    /// dequeue instead of executed.
+    pub fn deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// [`Self::deadline`] in milliseconds.
+    pub fn deadline_ms(self, ms: u64) -> Self {
+        self.deadline(Duration::from_millis(ms))
+    }
+
+    /// Validate and produce the config.
+    pub fn build(self) -> Result<ServeConfig> {
+        if self.max_batch == 0 {
+            return Err(Error::Config("serve.max_batch must be ≥ 1".into()));
+        }
+        if self.workers == 0 {
+            return Err(Error::Config("serve.workers must be ≥ 1".into()));
+        }
+        if self.queue_depth == 0 {
+            return Err(Error::Config("serve.queue_depth must be ≥ 1".into()));
+        }
+        if self.queue_depth < self.max_batch {
+            return Err(Error::Config(format!(
+                "contradictory: serve.queue_depth ({}) < serve.max_batch ({}) — a full batch could never be admitted",
+                self.queue_depth, self.max_batch
+            )));
+        }
+        if self.deadline == Some(Duration::ZERO) {
+            return Err(Error::Config(
+                "serve.deadline_ms must be > 0 (omit it for no deadline)".into(),
+            ));
+        }
+        Ok(ServeConfig {
+            max_batch: self.max_batch,
+            max_wait: self.max_wait,
+            queue_depth: self.queue_depth,
+            workers: self.workers,
+            deadline: self.deadline,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -257,6 +446,64 @@ mod tests {
         assert_eq!(tc.threads, 4);
         let d = TrainConfig::defaults();
         assert_eq!(d.threads, 0); // 0 = inherit process-wide setting
+    }
+
+    #[test]
+    fn serve_builder_validates() {
+        let cfg = ServeConfig::new()
+            .max_batch(16)
+            .workers(4)
+            .max_wait_ms(3)
+            .queue_depth(64)
+            .deadline_ms(50)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.max_batch(), 16);
+        assert_eq!(cfg.workers(), 4);
+        assert_eq!(cfg.max_wait(), Duration::from_millis(3));
+        assert_eq!(cfg.queue_depth(), 64);
+        assert_eq!(cfg.deadline(), Some(Duration::from_millis(50)));
+
+        assert!(ServeConfig::new().max_batch(0).build().is_err());
+        assert!(ServeConfig::new().workers(0).build().is_err());
+        assert!(ServeConfig::new().queue_depth(0).build().is_err());
+        // contradictory: queue shallower than one batch
+        assert!(ServeConfig::new().max_batch(32).queue_depth(8).build().is_err());
+        assert!(ServeConfig::new().deadline(Duration::ZERO).build().is_err());
+
+        let d = ServeConfig::default();
+        assert_eq!(d.max_batch(), 32);
+        assert_eq!(d.workers(), 1);
+        assert_eq!(d.deadline(), None);
+    }
+
+    #[test]
+    fn serve_from_config_reads_section() {
+        let cfg = Config::parse(
+            "[serve]\nmax_batch = 8\nworkers = 2\nmax_wait_ms = 5\nqueue_depth = 32\ndeadline_ms = 20\n",
+        )
+        .unwrap();
+        let sc = ServeConfig::from_config(&cfg).unwrap();
+        assert_eq!(sc.max_batch(), 8);
+        assert_eq!(sc.workers(), 2);
+        assert_eq!(sc.max_wait(), Duration::from_millis(5));
+        assert_eq!(sc.queue_depth(), 32);
+        assert_eq!(sc.deadline(), Some(Duration::from_millis(20)));
+        // deadline_ms = 0 (the default) means "no deadline"
+        let sc = ServeConfig::from_config(&Config::default()).unwrap();
+        assert_eq!(sc.deadline(), None);
+        // invalid combinations surface as Config errors
+        let bad = Config::parse("[serve]\nworkers = 0\n").unwrap();
+        assert!(ServeConfig::from_config(&bad).is_err());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_from_parts_still_validates() {
+        let c = ServeConfig::from_parts(4, Duration::from_millis(1), 16).unwrap();
+        assert_eq!(c.max_batch(), 4);
+        assert_eq!(c.workers(), 1);
+        assert!(ServeConfig::from_parts(0, Duration::ZERO, 16).is_err());
     }
 
     #[test]

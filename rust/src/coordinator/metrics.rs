@@ -1,15 +1,143 @@
 //! Lightweight process metrics: counters and latency histograms used by
 //! the trainer and the inference server.
+//!
+//! Latency series are **fixed-size log-bucketed histograms**, not raw
+//! observation vectors: memory is O(1) per series no matter how many
+//! observations a long-running server records, and two histograms (e.g.
+//! per-worker locals) merge by adding bucket counts. Percentiles are
+//! exact to within one bucket (~±2.3% with the default 512 buckets over
+//! 1µs–10⁴s); the mean is exact (the running sum is tracked separately).
 
 use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
+/// Bucket count of a [`Histogram`]. 512 buckets over [`H_MIN`, `H_MAX`]
+/// gives a per-bucket ratio of (1e10)^(1/512) ≈ 1.046 — percentiles are
+/// reported within ~±2.3% of the true value.
+const BUCKETS: usize = 512;
+/// Lower edge of the bucketed range, in seconds (1 µs).
+const H_MIN: f64 = 1e-6;
+/// Upper edge of the bucketed range, in seconds (~2.8 hours).
+const H_MAX: f64 = 1e4;
+
+/// Fixed-size log-bucketed histogram of non-negative observations
+/// (seconds, sizes, depths — any positive magnitude).
+///
+/// O(1) memory, O(1) `observe`, mergeable across threads/workers by
+/// adding bucket counts. Values outside [1e-6, 1e4] clamp into the edge
+/// buckets; the exact observed `min`/`max` are tracked so the reported
+/// percentiles never step outside the observed range.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: vec![0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket(v: f64) -> usize {
+        if v.is_nan() || v <= H_MIN {
+            return 0; // ≤ H_MIN, zero, negative, or NaN
+        }
+        if v >= H_MAX {
+            return BUCKETS - 1;
+        }
+        let frac = (v / H_MIN).ln() / (H_MAX / H_MIN).ln();
+        ((frac * BUCKETS as f64) as usize).min(BUCKETS - 1)
+    }
+
+    /// Geometric midpoint of bucket `i` — the value a percentile query
+    /// reports for observations that landed there.
+    fn representative(i: usize) -> f64 {
+        H_MIN * (H_MAX / H_MIN).powf((i as f64 + 0.5) / BUCKETS as f64)
+    }
+
+    /// Record one observation.
+    pub fn observe(&mut self, v: f64) {
+        let v = if v.is_finite() { v.max(0.0) } else { 0.0 };
+        self.counts[Self::bucket(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold another histogram into this one (bucket-wise addition) —
+    /// how per-worker locals combine into a process view.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact mean (running sum / count); `None` if empty.
+    pub fn mean(&self) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        Some(self.sum / self.count as f64)
+    }
+
+    /// Percentile (q in [0,1]) to within one bucket; `None` if empty.
+    /// Reports the containing bucket's geometric midpoint, clamped to
+    /// the exact observed [min, max]; the extreme ranks (q=0, q=1)
+    /// report the exact observed min/max.
+    pub fn percentile(&self, q: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((self.count - 1) as f64 * q.clamp(0.0, 1.0)).round() as u64;
+        if rank == 0 {
+            return Some(self.min);
+        }
+        if rank == self.count - 1 {
+            return Some(self.max);
+        }
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return Some(Self::representative(i).clamp(self.min, self.max));
+            }
+        }
+        Some(self.max) // unreachable in practice (counts sum to count)
+    }
+}
+
 /// Thread-safe metrics registry.
 #[derive(Default)]
 pub struct Metrics {
     counters: Mutex<HashMap<String, u64>>,
-    latencies: Mutex<HashMap<String, Vec<f64>>>,
+    series: Mutex<HashMap<String, Histogram>>,
 }
 
 impl Metrics {
@@ -33,45 +161,48 @@ impl Metrics {
         *self.counters.lock().unwrap().get(name).unwrap_or(&0)
     }
 
-    /// Record a latency observation in seconds.
-    pub fn observe(&self, name: &str, seconds: f64) {
-        self.latencies
+    /// Record an observation (latencies in seconds; sizes/depths as-is).
+    pub fn observe(&self, name: &str, value: f64) {
+        self.series
             .lock()
             .unwrap()
             .entry(name.to_string())
             .or_default()
-            .push(seconds);
+            .observe(value);
     }
 
-    /// Percentile of recorded latencies (q in [0,1]); None if empty.
+    /// Fold an externally accumulated histogram into a named series.
+    pub fn merge_histogram(&self, name: &str, h: &Histogram) {
+        self.series
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .merge(h);
+    }
+
+    /// Snapshot of a series' histogram; `None` if never observed.
+    pub fn histogram(&self, name: &str) -> Option<Histogram> {
+        self.series.lock().unwrap().get(name).cloned()
+    }
+
+    /// Percentile of a recorded series (q in [0,1]); None if empty.
     pub fn percentile(&self, name: &str, q: f64) -> Option<f64> {
-        let map = self.latencies.lock().unwrap();
-        let v = map.get(name)?;
-        if v.is_empty() {
-            return None;
-        }
-        let mut sorted = v.clone();
-        sorted.sort_by(f64::total_cmp);
-        Some(sorted[((sorted.len() - 1) as f64 * q).round() as usize])
+        self.series.lock().unwrap().get(name)?.percentile(q)
     }
 
-    /// Mean of recorded latencies.
+    /// Mean of a recorded series.
     pub fn mean(&self, name: &str) -> Option<f64> {
-        let map = self.latencies.lock().unwrap();
-        let v = map.get(name)?;
-        if v.is_empty() {
-            return None;
-        }
-        Some(v.iter().sum::<f64>() / v.len() as f64)
+        self.series.lock().unwrap().get(name)?.mean()
     }
 
     /// Count of observations.
     pub fn observations(&self, name: &str) -> usize {
-        self.latencies
+        self.series
             .lock()
             .unwrap()
             .get(name)
-            .map_or(0, Vec::len)
+            .map_or(0, |h| h.count() as usize)
     }
 
     /// Render a compact text report.
@@ -84,21 +215,19 @@ impl Metrics {
             out.push_str(&format!("{n} = {}\n", counters[n]));
         }
         drop(counters);
-        let lat = self.latencies.lock().unwrap();
-        let mut names: Vec<&String> = lat.keys().collect();
+        let series = self.series.lock().unwrap();
+        let mut names: Vec<&String> = series.keys().collect();
         names.sort();
         for n in names {
-            let v = &lat[n];
-            if v.is_empty() {
+            let h = &series[n];
+            if h.count() == 0 {
                 continue;
             }
-            let mut sorted = v.clone();
-            sorted.sort_by(f64::total_cmp);
-            let p = |q: f64| sorted[((sorted.len() - 1) as f64 * q).round() as usize] * 1e3;
+            let p = |q: f64| h.percentile(q).unwrap_or(0.0) * 1e3;
             out.push_str(&format!(
                 "{n}: n={} mean={:.3}ms p50={:.3}ms p90={:.3}ms p99={:.3}ms\n",
-                v.len(),
-                v.iter().sum::<f64>() / v.len() as f64 * 1e3,
+                h.count(),
+                h.mean().unwrap_or(0.0) * 1e3,
                 p(0.5),
                 p(0.9),
                 p(0.99),
@@ -147,19 +276,71 @@ mod tests {
     }
 
     #[test]
-    fn latency_percentiles() {
+    fn latency_percentiles_within_bucket_resolution() {
         let m = Metrics::new();
         for i in 1..=100 {
             m.observe("lat", i as f64 / 1000.0);
         }
         assert_eq!(m.observations("lat"), 100);
+        // Buckets are ~4.6% wide, so percentiles land within ~±2.5%.
         let p50 = m.percentile("lat", 0.5).unwrap();
-        assert!((p50 - 0.0505).abs() < 0.002, "{p50}");
+        assert!((p50 - 0.0505).abs() < 0.0505 * 0.05, "{p50}");
         let p99 = m.percentile("lat", 0.99).unwrap();
-        assert!(p99 >= 0.099);
+        assert!(p99 >= 0.099 * 0.95, "{p99}");
+        assert!(p99 <= 0.1, "clamped to the exact observed max: {p99}");
         assert!(m.percentile("missing", 0.5).is_none());
+        // The mean is exact (running sum), not bucketed.
         let mean = m.mean("lat").unwrap();
-        assert!((mean - 0.0505).abs() < 0.001);
+        assert!((mean - 0.0505).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_memory_is_constant_and_extremes_clamp() {
+        let mut h = Histogram::new();
+        for _ in 0..1_000_000 {
+            h.observe(0.001);
+        }
+        h.observe(0.0); // below range → edge bucket, exact min tracked
+        h.observe(1e9); // above range → edge bucket, exact max tracked
+        assert_eq!(h.count(), 1_000_002);
+        assert_eq!(h.counts.len(), BUCKETS);
+        assert_eq!(h.percentile(0.0), Some(0.0));
+        assert_eq!(h.percentile(1.0), Some(1e9));
+        let p50 = h.percentile(0.5).unwrap();
+        assert!((p50 - 0.001).abs() < 0.001 * 0.05, "{p50}");
+    }
+
+    #[test]
+    fn histograms_merge_like_one_series() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut whole = Histogram::new();
+        for i in 1..=50 {
+            a.observe(i as f64 / 1000.0);
+            whole.observe(i as f64 / 1000.0);
+        }
+        for i in 51..=100 {
+            b.observe(i as f64 / 1000.0);
+            whole.observe(i as f64 / 1000.0);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.mean(), whole.mean());
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.percentile(q), whole.percentile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn merge_histogram_feeds_named_series() {
+        let m = Metrics::new();
+        let mut local = Histogram::new();
+        local.observe(0.002);
+        local.observe(0.004);
+        m.merge_histogram("lat", &local);
+        assert_eq!(m.observations("lat"), 2);
+        assert!((m.mean("lat").unwrap() - 0.003).abs() < 1e-9);
+        assert!(m.histogram("lat").is_some());
     }
 
     #[test]

@@ -11,7 +11,10 @@ mod metrics;
 mod serve;
 mod trainer;
 
-pub use config::{Backend, Config, TrainConfig};
-pub use metrics::{Metrics, Timer};
-pub use serve::{BatchModel, InferenceServer, NativeBatchModel, ServeConfig, ServeStats};
+pub use config::{Backend, Config, ServeConfig, ServeConfigBuilder, TrainConfig};
+pub use metrics::{Histogram, Metrics, Timer};
+pub use serve::{
+    BatchModel, FactoryFn, InferenceServer, ModelFactory, NativeBatchModel, NativeModelFactory,
+    ServeStats,
+};
 pub use trainer::{TrainReport, Trainer};

@@ -1,46 +1,214 @@
-//! Threaded batching inference server.
+//! Multi-worker continuous-batching inference server.
 //!
-//! The coordination pattern of a serving stack (vLLM-router-style) scaled
-//! to this paper's scope: clients submit single examples; a batcher thread
-//! groups them up to `max_batch` (or a deadline) and dispatches one bulk
-//! forward per batch — on the native engine or on the AOT XLA forward
-//! executable. Backpressure falls out of the bounded queue.
+//! The production-serving coordination layer: clients submit single
+//! examples; a **dispatcher** thread groups them into batches under a
+//! hybrid size-or-deadline flush policy and hands them to a pool of N
+//! **worker** threads. Each worker builds and exclusively owns its own
+//! model replica (via [`ModelFactory`] — safe by construction, no shared
+//! mutable model, no `unsafe impl Send`), so every worker pins a warm
+//! per-thread compiled-Program cache: the second identical batch a
+//! worker sees skips region partitioning and tape construction entirely.
+//! Workers pull the next batch the moment they finish, so batch
+//! formation overlaps with execution instead of serializing behind it.
+//!
+//! Admission control goes beyond the bounded queue:
+//!
+//! - a saturated admission queue **fast-rejects** with
+//!   [`Error::Overloaded`] instead of blocking the client;
+//! - requests may carry a **deadline** ([`InferenceServer::infer_deadline`]
+//!   or the `serve.deadline_ms` default) — already-expired requests are
+//!   shed at dequeue with [`Error::DeadlineExceeded`] instead of burning
+//!   a worker on stale work;
+//! - shutdown **drains**: every admitted request still receives its real
+//!   reply before the threads exit.
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use super::config::ServeConfig;
 use super::metrics::Metrics;
 use crate::error::{Error, Result};
 use crate::tensor::Tensor;
 
-/// Server tuning knobs.
-#[derive(Debug, Clone)]
-pub struct ServeConfig {
-    /// Maximum examples fused into one forward.
-    pub max_batch: usize,
-    /// How long the batcher waits to fill a batch before flushing.
-    pub max_wait: Duration,
-    /// Bounded queue depth (backpressure threshold).
-    pub queue_depth: usize,
+/// A model the server can run: takes a `[b, d]` batch, returns `[b, k]`.
+///
+/// No `Send` bound: a model is **built on the worker thread that runs
+/// it** (see [`ModelFactory`]) and never crosses threads afterwards.
+pub trait BatchModel {
+    fn forward_batch(&mut self, x: &Tensor) -> Result<Tensor>;
+    /// Input feature count.
+    fn in_features(&self) -> usize;
 }
 
-impl Default for ServeConfig {
-    fn default() -> Self {
-        ServeConfig {
-            max_batch: 32,
-            max_wait: Duration::from_millis(2),
-            queue_depth: 1024,
+/// Builds one [`BatchModel`] replica per worker.
+///
+/// The factory is shared across the worker-spawn loop (hence
+/// `Send + Sync`), but each `build(worker)` call runs **on** that
+/// worker's thread and the replica it returns is exclusively owned
+/// there. This is what lets the engine keep its non-`Sync` graph types
+/// (`Var` is `Rc`-based) out of any cross-thread traffic without a
+/// single `unsafe impl`.
+pub trait ModelFactory: Send + Sync + 'static {
+    /// Input feature count (needed before any replica exists, for
+    /// request validation).
+    fn in_features(&self) -> usize;
+    /// Construct worker `worker`'s replica. Called once per worker, on
+    /// the worker's own thread.
+    fn build(&self, worker: usize) -> Result<Box<dyn BatchModel>>;
+}
+
+/// [`ModelFactory`] from a plain closure plus an explicit feature count.
+pub struct FactoryFn<F> {
+    in_features: usize,
+    build: F,
+}
+
+impl<F> FactoryFn<F>
+where
+    F: Fn(usize) -> Result<Box<dyn BatchModel>> + Send + Sync + 'static,
+{
+    /// Wrap `build` (called once per worker, on the worker thread).
+    pub fn new(in_features: usize, build: F) -> FactoryFn<F> {
+        FactoryFn { in_features, build }
+    }
+}
+
+impl<F> ModelFactory for FactoryFn<F>
+where
+    F: Fn(usize) -> Result<Box<dyn BatchModel>> + Send + Sync + 'static,
+{
+    fn in_features(&self) -> usize {
+        self.in_features
+    }
+
+    fn build(&self, worker: usize) -> Result<Box<dyn BatchModel>> {
+        (self.build)(worker)
+    }
+}
+
+/// [`ModelFactory`] for native `Sequential` models: captures an
+/// architecture-building closure plus a **canonical parameter snapshot**
+/// taken from one prototype, and loads that snapshot into every replica
+/// — so all workers hold byte-identical weights even if the builder
+/// closure is not deterministic.
+pub struct NativeModelFactory {
+    build_arch: Box<dyn Fn() -> crate::nn::Sequential + Send + Sync>,
+    params: Vec<Tensor>,
+    in_features: usize,
+}
+
+impl NativeModelFactory {
+    /// Snapshot the parameters of one `build()` prototype and serve
+    /// replicas of it.
+    pub fn new(
+        in_features: usize,
+        build: impl Fn() -> crate::nn::Sequential + Send + Sync + 'static,
+    ) -> NativeModelFactory {
+        use crate::nn::Module;
+        let proto = build();
+        let params = proto
+            .parameters()
+            .iter()
+            .map(|p| p.data().contiguous())
+            .collect();
+        NativeModelFactory {
+            build_arch: Box::new(build),
+            params,
+            in_features,
+        }
+    }
+
+    /// Serve an *existing* model (e.g. just trained or loaded from a
+    /// checkpoint): snapshot `model`'s parameters and rebuild the
+    /// architecture with `build` for each worker replica. The replicas
+    /// carry `model`'s weights, not whatever `build` initialises.
+    pub fn from_trained(
+        model: &crate::nn::Sequential,
+        in_features: usize,
+        build: impl Fn() -> crate::nn::Sequential + Send + Sync + 'static,
+    ) -> NativeModelFactory {
+        use crate::nn::Module;
+        let params = model
+            .parameters()
+            .iter()
+            .map(|p| p.data().contiguous())
+            .collect();
+        NativeModelFactory {
+            build_arch: Box::new(build),
+            params,
+            in_features,
         }
     }
 }
 
-/// One queued request: a feature vector and the channel to answer on.
+impl ModelFactory for NativeModelFactory {
+    fn in_features(&self) -> usize {
+        self.in_features
+    }
+
+    fn build(&self, _worker: usize) -> Result<Box<dyn BatchModel>> {
+        use crate::nn::Module;
+        let model = (self.build_arch)();
+        let ps = model.parameters();
+        if ps.len() != self.params.len() {
+            return Err(Error::msg(format!(
+                "model builder returned {} parameters, snapshot has {}",
+                ps.len(),
+                self.params.len()
+            )));
+        }
+        for (p, t) in ps.iter().zip(&self.params) {
+            if p.data().dims() != t.dims() {
+                return Err(Error::ShapeMismatch {
+                    op: "NativeModelFactory::build",
+                    expected: format!("{:?}", t.dims()),
+                    got: format!("{:?}", p.data().dims()),
+                });
+            }
+            p.set_data(t.clone());
+        }
+        Ok(Box::new(NativeBatchModel::new(model, self.in_features)))
+    }
+}
+
+/// A [`BatchModel`] over a native `Sequential`, owned outright by the
+/// worker thread that runs it — no `Mutex`, no `unsafe`.
+pub struct NativeBatchModel {
+    model: crate::nn::Sequential,
+    in_features: usize,
+}
+
+impl NativeBatchModel {
+    /// Wrap a model for serving.
+    pub fn new(model: crate::nn::Sequential, in_features: usize) -> NativeBatchModel {
+        NativeBatchModel { model, in_features }
+    }
+}
+
+impl BatchModel for NativeBatchModel {
+    fn forward_batch(&mut self, x: &Tensor) -> Result<Tensor> {
+        use crate::nn::Module;
+        crate::autograd::no_grad(|| {
+            let v = crate::autograd::Var::from_tensor(x.clone(), false);
+            Ok(self.model.forward(&v, false)?.data())
+        })
+    }
+
+    fn in_features(&self) -> usize {
+        self.in_features
+    }
+}
+
+/// One queued request: a feature vector, its deadline, and the channel
+/// to answer on.
 struct Request {
     features: Vec<f32>,
     enqueued: Instant,
+    deadline: Option<Instant>,
     reply: SyncSender<Result<Vec<f32>>>,
 }
 
@@ -51,119 +219,213 @@ pub struct ServeStats {
     pub batches: u64,
     pub mean_batch_size: f64,
     pub p50_latency_ms: f64,
+    pub p95_latency_ms: f64,
     pub p99_latency_ms: f64,
+    /// Requests currently waiting in the admission queue.
+    pub queue_depth: usize,
+    /// Fast-rejected submissions (admission queue full).
+    pub rejected: u64,
+    /// Requests shed at dequeue because their deadline had expired.
+    pub shed: u64,
+    /// Batches executed per worker (index = worker id).
+    pub worker_batches: Vec<u64>,
 }
 
-/// A model the server can run: takes a `[b, d]` batch, returns `[b, k]`.
-pub trait BatchModel: Send {
-    fn forward_batch(&mut self, x: &Tensor) -> Result<Tensor>;
-    /// Input feature count.
-    fn in_features(&self) -> usize;
+/// The dispatcher→worker hand-off: a bounded deque of formed batches.
+/// Workers block on `pop` when it is empty; the dispatcher blocks on
+/// `push` when `cap` batches are already waiting (which backs pressure
+/// up into the admission queue, where submissions fast-reject).
+struct WorkQueue {
+    state: Mutex<WorkState>,
+    cv: Condvar,
 }
 
-/// Batching inference server over any [`BatchModel`].
-pub struct InferenceServer {
-    tx: SyncSender<Request>,
-    worker: Option<JoinHandle<()>>,
-    stop: Arc<AtomicBool>,
-    metrics: Arc<Metrics>,
-    in_features: usize,
+struct WorkState {
+    batches: VecDeque<Vec<Request>>,
+    done: bool,
 }
 
-impl InferenceServer {
-    /// Spawn the batcher thread over `model`.
-    pub fn start(mut model: Box<dyn BatchModel>, cfg: ServeConfig) -> InferenceServer {
-        let (tx, rx): (SyncSender<Request>, Receiver<Request>) = sync_channel(cfg.queue_depth);
-        let stop = Arc::new(AtomicBool::new(false));
-        let metrics = Arc::new(Metrics::new());
-        let in_features = model.in_features();
-
-        let stop_w = stop.clone();
-        let metrics_w = metrics.clone();
-        let worker = std::thread::spawn(move || {
-            let mut pending: Vec<Request> = Vec::with_capacity(cfg.max_batch);
-            loop {
-                // Block for the first request (with a stop-poll timeout).
-                if pending.is_empty() {
-                    match rx.recv_timeout(Duration::from_millis(10)) {
-                        Ok(r) => pending.push(r),
-                        Err(RecvTimeoutError::Timeout) => {
-                            if stop_w.load(Ordering::Relaxed) {
-                                return;
-                            }
-                            continue;
-                        }
-                        Err(RecvTimeoutError::Disconnected) => return,
-                    }
-                }
-                // Fill up to max_batch or the deadline.
-                let deadline = Instant::now() + cfg.max_wait;
-                while pending.len() < cfg.max_batch {
-                    let now = Instant::now();
-                    if now >= deadline {
-                        break;
-                    }
-                    match rx.recv_timeout(deadline - now) {
-                        Ok(r) => pending.push(r),
-                        Err(RecvTimeoutError::Timeout) => break,
-                        Err(RecvTimeoutError::Disconnected) => break,
-                    }
-                }
-
-                // Assemble the batch tensor.
-                let b = pending.len();
-                let mut flat = Vec::with_capacity(b * in_features);
-                for r in &pending {
-                    flat.extend_from_slice(&r.features);
-                }
-                let batch = Tensor::from_vec(flat, &[b, in_features])
-                    .expect("request feature lengths validated at submit");
-
-                let result = model.forward_batch(&batch);
-                metrics_w.incr("serve.batches", 1);
-                metrics_w.incr("serve.requests", b as u64);
-                metrics_w.observe("serve.batch_size", b as f64);
-
-                match result {
-                    Ok(out) => {
-                        let k = out.dims()[1];
-                        let ov = out.to_vec();
-                        for (i, r) in pending.drain(..).enumerate() {
-                            metrics_w
-                                .observe("serve.latency", r.enqueued.elapsed().as_secs_f64());
-                            let row = ov[i * k..(i + 1) * k].to_vec();
-                            let _ = r.reply.send(Ok(row));
-                        }
-                    }
-                    Err(e) => {
-                        let msg = e.to_string();
-                        for r in pending.drain(..) {
-                            let _ = r.reply.send(Err(Error::msg(msg.clone())));
-                        }
-                    }
-                }
-
-                if stop_w.load(Ordering::Relaxed) && pending.is_empty() {
-                    // Drain whatever is still queued before exiting.
-                    while let Ok(r) = rx.try_recv() {
-                        let _ = r.reply.send(Err(Error::msg("server shutting down")));
-                    }
-                    return;
-                }
-            }
-        });
-
-        InferenceServer {
-            tx,
-            worker: Some(worker),
-            stop,
-            metrics,
-            in_features,
+impl WorkQueue {
+    fn new() -> WorkQueue {
+        WorkQueue {
+            state: Mutex::new(WorkState {
+                batches: VecDeque::new(),
+                done: false,
+            }),
+            cv: Condvar::new(),
         }
     }
 
+    fn push(&self, batch: Vec<Request>, cap: usize) {
+        let mut st = self.state.lock().unwrap();
+        while st.batches.len() >= cap && !st.done {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.batches.push_back(batch);
+        self.cv.notify_all();
+    }
+
+    fn pop(&self) -> Option<Vec<Request>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(b) = st.batches.pop_front() {
+                self.cv.notify_all(); // space freed: wake the dispatcher
+                return Some(b);
+            }
+            if st.done {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn finish(&self) {
+        self.state.lock().unwrap().done = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Reply with `DeadlineExceeded` to every request whose deadline has
+/// passed, keeping the rest. Called at every dequeue point (dispatcher
+/// batch formation and worker batch start).
+fn shed_expired(pending: &mut Vec<Request>, metrics: &Metrics) {
+    let now = Instant::now();
+    pending.retain(|r| match r.deadline {
+        Some(d) if d <= now => {
+            metrics.incr("serve.shed", 1);
+            let _ = r.reply.send(Err(Error::DeadlineExceeded));
+            false
+        }
+        _ => true,
+    });
+}
+
+/// Continuous-batching inference server over a [`ModelFactory`].
+pub struct InferenceServer {
+    /// Admission sender; `None` once [`Self::drain`] has run. Behind a
+    /// mutex so drain can be initiated through `&self` while clients
+    /// are mid-request (the critical section is a non-blocking
+    /// `try_send`, so admission stays effectively concurrent).
+    tx: Mutex<Option<SyncSender<Request>>>,
+    dispatcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    depth: Arc<AtomicUsize>,
+    in_features: usize,
+    n_workers: usize,
+    queue_depth: usize,
+    default_deadline: Option<Duration>,
+}
+
+impl InferenceServer {
+    /// Spawn the dispatcher and `cfg.workers()` model-replica workers.
+    ///
+    /// Blocks until every worker has constructed its replica; the first
+    /// construction error tears the pool down and is returned.
+    pub fn start(factory: impl ModelFactory, cfg: ServeConfig) -> Result<InferenceServer> {
+        let factory = Arc::new(factory);
+        let in_features = factory.in_features();
+        let n_workers = cfg.workers();
+        let (tx, rx): (SyncSender<Request>, Receiver<Request>) = sync_channel(cfg.queue_depth());
+        let metrics = Arc::new(Metrics::new());
+        let depth = Arc::new(AtomicUsize::new(0));
+        let queue = Arc::new(WorkQueue::new());
+        // Batches the dispatcher may run ahead by: enough to keep every
+        // worker busy plus one forming, without unbounded buildup.
+        let cap = n_workers * 2;
+
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+        let mut workers = Vec::with_capacity(n_workers);
+        for i in 0..n_workers {
+            let factory = factory.clone();
+            let queue = queue.clone();
+            let metrics = metrics.clone();
+            let ready = ready_tx.clone();
+            workers.push(std::thread::spawn(move || {
+                // Build the replica on this thread: it never migrates,
+                // and its thread-local program cache stays warm across
+                // every batch this worker executes.
+                let model = match factory.build(i) {
+                    Ok(m) => {
+                        let _ = ready.send(Ok(()));
+                        m
+                    }
+                    Err(e) => {
+                        let _ = ready.send(Err(e));
+                        return;
+                    }
+                };
+                drop(ready);
+                worker_loop(i, model, &queue, &metrics, in_features);
+            }));
+        }
+        drop(ready_tx);
+
+        let dispatcher = {
+            let queue = queue.clone();
+            let metrics = metrics.clone();
+            let depth = depth.clone();
+            let (max_batch, max_wait) = (cfg.max_batch(), cfg.max_wait());
+            std::thread::spawn(move || {
+                dispatcher_loop(rx, &queue, cap, max_batch, max_wait, &metrics, &depth);
+            })
+        };
+
+        let mut first_err: Option<Error> = None;
+        for _ in 0..n_workers {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(Error::msg("worker thread died during startup"));
+                    }
+                    break;
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            drop(tx); // dispatcher drains and finishes the work queue
+            let _ = dispatcher.join();
+            for w in workers {
+                let _ = w.join();
+            }
+            return Err(e);
+        }
+
+        Ok(InferenceServer {
+            tx: Mutex::new(Some(tx)),
+            dispatcher: Some(dispatcher),
+            workers,
+            metrics,
+            depth,
+            in_features,
+            n_workers,
+            queue_depth: cfg.queue_depth(),
+            default_deadline: cfg.deadline(),
+        })
+    }
+
     /// Submit one example and wait for its outputs (logits).
+    ///
+    /// Fast-rejects with [`Error::Overloaded`] when the admission queue
+    /// is saturated. Applies the config's default deadline, if any.
     pub fn infer(&self, features: Vec<f32>) -> Result<Vec<f32>> {
+        self.submit(features, self.default_deadline)
+    }
+
+    /// [`Self::infer`] with an explicit per-request deadline: if no
+    /// worker has started the request within `deadline`, it is shed
+    /// with [`Error::DeadlineExceeded`] instead of executed late.
+    pub fn infer_deadline(&self, features: Vec<f32>, deadline: Duration) -> Result<Vec<f32>> {
+        self.submit(features, Some(deadline))
+    }
+
+    fn submit(&self, features: Vec<f32>, deadline: Option<Duration>) -> Result<Vec<f32>> {
         if features.len() != self.in_features {
             return Err(Error::ShapeMismatch {
                 op: "serve.infer",
@@ -171,14 +433,34 @@ impl InferenceServer {
                 got: format!("{}", features.len()),
             });
         }
+        let now = Instant::now();
         let (reply_tx, reply_rx) = sync_channel(1);
-        self.tx
-            .send(Request {
-                features,
-                enqueued: Instant::now(),
-                reply: reply_tx,
-            })
-            .map_err(|_| Error::msg("server stopped"))?;
+        let req = Request {
+            features,
+            enqueued: now,
+            deadline: deadline.map(|d| now + d),
+            reply: reply_tx,
+        };
+        {
+            let guard = self.tx.lock().unwrap();
+            let Some(tx) = guard.as_ref() else {
+                return Err(Error::msg("server stopped"));
+            };
+            match tx.try_send(req) {
+                Ok(()) => {
+                    self.depth.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(TrySendError::Full(_)) => {
+                    self.metrics.incr("serve.rejected", 1);
+                    return Err(Error::Overloaded {
+                        queue_depth: self.queue_depth,
+                    });
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    return Err(Error::msg("server stopped"));
+                }
+            }
+        }
         reply_rx
             .recv()
             .map_err(|_| Error::msg("server dropped the request"))?
@@ -186,19 +468,51 @@ impl InferenceServer {
 
     /// Statistics snapshot.
     pub fn stats(&self) -> ServeStats {
+        let ms = |q| self.metrics.percentile("serve.latency", q).unwrap_or(0.0) * 1e3;
         ServeStats {
             requests: self.metrics.counter("serve.requests"),
             batches: self.metrics.counter("serve.batches"),
             mean_batch_size: self.metrics.mean("serve.batch_size").unwrap_or(0.0),
-            p50_latency_ms: self.metrics.percentile("serve.latency", 0.5).unwrap_or(0.0) * 1e3,
-            p99_latency_ms: self.metrics.percentile("serve.latency", 0.99).unwrap_or(0.0) * 1e3,
+            p50_latency_ms: ms(0.5),
+            p95_latency_ms: ms(0.95),
+            p99_latency_ms: ms(0.99),
+            queue_depth: self.depth.load(Ordering::Relaxed),
+            rejected: self.metrics.counter("serve.rejected"),
+            shed: self.metrics.counter("serve.shed"),
+            worker_batches: (0..self.n_workers)
+                .map(|i| self.metrics.counter(&format!("serve.worker{i}.batches")))
+                .collect(),
         }
     }
 
-    /// Stop the worker and join it.
+    /// The server's metrics registry (counters include
+    /// `serve.program_cache_hits`, summed across workers).
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Close admission: subsequent `infer` calls fail fast with
+    /// "server stopped", while every already-admitted request still
+    /// receives its real reply (dropping the admission sender
+    /// disconnects the dispatcher's receiver only *after* the channel's
+    /// buffered requests are delivered — mpsc drains before reporting
+    /// disconnect). The threads are joined by [`Self::shutdown`]/`Drop`.
+    pub fn drain(&self) {
+        self.tx.lock().unwrap().take();
+    }
+
+    /// Graceful shutdown: stop admitting, drain every in-flight request
+    /// to its real reply, then join the dispatcher and all workers.
     pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(w) = self.worker.take() {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.drain();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -206,47 +520,131 @@ impl InferenceServer {
 
 impl Drop for InferenceServer {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.stop_and_join();
     }
 }
 
-/// A [`BatchModel`] over a native `Sequential` (wrapped in a Mutex: the
-/// graph types are not Sync, and the model lives on the worker thread).
-pub struct NativeBatchModel {
-    model: Mutex<crate::nn::Sequential>,
+/// Dispatcher: form batches under the size-or-deadline flush policy and
+/// hand them to the worker pool. Exits (finishing the work queue) when
+/// the admission sender is dropped and the channel is drained.
+fn dispatcher_loop(
+    rx: Receiver<Request>,
+    queue: &WorkQueue,
+    cap: usize,
+    max_batch: usize,
+    max_wait: Duration,
+    metrics: &Metrics,
+    depth: &AtomicUsize,
+) {
+    let mut pending: Vec<Request> = Vec::with_capacity(max_batch);
+    'outer: loop {
+        // Block for the first request of the next batch.
+        if pending.is_empty() {
+            match rx.recv() {
+                Ok(r) => {
+                    depth.fetch_sub(1, Ordering::Relaxed);
+                    pending.push(r);
+                }
+                Err(_) => break 'outer, // admission closed and drained
+            }
+        }
+        // Fill up to max_batch or the flush deadline.
+        let flush_at = Instant::now() + max_wait;
+        let mut disconnected = false;
+        while pending.len() < max_batch {
+            let now = Instant::now();
+            if now >= flush_at {
+                break;
+            }
+            match rx.recv_timeout(flush_at - now) {
+                Ok(r) => {
+                    depth.fetch_sub(1, Ordering::Relaxed);
+                    pending.push(r);
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        // Shed requests that expired while queued, then dispatch.
+        shed_expired(&mut pending, metrics);
+        if !pending.is_empty() {
+            metrics.observe("serve.queue_depth", depth.load(Ordering::Relaxed) as f64);
+            queue.push(std::mem::take(&mut pending), cap);
+        }
+        if disconnected {
+            break 'outer;
+        }
+    }
+    queue.finish();
+}
+
+/// Worker: pull batches as they become available, run the replica's
+/// bulk forward, reply per request. One long-lived thread per replica —
+/// its program cache, tensor pool, and any model-internal scratch stay
+/// warm for the server's lifetime.
+fn worker_loop(
+    id: usize,
+    mut model: Box<dyn BatchModel>,
+    queue: &WorkQueue,
+    metrics: &Metrics,
     in_features: usize,
-}
-
-// SAFETY: the Sequential inside is only ever touched by the worker thread
-// that owns the Box<dyn BatchModel>; Mutex adds the Sync guarantee needed
-// to move it there.
-unsafe impl Send for NativeBatchModel {}
-
-impl NativeBatchModel {
-    /// Wrap a model for serving.
-    pub fn new(model: crate::nn::Sequential, in_features: usize) -> NativeBatchModel {
-        NativeBatchModel {
-            model: Mutex::new(model),
-            in_features,
+) {
+    while let Some(mut batch) = queue.pop() {
+        // A batch may have waited behind slow forwards: shed expiries
+        // here too so a stale request never occupies the replica.
+        shed_expired(&mut batch, metrics);
+        if batch.is_empty() {
+            continue;
         }
-    }
-}
+        let b = batch.len();
+        let mut flat = Vec::with_capacity(b * in_features);
+        for r in &batch {
+            flat.extend_from_slice(&r.features);
+        }
+        let x = Tensor::from_vec(flat, &[b, in_features])
+            .expect("request feature lengths validated at submit");
 
-impl BatchModel for NativeBatchModel {
-    fn forward_batch(&mut self, x: &Tensor) -> Result<Tensor> {
-        use crate::nn::Module;
-        crate::autograd::no_grad(|| {
-            let v = crate::autograd::Var::from_tensor(x.clone(), false);
-            let model = self.model.lock().unwrap();
-            Ok(model.forward(&v, false)?.data())
-        })
-    }
+        let before = crate::runtime::stats::snapshot();
+        let result = model.forward_batch(&x);
+        let delta = crate::runtime::stats::snapshot().delta(&before);
+        // Thread-local engine counters surfaced through the shared
+        // registry: the warm-cache story is observable per server.
+        metrics.incr("serve.program_cache_hits", delta.program_cache_hits);
+        metrics.incr("serve.program_cache_misses", delta.program_cache_misses);
+        metrics.incr("serve.batches", 1);
+        metrics.incr(&format!("serve.worker{id}.batches"), 1);
+        metrics.incr("serve.requests", b as u64);
+        metrics.observe("serve.batch_size", b as f64);
 
-    fn in_features(&self) -> usize {
-        self.in_features
+        match result {
+            Ok(out) if out.rank() == 2 && out.dims()[0] == b => {
+                let k = out.dims()[1];
+                let ov = out.to_vec();
+                for (i, r) in batch.drain(..).enumerate() {
+                    metrics.observe("serve.latency", r.enqueued.elapsed().as_secs_f64());
+                    let row = ov[i * k..(i + 1) * k].to_vec();
+                    let _ = r.reply.send(Ok(row));
+                }
+            }
+            Ok(out) => {
+                let msg = format!(
+                    "model returned shape {:?} for a {b}-row batch",
+                    out.dims()
+                );
+                for r in batch.drain(..) {
+                    let _ = r.reply.send(Err(Error::msg(msg.clone())));
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for r in batch.drain(..) {
+                    let _ = r.reply.send(Err(Error::msg(msg.clone())));
+                }
+            }
+        }
     }
 }
 
@@ -256,18 +654,19 @@ mod tests {
     use crate::data::Rng;
     use crate::nn::{Activation, Dense, Sequential};
 
-    fn tiny_model() -> Box<dyn BatchModel> {
-        let mut rng = Rng::new(1);
-        let model = Sequential::new()
-            .add(Dense::new(4, 8, &mut rng))
-            .add(Activation::Relu)
-            .add(Dense::new(8, 3, &mut rng));
-        Box::new(NativeBatchModel::new(model, 4))
+    fn tiny_factory() -> NativeModelFactory {
+        NativeModelFactory::new(4, || {
+            let mut rng = Rng::new(1);
+            Sequential::new()
+                .add(Dense::new(4, 8, &mut rng))
+                .add(Activation::Relu)
+                .add(Dense::new(8, 3, &mut rng))
+        })
     }
 
     #[test]
     fn single_request_roundtrip() {
-        let server = InferenceServer::start(tiny_model(), ServeConfig::default());
+        let server = InferenceServer::start(tiny_factory(), ServeConfig::default()).unwrap();
         let out = server.infer(vec![1.0, 2.0, 3.0, 4.0]).unwrap();
         assert_eq!(out.len(), 3);
         server.shutdown();
@@ -275,27 +674,24 @@ mod tests {
 
     #[test]
     fn rejects_wrong_feature_count() {
-        let server = InferenceServer::start(tiny_model(), ServeConfig::default());
+        let server = InferenceServer::start(tiny_factory(), ServeConfig::default()).unwrap();
         assert!(server.infer(vec![1.0]).is_err());
         server.shutdown();
     }
 
     #[test]
     fn batches_concurrent_requests() {
-        let server = Arc::new(InferenceServer::start(
-            tiny_model(),
-            ServeConfig {
-                max_batch: 8,
-                max_wait: Duration::from_millis(20),
-                queue_depth: 64,
-            },
-        ));
+        let cfg = ServeConfig::new()
+            .max_batch(8)
+            .max_wait(Duration::from_millis(20))
+            .queue_depth(64)
+            .build()
+            .unwrap();
+        let server = Arc::new(InferenceServer::start(tiny_factory(), cfg).unwrap());
         let handles: Vec<_> = (0..16)
             .map(|i| {
                 let s = server.clone();
-                std::thread::spawn(move || {
-                    s.infer(vec![i as f32, 0.0, 0.0, 0.0]).unwrap()
-                })
+                std::thread::spawn(move || s.infer(vec![i as f32, 0.0, 0.0, 0.0]).unwrap())
             })
             .collect();
         for h in handles {
@@ -305,17 +701,20 @@ mod tests {
         assert_eq!(stats.requests, 16);
         assert!(stats.batches < 16, "batching should fuse requests: {stats:?}");
         assert!(stats.mean_batch_size > 1.0);
+        assert_eq!(stats.worker_batches.len(), 1);
+        assert_eq!(stats.worker_batches[0], stats.batches);
     }
 
     #[test]
     fn results_match_direct_forward() {
+        // Compute the expected output directly on a prototype with the
+        // same seed the factory snapshots.
+        use crate::nn::Module;
         let mut rng = Rng::new(1);
         let model = Sequential::new()
             .add(Dense::new(4, 8, &mut rng))
             .add(Activation::Relu)
             .add(Dense::new(8, 3, &mut rng));
-        // compute the expected output directly
-        use crate::nn::Module;
         let x = Tensor::from_vec(vec![0.5, -1.0, 2.0, 0.0], &[1, 4]).unwrap();
         let expect = model
             .forward(&crate::autograd::Var::from_tensor(x, false), false)
@@ -323,14 +722,31 @@ mod tests {
             .data()
             .to_vec();
 
-        let server = InferenceServer::start(
-            Box::new(NativeBatchModel::new(model, 4)),
-            ServeConfig::default(),
-        );
+        let server = InferenceServer::start(tiny_factory(), ServeConfig::default()).unwrap();
         let got = server.infer(vec![0.5, -1.0, 2.0, 0.0]).unwrap();
         for (g, e) in got.iter().zip(&expect) {
             assert!((g - e).abs() < 1e-5);
         }
         server.shutdown();
+    }
+
+    #[test]
+    fn factory_error_fails_start_and_joins_cleanly() {
+        struct Broken;
+        impl ModelFactory for Broken {
+            fn in_features(&self) -> usize {
+                4
+            }
+            fn build(&self, worker: usize) -> Result<Box<dyn BatchModel>> {
+                if worker == 1 {
+                    Err(Error::msg("replica 1 refuses to build"))
+                } else {
+                    tiny_factory().build(worker)
+                }
+            }
+        }
+        let cfg = ServeConfig::new().workers(2).build().unwrap();
+        let err = InferenceServer::start(Broken, cfg).err().expect("must fail");
+        assert!(err.to_string().contains("refuses to build"));
     }
 }

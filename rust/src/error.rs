@@ -54,6 +54,14 @@ pub enum Error {
     /// Configuration parsing / validation failure.
     Config(String),
 
+    /// The inference server's admission queue is saturated: the request
+    /// was fast-rejected instead of queued (load shedding at the door).
+    Overloaded { queue_depth: usize },
+
+    /// A request's deadline expired before a worker executed it; the
+    /// server shed it at dequeue instead of running stale work.
+    DeadlineExceeded,
+
     /// Anything I/O.
     Io(std::io::Error),
 
@@ -92,6 +100,13 @@ impl fmt::Display for Error {
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Xla(m) => write!(f, "xla runtime error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Overloaded { queue_depth } => write!(
+                f,
+                "server overloaded: admission queue full ({queue_depth} requests); retry with backoff"
+            ),
+            Error::DeadlineExceeded => {
+                write!(f, "request deadline exceeded before execution; shed at dequeue")
+            }
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Msg(m) => write!(f, "{m}"),
         }
@@ -146,6 +161,14 @@ mod tests {
             "boom"
         );
         assert!(Error::Config("bad".into()).to_string().contains("config"));
+    }
+
+    #[test]
+    fn serving_errors_are_descriptive() {
+        let e = Error::Overloaded { queue_depth: 64 };
+        assert!(e.to_string().contains("overloaded"));
+        assert!(e.to_string().contains("64"));
+        assert!(Error::DeadlineExceeded.to_string().contains("deadline"));
     }
 
     #[test]

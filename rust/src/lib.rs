@@ -71,6 +71,23 @@
 //! (`fast_exp` ≈ 4e-6 max relative error; `tanh` ~2 ULP of libm) — the
 //! approximation is a property of the kernel, not the ISA.
 //!
+//! ## Serving
+//!
+//! [`coordinator::InferenceServer`] is a continuous-batching,
+//! multi-worker inference server: a dispatcher thread forms batches
+//! under a size-or-deadline hybrid flush ([`coordinator::ServeConfig`]
+//! is a validated builder) and hands them to N worker threads, each
+//! owning a private model replica built on-thread through
+//! [`coordinator::ModelFactory`] — safe Rust end to end, with every
+//! worker pinning a warm per-thread program cache so repeated batch
+//! shapes skip compilation. Admission control fast-rejects with
+//! [`Error::Overloaded`] when the queue saturates, per-request
+//! deadlines shed expired work with [`Error::DeadlineExceeded`], and
+//! `drain`/`shutdown` answer everything admitted before stopping.
+//! [`coordinator::ServeStats`] reports p50/p95/p99 latency from a
+//! constant-memory log-bucketed histogram; replies are byte-identical
+//! at any worker count.
+//!
 //! ## Feature flags
 //!
 //! - `xla` (default off): compiles the PJRT runtime ([`runtime::Engine`]),

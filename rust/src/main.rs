@@ -8,7 +8,7 @@
 //! ```
 
 use minitensor::coordinator::{
-    Config, InferenceServer, NativeBatchModel, ServeConfig, TrainConfig, Trainer,
+    Config, InferenceServer, NativeModelFactory, ServeConfig, TrainConfig, Trainer,
 };
 use minitensor::data::Rng;
 #[cfg(feature = "xla")]
@@ -55,6 +55,7 @@ EXAMPLES:
   minitensor train train.steps=200 train.optimizer=adam
   minitensor train train.backend=xla train.artifacts_dir=artifacts
   minitensor serve serve.max_batch=16
+  minitensor serve serve.workers=4 serve.max_wait_ms=2 serve.deadline_ms=50
   minitensor info --artifacts artifacts"
     );
 }
@@ -123,56 +124,69 @@ fn cmd_train(args: &[String]) -> minitensor::Result<()> {
 fn cmd_serve(args: &[String]) -> minitensor::Result<()> {
     let cfg = load_config(args)?;
     let tc = TrainConfig::from_config(&cfg)?;
-    let max_batch: usize = cfg.get_parse_or("serve.max_batch", 32)?;
+    let sc = ServeConfig::from_config(&cfg)?;
     let n_requests: usize = cfg.get_parse_or("serve.requests", 2000)?;
 
-    // Train a small model first (quick native run), then serve it.
+    // Build the model once to size it, then hand the server a factory so
+    // every worker constructs and owns its own replica (identical
+    // weights — the factory snapshots the prototype's parameters).
     println!("preparing model ({} steps on {})…", tc.steps, tc.dataset);
     let trainer = Trainer::new(tc.clone());
     let ds = trainer.dataset()?;
     let in_features = ds.x.dims()[1];
-    let model = trainer.build_model(in_features, ds.classes.max(2));
+    let classes = ds.classes.max(2);
+    let factory = NativeModelFactory::new(in_features, move || {
+        Trainer::new(tc.clone()).build_model(in_features, classes)
+    });
 
-    let server = InferenceServer::start(
-        Box::new(NativeBatchModel::new(model, in_features)),
-        ServeConfig {
-            max_batch,
-            ..ServeConfig::default()
-        },
+    println!(
+        "serving {n_requests} synthetic requests (workers={} max_batch={} max_wait={:?} deadline={:?})…",
+        sc.workers(),
+        sc.max_batch(),
+        sc.max_wait(),
+        sc.deadline(),
     );
-
-    println!("serving {n_requests} synthetic requests…");
+    let server = std::sync::Arc::new(InferenceServer::start(factory, sc)?);
     let mut rng = Rng::new(7);
     let t0 = std::time::Instant::now();
-    let server = std::sync::Arc::new(server);
     let threads: Vec<_> = (0..4)
         .map(|t| {
             let s = server.clone();
             let mut trng = rng.fork(t as u64);
             let per = n_requests / 4;
             std::thread::spawn(move || {
+                let mut errs = 0u64;
                 for _ in 0..per {
                     let feats: Vec<f32> =
                         (0..in_features).map(|_| trng.next_f32()).collect();
-                    s.infer(feats).expect("infer");
+                    if s.infer(feats).is_err() {
+                        errs += 1; // overloaded or deadline-shed
+                    }
                 }
+                errs
             })
         })
         .collect();
+    let mut client_errs = 0u64;
     for t in threads {
-        t.join().expect("client thread");
+        client_errs += t.join().expect("client thread");
     }
     let elapsed = t0.elapsed().as_secs_f64();
     let stats = server.stats();
     println!(
-        "done: {} requests in {:.2}s ({:.0} req/s), {} batches (mean size {:.1}), p50={:.2}ms p99={:.2}ms",
+        "done: {} requests in {:.2}s ({:.0} req/s), {} batches (mean size {:.1}), p50={:.2}ms p95={:.2}ms p99={:.2}ms",
         stats.requests,
         elapsed,
         stats.requests as f64 / elapsed,
         stats.batches,
         stats.mean_batch_size,
         stats.p50_latency_ms,
+        stats.p95_latency_ms,
         stats.p99_latency_ms
+    );
+    println!(
+        "admission: rejected={} shed={} client_errors={client_errs}; per-worker batches {:?}",
+        stats.rejected, stats.shed, stats.worker_batches
     );
     Ok(())
 }

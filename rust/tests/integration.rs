@@ -6,7 +6,7 @@
 use minitensor::autograd::{gradcheck, Var};
 use minitensor::baselines::NaiveTensor;
 use minitensor::coordinator::{
-    Config, InferenceServer, NativeBatchModel, ServeConfig, TrainConfig, Trainer,
+    Config, InferenceServer, NativeModelFactory, ServeConfig, TrainConfig, Trainer,
 };
 use minitensor::data::{self, DataLoader, Rng};
 use minitensor::nn::{losses, Activation, BatchNorm1d, Conv2d, Dense, Dropout, Module, Sequential};
@@ -189,10 +189,8 @@ fn serving_trained_model_end_to_end() {
         opt.step().unwrap();
     }
 
-    let server = InferenceServer::start(
-        Box::new(NativeBatchModel::new(model, 2)),
-        ServeConfig::default(),
-    );
+    let factory = NativeModelFactory::from_trained(&model, 2, move || trainer.build_model(2, 2));
+    let server = InferenceServer::start(factory, ServeConfig::default()).unwrap();
     let mut correct = 0;
     let n = 64;
     for i in 0..n {
@@ -287,10 +285,9 @@ fn train_save_load_serve_workflow() {
         .unwrap()
         .data()
         .to_vec();
-    let server = InferenceServer::start(
-        Box::new(NativeBatchModel::new(model2, 4)),
-        ServeConfig::default(),
-    );
+    let factory =
+        NativeModelFactory::from_trained(&model2, 4, move || build(&mut Rng::new(99)));
+    let server = InferenceServer::start(factory, ServeConfig::default()).unwrap();
     let got = server.infer(ds.x.row(0).unwrap().to_vec()).unwrap();
     for (g, e) in got.iter().zip(&expect) {
         assert!((g - e).abs() < 1e-5, "served {g} vs trained {e}");

@@ -1,0 +1,249 @@
+//! Serving-stack integration tests: the multi-worker continuous-batching
+//! server's correctness properties — replica equivalence, admission
+//! control (fast-reject + deadline shedding), graceful drain, and the
+//! warm per-worker program cache.
+
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use minitensor::coordinator::{
+    BatchModel, FactoryFn, InferenceServer, NativeModelFactory, ServeConfig,
+};
+use minitensor::data::Rng;
+use minitensor::error::{Error, Result};
+use minitensor::nn::{Activation, Dense, Sequential};
+use minitensor::tensor::Tensor;
+
+fn mlp_factory(in_features: usize) -> NativeModelFactory {
+    NativeModelFactory::new(in_features, move || {
+        let mut rng = Rng::new(7);
+        Sequential::new()
+            .add(Dense::new(in_features, 16, &mut rng))
+            .add(Activation::Relu)
+            .add(Dense::new(16, 4, &mut rng))
+    })
+}
+
+/// A model whose forward takes a fixed wall-clock time — lets the tests
+/// hold a worker busy deterministically.
+struct Sleepy {
+    delay: Duration,
+}
+
+impl BatchModel for Sleepy {
+    fn forward_batch(&mut self, x: &Tensor) -> Result<Tensor> {
+        std::thread::sleep(self.delay);
+        let b = x.dims()[0];
+        Tensor::from_vec(vec![0.0; b], &[b, 1])
+    }
+    fn in_features(&self) -> usize {
+        2
+    }
+}
+
+fn sleepy_factory(delay: Duration) -> FactoryFn<impl Fn(usize) -> Result<Box<dyn BatchModel>>> {
+    FactoryFn::new(2, move |_worker| {
+        let m: Box<dyn BatchModel> = Box::new(Sleepy { delay });
+        Ok(m)
+    })
+}
+
+#[test]
+fn multi_worker_replies_bitwise_match_single_worker() {
+    // Per-request outputs must not depend on how requests were batched
+    // or which replica ran them: per-row accumulation order is batch-
+    // composition-invariant, and every replica holds byte-identical
+    // weights (the factory snapshots one prototype).
+    let in_features = 8;
+    let n_requests = 48;
+    let mut rng = Rng::new(99);
+    let requests: Vec<Vec<f32>> = (0..n_requests)
+        .map(|_| (0..in_features).map(|_| rng.next_f32()).collect())
+        .collect();
+
+    // Reference: single worker, forced singleton batches.
+    let cfg1 = ServeConfig::new()
+        .workers(1)
+        .max_batch(1)
+        .max_wait_ms(0)
+        .build()
+        .unwrap();
+    let server1 = InferenceServer::start(mlp_factory(in_features), cfg1).unwrap();
+    let expected: Vec<Vec<u32>> = requests
+        .iter()
+        .map(|r| {
+            server1
+                .infer(r.clone())
+                .unwrap()
+                .iter()
+                .map(|v| v.to_bits())
+                .collect()
+        })
+        .collect();
+    server1.shutdown();
+
+    // 3 workers, concurrent clients, real batch fusion.
+    let cfg3 = ServeConfig::new()
+        .workers(3)
+        .max_batch(8)
+        .max_wait_ms(2)
+        .build()
+        .unwrap();
+    let server3 = Arc::new(InferenceServer::start(mlp_factory(in_features), cfg3).unwrap());
+    let handles: Vec<_> = requests
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let s = server3.clone();
+            let r = r.clone();
+            std::thread::spawn(move || (i, s.infer(r).unwrap()))
+        })
+        .collect();
+    for h in handles {
+        let (i, got) = h.join().unwrap();
+        let got_bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(
+            got_bits, expected[i],
+            "request {i}: multi-worker reply differs from single-worker"
+        );
+    }
+    let stats = server3.stats();
+    assert_eq!(stats.requests, n_requests as u64);
+    assert_eq!(stats.worker_batches.len(), 3);
+    assert_eq!(
+        stats.worker_batches.iter().sum::<u64>(),
+        stats.batches,
+        "per-worker batch series must sum to the total"
+    );
+}
+
+#[test]
+fn saturated_queue_fast_rejects_with_overloaded() {
+    // Pipeline capacity with workers=1, max_batch=1, queue_depth=1:
+    // one executing + two queued batches + one in the dispatcher's hand
+    // + one admission slot. Eight simultaneous clients must overflow it.
+    let cfg = ServeConfig::new()
+        .workers(1)
+        .max_batch(1)
+        .max_wait_ms(0)
+        .queue_depth(1)
+        .build()
+        .unwrap();
+    let server = Arc::new(
+        InferenceServer::start(sleepy_factory(Duration::from_millis(150)), cfg).unwrap(),
+    );
+    let barrier = Arc::new(Barrier::new(8));
+    let handles: Vec<_> = (0..8)
+        .map(|_| {
+            let s = server.clone();
+            let b = barrier.clone();
+            std::thread::spawn(move || {
+                b.wait();
+                s.infer(vec![0.0, 0.0])
+            })
+        })
+        .collect();
+    let mut overloaded = 0;
+    let mut ok = 0;
+    for h in handles {
+        match h.join().unwrap() {
+            Ok(_) => ok += 1,
+            Err(Error::Overloaded { queue_depth }) => {
+                assert_eq!(queue_depth, 1);
+                overloaded += 1;
+            }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert!(ok >= 1, "some requests must be admitted");
+    assert!(
+        overloaded >= 1,
+        "a saturated queue must fast-reject ({ok} ok / {overloaded} overloaded)"
+    );
+    assert!(server.stats().rejected >= overloaded as u64);
+}
+
+#[test]
+fn expired_deadline_requests_are_shed() {
+    let cfg = ServeConfig::new()
+        .workers(1)
+        .max_batch(1)
+        .max_wait_ms(0)
+        .queue_depth(16)
+        .build()
+        .unwrap();
+    let server = Arc::new(
+        InferenceServer::start(sleepy_factory(Duration::from_millis(150)), cfg).unwrap(),
+    );
+    // Occupy the only worker…
+    let s = server.clone();
+    let busy = std::thread::spawn(move || s.infer(vec![1.0, 1.0]));
+    std::thread::sleep(Duration::from_millis(40));
+    // …then submit a request that expires long before the worker frees.
+    let shed = server.infer_deadline(vec![2.0, 2.0], Duration::from_millis(10));
+    match shed {
+        Err(Error::DeadlineExceeded) => {}
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    assert!(busy.join().unwrap().is_ok(), "undeadlined request completes");
+    assert!(server.stats().shed >= 1);
+}
+
+#[test]
+fn drain_answers_all_admitted_requests_then_refuses_new() {
+    let cfg = ServeConfig::new()
+        .workers(1)
+        .max_batch(1)
+        .max_wait_ms(0)
+        .queue_depth(32)
+        .build()
+        .unwrap();
+    let server = Arc::new(
+        InferenceServer::start(sleepy_factory(Duration::from_millis(60)), cfg).unwrap(),
+    );
+    let handles: Vec<_> = (0..5)
+        .map(|_| {
+            let s = server.clone();
+            std::thread::spawn(move || s.infer(vec![0.0, 0.0]))
+        })
+        .collect();
+    // Admission is instantaneous next to the 60 ms forwards: by now all
+    // five are in flight somewhere between the queue and the worker.
+    std::thread::sleep(Duration::from_millis(30));
+    server.drain();
+    // New work is refused immediately…
+    assert!(server.infer(vec![0.0, 0.0]).is_err(), "post-drain infer must fail");
+    // …but every admitted request still gets its real reply.
+    for h in handles {
+        let reply = h.join().unwrap();
+        assert!(reply.is_ok(), "admitted request dropped during drain: {reply:?}");
+    }
+    assert_eq!(server.stats().requests, 5);
+}
+
+#[test]
+fn warm_worker_hits_program_cache_on_repeat_batches() {
+    // PR 5's compiled-Program cache is per-thread; a worker that owns
+    // its replica keeps it warm, so identical batch shapes skip region
+    // partitioning after the first forward. The workers surface their
+    // thread-local engine counters through the server metrics.
+    let cfg = ServeConfig::new()
+        .workers(1)
+        .max_batch(1)
+        .max_wait_ms(0)
+        .build()
+        .unwrap();
+    let server = InferenceServer::start(mlp_factory(4), cfg).unwrap();
+    for _ in 0..4 {
+        server.infer(vec![0.1, 0.2, 0.3, 0.4]).unwrap();
+    }
+    let hits = server.metrics().counter("serve.program_cache_hits");
+    assert!(
+        hits >= 2,
+        "repeat identical batches on a warm worker must hit the program cache (hits={hits})"
+    );
+    let stats = server.stats();
+    assert_eq!(stats.requests, 4);
+    assert!(stats.p95_latency_ms >= stats.p50_latency_ms);
+    server.shutdown();
+}
