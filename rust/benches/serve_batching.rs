@@ -25,7 +25,7 @@ use minitensor::bench_util::{json_rows, Json, Table};
 use minitensor::coordinator::{InferenceServer, NativeModelFactory, ServeConfig, ServeStats};
 use minitensor::data::Rng;
 use minitensor::nn::{Activation, Dense, Sequential};
-use minitensor::runtime::parallel;
+use minitensor::runtime::{parallel, simd};
 
 const IN_FEATURES: usize = 196;
 
@@ -140,6 +140,8 @@ fn main() {
                 ("workers", Json::N(workers as f64)),
                 ("max_batch", Json::N(max_batch as f64)),
                 ("cores", Json::N(cores as f64)),
+                ("simd", Json::S(simd::path().name().into())),
+                ("threads", Json::N(parallel::num_threads() as f64)),
                 ("clients", Json::N(n_clients as f64)),
                 ("requests", Json::N((n_clients * per_client) as f64)),
                 ("req_per_s", Json::N(req_per_s)),
@@ -171,6 +173,8 @@ fn main() {
             ("bench", Json::S("serve_equivalence".into())),
             ("workers", Json::N(workers as f64)),
             ("cores", Json::N(cores as f64)),
+            ("simd", Json::S(simd::path().name().into())),
+            ("threads", Json::N(parallel::num_threads() as f64)),
             ("identical_to_1worker", Json::B(identical)),
         ]);
     }

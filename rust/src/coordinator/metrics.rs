@@ -332,6 +332,76 @@ mod tests {
     }
 
     #[test]
+    fn merging_an_empty_histogram_changes_nothing() {
+        let mut a = Histogram::new();
+        a.observe(0.002);
+        a.observe(0.004);
+        let before_mean = a.mean();
+        a.merge(&Histogram::new());
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.mean(), before_mean);
+        // The empty side's sentinel min/max (+inf/-inf) must not leak
+        // into the merged extremes.
+        assert_eq!(a.percentile(0.0), Some(0.002));
+        assert_eq!(a.percentile(1.0), Some(0.004));
+
+        // And merging *into* an empty histogram reproduces the source.
+        let mut e = Histogram::new();
+        e.merge(&a);
+        assert_eq!(e.count(), a.count());
+        assert_eq!(e.mean(), a.mean());
+        for q in [0.0, 0.5, 1.0] {
+            assert_eq!(e.percentile(q), a.percentile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn empty_histogram_reports_none() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), None);
+        for q in [0.0, 0.5, 1.0] {
+            assert_eq!(h.percentile(q), None, "q={q}");
+        }
+    }
+
+    #[test]
+    fn out_of_range_values_clamp_to_edge_buckets() {
+        // Below range (and zero/negative/NaN) land in bucket 0; above
+        // range lands in the last bucket.
+        assert_eq!(Histogram::bucket(1e-9), 0);
+        assert_eq!(Histogram::bucket(0.0), 0);
+        assert_eq!(Histogram::bucket(-5.0), 0);
+        assert_eq!(Histogram::bucket(f64::NAN), 0);
+        assert_eq!(Histogram::bucket(1e5), BUCKETS - 1);
+        assert_eq!(Histogram::bucket(f64::INFINITY), BUCKETS - 1);
+
+        // Interior percentiles stay within the exact observed range
+        // even though the edge buckets' midpoints lie outside it.
+        let mut h = Histogram::new();
+        for _ in 0..10 {
+            h.observe(1e-9);
+        }
+        for _ in 0..10 {
+            h.observe(1e5);
+        }
+        assert_eq!(h.percentile(0.0), Some(1e-9));
+        assert_eq!(h.percentile(1.0), Some(1e5));
+        let p40 = h.percentile(0.4).unwrap();
+        assert!((1e-9..=1e5).contains(&p40), "{p40}");
+    }
+
+    #[test]
+    fn single_sample_percentile_is_that_value() {
+        let mut h = Histogram::new();
+        h.observe(0.0123);
+        for q in [0.0, 0.25, 0.5, 0.75, 0.99, 1.0] {
+            assert_eq!(h.percentile(q), Some(0.0123), "q={q}");
+        }
+        assert_eq!(h.mean(), Some(0.0123));
+    }
+
+    #[test]
     fn merge_histogram_feeds_named_series() {
         let m = Metrics::new();
         let mut local = Histogram::new();

@@ -32,6 +32,7 @@ use std::time::{Duration, Instant};
 use super::config::ServeConfig;
 use super::metrics::Metrics;
 use crate::error::{Error, Result};
+use crate::runtime::{stats, trace};
 use crate::tensor::Tensor;
 
 /// A model the server can run: takes a `[b, d]` batch, returns `[b, k]`.
@@ -229,6 +230,18 @@ pub struct ServeStats {
     pub shed: u64,
     /// Batches executed per worker (index = worker id).
     pub worker_batches: Vec<u64>,
+    /// Mean time a request spent queued before its batch started
+    /// executing (admission + batch formation + work-queue wait).
+    pub mean_queue_ms: f64,
+    /// Mean time a request's batch spent inside the model forward.
+    pub mean_compute_ms: f64,
+    /// Engine kernel dispatches executed by the worker pool, summed
+    /// across workers (thread-local counters rolled up per batch).
+    pub exec_dispatches: u64,
+    /// SIMD blocks executed by the worker pool.
+    pub simd_blocks: u64,
+    /// Fused kernels executed by the worker pool.
+    pub fused_kernels: u64,
 }
 
 /// The dispatcher→worker hand-off: a bounded deque of formed batches.
@@ -442,6 +455,8 @@ impl InferenceServer {
             reply: reply_tx,
         };
         {
+            let mut asp = trace::span("serve", "admit");
+            asp.arg_u("queue_depth", self.depth.load(Ordering::Relaxed) as u64);
             let guard = self.tx.lock().unwrap();
             let Some(tx) = guard.as_ref() else {
                 return Err(Error::msg("server stopped"));
@@ -482,6 +497,11 @@ impl InferenceServer {
             worker_batches: (0..self.n_workers)
                 .map(|i| self.metrics.counter(&format!("serve.worker{i}.batches")))
                 .collect(),
+            mean_queue_ms: self.metrics.mean("serve.queue_time").unwrap_or(0.0) * 1e3,
+            mean_compute_ms: self.metrics.mean("serve.compute_time").unwrap_or(0.0) * 1e3,
+            exec_dispatches: self.metrics.counter("serve.exec_dispatches"),
+            simd_blocks: self.metrics.counter("serve.simd_blocks"),
+            fused_kernels: self.metrics.counter("serve.fused_kernels"),
         }
     }
 
@@ -548,6 +568,9 @@ fn dispatcher_loop(
                 Err(_) => break 'outer, // admission closed and drained
             }
         }
+        // Formation starts once the batch has its first member; the
+        // span ends when the batch is handed to the worker pool.
+        let form_start = Instant::now();
         // Fill up to max_batch or the flush deadline.
         let flush_at = Instant::now() + max_wait;
         let mut disconnected = false;
@@ -572,6 +595,14 @@ fn dispatcher_loop(
         shed_expired(&mut pending, metrics);
         if !pending.is_empty() {
             metrics.observe("serve.queue_depth", depth.load(Ordering::Relaxed) as f64);
+            trace::record_interval(
+                0,
+                "serve",
+                "batch_form",
+                form_start,
+                Instant::now(),
+                &[("size", trace::ArgVal::U(pending.len() as u64))],
+            );
             queue.push(std::mem::take(&mut pending), cap);
         }
         if disconnected {
@@ -607,13 +638,24 @@ fn worker_loop(
         let x = Tensor::from_vec(flat, &[b, in_features])
             .expect("request feature lengths validated at submit");
 
-        let before = crate::runtime::stats::snapshot();
-        let result = model.forward_batch(&x);
-        let delta = crate::runtime::stats::snapshot().delta(&before);
+        let exec_start = Instant::now();
+        let before = stats::snapshot();
+        let result = {
+            let mut xsp = trace::span("serve", "execute");
+            xsp.arg_u("worker", id as u64);
+            xsp.arg_u("batch", b as u64);
+            model.forward_batch(&x)
+        };
+        let exec_end = Instant::now();
+        let delta = stats::snapshot().delta(&before);
         // Thread-local engine counters surfaced through the shared
-        // registry: the warm-cache story is observable per server.
+        // registry: the warm-cache story is observable per server, and
+        // the kernel-level counters pin what the pool actually executed.
         metrics.incr("serve.program_cache_hits", delta.program_cache_hits);
         metrics.incr("serve.program_cache_misses", delta.program_cache_misses);
+        metrics.incr("serve.exec_dispatches", delta.exec_dispatches);
+        metrics.incr("serve.simd_blocks", delta.simd_blocks);
+        metrics.incr("serve.fused_kernels", delta.fused_kernels);
         metrics.incr("serve.batches", 1);
         metrics.incr(&format!("serve.worker{id}.batches"), 1);
         metrics.incr("serve.requests", b as u64);
@@ -623,10 +665,34 @@ fn worker_loop(
             Ok(out) if out.rank() == 2 && out.dims()[0] == b => {
                 let k = out.dims()[1];
                 let ov = out.to_vec();
+                let compute = exec_end.saturating_duration_since(exec_start);
+                let track = if trace::enabled() {
+                    trace::virtual_track("serve.requests")
+                } else {
+                    0
+                };
                 for (i, r) in batch.drain(..).enumerate() {
                     metrics.observe("serve.latency", r.enqueued.elapsed().as_secs_f64());
+                    let queued = exec_start.saturating_duration_since(r.enqueued);
+                    metrics.observe("serve.queue_time", queued.as_secs_f64());
+                    metrics.observe("serve.compute_time", compute.as_secs_f64());
                     let row = ov[i * k..(i + 1) * k].to_vec();
                     let _ = r.reply.send(Ok(row));
+                    // Full request lifecycle (admit -> queue -> execute
+                    // -> respond) on the synthetic per-request track,
+                    // with the queue/compute breakdown as args.
+                    trace::record_interval(
+                        track,
+                        "serve",
+                        "request",
+                        r.enqueued,
+                        Instant::now(),
+                        &[
+                            ("queue_us", trace::ArgVal::U(queued.as_micros() as u64)),
+                            ("compute_us", trace::ArgVal::U(compute.as_micros() as u64)),
+                            ("worker", trace::ArgVal::U(id as u64)),
+                        ],
+                    );
                 }
             }
             Ok(out) => {
@@ -703,6 +769,12 @@ mod tests {
         assert!(stats.mean_batch_size > 1.0);
         assert_eq!(stats.worker_batches.len(), 1);
         assert_eq!(stats.worker_batches[0], stats.batches);
+        assert!(
+            stats.exec_dispatches > 0,
+            "worker-pool kernel counters must roll up: {stats:?}"
+        );
+        assert!(stats.mean_compute_ms > 0.0);
+        assert!(stats.mean_queue_ms >= 0.0);
     }
 
     #[test]

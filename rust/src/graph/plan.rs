@@ -39,7 +39,7 @@ use super::node::{NodeKind, NodeRef, ReduceOp};
 use crate::dtype::DType;
 use crate::error::Result;
 use crate::ops::exec;
-use crate::runtime::stats;
+use crate::runtime::{stats, trace};
 use crate::shape::Shape;
 use crate::tensor::Tensor;
 
@@ -69,6 +69,19 @@ enum StepKind {
     EagerReduce { k: ReduceOp },
     /// Eager replay of a last-axis reduction over one materialized input.
     EagerAxisReduce { k: ReduceOp, keepdim: bool },
+}
+
+impl StepKind {
+    /// Short label for the trace's per-step region spans.
+    fn name(&self) -> &'static str {
+        match self {
+            StepKind::Map { .. } => "map",
+            StepKind::Reduce { .. } => "reduce",
+            StepKind::AxisReduce { .. } => "axis_reduce",
+            StepKind::EagerReduce { .. } => "eager_reduce",
+            StepKind::EagerAxisReduce { .. } => "eager_axis_reduce",
+        }
+    }
 }
 
 /// One compiled dispatch.
@@ -364,6 +377,9 @@ impl Plan {
         let mut slots: Vec<Option<Tensor>> = Vec::new();
         slots.resize_with(self.steps.len(), || None);
         for (i, step) in self.steps.iter().enumerate() {
+            let mut rsp = trace::span("graph", "region");
+            rsp.arg_u("step", i as u64);
+            rsp.arg_s("kind", step.kind.name());
             let t = {
                 let ins: Vec<&Tensor> = step
                     .inputs
@@ -528,9 +544,11 @@ pub(crate) fn eval(root: &NodeRef) -> Result<Tensor> {
         return Ok(t.clone());
     }
     let (sig, leaves, order) = signature(root);
+    let mut esp = trace::span("graph", "eval");
     let cached = CACHE.with(|c| c.borrow_mut().get(&sig));
     let plan = match cached {
         Some(p) => {
+            esp.arg_s("cache", "hit");
             stats::record_program_cache_hit();
             // Degraded regions dispatch per-op on every execution, so a
             // cached degraded plan keeps showing up in the counter.
@@ -538,17 +556,22 @@ pub(crate) fn eval(root: &NodeRef) -> Result<Tensor> {
             p
         }
         None => {
+            esp.arg_s("cache", "miss");
             stats::record_program_cache_miss();
             // collect_region records each cap degradation as it happens;
             // the delta pins this plan's count for cache-hit re-runs.
             let before = stats::snapshot().fusion_bailouts;
-            let mut plan = compile(root, &order);
+            let mut plan = {
+                let _csp = trace::span("graph", "compile");
+                compile(root, &order)
+            };
             plan.bailouts = stats::snapshot().fusion_bailouts - before;
             let p = Rc::new(plan);
             CACHE.with(|c| c.borrow_mut().insert(sig, Rc::clone(&p)));
             p
         }
     };
+    esp.arg_u("steps", plan.steps.len() as u64);
     plan.execute(&leaves)
 }
 

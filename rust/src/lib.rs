@@ -85,8 +85,21 @@
 //! deadlines shed expired work with [`Error::DeadlineExceeded`], and
 //! `drain`/`shutdown` answer everything admitted before stopping.
 //! [`coordinator::ServeStats`] reports p50/p95/p99 latency from a
-//! constant-memory log-bucketed histogram; replies are byte-identical
-//! at any worker count.
+//! constant-memory log-bucketed histogram — plus a per-request
+//! queue-vs-compute breakdown and the engine kernel counters the worker
+//! pool executed; replies are byte-identical at any worker count.
+//!
+//! ## Observability
+//!
+//! [`runtime::stats`] keeps thread-local counters on every kernel
+//! dispatch (snapshot / delta / take-and-reset), and [`runtime::trace`]
+//! is an always-compiled, off-by-default timeline tracer: with
+//! `MINITENSOR_TRACE=<path>` (or [`runtime::trace::enable`]) every exec
+//! dispatch, worker-pool chunk, graph compile/cache/region step, and
+//! serve request phase records a span into fixed-capacity per-thread
+//! ring buffers, exported as Chrome trace-event JSON for
+//! `chrome://tracing` / Perfetto. Disabled cost is one relaxed atomic
+//! load per site; tracing never affects kernel math or determinism.
 //!
 //! ## Feature flags
 //!

@@ -3,6 +3,7 @@
 //! ```text
 //! minitensor train [--config file.cfg] [key=value ...]
 //! minitensor serve [--config file.cfg] [key=value ...]
+//! minitensor trace <train|serve> [key=value ...]
 //! minitensor info  [--artifacts DIR]
 //! minitensor bench-quick
 //! ```
@@ -13,7 +14,7 @@ use minitensor::coordinator::{
 use minitensor::data::Rng;
 #[cfg(feature = "xla")]
 use minitensor::runtime::Engine;
-use minitensor::runtime::parallel;
+use minitensor::runtime::{parallel, trace};
 use minitensor::tensor::Tensor;
 
 fn main() {
@@ -23,6 +24,7 @@ fn main() {
     let code = match cmd {
         "train" => cmd_train(rest),
         "serve" => cmd_serve(rest),
+        "trace" => cmd_trace(rest),
         "info" => cmd_info(rest),
         "bench-quick" => cmd_bench_quick(),
         "help" | "--help" | "-h" => {
@@ -48,6 +50,7 @@ fn print_help() {
 USAGE:
   minitensor train [--config FILE] [section.key=value ...]
   minitensor serve [--config FILE] [section.key=value ...]
+  minitensor trace <train|serve> [section.key=value ...]
   minitensor info  [--artifacts DIR]
   minitensor bench-quick
 
@@ -56,7 +59,14 @@ EXAMPLES:
   minitensor train train.backend=xla train.artifacts_dir=artifacts
   minitensor serve serve.max_batch=16
   minitensor serve serve.workers=4 serve.max_wait_ms=2 serve.deadline_ms=50
-  minitensor info --artifacts artifacts"
+  minitensor trace train
+  MINITENSOR_TRACE=serve.json minitensor trace serve serve.workers=2
+  minitensor info --artifacts artifacts
+
+Any command also honors MINITENSOR_TRACE=<path>: tracing turns on and
+the Chrome-trace JSON (chrome://tracing, ui.perfetto.dev) is written
+there on exit. `trace` runs a bounded demo workload and always writes
+a trace, defaulting to minitensor-<demo>.trace.json."
     );
 }
 
@@ -114,10 +124,22 @@ fn cmd_train(args: &[String]) -> minitensor::Result<()> {
         report.steps_per_sec
     );
     print!("{}", trainer.metrics.report());
-    // Engine-level counters: dispatches/allocations of the fusable
-    // kernel families (elementwise/unary/rows/reduce/fused — matmul and
-    // conv are not yet instrumented) plus lazy-graph fusion totals.
+    // Engine-level counters: dispatches/allocations of every kernel
+    // family plus lazy-graph fusion totals; the trace summary rides
+    // along whenever MINITENSOR_TRACE (or `minitensor trace`) is active.
     print!("{}", minitensor::runtime::stats::report());
+    if trace::enabled() {
+        print!("{}", trace::summary());
+    }
+    flush_trace()?;
+    Ok(())
+}
+
+/// If `MINITENSOR_TRACE=<path>` is set, write the Chrome trace there.
+fn flush_trace() -> minitensor::Result<()> {
+    if let Some((path, n)) = trace::flush_env()? {
+        println!("trace: {n} spans -> {path} (chrome://tracing / ui.perfetto.dev)");
+    }
     Ok(())
 }
 
@@ -188,6 +210,50 @@ fn cmd_serve(args: &[String]) -> minitensor::Result<()> {
         "admission: rejected={} shed={} client_errors={client_errs}; per-worker batches {:?}",
         stats.rejected, stats.shed, stats.worker_batches
     );
+    println!(
+        "breakdown: mean queue {:.2}ms / mean compute {:.2}ms per request; \
+         pool ran {} dispatches, {} simd blocks, {} fused kernels",
+        stats.mean_queue_ms,
+        stats.mean_compute_ms,
+        stats.exec_dispatches,
+        stats.simd_blocks,
+        stats.fused_kernels
+    );
+    if trace::enabled() {
+        print!("{}", trace::summary());
+    }
+    flush_trace()?;
+    Ok(())
+}
+
+/// Run a bounded demo workload with tracing force-enabled and write the
+/// Chrome trace (to `MINITENSOR_TRACE` if set, else a default path).
+fn cmd_trace(args: &[String]) -> minitensor::Result<()> {
+    let demo = args.first().map(String::as_str).unwrap_or("train");
+    let rest = &args[1.min(args.len())..];
+    let mut full: Vec<String> = match demo {
+        // Bounded defaults come first so explicit overrides win.
+        "train" => vec!["train.steps=30".into()],
+        "serve" => vec!["train.steps=5".into(), "serve.requests=400".into()],
+        other => {
+            return Err(minitensor::Error::Config(format!(
+                "unknown trace demo '{other}' (expected 'train' or 'serve')"
+            )))
+        }
+    };
+    full.extend(rest.iter().cloned());
+    trace::enable();
+    if demo == "train" {
+        cmd_train(&full)?;
+    } else {
+        cmd_serve(&full)?;
+    }
+    // flush_trace inside the demo already covered the env-path case.
+    if trace::env_path().is_none() {
+        let out = format!("minitensor-{demo}.trace.json");
+        let n = trace::write_chrome_trace(&out)?;
+        println!("trace: {n} spans -> {out} (chrome://tracing / ui.perfetto.dev)");
+    }
     Ok(())
 }
 
@@ -264,5 +330,9 @@ fn cmd_bench_quick() -> minitensor::Result<()> {
     });
     println!("fused relu(a*b+a) 1e6: {}", fmt_ns(s.median_ns));
     print!("{}", minitensor::runtime::stats::report());
+    if trace::enabled() {
+        print!("{}", trace::summary());
+    }
+    flush_trace()?;
     Ok(())
 }

@@ -160,6 +160,9 @@ pub fn conv2d(x: &Tensor, weight: &Tensor, spec: Conv2dSpec) -> Result<Tensor> {
 
     crate::runtime::stats::record_dispatch();
     crate::runtime::stats::record_output_alloc();
+    let mut sp = crate::runtime::trace::span("exec", "conv2d");
+    sp.arg_u("images", n as u64);
+    sp.arg_u("elems", (n * cout * oh * ow) as u64);
     let xc = x.contiguous();
     let wc = weight.contiguous();
     let xs = xc.contiguous_data().unwrap();
@@ -225,6 +228,8 @@ pub fn conv2d_backward_input(
     let k = cin * kh * kw;
     crate::runtime::stats::record_dispatch();
     crate::runtime::stats::record_output_alloc();
+    let mut sp = crate::runtime::trace::span("exec", "conv2d_bwd_input");
+    sp.arg_u("images", n as u64);
 
     let gc = grad_out.contiguous();
     let gs = gc.contiguous_data().unwrap();
@@ -352,6 +357,8 @@ pub fn conv2d_backward_weight(
     let k = cin * kh * kw;
     crate::runtime::stats::record_dispatch();
     crate::runtime::stats::record_output_alloc();
+    let mut sp = crate::runtime::trace::span("exec", "conv2d_bwd_weight");
+    sp.arg_u("images", n as u64);
 
     let xc = x.contiguous();
     let xs = xc.contiguous_data().unwrap();

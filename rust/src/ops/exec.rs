@@ -32,7 +32,7 @@ use std::mem::MaybeUninit;
 
 use crate::dtype::DType;
 use crate::error::{Error, Result};
-use crate::runtime::{parallel, simd, stats};
+use crate::runtime::{parallel, simd, stats, trace};
 use crate::shape::{Shape, StridedIter};
 use crate::tensor::{pool, Tensor};
 
@@ -317,6 +317,8 @@ pub fn binary_op(
     let dtype = a.dtype().promote(b.dtype());
     let n = out_shape.numel();
     stats::record_dispatch();
+    let mut sp = trace::span("exec", "binary_op");
+    sp.arg_u("elems", n as u64);
 
     // Degenerate: any zero-sized dimension → empty result, no kernel run
     // (also shields the row tier from `k == 0` chunking).
@@ -328,6 +330,7 @@ pub fn binary_op(
     // slice loop.
     if a.shape() == b.shape() {
         if let (Some(sa), Some(sb)) = (a.contiguous_data(), b.contiguous_data()) {
+            sp.arg_u("tier", 1);
             let mut out = take_output(n);
             let ptr = SyncPtr::new(&mut out);
             for_chunks(n, 1, |s, e| {
@@ -351,6 +354,7 @@ pub fn binary_op(
         && a.dims()[a.rank() - 1] == b.dims()[0]
     {
         if let (Some(sa), Some(sb)) = (a.contiguous_data(), b.contiguous_data()) {
+            sp.arg_u("tier", 2);
             let k = sb.len();
             let rows = n / k;
             let mut out = take_output(n);
@@ -371,6 +375,7 @@ pub fn binary_op(
 
     // Tier 3: general strided broadcast walk, chunked over the output's
     // row-major linear order.
+    sp.arg_u("tier", 3);
     let sa = a.shape().broadcast_strides(a.strides(), &out_shape)?;
     let sb = b.shape().broadcast_strides(b.strides(), &out_shape)?;
     let da = a.storage_slice();
@@ -399,6 +404,9 @@ pub fn binary_op(
 pub fn unary_op(t: &Tensor, f: impl Fn(f32) -> f32 + Sync) -> Tensor {
     let n = t.numel();
     stats::record_dispatch();
+    let mut sp = trace::span("exec", "unary_op");
+    sp.arg_u("elems", n as u64);
+    sp.arg_u("tier", if t.contiguous_data().is_some() { 1 } else { 3 });
     let out: Vec<f32> = match t.contiguous_data() {
         Some(s) if n > 0 => {
             let mut out = take_output(n);
@@ -468,6 +476,10 @@ pub fn binary_simd(a: &Tensor, b: &Tensor, op: simd::BinOp) -> Result<Tensor> {
         if let (Some(sa), Some(sb)) = (a.contiguous_data(), b.contiguous_data()) {
             stats::record_dispatch();
             record_simd(n);
+            let mut sp = trace::span("exec", "binary_simd");
+            sp.arg_u("elems", n as u64);
+            sp.arg_u("tier", 1);
+            sp.arg_s("simd", simd::path().name());
             let mut out = take_output(n);
             let ptr = SyncPtr::new(&mut out);
             for_chunks(n, 1, |s, e| {
@@ -495,6 +507,10 @@ pub fn binary_simd(a: &Tensor, b: &Tensor, op: simd::BinOp) -> Result<Tensor> {
         if let (Some(sa), Some(sb)) = (a.contiguous_data(), b.contiguous_data()) {
             stats::record_dispatch();
             record_simd(n);
+            let mut sp = trace::span("exec", "binary_simd");
+            sp.arg_u("elems", n as u64);
+            sp.arg_u("tier", 2);
+            sp.arg_s("simd", simd::path().name());
             let k = sb.len();
             let rows = n / k;
             let mut out = take_output(n);
@@ -530,6 +546,10 @@ pub fn unary_simd(t: &Tensor, op: simd::UnOp) -> Tensor {
         if let Some(s) = t.contiguous_data() {
             stats::record_dispatch();
             record_simd(n);
+            let mut sp = trace::span("exec", "unary_simd");
+            sp.arg_u("elems", n as u64);
+            sp.arg_u("tier", 1);
+            sp.arg_s("simd", simd::path().name());
             let mut out = take_output(n);
             let ptr = SyncPtr::new(&mut out);
             for_chunks(n, 1, |a, b| {
@@ -562,6 +582,9 @@ pub fn ternary_select(c: &Tensor, a: &Tensor, b: &Tensor) -> Result<Tensor> {
     let plans = plan_fused_inputs(&[c, a, b], &out_shape)?;
     stats::record_dispatch();
     record_simd(out_shape.numel());
+    let mut sp = trace::span("exec", "ternary_select");
+    sp.arg_u("elems", out_shape.numel() as u64);
+    sp.arg_s("simd", simd::path().name());
     composed_dispatch(&plans, &out_shape, dtype, 3, |ins, out| {
         // SAFETY: composed blocks are equal-length; `select_to` writes
         // every element of the band.
@@ -589,6 +612,9 @@ pub fn map_rows(
         .ok_or_else(|| Error::msg(format!("{op}: rank must be >= 1")))?;
     let n = t.numel();
     stats::record_dispatch();
+    let mut sp = trace::span("exec", op);
+    sp.arg_u("elems", n as u64);
+    sp.arg_u("row_len", k as u64);
     if k == 0 || n == 0 {
         return Tensor::from_vec(Vec::new(), t.dims());
     }
@@ -636,6 +662,10 @@ pub fn map_rows_block(
         .ok_or_else(|| Error::msg(format!("{op}: rank must be >= 1")))?;
     let n = t.numel();
     stats::record_dispatch();
+    let mut sp = trace::span("exec", op);
+    sp.arg_u("elems", n as u64);
+    sp.arg_u("row_len", k as u64);
+    sp.arg_s("simd", simd::path().name());
     if k == 0 || n == 0 {
         return Tensor::from_vec(Vec::new(), t.dims());
     }
@@ -781,6 +811,10 @@ pub fn fused_op(
     let plans = plan_fused_inputs(inputs, out_shape)?;
     stats::record_dispatch();
     stats::record_fused(fused_ops, out_shape.numel());
+    let mut sp = trace::span("exec", "fused_op");
+    sp.arg_u("elems", out_shape.numel() as u64);
+    sp.arg_u("ops", fused_ops as u64);
+    sp.arg_s("simd", simd::path().name());
     let unit = (plans.len() + fused_ops).max(1);
     composed_dispatch(&plans, out_shape, dtype, unit, eval)
 }
@@ -799,6 +833,8 @@ pub fn ternary_op(
     let dtype = c.dtype().promote(a.dtype()).promote(b.dtype());
     let plans = plan_fused_inputs(&[c, a, b], &out_shape)?;
     stats::record_dispatch();
+    let mut sp = trace::span("exec", "ternary_op");
+    sp.arg_u("elems", out_shape.numel() as u64);
     composed_dispatch(&plans, &out_shape, dtype, 3, |ins, out| {
         for (i, o) in out.iter_mut().enumerate() {
             o.write(f(ins[0][i], ins[1][i], ins[2][i]));
@@ -878,6 +914,10 @@ pub fn fused_reduce(
     let n = virt_shape.numel();
     stats::record_dispatch();
     stats::record_fused(fused_ops, n);
+    let mut sp = trace::span("exec", "fused_reduce");
+    sp.arg_u("elems", n as u64);
+    sp.arg_u("ops", fused_ops as u64);
+    sp.arg_s("simd", simd::path().name());
     Ok(reduce_fixed(
         n,
         REDUCE_CHUNK,
@@ -941,6 +981,10 @@ pub fn fused_axis_reduce(
     debug_assert!(k == 0 || out_len == n / k, "out_dims must hold one value per row");
     stats::record_dispatch();
     stats::record_fused(fused_ops, n);
+    let mut sp = trace::span("exec", "fused_axis_reduce");
+    sp.arg_u("elems", n as u64);
+    sp.arg_u("ops", fused_ops as u64);
+    sp.arg_s("simd", simd::path().name());
     if out_len == 0 {
         return Tensor::from_vec(Vec::new(), out_dims);
     }

@@ -239,6 +239,10 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     if ar == 2 && br == 2 {
         crate::runtime::stats::record_dispatch();
         crate::runtime::stats::record_output_alloc();
+        let mut sp = crate::runtime::trace::span("exec", "matmul");
+        sp.arg_u("m", m as u64);
+        sp.arg_u("k", ka as u64);
+        sp.arg_u("n", n as u64);
         let ac = a.contiguous();
         let bc = b.contiguous();
         let mut c = vec![0.0f32; m * n];
@@ -272,6 +276,10 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     // SGEMM detects it is on a worker and stays serial).
     crate::runtime::stats::record_dispatch();
     crate::runtime::stats::record_output_alloc();
+    let mut sp = crate::runtime::trace::span("exec", "matmul_batched");
+    sp.arg_u("batch", batch as u64);
+    sp.arg_u("m", m as u64);
+    sp.arg_u("n", n as u64);
     let mut out = vec![0.0f32; batch * m * n];
     let optr = exec::SyncPtr::new_raw(out.as_mut_ptr());
     exec::for_chunks(batch, 2 * m * ka * n, |b0, b1| {
@@ -332,6 +340,10 @@ impl Tensor {
             });
         }
         crate::runtime::stats::record_dispatch();
+        let mut sp = crate::runtime::trace::span("exec", "matmul_nt");
+        sp.arg_u("m", m as u64);
+        sp.arg_u("k", k as u64);
+        sp.arg_u("n", d as u64);
         let xc = self.contiguous();
         let wc = w.contiguous();
         let xs = xc.contiguous_data().unwrap();

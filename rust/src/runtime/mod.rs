@@ -15,6 +15,7 @@ mod engine;
 pub mod parallel;
 pub mod simd;
 pub mod stats;
+pub mod trace;
 
 pub use artifact::{Artifact, Manifest};
 #[cfg(feature = "xla")]

@@ -292,6 +292,12 @@ pub fn parallel_for(len: usize, grain: usize, body: &(dyn Fn(usize, usize) + Syn
         let latch = Arc::clone(&latch);
         pool.submit(Box::new(move || {
             let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                // Per-chunk span on the worker's own timeline track, so
+                // idle gaps between chunks (imbalance, queueing) are
+                // visible in the trace viewer.
+                let mut sp = super::trace::span("parallel", "chunk");
+                sp.arg_u("start", s as u64);
+                sp.arg_u("len", (e - s) as u64);
                 body_static(s, e);
             }))
             .is_ok();
@@ -310,8 +316,13 @@ pub fn parallel_for(len: usize, grain: usize, body: &(dyn Fn(usize, usize) + Syn
     // false to get here, so resetting to false is correct; catch_unwind
     // ensures the reset happens even when the chunk panics.
     IN_WORKER.with(|w| w.set(true));
-    let main_result =
-        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(0, first_end)));
+    let main_result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut sp = super::trace::span("parallel", "chunk");
+        sp.arg_u("start", 0);
+        sp.arg_u("len", first_end as u64);
+        sp.arg_u("inline", 1);
+        body(0, first_end)
+    }));
     IN_WORKER.with(|w| w.set(false));
     latch.wait();
     if let Err(payload) = main_result {
@@ -363,6 +374,8 @@ pub fn parallel_for_indexed(tasks: usize, body: &(dyn Fn(usize) + Sync)) {
                 if i >= tasks {
                     break;
                 }
+                let mut sp = super::trace::span("parallel", "task");
+                sp.arg_u("i", i as u64);
                 body_static(i);
             }))
             .is_ok();
@@ -381,6 +394,8 @@ pub fn parallel_for_indexed(tasks: usize, body: &(dyn Fn(usize) + Sync)) {
         if i >= tasks {
             break;
         }
+        let mut sp = super::trace::span("parallel", "task");
+        sp.arg_u("i", i as u64);
         body(i);
     }));
     IN_WORKER.with(|w| w.set(false));

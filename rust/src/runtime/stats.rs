@@ -110,6 +110,27 @@ pub fn snapshot() -> ExecStats {
     }
 }
 
+/// Snapshot this thread's counters and reset them to zero.
+///
+/// The interval-rate primitive for long-running processes: a serve
+/// worker (or any periodic reporter) calls `take()` once per reporting
+/// interval and gets the increments since the previous call, instead of
+/// process-lifetime monotonic totals. Only the calling thread's
+/// counters are affected.
+pub fn take() -> ExecStats {
+    let s = snapshot();
+    EXEC_DISPATCHES.with(|c| c.set(0));
+    OUTPUT_ALLOCS.with(|c| c.set(0));
+    FUSED_KERNELS.with(|c| c.set(0));
+    FUSED_OPS.with(|c| c.set(0));
+    FUSED_ELEMS.with(|c| c.set(0));
+    PROGRAM_CACHE_HITS.with(|c| c.set(0));
+    PROGRAM_CACHE_MISSES.with(|c| c.set(0));
+    FUSION_BAILOUTS.with(|c| c.set(0));
+    SIMD_BLOCKS.with(|c| c.set(0));
+    s
+}
+
 /// One exec-layer kernel dispatch (called by the funnels in `ops::exec`).
 pub(crate) fn record_dispatch() {
     EXEC_DISPATCHES.with(|c| c.set(c.get() + 1));
@@ -219,6 +240,29 @@ mod tests {
         assert!(r.contains("fused_kernels="));
         assert!(r.contains("program_hits="));
         assert!(r.contains("fusion_bailouts="));
+    }
+
+    #[test]
+    fn take_resets_only_the_calling_thread() {
+        // Run on a fresh thread so concurrent unit tests on this thread's
+        // counters can't interleave between the take() calls.
+        std::thread::spawn(|| {
+            record_dispatch();
+            record_fused(2, 8);
+            record_simd_blocks(3);
+            let taken = take();
+            assert_eq!(taken.exec_dispatches, 1);
+            assert_eq!(taken.fused_kernels, 1);
+            assert_eq!(taken.fused_ops, 2);
+            assert_eq!(taken.fused_elems, 8);
+            assert_eq!(taken.simd_blocks, 3);
+            // After take(), the interval restarts from zero.
+            assert_eq!(take(), ExecStats::default());
+            record_dispatch();
+            assert_eq!(take().exec_dispatches, 1);
+        })
+        .join()
+        .unwrap();
     }
 
     #[test]

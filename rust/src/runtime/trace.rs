@@ -1,0 +1,581 @@
+//! Engine-wide timeline tracing: per-dispatch spans, Chrome-trace export.
+//!
+//! An always-compiled, off-by-default tracing subsystem. When enabled
+//! (`MINITENSOR_TRACE=<path>` or [`enable`]), the instrumented layers —
+//! every `ops::exec` dispatch funnel, the worker-pool chunk bodies in
+//! `runtime::parallel`, the graph evaluator's compile/cache/region steps,
+//! and the serve stack's per-request lifecycle — record timestamped spans
+//! into fixed-capacity per-thread ring buffers (overwrite-oldest, no
+//! steady-state allocation). [`chrome_trace_json`] serializes everything
+//! recorded so far to Chrome trace-event JSON loadable in
+//! `chrome://tracing` or <https://ui.perfetto.dev>, and [`summary`]
+//! renders a top-K-by-total-time table next to the engine report.
+//!
+//! **Disabled cost:** the hot path is a single relaxed atomic load
+//! ([`enabled`]) — no clock read, no allocation, no lock. The eager and
+//! fused dispatch rates in `benches/fusion.rs` are the regression guard.
+//!
+//! **Recording cost:** two monotonic clock reads plus a copy into the
+//! calling thread's own ring. Each ring is guarded by a mutex that is
+//! uncontended except while a flush ([`events`]/[`clear`]) walks the
+//! registry, so the record path never waits on other recording threads.
+//!
+//! **Capacity:** rings hold [`ring_capacity`] spans each (default
+//! [`DEFAULT_RING_CAPACITY`], knob `MINITENSOR_TRACE_CAPACITY` or
+//! [`set_ring_capacity`]); when full, the oldest span is overwritten and
+//! [`dropped`] counts the loss. Capacity is read once per thread, when
+//! its ring records its first span.
+//!
+//! Spans carry `&'static str` names/categories and up to three
+//! `key=value` args (integers or static strings), so recording never
+//! allocates. Tracing is observational only: it does not touch kernel
+//! math, and the bitwise determinism contract (scalar ≡ SIMD ≡ any
+//! thread count) holds with tracing on or off.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU32, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Default per-thread ring capacity, in spans (~3 MB per active thread).
+pub const DEFAULT_RING_CAPACITY: usize = 16_384;
+
+const STATE_UNINIT: u8 = 0;
+const STATE_OFF: u8 = 1;
+const STATE_ON: u8 = 2;
+
+static STATE: AtomicU8 = AtomicU8::new(STATE_UNINIT);
+static RING_CAP: AtomicUsize = AtomicUsize::new(0);
+static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+static REGISTRY: Mutex<Vec<Arc<RingHandle>>> = Mutex::new(Vec::new());
+static VTRACKS: Mutex<Vec<(&'static str, u32)>> = Mutex::new(Vec::new());
+
+/// Process-wide time origin; all span timestamps are nanoseconds since
+/// this instant, so spans from different threads share one timeline.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// A span argument value: an integer or a static string.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArgVal {
+    U(u64),
+    S(&'static str),
+}
+
+/// Up to three `key=value` args per span; an empty key marks an unused slot.
+pub type Args = [(&'static str, ArgVal); 3];
+
+const NO_ARGS: Args = [("", ArgVal::U(0)); 3];
+
+/// One recorded span, as stored in the rings and returned by [`events`].
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Subsystem category (`"exec"`, `"parallel"`, `"graph"`, `"serve"`).
+    pub cat: &'static str,
+    /// Span name within the category.
+    pub name: &'static str,
+    /// Start, nanoseconds since the process trace epoch.
+    pub t0_ns: u64,
+    /// Duration in nanoseconds.
+    pub dur_ns: u64,
+    /// Track (Chrome `tid`) the span renders on: the recording thread's
+    /// id, or a [`virtual_track`] id (e.g. the serve request track).
+    pub track: u32,
+    /// `key=value` tags; slots with an empty key are unused.
+    pub args: Args,
+}
+
+struct RingData {
+    spans: Vec<Event>,
+    cap: usize,
+    head: usize,
+    dropped: u64,
+}
+
+struct RingHandle {
+    tid: u32,
+    name: String,
+    data: Mutex<RingData>,
+}
+
+thread_local! {
+    static RING: RefCell<Option<Arc<RingHandle>>> = const { RefCell::new(None) };
+}
+
+/// Is tracing on? One relaxed atomic load in the steady state — this is
+/// the entire cost a disabled trace adds to a kernel dispatch.
+#[inline]
+pub fn enabled() -> bool {
+    let s = STATE.load(Ordering::Relaxed);
+    if s == STATE_UNINIT {
+        return resolve_env();
+    }
+    s == STATE_ON
+}
+
+/// First-call resolution: `MINITENSOR_TRACE=<path>` turns tracing on.
+#[cold]
+fn resolve_env() -> bool {
+    let on = env_path().is_some();
+    if on {
+        let _ = epoch();
+    }
+    let target = if on { STATE_ON } else { STATE_OFF };
+    let _ = STATE.compare_exchange(STATE_UNINIT, target, Ordering::Relaxed, Ordering::Relaxed);
+    STATE.load(Ordering::Relaxed) == STATE_ON
+}
+
+/// The `MINITENSOR_TRACE` output path, if set (read once per process).
+pub fn env_path() -> Option<String> {
+    static PATH: OnceLock<Option<String>> = OnceLock::new();
+    PATH.get_or_init(|| {
+        std::env::var("MINITENSOR_TRACE")
+            .ok()
+            .filter(|s| !s.trim().is_empty())
+    })
+    .clone()
+}
+
+/// Turn tracing on programmatically (equivalent to `MINITENSOR_TRACE`,
+/// minus the implied output path — pair with [`write_chrome_trace`]).
+pub fn enable() {
+    let _ = epoch();
+    STATE.store(STATE_ON, Ordering::Relaxed);
+}
+
+/// Turn tracing off. Already-recorded spans stay in the rings.
+pub fn disable() {
+    STATE.store(STATE_OFF, Ordering::Relaxed);
+}
+
+/// Override the per-thread ring capacity (spans). Applies to rings
+/// created after the call — each thread sizes its ring at first record.
+pub fn set_ring_capacity(cap: usize) {
+    RING_CAP.store(cap.max(8), Ordering::Relaxed);
+}
+
+/// Per-thread ring capacity: [`set_ring_capacity`] wins, then
+/// `MINITENSOR_TRACE_CAPACITY`, then [`DEFAULT_RING_CAPACITY`].
+pub fn ring_capacity() -> usize {
+    let v = RING_CAP.load(Ordering::Relaxed);
+    if v != 0 {
+        return v;
+    }
+    let resolved = std::env::var("MINITENSOR_TRACE_CAPACITY")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .map(|n| n.max(8))
+        .unwrap_or(DEFAULT_RING_CAPACITY);
+    let _ = RING_CAP.compare_exchange(0, resolved, Ordering::Relaxed, Ordering::Relaxed);
+    RING_CAP.load(Ordering::Relaxed)
+}
+
+/// A named synthetic timeline track (rendered as its own "thread" in the
+/// trace viewer) for spans that don't belong to any OS thread — e.g. the
+/// serve stack's per-request lifecycle track. Idempotent per name.
+pub fn virtual_track(name: &'static str) -> u32 {
+    let mut v = VTRACKS.lock().unwrap();
+    if let Some(&(_, id)) = v.iter().find(|(n, _)| *n == name) {
+        return id;
+    }
+    let id = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    v.push((name, id));
+    id
+}
+
+fn register_ring() -> Arc<RingHandle> {
+    let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    let name = std::thread::current()
+        .name()
+        .unwrap_or("unnamed")
+        .to_string();
+    let cap = ring_capacity();
+    let h = Arc::new(RingHandle {
+        tid,
+        name,
+        data: Mutex::new(RingData {
+            spans: Vec::with_capacity(cap),
+            cap,
+            head: 0,
+            dropped: 0,
+        }),
+    });
+    REGISTRY.lock().unwrap().push(h.clone());
+    h
+}
+
+fn push_event(mut ev: Event) {
+    RING.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let h = slot.get_or_insert_with(register_ring);
+        if ev.track == 0 {
+            ev.track = h.tid;
+        }
+        let mut d = h.data.lock().unwrap();
+        if d.spans.len() < d.cap {
+            d.spans.push(ev);
+        } else if d.cap > 0 {
+            let head = d.head;
+            d.spans[head] = ev;
+            d.head = (head + 1) % d.cap;
+            d.dropped += 1;
+        }
+    });
+}
+
+fn rel_ns(t: Instant) -> u64 {
+    t.saturating_duration_since(epoch()).as_nanos() as u64
+}
+
+/// RAII span: records `[construction, drop]` on the calling thread's
+/// ring. When tracing is disabled the guard is inert — no clock read, no
+/// ring touch — and the arg setters are no-ops.
+pub struct SpanGuard {
+    start: Option<Instant>,
+    cat: &'static str,
+    name: &'static str,
+    args: Args,
+    n_args: u8,
+}
+
+/// Open a span; it closes (and records) when the guard drops.
+#[inline]
+pub fn span(cat: &'static str, name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard {
+            start: None,
+            cat,
+            name,
+            args: NO_ARGS,
+            n_args: 0,
+        };
+    }
+    SpanGuard {
+        start: Some(Instant::now()),
+        cat,
+        name,
+        args: NO_ARGS,
+        n_args: 0,
+    }
+}
+
+impl SpanGuard {
+    #[inline]
+    fn push_arg(&mut self, key: &'static str, val: ArgVal) {
+        if self.start.is_none() {
+            return;
+        }
+        let n = self.n_args as usize;
+        if n < self.args.len() {
+            self.args[n] = (key, val);
+            self.n_args += 1;
+        }
+    }
+
+    /// Tag the span with an integer arg (no-op when tracing is off).
+    #[inline]
+    pub fn arg_u(&mut self, key: &'static str, val: u64) {
+        self.push_arg(key, ArgVal::U(val));
+    }
+
+    /// Tag the span with a static-string arg (no-op when tracing is off).
+    #[inline]
+    pub fn arg_s(&mut self, key: &'static str, val: &'static str) {
+        self.push_arg(key, ArgVal::S(val));
+    }
+}
+
+impl Drop for SpanGuard {
+    #[inline]
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            let dur_ns = t0.elapsed().as_nanos() as u64;
+            push_event(Event {
+                cat: self.cat,
+                name: self.name,
+                t0_ns: rel_ns(t0),
+                dur_ns,
+                track: 0,
+                args: self.args,
+            });
+        }
+    }
+}
+
+/// Record a span for an interval measured with explicit instants (the
+/// serve stack measures request phases across threads this way).
+/// `track` 0 places the span on the calling thread; a [`virtual_track`]
+/// id places it on that synthetic track. At most three args are kept.
+pub fn record_interval(
+    track: u32,
+    cat: &'static str,
+    name: &'static str,
+    start: Instant,
+    end: Instant,
+    args: &[(&'static str, ArgVal)],
+) {
+    if !enabled() {
+        return;
+    }
+    let mut a = NO_ARGS;
+    for (i, &kv) in args.iter().take(a.len()).enumerate() {
+        a[i] = kv;
+    }
+    push_event(Event {
+        cat,
+        name,
+        t0_ns: rel_ns(start),
+        dur_ns: end.saturating_duration_since(start).as_nanos() as u64,
+        track,
+        args: a,
+    });
+}
+
+/// Snapshot every ring's spans (oldest first per ring) without clearing.
+pub fn events() -> Vec<Event> {
+    let reg = REGISTRY.lock().unwrap();
+    let mut out = Vec::new();
+    for h in reg.iter() {
+        let d = h.data.lock().unwrap();
+        if d.spans.len() == d.cap {
+            out.extend_from_slice(&d.spans[d.head..]);
+            out.extend_from_slice(&d.spans[..d.head]);
+        } else {
+            out.extend_from_slice(&d.spans);
+        }
+    }
+    out
+}
+
+/// Drop all recorded spans and reset the overwrite counters. Rings stay
+/// registered (their buffers are reused by the next span).
+pub fn clear() {
+    let reg = REGISTRY.lock().unwrap();
+    for h in reg.iter() {
+        let mut d = h.data.lock().unwrap();
+        d.spans.clear();
+        d.head = 0;
+        d.dropped = 0;
+    }
+}
+
+/// Total spans lost to ring overwrite since the last [`clear`].
+pub fn dropped() -> u64 {
+    let reg = REGISTRY.lock().unwrap();
+    reg.iter().map(|h| h.data.lock().unwrap().dropped).sum()
+}
+
+/// `(track id, display name)` for every registered thread ring and
+/// virtual track — the trace's thread-name metadata.
+pub fn track_names() -> Vec<(u32, String)> {
+    let mut out: Vec<(u32, String)> = REGISTRY
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|h| (h.tid, h.name.clone()))
+        .collect();
+    out.extend(
+        VTRACKS
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|&(n, id)| (id, n.to_string())),
+    );
+    out.sort_by_key(|&(id, _)| id);
+    out
+}
+
+fn escape_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+/// Serialize everything recorded so far as Chrome trace-event JSON
+/// (`ph:"X"` complete events, microsecond timestamps), loadable in
+/// `chrome://tracing` and <https://ui.perfetto.dev>.
+pub fn chrome_trace_json() -> String {
+    let mut evs = events();
+    evs.sort_by_key(|e| (e.t0_ns, std::cmp::Reverse(e.dur_ns)));
+    let mut s = String::with_capacity(256 + evs.len() * 160);
+    s.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+    s.push_str(
+        "{\"ph\":\"M\",\"pid\":1,\"tid\":0,\"name\":\"process_name\",\
+         \"args\":{\"name\":\"minitensor\"}}",
+    );
+    for (tid, name) in track_names() {
+        s.push_str(&format!(
+            ",\n{{\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\"name\":\"thread_name\",\"args\":{{\"name\":\""
+        ));
+        escape_into(&mut s, &name);
+        s.push_str("\"}}");
+    }
+    for e in &evs {
+        s.push_str(",\n{\"ph\":\"X\",\"pid\":1,\"tid\":");
+        s.push_str(&e.track.to_string());
+        s.push_str(",\"cat\":\"");
+        escape_into(&mut s, e.cat);
+        s.push_str("\",\"name\":\"");
+        escape_into(&mut s, e.name);
+        s.push_str(&format!(
+            "\",\"ts\":{:.3},\"dur\":{:.3}",
+            e.t0_ns as f64 / 1e3,
+            e.dur_ns as f64 / 1e3
+        ));
+        let tags: Vec<_> = e.args.iter().filter(|(k, _)| !k.is_empty()).collect();
+        if !tags.is_empty() {
+            s.push_str(",\"args\":{");
+            for (i, (k, v)) in tags.iter().enumerate() {
+                if i > 0 {
+                    s.push(',');
+                }
+                s.push('"');
+                escape_into(&mut s, k);
+                s.push_str("\":");
+                match v {
+                    ArgVal::U(n) => s.push_str(&n.to_string()),
+                    ArgVal::S(t) => {
+                        s.push('"');
+                        escape_into(&mut s, t);
+                        s.push('"');
+                    }
+                }
+            }
+            s.push('}');
+        }
+        s.push('}');
+    }
+    s.push_str("\n]}\n");
+    s
+}
+
+/// Write the Chrome trace to `path`; returns the number of span events.
+pub fn write_chrome_trace<P: AsRef<std::path::Path>>(path: P) -> std::io::Result<usize> {
+    let n = events().len();
+    std::fs::write(path, chrome_trace_json())?;
+    Ok(n)
+}
+
+/// If tracing came from `MINITENSOR_TRACE=<path>`, write the trace there
+/// and return the path and span count.
+pub fn flush_env() -> std::io::Result<Option<(String, usize)>> {
+    match env_path() {
+        Some(p) if enabled() || !events().is_empty() => {
+            let n = write_chrome_trace(&p)?;
+            Ok(Some((p, n)))
+        }
+        _ => Ok(None),
+    }
+}
+
+/// Top-K spans by total recorded time, as a report block to print next
+/// to `runtime::stats::report()`.
+pub fn summary_top(k: usize) -> String {
+    use std::collections::HashMap;
+    let evs = events();
+    if evs.is_empty() {
+        return "trace:  no spans recorded\n".to_string();
+    }
+    let mut agg: HashMap<(&'static str, &'static str), (u64, u64, u64)> = HashMap::new();
+    for e in &evs {
+        let a = agg.entry((e.cat, e.name)).or_insert((0, 0, 0));
+        a.0 += 1;
+        a.1 += e.dur_ns;
+        a.2 = a.2.max(e.dur_ns);
+    }
+    let mut rows: Vec<_> = agg.into_iter().collect();
+    rows.sort_by_key(|&(_, (_, total, _))| std::cmp::Reverse(total));
+    rows.truncate(k);
+    let mut s = format!(
+        "trace:  {} spans across {} tracks (top {} by total time)\n",
+        evs.len(),
+        track_names().len(),
+        rows.len()
+    );
+    for ((cat, name), (count, total, max)) in rows {
+        s.push_str(&format!(
+            "  {:<28} count={:<7} total={:>9.3}ms  mean={:>8.1}us  max={:>8.1}us\n",
+            format!("{cat}.{name}"),
+            count,
+            total as f64 / 1e6,
+            total as f64 / 1e3 / count as f64,
+            max as f64 / 1e3,
+        ));
+    }
+    let lost = dropped();
+    if lost > 0 {
+        s.push_str(&format!(
+            "  ({lost} spans overwritten — raise MINITENSOR_TRACE_CAPACITY to keep more)\n"
+        ));
+    }
+    s
+}
+
+/// [`summary_top`] with the default K of 12.
+pub fn summary() -> String {
+    summary_top(12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_span_is_inert() {
+        // Regardless of global state, an inert guard records nothing and
+        // its arg setters are no-ops.
+        let mut g = SpanGuard {
+            start: None,
+            cat: "t",
+            name: "t",
+            args: NO_ARGS,
+            n_args: 0,
+        };
+        g.arg_u("k", 1);
+        assert_eq!(g.n_args, 0);
+    }
+
+    #[test]
+    fn args_cap_at_three() {
+        let mut g = SpanGuard {
+            start: Some(Instant::now()),
+            cat: "t",
+            name: "t",
+            args: NO_ARGS,
+            n_args: 0,
+        };
+        g.arg_u("a", 1);
+        g.arg_u("b", 2);
+        g.arg_s("c", "x");
+        g.arg_u("d", 4); // dropped
+        assert_eq!(g.n_args, 3);
+        assert_eq!(g.args[2], ("c", ArgVal::S("x")));
+        g.start = None; // don't record into the shared rings from a unit test
+    }
+
+    #[test]
+    fn virtual_tracks_are_idempotent() {
+        let a = virtual_track("test.track");
+        let b = virtual_track("test.track");
+        assert_eq!(a, b);
+        assert!(track_names().iter().any(|(id, n)| *id == a && n == "test.track"));
+    }
+
+    #[test]
+    fn json_escapes_control_chars() {
+        let mut s = String::new();
+        escape_into(&mut s, "a\"b\\c\nd\u{1}");
+        assert_eq!(s, "a\\\"b\\\\c\\nd\\u0001");
+    }
+}

@@ -1,0 +1,432 @@
+//! The tracing subsystem end to end: ring-buffer overwrite semantics,
+//! span nesting and thread attribution, and the Chrome-trace JSON
+//! export (validated with a small hand-rolled JSON parser — the crate
+//! stays zero-dependency even in tests).
+//!
+//! Tracing state is process-global (one enable flag, one ring
+//! registry), so every test serializes on [`guard`] and clears the
+//! rings on entry and exit.
+
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use minitensor::coordinator::{InferenceServer, NativeModelFactory, ServeConfig};
+use minitensor::data::Rng;
+use minitensor::nn::{Activation, Dense, Sequential};
+use minitensor::runtime::{parallel, trace};
+use minitensor::tensor::Tensor;
+
+fn guard() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[test]
+fn disabled_tracing_records_nothing() {
+    let _g = guard();
+    trace::disable();
+    trace::clear();
+    {
+        let mut sp = trace::span("test", "invisible");
+        sp.arg_u("n", 1);
+    }
+    trace::record_interval(
+        0,
+        "test",
+        "also_invisible",
+        std::time::Instant::now(),
+        std::time::Instant::now(),
+        &[],
+    );
+    assert!(trace::events().is_empty());
+    assert_eq!(trace::dropped(), 0);
+}
+
+#[test]
+fn span_nesting_and_thread_attribution() {
+    let _g = guard();
+    trace::clear();
+    trace::enable();
+
+    let t1 = std::thread::spawn(|| {
+        let _outer = trace::span("test", "outer");
+        std::thread::sleep(Duration::from_millis(2));
+        {
+            let _inner = trace::span("test", "inner");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    });
+    t1.join().unwrap();
+    let t2 = std::thread::spawn(|| {
+        let _sp = trace::span("test", "elsewhere");
+    });
+    t2.join().unwrap();
+    trace::disable();
+
+    let evs = trace::events();
+    let find = |name: &str| {
+        *evs.iter()
+            .find(|e| e.name == name)
+            .unwrap_or_else(|| panic!("span '{name}' not recorded"))
+    };
+    let (outer, inner, elsewhere) = (find("outer"), find("inner"), find("elsewhere"));
+
+    // The inner span nests strictly within the outer span's bounds.
+    assert!(inner.t0_ns >= outer.t0_ns, "{inner:?} vs {outer:?}");
+    assert!(
+        inner.t0_ns + inner.dur_ns <= outer.t0_ns + outer.dur_ns,
+        "{inner:?} vs {outer:?}"
+    );
+    assert!(inner.dur_ns < outer.dur_ns);
+
+    // Same thread → same track; different thread → different track.
+    assert_eq!(inner.track, outer.track);
+    assert_ne!(elsewhere.track, outer.track);
+    let names = trace::track_names();
+    for t in [outer.track, elsewhere.track] {
+        assert!(names.iter().any(|&(id, _)| id == t), "track {t} unnamed");
+    }
+    trace::clear();
+}
+
+#[test]
+fn ring_overwrites_oldest_and_counts_drops() {
+    let _g = guard();
+    trace::clear();
+    trace::set_ring_capacity(8);
+    trace::enable();
+
+    // A fresh thread gets a fresh ring sized by the capacity above.
+    std::thread::spawn(|| {
+        for i in 0..20u64 {
+            let mut sp = trace::span("test", "ring");
+            sp.arg_u("i", i);
+        }
+    })
+    .join()
+    .unwrap();
+    trace::disable();
+
+    let kept: Vec<u64> = trace::events()
+        .into_iter()
+        .filter(|e| e.name == "ring")
+        .map(|e| match e.args[0] {
+            ("i", trace::ArgVal::U(v)) => v,
+            other => panic!("unexpected arg {other:?}"),
+        })
+        .collect();
+    // Capacity 8: the 8 newest survive, oldest-first, 12 are dropped.
+    assert_eq!(kept, (12..20).collect::<Vec<u64>>());
+    assert_eq!(trace::dropped(), 12);
+
+    trace::clear();
+    trace::set_ring_capacity(trace::DEFAULT_RING_CAPACITY);
+}
+
+#[test]
+fn chrome_trace_is_valid_json_spanning_all_subsystems() {
+    let _g = guard();
+    trace::clear();
+    let before_threads = parallel::num_threads();
+    parallel::set_num_threads(2);
+    trace::enable();
+
+    // exec + parallel + graph: a fused lazy chain big enough to engage
+    // the worker pool (65536 elems × 3 ops ≫ the parallel threshold).
+    let mut rng = Rng::new(3);
+    let a = Tensor::randn(&[1 << 16], 0.0, 1.0, &mut rng);
+    let b = Tensor::randn(&[1 << 16], 0.0, 1.0, &mut rng);
+    for _ in 0..3 {
+        let out = a
+            .lazy()
+            .mul(&b.lazy())
+            .unwrap()
+            .add(&a.lazy())
+            .unwrap()
+            .relu()
+            .eval()
+            .unwrap();
+        assert_eq!(out.numel(), 1 << 16);
+    }
+
+    // serve: a tiny server answering a handful of requests.
+    let factory = NativeModelFactory::new(4, || {
+        let mut rng = Rng::new(1);
+        Sequential::new()
+            .add(Dense::new(4, 8, &mut rng))
+            .add(Activation::Relu)
+            .add(Dense::new(8, 3, &mut rng))
+    });
+    let server = InferenceServer::start(factory, ServeConfig::default()).unwrap();
+    for i in 0..4 {
+        assert_eq!(server.infer(vec![i as f32, 0.0, 0.0, 0.0]).unwrap().len(), 3);
+    }
+    let stats = server.stats();
+    assert!(stats.exec_dispatches > 0);
+    server.shutdown();
+
+    trace::disable();
+    parallel::set_num_threads(before_threads);
+
+    let text = trace::chrome_trace_json();
+    let doc = json::parse(&text).expect("export must be valid JSON");
+    let events = doc
+        .get("traceEvents")
+        .and_then(json::Value::as_arr)
+        .expect("traceEvents array");
+
+    let spans: Vec<&json::Value> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(json::Value::as_str) == Some("X"))
+        .collect();
+    assert!(!spans.is_empty());
+    for want in ["exec", "parallel", "graph", "serve"] {
+        assert!(
+            spans
+                .iter()
+                .any(|e| e.get("cat").and_then(json::Value::as_str) == Some(want)),
+            "no '{want}' spans in the trace"
+        );
+    }
+    // Every span carries numeric µs timestamps on a named track.
+    for e in &spans {
+        assert!(e.get("ts").and_then(json::Value::as_f64).is_some(), "{e:?}");
+        assert!(e.get("dur").and_then(json::Value::as_f64).unwrap_or(-1.0) >= 0.0);
+        assert!(e.get("tid").and_then(json::Value::as_f64).is_some());
+    }
+    // Dispatch spans keep their element-count args through the export.
+    assert!(spans.iter().any(|e| {
+        e.get("cat").and_then(json::Value::as_str) == Some("exec")
+            && e.get("args").and_then(|a| a.get("elems")).is_some()
+    }));
+    // The per-request virtual track is present and named in metadata.
+    assert!(events.iter().any(|e| {
+        let track = e
+            .get("args")
+            .and_then(|a| a.get("name"))
+            .and_then(json::Value::as_str);
+        e.get("ph").and_then(json::Value::as_str) == Some("M")
+            && e.get("name").and_then(json::Value::as_str) == Some("thread_name")
+            && track == Some("serve.requests")
+    }));
+    // And the request spans carry the queue/compute breakdown.
+    assert!(spans.iter().any(|e| {
+        e.get("cat").and_then(json::Value::as_str) == Some("serve")
+            && e.get("name").and_then(json::Value::as_str) == Some("request")
+            && e.get("args").and_then(|a| a.get("queue_us")).is_some()
+            && e.get("args").and_then(|a| a.get("compute_us")).is_some()
+    }));
+
+    let summary = trace::summary();
+    assert!(summary.contains("spans across"), "{summary}");
+    assert!(summary.contains("exec."), "{summary}");
+    trace::clear();
+}
+
+/// Minimal recursive-descent JSON parser — enough to validate the
+/// trace export without pulling in a dependency.
+mod json {
+    #[derive(Debug, Clone, PartialEq)]
+    pub enum Value {
+        Null,
+        Bool(bool),
+        Num(f64),
+        Str(String),
+        Arr(Vec<Value>),
+        Obj(Vec<(String, Value)>),
+    }
+
+    impl Value {
+        pub fn get(&self, key: &str) -> Option<&Value> {
+            match self {
+                Value::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+                _ => None,
+            }
+        }
+        pub fn as_str(&self) -> Option<&str> {
+            match self {
+                Value::Str(s) => Some(s),
+                _ => None,
+            }
+        }
+        pub fn as_f64(&self) -> Option<f64> {
+            match self {
+                Value::Num(n) => Some(*n),
+                _ => None,
+            }
+        }
+        pub fn as_arr(&self) -> Option<&[Value]> {
+            match self {
+                Value::Arr(v) => Some(v),
+                _ => None,
+            }
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Value, String> {
+        let b = s.as_bytes();
+        let mut p = 0;
+        let v = value(b, &mut p)?;
+        skip_ws(b, &mut p);
+        if p != b.len() {
+            return Err(format!("trailing data at byte {p}"));
+        }
+        Ok(v)
+    }
+
+    fn skip_ws(b: &[u8], p: &mut usize) {
+        while *p < b.len() && matches!(b[*p], b' ' | b'\t' | b'\n' | b'\r') {
+            *p += 1;
+        }
+    }
+
+    fn expect(b: &[u8], p: &mut usize, c: u8) -> Result<(), String> {
+        if *p < b.len() && b[*p] == c {
+            *p += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", c as char, *p))
+        }
+    }
+
+    fn value(b: &[u8], p: &mut usize) -> Result<Value, String> {
+        skip_ws(b, p);
+        match b.get(*p) {
+            Some(b'{') => object(b, p),
+            Some(b'[') => array(b, p),
+            Some(b'"') => Ok(Value::Str(string(b, p)?)),
+            Some(b't') => lit(b, p, "true", Value::Bool(true)),
+            Some(b'f') => lit(b, p, "false", Value::Bool(false)),
+            Some(b'n') => lit(b, p, "null", Value::Null),
+            Some(_) => number(b, p),
+            None => Err("unexpected end of input".into()),
+        }
+    }
+
+    fn lit(b: &[u8], p: &mut usize, word: &str, v: Value) -> Result<Value, String> {
+        if b[*p..].starts_with(word.as_bytes()) {
+            *p += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", *p))
+        }
+    }
+
+    fn object(b: &[u8], p: &mut usize) -> Result<Value, String> {
+        expect(b, p, b'{')?;
+        let mut kv = Vec::new();
+        skip_ws(b, p);
+        if b.get(*p) == Some(&b'}') {
+            *p += 1;
+            return Ok(Value::Obj(kv));
+        }
+        loop {
+            skip_ws(b, p);
+            let k = string(b, p)?;
+            skip_ws(b, p);
+            expect(b, p, b':')?;
+            kv.push((k, value(b, p)?));
+            skip_ws(b, p);
+            match b.get(*p) {
+                Some(b',') => *p += 1,
+                Some(b'}') => {
+                    *p += 1;
+                    return Ok(Value::Obj(kv));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", *p)),
+            }
+        }
+    }
+
+    fn array(b: &[u8], p: &mut usize) -> Result<Value, String> {
+        expect(b, p, b'[')?;
+        let mut out = Vec::new();
+        skip_ws(b, p);
+        if b.get(*p) == Some(&b']') {
+            *p += 1;
+            return Ok(Value::Arr(out));
+        }
+        loop {
+            out.push(value(b, p)?);
+            skip_ws(b, p);
+            match b.get(*p) {
+                Some(b',') => *p += 1,
+                Some(b']') => {
+                    *p += 1;
+                    return Ok(Value::Arr(out));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", *p)),
+            }
+        }
+    }
+
+    fn string(b: &[u8], p: &mut usize) -> Result<String, String> {
+        expect(b, p, b'"')?;
+        let mut out = String::new();
+        while let Some(&c) = b.get(*p) {
+            *p += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = *b.get(*p).ok_or("unterminated escape")?;
+                    *p += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hex = b
+                                .get(*p..*p + 4)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .ok_or("bad \\u escape")?;
+                            let n = u32::from_str_radix(hex, 16)
+                                .map_err(|_| "bad \\u escape".to_string())?;
+                            *p += 4;
+                            out.push(char::from_u32(n).unwrap_or('\u{fffd}'));
+                        }
+                        other => return Err(format!("bad escape '\\{}'", other as char)),
+                    }
+                }
+                _ => {
+                    // Multi-byte UTF-8: copy the full code point.
+                    let start = *p - 1;
+                    let width = utf8_width(c);
+                    *p = start + width;
+                    let s = b
+                        .get(start..*p)
+                        .and_then(|s| std::str::from_utf8(s).ok())
+                        .ok_or("invalid UTF-8 in string")?;
+                    out.push_str(s);
+                }
+            }
+        }
+        Err("unterminated string".into())
+    }
+
+    fn utf8_width(first: u8) -> usize {
+        match first {
+            0x00..=0x7f => 1,
+            0xc0..=0xdf => 2,
+            0xe0..=0xef => 3,
+            _ => 4,
+        }
+    }
+
+    fn number(b: &[u8], p: &mut usize) -> Result<Value, String> {
+        let start = *p;
+        while *p < b.len() && matches!(b[*p], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E') {
+            *p += 1;
+        }
+        std::str::from_utf8(&b[start..*p])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(Value::Num)
+            .ok_or_else(|| format!("bad number at byte {start}"))
+    }
+}
