@@ -1,0 +1,67 @@
+//! Registry overhead A/B — the acceptance gate for always-on metrics.
+//!
+//! The hot path a metric site adds is one relaxed atomic load (the
+//! enable check) plus one thread-local load+store per counter. This
+//! bench pins that cost: the 1e6-element eager elementwise workload
+//! from `bench-quick`, measured with the registry recording
+//! (`metrics::set_enabled(true)`) and frozen (`set_enabled(false)`),
+//! must agree within 2%.
+//!
+//! The disabled leg also freezes `runtime::stats` (same shards), which
+//! is exactly the pre-registry baseline being compared against. Pass
+//! `--quick` for the CI smoke mode (shorter windows, noisier — the
+//! printed verdict is informational there).
+
+use minitensor::bench_util::{bench, fmt_ns, Table};
+use minitensor::data::Rng;
+use minitensor::runtime::metrics;
+use minitensor::tensor::Tensor;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (ms, reps) = if quick { (10.0, 3) } else { (80.0, 7) };
+
+    let n = 1_000_000;
+    let mut rng = Rng::new(11);
+    let a = Tensor::randn(&[n], 0.0, 1.0, &mut rng);
+    let b = Tensor::randn(&[n], 0.0, 1.0, &mut rng);
+
+    let run = |label: &str, on: bool| {
+        metrics::set_enabled(on);
+        // Interleave A/B within one process run; warm once after the
+        // flip so the first measured rep sees a settled pool.
+        std::hint::black_box(a.add(&b).unwrap());
+        let s = bench(label, ms, reps, || {
+            std::hint::black_box(a.add(&b).unwrap());
+        });
+        metrics::set_enabled(true);
+        s.median_ns
+    };
+
+    let mut table = Table::new(
+        "metrics registry overhead — eager add, 1e6 elems",
+        &["registry", "median/op", "ns/elem"],
+    );
+    // off→on→off→on: neighbour pairs share thermal/cache conditions.
+    let off1 = run("add 1e6 (metrics off)", false);
+    let on1 = run("add 1e6 (metrics on)", true);
+    let off2 = run("add 1e6 (metrics off)", false);
+    let on2 = run("add 1e6 (metrics on)", true);
+    let off = off1.min(off2);
+    let on = on1.min(on2);
+    for (name, v) in [("off", off), ("on", on)] {
+        table.row(&[
+            name.to_string(),
+            fmt_ns(v),
+            format!("{:.4}", v / n as f64),
+        ]);
+    }
+    table.print();
+
+    let overhead = (on - off) / off * 100.0;
+    println!("registry overhead: {overhead:+.2}% (gate: < 2%)");
+    if !quick && overhead >= 2.0 {
+        eprintln!("FAIL: always-on registry costs {overhead:.2}% on the eager hot path");
+        std::process::exit(1);
+    }
+}

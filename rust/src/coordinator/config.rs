@@ -229,6 +229,7 @@ pub struct ServeConfig {
     queue_depth: usize,
     workers: usize,
     deadline: Option<Duration>,
+    metrics_port: Option<u16>,
 }
 
 impl Default for ServeConfig {
@@ -248,12 +249,15 @@ impl ServeConfig {
             queue_depth: 1024,
             workers: 1,
             deadline: None,
+            metrics_port: None,
         }
     }
 
     /// Read the `[serve]` section of a [`Config`]: `serve.max_batch`,
-    /// `serve.max_wait_ms`, `serve.queue_depth`, `serve.workers`, and
-    /// `serve.deadline_ms` (0 = no default deadline).
+    /// `serve.max_wait_ms`, `serve.queue_depth`, `serve.workers`,
+    /// `serve.deadline_ms` (0 = no default deadline), and
+    /// `serve.metrics_port` (Prometheus endpoint; 0 picks an ephemeral
+    /// port, omit the key to not serve metrics).
     pub fn from_config(cfg: &Config) -> Result<ServeConfig> {
         let mut b = ServeConfig::new()
             .max_batch(cfg.get_parse_or("serve.max_batch", 32)?)
@@ -263,6 +267,14 @@ impl ServeConfig {
         let deadline_ms: u64 = cfg.get_parse_or("serve.deadline_ms", 0)?;
         if deadline_ms > 0 {
             b = b.deadline_ms(deadline_ms);
+        }
+        if let Some(port) = cfg.get("serve.metrics_port") {
+            let port: u16 = port.parse().map_err(|_| {
+                Error::Config(format!(
+                    "cannot parse '{port}' for key 'serve.metrics_port' (expected a port number)"
+                ))
+            })?;
+            b = b.metrics_port(port);
         }
         b.build()
     }
@@ -307,6 +319,13 @@ impl ServeConfig {
     pub fn deadline(&self) -> Option<Duration> {
         self.deadline
     }
+
+    /// Port for the Prometheus `/metrics` HTTP endpoint the server
+    /// starts on 127.0.0.1 (0 = ephemeral, ask the running server via
+    /// `metrics_addr()`); `None` = no endpoint.
+    pub fn metrics_port(&self) -> Option<u16> {
+        self.metrics_port
+    }
 }
 
 /// Builder for [`ServeConfig`]; `build()` validates the combination.
@@ -317,6 +336,7 @@ pub struct ServeConfigBuilder {
     queue_depth: usize,
     workers: usize,
     deadline: Option<Duration>,
+    metrics_port: Option<u16>,
 }
 
 impl ServeConfigBuilder {
@@ -364,6 +384,14 @@ impl ServeConfigBuilder {
         self.deadline(Duration::from_millis(ms))
     }
 
+    /// Serve the process-wide metrics registry over HTTP on
+    /// 127.0.0.1:`port` while the server is alive (0 = OS-assigned
+    /// ephemeral port, useful for tests).
+    pub fn metrics_port(mut self, port: u16) -> Self {
+        self.metrics_port = Some(port);
+        self
+    }
+
     /// Validate and produce the config.
     pub fn build(self) -> Result<ServeConfig> {
         if self.max_batch == 0 {
@@ -392,6 +420,7 @@ impl ServeConfigBuilder {
             queue_depth: self.queue_depth,
             workers: self.workers,
             deadline: self.deadline,
+            metrics_port: self.metrics_port,
         })
     }
 }
@@ -475,6 +504,9 @@ mod tests {
         assert_eq!(d.max_batch(), 32);
         assert_eq!(d.workers(), 1);
         assert_eq!(d.deadline(), None);
+        assert_eq!(d.metrics_port(), None);
+        let m = ServeConfig::new().metrics_port(0).build().unwrap();
+        assert_eq!(m.metrics_port(), Some(0));
     }
 
     #[test]
@@ -492,6 +524,12 @@ mod tests {
         // deadline_ms = 0 (the default) means "no deadline"
         let sc = ServeConfig::from_config(&Config::default()).unwrap();
         assert_eq!(sc.deadline(), None);
+        assert_eq!(sc.metrics_port(), None); // absent key = no endpoint
+        let with_port = Config::parse("[serve]\nmetrics_port = 9100\n").unwrap();
+        let sc = ServeConfig::from_config(&with_port).unwrap();
+        assert_eq!(sc.metrics_port(), Some(9100));
+        let bad_port = Config::parse("[serve]\nmetrics_port = http\n").unwrap();
+        assert!(ServeConfig::from_config(&bad_port).is_err());
         // invalid combinations surface as Config errors
         let bad = Config::parse("[serve]\nworkers = 0\n").unwrap();
         assert!(ServeConfig::from_config(&bad).is_err());

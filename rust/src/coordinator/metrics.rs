@@ -7,130 +7,39 @@
 //! per-worker locals) merge by adding bucket counts. Percentiles are
 //! exact to within one bucket (~±2.3% with the default 512 buckets over
 //! 1µs–10⁴s); the mean is exact (the running sum is tracked separately).
+//! The [`Histogram`] type itself lives in
+//! [`runtime::metrics`](crate::runtime::metrics) (promoted there in
+//! PR 9) and is re-exported here unchanged.
+//!
+//! Each [`Metrics`] instance is a private registry — a test server's
+//! counters never bleed into another's — but every write is also
+//! **mirrored into the process-wide registry** under a sanitized
+//! Prometheus name (`serve.rejected` → `minitensor_serve_rejected_total`,
+//! `serve.latency` → `minitensor_serve_latency`), so a `/metrics` scrape
+//! sees the serve stack with zero extra instrumentation at the call
+//! sites. Mirrored counters are process totals across all instances.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
-/// Bucket count of a [`Histogram`]. 512 buckets over [`H_MIN`, `H_MAX`]
-/// gives a per-bucket ratio of (1e10)^(1/512) ≈ 1.046 — percentiles are
-/// reported within ~±2.3% of the true value.
-const BUCKETS: usize = 512;
-/// Lower edge of the bucketed range, in seconds (1 µs).
-const H_MIN: f64 = 1e-6;
-/// Upper edge of the bucketed range, in seconds (~2.8 hours).
-const H_MAX: f64 = 1e4;
+pub use crate::runtime::metrics::Histogram;
 
-/// Fixed-size log-bucketed histogram of non-negative observations
-/// (seconds, sizes, depths — any positive magnitude).
-///
-/// O(1) memory, O(1) `observe`, mergeable across threads/workers by
-/// adding bucket counts. Values outside [1e-6, 1e4] clamp into the edge
-/// buckets; the exact observed `min`/`max` are tracked so the reported
-/// percentiles never step outside the observed range.
-#[derive(Debug, Clone)]
-pub struct Histogram {
-    counts: Vec<u64>,
-    count: u64,
-    sum: f64,
-    min: f64,
-    max: f64,
-}
+use crate::runtime::metrics as global;
 
-impl Default for Histogram {
-    fn default() -> Self {
-        Histogram::new()
+/// Sanitize an instance-local metric name into the global scheme:
+/// non-alphanumeric characters become `_`, the `minitensor_` prefix is
+/// added, and counters get the Prometheus `_total` suffix.
+fn global_name(name: &str, counter: bool) -> String {
+    let mut s = String::with_capacity(name.len() + 18);
+    s.push_str("minitensor_");
+    for c in name.chars() {
+        s.push(if c.is_ascii_alphanumeric() { c } else { '_' });
     }
-}
-
-impl Histogram {
-    /// Empty histogram.
-    pub fn new() -> Histogram {
-        Histogram {
-            counts: vec![0; BUCKETS],
-            count: 0,
-            sum: 0.0,
-            min: f64::INFINITY,
-            max: f64::NEG_INFINITY,
-        }
+    if counter && !s.ends_with("_total") {
+        s.push_str("_total");
     }
-
-    fn bucket(v: f64) -> usize {
-        if v.is_nan() || v <= H_MIN {
-            return 0; // ≤ H_MIN, zero, negative, or NaN
-        }
-        if v >= H_MAX {
-            return BUCKETS - 1;
-        }
-        let frac = (v / H_MIN).ln() / (H_MAX / H_MIN).ln();
-        ((frac * BUCKETS as f64) as usize).min(BUCKETS - 1)
-    }
-
-    /// Geometric midpoint of bucket `i` — the value a percentile query
-    /// reports for observations that landed there.
-    fn representative(i: usize) -> f64 {
-        H_MIN * (H_MAX / H_MIN).powf((i as f64 + 0.5) / BUCKETS as f64)
-    }
-
-    /// Record one observation.
-    pub fn observe(&mut self, v: f64) {
-        let v = if v.is_finite() { v.max(0.0) } else { 0.0 };
-        self.counts[Self::bucket(v)] += 1;
-        self.count += 1;
-        self.sum += v;
-        self.min = self.min.min(v);
-        self.max = self.max.max(v);
-    }
-
-    /// Fold another histogram into this one (bucket-wise addition) —
-    /// how per-worker locals combine into a process view.
-    pub fn merge(&mut self, other: &Histogram) {
-        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
-            *a += b;
-        }
-        self.count += other.count;
-        self.sum += other.sum;
-        self.min = self.min.min(other.min);
-        self.max = self.max.max(other.max);
-    }
-
-    /// Number of observations.
-    pub fn count(&self) -> u64 {
-        self.count
-    }
-
-    /// Exact mean (running sum / count); `None` if empty.
-    pub fn mean(&self) -> Option<f64> {
-        if self.count == 0 {
-            return None;
-        }
-        Some(self.sum / self.count as f64)
-    }
-
-    /// Percentile (q in [0,1]) to within one bucket; `None` if empty.
-    /// Reports the containing bucket's geometric midpoint, clamped to
-    /// the exact observed [min, max]; the extreme ranks (q=0, q=1)
-    /// report the exact observed min/max.
-    pub fn percentile(&self, q: f64) -> Option<f64> {
-        if self.count == 0 {
-            return None;
-        }
-        let rank = ((self.count - 1) as f64 * q.clamp(0.0, 1.0)).round() as u64;
-        if rank == 0 {
-            return Some(self.min);
-        }
-        if rank == self.count - 1 {
-            return Some(self.max);
-        }
-        let mut seen = 0u64;
-        for (i, &c) in self.counts.iter().enumerate() {
-            seen += c;
-            if seen > rank {
-                return Some(Self::representative(i).clamp(self.min, self.max));
-            }
-        }
-        Some(self.max) // unreachable in practice (counts sum to count)
-    }
+    s
 }
 
 /// Thread-safe metrics registry.
@@ -154,6 +63,7 @@ impl Metrics {
             .unwrap()
             .entry(name.to_string())
             .or_insert(0) += by;
+        global::counter_add(&global_name(name, true), by);
     }
 
     /// Read a counter.
@@ -169,6 +79,7 @@ impl Metrics {
             .entry(name.to_string())
             .or_default()
             .observe(value);
+        global::observe(&global_name(name, false), value);
     }
 
     /// Fold an externally accumulated histogram into a named series.
@@ -179,6 +90,7 @@ impl Metrics {
             .entry(name.to_string())
             .or_default()
             .merge(h);
+        global::merge_histogram(&global_name(name, false), h);
     }
 
     /// Snapshot of a series' histogram; `None` if never observed.
@@ -295,113 +207,6 @@ mod tests {
     }
 
     #[test]
-    fn histogram_memory_is_constant_and_extremes_clamp() {
-        let mut h = Histogram::new();
-        for _ in 0..1_000_000 {
-            h.observe(0.001);
-        }
-        h.observe(0.0); // below range → edge bucket, exact min tracked
-        h.observe(1e9); // above range → edge bucket, exact max tracked
-        assert_eq!(h.count(), 1_000_002);
-        assert_eq!(h.counts.len(), BUCKETS);
-        assert_eq!(h.percentile(0.0), Some(0.0));
-        assert_eq!(h.percentile(1.0), Some(1e9));
-        let p50 = h.percentile(0.5).unwrap();
-        assert!((p50 - 0.001).abs() < 0.001 * 0.05, "{p50}");
-    }
-
-    #[test]
-    fn histograms_merge_like_one_series() {
-        let mut a = Histogram::new();
-        let mut b = Histogram::new();
-        let mut whole = Histogram::new();
-        for i in 1..=50 {
-            a.observe(i as f64 / 1000.0);
-            whole.observe(i as f64 / 1000.0);
-        }
-        for i in 51..=100 {
-            b.observe(i as f64 / 1000.0);
-            whole.observe(i as f64 / 1000.0);
-        }
-        a.merge(&b);
-        assert_eq!(a.count(), whole.count());
-        assert_eq!(a.mean(), whole.mean());
-        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
-            assert_eq!(a.percentile(q), whole.percentile(q), "q={q}");
-        }
-    }
-
-    #[test]
-    fn merging_an_empty_histogram_changes_nothing() {
-        let mut a = Histogram::new();
-        a.observe(0.002);
-        a.observe(0.004);
-        let before_mean = a.mean();
-        a.merge(&Histogram::new());
-        assert_eq!(a.count(), 2);
-        assert_eq!(a.mean(), before_mean);
-        // The empty side's sentinel min/max (+inf/-inf) must not leak
-        // into the merged extremes.
-        assert_eq!(a.percentile(0.0), Some(0.002));
-        assert_eq!(a.percentile(1.0), Some(0.004));
-
-        // And merging *into* an empty histogram reproduces the source.
-        let mut e = Histogram::new();
-        e.merge(&a);
-        assert_eq!(e.count(), a.count());
-        assert_eq!(e.mean(), a.mean());
-        for q in [0.0, 0.5, 1.0] {
-            assert_eq!(e.percentile(q), a.percentile(q), "q={q}");
-        }
-    }
-
-    #[test]
-    fn empty_histogram_reports_none() {
-        let h = Histogram::new();
-        assert_eq!(h.count(), 0);
-        assert_eq!(h.mean(), None);
-        for q in [0.0, 0.5, 1.0] {
-            assert_eq!(h.percentile(q), None, "q={q}");
-        }
-    }
-
-    #[test]
-    fn out_of_range_values_clamp_to_edge_buckets() {
-        // Below range (and zero/negative/NaN) land in bucket 0; above
-        // range lands in the last bucket.
-        assert_eq!(Histogram::bucket(1e-9), 0);
-        assert_eq!(Histogram::bucket(0.0), 0);
-        assert_eq!(Histogram::bucket(-5.0), 0);
-        assert_eq!(Histogram::bucket(f64::NAN), 0);
-        assert_eq!(Histogram::bucket(1e5), BUCKETS - 1);
-        assert_eq!(Histogram::bucket(f64::INFINITY), BUCKETS - 1);
-
-        // Interior percentiles stay within the exact observed range
-        // even though the edge buckets' midpoints lie outside it.
-        let mut h = Histogram::new();
-        for _ in 0..10 {
-            h.observe(1e-9);
-        }
-        for _ in 0..10 {
-            h.observe(1e5);
-        }
-        assert_eq!(h.percentile(0.0), Some(1e-9));
-        assert_eq!(h.percentile(1.0), Some(1e5));
-        let p40 = h.percentile(0.4).unwrap();
-        assert!((1e-9..=1e5).contains(&p40), "{p40}");
-    }
-
-    #[test]
-    fn single_sample_percentile_is_that_value() {
-        let mut h = Histogram::new();
-        h.observe(0.0123);
-        for q in [0.0, 0.25, 0.5, 0.75, 0.99, 1.0] {
-            assert_eq!(h.percentile(q), Some(0.0123), "q={q}");
-        }
-        assert_eq!(h.mean(), Some(0.0123));
-    }
-
-    #[test]
     fn merge_histogram_feeds_named_series() {
         let m = Metrics::new();
         let mut local = Histogram::new();
@@ -453,5 +258,39 @@ mod tests {
         }
         assert_eq!(m.counter("n"), 400);
         assert_eq!(m.observations("l"), 400);
+    }
+
+    #[test]
+    fn global_names_are_sanitized() {
+        assert_eq!(
+            global_name("serve.rejected", true),
+            "minitensor_serve_rejected_total"
+        );
+        assert_eq!(global_name("serve.latency", false), "minitensor_serve_latency");
+        assert_eq!(
+            global_name("serve.worker0.batches", true),
+            "minitensor_serve_worker0_batches_total"
+        );
+        // Already-suffixed names don't double up.
+        assert_eq!(global_name("x_total", true), "minitensor_x_total");
+    }
+
+    #[test]
+    fn writes_mirror_into_the_global_registry() {
+        let m = Metrics::new();
+        m.incr("test.mirror.count", 2);
+        m.observe("test.mirror.lat", 0.003);
+        let s = crate::runtime::metrics::snapshot();
+        let c = s
+            .counters
+            .iter()
+            .find(|(k, _)| k == "minitensor_test_mirror_count_total")
+            .map(|&(_, v)| v)
+            .unwrap_or(0);
+        assert!(c >= 2, "mirrored counter missing: {c}");
+        assert!(s
+            .summaries
+            .iter()
+            .any(|(k, sum)| k == "minitensor_test_mirror_lat" && sum.count >= 1));
     }
 }

@@ -32,6 +32,7 @@ use std::time::{Duration, Instant};
 use super::config::ServeConfig;
 use super::metrics::Metrics;
 use crate::error::{Error, Result};
+use crate::runtime::metrics as registry;
 use crate::runtime::{stats, trace};
 use crate::tensor::Tensor;
 
@@ -328,6 +329,9 @@ pub struct InferenceServer {
     n_workers: usize,
     queue_depth: usize,
     default_deadline: Option<Duration>,
+    /// Prometheus endpoint, alive while the server is
+    /// (`ServeConfig::metrics_port`); dropping it stops the listener.
+    metrics_http: Option<registry::MetricsServer>,
 }
 
 impl InferenceServer {
@@ -410,6 +414,25 @@ impl InferenceServer {
             return Err(e);
         }
 
+        // Everything is running: expose the process-wide registry (which
+        // this server's counters mirror into) over HTTP if configured.
+        let metrics_http = match cfg.metrics_port() {
+            Some(port) => match registry::serve_http(port) {
+                Ok(s) => Some(s),
+                Err(e) => {
+                    drop(tx);
+                    let _ = dispatcher.join();
+                    for w in workers {
+                        let _ = w.join();
+                    }
+                    return Err(Error::msg(format!(
+                        "cannot bind metrics endpoint on port {port}: {e}"
+                    )));
+                }
+            },
+            None => None,
+        };
+
         Ok(InferenceServer {
             tx: Mutex::new(Some(tx)),
             dispatcher: Some(dispatcher),
@@ -420,6 +443,7 @@ impl InferenceServer {
             n_workers,
             queue_depth: cfg.queue_depth(),
             default_deadline: cfg.deadline(),
+            metrics_http,
         })
     }
 
@@ -511,6 +535,13 @@ impl InferenceServer {
         &self.metrics
     }
 
+    /// Address of the Prometheus `/metrics` endpoint, when
+    /// `ServeConfig::metrics_port` was set (port 0 resolves to the
+    /// OS-assigned ephemeral port here).
+    pub fn metrics_addr(&self) -> Option<std::net::SocketAddr> {
+        self.metrics_http.as_ref().map(|s| s.addr())
+    }
+
     /// Close admission: subsequent `infer` calls fail fast with
     /// "server stopped", while every already-admitted request still
     /// receives its real reply (dropping the admission sender
@@ -594,7 +625,11 @@ fn dispatcher_loop(
         // Shed requests that expired while queued, then dispatch.
         shed_expired(&mut pending, metrics);
         if !pending.is_empty() {
-            metrics.observe("serve.queue_depth", depth.load(Ordering::Relaxed) as f64);
+            let d = depth.load(Ordering::Relaxed);
+            metrics.observe("serve.queue_depth", d as f64);
+            // Live gauge for scrapers (the observe above feeds the
+            // distribution; this is the "right now" value).
+            registry::gauge_set("minitensor_serve_queue_depth_current", d as f64);
             trace::record_interval(
                 0,
                 "serve",
@@ -799,6 +834,20 @@ mod tests {
         for (g, e) in got.iter().zip(&expect) {
             assert!((g - e).abs() < 1e-5);
         }
+        server.shutdown();
+    }
+
+    #[test]
+    fn metrics_endpoint_starts_on_ephemeral_port() {
+        let cfg = ServeConfig::new().metrics_port(0).build().unwrap();
+        let server = InferenceServer::start(tiny_factory(), cfg).unwrap();
+        let addr = server.metrics_addr().expect("endpoint configured");
+        assert_ne!(addr.port(), 0, "port 0 must resolve to a real port");
+        assert!(addr.ip().is_loopback());
+        // Without metrics_port there is no endpoint.
+        let plain = InferenceServer::start(tiny_factory(), ServeConfig::default()).unwrap();
+        assert!(plain.metrics_addr().is_none());
+        plain.shutdown();
         server.shutdown();
     }
 

@@ -455,10 +455,11 @@ struct ProgramCache {
 
 impl ProgramCache {
     fn new() -> ProgramCache {
-        let cap = std::env::var("MINITENSOR_PROGRAM_CACHE")
-            .ok()
-            .and_then(|v| v.trim().parse::<usize>().ok())
-            .unwrap_or(DEFAULT_CACHE_CAP);
+        // Caches are per-thread but the invalid-value warning is
+        // once-per-process (envvar deduplicates), so a 32-thread serve
+        // run doesn't print it 32 times.
+        let raw = std::env::var("MINITENSOR_PROGRAM_CACHE").ok();
+        let cap = env_cache_cap(raw.as_deref()).unwrap_or(DEFAULT_CACHE_CAP);
         ProgramCache {
             map: HashMap::new(),
             tick: 0,
@@ -497,6 +498,18 @@ impl ProgramCache {
         let tick = self.tick;
         self.map.insert(key, (plan, tick));
     }
+}
+
+/// Parse a raw `MINITENSOR_PROGRAM_CACHE` value. Any unsigned integer is
+/// valid — `0` deliberately disables caching — while garbage warns once
+/// on stderr and returns `None` (caller uses [`DEFAULT_CACHE_CAP`]).
+fn env_cache_cap(raw: Option<&str>) -> Option<usize> {
+    crate::runtime::envvar::parse::<usize>(
+        "MINITENSOR_PROGRAM_CACHE",
+        raw,
+        |_| true,
+        "an unsigned plan count (0 disables caching)",
+    )
 }
 
 thread_local! {
@@ -579,6 +592,27 @@ pub(crate) fn eval(root: &NodeRef) -> Result<Tensor> {
 mod tests {
     use super::super::node::{BinaryKind, Node, ReduceOp, UnaryKind};
     use super::*;
+
+    #[test]
+    fn env_cache_cap_accepts_zero_and_rejects_garbage() {
+        // Pure resolution over raw values — no std::env mutation (the
+        // test harness is multi-threaded).
+        assert_eq!(env_cache_cap(None), None);
+        assert_eq!(env_cache_cap(Some("128")), Some(128));
+        assert_eq!(env_cache_cap(Some("0")), Some(0), "0 disables caching");
+        // Invalid values fall back to the default (with a warning).
+        assert_eq!(env_cache_cap(Some("many")), None);
+        assert_eq!(env_cache_cap(Some("-1")), None);
+        assert_eq!(env_cache_cap(Some("1e3")), None);
+        let err = crate::runtime::envvar::parse_checked::<usize>(
+            "MINITENSOR_PROGRAM_CACHE",
+            Some("many"),
+            |_| true,
+            "an unsigned plan count (0 disables caching)",
+        )
+        .unwrap_err();
+        assert!(err.contains("MINITENSOR_PROGRAM_CACHE"), "{err}");
+    }
 
     fn leaf(v: Vec<f32>, dims: &[usize]) -> NodeRef {
         Node::leaf(Tensor::from_vec(v, dims).unwrap())

@@ -91,15 +91,24 @@
 //!
 //! ## Observability
 //!
-//! [`runtime::stats`] keeps thread-local counters on every kernel
-//! dispatch (snapshot / delta / take-and-reset), and [`runtime::trace`]
-//! is an always-compiled, off-by-default timeline tracer: with
+//! Three pillars. [`runtime::stats`] keeps per-thread counters on every
+//! kernel dispatch (snapshot / delta / take-and-reset — the exact "what
+//! did this thread just execute" view). [`runtime::trace`] is an
+//! always-compiled, off-by-default timeline tracer: with
 //! `MINITENSOR_TRACE=<path>` (or [`runtime::trace::enable`]) every exec
 //! dispatch, worker-pool chunk, graph compile/cache/region step, and
 //! serve request phase records a span into fixed-capacity per-thread
 //! ring buffers, exported as Chrome trace-event JSON for
 //! `chrome://tracing` / Perfetto. Disabled cost is one relaxed atomic
 //! load per site; tracing never affects kernel math or determinism.
+//! [`runtime::metrics`] is the always-on process-wide registry those
+//! counters shard into: one naming scheme
+//! (`minitensor_<subsystem>_<what>[_total]`) across exec, fusion,
+//! program cache, buffer pool, worker pool, and the serve stack
+//! (mirrored from [`coordinator::Metrics`]), exported as a typed
+//! [`runtime::metrics::snapshot`], JSON, or Prometheus text — served
+//! over HTTP by `ServeConfig::metrics_port` / `minitensor metrics`,
+//! at < 2% eager-hot-path cost (gated by `benches/metrics_overhead.rs`).
 //!
 //! ## Feature flags
 //!

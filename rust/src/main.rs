@@ -4,6 +4,7 @@
 //! minitensor train [--config file.cfg] [key=value ...]
 //! minitensor serve [--config file.cfg] [key=value ...]
 //! minitensor trace <train|serve> [key=value ...]
+//! minitensor metrics [--json]
 //! minitensor info  [--artifacts DIR]
 //! minitensor bench-quick
 //! ```
@@ -25,6 +26,7 @@ fn main() {
         "train" => cmd_train(rest),
         "serve" => cmd_serve(rest),
         "trace" => cmd_trace(rest),
+        "metrics" => cmd_metrics(rest),
         "info" => cmd_info(rest),
         "bench-quick" => cmd_bench_quick(),
         "help" | "--help" | "-h" => {
@@ -51,6 +53,7 @@ USAGE:
   minitensor train [--config FILE] [section.key=value ...]
   minitensor serve [--config FILE] [section.key=value ...]
   minitensor trace <train|serve> [section.key=value ...]
+  minitensor metrics [--json]
   minitensor info  [--artifacts DIR]
   minitensor bench-quick
 
@@ -59,8 +62,10 @@ EXAMPLES:
   minitensor train train.backend=xla train.artifacts_dir=artifacts
   minitensor serve serve.max_batch=16
   minitensor serve serve.workers=4 serve.max_wait_ms=2 serve.deadline_ms=50
+  minitensor serve serve.metrics_port=9100        # live GET /metrics
   minitensor trace train
   MINITENSOR_TRACE=serve.json minitensor trace serve serve.workers=2
+  minitensor metrics                              # one-shot Prometheus dump
   minitensor info --artifacts artifacts
 
 Any command also honors MINITENSOR_TRACE=<path>: tracing turns on and
@@ -169,6 +174,9 @@ fn cmd_serve(args: &[String]) -> minitensor::Result<()> {
         sc.deadline(),
     );
     let server = std::sync::Arc::new(InferenceServer::start(factory, sc)?);
+    if let Some(addr) = server.metrics_addr() {
+        println!("metrics: http://{addr}/metrics (Prometheus text)");
+    }
     let mut rng = Rng::new(7);
     let t0 = std::time::Instant::now();
     let threads: Vec<_> = (0..4)
@@ -253,6 +261,49 @@ fn cmd_trace(args: &[String]) -> minitensor::Result<()> {
         let out = format!("minitensor-{demo}.trace.json");
         let n = trace::write_chrome_trace(&out)?;
         println!("trace: {n} spans -> {out} (chrome://tracing / ui.perfetto.dev)");
+    }
+    Ok(())
+}
+
+/// One-shot registry dump: run a small representative workload (eager,
+/// fused, pooled — enough to touch every built-in metric family), then
+/// print the process-wide registry as Prometheus text (or JSON).
+fn cmd_metrics(args: &[String]) -> minitensor::Result<()> {
+    use minitensor::runtime::metrics;
+    let json = match args {
+        [] => false,
+        [flag] if flag == "--json" => true,
+        _ => {
+            return Err(minitensor::Error::Config(
+                "usage: minitensor metrics [--json]".into(),
+            ))
+        }
+    };
+    // Warm-up workload (stderr so stdout stays machine-parseable).
+    eprintln!("running warm-up workload (eager add, fused chain, matmul)…");
+    let mut rng = Rng::new(1);
+    let a = Tensor::randn(&[100_000], 0.0, 1.0, &mut rng);
+    let b = Tensor::randn(&[100_000], 0.0, 1.0, &mut rng);
+    for _ in 0..8 {
+        std::hint::black_box(a.add(&b).unwrap());
+        std::hint::black_box(
+            a.lazy()
+                .mul(&b.lazy())
+                .unwrap()
+                .add(&a.lazy())
+                .unwrap()
+                .relu()
+                .eval()
+                .unwrap(),
+        );
+    }
+    let m = Tensor::randn(&[64, 64], 0.0, 1.0, &mut rng);
+    std::hint::black_box(m.matmul(&m).unwrap());
+    let snap = metrics::snapshot();
+    if json {
+        println!("{}", snap.to_json());
+    } else {
+        print!("{}", snap.prometheus_text());
     }
     Ok(())
 }

@@ -1,0 +1,123 @@
+//! Warn-once parsing for `MINITENSOR_*` environment variables.
+//!
+//! The engine's knobs (`MINITENSOR_NUM_THREADS`, `MINITENSOR_TRACE_CAPACITY`,
+//! `MINITENSOR_PROGRAM_CACHE`, …) resolve lazily on first use; a typo'd
+//! value used to fall back to the default *silently*, which reads exactly
+//! like the override worked. [`parse`] keeps the fall-back behavior but
+//! says so once per variable per process on stderr.
+//!
+//! The parsing itself is the pure function [`parse_checked`] over an
+//! already-read raw value, so every call site can unit-test its own
+//! accepted/rejected forms without mutating the process environment
+//! (tests run multi-threaded; `std::env::set_var` there is a race).
+
+use std::collections::BTreeSet;
+use std::str::FromStr;
+use std::sync::Mutex;
+
+/// Variables already warned about (process-global: several modules read
+/// their variable from per-thread lazy init, and the warning must not
+/// repeat per thread).
+static WARNED: Mutex<BTreeSet<&'static str>> = Mutex::new(BTreeSet::new());
+
+/// Pure parse step: `Ok(None)` = unset, `Ok(Some(v))` = parsed and
+/// accepted by `valid`, `Err(msg)` = set but unusable (the caller falls
+/// back to its default). `expected` describes the accepted form for the
+/// message.
+pub(crate) fn parse_checked<T: FromStr>(
+    name: &str,
+    raw: Option<&str>,
+    valid: impl Fn(&T) -> bool,
+    expected: &str,
+) -> Result<Option<T>, String> {
+    let Some(raw) = raw else { return Ok(None) };
+    match raw.trim().parse::<T>() {
+        Ok(v) if valid(&v) => Ok(Some(v)),
+        _ => Err(format!(
+            "minitensor: warning: ignoring invalid {name}={raw:?} (expected {expected}); \
+             using the default"
+        )),
+    }
+}
+
+/// Read-and-validate `name` from an already-fetched raw value, warning
+/// once per process on stderr when the value is set but invalid. Returns
+/// `None` both for "unset" and "invalid" — the caller applies its
+/// default either way.
+pub(crate) fn parse<T: FromStr>(
+    name: &'static str,
+    raw: Option<&str>,
+    valid: impl Fn(&T) -> bool,
+    expected: &str,
+) -> Option<T> {
+    match parse_checked(name, raw, valid, expected) {
+        Ok(v) => v,
+        Err(msg) => {
+            let mut warned = WARNED.lock().unwrap_or_else(|e| e.into_inner());
+            if warned.insert(name) {
+                eprintln!("{msg}");
+            }
+            None
+        }
+    }
+}
+
+/// Convenience: [`parse`] over the live environment.
+pub(crate) fn parse_env<T: FromStr>(
+    name: &'static str,
+    valid: impl Fn(&T) -> bool,
+    expected: &str,
+) -> Option<T> {
+    let raw = std::env::var(name).ok();
+    parse(name, raw.as_deref(), valid, expected)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unset_is_ok_none() {
+        assert_eq!(
+            parse_checked::<usize>("X", None, |_| true, "an integer"),
+            Ok(None)
+        );
+    }
+
+    #[test]
+    fn valid_value_parses() {
+        assert_eq!(
+            parse_checked::<usize>("X", Some(" 42 "), |_| true, "an integer"),
+            Ok(Some(42))
+        );
+    }
+
+    #[test]
+    fn invalid_value_errors_with_context() {
+        let err = parse_checked::<usize>("MINITENSOR_X", Some("banana"), |_| true, "an integer")
+            .unwrap_err();
+        assert!(err.contains("MINITENSOR_X"), "{err}");
+        assert!(err.contains("banana"), "{err}");
+        assert!(err.contains("an integer"), "{err}");
+    }
+
+    #[test]
+    fn rejected_by_validator_errors() {
+        let r = parse_checked::<usize>("X", Some("0"), |&v| v > 0, "a positive integer");
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn parse_falls_back_to_none_and_only_warns_once() {
+        // Both calls take the warn path; the second must be deduplicated.
+        for _ in 0..2 {
+            let v: Option<usize> =
+                parse("MINITENSOR_TEST_ONLY_VAR", Some("nope"), |_| true, "an integer");
+            assert_eq!(v, None);
+        }
+        assert!(WARNED
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .contains("MINITENSOR_TEST_ONLY_VAR"));
+    }
+}

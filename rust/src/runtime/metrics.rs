@@ -1,0 +1,1137 @@
+//! Process-wide metrics registry: counters, gauges, and histograms with
+//! lock-free per-thread shards, exported as a typed snapshot, JSON, and
+//! Prometheus text exposition (hand-rolled HTTP, zero dependencies).
+//!
+//! This is the third observability pillar next to [`stats`](super::stats)
+//! (exact per-thread counters for tests/benches) and
+//! [`trace`](super::trace) (on-demand timelines): an **always-on
+//! aggregate view** a fleet can scrape continuously. One registry, one
+//! naming scheme — `minitensor_<subsystem>_<what>[_total]`:
+//!
+//! | family | series |
+//! |---|---|
+//! | exec | `minitensor_exec_dispatches_total`, `_output_allocs_total`, `_fused_kernels_total`, `_fused_ops_total`, `_fused_elems_total`, `_simd_blocks_total` |
+//! | program cache | `minitensor_program_cache_hits_total`, `_misses_total`, `minitensor_graph_fusion_bailouts_total` |
+//! | pool | `minitensor_pool_hits_total`, `_misses_total`, `_returns_total`, `_bytes_pooled`, `_bytes_live`, `_bytes_highwater` |
+//! | parallel | `minitensor_parallel_chunks_total`, `_tasks_total`, `_pool_workers` |
+//! | serve | every `coordinator::Metrics` counter/series, mirrored as `minitensor_serve_*` (latency/queue series export as summaries) |
+//!
+//! **Hot-path cost.** The engine-side counters above are *sharded*: each
+//! thread owns a fixed slot array it alone writes (registered once, like
+//! the trace rings), so an increment is one branch on the
+//! enable flag plus one relaxed load+store of the calling thread's own
+//! cache line — no RMW contention, no lock. `snapshot()` merges the
+//! shards. Counters only grow (shards outlive their threads), so scraped
+//! totals are monotonic. Gauges shard as wrapping signed deltas: a buffer
+//! allocated on thread A may drop on thread B, leaving A's shard
+//! permanently high and B's "negative" — the cross-shard sum is still
+//! exact. Dynamically named serve/train metrics go through a mutex map
+//! instead; they are recorded per *batch*, not per element, so the lock
+//! is off the kernel hot path.
+//!
+//! **Switch.** `MINITENSOR_METRICS=off` (or [`set_enabled`]) turns every
+//! record path into the flag check alone — that is the "registry-disabled
+//! build" the `metrics_overhead` bench compares against. Note that
+//! [`stats`](super::stats) reads its per-thread view from these shards,
+//! so disabling the registry freezes those counters too (the fusion
+//! tests run with the default, on).
+//!
+//! **Export.** [`snapshot`] → [`MetricsSnapshot`] (typed, plus
+//! [`MetricsSnapshot::to_json`]), [`prometheus_text`] → text exposition
+//! format 0.0.4, and [`serve_http`] → a tiny blocking
+//! `std::net::TcpListener` responder serving `GET /metrics` (Prometheus)
+//! and `GET /metrics.json`. The serve stack starts one when
+//! `ServeConfig::metrics_port` is set; `minitensor metrics` does a
+//! one-shot dump.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Histogram (promoted from coordinator::metrics in PR 9 — the serve stack
+// re-exports it, so `coordinator::Metrics` and the registry share one type).
+// ---------------------------------------------------------------------------
+
+/// Bucket count of a [`Histogram`]. 512 buckets over [`H_MIN`, `H_MAX`]
+/// gives a per-bucket ratio of (1e10)^(1/512) ≈ 1.046 — percentiles are
+/// reported within ~±2.3% of the true value.
+const BUCKETS: usize = 512;
+/// Lower edge of the bucketed range, in seconds (1 µs).
+const H_MIN: f64 = 1e-6;
+/// Upper edge of the bucketed range, in seconds (~2.8 hours).
+const H_MAX: f64 = 1e4;
+
+/// Fixed-size log-bucketed histogram of non-negative observations
+/// (seconds, sizes, depths — any positive magnitude).
+///
+/// O(1) memory, O(1) `observe`, mergeable across threads/workers by
+/// adding bucket counts. Values outside [1e-6, 1e4] clamp into the edge
+/// buckets; the exact observed `min`/`max` are tracked so the reported
+/// percentiles never step outside the observed range.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: vec![0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket(v: f64) -> usize {
+        if v.is_nan() || v <= H_MIN {
+            return 0; // ≤ H_MIN, zero, negative, or NaN
+        }
+        if v >= H_MAX {
+            return BUCKETS - 1;
+        }
+        let frac = (v / H_MIN).ln() / (H_MAX / H_MIN).ln();
+        ((frac * BUCKETS as f64) as usize).min(BUCKETS - 1)
+    }
+
+    /// Geometric midpoint of bucket `i` — the value a percentile query
+    /// reports for observations that landed there.
+    fn representative(i: usize) -> f64 {
+        H_MIN * (H_MAX / H_MIN).powf((i as f64 + 0.5) / BUCKETS as f64)
+    }
+
+    /// Record one observation.
+    pub fn observe(&mut self, v: f64) {
+        let v = if v.is_finite() { v.max(0.0) } else { 0.0 };
+        self.counts[Self::bucket(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold another histogram into this one (bucket-wise addition) —
+    /// how per-worker locals combine into a process view.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact running sum of all observations.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact mean (running sum / count); `None` if empty.
+    pub fn mean(&self) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        Some(self.sum / self.count as f64)
+    }
+
+    /// Percentile (q in [0,1]) to within one bucket; `None` if empty.
+    /// Reports the containing bucket's geometric midpoint, clamped to
+    /// the exact observed [min, max]; the extreme ranks (q=0, q=1)
+    /// report the exact observed min/max.
+    pub fn percentile(&self, q: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((self.count - 1) as f64 * q.clamp(0.0, 1.0)).round() as u64;
+        if rank == 0 {
+            return Some(self.min);
+        }
+        if rank == self.count - 1 {
+            return Some(self.max);
+        }
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return Some(Self::representative(i).clamp(self.min, self.max));
+            }
+        }
+        Some(self.max) // unreachable in practice (counts sum to count)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sharded engine counters/gauges.
+// ---------------------------------------------------------------------------
+
+/// How a built-in slot merges across shards and renders in exposition.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    /// Monotone sum across shards; rendered as a Prometheus counter.
+    Counter,
+    /// Wrapping signed sum across shards (per-thread deltas); gauge.
+    GaugeSum,
+    /// Maximum across shards (per-thread high-water marks); gauge.
+    GaugeMax,
+}
+
+/// Built-in sharded series, written by the engine hot paths. Keep in sync
+/// with [`DEFS`] (indexed by discriminant).
+#[derive(Clone, Copy)]
+#[repr(usize)]
+pub(crate) enum Id {
+    ExecDispatches = 0,
+    OutputAllocs,
+    FusedKernels,
+    FusedOps,
+    FusedElems,
+    ProgramCacheHits,
+    ProgramCacheMisses,
+    FusionBailouts,
+    SimdBlocks,
+    PoolHits,
+    PoolMisses,
+    PoolReturns,
+    PoolBytesPooled,
+    PoolBytesLive,
+    PoolBytesHighwater,
+    ParallelChunks,
+    ParallelTasks,
+}
+
+/// Number of built-in sharded slots.
+const ID_COUNT: usize = 17;
+
+struct Def {
+    name: &'static str,
+    kind: Kind,
+    help: &'static str,
+}
+
+const DEFS: [Def; ID_COUNT] = [
+    Def {
+        name: "minitensor_exec_dispatches_total",
+        kind: Kind::Counter,
+        help: "Kernel dispatches through the exec-layer funnels.",
+    },
+    Def {
+        name: "minitensor_exec_output_allocs_total",
+        kind: Kind::Counter,
+        help: "Output buffers drawn (pool or fresh) by exec-layer kernels.",
+    },
+    Def {
+        name: "minitensor_exec_fused_kernels_total",
+        kind: Kind::Counter,
+        help: "Fused-region kernels launched by the lazy graph subsystem.",
+    },
+    Def {
+        name: "minitensor_exec_fused_ops_total",
+        kind: Kind::Counter,
+        help: "Graph ops folded into fused kernels.",
+    },
+    Def {
+        name: "minitensor_exec_fused_elems_total",
+        kind: Kind::Counter,
+        help: "Output elements produced by fused kernels.",
+    },
+    Def {
+        name: "minitensor_program_cache_hits_total",
+        kind: Kind::Counter,
+        help: "Lazy-graph eval() calls that reused a cached compiled program.",
+    },
+    Def {
+        name: "minitensor_program_cache_misses_total",
+        kind: Kind::Counter,
+        help: "Lazy-graph eval() calls that compiled a fresh program.",
+    },
+    Def {
+        name: "minitensor_graph_fusion_bailouts_total",
+        kind: Kind::Counter,
+        help: "Regions degraded to per-op dispatch by partitioner caps.",
+    },
+    Def {
+        name: "minitensor_exec_simd_blocks_total",
+        kind: Kind::Counter,
+        help: "Full 8-lane vector blocks processed by SIMD-funneled kernels.",
+    },
+    Def {
+        name: "minitensor_pool_hits_total",
+        kind: Kind::Counter,
+        help: "Buffer-pool requests satisfied from a pooled allocation.",
+    },
+    Def {
+        name: "minitensor_pool_misses_total",
+        kind: Kind::Counter,
+        help: "Buffer-pool requests that fell back to a fresh allocation.",
+    },
+    Def {
+        name: "minitensor_pool_returns_total",
+        kind: Kind::Counter,
+        help: "Buffers accepted back into the pool on storage drop.",
+    },
+    Def {
+        name: "minitensor_pool_bytes_pooled",
+        kind: Kind::GaugeSum,
+        help: "Bytes currently parked in the per-thread buffer pools.",
+    },
+    Def {
+        name: "minitensor_pool_bytes_live",
+        kind: Kind::GaugeSum,
+        help: "Bytes currently held by live tensor storages.",
+    },
+    Def {
+        name: "minitensor_pool_bytes_highwater",
+        kind: Kind::GaugeMax,
+        help: "Largest pooled-bytes footprint any one thread has held.",
+    },
+    Def {
+        name: "minitensor_parallel_chunks_total",
+        kind: Kind::Counter,
+        help: "Chunks fanned out to the worker pool by parallel_for.",
+    },
+    Def {
+        name: "minitensor_parallel_tasks_total",
+        kind: Kind::Counter,
+        help: "Index tasks fanned out by parallel_for_indexed.",
+    },
+];
+
+/// One thread's slot array. Only the owning thread writes (relaxed
+/// load+store — no RMW needed without concurrent writers); any thread
+/// may read. Registered once per thread and never removed, so merged
+/// counters are monotone even after the thread exits.
+struct Shard {
+    slots: [AtomicU64; ID_COUNT],
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            slots: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+struct Registry {
+    shards: Mutex<Vec<Arc<Shard>>>,
+    counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+    series: Mutex<BTreeMap<String, Histogram>>,
+}
+
+fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(|| Registry {
+        shards: Mutex::new(Vec::new()),
+        counters: Mutex::new(BTreeMap::new()),
+        gauges: Mutex::new(BTreeMap::new()),
+        series: Mutex::new(BTreeMap::new()),
+    })
+}
+
+thread_local! {
+    static SHARD: std::cell::OnceCell<Arc<Shard>> = const { std::cell::OnceCell::new() };
+}
+
+/// Run `f` against the calling thread's shard, registering it on first
+/// use. Silently skips during thread teardown (a TLS-destructor-order
+/// storage drop may land after the shard slot is gone — losing that
+/// final decrement is harmless).
+#[inline]
+fn with_shard<R>(f: impl FnOnce(&Shard) -> R) -> Option<R> {
+    SHARD
+        .try_with(|cell| {
+            let shard = cell.get_or_init(|| {
+                let shard = Arc::new(Shard::new());
+                registry()
+                    .shards
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .push(Arc::clone(&shard));
+                shard
+            });
+            f(shard)
+        })
+        .ok()
+}
+
+// --- enable switch ---------------------------------------------------------
+
+const EN_UNINIT: u8 = 0;
+const EN_ON: u8 = 1;
+const EN_OFF: u8 = 2;
+static ENABLED: AtomicU8 = AtomicU8::new(EN_UNINIT);
+
+/// Is the registry recording? One relaxed atomic load — the entire cost
+/// a metric site adds when recording is off.
+#[inline]
+pub fn enabled() -> bool {
+    match ENABLED.load(Ordering::Relaxed) {
+        EN_ON => true,
+        EN_OFF => false,
+        _ => resolve_enabled(),
+    }
+}
+
+#[cold]
+fn resolve_enabled() -> bool {
+    let off = matches!(
+        std::env::var("MINITENSOR_METRICS").as_deref().map(str::trim),
+        Ok("off") | Ok("0") | Ok("false")
+    );
+    let target = if off { EN_OFF } else { EN_ON };
+    let _ = ENABLED.compare_exchange(EN_UNINIT, target, Ordering::Relaxed, Ordering::Relaxed);
+    ENABLED.load(Ordering::Relaxed) == EN_ON
+}
+
+/// Turn recording on/off for the whole process (overrides
+/// `MINITENSOR_METRICS`). Off also freezes [`stats`](super::stats),
+/// which reads the same shards — the switch exists for A/B overhead
+/// measurement (`benches/metrics_overhead.rs`), not routine use.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(if on { EN_ON } else { EN_OFF }, Ordering::Relaxed);
+}
+
+// --- hot-path recording (crate-internal) -----------------------------------
+
+/// Add `n` to a built-in counter slot on the calling thread's shard.
+#[inline]
+pub(crate) fn add(id: Id, n: u64) {
+    if !enabled() {
+        return;
+    }
+    with_shard(|s| {
+        let slot = &s.slots[id as usize];
+        // Owner-only writer: plain load+store, no RMW.
+        slot.store(
+            slot.load(Ordering::Relaxed).wrapping_add(n),
+            Ordering::Relaxed,
+        );
+    });
+}
+
+/// Apply a signed delta to a built-in gauge slot (two's-complement
+/// wrapping on the calling thread's shard; the cross-shard sum is exact
+/// even when one shard's local total goes negative).
+#[inline]
+pub(crate) fn gauge_add(id: Id, delta: i64) {
+    add(id, delta as u64);
+}
+
+/// Raise a built-in high-water slot to at least `v` on this thread.
+#[inline]
+pub(crate) fn gauge_peak(id: Id, v: u64) {
+    if !enabled() {
+        return;
+    }
+    with_shard(|s| {
+        let slot = &s.slots[id as usize];
+        if v > slot.load(Ordering::Relaxed) {
+            slot.store(v, Ordering::Relaxed);
+        }
+    });
+}
+
+/// The calling thread's own slot value (what [`stats`](super::stats)
+/// builds its exact per-thread view from).
+#[inline]
+pub(crate) fn thread_get(id: Id) -> u64 {
+    with_shard(|s| s.slots[id as usize].load(Ordering::Relaxed)).unwrap_or(0)
+}
+
+// --- dynamically named metrics (mutex-backed; per-batch rates) -------------
+
+/// Increment a named counter (created on first use). Intended for
+/// per-request/per-batch rates — the serve stack mirrors its
+/// `coordinator::Metrics` counters here — not for per-element hot loops.
+pub fn counter_add(name: &str, by: u64) {
+    if !enabled() {
+        return;
+    }
+    let mut c = registry().counters.lock().unwrap_or_else(|e| e.into_inner());
+    *c.entry(name.to_string()).or_insert(0) += by;
+}
+
+/// Set a named gauge to an absolute value.
+pub fn gauge_set(name: &str, v: f64) {
+    if !enabled() {
+        return;
+    }
+    let mut g = registry().gauges.lock().unwrap_or_else(|e| e.into_inner());
+    g.insert(name.to_string(), v);
+}
+
+/// Record one observation into a named histogram series (exported as a
+/// Prometheus summary).
+pub fn observe(name: &str, v: f64) {
+    if !enabled() {
+        return;
+    }
+    let mut s = registry().series.lock().unwrap_or_else(|e| e.into_inner());
+    s.entry(name.to_string()).or_default().observe(v);
+}
+
+/// Fold an externally accumulated histogram into a named series.
+pub fn merge_histogram(name: &str, h: &Histogram) {
+    if !enabled() {
+        return;
+    }
+    let mut s = registry().series.lock().unwrap_or_else(|e| e.into_inner());
+    s.entry(name.to_string()).or_default().merge(h);
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot + exposition.
+// ---------------------------------------------------------------------------
+
+/// Point-in-time digest of one histogram series.
+#[derive(Debug, Clone, Copy)]
+pub struct SummarySnapshot {
+    /// Observation count.
+    pub count: u64,
+    /// Exact running sum.
+    pub sum: f64,
+    /// Exact mean.
+    pub mean: f64,
+    /// Exact observed minimum.
+    pub min: f64,
+    /// Exact observed maximum.
+    pub max: f64,
+    /// Median (within one log bucket).
+    pub p50: f64,
+    /// 95th percentile (within one log bucket).
+    pub p95: f64,
+    /// 99th percentile (within one log bucket).
+    pub p99: f64,
+}
+
+impl SummarySnapshot {
+    fn from_histogram(h: &Histogram) -> Option<SummarySnapshot> {
+        if h.count() == 0 {
+            return None;
+        }
+        Some(SummarySnapshot {
+            count: h.count(),
+            sum: h.sum(),
+            mean: h.mean().unwrap_or(0.0),
+            min: h.percentile(0.0).unwrap_or(0.0),
+            max: h.percentile(1.0).unwrap_or(0.0),
+            p50: h.percentile(0.5).unwrap_or(0.0),
+            p95: h.percentile(0.95).unwrap_or(0.0),
+            p99: h.percentile(0.99).unwrap_or(0.0),
+        })
+    }
+}
+
+/// Full registry snapshot: every built-in slot merged across shards plus
+/// every dynamically named metric, each list sorted by name.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    /// Monotone counters (`*_total`).
+    pub counters: Vec<(String, u64)>,
+    /// Instantaneous gauges.
+    pub gauges: Vec<(String, f64)>,
+    /// Histogram series digests.
+    pub summaries: Vec<(String, SummarySnapshot)>,
+}
+
+/// Merge every shard and named map into a [`MetricsSnapshot`].
+pub fn snapshot() -> MetricsSnapshot {
+    let reg = registry();
+    let mut sums = [0u64; ID_COUNT];
+    let mut maxes = [0u64; ID_COUNT];
+    {
+        let shards = reg.shards.lock().unwrap_or_else(|e| e.into_inner());
+        for sh in shards.iter() {
+            for (i, slot) in sh.slots.iter().enumerate() {
+                let v = slot.load(Ordering::Relaxed);
+                sums[i] = sums[i].wrapping_add(v);
+                maxes[i] = maxes[i].max(v);
+            }
+        }
+    }
+    let mut counters: BTreeMap<String, u64> = BTreeMap::new();
+    let mut gauges: BTreeMap<String, f64> = BTreeMap::new();
+    for (i, def) in DEFS.iter().enumerate() {
+        match def.kind {
+            Kind::Counter => {
+                counters.insert(def.name.to_string(), sums[i]);
+            }
+            // Clamp transient sub-zero sums (a snapshot racing a
+            // cross-thread transfer) to zero for display.
+            Kind::GaugeSum => {
+                gauges.insert(def.name.to_string(), (sums[i] as i64).max(0) as f64);
+            }
+            Kind::GaugeMax => {
+                gauges.insert(def.name.to_string(), maxes[i] as f64);
+            }
+        }
+    }
+    for (k, v) in reg.counters.lock().unwrap_or_else(|e| e.into_inner()).iter() {
+        *counters.entry(k.clone()).or_insert(0) += v;
+    }
+    for (k, v) in reg.gauges.lock().unwrap_or_else(|e| e.into_inner()).iter() {
+        gauges.insert(k.clone(), *v);
+    }
+    let summaries = reg
+        .series
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .iter()
+        .filter_map(|(k, h)| SummarySnapshot::from_histogram(h).map(|s| (k.clone(), s)))
+        .collect();
+    MetricsSnapshot {
+        counters: counters.into_iter().collect(),
+        gauges: gauges.into_iter().collect(),
+        summaries,
+    }
+}
+
+fn help_for(name: &str) -> Option<&'static str> {
+    DEFS.iter().find(|d| d.name == name).map(|d| d.help)
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        // Histogram digests never produce non-finite values; gauges set
+        // through the public API could. Prometheus spells these NaN/+Inf.
+        if v.is_nan() {
+            "NaN".into()
+        } else if v > 0.0 {
+            "+Inf".into()
+        } else {
+            "-Inf".into()
+        }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl MetricsSnapshot {
+    /// Prometheus text exposition format 0.0.4: `# HELP`/`# TYPE` plus a
+    /// sample line per counter and gauge; each histogram series exports
+    /// as a summary (quantile samples + `_sum` + `_count`).
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        for (name, v) in &self.counters {
+            if let Some(h) = help_for(name) {
+                out.push_str(&format!("# HELP {name} {h}\n"));
+            }
+            out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            if let Some(h) = help_for(name) {
+                out.push_str(&format!("# HELP {name} {h}\n"));
+            }
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", fmt_f64(*v)));
+        }
+        for (name, s) in &self.summaries {
+            out.push_str(&format!("# TYPE {name} summary\n"));
+            for (q, v) in [("0.5", s.p50), ("0.95", s.p95), ("0.99", s.p99)] {
+                out.push_str(&format!("{name}{{quantile=\"{q}\"}} {}\n", fmt_f64(v)));
+            }
+            out.push_str(&format!("{name}_sum {}\n", fmt_f64(s.sum)));
+            out.push_str(&format!("{name}_count {}\n", s.count));
+        }
+        out
+    }
+
+    /// Hand-rolled JSON object:
+    /// `{"counters":{..},"gauges":{..},"summaries":{name:{count,sum,...}}}`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        out.push_str("{\"counters\":{");
+        for (i, (k, v)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":{v}", json_escape(k)));
+        }
+        out.push_str("},\"gauges\":{");
+        for (i, (k, v)) in self.gauges.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let v = if v.is_finite() { *v } else { 0.0 };
+            out.push_str(&format!("\"{}\":{v}", json_escape(k)));
+        }
+        out.push_str("},\"summaries\":{");
+        for (i, (k, s)) in self.summaries.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\"{}\":{{\"count\":{},\"sum\":{},\"mean\":{},\"min\":{},\"max\":{},\
+                 \"p50\":{},\"p95\":{},\"p99\":{}}}",
+                json_escape(k),
+                s.count,
+                s.sum,
+                s.mean,
+                s.min,
+                s.max,
+                s.p50,
+                s.p95,
+                s.p99
+            ));
+        }
+        out.push_str("}}");
+        out
+    }
+}
+
+/// [`snapshot`] rendered as Prometheus text exposition.
+pub fn prometheus_text() -> String {
+    snapshot().prometheus_text()
+}
+
+// ---------------------------------------------------------------------------
+// HTTP exposition (hand-rolled, std-only).
+// ---------------------------------------------------------------------------
+
+/// Handle to a running metrics HTTP responder; dropping it stops the
+/// accept loop and joins the thread.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// The bound address (resolves the actual port when started with 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Start a metrics HTTP responder on `127.0.0.1:port` (`0` picks an
+/// ephemeral port — read it back from [`MetricsServer::addr`]). Routes:
+/// `GET /metrics` (and `/`) → Prometheus text, `GET /metrics.json` →
+/// JSON snapshot; anything else → 404. One blocking accept loop handles
+/// scrapes serially — scrape traffic is a request every few seconds, not
+/// a data path.
+pub fn serve_http(port: u16) -> std::io::Result<MetricsServer> {
+    let listener = TcpListener::bind(("127.0.0.1", port))?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let handle = std::thread::Builder::new()
+        .name("mt-metrics-http".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::Relaxed) {
+                    break;
+                }
+                if let Ok(mut stream) = conn {
+                    let _ = handle_conn(&mut stream);
+                }
+            }
+        })?;
+    Ok(MetricsServer {
+        addr,
+        stop,
+        handle: Some(handle),
+    })
+}
+
+fn handle_conn(stream: &mut TcpStream) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    // Read the request head (we ignore everything past the request line).
+    let mut buf = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 1024];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > 16 * 1024 {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let head = String::from_utf8_lossy(&buf);
+    let mut parts = head.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let path = path.split('?').next().unwrap_or(path);
+    let (status, ctype, body) = if method != "GET" {
+        ("405 Method Not Allowed", "text/plain", "method not allowed\n".to_string())
+    } else {
+        match path {
+            "/metrics" | "/" => (
+                "200 OK",
+                "text/plain; version=0.0.4; charset=utf-8",
+                prometheus_text(),
+            ),
+            "/metrics.json" => ("200 OK", "application/json", snapshot().to_json()),
+            _ => ("404 Not Found", "text/plain", "not found\n".to_string()),
+        }
+    };
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(resp.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // --- histogram behavior (promoted with the type from coordinator) ---
+
+    #[test]
+    fn histogram_memory_is_constant_and_extremes_clamp() {
+        let mut h = Histogram::new();
+        for _ in 0..1_000_000 {
+            h.observe(0.001);
+        }
+        h.observe(0.0); // below range → edge bucket, exact min tracked
+        h.observe(1e9); // above range → edge bucket, exact max tracked
+        assert_eq!(h.count(), 1_000_002);
+        assert_eq!(h.counts.len(), BUCKETS);
+        assert_eq!(h.percentile(0.0), Some(0.0));
+        assert_eq!(h.percentile(1.0), Some(1e9));
+        let p50 = h.percentile(0.5).unwrap();
+        assert!((p50 - 0.001).abs() < 0.001 * 0.05, "{p50}");
+    }
+
+    #[test]
+    fn histograms_merge_like_one_series() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut whole = Histogram::new();
+        for i in 1..=50 {
+            a.observe(i as f64 / 1000.0);
+            whole.observe(i as f64 / 1000.0);
+        }
+        for i in 51..=100 {
+            b.observe(i as f64 / 1000.0);
+            whole.observe(i as f64 / 1000.0);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.mean(), whole.mean());
+        assert_eq!(a.sum(), whole.sum());
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.percentile(q), whole.percentile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn merging_an_empty_histogram_changes_nothing() {
+        let mut a = Histogram::new();
+        a.observe(0.002);
+        a.observe(0.004);
+        let before_mean = a.mean();
+        a.merge(&Histogram::new());
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.mean(), before_mean);
+        // The empty side's sentinel min/max (+inf/-inf) must not leak
+        // into the merged extremes.
+        assert_eq!(a.percentile(0.0), Some(0.002));
+        assert_eq!(a.percentile(1.0), Some(0.004));
+
+        // And merging *into* an empty histogram reproduces the source.
+        let mut e = Histogram::new();
+        e.merge(&a);
+        assert_eq!(e.count(), a.count());
+        assert_eq!(e.mean(), a.mean());
+        for q in [0.0, 0.5, 1.0] {
+            assert_eq!(e.percentile(q), a.percentile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn empty_histogram_reports_none() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), None);
+        assert_eq!(h.sum(), 0.0);
+        for q in [0.0, 0.5, 1.0] {
+            assert_eq!(h.percentile(q), None, "q={q}");
+        }
+        assert!(SummarySnapshot::from_histogram(&h).is_none());
+    }
+
+    #[test]
+    fn out_of_range_values_clamp_to_edge_buckets() {
+        assert_eq!(Histogram::bucket(1e-9), 0);
+        assert_eq!(Histogram::bucket(0.0), 0);
+        assert_eq!(Histogram::bucket(-5.0), 0);
+        assert_eq!(Histogram::bucket(f64::NAN), 0);
+        assert_eq!(Histogram::bucket(1e5), BUCKETS - 1);
+        assert_eq!(Histogram::bucket(f64::INFINITY), BUCKETS - 1);
+
+        let mut h = Histogram::new();
+        for _ in 0..10 {
+            h.observe(1e-9);
+        }
+        for _ in 0..10 {
+            h.observe(1e5);
+        }
+        assert_eq!(h.percentile(0.0), Some(1e-9));
+        assert_eq!(h.percentile(1.0), Some(1e5));
+        let p40 = h.percentile(0.4).unwrap();
+        assert!((1e-9..=1e5).contains(&p40), "{p40}");
+    }
+
+    #[test]
+    fn single_sample_percentile_is_that_value() {
+        let mut h = Histogram::new();
+        h.observe(0.0123);
+        for q in [0.0, 0.25, 0.5, 0.75, 0.99, 1.0] {
+            assert_eq!(h.percentile(q), Some(0.0123), "q={q}");
+        }
+        assert_eq!(h.mean(), Some(0.0123));
+    }
+
+    // --- registry behavior ---
+    //
+    // The registry is process-global and the unit-test binary runs tests
+    // concurrently, so these assert monotone deltas (≥), never global
+    // equality; exact lose-nothing accounting is pinned by the
+    // serialized hammer test in tests/metrics.rs.
+
+    #[test]
+    fn sharded_counter_merges_across_threads() {
+        let before = snapshot();
+        let get = |s: &MetricsSnapshot| {
+            s.counters
+                .iter()
+                .find(|(k, _)| k == "minitensor_parallel_tasks_total")
+                .map(|&(_, v)| v)
+                .unwrap_or(0)
+        };
+        add(Id::ParallelTasks, 5);
+        std::thread::spawn(|| add(Id::ParallelTasks, 7))
+            .join()
+            .unwrap();
+        let after = snapshot();
+        assert!(
+            get(&after) >= get(&before) + 12,
+            "both threads' increments must merge: {} -> {}",
+            get(&before),
+            get(&after)
+        );
+    }
+
+    #[test]
+    fn gauge_deltas_balance_across_threads() {
+        // +N on this thread, -N on another: the merged sum must return
+        // to (at least) its starting point despite the second shard
+        // holding a wrapped "negative" value.
+        let get = |s: &MetricsSnapshot| {
+            s.gauges
+                .iter()
+                .find(|(k, _)| k == "minitensor_pool_bytes_live")
+                .map(|&(_, v)| v)
+                .unwrap_or(0.0)
+        };
+        gauge_add(Id::PoolBytesLive, 1 << 30);
+        let mid = snapshot();
+        std::thread::spawn(|| gauge_add(Id::PoolBytesLive, -(1 << 30)))
+            .join()
+            .unwrap();
+        let after = snapshot();
+        assert!(
+            get(&mid) - get(&after) >= (1 << 30) as f64 * 0.99,
+            "cross-thread decrement must subtract from the merged view: mid={} after={}",
+            get(&mid),
+            get(&after)
+        );
+    }
+
+    #[test]
+    fn gauge_peak_takes_max_across_threads() {
+        gauge_peak(Id::PoolBytesHighwater, 1000);
+        std::thread::spawn(|| gauge_peak(Id::PoolBytesHighwater, 999_999_999))
+            .join()
+            .unwrap();
+        let s = snapshot();
+        let hw = s
+            .gauges
+            .iter()
+            .find(|(k, _)| k == "minitensor_pool_bytes_highwater")
+            .map(|&(_, v)| v)
+            .unwrap();
+        assert!(hw >= 999_999_999.0, "{hw}");
+    }
+
+    #[test]
+    fn named_metrics_round_trip() {
+        counter_add("minitensor_test_named_total", 3);
+        counter_add("minitensor_test_named_total", 4);
+        gauge_set("minitensor_test_named_gauge", 2.5);
+        observe("minitensor_test_named_series", 0.002);
+        observe("minitensor_test_named_series", 0.004);
+        let s = snapshot();
+        let c = s
+            .counters
+            .iter()
+            .find(|(k, _)| k == "minitensor_test_named_total")
+            .map(|&(_, v)| v)
+            .unwrap();
+        assert!(c >= 7);
+        assert!(s
+            .gauges
+            .iter()
+            .any(|(k, &v)| k == "minitensor_test_named_gauge" && v == 2.5));
+        let (_, sum) = s
+            .summaries
+            .iter()
+            .find(|(k, _)| k == "minitensor_test_named_series")
+            .unwrap();
+        assert!(sum.count >= 2);
+        assert!(sum.min <= 0.002 && sum.max >= 0.004);
+    }
+
+    // The set_enabled(false) path is pinned in tests/metrics.rs — the
+    // switch is process-global, so flipping it here would race the other
+    // unit tests' delta assertions; that binary serializes on a guard.
+
+    // --- exposition formats (synthetic snapshot → deterministic text) ---
+
+    fn sample_snapshot() -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: vec![
+                ("minitensor_exec_dispatches_total".into(), 42),
+                ("minitensor_serve_requests_total".into(), 7),
+            ],
+            gauges: vec![("minitensor_pool_bytes_live".into(), 4096.0)],
+            summaries: vec![(
+                "minitensor_serve_latency".into(),
+                SummarySnapshot {
+                    count: 3,
+                    sum: 0.006,
+                    mean: 0.002,
+                    min: 0.001,
+                    max: 0.003,
+                    p50: 0.002,
+                    p95: 0.003,
+                    p99: 0.003,
+                },
+            )],
+        }
+    }
+
+    #[test]
+    fn prometheus_text_renders_all_families() {
+        let text = sample_snapshot().prometheus_text();
+        assert!(text.contains("# TYPE minitensor_exec_dispatches_total counter"));
+        assert!(text.contains("# HELP minitensor_exec_dispatches_total"));
+        assert!(text.contains("minitensor_exec_dispatches_total 42"));
+        assert!(text.contains("# TYPE minitensor_pool_bytes_live gauge"));
+        assert!(text.contains("minitensor_pool_bytes_live 4096"));
+        assert!(text.contains("# TYPE minitensor_serve_latency summary"));
+        assert!(text.contains("minitensor_serve_latency{quantile=\"0.5\"} 0.002"));
+        assert!(text.contains("minitensor_serve_latency_sum 0.006"));
+        assert!(text.contains("minitensor_serve_latency_count 3"));
+        // Every non-comment line is `name[{labels}] value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split_whitespace().count(), 2, "bad sample line: {line}");
+        }
+    }
+
+    #[test]
+    fn json_snapshot_is_well_formed() {
+        let j = sample_snapshot().to_json();
+        assert!(j.starts_with("{\"counters\":{"));
+        assert!(j.contains("\"minitensor_exec_dispatches_total\":42"));
+        assert!(j.contains("\"gauges\":{\"minitensor_pool_bytes_live\":4096"));
+        assert!(j.contains("\"minitensor_serve_latency\":{\"count\":3"));
+        assert!(j.ends_with("}}"));
+    }
+
+    #[test]
+    fn live_snapshot_always_exposes_builtin_families() {
+        // Even an idle process exports the full built-in schema, so a
+        // scraper sees stable families from the first scrape.
+        let s = snapshot();
+        for def in DEFS.iter() {
+            let present = s.counters.iter().any(|(k, _)| k == def.name)
+                || s.gauges.iter().any(|(k, _)| k == def.name);
+            assert!(present, "missing builtin {}", def.name);
+        }
+    }
+
+    // --- HTTP responder ---
+
+    fn http_get(addr: SocketAddr, path: &str) -> String {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .write_all(format!("GET {path} HTTP/1.1\r\nHost: localhost\r\n\r\n").as_bytes())
+            .unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn http_serves_metrics_and_404s_unknown_paths() {
+        let server = serve_http(0).expect("bind ephemeral port");
+        let addr = server.addr();
+        let resp = http_get(addr, "/metrics");
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("text/plain; version=0.0.4"));
+        assert!(resp.contains("minitensor_exec_dispatches_total"));
+        let json = http_get(addr, "/metrics.json");
+        assert!(json.starts_with("HTTP/1.1 200 OK"));
+        assert!(json.contains("\"counters\":{"));
+        let missing = http_get(addr, "/nope");
+        assert!(missing.starts_with("HTTP/1.1 404"));
+        drop(server); // must join cleanly without hanging the test
+    }
+}

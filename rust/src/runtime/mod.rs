@@ -1,6 +1,8 @@
 //! Runtime services: the parallel execution pool that powers the native
-//! kernels, and (behind the `xla` feature) the PJRT engine that loads
-//! AOT-compiled HLO artifacts produced by `python/compile/aot.py`.
+//! kernels, the observability pillars ([`stats`], [`trace`], and the
+//! process-wide [`metrics`] registry), and (behind the `xla` feature)
+//! the PJRT engine that loads AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py`.
 //!
 //! The PJRT path: artifacts are HLO *text* (the interchange format that
 //! survives the jax≥0.5 / xla_extension 0.5.1 proto-id mismatch; see
@@ -12,6 +14,8 @@
 mod artifact;
 #[cfg(feature = "xla")]
 mod engine;
+pub(crate) mod envvar;
+pub mod metrics;
 pub mod parallel;
 pub mod simd;
 pub mod stats;

@@ -55,12 +55,12 @@ pub fn num_threads() -> usize {
         return n;
     }
     // A parseable env value is clamped like set_num_threads (so `0`
-    // means serial, not "ignore me"); unparseable/unset falls back to
-    // the core count.
-    let resolved = std::env::var("MINITENSOR_NUM_THREADS")
-        .ok()
-        .and_then(|v| v.trim().parse::<usize>().ok())
-        .map(|v| v.clamp(1, MAX_THREADS))
+    // means serial, not "ignore me"); unset falls back to the core
+    // count, and an unparseable value does too — after a once-per-process
+    // stderr warning (it used to fail silently, which read exactly like
+    // the override had worked).
+    let raw = std::env::var("MINITENSOR_NUM_THREADS").ok();
+    let resolved = env_threads(raw.as_deref())
         .unwrap_or_else(|| {
             std::thread::available_parallelism()
                 .map(std::num::NonZeroUsize::get)
@@ -73,6 +73,19 @@ pub fn num_threads() -> usize {
         Ok(_) => resolved,
         Err(current) => current,
     }
+}
+
+/// Parse a raw `MINITENSOR_NUM_THREADS` value: any unsigned integer is
+/// accepted and clamped to `1..=`[`MAX_THREADS`]; anything else warns
+/// once on stderr and returns `None` (caller falls back to core count).
+fn env_threads(raw: Option<&str>) -> Option<usize> {
+    super::envvar::parse::<usize>(
+        "MINITENSOR_NUM_THREADS",
+        raw,
+        |_| true,
+        "an unsigned integer thread count",
+    )
+    .map(|v| v.clamp(1, MAX_THREADS))
 }
 
 /// Override the worker count for the whole process (clamped to
@@ -222,6 +235,7 @@ fn pool() -> &'static Pool {
             .map(std::num::NonZeroUsize::get)
             .unwrap_or(1);
         let workers = cores.saturating_sub(1).max(1);
+        super::metrics::gauge_set("minitensor_parallel_pool_workers", workers as f64);
         let (tx, rx) = channel::<Task>();
         let rx = Arc::new(Mutex::new(rx));
         for i in 0..workers {
@@ -272,6 +286,9 @@ pub fn parallel_for(len: usize, grain: usize, body: &(dyn Fn(usize, usize) + Syn
     }
 
     let pool = pool();
+    // Pool-utilization telemetry: chunks fanned out (including the
+    // caller's inline chunk) per engaged dispatch.
+    super::metrics::add(super::metrics::Id::ParallelChunks, chunks as u64);
     let latch = Arc::new(Latch::new(chunks - 1));
     // SAFETY: every task signals `latch` when done and this function does
     // not return before `latch.wait()` observes all of them, so the
@@ -357,6 +374,7 @@ pub fn parallel_for_indexed(tasks: usize, body: &(dyn Fn(usize) + Sync)) {
     }
 
     let pool = pool();
+    super::metrics::add(super::metrics::Id::ParallelTasks, tasks as u64);
     let latch = Arc::new(Latch::new(helpers));
     let cursor = Arc::new(AtomicUsize::new(0));
     // SAFETY: the same borrowed-closure hand-off as `parallel_for` —
@@ -558,5 +576,30 @@ mod tests {
         set_num_threads(0); // clamps to 1
         assert_eq!(num_threads(), 1);
         set_num_threads(before);
+    }
+
+    #[test]
+    fn env_threads_accepts_integers_and_rejects_garbage() {
+        // Pure resolution over raw values — no std::env mutation (the
+        // test harness is multi-threaded).
+        assert_eq!(env_threads(None), None);
+        assert_eq!(env_threads(Some("4")), Some(4));
+        assert_eq!(env_threads(Some(" 2 ")), Some(2));
+        assert_eq!(env_threads(Some("0")), Some(1), "0 clamps to serial");
+        assert_eq!(env_threads(Some("100000")), Some(MAX_THREADS));
+        // Invalid values fall back (with a once-per-process warning).
+        assert_eq!(env_threads(Some("banana")), None);
+        assert_eq!(env_threads(Some("-2")), None);
+        assert_eq!(env_threads(Some("3.5")), None);
+        // The warn path carries the variable name and the raw value.
+        let err = crate::runtime::envvar::parse_checked::<usize>(
+            "MINITENSOR_NUM_THREADS",
+            Some("banana"),
+            |_| true,
+            "an unsigned integer thread count",
+        )
+        .unwrap_err();
+        assert!(err.contains("MINITENSOR_NUM_THREADS"), "{err}");
+        assert!(err.contains("banana"), "{err}");
     }
 }

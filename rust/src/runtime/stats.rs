@@ -1,6 +1,6 @@
 //! Engine-level execution statistics.
 //!
-//! Thread-local counters fed by the execution layer (`ops::exec`) and the
+//! Per-thread counters fed by the execution layer (`ops::exec`) and the
 //! lazy expression-graph subsystem (`crate::graph`), surfaced in the CLI's
 //! engine report and asserted by the fusion tests ("a fused 3-op chain is
 //! exactly one dispatch and one output allocation").
@@ -21,25 +21,49 @@
 //! to per-op dispatch because they exceeded the fused-input or
 //! stack-depth caps.
 //!
-//! The counters are **thread-local** on purpose: dispatches happen on the
-//! thread that calls into the execution layer (pool workers never dispatch
-//! — nested parallelism degrades to serial), so a test or a bench reads an
-//! exact count for the work *it* issued, immune to whatever the other test
-//! threads are doing. The report therefore describes the calling thread's
-//! view, which for the single-threaded CLI path is the whole process.
+//! **Storage** (since PR 9): the record funnels write the process-wide
+//! sharded registry in [`metrics`](super::metrics) — one slot array per
+//! thread — and this module derives its view as *this thread's shard
+//! minus a thread-local baseline*. That keeps the contract the tests
+//! rely on: dispatches happen on the thread that calls into the
+//! execution layer (pool workers never dispatch — nested parallelism
+//! degrades to serial), so a test or a bench reads an exact count for
+//! the work *it* issued, immune to the other test threads. Meanwhile the
+//! registry's cross-thread merge stays monotone: [`take`] only advances
+//! this thread's baseline, it never rolls the shard (or the scraped
+//! `minitensor_exec_*` totals) backward. The one coupling:
+//! `MINITENSOR_METRICS=off` freezes these counters too.
 
 use std::cell::Cell;
 
+use super::metrics::{self, Id};
+
+/// The nine [`Id`]s backing [`ExecStats`], in field order.
+const STAT_IDS: [Id; 9] = [
+    Id::ExecDispatches,
+    Id::OutputAllocs,
+    Id::FusedKernels,
+    Id::FusedOps,
+    Id::FusedElems,
+    Id::ProgramCacheHits,
+    Id::ProgramCacheMisses,
+    Id::FusionBailouts,
+    Id::SimdBlocks,
+];
+
 thread_local! {
-    static EXEC_DISPATCHES: Cell<u64> = const { Cell::new(0) };
-    static OUTPUT_ALLOCS: Cell<u64> = const { Cell::new(0) };
-    static FUSED_KERNELS: Cell<u64> = const { Cell::new(0) };
-    static FUSED_OPS: Cell<u64> = const { Cell::new(0) };
-    static FUSED_ELEMS: Cell<u64> = const { Cell::new(0) };
-    static PROGRAM_CACHE_HITS: Cell<u64> = const { Cell::new(0) };
-    static PROGRAM_CACHE_MISSES: Cell<u64> = const { Cell::new(0) };
-    static FUSION_BAILOUTS: Cell<u64> = const { Cell::new(0) };
-    static SIMD_BLOCKS: Cell<u64> = const { Cell::new(0) };
+    /// Shard values at the last [`take`] on this thread — the zero point
+    /// of this thread's interval view.
+    static BASELINE: Cell<[u64; 9]> = const { Cell::new([0; 9]) };
+}
+
+/// This thread's raw shard values for the nine stat slots.
+fn thread_raw() -> [u64; 9] {
+    let mut out = [0u64; 9];
+    for (o, &id) in out.iter_mut().zip(STAT_IDS.iter()) {
+        *o = metrics::thread_get(id);
+    }
+    out
 }
 
 /// Point-in-time snapshot of this thread's execution counters.
@@ -79,6 +103,20 @@ pub struct ExecStats {
 }
 
 impl ExecStats {
+    fn from_raw(raw: [u64; 9]) -> ExecStats {
+        ExecStats {
+            exec_dispatches: raw[0],
+            output_allocs: raw[1],
+            fused_kernels: raw[2],
+            fused_ops: raw[3],
+            fused_elems: raw[4],
+            program_cache_hits: raw[5],
+            program_cache_misses: raw[6],
+            fusion_bailouts: raw[7],
+            simd_blocks: raw[8],
+        }
+    }
+
     /// Counter increments since an earlier snapshot on the same thread.
     pub fn delta(&self, since: &ExecStats) -> ExecStats {
         ExecStats {
@@ -97,17 +135,13 @@ impl ExecStats {
 
 /// Snapshot this thread's counters.
 pub fn snapshot() -> ExecStats {
-    ExecStats {
-        exec_dispatches: EXEC_DISPATCHES.with(Cell::get),
-        output_allocs: OUTPUT_ALLOCS.with(Cell::get),
-        fused_kernels: FUSED_KERNELS.with(Cell::get),
-        fused_ops: FUSED_OPS.with(Cell::get),
-        fused_elems: FUSED_ELEMS.with(Cell::get),
-        program_cache_hits: PROGRAM_CACHE_HITS.with(Cell::get),
-        program_cache_misses: PROGRAM_CACHE_MISSES.with(Cell::get),
-        fusion_bailouts: FUSION_BAILOUTS.with(Cell::get),
-        simd_blocks: SIMD_BLOCKS.with(Cell::get),
+    let raw = thread_raw();
+    let base = BASELINE.with(Cell::get);
+    let mut rel = [0u64; 9];
+    for i in 0..9 {
+        rel[i] = raw[i] - base[i];
     }
+    ExecStats::from_raw(rel)
 }
 
 /// Snapshot this thread's counters and reset them to zero.
@@ -115,53 +149,52 @@ pub fn snapshot() -> ExecStats {
 /// The interval-rate primitive for long-running processes: a serve
 /// worker (or any periodic reporter) calls `take()` once per reporting
 /// interval and gets the increments since the previous call, instead of
-/// process-lifetime monotonic totals. Only the calling thread's
-/// counters are affected.
+/// process-lifetime monotonic totals. Only the calling thread's view is
+/// affected — the reset advances a thread-local baseline, so the
+/// process-wide `minitensor_exec_*` counters in
+/// [`metrics`](super::metrics) stay monotone.
 pub fn take() -> ExecStats {
-    let s = snapshot();
-    EXEC_DISPATCHES.with(|c| c.set(0));
-    OUTPUT_ALLOCS.with(|c| c.set(0));
-    FUSED_KERNELS.with(|c| c.set(0));
-    FUSED_OPS.with(|c| c.set(0));
-    FUSED_ELEMS.with(|c| c.set(0));
-    PROGRAM_CACHE_HITS.with(|c| c.set(0));
-    PROGRAM_CACHE_MISSES.with(|c| c.set(0));
-    FUSION_BAILOUTS.with(|c| c.set(0));
-    SIMD_BLOCKS.with(|c| c.set(0));
-    s
+    let raw = thread_raw();
+    let base = BASELINE.with(Cell::get);
+    let mut rel = [0u64; 9];
+    for i in 0..9 {
+        rel[i] = raw[i] - base[i];
+    }
+    BASELINE.with(|b| b.set(raw));
+    ExecStats::from_raw(rel)
 }
 
 /// One exec-layer kernel dispatch (called by the funnels in `ops::exec`).
 pub(crate) fn record_dispatch() {
-    EXEC_DISPATCHES.with(|c| c.set(c.get() + 1));
+    metrics::add(Id::ExecDispatches, 1);
 }
 
 /// One output buffer drawn for an exec-layer kernel.
 pub(crate) fn record_output_alloc() {
-    OUTPUT_ALLOCS.with(|c| c.set(c.get() + 1));
+    metrics::add(Id::OutputAllocs, 1);
 }
 
 /// One fused-region kernel covering `ops` graph ops and `elems` output
 /// elements (called by the graph evaluator through `ops::exec`).
 pub(crate) fn record_fused(ops: usize, elems: usize) {
-    FUSED_KERNELS.with(|c| c.set(c.get() + 1));
-    FUSED_OPS.with(|c| c.set(c.get() + ops as u64));
-    FUSED_ELEMS.with(|c| c.set(c.get() + elems as u64));
+    metrics::add(Id::FusedKernels, 1);
+    metrics::add(Id::FusedOps, ops as u64);
+    metrics::add(Id::FusedElems, elems as u64);
 }
 
 /// One lazy-graph `eval()` that reused a cached compiled program.
 pub(crate) fn record_program_cache_hit() {
-    PROGRAM_CACHE_HITS.with(|c| c.set(c.get() + 1));
+    metrics::add(Id::ProgramCacheHits, 1);
 }
 
 /// One lazy-graph `eval()` that compiled (and cached) a fresh program.
 pub(crate) fn record_program_cache_miss() {
-    PROGRAM_CACHE_MISSES.with(|c| c.set(c.get() + 1));
+    metrics::add(Id::ProgramCacheMisses, 1);
 }
 
 /// One region degraded to per-op dispatch by a partitioner resource cap.
 pub(crate) fn record_fusion_bailout() {
-    FUSION_BAILOUTS.with(|c| c.set(c.get() + 1));
+    metrics::add(Id::FusionBailouts, 1);
 }
 
 /// Re-record `n` degraded regions at once — used when a cached plan that
@@ -169,14 +202,14 @@ pub(crate) fn record_fusion_bailout() {
 /// per-eval semantics (degraded regions *dispatched*, not merely
 /// compiled) whether the plan came from the cache or a fresh compile.
 pub(crate) fn record_fusion_bailouts(n: u64) {
-    FUSION_BAILOUTS.with(|c| c.set(c.get() + n));
+    metrics::add(Id::FusionBailouts, n);
 }
 
 /// Vector blocks processed by a SIMD-funneled dispatch (`n / LANES` full
 /// 8-lane blocks; the scalar tail is not counted). Recorded on the
 /// dispatching thread, and only when a vector path is active.
 pub(crate) fn record_simd_blocks(blocks: u64) {
-    SIMD_BLOCKS.with(|c| c.set(c.get() + blocks));
+    metrics::add(Id::SimdBlocks, blocks);
 }
 
 /// Render the engine report block: worker-thread count, detected SIMD
@@ -276,5 +309,28 @@ mod tests {
         .unwrap();
         // The other thread's increments must not leak into this thread.
         assert_eq!(snapshot(), before);
+    }
+
+    #[test]
+    fn take_never_rolls_back_the_global_registry() {
+        // The registry's merged counter must keep growing across a
+        // take(): the reset is baseline-only.
+        std::thread::spawn(|| {
+            let global = |s: &crate::runtime::metrics::MetricsSnapshot| {
+                s.counters
+                    .iter()
+                    .find(|(k, _)| k == "minitensor_exec_dispatches_total")
+                    .map(|&(_, v)| v)
+                    .unwrap_or(0)
+            };
+            let g0 = global(&crate::runtime::metrics::snapshot());
+            record_dispatch();
+            let _ = take();
+            record_dispatch();
+            let g1 = global(&crate::runtime::metrics::snapshot());
+            assert!(g1 >= g0 + 2, "take() must not reset merged totals: {g0} -> {g1}");
+        })
+        .join()
+        .unwrap();
     }
 }

@@ -163,14 +163,23 @@ pub fn ring_capacity() -> usize {
     if v != 0 {
         return v;
     }
-    let resolved = std::env::var("MINITENSOR_TRACE_CAPACITY")
-        .ok()
-        .and_then(|s| s.trim().parse::<usize>().ok())
-        .filter(|&n| n > 0)
-        .map(|n| n.max(8))
-        .unwrap_or(DEFAULT_RING_CAPACITY);
+    let raw = std::env::var("MINITENSOR_TRACE_CAPACITY").ok();
+    let resolved = env_ring_capacity(raw.as_deref()).unwrap_or(DEFAULT_RING_CAPACITY);
     let _ = RING_CAP.compare_exchange(0, resolved, Ordering::Relaxed, Ordering::Relaxed);
     RING_CAP.load(Ordering::Relaxed)
+}
+
+/// Parse a raw `MINITENSOR_TRACE_CAPACITY` value: a positive span count
+/// (floored at 8, like [`set_ring_capacity`]). Zero or unparseable warns
+/// once on stderr and returns `None` — it used to be ignored silently.
+fn env_ring_capacity(raw: Option<&str>) -> Option<usize> {
+    super::envvar::parse::<usize>(
+        "MINITENSOR_TRACE_CAPACITY",
+        raw,
+        |&n| n > 0,
+        "a positive span count",
+    )
+    .map(|n| n.max(8))
 }
 
 /// A named synthetic timeline track (rendered as its own "thread" in the
@@ -409,7 +418,15 @@ pub fn chrome_trace_json() -> String {
     let mut evs = events();
     evs.sort_by_key(|e| (e.t0_ns, std::cmp::Reverse(e.dur_ns)));
     let mut s = String::with_capacity(256 + evs.len() * 160);
-    s.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+    // Top-level metadata (`otherData` is the Chrome trace-event escape
+    // hatch for tool-specific keys): a truncated trace says so in-band —
+    // `droppedSpans` > 0 means the rings overwrote that many spans and
+    // the timeline's left edge is incomplete.
+    s.push_str(&format!(
+        "{{\"displayTimeUnit\":\"ms\",\"otherData\":{{\"droppedSpans\":{},\"ringCapacity\":{}}},\"traceEvents\":[\n",
+        dropped(),
+        ring_capacity()
+    ));
     s.push_str(
         "{\"ph\":\"M\",\"pid\":1,\"tid\":0,\"name\":\"process_name\",\
          \"args\":{\"name\":\"minitensor\"}}",
@@ -497,10 +514,13 @@ pub fn summary_top(k: usize) -> String {
     let mut rows: Vec<_> = agg.into_iter().collect();
     rows.sort_by_key(|&(_, (_, total, _))| std::cmp::Reverse(total));
     rows.truncate(k);
+    // Always state the overwrite count (even when zero) so a summary is
+    // self-describing about whether it covers the full window.
     let mut s = format!(
-        "trace:  {} spans across {} tracks (top {} by total time)\n",
+        "trace:  {} spans across {} tracks, {} overwritten (top {} by total time)\n",
         evs.len(),
         track_names().len(),
+        dropped(),
         rows.len()
     );
     for ((cat, name), (count, total, max)) in rows {
@@ -577,5 +597,45 @@ mod tests {
         let mut s = String::new();
         escape_into(&mut s, "a\"b\\c\nd\u{1}");
         assert_eq!(s, "a\\\"b\\\\c\\nd\\u0001");
+    }
+
+    #[test]
+    fn env_ring_capacity_rejects_zero_and_garbage() {
+        // Pure resolution over raw values — no std::env mutation (the
+        // test harness is multi-threaded).
+        assert_eq!(env_ring_capacity(None), None);
+        assert_eq!(env_ring_capacity(Some("4096")), Some(4096));
+        assert_eq!(env_ring_capacity(Some("3")), Some(8), "floored at 8");
+        // Zero would make every ring drop every span; it warns and falls
+        // back instead of being silently filtered like before.
+        assert_eq!(env_ring_capacity(Some("0")), None);
+        assert_eq!(env_ring_capacity(Some("lots")), None);
+        assert_eq!(env_ring_capacity(Some("-1")), None);
+        let err = crate::runtime::envvar::parse_checked::<usize>(
+            "MINITENSOR_TRACE_CAPACITY",
+            Some("0"),
+            |&n| n > 0,
+            "a positive span count",
+        )
+        .unwrap_err();
+        assert!(err.contains("MINITENSOR_TRACE_CAPACITY"), "{err}");
+    }
+
+    #[test]
+    fn chrome_json_carries_dropped_metadata() {
+        let json = chrome_trace_json();
+        assert!(json.contains("\"otherData\":{\"droppedSpans\":"), "{json}");
+        assert!(json.contains("\"ringCapacity\":"), "{json}");
+    }
+
+    #[test]
+    fn summary_always_states_overwrite_count() {
+        // Even with nothing recorded the summary must be self-describing;
+        // with spans, the header carries the overwritten count.
+        let s = summary();
+        assert!(
+            s.contains("no spans recorded") || s.contains("overwritten"),
+            "{s}"
+        );
     }
 }

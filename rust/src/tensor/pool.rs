@@ -8,9 +8,18 @@
 //! its buffer here when the last reference drops, and the bulk ops
 //! request buffers from here instead of the allocator.
 //!
+//! Telemetry: every request and return feeds the process-wide registry
+//! (`minitensor_pool_{hits,misses,returns}_total`,
+//! `minitensor_pool_bytes_pooled`, `minitensor_pool_bytes_highwater`) —
+//! the hit rate is `hits / (hits + misses)`. The pools are per-thread,
+//! so the high-water mark is the largest footprint any single thread's
+//! pool has reached.
+//!
 //! [`Storage`]: super::Storage
 
 use std::cell::RefCell;
+
+use crate::runtime::metrics::{self, Id};
 
 /// Keep at most this many buffers per thread.
 const MAX_POOLED: usize = 16;
@@ -48,7 +57,7 @@ pub fn take(capacity: usize) -> Vec<f32> {
 /// Selection is best-fit (smallest pooled buffer that is large enough),
 /// so a small long-lived tensor does not pin a giant recycled buffer.
 pub fn try_take(capacity: usize) -> Option<Vec<f32>> {
-    POOL.with(|p| {
+    let took = POOL.with(|p| {
         let mut p = p.borrow_mut();
         let best = p
             .buffers
@@ -61,7 +70,15 @@ pub fn try_take(capacity: usize) -> Option<Vec<f32>> {
         p.total_bytes -= v.capacity() * 4;
         v.clear();
         Some(v)
-    })
+    });
+    match &took {
+        Some(v) => {
+            metrics::add(Id::PoolHits, 1);
+            metrics::gauge_add(Id::PoolBytesPooled, -((v.capacity() * 4) as i64));
+        }
+        None => metrics::add(Id::PoolMisses, 1),
+    }
+    took
 }
 
 /// Return a buffer to the pool (no-op for small or overflow buffers).
@@ -70,13 +87,21 @@ pub fn put(v: Vec<f32>) {
     if bytes < MIN_BYTES {
         return;
     }
-    POOL.with(|p| {
+    let pooled_total = POOL.with(|p| {
         let mut p = p.borrow_mut();
         if p.buffers.len() < MAX_POOLED && p.total_bytes + bytes <= MAX_TOTAL_BYTES {
             p.total_bytes += bytes;
             p.buffers.push(v);
+            Some(p.total_bytes)
+        } else {
+            None
         }
     });
+    if let Some(total) = pooled_total {
+        metrics::add(Id::PoolReturns, 1);
+        metrics::gauge_add(Id::PoolBytesPooled, bytes as i64);
+        metrics::gauge_peak(Id::PoolBytesHighwater, total as u64);
+    }
 }
 
 /// Number of buffers currently pooled on this thread (for tests).
@@ -125,5 +150,39 @@ mod tests {
         let v = try_take(5000).expect("a pooled buffer fits");
         assert_eq!(v.as_ptr(), small_ptr, "best-fit should pick the 8K buffer");
         assert!(try_take(1 << 21).is_none(), "nothing big enough pooled");
+    }
+
+    #[test]
+    fn pool_traffic_feeds_the_registry() {
+        // Exercise a hit, a miss, and a return on a fresh thread (its own
+        // shard), then check the merged registry moved by at least that
+        // much — other test threads can only add more.
+        let grab = |s: &metrics::MetricsSnapshot, name: &str| {
+            s.counters
+                .iter()
+                .find(|(k, _)| k == name)
+                .map(|&(_, v)| v)
+                .unwrap_or(0)
+        };
+        let before = metrics::snapshot();
+        std::thread::spawn(|| {
+            let v = take(10_000); // miss (fresh thread pool is empty)
+            put(v); // return
+            let v2 = try_take(10_000).expect("hit");
+            drop(v2);
+        })
+        .join()
+        .unwrap();
+        let after = metrics::snapshot();
+        assert!(grab(&after, "minitensor_pool_misses_total") > grab(&before, "minitensor_pool_misses_total"));
+        assert!(grab(&after, "minitensor_pool_returns_total") > grab(&before, "minitensor_pool_returns_total"));
+        assert!(grab(&after, "minitensor_pool_hits_total") > grab(&before, "minitensor_pool_hits_total"));
+        let hw = after
+            .gauges
+            .iter()
+            .find(|(k, _)| k == "minitensor_pool_bytes_highwater")
+            .map(|&(_, v)| v)
+            .unwrap_or(0.0);
+        assert!(hw >= 40_000.0, "10k-f32 return must register: {hw}");
     }
 }

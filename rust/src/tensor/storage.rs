@@ -8,6 +8,8 @@
 
 use std::sync::Arc;
 
+use crate::runtime::metrics::{self, Id};
+
 /// Shared, immutable-once-shared flat buffer of f32 elements.
 ///
 /// Mutation is only allowed through [`Storage::make_mut`], which performs
@@ -26,14 +28,19 @@ impl Drop for Storage {
     fn drop(&mut self) {
         // Last owner: salvage the allocation for the pool.
         if let Some(data) = Arc::get_mut(&mut self.data) {
+            metrics::gauge_add(Id::PoolBytesLive, -((data.capacity() * 4) as i64));
             super::pool::put(std::mem::take(data));
         }
     }
 }
 
 impl Storage {
-    /// Take ownership of a buffer.
+    /// Take ownership of a buffer. The sole construction path, so the
+    /// live-bytes gauge (`minitensor_pool_bytes_live`) counts every
+    /// allocation exactly once; the matching decrement is in the
+    /// last-owner `Drop` branch.
     pub fn from_vec(data: Vec<f32>) -> Storage {
+        metrics::gauge_add(Id::PoolBytesLive, (data.capacity() * 4) as i64);
         Storage {
             data: Arc::new(data),
         }
@@ -79,7 +86,16 @@ impl Storage {
     /// Mutable access with copy-on-write: if another tensor shares this
     /// buffer the data is cloned first, so in-place ops never alias.
     pub fn make_mut(&mut self) -> &mut [f32] {
-        Arc::make_mut(&mut self.data).as_mut_slice()
+        // COW detection for the live-bytes gauge: `Arc::make_mut` clones
+        // behind our back when shared, which bypasses `from_vec`. A
+        // changed data pointer is the exact, race-free signal (the old
+        // allocation stays live in the other owners and keeps its count).
+        let before = self.data.as_ptr();
+        let data = Arc::make_mut(&mut self.data);
+        if data.as_ptr() != before {
+            metrics::gauge_add(Id::PoolBytesLive, (data.capacity() * 4) as i64);
+        }
+        data.as_mut_slice()
     }
 
     /// Whether two storages share the same allocation (used by tests to

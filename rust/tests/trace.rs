@@ -120,6 +120,25 @@ fn ring_overwrites_oldest_and_counts_drops() {
     assert_eq!(kept, (12..20).collect::<Vec<u64>>());
     assert_eq!(trace::dropped(), 12);
 
+    // The drop count travels into both human and machine outputs: the
+    // Chrome export carries it as otherData metadata, and the summary
+    // states it so truncated traces are never mistaken for complete.
+    let doc = json::parse(&trace::chrome_trace_json()).expect("valid JSON");
+    assert_eq!(
+        doc.get("otherData")
+            .and_then(|o| o.get("droppedSpans"))
+            .and_then(json::Value::as_f64),
+        Some(12.0)
+    );
+    assert_eq!(
+        doc.get("otherData")
+            .and_then(|o| o.get("ringCapacity"))
+            .and_then(json::Value::as_f64),
+        Some(8.0)
+    );
+    let summary = trace::summary();
+    assert!(summary.contains("12 overwritten"), "{summary}");
+
     trace::clear();
     trace::set_ring_capacity(trace::DEFAULT_RING_CAPACITY);
 }
@@ -171,6 +190,11 @@ fn chrome_trace_is_valid_json_spanning_all_subsystems() {
 
     let text = trace::chrome_trace_json();
     let doc = json::parse(&text).expect("export must be valid JSON");
+    // Metadata header: drop count (0 here) and ring capacity always ride
+    // along so consumers can detect truncated traces.
+    let other = doc.get("otherData").expect("otherData metadata");
+    assert!(other.get("droppedSpans").and_then(json::Value::as_f64).is_some());
+    assert!(other.get("ringCapacity").and_then(json::Value::as_f64).unwrap_or(0.0) >= 8.0);
     let events = doc
         .get("traceEvents")
         .and_then(json::Value::as_arr)

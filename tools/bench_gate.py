@@ -1,0 +1,151 @@
+#!/usr/bin/env python3
+"""CI perf-regression gate over the bench trajectory files.
+
+Compares a fresh `--quick` bench run against a committed baseline:
+
+    python3 tools/bench_gate.py --baseline /tmp/BENCH_fusion.baseline.json \
+                                --fresh BENCH_fusion.json
+
+Rows are matched by their sweep identity (experiment axes only — host
+facts like the detected SIMD path or core count are deliberately NOT
+part of the key, so a baseline recorded on an AVX2 box still gates a
+scalar CI runner). Per-unit metrics are compared with a generous
+tolerance: quick-mode windows are short and CI machines are noisy, so
+the gate is a tripwire for 2x-class regressions, not a 5% detector.
+
+Rules:
+  * lower-is-better ns metrics: fresh must be <= TOLERANCE x baseline;
+  * higher-is-better req_per_s: fresh must be >= baseline / TOLERANCE;
+  * serve rows whose worker count exceeds the fresh host's cores are
+    skipped (an oversubscribed sweep point measures the scheduler);
+  * at least one row must match, otherwise the gate itself is broken
+    (schema drift) and fails loudly.
+
+Exit status: 0 = pass, 1 = regression, 2 = usage/schema error.
+"""
+
+import argparse
+import json
+import sys
+
+TOLERANCE = 2.0
+
+# Sweep-identity keys and gated per-unit metrics, by experiment kind.
+# Metrics ending in req_per_s are higher-is-better; the rest are
+# lower-is-better nanosecond costs. Kinds absent here (equivalence
+# checks, footprint rows) are correctness-tested elsewhere and skipped.
+KINDS = {
+    "fusion": {
+        "key": ("chain", "n", "threads"),
+        "metrics": ("eager_ns_per_elem", "fused_ns_per_elem"),
+    },
+    "fusion_cache": {
+        "key": ("n", "threads"),
+        "metrics": ("cold_eval_ns", "cached_eval_ns"),
+    },
+    "softmax_fused": {
+        "key": ("n", "threads"),
+        "metrics": ("eager_ns_per_row", "fused_ns_per_row"),
+    },
+    "simd_onoff": {
+        "key": ("kernel", "n", "threads"),
+        "metrics": ("on_ns", "off_ns"),
+    },
+    "serve_sweep": {
+        "key": ("workers", "max_batch", "clients"),
+        "metrics": ("p50_ms", "p95_ms", "p99_ms", "req_per_s"),
+    },
+}
+
+HIGHER_IS_BETTER = {"req_per_s"}
+
+
+def load_rows(path):
+    try:
+        with open(path) as f:
+            rows = json.load(f)
+    except (OSError, ValueError) as e:
+        sys.exit(f"bench_gate: cannot read {path}: {e}")
+    if not isinstance(rows, list):
+        sys.exit(f"bench_gate: {path}: expected a JSON array of rows")
+    return rows
+
+
+def identity(row):
+    kind = row.get("bench")
+    spec = KINDS.get(kind)
+    if spec is None:
+        return None
+    try:
+        return (kind,) + tuple(row[k] for k in spec["key"])
+    except KeyError as e:
+        sys.exit(f"bench_gate: row {row} missing identity key {e}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True, help="committed trajectory JSON")
+    ap.add_argument("--fresh", required=True, help="just-produced --quick run")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=TOLERANCE,
+        help=f"allowed slowdown factor (default {TOLERANCE})",
+    )
+    args = ap.parse_args()
+
+    base = {}
+    for row in load_rows(args.baseline):
+        ident = identity(row)
+        if ident is not None:
+            base[ident] = row
+
+    matched = 0
+    failures = []
+    for row in load_rows(args.fresh):
+        ident = identity(row)
+        if ident is None or ident not in base:
+            continue
+        kind = ident[0]
+        if kind == "serve_sweep" and row.get("workers", 1) > row.get("cores", 1):
+            # Oversubscribed on this host: latency measures contention,
+            # not the serving stack. The baseline host had enough cores.
+            print(f"skip  {ident}: {row['workers']} workers > {row['cores']} cores")
+            continue
+        ref = base[ident]
+        matched += 1
+        for metric in KINDS[kind]["metrics"]:
+            if metric not in row or metric not in ref:
+                failures.append(f"{ident}: metric '{metric}' missing")
+                continue
+            fresh_v, base_v = float(row[metric]), float(ref[metric])
+            if base_v <= 0:
+                continue  # degenerate baseline sample: nothing to gate
+            if metric in HIGHER_IS_BETTER:
+                ok = fresh_v >= base_v / args.tolerance
+                verdict = f"{fresh_v:.0f} vs baseline {base_v:.0f} (floor {base_v / args.tolerance:.0f})"
+            else:
+                ok = fresh_v <= base_v * args.tolerance
+                verdict = f"{fresh_v:.1f} vs baseline {base_v:.1f} (ceiling {base_v * args.tolerance:.1f})"
+            line = f"{ident} {metric}: {verdict}"
+            if ok:
+                print(f"ok    {line}")
+            else:
+                print(f"FAIL  {line}")
+                failures.append(line)
+
+    if matched == 0:
+        sys.exit(
+            "bench_gate: no rows matched between baseline and fresh run — "
+            "schema drift? Update KINDS in tools/bench_gate.py alongside the bench."
+        )
+    if failures:
+        print(f"\nbench_gate: {len(failures)} regression(s) beyond {args.tolerance}x:")
+        for f in failures:
+            print(f"  {f}")
+        sys.exit(1)
+    print(f"\nbench_gate: {matched} row(s) within {args.tolerance}x of baseline")
+
+
+if __name__ == "__main__":
+    main()
