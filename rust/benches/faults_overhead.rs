@@ -1,0 +1,78 @@
+//! Failpoint overhead A/B — the acceptance gate for in-tree fault
+//! injection.
+//!
+//! An **unarmed** failpoint costs one relaxed atomic load per site
+//! visit (`faults::armed()`), the same discipline as the trace and
+//! metrics switches. This bench pins that cost on the hottest visited
+//! path: the 1e6-element eager elementwise add (whose output allocation
+//! crosses the `pool.alloc` site every dispatch), measured with no site
+//! armed vs with an *irrelevant* site armed at probability 0.0 — the
+//! armed leg forces every visit through the slow-path site lookup
+//! (process mutex + name scan, once per dispatch — not per element), so
+//! the < 2% gate bounds the *worst* state an always-compiled-in
+//! failpoint can be left in; the disarmed fast path costs strictly less.
+//!
+//! Pass `--quick` for the CI smoke mode (shorter windows, noisier — the
+//! printed verdict is informational there).
+
+use minitensor::bench_util::{bench, fmt_ns, Table};
+use minitensor::data::Rng;
+use minitensor::runtime::faults::{self, FaultKind};
+use minitensor::tensor::Tensor;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (ms, reps) = if quick { (10.0, 3) } else { (80.0, 7) };
+
+    let n = 1_000_000;
+    let mut rng = Rng::new(11);
+    let a = Tensor::randn(&[n], 0.0, 1.0, &mut rng);
+    let b = Tensor::randn(&[n], 0.0, 1.0, &mut rng);
+
+    // A probability-0.0 arm on a site the add path never visits: every
+    // pool.alloc visit now takes the armed slow path (mutex + name
+    // scan) and injects nothing.
+    let idle_site = "bench.faults.idle";
+    let run = |label: &str, armed: bool| {
+        if armed {
+            faults::arm(idle_site, FaultKind::Error, 0.0, None);
+        } else {
+            faults::disarm(idle_site);
+        }
+        // Interleave A/B within one process run; warm once after the
+        // flip so the first measured rep sees a settled pool.
+        std::hint::black_box(a.add(&b).unwrap());
+        let s = bench(label, ms, reps, || {
+            std::hint::black_box(a.add(&b).unwrap());
+        });
+        faults::disarm(idle_site);
+        s.median_ns
+    };
+
+    let mut table = Table::new(
+        "failpoint overhead — eager add, 1e6 elems",
+        &["faults", "median/op", "ns/elem"],
+    );
+    // off→on→off→on: neighbour pairs share thermal/cache conditions.
+    let off1 = run("add 1e6 (disarmed)", false);
+    let on1 = run("add 1e6 (idle site armed)", true);
+    let off2 = run("add 1e6 (disarmed)", false);
+    let on2 = run("add 1e6 (idle site armed)", true);
+    let off = off1.min(off2);
+    let on = on1.min(on2);
+    for (name, v) in [("disarmed", off), ("idle-armed", on)] {
+        table.row(&[
+            name.to_string(),
+            fmt_ns(v),
+            format!("{:.4}", v / n as f64),
+        ]);
+    }
+    table.print();
+
+    let overhead = (on - off) / off * 100.0;
+    println!("failpoint overhead (idle-armed vs disarmed): {overhead:+.2}% (gate: < 2%)");
+    if !quick && overhead >= 2.0 {
+        eprintln!("FAIL: failpoint sites cost {overhead:.2}% on the eager hot path");
+        std::process::exit(1);
+    }
+}

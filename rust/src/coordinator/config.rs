@@ -213,8 +213,8 @@ impl TrainConfig {
 /// Constructed through the [`ServeConfig::new`] builder — the fields are
 /// private so every live `ServeConfig` has passed validation (no zero
 /// worker pools, no admission queue smaller than one batch). The old
-/// public-struct-literal shape is gone from the API surface; the closest
-/// equivalent is the `#[deprecated]` [`ServeConfig::from_parts`].
+/// public-struct-literal shape (and its deprecated `from_parts` bridge)
+/// is gone from the API surface.
 ///
 /// ```
 /// use minitensor::coordinator::ServeConfig;
@@ -230,6 +230,9 @@ pub struct ServeConfig {
     workers: usize,
     deadline: Option<Duration>,
     metrics_port: Option<u16>,
+    worker_timeout: Option<Duration>,
+    restart_limit: usize,
+    restart_backoff: Duration,
 }
 
 impl Default for ServeConfig {
@@ -240,7 +243,8 @@ impl Default for ServeConfig {
 
 impl ServeConfig {
     /// Start a builder pre-loaded with the defaults
-    /// (`max_batch=32, max_wait=2ms, queue_depth=1024, workers=1`).
+    /// (`max_batch=32, max_wait=2ms, queue_depth=1024, workers=1,
+    /// restart_limit=5, restart_backoff=10ms, no worker timeout`).
     #[allow(clippy::new_ret_no_self)]
     pub fn new() -> ServeConfigBuilder {
         ServeConfigBuilder {
@@ -250,23 +254,34 @@ impl ServeConfig {
             workers: 1,
             deadline: None,
             metrics_port: None,
+            worker_timeout: None,
+            restart_limit: 5,
+            restart_backoff: Duration::from_millis(10),
         }
     }
 
     /// Read the `[serve]` section of a [`Config`]: `serve.max_batch`,
     /// `serve.max_wait_ms`, `serve.queue_depth`, `serve.workers`,
-    /// `serve.deadline_ms` (0 = no default deadline), and
+    /// `serve.deadline_ms` (0 = no default deadline),
     /// `serve.metrics_port` (Prometheus endpoint; 0 picks an ephemeral
-    /// port, omit the key to not serve metrics).
+    /// port, omit the key to not serve metrics),
+    /// `serve.worker_timeout_ms` (0 = no stuck-worker watchdog),
+    /// `serve.restart_limit`, and `serve.restart_backoff_ms`.
     pub fn from_config(cfg: &Config) -> Result<ServeConfig> {
         let mut b = ServeConfig::new()
             .max_batch(cfg.get_parse_or("serve.max_batch", 32)?)
             .max_wait_ms(cfg.get_parse_or("serve.max_wait_ms", 2)?)
             .queue_depth(cfg.get_parse_or("serve.queue_depth", 1024)?)
-            .workers(cfg.get_parse_or("serve.workers", 1)?);
+            .workers(cfg.get_parse_or("serve.workers", 1)?)
+            .restart_limit(cfg.get_parse_or("serve.restart_limit", 5)?)
+            .restart_backoff_ms(cfg.get_parse_or("serve.restart_backoff_ms", 10)?);
         let deadline_ms: u64 = cfg.get_parse_or("serve.deadline_ms", 0)?;
         if deadline_ms > 0 {
             b = b.deadline_ms(deadline_ms);
+        }
+        let worker_timeout_ms: u64 = cfg.get_parse_or("serve.worker_timeout_ms", 0)?;
+        if worker_timeout_ms > 0 {
+            b = b.worker_timeout_ms(worker_timeout_ms);
         }
         if let Some(port) = cfg.get("serve.metrics_port") {
             let port: u16 = port.parse().map_err(|_| {
@@ -277,21 +292,6 @@ impl ServeConfig {
             b = b.metrics_port(port);
         }
         b.build()
-    }
-
-    /// The pre-builder construction shape, kept for one deprecation
-    /// cycle. Routes through the builder, so it validates identically.
-    #[deprecated(note = "use the ServeConfig::new() builder")]
-    pub fn from_parts(
-        max_batch: usize,
-        max_wait: Duration,
-        queue_depth: usize,
-    ) -> Result<ServeConfig> {
-        ServeConfig::new()
-            .max_batch(max_batch)
-            .max_wait(max_wait)
-            .queue_depth(queue_depth)
-            .build()
     }
 
     /// Maximum examples fused into one forward.
@@ -326,6 +326,26 @@ impl ServeConfig {
     pub fn metrics_port(&self) -> Option<u16> {
         self.metrics_port
     }
+
+    /// Per-batch execution deadline enforced by the stuck-worker
+    /// watchdog: a worker whose forward exceeds it has its in-flight
+    /// requests failed and its replica replaced. `None` = no watchdog.
+    pub fn worker_timeout(&self) -> Option<Duration> {
+        self.worker_timeout
+    }
+
+    /// How many consecutive replica-rebuild failures a crashed worker
+    /// tolerates before giving its slot up for lost (the server degrades,
+    /// and drains once every slot is lost).
+    pub fn restart_limit(&self) -> usize {
+        self.restart_limit
+    }
+
+    /// Base delay of the capped exponential backoff between replica
+    /// rebuild attempts (`base · 2^attempt`, capped at 1 s).
+    pub fn restart_backoff(&self) -> Duration {
+        self.restart_backoff
+    }
 }
 
 /// Builder for [`ServeConfig`]; `build()` validates the combination.
@@ -337,6 +357,9 @@ pub struct ServeConfigBuilder {
     workers: usize,
     deadline: Option<Duration>,
     metrics_port: Option<u16>,
+    worker_timeout: Option<Duration>,
+    restart_limit: usize,
+    restart_backoff: Duration,
 }
 
 impl ServeConfigBuilder {
@@ -392,6 +415,38 @@ impl ServeConfigBuilder {
         self
     }
 
+    /// Arm the stuck-worker watchdog: a batch executing longer than `d`
+    /// (> 0) gets its requests failed with `Error::WorkerCrashed` and its
+    /// replica replaced.
+    pub fn worker_timeout(mut self, d: Duration) -> Self {
+        self.worker_timeout = Some(d);
+        self
+    }
+
+    /// [`Self::worker_timeout`] in milliseconds.
+    pub fn worker_timeout_ms(self, ms: u64) -> Self {
+        self.worker_timeout(Duration::from_millis(ms))
+    }
+
+    /// Consecutive replica-rebuild failures tolerated (≥ 1) before a
+    /// crashed worker's slot is abandoned.
+    pub fn restart_limit(mut self, n: usize) -> Self {
+        self.restart_limit = n;
+        self
+    }
+
+    /// Base delay for the capped exponential rebuild backoff. Zero is
+    /// allowed (retry immediately — what the fast recovery tests use).
+    pub fn restart_backoff(mut self, d: Duration) -> Self {
+        self.restart_backoff = d;
+        self
+    }
+
+    /// [`Self::restart_backoff`] in milliseconds.
+    pub fn restart_backoff_ms(self, ms: u64) -> Self {
+        self.restart_backoff(Duration::from_millis(ms))
+    }
+
     /// Validate and produce the config.
     pub fn build(self) -> Result<ServeConfig> {
         if self.max_batch == 0 {
@@ -414,6 +469,14 @@ impl ServeConfigBuilder {
                 "serve.deadline_ms must be > 0 (omit it for no deadline)".into(),
             ));
         }
+        if self.worker_timeout == Some(Duration::ZERO) {
+            return Err(Error::Config(
+                "serve.worker_timeout_ms must be > 0 (omit it for no watchdog)".into(),
+            ));
+        }
+        if self.restart_limit == 0 {
+            return Err(Error::Config("serve.restart_limit must be ≥ 1".into()));
+        }
         Ok(ServeConfig {
             max_batch: self.max_batch,
             max_wait: self.max_wait,
@@ -421,6 +484,9 @@ impl ServeConfigBuilder {
             workers: self.workers,
             deadline: self.deadline,
             metrics_port: self.metrics_port,
+            worker_timeout: self.worker_timeout,
+            restart_limit: self.restart_limit,
+            restart_backoff: self.restart_backoff,
         })
     }
 }
@@ -536,12 +602,36 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_from_parts_still_validates() {
-        let c = ServeConfig::from_parts(4, Duration::from_millis(1), 16).unwrap();
-        assert_eq!(c.max_batch(), 4);
-        assert_eq!(c.workers(), 1);
-        assert!(ServeConfig::from_parts(0, Duration::ZERO, 16).is_err());
+    fn supervision_knobs_validate_and_roundtrip() {
+        let d = ServeConfig::default();
+        assert_eq!(d.worker_timeout(), None);
+        assert_eq!(d.restart_limit(), 5);
+        assert_eq!(d.restart_backoff(), Duration::from_millis(10));
+
+        let c = ServeConfig::new()
+            .worker_timeout_ms(250)
+            .restart_limit(3)
+            .restart_backoff_ms(0)
+            .build()
+            .unwrap();
+        assert_eq!(c.worker_timeout(), Some(Duration::from_millis(250)));
+        assert_eq!(c.restart_limit(), 3);
+        assert_eq!(c.restart_backoff(), Duration::ZERO);
+
+        assert!(ServeConfig::new().worker_timeout(Duration::ZERO).build().is_err());
+        assert!(ServeConfig::new().restart_limit(0).build().is_err());
+
+        let cfg = Config::parse(
+            "[serve]\nworker_timeout_ms = 40\nrestart_limit = 2\nrestart_backoff_ms = 1\n",
+        )
+        .unwrap();
+        let sc = ServeConfig::from_config(&cfg).unwrap();
+        assert_eq!(sc.worker_timeout(), Some(Duration::from_millis(40)));
+        assert_eq!(sc.restart_limit(), 2);
+        assert_eq!(sc.restart_backoff(), Duration::from_millis(1));
+        // worker_timeout_ms = 0 (the default) means "no watchdog"
+        let sc = ServeConfig::from_config(&Config::default()).unwrap();
+        assert_eq!(sc.worker_timeout(), None);
     }
 
     #[test]

@@ -43,6 +43,13 @@ fn global_name(name: &str, counter: bool) -> String {
 }
 
 /// Thread-safe metrics registry.
+///
+/// Every lock acquisition recovers from poisoning
+/// (`unwrap_or_else(|e| e.into_inner())`): metrics are bookkeeping, and
+/// a panic elsewhere on a thread that happened to hold a metrics mutex —
+/// e.g. a serve worker crash being contained by `catch_unwind` — must
+/// not cascade into killing the server's accounting. The worst case is
+/// one torn counter increment, never a propagated panic.
 #[derive(Default)]
 pub struct Metrics {
     counters: Mutex<HashMap<String, u64>>,
@@ -60,7 +67,7 @@ impl Metrics {
         *self
             .counters
             .lock()
-            .unwrap()
+            .unwrap_or_else(|e| e.into_inner())
             .entry(name.to_string())
             .or_insert(0) += by;
         global::counter_add(&global_name(name, true), by);
@@ -68,14 +75,14 @@ impl Metrics {
 
     /// Read a counter.
     pub fn counter(&self, name: &str) -> u64 {
-        *self.counters.lock().unwrap().get(name).unwrap_or(&0)
+        *self.counters.lock().unwrap_or_else(|e| e.into_inner()).get(name).unwrap_or(&0)
     }
 
     /// Record an observation (latencies in seconds; sizes/depths as-is).
     pub fn observe(&self, name: &str, value: f64) {
         self.series
             .lock()
-            .unwrap()
+            .unwrap_or_else(|e| e.into_inner())
             .entry(name.to_string())
             .or_default()
             .observe(value);
@@ -86,7 +93,7 @@ impl Metrics {
     pub fn merge_histogram(&self, name: &str, h: &Histogram) {
         self.series
             .lock()
-            .unwrap()
+            .unwrap_or_else(|e| e.into_inner())
             .entry(name.to_string())
             .or_default()
             .merge(h);
@@ -95,24 +102,24 @@ impl Metrics {
 
     /// Snapshot of a series' histogram; `None` if never observed.
     pub fn histogram(&self, name: &str) -> Option<Histogram> {
-        self.series.lock().unwrap().get(name).cloned()
+        self.series.lock().unwrap_or_else(|e| e.into_inner()).get(name).cloned()
     }
 
     /// Percentile of a recorded series (q in [0,1]); None if empty.
     pub fn percentile(&self, name: &str, q: f64) -> Option<f64> {
-        self.series.lock().unwrap().get(name)?.percentile(q)
+        self.series.lock().unwrap_or_else(|e| e.into_inner()).get(name)?.percentile(q)
     }
 
     /// Mean of a recorded series.
     pub fn mean(&self, name: &str) -> Option<f64> {
-        self.series.lock().unwrap().get(name)?.mean()
+        self.series.lock().unwrap_or_else(|e| e.into_inner()).get(name)?.mean()
     }
 
     /// Count of observations.
     pub fn observations(&self, name: &str) -> usize {
         self.series
             .lock()
-            .unwrap()
+            .unwrap_or_else(|e| e.into_inner())
             .get(name)
             .map_or(0, |h| h.count() as usize)
     }
@@ -120,14 +127,14 @@ impl Metrics {
     /// Render a compact text report.
     pub fn report(&self) -> String {
         let mut out = String::new();
-        let counters = self.counters.lock().unwrap();
+        let counters = self.counters.lock().unwrap_or_else(|e| e.into_inner());
         let mut names: Vec<&String> = counters.keys().collect();
         names.sort();
         for n in names {
             out.push_str(&format!("{n} = {}\n", counters[n]));
         }
         drop(counters);
-        let series = self.series.lock().unwrap();
+        let series = self.series.lock().unwrap_or_else(|e| e.into_inner());
         let mut names: Vec<&String> = series.keys().collect();
         names.sort();
         for n in names {

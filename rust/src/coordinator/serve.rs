@@ -21,9 +21,42 @@
 //!   a worker on stale work;
 //! - shutdown **drains**: every admitted request still receives its real
 //!   reply before the threads exit.
+//!
+//! # Fault tolerance
+//!
+//! A worker whose forward **panics** does not take the server down: the
+//! panic is contained with `catch_unwind`, every request in the batch
+//! gets a definite [`Error::WorkerCrashed`] reply (safe to retry — the
+//! batch never produced output), and the worker rebuilds its replica in
+//! place through the shared [`ModelFactory`] under a capped exponential
+//! backoff (`ServeConfig::restart_backoff`, doubled per attempt, capped
+//! at 1 s). After `ServeConfig::restart_limit` consecutive rebuild
+//! failures the slot is abandoned and the server **degrades**; when the
+//! last replica is lost the server drains itself: admission closes, and
+//! every queued request is failed with a definite reply instead of
+//! hanging.
+//!
+//! With `ServeConfig::worker_timeout` set, a **watchdog** thread patrols
+//! in-flight batches: a worker stuck in one forward longer than the
+//! timeout is abandoned (its generation is bumped so it discards its
+//! result and exits whenever the forward finally returns), its requests
+//! are failed with [`Error::WorkerCrashed`], and a replacement replica
+//! is built on a fresh thread.
+//!
+//! The invariant all of this buys: **every admitted request gets exactly
+//! one definite reply** — success, `WorkerCrashed`, `DeadlineExceeded`,
+//! or `Overloaded` — no request ever hangs because a replica died.
+//! Recovery is observable: `serve.worker_crashes`, `.worker_restarts`,
+//! `.worker_timeouts`, and `.replies_dropped` counters (mirrored into
+//! the process registry as `minitensor_serve_*_total`), plus the
+//! live/degraded/draining health state served on `/healthz` when the
+//! server owns a metrics endpoint. The `serve.worker.forward` failpoint
+//! ([`runtime::faults`](crate::runtime::faults)) injects the crashes the
+//! chaos tests use to prove all of the above.
 
+use std::any::Any;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -33,7 +66,7 @@ use super::config::ServeConfig;
 use super::metrics::Metrics;
 use crate::error::{Error, Result};
 use crate::runtime::metrics as registry;
-use crate::runtime::{stats, trace};
+use crate::runtime::{faults, stats, trace};
 use crate::tensor::Tensor;
 
 /// A model the server can run: takes a `[b, d]` batch, returns `[b, k]`.
@@ -53,13 +86,16 @@ pub trait BatchModel {
 /// worker's thread and the replica it returns is exclusively owned
 /// there. This is what lets the engine keep its non-`Sync` graph types
 /// (`Var` is `Rc`-based) out of any cross-thread traffic without a
-/// single `unsafe impl`.
+/// single `unsafe impl`. It is also the recovery path: a crashed
+/// worker rebuilds its replica through the same factory, so a factory
+/// must remain able to build replicas for the server's whole lifetime.
 pub trait ModelFactory: Send + Sync + 'static {
     /// Input feature count (needed before any replica exists, for
     /// request validation).
     fn in_features(&self) -> usize;
     /// Construct worker `worker`'s replica. Called once per worker, on
-    /// the worker's own thread.
+    /// the worker's own thread — and again after a crash, during
+    /// supervised restart.
     fn build(&self, worker: usize) -> Result<Box<dyn BatchModel>>;
 }
 
@@ -96,7 +132,9 @@ where
 /// architecture-building closure plus a **canonical parameter snapshot**
 /// taken from one prototype, and loads that snapshot into every replica
 /// — so all workers hold byte-identical weights even if the builder
-/// closure is not deterministic.
+/// closure is not deterministic. The same property makes restarts
+/// byte-faithful: a rebuilt replica is indistinguishable from the one
+/// that crashed.
 pub struct NativeModelFactory {
     build_arch: Box<dyn Fn() -> crate::nn::Sequential + Send + Sync>,
     params: Vec<Tensor>,
@@ -214,6 +252,16 @@ struct Request {
     reply: SyncSender<Result<Vec<f32>>>,
 }
 
+/// Send `result` to the request's client, counting the send as dropped
+/// if the client has already walked away (e.g. an `infer_timeout` that
+/// gave up). Every reply in the server funnels through here or through
+/// [`shed_expired`] so `serve.replies_dropped` is complete.
+fn reply(metrics: &Metrics, r: Request, result: Result<Vec<f32>>) {
+    if r.reply.send(result).is_err() {
+        metrics.incr("serve.replies_dropped", 1);
+    }
+}
+
 /// Aggregate statistics snapshot.
 #[derive(Debug, Clone)]
 pub struct ServeStats {
@@ -243,12 +291,31 @@ pub struct ServeStats {
     pub simd_blocks: u64,
     /// Fused kernels executed by the worker pool.
     pub fused_kernels: u64,
+    /// Worker forwards that panicked and were contained.
+    pub worker_crashes: u64,
+    /// Successful supervised replica rebuilds (crash + watchdog paths).
+    pub worker_restarts: u64,
+    /// Stuck workers abandoned by the watchdog.
+    pub worker_timeouts: u64,
+    /// Replies whose client had already dropped its receiver.
+    pub replies_dropped: u64,
+    /// Worker threads currently serving (replicas built and live).
+    pub workers_alive: usize,
+    /// `"live"`, `"degraded"` (≥1 replica slot lost), or `"draining"`.
+    pub health: String,
 }
 
 /// The dispatcher→worker hand-off: a bounded deque of formed batches.
 /// Workers block on `pop` when it is empty; the dispatcher blocks on
 /// `push` when `cap` batches are already waiting (which backs pressure
 /// up into the admission queue, where submissions fast-reject).
+///
+/// `fail()` is the all-replicas-lost escape hatch: it marks the queue
+/// dead and hands back everything queued so the caller can give each
+/// request a definite reply — `push` stops blocking (returning the
+/// rejected batch) and `pop` returns `None`, so neither the dispatcher
+/// nor any late-built replacement worker can hang on a queue nobody
+/// will ever serve.
 struct WorkQueue {
     state: Mutex<WorkState>,
     cv: Condvar,
@@ -257,6 +324,7 @@ struct WorkQueue {
 struct WorkState {
     batches: VecDeque<Vec<Request>>,
     done: bool,
+    failed: bool,
 }
 
 impl WorkQueue {
@@ -265,23 +333,34 @@ impl WorkQueue {
             state: Mutex::new(WorkState {
                 batches: VecDeque::new(),
                 done: false,
+                failed: false,
             }),
             cv: Condvar::new(),
         }
     }
 
-    fn push(&self, batch: Vec<Request>, cap: usize) {
-        let mut st = self.state.lock().unwrap();
-        while st.batches.len() >= cap && !st.done {
-            st = self.cv.wait(st).unwrap();
+    /// Queue a batch, blocking while `cap` batches are already waiting.
+    /// Returns the batch back if the queue has failed (all replicas
+    /// lost) so the caller can reply to its requests.
+    fn push(&self, batch: Vec<Request>, cap: usize) -> Option<Vec<Request>> {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        while st.batches.len() >= cap && !st.done && !st.failed {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        if st.failed {
+            return Some(batch);
         }
         st.batches.push_back(batch);
         self.cv.notify_all();
+        None
     }
 
     fn pop(&self) -> Option<Vec<Request>> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         loop {
+            if st.failed {
+                return None;
+            }
             if let Some(b) = st.batches.pop_front() {
                 self.cv.notify_all(); // space freed: wake the dispatcher
                 return Some(b);
@@ -289,13 +368,22 @@ impl WorkQueue {
             if st.done {
                 return None;
             }
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
     }
 
     fn finish(&self) {
-        self.state.lock().unwrap().done = true;
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).done = true;
         self.cv.notify_all();
+    }
+
+    /// Mark the queue dead and return every batch still waiting.
+    fn fail(&self) -> Vec<Vec<Request>> {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.failed = true;
+        let orphaned: Vec<Vec<Request>> = st.batches.drain(..).collect();
+        self.cv.notify_all();
+        orphaned
     }
 }
 
@@ -307,25 +395,117 @@ fn shed_expired(pending: &mut Vec<Request>, metrics: &Metrics) {
     pending.retain(|r| match r.deadline {
         Some(d) if d <= now => {
             metrics.incr("serve.shed", 1);
-            let _ = r.reply.send(Err(Error::DeadlineExceeded));
+            if r.reply.send(Err(Error::DeadlineExceeded)).is_err() {
+                metrics.incr("serve.replies_dropped", 1);
+            }
             false
         }
         _ => true,
     });
 }
 
-/// Continuous-batching inference server over a [`ModelFactory`].
-pub struct InferenceServer {
-    /// Admission sender; `None` once [`Self::drain`] has run. Behind a
-    /// mutex so drain can be initiated through `&self` while clients
-    /// are mid-request (the critical section is a non-blocking
-    /// `try_send`, so admission stays effectively concurrent).
+const HEALTH_LIVE: u8 = 0;
+const HEALTH_DEGRADED: u8 = 1;
+const HEALTH_DRAINING: u8 = 2;
+
+/// A batch currently inside a worker's forward, parked where the
+/// watchdog can see (and, past the timeout, confiscate) it.
+struct InFlight {
+    gen: u64,
+    started: Instant,
+    requests: Vec<Request>,
+}
+
+/// Per-worker-slot supervision state. The **generation** is the slot's
+/// ownership token: exactly one thread serves a slot at a time — the
+/// one whose generation matches. The watchdog revokes ownership by
+/// bumping the generation; the stuck thread notices (at its next loop
+/// turn, or when reclaiming its in-flight batch) and bows out.
+struct Slot {
+    generation: AtomicU64,
+    inflight: Mutex<Option<InFlight>>,
+}
+
+/// State shared by the dispatcher, the workers, the watchdog, and the
+/// client-facing handle.
+struct Shared {
+    queue: WorkQueue,
+    metrics: Arc<Metrics>,
+    factory: Arc<dyn ModelFactory>,
+    in_features: usize,
+    restart_limit: usize,
+    restart_backoff: Duration,
+    slots: Vec<Slot>,
+    /// Worker threads currently serving batches.
+    live: AtomicUsize,
+    health: AtomicU8,
+    /// Mirror health transitions into the process-wide registry (only
+    /// when this server owns the `/metrics`+`/healthz` endpoint, so
+    /// side-by-side test servers don't fight over the global state).
+    mirror_health: bool,
+    /// Admission sender; `None` once draining. Behind a mutex so drain
+    /// and the all-replicas-lost path can close admission through
+    /// `&self` while clients are mid-request (the critical section is a
+    /// non-blocking `try_send`, so admission stays effectively
+    /// concurrent).
     tx: Mutex<Option<SyncSender<Request>>>,
+    /// Replacement worker threads spawned by the watchdog.
+    extra_workers: Mutex<Vec<JoinHandle<()>>>,
+    depth: AtomicUsize,
+}
+
+impl Shared {
+    fn health_name(h: u8) -> &'static str {
+        match h {
+            HEALTH_DEGRADED => "degraded",
+            HEALTH_DRAINING => "draining",
+            _ => "live",
+        }
+    }
+
+    fn set_health(&self, h: u8) {
+        self.health.store(h, Ordering::SeqCst);
+        if self.mirror_health {
+            registry::health_set(Self::health_name(h));
+        }
+    }
+
+    /// live → degraded; never un-drains a draining server.
+    fn degrade(&self) {
+        if self
+            .health
+            .compare_exchange(HEALTH_LIVE, HEALTH_DEGRADED, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+            && self.mirror_health
+        {
+            registry::health_set("degraded");
+        }
+    }
+
+    fn close_admission(&self) {
+        self.tx.lock().unwrap_or_else(|e| e.into_inner()).take();
+    }
+}
+
+fn panic_detail(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Continuous-batching inference server over a [`ModelFactory`], with
+/// supervised worker restart (see the module docs' fault-tolerance
+/// section).
+pub struct InferenceServer {
+    shared: Arc<Shared>,
     dispatcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
-    metrics: Arc<Metrics>,
-    depth: Arc<AtomicUsize>,
-    in_features: usize,
+    /// Watchdog stop flag + thread, when `worker_timeout` is set.
+    supervisor: Option<(Arc<StopFlag>, JoinHandle<()>)>,
     n_workers: usize,
     queue_depth: usize,
     default_deadline: Option<Duration>,
@@ -334,19 +514,39 @@ pub struct InferenceServer {
     metrics_http: Option<registry::MetricsServer>,
 }
 
+type StopFlag = (Mutex<bool>, Condvar);
+
 impl InferenceServer {
-    /// Spawn the dispatcher and `cfg.workers()` model-replica workers.
+    /// Spawn the dispatcher and `cfg.workers()` model-replica workers
+    /// (plus the stuck-worker watchdog if `cfg.worker_timeout()` is set).
     ///
     /// Blocks until every worker has constructed its replica; the first
     /// construction error tears the pool down and is returned.
     pub fn start(factory: impl ModelFactory, cfg: ServeConfig) -> Result<InferenceServer> {
-        let factory = Arc::new(factory);
+        let factory: Arc<dyn ModelFactory> = Arc::new(factory);
         let in_features = factory.in_features();
         let n_workers = cfg.workers();
         let (tx, rx): (SyncSender<Request>, Receiver<Request>) = sync_channel(cfg.queue_depth());
-        let metrics = Arc::new(Metrics::new());
-        let depth = Arc::new(AtomicUsize::new(0));
-        let queue = Arc::new(WorkQueue::new());
+        let shared = Arc::new(Shared {
+            queue: WorkQueue::new(),
+            metrics: Arc::new(Metrics::new()),
+            factory,
+            in_features,
+            restart_limit: cfg.restart_limit(),
+            restart_backoff: cfg.restart_backoff(),
+            slots: (0..n_workers)
+                .map(|_| Slot {
+                    generation: AtomicU64::new(0),
+                    inflight: Mutex::new(None),
+                })
+                .collect(),
+            live: AtomicUsize::new(0),
+            health: AtomicU8::new(HEALTH_LIVE),
+            mirror_health: cfg.metrics_port().is_some(),
+            tx: Mutex::new(Some(tx)),
+            extra_workers: Mutex::new(Vec::new()),
+            depth: AtomicUsize::new(0),
+        });
         // Batches the dispatcher may run ahead by: enough to keep every
         // worker busy plus one forming, without unbounded buildup.
         let cap = n_workers * 2;
@@ -354,15 +554,13 @@ impl InferenceServer {
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
         let mut workers = Vec::with_capacity(n_workers);
         for i in 0..n_workers {
-            let factory = factory.clone();
-            let queue = queue.clone();
-            let metrics = metrics.clone();
+            let shared = shared.clone();
             let ready = ready_tx.clone();
             workers.push(std::thread::spawn(move || {
                 // Build the replica on this thread: it never migrates,
                 // and its thread-local program cache stays warm across
                 // every batch this worker executes.
-                let model = match factory.build(i) {
+                let model = match shared.factory.build(i) {
                     Ok(m) => {
                         let _ = ready.send(Ok(()));
                         m
@@ -373,18 +571,16 @@ impl InferenceServer {
                     }
                 };
                 drop(ready);
-                worker_loop(i, model, &queue, &metrics, in_features);
+                run_worker(shared, i, 0, model);
             }));
         }
         drop(ready_tx);
 
         let dispatcher = {
-            let queue = queue.clone();
-            let metrics = metrics.clone();
-            let depth = depth.clone();
+            let shared = shared.clone();
             let (max_batch, max_wait) = (cfg.max_batch(), cfg.max_wait());
             std::thread::spawn(move || {
-                dispatcher_loop(rx, &queue, cap, max_batch, max_wait, &metrics, &depth);
+                dispatcher_loop(rx, &shared, cap, max_batch, max_wait);
             })
         };
 
@@ -406,7 +602,7 @@ impl InferenceServer {
             }
         }
         if let Some(e) = first_err {
-            drop(tx); // dispatcher drains and finishes the work queue
+            shared.close_admission(); // dispatcher drains and finishes the queue
             let _ = dispatcher.join();
             for w in workers {
                 let _ = w.join();
@@ -418,9 +614,12 @@ impl InferenceServer {
         // this server's counters mirror into) over HTTP if configured.
         let metrics_http = match cfg.metrics_port() {
             Some(port) => match registry::serve_http(port) {
-                Ok(s) => Some(s),
+                Ok(s) => {
+                    registry::health_set("live");
+                    Some(s)
+                }
                 Err(e) => {
-                    drop(tx);
+                    shared.close_admission();
                     let _ = dispatcher.join();
                     for w in workers {
                         let _ = w.join();
@@ -433,13 +632,19 @@ impl InferenceServer {
             None => None,
         };
 
+        let supervisor = cfg.worker_timeout().map(|timeout| {
+            let stop: Arc<StopFlag> = Arc::new((Mutex::new(false), Condvar::new()));
+            let sh = shared.clone();
+            let st = stop.clone();
+            let h = std::thread::spawn(move || supervisor_loop(&sh, &st, timeout));
+            (stop, h)
+        });
+
         Ok(InferenceServer {
-            tx: Mutex::new(Some(tx)),
+            shared,
             dispatcher: Some(dispatcher),
             workers,
-            metrics,
-            depth,
-            in_features,
+            supervisor,
             n_workers,
             queue_depth: cfg.queue_depth(),
             default_deadline: cfg.deadline(),
@@ -452,21 +657,40 @@ impl InferenceServer {
     /// Fast-rejects with [`Error::Overloaded`] when the admission queue
     /// is saturated. Applies the config's default deadline, if any.
     pub fn infer(&self, features: Vec<f32>) -> Result<Vec<f32>> {
-        self.submit(features, self.default_deadline)
+        let rx = self.submit(features, self.default_deadline)?;
+        rx.recv().map_err(|_| Error::msg("server dropped the request"))?
     }
 
     /// [`Self::infer`] with an explicit per-request deadline: if no
     /// worker has started the request within `deadline`, it is shed
     /// with [`Error::DeadlineExceeded`] instead of executed late.
     pub fn infer_deadline(&self, features: Vec<f32>, deadline: Duration) -> Result<Vec<f32>> {
-        self.submit(features, Some(deadline))
+        let rx = self.submit(features, Some(deadline))?;
+        rx.recv().map_err(|_| Error::msg("server dropped the request"))?
     }
 
-    fn submit(&self, features: Vec<f32>, deadline: Option<Duration>) -> Result<Vec<f32>> {
-        if features.len() != self.in_features {
+    /// [`Self::infer`] that also bounds the **client's wait**: gives up
+    /// with [`Error::DeadlineExceeded`] after `timeout` even if the
+    /// request is mid-execution. The abandoned reply is counted in
+    /// `serve.replies_dropped` when the worker eventually produces it.
+    pub fn infer_timeout(&self, features: Vec<f32>, timeout: Duration) -> Result<Vec<f32>> {
+        let rx = self.submit(features, Some(timeout))?;
+        match rx.recv_timeout(timeout) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => Err(Error::DeadlineExceeded),
+            Err(RecvTimeoutError::Disconnected) => Err(Error::msg("server dropped the request")),
+        }
+    }
+
+    fn submit(
+        &self,
+        features: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<Receiver<Result<Vec<f32>>>> {
+        if features.len() != self.shared.in_features {
             return Err(Error::ShapeMismatch {
                 op: "serve.infer",
-                expected: format!("{} features", self.in_features),
+                expected: format!("{} features", self.shared.in_features),
                 got: format!("{}", features.len()),
             });
         }
@@ -480,17 +704,17 @@ impl InferenceServer {
         };
         {
             let mut asp = trace::span("serve", "admit");
-            asp.arg_u("queue_depth", self.depth.load(Ordering::Relaxed) as u64);
-            let guard = self.tx.lock().unwrap();
+            asp.arg_u("queue_depth", self.shared.depth.load(Ordering::Relaxed) as u64);
+            let guard = self.shared.tx.lock().unwrap_or_else(|e| e.into_inner());
             let Some(tx) = guard.as_ref() else {
                 return Err(Error::msg("server stopped"));
             };
             match tx.try_send(req) {
                 Ok(()) => {
-                    self.depth.fetch_add(1, Ordering::Relaxed);
+                    self.shared.depth.fetch_add(1, Ordering::Relaxed);
                 }
                 Err(TrySendError::Full(_)) => {
-                    self.metrics.incr("serve.rejected", 1);
+                    self.shared.metrics.incr("serve.rejected", 1);
                     return Err(Error::Overloaded {
                         queue_depth: self.queue_depth,
                     });
@@ -500,42 +724,47 @@ impl InferenceServer {
                 }
             }
         }
-        reply_rx
-            .recv()
-            .map_err(|_| Error::msg("server dropped the request"))?
+        Ok(reply_rx)
     }
 
     /// Statistics snapshot.
     pub fn stats(&self) -> ServeStats {
-        let ms = |q| self.metrics.percentile("serve.latency", q).unwrap_or(0.0) * 1e3;
+        let m = &self.shared.metrics;
+        let ms = |q| m.percentile("serve.latency", q).unwrap_or(0.0) * 1e3;
         ServeStats {
-            requests: self.metrics.counter("serve.requests"),
-            batches: self.metrics.counter("serve.batches"),
-            mean_batch_size: self.metrics.mean("serve.batch_size").unwrap_or(0.0),
+            requests: m.counter("serve.requests"),
+            batches: m.counter("serve.batches"),
+            mean_batch_size: m.mean("serve.batch_size").unwrap_or(0.0),
             p50_latency_ms: ms(0.5),
             p95_latency_ms: ms(0.95),
             p99_latency_ms: ms(0.99),
-            queue_depth: self.depth.load(Ordering::Relaxed),
-            rejected: self.metrics.counter("serve.rejected"),
-            shed: self.metrics.counter("serve.shed"),
+            queue_depth: self.shared.depth.load(Ordering::Relaxed),
+            rejected: m.counter("serve.rejected"),
+            shed: m.counter("serve.shed"),
             worker_batches: (0..self.n_workers)
-                .map(|i| self.metrics.counter(&format!("serve.worker{i}.batches")))
+                .map(|i| m.counter(&format!("serve.worker{i}.batches")))
                 .collect(),
-            mean_queue_ms: self.metrics.mean("serve.queue_time").unwrap_or(0.0) * 1e3,
-            mean_compute_ms: self.metrics.mean("serve.compute_time").unwrap_or(0.0) * 1e3,
-            exec_dispatches: self.metrics.counter("serve.exec_dispatches"),
-            simd_blocks: self.metrics.counter("serve.simd_blocks"),
-            fused_kernels: self.metrics.counter("serve.fused_kernels"),
+            mean_queue_ms: m.mean("serve.queue_time").unwrap_or(0.0) * 1e3,
+            mean_compute_ms: m.mean("serve.compute_time").unwrap_or(0.0) * 1e3,
+            exec_dispatches: m.counter("serve.exec_dispatches"),
+            simd_blocks: m.counter("serve.simd_blocks"),
+            fused_kernels: m.counter("serve.fused_kernels"),
+            worker_crashes: m.counter("serve.worker_crashes"),
+            worker_restarts: m.counter("serve.worker_restarts"),
+            worker_timeouts: m.counter("serve.worker_timeouts"),
+            replies_dropped: m.counter("serve.replies_dropped"),
+            workers_alive: self.shared.live.load(Ordering::SeqCst),
+            health: Shared::health_name(self.shared.health.load(Ordering::SeqCst)).to_string(),
         }
     }
 
     /// The server's metrics registry (counters include
     /// `serve.program_cache_hits`, summed across workers).
     pub fn metrics(&self) -> &Metrics {
-        &self.metrics
+        &self.shared.metrics
     }
 
-    /// Address of the Prometheus `/metrics` endpoint, when
+    /// Address of the Prometheus `/metrics` + `/healthz` endpoint, when
     /// `ServeConfig::metrics_port` was set (port 0 resolves to the
     /// OS-assigned ephemeral port here).
     pub fn metrics_addr(&self) -> Option<std::net::SocketAddr> {
@@ -547,9 +776,11 @@ impl InferenceServer {
     /// receives its real reply (dropping the admission sender
     /// disconnects the dispatcher's receiver only *after* the channel's
     /// buffered requests are delivered — mpsc drains before reporting
-    /// disconnect). The threads are joined by [`Self::shutdown`]/`Drop`.
+    /// disconnect). Health moves to `draining`. The threads are joined
+    /// by [`Self::shutdown`]/`Drop`.
     pub fn drain(&self) {
-        self.tx.lock().unwrap().take();
+        self.shared.close_admission();
+        self.shared.set_health(HEALTH_DRAINING);
     }
 
     /// Graceful shutdown: stop admitting, drain every in-flight request
@@ -563,7 +794,31 @@ impl InferenceServer {
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
         }
-        for w in self.workers.drain(..) {
+        for (i, w) in self.workers.drain(..).enumerate() {
+            // A slot the watchdog abandoned may still hold its original
+            // thread stuck inside a forward. It discards its result and
+            // exits on its own when the forward returns, so join it only
+            // if it has actually finished — never block shutdown on it.
+            if self.shared.slots[i].generation.load(Ordering::SeqCst) == 0 || w.is_finished() {
+                let _ = w.join();
+            }
+        }
+        // The watchdog stops only after the workers are down, so a
+        // worker that gets stuck *during* the drain is still replaced
+        // and its batches still reach definite replies.
+        if let Some((stop, h)) = self.supervisor.take() {
+            *stop.0.lock().unwrap_or_else(|e| e.into_inner()) = true;
+            stop.1.notify_all();
+            let _ = h.join();
+        }
+        let extras: Vec<JoinHandle<()>> = self
+            .shared
+            .extra_workers
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .drain(..)
+            .collect();
+        for w in extras {
             let _ = w.join();
         }
     }
@@ -580,20 +835,19 @@ impl Drop for InferenceServer {
 /// the admission sender is dropped and the channel is drained.
 fn dispatcher_loop(
     rx: Receiver<Request>,
-    queue: &WorkQueue,
+    shared: &Shared,
     cap: usize,
     max_batch: usize,
     max_wait: Duration,
-    metrics: &Metrics,
-    depth: &AtomicUsize,
 ) {
+    let metrics = &shared.metrics;
     let mut pending: Vec<Request> = Vec::with_capacity(max_batch);
     'outer: loop {
         // Block for the first request of the next batch.
         if pending.is_empty() {
             match rx.recv() {
                 Ok(r) => {
-                    depth.fetch_sub(1, Ordering::Relaxed);
+                    shared.depth.fetch_sub(1, Ordering::Relaxed);
                     pending.push(r);
                 }
                 Err(_) => break 'outer, // admission closed and drained
@@ -612,7 +866,7 @@ fn dispatcher_loop(
             }
             match rx.recv_timeout(flush_at - now) {
                 Ok(r) => {
-                    depth.fetch_sub(1, Ordering::Relaxed);
+                    shared.depth.fetch_sub(1, Ordering::Relaxed);
                     pending.push(r);
                 }
                 Err(RecvTimeoutError::Timeout) => break,
@@ -625,7 +879,7 @@ fn dispatcher_loop(
         // Shed requests that expired while queued, then dispatch.
         shed_expired(&mut pending, metrics);
         if !pending.is_empty() {
-            let d = depth.load(Ordering::Relaxed);
+            let d = shared.depth.load(Ordering::Relaxed);
             metrics.observe("serve.queue_depth", d as f64);
             // Live gauge for scrapers (the observe above feeds the
             // distribution; this is the "right now" value).
@@ -638,27 +892,132 @@ fn dispatcher_loop(
                 Instant::now(),
                 &[("size", trace::ArgVal::U(pending.len() as u64))],
             );
-            queue.push(std::mem::take(&mut pending), cap);
+            if let Some(rejected) = shared.queue.push(std::mem::take(&mut pending), cap) {
+                // All replicas are lost: the queue will never be served
+                // again, so these requests get their definite reply here.
+                for r in rejected {
+                    reply(
+                        metrics,
+                        r,
+                        Err(Error::WorkerCrashed {
+                            worker: 0,
+                            detail: "all model replicas lost; server is draining".into(),
+                        }),
+                    );
+                }
+            }
         }
         if disconnected {
             break 'outer;
         }
     }
-    queue.finish();
+    shared.queue.finish();
+}
+
+/// Why a worker thread left its serving loop.
+enum WorkerExit {
+    /// The work queue finished (drain) or failed (all replicas lost).
+    Drained,
+    /// The watchdog bumped the slot generation; a replacement owns it.
+    Superseded,
+    /// `restart_limit` consecutive rebuilds failed; the slot is lost.
+    GaveUp,
+}
+
+/// Worker thread body: maintain the live count around the serving loop
+/// and handle the slot-lost aftermath (degrade; if this was the last
+/// replica, fail everything still queued so no request hangs).
+fn run_worker(shared: Arc<Shared>, slot_id: usize, gen: u64, model: Box<dyn BatchModel>) {
+    shared.live.fetch_add(1, Ordering::SeqCst);
+    let exit = worker_loop(&shared, slot_id, gen, model);
+    let left = shared.live.fetch_sub(1, Ordering::SeqCst) - 1;
+    if let WorkerExit::GaveUp = exit {
+        shared.degrade();
+        if left == 0 {
+            fail_all(&shared, slot_id);
+        }
+    }
+}
+
+/// Terminal failure: every replica slot is lost. Close admission, mark
+/// the server draining, and fail everything still queued with a definite
+/// reply (the dispatcher handles anything still in the admission channel
+/// the same way via the failed queue's `push` rejection).
+fn fail_all(shared: &Shared, slot_id: usize) {
+    shared.close_admission();
+    shared.set_health(HEALTH_DRAINING);
+    for batch in shared.queue.fail() {
+        for r in batch {
+            reply(
+                &shared.metrics,
+                r,
+                Err(Error::WorkerCrashed {
+                    worker: slot_id,
+                    detail: "all model replicas lost; server is draining".into(),
+                }),
+            );
+        }
+    }
+}
+
+/// Rebuild a replica through the shared factory under capped exponential
+/// backoff. Returns `None` after `restart_limit` failed attempts, or as
+/// soon as the slot generation moves on (a replacement owns the slot —
+/// stop competing with it). A successful rebuild counts one
+/// `serve.worker_restarts`.
+fn build_with_backoff(shared: &Shared, slot_id: usize, gen: u64) -> Option<Box<dyn BatchModel>> {
+    let slot = &shared.slots[slot_id];
+    for attempt in 0..shared.restart_limit as u32 {
+        let delay = backoff_delay(shared.restart_backoff, attempt);
+        if !delay.is_zero() {
+            std::thread::sleep(delay);
+        }
+        if slot.generation.load(Ordering::SeqCst) != gen {
+            return None;
+        }
+        let built = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            shared.factory.build(slot_id)
+        }));
+        if let Ok(Ok(m)) = built {
+            shared.metrics.incr("serve.worker_restarts", 1);
+            return Some(m);
+        }
+        // Factory error or panic: try again after a longer pause.
+    }
+    None
+}
+
+/// `base · 2^attempt`, capped at 1 s. A zero base retries immediately.
+fn backoff_delay(base: Duration, attempt: u32) -> Duration {
+    if base.is_zero() {
+        return Duration::ZERO;
+    }
+    std::cmp::min(
+        base.saturating_mul(1u32 << attempt.min(20)),
+        Duration::from_secs(1),
+    )
 }
 
 /// Worker: pull batches as they become available, run the replica's
-/// bulk forward, reply per request. One long-lived thread per replica —
-/// its program cache, tensor pool, and any model-internal scratch stay
-/// warm for the server's lifetime.
+/// bulk forward (panic-contained), reply per request. One long-lived
+/// thread per replica — its program cache, tensor pool, and any
+/// model-internal scratch stay warm for the server's lifetime.
 fn worker_loop(
-    id: usize,
+    shared: &Arc<Shared>,
+    slot_id: usize,
+    my_gen: u64,
     mut model: Box<dyn BatchModel>,
-    queue: &WorkQueue,
-    metrics: &Metrics,
-    in_features: usize,
-) {
-    while let Some(mut batch) = queue.pop() {
+) -> WorkerExit {
+    let metrics = &shared.metrics;
+    let in_features = shared.in_features;
+    let slot = &shared.slots[slot_id];
+    loop {
+        if slot.generation.load(Ordering::SeqCst) != my_gen {
+            return WorkerExit::Superseded;
+        }
+        let Some(mut batch) = shared.queue.pop() else {
+            return WorkerExit::Drained;
+        };
         // A batch may have waited behind slow forwards: shed expiries
         // here too so a stale request never occupies the replica.
         shed_expired(&mut batch, metrics);
@@ -670,17 +1029,38 @@ fn worker_loop(
         for r in &batch {
             flat.extend_from_slice(&r.features);
         }
-        let x = Tensor::from_vec(flat, &[b, in_features])
-            .expect("request feature lengths validated at submit");
+        let x = match Tensor::from_vec(flat, &[b, in_features]) {
+            Ok(x) => x,
+            Err(e) => {
+                // Unreachable while submit validates lengths, but a
+                // definite reply beats a poisoned worker either way.
+                let msg = e.to_string();
+                for r in batch {
+                    reply(metrics, r, Err(Error::msg(msg.clone())));
+                }
+                continue;
+            }
+        };
+        // Park the batch where the watchdog can see it before entering
+        // the forward.
+        {
+            let mut inf = slot.inflight.lock().unwrap_or_else(|e| e.into_inner());
+            *inf = Some(InFlight {
+                gen: my_gen,
+                started: Instant::now(),
+                requests: batch,
+            });
+        }
 
         let exec_start = Instant::now();
         let before = stats::snapshot();
-        let result = {
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let mut xsp = trace::span("serve", "execute");
-            xsp.arg_u("worker", id as u64);
+            xsp.arg_u("worker", slot_id as u64);
             xsp.arg_u("batch", b as u64);
+            faults::fire("serve.worker.forward")?;
             model.forward_batch(&x)
-        };
+        }));
         let exec_end = Instant::now();
         let delta = stats::snapshot().delta(&before);
         // Thread-local engine counters surfaced through the shared
@@ -692,59 +1072,176 @@ fn worker_loop(
         metrics.incr("serve.simd_blocks", delta.simd_blocks);
         metrics.incr("serve.fused_kernels", delta.fused_kernels);
         metrics.incr("serve.batches", 1);
-        metrics.incr(&format!("serve.worker{id}.batches"), 1);
+        metrics.incr(&format!("serve.worker{slot_id}.batches"), 1);
         metrics.incr("serve.requests", b as u64);
         metrics.observe("serve.batch_size", b as f64);
 
-        match result {
-            Ok(out) if out.rank() == 2 && out.dims()[0] == b => {
-                let k = out.dims()[1];
-                let ov = out.to_vec();
-                let compute = exec_end.saturating_duration_since(exec_start);
-                let track = if trace::enabled() {
-                    trace::virtual_track("serve.requests")
-                } else {
-                    0
-                };
-                for (i, r) in batch.drain(..).enumerate() {
-                    metrics.observe("serve.latency", r.enqueued.elapsed().as_secs_f64());
-                    let queued = exec_start.saturating_duration_since(r.enqueued);
-                    metrics.observe("serve.queue_time", queued.as_secs_f64());
-                    metrics.observe("serve.compute_time", compute.as_secs_f64());
-                    let row = ov[i * k..(i + 1) * k].to_vec();
-                    let _ = r.reply.send(Ok(row));
-                    // Full request lifecycle (admit -> queue -> execute
-                    // -> respond) on the synthetic per-request track,
-                    // with the queue/compute breakdown as args.
-                    trace::record_interval(
-                        track,
-                        "serve",
-                        "request",
-                        r.enqueued,
-                        Instant::now(),
-                        &[
-                            ("queue_us", trace::ArgVal::U(queued.as_micros() as u64)),
-                            ("compute_us", trace::ArgVal::U(compute.as_micros() as u64)),
-                            ("worker", trace::ArgVal::U(id as u64)),
-                        ],
+        // Reclaim the batch — unless the watchdog confiscated it (then
+        // this thread no longer owns the slot and the result is void).
+        let mut batch = {
+            let mut inf = slot.inflight.lock().unwrap_or_else(|e| e.into_inner());
+            match inf.take() {
+                Some(f) if f.gen == my_gen => f.requests,
+                other => {
+                    *inf = other; // a replacement's in-flight batch: put it back
+                    Vec::new()
+                }
+            }
+        };
+
+        match outcome {
+            Err(payload) => {
+                // Contained panic: the replica is assumed poisoned. Fail
+                // the batch with a retryable error and rebuild in place.
+                let detail = panic_detail(payload.as_ref());
+                metrics.incr("serve.worker_crashes", 1);
+                for r in batch.drain(..) {
+                    reply(
+                        metrics,
+                        r,
+                        Err(Error::WorkerCrashed {
+                            worker: slot_id,
+                            detail: detail.clone(),
+                        }),
                     );
                 }
+                match build_with_backoff(shared, slot_id, my_gen) {
+                    Some(m) => model = m,
+                    None => {
+                        if slot.generation.load(Ordering::SeqCst) != my_gen {
+                            return WorkerExit::Superseded;
+                        }
+                        return WorkerExit::GaveUp;
+                    }
+                }
             }
-            Ok(out) => {
-                let msg = format!(
-                    "model returned shape {:?} for a {b}-row batch",
-                    out.dims()
+            Ok(result) => {
+                if batch.is_empty() {
+                    // Confiscated by the watchdog mid-forward: requests
+                    // were already failed; the loop head retires this
+                    // superseded thread.
+                    continue;
+                }
+                match result {
+                    Ok(out) if out.rank() == 2 && out.dims()[0] == b => {
+                        let k = out.dims()[1];
+                        let ov = out.to_vec();
+                        let compute = exec_end.saturating_duration_since(exec_start);
+                        let track = if trace::enabled() {
+                            trace::virtual_track("serve.requests")
+                        } else {
+                            0
+                        };
+                        for (i, r) in batch.drain(..).enumerate() {
+                            let enqueued = r.enqueued;
+                            metrics.observe("serve.latency", enqueued.elapsed().as_secs_f64());
+                            let queued = exec_start.saturating_duration_since(enqueued);
+                            metrics.observe("serve.queue_time", queued.as_secs_f64());
+                            metrics.observe("serve.compute_time", compute.as_secs_f64());
+                            let row = ov[i * k..(i + 1) * k].to_vec();
+                            reply(metrics, r, Ok(row));
+                            // Full request lifecycle (admit -> queue ->
+                            // execute -> respond) on the synthetic
+                            // per-request track, with the queue/compute
+                            // breakdown as args.
+                            trace::record_interval(
+                                track,
+                                "serve",
+                                "request",
+                                enqueued,
+                                Instant::now(),
+                                &[
+                                    ("queue_us", trace::ArgVal::U(queued.as_micros() as u64)),
+                                    ("compute_us", trace::ArgVal::U(compute.as_micros() as u64)),
+                                    ("worker", trace::ArgVal::U(slot_id as u64)),
+                                ],
+                            );
+                        }
+                    }
+                    Ok(out) => {
+                        let msg = format!(
+                            "model returned shape {:?} for a {b}-row batch",
+                            out.dims()
+                        );
+                        for r in batch.drain(..) {
+                            reply(metrics, r, Err(Error::msg(msg.clone())));
+                        }
+                    }
+                    Err(e) => {
+                        let msg = e.to_string();
+                        for r in batch.drain(..) {
+                            reply(metrics, r, Err(Error::msg(msg.clone())));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Watchdog: patrol the slots every quarter-timeout; a batch in flight
+/// longer than the timeout means its worker is stuck — confiscate the
+/// batch (definite `WorkerCrashed` replies), revoke the slot by bumping
+/// its generation, and bring up a replacement replica on a fresh thread.
+fn supervisor_loop(shared: &Arc<Shared>, stop: &StopFlag, timeout: Duration) {
+    let tick = std::cmp::max(timeout / 4, Duration::from_millis(1));
+    let (lock, cv) = (&stop.0, &stop.1);
+    let mut stopped = lock.lock().unwrap_or_else(|e| e.into_inner());
+    while !*stopped {
+        let (guard, _) = cv
+            .wait_timeout(stopped, tick)
+            .unwrap_or_else(|e| e.into_inner());
+        stopped = guard;
+        if *stopped {
+            return;
+        }
+        for (slot_id, slot) in shared.slots.iter().enumerate() {
+            let confiscated = {
+                let mut inf = slot.inflight.lock().unwrap_or_else(|e| e.into_inner());
+                match &*inf {
+                    Some(f)
+                        if f.started.elapsed() >= timeout
+                            && slot.generation.load(Ordering::SeqCst) == f.gen =>
+                    {
+                        inf.take()
+                    }
+                    _ => None,
+                }
+            };
+            let Some(f) = confiscated else { continue };
+            // Revoke the slot: the stuck thread discards its result and
+            // exits whenever its forward returns.
+            let new_gen = slot.generation.fetch_add(1, Ordering::SeqCst) + 1;
+            shared.metrics.incr("serve.worker_timeouts", 1);
+            for r in f.requests {
+                reply(
+                    &shared.metrics,
+                    r,
+                    Err(Error::WorkerCrashed {
+                        worker: slot_id,
+                        detail: format!(
+                            "stuck in forward past the {timeout:?} worker timeout; replica abandoned"
+                        ),
+                    }),
                 );
-                for r in batch.drain(..) {
-                    let _ = r.reply.send(Err(Error::msg(msg.clone())));
-                }
             }
-            Err(e) => {
-                let msg = e.to_string();
-                for r in batch.drain(..) {
-                    let _ = r.reply.send(Err(Error::msg(msg.clone())));
+            let sh = shared.clone();
+            let h = std::thread::spawn(move || match build_with_backoff(&sh, slot_id, new_gen) {
+                Some(m) => run_worker(sh.clone(), slot_id, new_gen, m),
+                None => {
+                    if sh.slots[slot_id].generation.load(Ordering::SeqCst) == new_gen {
+                        sh.degrade();
+                        if sh.live.load(Ordering::SeqCst) == 0 {
+                            fail_all(&sh, slot_id);
+                        }
+                    }
                 }
-            }
+            });
+            shared
+                .extra_workers
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .push(h);
         }
     }
 }
@@ -810,6 +1307,11 @@ mod tests {
         );
         assert!(stats.mean_compute_ms > 0.0);
         assert!(stats.mean_queue_ms >= 0.0);
+        // A healthy server reports itself so.
+        assert_eq!(stats.health, "live");
+        assert_eq!(stats.workers_alive, 1);
+        assert_eq!(stats.worker_crashes, 0);
+        assert_eq!(stats.worker_restarts, 0);
     }
 
     #[test]
@@ -869,5 +1371,53 @@ mod tests {
         let cfg = ServeConfig::new().workers(2).build().unwrap();
         let err = InferenceServer::start(Broken, cfg).err().expect("must fail");
         assert!(err.to_string().contains("refuses to build"));
+    }
+
+    #[test]
+    fn infer_timeout_gives_up_and_counts_the_dropped_reply() {
+        struct Slow;
+        impl BatchModel for Slow {
+            fn forward_batch(&mut self, x: &Tensor) -> Result<Tensor> {
+                std::thread::sleep(Duration::from_millis(80));
+                Ok(Tensor::zeros(&[x.dims()[0], 1]))
+            }
+            fn in_features(&self) -> usize {
+                2
+            }
+        }
+        let factory = FactoryFn::new(2, |_| Ok(Box::new(Slow) as Box<dyn BatchModel>));
+        let cfg = ServeConfig::new().max_wait_ms(1).build().unwrap();
+        let server = InferenceServer::start(factory, cfg).unwrap();
+        let err = server
+            .infer_timeout(vec![1.0, 2.0], Duration::from_millis(15))
+            .unwrap_err();
+        assert!(matches!(err, Error::DeadlineExceeded), "{err}");
+        // The worker finishes the batch eventually; its reply lands on a
+        // dropped receiver and must be counted, not panicked on.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while server.stats().replies_dropped == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(server.stats().replies_dropped >= 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn work_queue_fail_drains_and_rejects() {
+        let q = WorkQueue::new();
+        let (tx1, _rx1) = sync_channel(1);
+        let mk = |tx: &SyncSender<Result<Vec<f32>>>| Request {
+            features: vec![0.0],
+            enqueued: Instant::now(),
+            deadline: None,
+            reply: tx.clone(),
+        };
+        assert!(q.push(vec![mk(&tx1)], 4).is_none());
+        let orphaned = q.fail();
+        assert_eq!(orphaned.len(), 1, "queued batch handed back on fail");
+        // After failure: pushes bounce (even at capacity) and pops end.
+        let bounced = q.push(vec![mk(&tx1)], 4);
+        assert!(bounced.is_some(), "failed queue must reject, not buffer");
+        assert!(q.pop().is_none());
     }
 }

@@ -58,9 +58,21 @@ pub enum Error {
     /// was fast-rejected instead of queued (load shedding at the door).
     Overloaded { queue_depth: usize },
 
-    /// A request's deadline expired before a worker executed it; the
-    /// server shed it at dequeue instead of running stale work.
+    /// A request's deadline expired before it completed: either the
+    /// server shed it at dequeue instead of running stale work, or the
+    /// caller's wait timed out.
     DeadlineExceeded,
+
+    /// The serve worker executing this request's batch panicked (or was
+    /// declared stuck by the watchdog). The request was admitted but not
+    /// completed; the replica is rebuilt by the supervisor and the
+    /// request is safe to retry.
+    WorkerCrashed { worker: usize, detail: String },
+
+    /// A fault-injection site fired with the `error` kind
+    /// (`MINITENSOR_FAULTS` / `faults::arm`). Only ever produced while
+    /// fault injection is armed.
+    FaultInjected { site: &'static str },
 
     /// Anything I/O.
     Io(std::io::Error),
@@ -105,7 +117,13 @@ impl fmt::Display for Error {
                 "server overloaded: admission queue full ({queue_depth} requests); retry with backoff"
             ),
             Error::DeadlineExceeded => {
-                write!(f, "request deadline exceeded before execution; shed at dequeue")
+                write!(f, "request deadline exceeded before completion")
+            }
+            Error::WorkerCrashed { worker, detail } => {
+                write!(f, "serve worker {worker} crashed: {detail}; safe to retry")
+            }
+            Error::FaultInjected { site } => {
+                write!(f, "injected fault at site {site} (fault injection is armed)")
             }
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Msg(m) => write!(f, "{m}"),
@@ -169,6 +187,16 @@ mod tests {
         assert!(e.to_string().contains("overloaded"));
         assert!(e.to_string().contains("64"));
         assert!(Error::DeadlineExceeded.to_string().contains("deadline"));
+        let e = Error::WorkerCrashed {
+            worker: 3,
+            detail: "boom".into(),
+        };
+        assert!(e.to_string().contains("worker 3"));
+        assert!(e.to_string().contains("boom"));
+        assert!(e.to_string().contains("retry"));
+        let e = Error::FaultInjected { site: "pool.alloc" };
+        assert!(e.to_string().contains("pool.alloc"));
+        assert!(e.to_string().contains("injected"));
     }
 
     #[test]

@@ -571,6 +571,10 @@ pub(crate) fn eval(root: &NodeRef) -> Result<Tensor> {
         None => {
             esp.arg_s("cache", "miss");
             stats::record_program_cache_miss();
+            // `graph.compile` failpoint: a compile-path failure surfaces
+            // as a structured error (or panic/delay) before any cache
+            // entry exists, so a retry recompiles from scratch.
+            crate::runtime::faults::fire("graph.compile")?;
             // collect_region records each cap degradation as it happens;
             // the delta pins this plan's count for cache-hit re-runs.
             let before = stats::snapshot().fusion_bailouts;

@@ -89,6 +89,29 @@
 //! queue-vs-compute breakdown and the engine kernel counters the worker
 //! pool executed; replies are byte-identical at any worker count.
 //!
+//! ## Robustness
+//!
+//! Replica failure is an expected input: every admitted request gets a
+//! **definite** reply — a result or a structured [`Error`] variant
+//! ([`Error::Overloaded`], [`Error::DeadlineExceeded`],
+//! `Error::WorkerCrashed`), never a hang. A serve worker's forward runs
+//! under `catch_unwind`; a panicking replica answers its batch with
+//! `WorkerCrashed` (carrying the original panic message) and rebuilds
+//! itself in place with exponential backoff, up to
+//! `ServeConfig::restart_limit` attempts — then the server degrades
+//! onto the surviving replicas, failing fast only when the last one is
+//! gone. `ServeConfig::worker_timeout_ms` arms a watchdog that
+//! confiscates and answers the batches of wedged workers and spawns
+//! replacements. Health (`live`/`degraded`/`draining`) is on
+//! `ServeStats` and on `GET /healthz` next to the crash/restart
+//! counters. The failure modes are inducible on demand through
+//! [`runtime::faults`] — named failpoints (`serve.worker.forward`,
+//! `parallel.chunk`, `pool.alloc`, `graph.compile`) armed via
+//! `MINITENSOR_FAULTS=site:kind:prob[:count]` or
+//! [`runtime::faults::arm`], deterministic per-site injection streams,
+//! one relaxed atomic load per disarmed visit (gated by
+//! `benches/faults_overhead.rs`).
+//!
 //! ## Observability
 //!
 //! Three pillars. [`runtime::stats`] keeps per-thread counters on every

@@ -5,6 +5,7 @@
 //! minitensor serve [--config file.cfg] [key=value ...]
 //! minitensor trace <train|serve> [key=value ...]
 //! minitensor metrics [--json]
+//! minitensor chaos [key=value ...]
 //! minitensor info  [--artifacts DIR]
 //! minitensor bench-quick
 //! ```
@@ -27,6 +28,7 @@ fn main() {
         "serve" => cmd_serve(rest),
         "trace" => cmd_trace(rest),
         "metrics" => cmd_metrics(rest),
+        "chaos" => cmd_chaos(rest),
         "info" => cmd_info(rest),
         "bench-quick" => cmd_bench_quick(),
         "help" | "--help" | "-h" => {
@@ -54,6 +56,7 @@ USAGE:
   minitensor serve [--config FILE] [section.key=value ...]
   minitensor trace <train|serve> [section.key=value ...]
   minitensor metrics [--json]
+  minitensor chaos [key=value ...]
   minitensor info  [--artifacts DIR]
   minitensor bench-quick
 
@@ -66,6 +69,7 @@ EXAMPLES:
   minitensor trace train
   MINITENSOR_TRACE=serve.json minitensor trace serve serve.workers=2
   minitensor metrics                              # one-shot Prometheus dump
+  minitensor chaos chaos.prob=0.3 serve.workers=4 # fault-injection smoke
   minitensor info --artifacts artifacts
 
 Any command also honors MINITENSOR_TRACE=<path>: tracing turns on and
@@ -305,6 +309,128 @@ fn cmd_metrics(args: &[String]) -> minitensor::Result<()> {
     } else {
         print!("{}", snap.prometheus_text());
     }
+    Ok(())
+}
+
+/// Chaos smoke run: arm the `serve.worker.forward` panic failpoint,
+/// drive a closed-loop load, and verify the fault-tolerance contract —
+/// every request gets a *definite* reply (Ok or a structured error,
+/// never a hang), crashed replicas are rebuilt, and the server answers
+/// again after the faults are disarmed. Exits nonzero on any violation,
+/// so CI can gate on it directly.
+fn cmd_chaos(args: &[String]) -> minitensor::Result<()> {
+    use minitensor::runtime::faults::{self, FaultKind};
+    let cfg = load_config(args)?;
+    let sc = ServeConfig::from_config(&cfg)?;
+    let n_requests: usize = cfg.get_parse_or("chaos.requests", 200)?;
+    let prob: f64 = cfg.get_parse_or("chaos.prob", 0.2)?;
+    if !(0.0..=1.0).contains(&prob) {
+        return Err(minitensor::Error::Config("chaos.prob must be in [0, 1]".into()));
+    }
+
+    let in_features = 8;
+    let factory = NativeModelFactory::new(in_features, move || {
+        let mut rng = Rng::new(7);
+        minitensor::nn::Sequential::new()
+            .add(minitensor::nn::Dense::new(in_features, 32, &mut rng))
+            .add(minitensor::nn::Activation::Relu)
+            .add(minitensor::nn::Dense::new(32, 4, &mut rng))
+    });
+    println!(
+        "chaos: {n_requests} requests, serve.worker.forward:panic:{prob} \
+         (workers={} max_batch={})",
+        sc.workers(),
+        sc.max_batch()
+    );
+    let server = std::sync::Arc::new(InferenceServer::start(factory, sc)?);
+    faults::arm("serve.worker.forward", FaultKind::Panic, prob, None);
+
+    // Closed loop: every reply must be definite. A hang shows up as the
+    // per-request timeout (counted as a violation), not a wedged CLI.
+    let threads: Vec<_> = (0..4)
+        .map(|t| {
+            let s = server.clone();
+            let per = n_requests / 4;
+            std::thread::spawn(move || {
+                let (mut ok, mut crashed, mut violations) = (0u64, 0u64, 0u64);
+                for i in 0..per {
+                    let feats = vec![(t * per + i) as f32 * 0.01; in_features];
+                    match s.infer_timeout(feats, std::time::Duration::from_secs(30)) {
+                        Ok(_) => ok += 1,
+                        Err(minitensor::Error::WorkerCrashed { .. }) => crashed += 1,
+                        Err(minitensor::Error::Overloaded { .. }) => {}
+                        Err(e) => {
+                            eprintln!("violation: indefinite/unexpected reply: {e}");
+                            violations += 1;
+                        }
+                    }
+                }
+                (ok, crashed, violations)
+            })
+        })
+        .collect();
+    let (mut ok, mut crashed, mut violations) = (0u64, 0u64, 0u64);
+    for t in threads {
+        let (o, c, v) = t.join().expect("client thread");
+        ok += o;
+        crashed += c;
+        violations += v;
+    }
+    faults::disarm("serve.worker.forward");
+
+    // Recovery probe: with faults disarmed the server must answer again
+    // (rebuilds may still be in their backoff window — retry briefly).
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    let mut recovered = false;
+    while std::time::Instant::now() < deadline {
+        if server.infer(vec![0.5; in_features]).is_ok() {
+            recovered = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    while server.stats().worker_restarts < server.stats().worker_crashes
+        && std::time::Instant::now() < deadline
+    {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+
+    let stats = server.stats();
+    println!(
+        "replies: ok={ok} crashed={crashed} violations={violations} \
+         (definite {}/{n_requests})",
+        ok + crashed
+    );
+    println!(
+        "recovery: crashes={} restarts={} timeouts={} replies_dropped={} \
+         workers_alive={} health={}",
+        stats.worker_crashes,
+        stats.worker_restarts,
+        stats.worker_timeouts,
+        stats.replies_dropped,
+        stats.workers_alive,
+        stats.health
+    );
+    for (site, n) in faults::status() {
+        println!("faults: {site} injected {n}");
+    }
+    if violations > 0 {
+        return Err(minitensor::Error::msg(format!(
+            "{violations} request(s) got an indefinite or unexpected reply"
+        )));
+    }
+    if !recovered {
+        return Err(minitensor::Error::msg(
+            "server did not answer after faults were disarmed",
+        ));
+    }
+    if stats.worker_restarts < stats.worker_crashes {
+        return Err(minitensor::Error::msg(format!(
+            "{} crash(es) but only {} restart(s) — replicas were not rebuilt",
+            stats.worker_crashes, stats.worker_restarts
+        )));
+    }
+    println!("chaos: PASS");
     Ok(())
 }
 

@@ -1,7 +1,8 @@
 //! Warn-once parsing for `MINITENSOR_*` environment variables.
 //!
 //! The engine's knobs (`MINITENSOR_NUM_THREADS`, `MINITENSOR_TRACE_CAPACITY`,
-//! `MINITENSOR_PROGRAM_CACHE`, …) resolve lazily on first use; a typo'd
+//! `MINITENSOR_PROGRAM_CACHE`, `MINITENSOR_FAULTS`, …) resolve lazily on
+//! first use; a typo'd
 //! value used to fall back to the default *silently*, which reads exactly
 //! like the override worked. [`parse`] keeps the fall-back behavior but
 //! says so once per variable per process on stderr.

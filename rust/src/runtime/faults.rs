@@ -1,0 +1,485 @@
+//! Failpoint-style fault injection: induce the failures the engine must
+//! contain, in-tree and in CI.
+//!
+//! The serve stack's robustness story (panic isolation, supervised
+//! restart, the stuck-worker watchdog) is only trustworthy if every
+//! failure mode it claims to handle can be *induced* on demand. This
+//! module plants named **sites** on the paths that can fail in
+//! production and lets tests, the `minitensor chaos` command, or an
+//! operator arm them:
+//!
+//! | site                   | where it fires                                  |
+//! |------------------------|-------------------------------------------------|
+//! | `serve.worker.forward` | before each `forward_batch` in a serve worker   |
+//! | `parallel.chunk`       | at the top of each worker-pool chunk body       |
+//! | `pool.alloc`           | in the buffer pool's `try_take` (forced miss)   |
+//! | `graph.compile`        | on the program-cache miss path, before compile  |
+//!
+//! Arming: the `MINITENSOR_FAULTS` environment variable or the
+//! [`arm`]/[`disarm`] API. The env grammar is a comma-separated list of
+//! `site:kind:prob[:count]`, e.g.
+//!
+//! ```text
+//! MINITENSOR_FAULTS=serve.worker.forward:panic:0.2,pool.alloc:error:0.05:100
+//! ```
+//!
+//! Kinds: `panic` (the site panics), `error` (the site returns
+//! [`Error::FaultInjected`], or degrades gracefully where there is no
+//! error channel — e.g. a forced pool miss), and `delay_ms=<ms>` (the
+//! site sleeps; this is what exercises the serve watchdog). `prob` is
+//! the per-visit injection probability in `[0, 1]`; the optional
+//! `count` caps the total number of injections for the site.
+//!
+//! **Disabled cost:** the same discipline as `trace.rs` — one relaxed
+//! atomic load per site visit ([`armed`]), no lock, no branch on site
+//! names. `benches/faults_overhead.rs` is the regression guard. The
+//! armed path takes a process-wide mutex and draws from a deterministic
+//! per-site xorshift64* stream (seeded from the site name, so a given
+//! arm specification injects at the same visit numbers every run — no
+//! `rand` dependency, no flaky CI).
+//!
+//! Every injection increments `minitensor_faults_injected_total` in the
+//! process metrics registry, so a chaos run's blast radius is visible on
+//! `/metrics` and `/healthz` next to the recovery counters it causes.
+
+use std::str::FromStr;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, Once};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::runtime::{envvar, metrics};
+
+const STATE_UNINIT: u8 = 0;
+const STATE_OFF: u8 = 1;
+const STATE_ON: u8 = 2;
+
+/// Fast-path switch: OFF means no site is armed and [`check`] returns
+/// immediately after one relaxed load.
+static ARMED: AtomicU8 = AtomicU8::new(STATE_UNINIT);
+
+/// Armed sites. Locked only on the armed path and by the management API.
+static SITES: Mutex<Vec<Site>> = Mutex::new(Vec::new());
+
+/// What an armed site does when the probability draw fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// The site panics (`catch_unwind` containment is the thing under test).
+    Panic,
+    /// The site fails with [`Error::FaultInjected`]; sites with no error
+    /// channel degrade instead (forced pool miss) or escalate to a panic
+    /// (`parallel.chunk`, where a panic payload *is* the error channel).
+    Error,
+    /// The site sleeps for the given number of milliseconds (exercises
+    /// deadlines and the stuck-worker watchdog).
+    DelayMs(u64),
+}
+
+struct Site {
+    name: String,
+    kind: FaultKind,
+    prob: f64,
+    /// Remaining injections; `None` = unlimited.
+    remaining: Option<u64>,
+    /// Total injections fired at this site since it was armed.
+    injected: u64,
+    /// Deterministic xorshift64* state, seeded from the site name.
+    rng: u64,
+}
+
+/// One parsed `site:kind:prob[:count]` clause.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct Spec {
+    pub site: String,
+    pub kind: FaultKind,
+    pub prob: f64,
+    pub count: Option<u64>,
+}
+
+/// The full `MINITENSOR_FAULTS` value: a comma-separated clause list.
+/// `FromStr` so it routes through `envvar::parse` warn-once validation.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct SpecList(pub Vec<Spec>);
+
+impl FromStr for SpecList {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        let mut specs = Vec::new();
+        for clause in s.split(',') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = clause.split(':').collect();
+            if parts.len() < 3 || parts.len() > 4 {
+                return Err(format!("clause {clause:?}: want site:kind:prob[:count]"));
+            }
+            let site = parts[0].trim();
+            if site.is_empty() {
+                return Err(format!("clause {clause:?}: empty site name"));
+            }
+            let kind = match parts[1].trim() {
+                "panic" => FaultKind::Panic,
+                "error" => FaultKind::Error,
+                k if k.starts_with("delay_ms=") => {
+                    let ms = k["delay_ms=".len()..]
+                        .parse::<u64>()
+                        .map_err(|_| format!("clause {clause:?}: bad delay_ms value"))?;
+                    FaultKind::DelayMs(ms)
+                }
+                k => return Err(format!("clause {clause:?}: unknown kind {k:?}")),
+            };
+            let prob = parts[2]
+                .trim()
+                .parse::<f64>()
+                .ok()
+                .filter(|p| (0.0..=1.0).contains(p))
+                .ok_or_else(|| format!("clause {clause:?}: prob must be in [0, 1]"))?;
+            let count = match parts.get(3) {
+                None => None,
+                Some(c) => Some(
+                    c.trim()
+                        .parse::<u64>()
+                        .ok()
+                        .filter(|&n| n > 0)
+                        .ok_or_else(|| format!("clause {clause:?}: count must be a positive integer"))?,
+                ),
+            };
+            specs.push(Spec {
+                site: site.to_string(),
+                kind,
+                prob,
+                count,
+            });
+        }
+        if specs.is_empty() {
+            return Err("no clauses".to_string());
+        }
+        Ok(SpecList(specs))
+    }
+}
+
+/// Is any site armed? One relaxed atomic load in the steady state —
+/// this is the entire cost an unarmed failpoint adds to a hot path.
+#[inline]
+pub fn armed() -> bool {
+    let s = ARMED.load(Ordering::Relaxed);
+    if s == STATE_UNINIT {
+        return resolve();
+    }
+    s == STATE_ON
+}
+
+/// First-call resolution: parse `MINITENSOR_FAULTS` and settle ON/OFF.
+#[cold]
+fn resolve() -> bool {
+    ensure_env();
+    let on = !sites().is_empty();
+    let target = if on { STATE_ON } else { STATE_OFF };
+    let _ = ARMED.compare_exchange(STATE_UNINIT, target, Ordering::Relaxed, Ordering::Relaxed);
+    ARMED.load(Ordering::Relaxed) == STATE_ON
+}
+
+fn sites() -> std::sync::MutexGuard<'static, Vec<Site>> {
+    SITES.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Parse `MINITENSOR_FAULTS` exactly once per process (warn-once on a
+/// malformed value, like every other `MINITENSOR_*` knob).
+fn ensure_env() {
+    static INIT: Once = Once::new();
+    INIT.call_once(|| {
+        if let Some(list) = envvar::parse_env::<SpecList>(
+            "MINITENSOR_FAULTS",
+            |_| true,
+            "site:kind:prob[:count][,...] with kind panic|error|delay_ms=<ms>",
+        ) {
+            let mut guard = sites();
+            for spec in list.0 {
+                upsert(&mut guard, spec);
+            }
+        }
+    });
+}
+
+fn upsert(guard: &mut Vec<Site>, spec: Spec) {
+    let seed = fnv1a(spec.site.as_bytes()) | 1;
+    match guard.iter_mut().find(|s| s.name == spec.site) {
+        Some(s) => {
+            s.kind = spec.kind;
+            s.prob = spec.prob;
+            s.remaining = spec.count;
+            s.injected = 0;
+            s.rng = seed;
+        }
+        None => guard.push(Site {
+            name: spec.site,
+            kind: spec.kind,
+            prob: spec.prob,
+            remaining: spec.count,
+            injected: 0,
+            rng: seed,
+        }),
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn xorshift_star(state: &mut u64) -> u64 {
+    let mut x = *state;
+    x ^= x >> 12;
+    x ^= x << 25;
+    x ^= x >> 27;
+    *state = x;
+    x.wrapping_mul(0x2545F4914F6CDD1D)
+}
+
+/// Arm `site` with the given kind, per-visit probability (clamped to
+/// `[0, 1]`), and optional total-injection cap. Re-arming an already
+/// armed site replaces its spec and resets its injection counter and
+/// RNG stream, so `prob: 1.0, count: Some(k)` means "exactly the next
+/// `k` visits inject" — the deterministic shape tests want.
+pub fn arm(site: impl Into<String>, kind: FaultKind, prob: f64, count: Option<u64>) {
+    ensure_env();
+    let spec = Spec {
+        site: site.into(),
+        kind,
+        prob: prob.clamp(0.0, 1.0),
+        count,
+    };
+    upsert(&mut sites(), spec);
+    ARMED.store(STATE_ON, Ordering::Relaxed);
+}
+
+/// Disarm one site. Returns whether it was armed. When the last site is
+/// disarmed the fast path drops back to the single-load OFF state.
+pub fn disarm(site: &str) -> bool {
+    ensure_env();
+    let mut guard = sites();
+    let before = guard.len();
+    guard.retain(|s| s.name != site);
+    let removed = guard.len() != before;
+    if guard.is_empty() {
+        ARMED.store(STATE_OFF, Ordering::Relaxed);
+    }
+    drop(guard);
+    removed
+}
+
+/// Disarm every site (including any armed from the environment).
+pub fn disarm_all() {
+    ensure_env();
+    sites().clear();
+    ARMED.store(STATE_OFF, Ordering::Relaxed);
+}
+
+/// Total injections fired at `site` since it was (re-)armed.
+pub fn injected(site: &str) -> u64 {
+    if ARMED.load(Ordering::Relaxed) == STATE_UNINIT {
+        ensure_env();
+    }
+    sites()
+        .iter()
+        .find(|s| s.name == site)
+        .map(|s| s.injected)
+        .unwrap_or(0)
+}
+
+/// `(site, injections)` for every armed site — the chaos report.
+pub fn status() -> Vec<(String, u64)> {
+    if ARMED.load(Ordering::Relaxed) == STATE_UNINIT {
+        ensure_env();
+    }
+    sites().iter().map(|s| (s.name.clone(), s.injected)).collect()
+}
+
+/// Visit a site: `None` = proceed normally (always, when unarmed);
+/// `Some(kind)` = the caller must now inject that fault. Most sites use
+/// [`fire`]/[`fire_infallible`] instead; [`check`] is for sites that
+/// map `Error` onto a domain-specific degradation (the pool's forced
+/// miss).
+#[inline]
+pub fn check(site: &str) -> Option<FaultKind> {
+    if !armed() {
+        return None;
+    }
+    check_armed(site)
+}
+
+#[cold]
+fn check_armed(site: &str) -> Option<FaultKind> {
+    let kind = {
+        let mut guard = sites();
+        let s = guard.iter_mut().find(|s| s.name == site)?;
+        if s.remaining == Some(0) {
+            return None;
+        }
+        // 53-bit uniform draw in [0, 1); prob 1.0 therefore always fires.
+        let draw = (xorshift_star(&mut s.rng) >> 11) as f64 / (1u64 << 53) as f64;
+        if draw >= s.prob {
+            return None;
+        }
+        if let Some(n) = &mut s.remaining {
+            *n -= 1;
+        }
+        s.injected += 1;
+        s.kind
+    };
+    metrics::counter_add("minitensor_faults_injected_total", 1);
+    Some(kind)
+}
+
+/// Visit a site on a fallible path: injects `panic` by panicking,
+/// `error` as `Err(Error::FaultInjected)`, `delay_ms` by sleeping.
+pub fn fire(site: &'static str) -> Result<()> {
+    match check(site) {
+        None => Ok(()),
+        Some(FaultKind::DelayMs(ms)) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            Ok(())
+        }
+        Some(FaultKind::Error) => Err(Error::FaultInjected { site }),
+        Some(FaultKind::Panic) => panic!("minitensor: injected fault at {site}"),
+    }
+}
+
+/// Visit a site on an infallible path (no `Result` channel): `error`
+/// escalates to a panic — on `parallel.chunk` the structured panic
+/// payload *is* how failures reach the submitting thread.
+pub fn fire_infallible(site: &str) {
+    match check(site) {
+        None => {}
+        Some(FaultKind::DelayMs(ms)) => std::thread::sleep(Duration::from_millis(ms)),
+        Some(_) => panic!("minitensor: injected fault at {site}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_accepts_the_documented_forms() {
+        let l: SpecList = "serve.worker.forward:panic:0.2".parse().unwrap();
+        assert_eq!(l.0.len(), 1);
+        assert_eq!(l.0[0].kind, FaultKind::Panic);
+        assert_eq!(l.0[0].prob, 0.2);
+        assert_eq!(l.0[0].count, None);
+
+        let l: SpecList = "pool.alloc:error:1.0:5, parallel.chunk:delay_ms=3:0.5"
+            .parse()
+            .unwrap();
+        assert_eq!(l.0.len(), 2);
+        assert_eq!(l.0[0].count, Some(5));
+        assert_eq!(l.0[1].kind, FaultKind::DelayMs(3));
+    }
+
+    #[test]
+    fn grammar_rejects_malformed_clauses() {
+        for bad in [
+            "",
+            "siteonly",
+            "site:panic",
+            "site:panic:2.0",
+            "site:panic:-0.1",
+            "site:explode:0.5",
+            "site:delay_ms=abc:0.5",
+            "site:panic:0.5:0",
+            "site:panic:0.5:1:extra",
+            ":panic:0.5",
+        ] {
+            assert!(bad.parse::<SpecList>().is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn count_caps_injections_exactly() {
+        let site = "test.faults.count_cap";
+        arm(site, FaultKind::Error, 1.0, Some(2));
+        assert_eq!(check(site), Some(FaultKind::Error));
+        assert_eq!(check(site), Some(FaultKind::Error));
+        assert_eq!(check(site), None);
+        assert_eq!(injected(site), 2);
+        assert!(disarm(site));
+    }
+
+    #[test]
+    fn prob_zero_never_fires_and_prob_draws_are_deterministic() {
+        let site = "test.faults.prob";
+        arm(site, FaultKind::Error, 0.0, None);
+        for _ in 0..100 {
+            assert_eq!(check(site), None);
+        }
+        assert_eq!(injected(site), 0);
+
+        // Same site name → same seed → the same visit numbers inject.
+        let run = |n: usize| -> Vec<bool> {
+            arm(site, FaultKind::Error, 0.3, None);
+            (0..n).map(|_| check(site).is_some()).collect()
+        };
+        let a = run(64);
+        let b = run(64);
+        assert_eq!(a, b);
+        assert!(a.iter().any(|&x| x), "prob 0.3 over 64 draws should fire");
+        assert!(!a.iter().all(|&x| x), "prob 0.3 should not always fire");
+        assert!(disarm(site));
+    }
+
+    #[test]
+    fn fire_maps_kinds_onto_the_result_channel() {
+        let site = "test.faults.fire";
+        arm(site, FaultKind::Error, 1.0, Some(1));
+        let err = fire(site).unwrap_err();
+        assert!(matches!(err, Error::FaultInjected { site: s } if s == site));
+        assert!(fire(site).is_ok(), "count exhausted");
+
+        arm(site, FaultKind::Panic, 1.0, Some(1));
+        let p = std::panic::catch_unwind(|| fire(site));
+        let msg = p.expect_err("must panic");
+        let msg = msg
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("injected fault"), "{msg}");
+        assert!(msg.contains(site), "{msg}");
+
+        arm(site, FaultKind::DelayMs(1), 1.0, Some(1));
+        let t0 = std::time::Instant::now();
+        fire(site).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(1));
+        assert!(disarm(site));
+    }
+
+    #[test]
+    fn injections_mirror_into_the_metrics_registry() {
+        let grab = || {
+            metrics::snapshot()
+                .counters
+                .iter()
+                .find(|(k, _)| k == "minitensor_faults_injected_total")
+                .map(|&(_, v)| v)
+                .unwrap_or(0)
+        };
+        let before = grab();
+        let site = "test.faults.registry";
+        arm(site, FaultKind::Error, 1.0, Some(3));
+        for _ in 0..5 {
+            let _ = check(site);
+        }
+        assert!(grab() >= before + 3);
+        assert!(disarm(site));
+    }
+
+    #[test]
+    fn disarm_unknown_site_is_false() {
+        assert!(!disarm("test.faults.never_armed"));
+    }
+}

@@ -15,6 +15,7 @@
 //! | pool | `minitensor_pool_hits_total`, `_misses_total`, `_returns_total`, `_bytes_pooled`, `_bytes_live`, `_bytes_highwater` |
 //! | parallel | `minitensor_parallel_chunks_total`, `_tasks_total`, `_pool_workers` |
 //! | serve | every `coordinator::Metrics` counter/series, mirrored as `minitensor_serve_*` (latency/queue series export as summaries) |
+//! | robustness | `minitensor_faults_injected_total` (the `faults` failpoint layer), `minitensor_serve_worker_crashes_total`, `_worker_restarts_total`, `_worker_timeouts_total`, `_replies_dropped_total` |
 //!
 //! **Hot-path cost.** The engine-side counters above are *sharded*: each
 //! thread owns a fixed slot array it alone writes (registered once, like
@@ -39,10 +40,12 @@
 //! **Export.** [`snapshot`] → [`MetricsSnapshot`] (typed, plus
 //! [`MetricsSnapshot::to_json`]), [`prometheus_text`] → text exposition
 //! format 0.0.4, and [`serve_http`] → a tiny blocking
-//! `std::net::TcpListener` responder serving `GET /metrics` (Prometheus)
-//! and `GET /metrics.json`. The serve stack starts one when
-//! `ServeConfig::metrics_port` is set; `minitensor metrics` does a
-//! one-shot dump.
+//! `std::net::TcpListener` responder serving `GET /metrics` (Prometheus),
+//! `GET /metrics.json`, and `GET /healthz` (process health:
+//! `live`/`degraded` → 200, `draining` → 503, JSON body with the
+//! restart/fault counters — see [`health_set`]/[`healthz_json`]). The
+//! serve stack starts one when `ServeConfig::metrics_port` is set;
+//! `minitensor metrics` does a one-shot dump.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -609,8 +612,42 @@ pub fn snapshot() -> MetricsSnapshot {
     }
 }
 
+/// HELP strings for well-known *named* (mutex-map) metrics that don't
+/// live in the sharded [`DEFS`] table — the robustness counters the
+/// serve supervisor and the `faults` layer write.
+const NAMED_HELP: &[(&str, &str)] = &[
+    (
+        "minitensor_faults_injected_total",
+        "Faults injected by the runtime::faults failpoint layer",
+    ),
+    (
+        "minitensor_serve_worker_crashes_total",
+        "Serve worker panics contained by catch_unwind",
+    ),
+    (
+        "minitensor_serve_worker_restarts_total",
+        "Serve model replicas rebuilt by the supervisor after a crash or timeout",
+    ),
+    (
+        "minitensor_serve_worker_timeouts_total",
+        "Serve batches failed by the stuck-worker watchdog",
+    ),
+    (
+        "minitensor_serve_replies_dropped_total",
+        "Serve replies dropped because the client gave up and hung up",
+    ),
+];
+
 fn help_for(name: &str) -> Option<&'static str> {
-    DEFS.iter().find(|d| d.name == name).map(|d| d.help)
+    DEFS.iter()
+        .find(|d| d.name == name)
+        .map(|d| d.help)
+        .or_else(|| {
+            NAMED_HELP
+                .iter()
+                .find(|(n, _)| *n == name)
+                .map(|&(_, h)| h)
+        })
 }
 
 fn fmt_f64(v: f64) -> String {
@@ -723,6 +760,64 @@ pub fn prometheus_text() -> String {
 }
 
 // ---------------------------------------------------------------------------
+// Process health (readiness for /healthz).
+// ---------------------------------------------------------------------------
+
+const HEALTH_LIVE: u8 = 0;
+const HEALTH_DEGRADED: u8 = 1;
+const HEALTH_DRAINING: u8 = 2;
+
+/// Process-wide health state, reported by `/healthz`. Defaults to
+/// `live`; the serve supervisor mirrors its state here.
+static HEALTH: AtomicU8 = AtomicU8::new(HEALTH_LIVE);
+
+/// Set the process health state (`"live"`, `"degraded"`, or
+/// `"draining"`); unknown strings are ignored. Written by the serve
+/// supervisor on every transition, readable by any `/healthz` scrape.
+pub fn health_set(state: &str) {
+    let v = match state {
+        "live" => HEALTH_LIVE,
+        "degraded" => HEALTH_DEGRADED,
+        "draining" => HEALTH_DRAINING,
+        _ => return,
+    };
+    HEALTH.store(v, Ordering::Relaxed);
+}
+
+/// The current process health state string.
+pub fn health() -> &'static str {
+    match HEALTH.load(Ordering::Relaxed) {
+        HEALTH_DEGRADED => "degraded",
+        HEALTH_DRAINING => "draining",
+        _ => "live",
+    }
+}
+
+/// The `/healthz` JSON body: the health state plus the robustness
+/// counters an operator correlates with it (worker crashes/restarts/
+/// timeouts, dropped replies, injected faults).
+pub fn healthz_json() -> String {
+    let snap = snapshot();
+    let counter = |name: &str| {
+        snap.counters
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|&(_, v)| v)
+            .unwrap_or(0)
+    };
+    format!(
+        "{{\"status\":\"{}\",\"worker_crashes\":{},\"worker_restarts\":{},\
+         \"worker_timeouts\":{},\"replies_dropped\":{},\"faults_injected\":{}}}",
+        health(),
+        counter("minitensor_serve_worker_crashes_total"),
+        counter("minitensor_serve_worker_restarts_total"),
+        counter("minitensor_serve_worker_timeouts_total"),
+        counter("minitensor_serve_replies_dropped_total"),
+        counter("minitensor_faults_injected_total"),
+    )
+}
+
+// ---------------------------------------------------------------------------
 // HTTP exposition (hand-rolled, std-only).
 // ---------------------------------------------------------------------------
 
@@ -755,9 +850,10 @@ impl Drop for MetricsServer {
 /// Start a metrics HTTP responder on `127.0.0.1:port` (`0` picks an
 /// ephemeral port — read it back from [`MetricsServer::addr`]). Routes:
 /// `GET /metrics` (and `/`) → Prometheus text, `GET /metrics.json` →
-/// JSON snapshot; anything else → 404. One blocking accept loop handles
-/// scrapes serially — scrape traffic is a request every few seconds, not
-/// a data path.
+/// JSON snapshot, `GET /healthz` → health JSON (503 while draining);
+/// anything else → 404. One blocking accept loop handles scrapes
+/// serially — scrape traffic is a request every few seconds, not a data
+/// path.
 pub fn serve_http(port: u16) -> std::io::Result<MetricsServer> {
     let listener = TcpListener::bind(("127.0.0.1", port))?;
     let addr = listener.local_addr()?;
@@ -815,6 +911,17 @@ fn handle_conn(stream: &mut TcpStream) -> std::io::Result<()> {
                 prometheus_text(),
             ),
             "/metrics.json" => ("200 OK", "application/json", snapshot().to_json()),
+            "/healthz" => {
+                // Liveness + readiness in one: live and degraded states
+                // still serve (200); draining means stop routing traffic
+                // here (503).
+                let status = if health() == "draining" {
+                    "503 Service Unavailable"
+                } else {
+                    "200 OK"
+                };
+                (status, "application/json", healthz_json())
+            }
             _ => ("404 Not Found", "text/plain", "not found\n".to_string()),
         }
     };
@@ -1133,5 +1240,37 @@ mod tests {
         let missing = http_get(addr, "/nope");
         assert!(missing.starts_with("HTTP/1.1 404"));
         drop(server); // must join cleanly without hanging the test
+    }
+
+    #[test]
+    fn healthz_reports_state_and_counters() {
+        // The only test in this binary that writes the global health
+        // state (the serve unit tests keep theirs server-local), so the
+        // transitions below cannot race another assertion.
+        let server = serve_http(0).expect("bind ephemeral port");
+        let addr = server.addr();
+
+        health_set("live");
+        let resp = http_get(addr, "/healthz");
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("\"status\":\"live\""), "{resp}");
+        assert!(resp.contains("\"worker_restarts\":"), "{resp}");
+        assert!(resp.contains("\"faults_injected\":"), "{resp}");
+
+        health_set("degraded");
+        let resp = http_get(addr, "/healthz");
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "degraded still serves: {resp}");
+        assert!(resp.contains("\"status\":\"degraded\""), "{resp}");
+
+        health_set("draining");
+        let resp = http_get(addr, "/healthz");
+        assert!(resp.starts_with("HTTP/1.1 503"), "{resp}");
+        assert!(resp.contains("\"status\":\"draining\""), "{resp}");
+
+        health_set("not-a-state"); // ignored
+        assert_eq!(health(), "draining");
+        health_set("live");
+        assert_eq!(health(), "live");
+        drop(server);
     }
 }

@@ -1,6 +1,7 @@
 //! Runtime services: the parallel execution pool that powers the native
 //! kernels, the observability pillars ([`stats`], [`trace`], and the
-//! process-wide [`metrics`] registry), and (behind the `xla` feature)
+//! process-wide [`metrics`] registry), the [`faults`] fault-injection
+//! layer that chaos-tests them, and (behind the `xla` feature)
 //! the PJRT engine that loads AOT-compiled HLO artifacts produced by
 //! `python/compile/aot.py`.
 //!
@@ -15,6 +16,7 @@ mod artifact;
 #[cfg(feature = "xla")]
 mod engine;
 pub(crate) mod envvar;
+pub mod faults;
 pub mod metrics;
 pub mod parallel;
 pub mod simd;

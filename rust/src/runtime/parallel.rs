@@ -21,9 +21,20 @@
 //! avoids deadlock, keeps the outer-loop parallelism as the one that
 //! owns the cores, and never leaves the caller stalled behind queued
 //! outer tasks.
+//!
+//! Panic containment: a panicking chunk never poisons the pool. Every
+//! chunk body runs under `catch_unwind`; the submitting thread always
+//! waits for *all* sibling chunks (the latch counts down on panic too,
+//! so the Condvar protocol cannot deadlock), then re-raises the first
+//! captured panic **payload** via `resume_unwind` — callers see the
+//! original panic message, not a generic wrapper — and the pool remains
+//! reusable for the next dispatch. The `parallel.chunk` failpoint
+//! (`runtime::faults`) injects panics/delays at the top of each chunk to
+//! pin exactly this contract in `tests/fault_injection.rs`.
 
+use std::any::Any;
 use std::cell::Cell;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
@@ -171,10 +182,15 @@ pub fn set_par_grain(n: usize) {
 
 /// Countdown latch: `parallel_for` blocks on it until every shipped chunk
 /// has finished, which is what makes the borrowed-closure hand-off sound.
+///
+/// A panicking chunk stores its payload here (first writer wins) and
+/// still counts down, so the submitting thread can re-raise the original
+/// panic after every sibling has finished — structured propagation with
+/// no Condvar deadlock and no poisoned pool.
 struct Latch {
     remaining: Mutex<usize>,
     done: Condvar,
-    panicked: AtomicBool,
+    payload: Mutex<Option<Box<dyn Any + Send>>>,
 }
 
 impl Latch {
@@ -182,7 +198,14 @@ impl Latch {
         Latch {
             remaining: Mutex::new(n),
             done: Condvar::new(),
-            panicked: AtomicBool::new(false),
+            payload: Mutex::new(None),
+        }
+    }
+
+    fn record_panic(&self, payload: Box<dyn Any + Send>) {
+        let mut slot = self.payload.lock().unwrap_or_else(|e| e.into_inner());
+        if slot.is_none() {
+            *slot = Some(payload);
         }
     }
 
@@ -202,6 +225,11 @@ impl Latch {
                 .wait(r)
                 .unwrap_or_else(|e| e.into_inner());
         }
+    }
+
+    /// The first worker panic payload, if any chunk panicked.
+    fn take_panic(&self) -> Option<Box<dyn Any + Send>> {
+        self.payload.lock().unwrap_or_else(|e| e.into_inner()).take()
     }
 }
 
@@ -281,6 +309,7 @@ pub fn parallel_for(len: usize, grain: usize, body: &(dyn Fn(usize, usize) + Syn
     let grain = grain.max(1);
     let chunks = num_threads().min(len.div_ceil(grain));
     if chunks <= 1 || IN_WORKER.with(|w| w.get()) {
+        super::faults::fire_infallible("parallel.chunk");
         body(0, len);
         return;
     }
@@ -308,18 +337,18 @@ pub fn parallel_for(len: usize, grain: usize, body: &(dyn Fn(usize, usize) + Syn
         start = e;
         let latch = Arc::clone(&latch);
         pool.submit(Box::new(move || {
-            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 // Per-chunk span on the worker's own timeline track, so
                 // idle gaps between chunks (imbalance, queueing) are
                 // visible in the trace viewer.
                 let mut sp = super::trace::span("parallel", "chunk");
                 sp.arg_u("start", s as u64);
                 sp.arg_u("len", (e - s) as u64);
+                super::faults::fire_infallible("parallel.chunk");
                 body_static(s, e);
-            }))
-            .is_ok();
-            if !ok {
-                latch.panicked.store(true, Ordering::Relaxed);
+            }));
+            if let Err(payload) = result {
+                latch.record_panic(payload);
             }
             latch.count_down();
         }));
@@ -338,15 +367,19 @@ pub fn parallel_for(len: usize, grain: usize, body: &(dyn Fn(usize, usize) + Syn
         sp.arg_u("start", 0);
         sp.arg_u("len", first_end as u64);
         sp.arg_u("inline", 1);
+        super::faults::fire_infallible("parallel.chunk");
         body(0, first_end)
     }));
     IN_WORKER.with(|w| w.set(false));
     latch.wait();
+    // Inline-chunk panic wins (it is the submitting thread's own frame);
+    // otherwise re-raise the first worker payload so callers see the
+    // original panic message rather than a generic wrapper.
     if let Err(payload) = main_result {
         std::panic::resume_unwind(payload);
     }
-    if latch.panicked.load(Ordering::Relaxed) {
-        panic!("minitensor: parallel_for worker chunk panicked");
+    if let Some(payload) = latch.take_panic() {
+        std::panic::resume_unwind(payload);
     }
 }
 
@@ -367,6 +400,7 @@ pub fn parallel_for_indexed(tasks: usize, body: &(dyn Fn(usize) + Sync)) {
     }
     let helpers = num_threads().min(tasks).saturating_sub(1);
     if helpers == 0 || IN_WORKER.with(|w| w.get()) {
+        super::faults::fire_infallible("parallel.chunk");
         for i in 0..tasks {
             body(i);
         }
@@ -387,18 +421,18 @@ pub fn parallel_for_indexed(tasks: usize, body: &(dyn Fn(usize) + Sync)) {
         let latch = Arc::clone(&latch);
         let cursor = Arc::clone(&cursor);
         pool.submit(Box::new(move || {
-            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
                 if i >= tasks {
                     break;
                 }
                 let mut sp = super::trace::span("parallel", "task");
                 sp.arg_u("i", i as u64);
+                super::faults::fire_infallible("parallel.chunk");
                 body_static(i);
-            }))
-            .is_ok();
-            if !ok {
-                latch.panicked.store(true, Ordering::Relaxed);
+            }));
+            if let Err(payload) = result {
+                latch.record_panic(payload);
             }
             latch.count_down();
         }));
@@ -414,6 +448,7 @@ pub fn parallel_for_indexed(tasks: usize, body: &(dyn Fn(usize) + Sync)) {
         }
         let mut sp = super::trace::span("parallel", "task");
         sp.arg_u("i", i as u64);
+        super::faults::fire_infallible("parallel.chunk");
         body(i);
     }));
     IN_WORKER.with(|w| w.set(false));
@@ -421,8 +456,8 @@ pub fn parallel_for_indexed(tasks: usize, body: &(dyn Fn(usize) + Sync)) {
     if let Err(payload) = main_result {
         std::panic::resume_unwind(payload);
     }
-    if latch.panicked.load(Ordering::Relaxed) {
-        panic!("minitensor: parallel_for_indexed worker task panicked");
+    if let Some(payload) = latch.take_panic() {
+        std::panic::resume_unwind(payload);
     }
 }
 
@@ -566,6 +601,71 @@ mod tests {
         assert_eq!(par_grain(), 1);
         set_par_threshold(t0);
         set_par_grain(g0);
+    }
+
+    #[test]
+    fn worker_panic_payload_reaches_the_caller_and_pool_stays_usable() {
+        let _guard = nt_lock();
+        let before = num_threads();
+        set_num_threads(4);
+        // Panic in whichever chunk covers index 900 (a worker chunk or the
+        // inline chunk, depending on partitioning) with a distinctive
+        // message; the caller must observe that exact payload.
+        let result = std::panic::catch_unwind(|| {
+            parallel_for(1000, 1, &|s, e| {
+                if (s..e).contains(&900) {
+                    panic!("chunk exploded at 900");
+                }
+            });
+        });
+        let payload = result.expect_err("panic must propagate");
+        let msg = payload
+            .downcast_ref::<&'static str>()
+            .copied()
+            .map(String::from)
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("chunk exploded at 900"), "{msg}");
+
+        // The pool must be fully reusable after the panic: every latch
+        // counted down, no worker died, no Condvar is stuck.
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(1000, 1, &|s, e| {
+            for h in &hits[s..e] {
+                h.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        set_num_threads(before);
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn indexed_task_panic_payload_reaches_the_caller() {
+        let _guard = nt_lock();
+        let before = num_threads();
+        set_num_threads(4);
+        let result = std::panic::catch_unwind(|| {
+            parallel_for_indexed(64, &|i| {
+                if i == 17 {
+                    panic!("task 17 exploded");
+                }
+            });
+        });
+        let payload = result.expect_err("panic must propagate");
+        let msg = payload
+            .downcast_ref::<&'static str>()
+            .copied()
+            .map(String::from)
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("task 17 exploded"), "{msg}");
+        // Reusable afterwards.
+        let total = AtomicU64::new(0);
+        parallel_for_indexed(64, &|_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        set_num_threads(before);
+        assert_eq!(total.load(Ordering::Relaxed), 64);
     }
 
     #[test]

@@ -57,6 +57,23 @@ pub fn take(capacity: usize) -> Vec<f32> {
 /// Selection is best-fit (smallest pooled buffer that is large enough),
 /// so a small long-lived tensor does not pin a giant recycled buffer.
 pub fn try_take(capacity: usize) -> Option<Vec<f32>> {
+    // `pool.alloc` failpoint: `error` degrades to a forced miss (the
+    // caller's fresh-allocation fallback is the recovery path under
+    // test), `delay_ms` stalls the allocation, `panic` panics.
+    if crate::runtime::faults::armed() {
+        use crate::runtime::faults::{check, FaultKind};
+        match check("pool.alloc") {
+            None => {}
+            Some(FaultKind::Error) => {
+                metrics::add(Id::PoolMisses, 1);
+                return None;
+            }
+            Some(FaultKind::DelayMs(ms)) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms))
+            }
+            Some(FaultKind::Panic) => panic!("minitensor: injected fault at pool.alloc"),
+        }
+    }
     let took = POOL.with(|p| {
         let mut p = p.borrow_mut();
         let best = p

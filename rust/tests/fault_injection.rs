@@ -1,0 +1,353 @@
+//! Chaos tests: arm the `runtime::faults` failpoints and pin the
+//! recovery contracts they exist to verify — a compile-path fault
+//! surfaces as a structured error and the next eval recompiles cleanly,
+//! a forced pool miss degrades to fresh allocation without wrong
+//! results, a parallel-chunk panic reaches the submitting thread with
+//! its payload intact and leaves the pool reusable, and the serve stack
+//! answers **every** request definitively (no hangs) while its workers
+//! are being crashed and stalled underneath it.
+//!
+//! Failpoints are process-global, so every test serializes on
+//! [`guard`]. Tests disarm the specific sites they armed (rather than
+//! `disarm_all`) so a CI chaos run's `MINITENSOR_FAULTS` background
+//! spec — e.g. a low-probability `parallel.chunk` delay — keeps
+//! perturbing the rest of the binary.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use minitensor::coordinator::{InferenceServer, NativeModelFactory, ServeConfig};
+use minitensor::data::Rng;
+use minitensor::error::Error;
+use minitensor::nn::{Activation, Dense, Sequential};
+use minitensor::runtime::faults::{self, FaultKind};
+use minitensor::runtime::parallel;
+use minitensor::tensor::{pool, Tensor};
+
+fn guard() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn mlp_factory(in_features: usize) -> NativeModelFactory {
+    NativeModelFactory::new(in_features, move || {
+        let mut rng = Rng::new(7);
+        Sequential::new()
+            .add(Dense::new(in_features, 16, &mut rng))
+            .add(Activation::Relu)
+            .add(Dense::new(16, 4, &mut rng))
+    })
+}
+
+/// Stringify a caught panic payload (`&'static str` or `String`).
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&'static str>()
+        .copied()
+        .map(String::from)
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_default()
+}
+
+#[test]
+fn graph_compile_fault_surfaces_as_error_then_recovers() {
+    let _g = guard();
+    let a = Tensor::from_vec((0..512).map(|i| i as f32 * 0.01).collect(), &[512]).unwrap();
+    let b = Tensor::from_vec(vec![1.5; 512], &[512]).unwrap();
+    let expr = || a.lazy().mul(&b.lazy()).unwrap().add_scalar(0.25).tanh();
+    let expected = expr().eval_eager().unwrap();
+
+    // Force the cache-miss path, then make the compile fail exactly once.
+    minitensor::graph::program_cache_clear();
+    faults::arm("graph.compile", FaultKind::Error, 1.0, Some(1));
+    match expr().eval() {
+        Err(Error::FaultInjected { site }) => assert_eq!(site, "graph.compile"),
+        other => panic!("expected FaultInjected, got {other:?}"),
+    }
+    assert_eq!(faults::injected("graph.compile"), 1);
+
+    // The fault fired before any cache entry existed, so the retry
+    // recompiles from scratch and must match the eager reference.
+    let fused = expr().eval().unwrap();
+    assert_eq!(fused.dims(), expected.dims());
+    for (f, e) in fused.to_vec().iter().zip(expected.to_vec().iter()) {
+        assert_eq!(f.to_bits(), e.to_bits(), "post-recovery eval diverges");
+    }
+    assert!(faults::disarm("graph.compile"));
+}
+
+#[test]
+fn forced_pool_miss_degrades_to_fresh_allocation() {
+    let _g = guard();
+    // Seed the thread-local pool with a buffer big enough to pool
+    // (>= 16 KiB) and verify a recycle works unarmed.
+    pool::put(Vec::with_capacity(1 << 13)); // 8192 f32 = 32 KiB
+    assert!(pool::pooled_count() >= 1);
+    assert!(pool::try_take(1024).is_some(), "unarmed take must recycle");
+    pool::put(Vec::with_capacity(1 << 13));
+
+    // Armed: every take is a forced miss — the pooled buffer stays put
+    // and the caller falls back to a fresh allocation.
+    faults::arm("pool.alloc", FaultKind::Error, 1.0, None);
+    let pooled_before = pool::pooled_count();
+    assert!(pool::try_take(1024).is_none(), "armed take must force a miss");
+    assert_eq!(pool::pooled_count(), pooled_before, "forced miss must not consume");
+    assert!(faults::injected("pool.alloc") >= 1);
+
+    // Correctness under sustained forced misses: an eager chain is
+    // bit-identical to its unarmed run (the pool only recycles storage).
+    let x = Tensor::from_vec((0..4096).map(|i| (i % 17) as f32).collect(), &[4096]).unwrap();
+    let run = || {
+        let mut t = x.add_scalar(1.0);
+        for _ in 0..8 {
+            t = t.mul_scalar(0.5).add(&x).unwrap();
+        }
+        t
+    };
+    let degraded: Vec<u32> = run().to_vec().iter().map(|v| v.to_bits()).collect();
+    assert!(faults::disarm("pool.alloc"));
+    let normal: Vec<u32> = run().to_vec().iter().map(|v| v.to_bits()).collect();
+    assert_eq!(degraded, normal, "forced pool misses changed results");
+
+    // Disarmed: recycling resumes.
+    assert!(pool::try_take(1024).is_some(), "disarmed take must recycle again");
+}
+
+#[test]
+fn parallel_chunk_panic_reaches_the_caller_and_the_pool_stays_usable() {
+    let _g = guard();
+    faults::arm("parallel.chunk", FaultKind::Panic, 1.0, Some(1));
+    let result = std::panic::catch_unwind(|| {
+        parallel::parallel_for(10_000, 64, &|_s, _e| {});
+    });
+    let payload = result.expect_err("injected chunk panic must propagate");
+    let msg = panic_msg(payload.as_ref());
+    assert!(msg.contains("injected fault at parallel.chunk"), "{msg}");
+    assert_eq!(faults::injected("parallel.chunk"), 1);
+    assert!(faults::disarm("parallel.chunk"));
+
+    // The pool must be fully reusable after the contained panic: every
+    // index is visited exactly once by the next dispatch.
+    let total = AtomicU64::new(0);
+    parallel::parallel_for(10_000, 64, &|s, e| {
+        total.fetch_add((e - s) as u64, Ordering::Relaxed);
+    });
+    assert_eq!(total.load(Ordering::Relaxed), 10_000);
+}
+
+/// The ISSUE's acceptance scenario: a closed-loop load with
+/// `serve.worker.forward` armed to panic at probability 0.2. Every
+/// request must get a *definite* reply (Ok or a structured error —
+/// the joins below hang the test otherwise), the server must recover
+/// every crashed replica, and the blast radius must be visible on the
+/// restart/fault counters and `/healthz`.
+#[test]
+fn closed_loop_load_under_forward_panics_gets_definite_replies_and_recovers() {
+    let _g = guard();
+    let cfg = ServeConfig::new()
+        .workers(2)
+        .max_batch(1)
+        .max_wait_ms(0)
+        .queue_depth(64)
+        .restart_backoff_ms(1)
+        .metrics_port(0)
+        .build()
+        .unwrap();
+    let server = Arc::new(InferenceServer::start(mlp_factory(4), cfg).unwrap());
+    let addr = server.metrics_addr().expect("metrics endpoint running");
+
+    faults::arm("serve.worker.forward", FaultKind::Panic, 0.2, None);
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let s = server.clone();
+            std::thread::spawn(move || {
+                let mut ok = 0u64;
+                let mut crashed = 0u64;
+                for i in 0..15 {
+                    match s.infer(vec![t as f32, i as f32, 0.5, -0.5]) {
+                        Ok(out) => {
+                            assert_eq!(out.len(), 4);
+                            ok += 1;
+                        }
+                        Err(Error::WorkerCrashed { detail, .. }) => {
+                            assert!(detail.contains("injected fault"), "{detail}");
+                            crashed += 1;
+                        }
+                        Err(e) => panic!("indefinite/unexpected reply: {e}"),
+                    }
+                }
+                (ok, crashed)
+            })
+        })
+        .collect();
+    let (mut ok, mut crashed) = (0u64, 0u64);
+    for h in handles {
+        let (o, c) = h.join().unwrap();
+        ok += o;
+        crashed += c;
+    }
+    faults::disarm("serve.worker.forward");
+    assert_eq!(ok + crashed, 60, "every request answered exactly once");
+    assert!(ok >= 1, "some requests must succeed under p=0.2");
+    assert!(crashed >= 1, "p=0.2 over 60 forwards must inject");
+
+    // Recovery: every crash is followed by an in-place replica rebuild.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.stats().worker_restarts < server.stats().worker_crashes
+        && Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let stats = server.stats();
+    assert_eq!(stats.worker_crashes, crashed);
+    assert_eq!(stats.worker_restarts, stats.worker_crashes, "{stats:?}");
+    assert_eq!(stats.health, "live");
+    assert_eq!(stats.workers_alive, 2);
+    assert!(server.infer(vec![0.0; 4]).is_ok(), "recovered server serves");
+
+    // The blast radius is on the wire: /healthz reports live plus the
+    // restart counter, /metrics carries the injection total.
+    let (head, body) = http_get(addr, "/healthz");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    assert!(body.contains("\"status\":\"live\""), "{body}");
+    let (_, metrics_body) = http_get(addr, "/metrics");
+    assert!(
+        sample(&metrics_body, "minitensor_serve_worker_restarts_total") >= crashed as f64,
+        "restart counter missing from scrape"
+    );
+    assert!(
+        sample(&metrics_body, "minitensor_faults_injected_total") >= crashed as f64,
+        "fault counter missing from scrape"
+    );
+
+    if let Ok(s) = Arc::try_unwrap(server) {
+        s.shutdown();
+    }
+}
+
+#[test]
+fn delay_fault_trips_the_stuck_worker_watchdog() {
+    let _g = guard();
+    let cfg = ServeConfig::new()
+        .workers(1)
+        .max_batch(1)
+        .max_wait_ms(0)
+        .worker_timeout_ms(50)
+        .restart_backoff_ms(1)
+        .build()
+        .unwrap();
+    let server = InferenceServer::start(mlp_factory(4), cfg).unwrap();
+
+    // Exactly one forward stalls for 400 ms — far past the 50 ms
+    // watchdog timeout. The client must get its reply from the watchdog
+    // (replica abandoned), not wait out the stall.
+    faults::arm("serve.worker.forward", FaultKind::DelayMs(400), 1.0, Some(1));
+    let t0 = Instant::now();
+    match server.infer(vec![0.0; 4]) {
+        Err(Error::WorkerCrashed { detail, .. }) => {
+            assert!(detail.contains("worker timeout"), "{detail}");
+        }
+        other => panic!("expected the watchdog's WorkerCrashed, got {other:?}"),
+    }
+    assert!(
+        t0.elapsed() < Duration::from_millis(350),
+        "reply must arrive from the watchdog, not after the stall: {:?}",
+        t0.elapsed()
+    );
+    faults::disarm("serve.worker.forward");
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.stats().worker_timeouts < 1 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(server.stats().worker_timeouts, 1);
+
+    // The supervisor replaced the abandoned replica; service resumes.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut recovered = false;
+    while Instant::now() < deadline {
+        if server.infer(vec![0.5; 4]).is_ok() {
+            recovered = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(recovered, "replacement replica never came up");
+    // The abandoned thread is still sleeping inside its 400 ms stall;
+    // shutdown must not block on it (it is detached, discards its stale
+    // result on wake, and exits).
+    server.shutdown();
+}
+
+#[test]
+fn drain_and_shutdown_join_cleanly_with_faults_armed() {
+    let _g = guard();
+    faults::arm("serve.worker.forward", FaultKind::Panic, 0.15, None);
+    faults::arm("parallel.chunk", FaultKind::DelayMs(1), 0.05, None);
+    let cfg = ServeConfig::new()
+        .workers(2)
+        .max_batch(4)
+        .max_wait_ms(1)
+        .restart_backoff_ms(1)
+        .build()
+        .unwrap();
+    let server = Arc::new(InferenceServer::start(mlp_factory(4), cfg).unwrap());
+    let handles: Vec<_> = (0..12)
+        .map(|i| {
+            let s = server.clone();
+            std::thread::spawn(move || s.infer(vec![i as f32, 0.0, 0.0, 0.0]))
+        })
+        .collect();
+    for h in handles {
+        // Definite replies only — Ok or WorkerCrashed, never a hang.
+        match h.join().unwrap() {
+            Ok(out) => assert_eq!(out.len(), 4),
+            Err(Error::WorkerCrashed { .. }) => {}
+            Err(e) => panic!("unexpected reply under chaos: {e}"),
+        }
+    }
+    server.drain();
+    assert!(server.infer(vec![0.0; 4]).is_err(), "drained server must refuse");
+    let Ok(server) = Arc::try_unwrap(server) else {
+        panic!("all clients joined; no other Arc holders remain");
+    };
+    // The real assertion: shutdown joins every thread with faults still
+    // armed (a worker mid-crash or mid-rebuild must not wedge it).
+    server.shutdown();
+    faults::disarm("serve.worker.forward");
+    faults::disarm("parallel.chunk");
+}
+
+/// Blocking HTTP GET against the metrics endpoint; returns (head, body).
+fn http_get(addr: std::net::SocketAddr, path: &str) -> (String, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect to metrics endpoint");
+    stream
+        .write_all(
+            format!("GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n")
+                .as_bytes(),
+        )
+        .unwrap();
+    let mut resp = Vec::new();
+    stream.read_to_end(&mut resp).unwrap();
+    let text = String::from_utf8(resp).expect("UTF-8 response");
+    let (head, body) = text.split_once("\r\n\r\n").expect("header/body separator");
+    (head.to_string(), body.to_string())
+}
+
+/// First sample value for `name` in a Prometheus text body; 0 if absent.
+fn sample(body: &str, name: &str) -> f64 {
+    body.lines()
+        .filter(|l| !l.starts_with('#'))
+        .find_map(|l| {
+            let (n, v) = l.rsplit_once(' ')?;
+            if n == name {
+                v.parse().ok()
+            } else {
+                None
+            }
+        })
+        .unwrap_or(0.0)
+}

@@ -1,13 +1,15 @@
 //! Serving-stack integration tests: the multi-worker continuous-batching
 //! server's correctness properties — replica equivalence, admission
-//! control (fast-reject + deadline shedding), graceful drain, and the
-//! warm per-worker program cache.
+//! control (fast-reject + deadline shedding), graceful drain, the warm
+//! per-worker program cache, and the recovery invariants (panic
+//! isolation, supervised restart, degraded operation).
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Barrier};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use minitensor::coordinator::{
-    BatchModel, FactoryFn, InferenceServer, NativeModelFactory, ServeConfig,
+    BatchModel, FactoryFn, InferenceServer, ModelFactory, NativeModelFactory, ServeConfig,
 };
 use minitensor::data::Rng;
 use minitensor::error::{Error, Result};
@@ -245,5 +247,180 @@ fn warm_worker_hits_program_cache_on_repeat_batches() {
     let stats = server.stats();
     assert_eq!(stats.requests, 4);
     assert!(stats.p95_latency_ms >= stats.p50_latency_ms);
+    server.shutdown();
+}
+
+/// Wraps a real replica; panics on a forward when the shared flag is
+/// set (taking the flag, so exactly one forward crashes per arming).
+struct CrashWrap {
+    inner: Box<dyn BatchModel>,
+    crash: Arc<AtomicBool>,
+}
+
+impl BatchModel for CrashWrap {
+    fn forward_batch(&mut self, x: &Tensor) -> Result<Tensor> {
+        if self.crash.swap(false, Ordering::SeqCst) {
+            panic!("injected replica crash (test)");
+        }
+        self.inner.forward_batch(x)
+    }
+    fn in_features(&self) -> usize {
+        self.inner.in_features()
+    }
+}
+
+#[test]
+fn worker_panic_is_contained_and_the_rebuilt_replica_is_byte_equivalent() {
+    let in_features = 8;
+    let mut rng = Rng::new(123);
+    let requests: Vec<Vec<f32>> = (0..24)
+        .map(|_| (0..in_features).map(|_| rng.next_f32()).collect())
+        .collect();
+
+    // Reference outputs from a plain single-worker server.
+    let cfg1 = ServeConfig::new()
+        .workers(1)
+        .max_batch(1)
+        .max_wait_ms(0)
+        .build()
+        .unwrap();
+    let server1 = InferenceServer::start(mlp_factory(in_features), cfg1).unwrap();
+    let expected: Vec<Vec<u32>> = requests
+        .iter()
+        .map(|r| {
+            server1
+                .infer(r.clone())
+                .unwrap()
+                .iter()
+                .map(|v| v.to_bits())
+                .collect()
+        })
+        .collect();
+    server1.shutdown();
+
+    let crash = Arc::new(AtomicBool::new(false));
+    let inner = Arc::new(mlp_factory(in_features));
+    let flag = crash.clone();
+    let factory = FactoryFn::new(in_features, move |worker| {
+        let m: Box<dyn BatchModel> = Box::new(CrashWrap {
+            inner: inner.build(worker)?,
+            crash: flag.clone(),
+        });
+        Ok(m)
+    });
+    let cfg = ServeConfig::new()
+        .workers(3)
+        .max_batch(8)
+        .max_wait_ms(1)
+        .restart_backoff_ms(1)
+        .build()
+        .unwrap();
+    let server = Arc::new(InferenceServer::start(factory, cfg).unwrap());
+
+    // Crash exactly one forward: the victim request gets a definite,
+    // retryable reply — not a hang, not a dead server.
+    crash.store(true, Ordering::SeqCst);
+    match server.infer(requests[0].clone()) {
+        Err(Error::WorkerCrashed { detail, .. }) => {
+            assert!(detail.contains("injected replica crash"), "{detail}");
+        }
+        other => panic!("expected WorkerCrashed, got {other:?}"),
+    }
+
+    // The crashed worker rebuilds its replica in place.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.stats().worker_restarts < 1 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let stats = server.stats();
+    assert_eq!(stats.worker_crashes, 1);
+    assert!(stats.worker_restarts >= 1, "replica must be rebuilt: {stats:?}");
+    assert_eq!(stats.health, "live", "a recovered server is healthy");
+    assert_eq!(stats.workers_alive, 3, "in-place rebuild keeps all slots live");
+
+    // Post-recovery, all 3 workers — including the rebuilt replica —
+    // must stay byte-equivalent to the single-worker reference.
+    let handles: Vec<_> = requests
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let s = server.clone();
+            let r = r.clone();
+            std::thread::spawn(move || (i, s.infer(r).unwrap()))
+        })
+        .collect();
+    for h in handles {
+        let (i, got) = h.join().unwrap();
+        let got_bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got_bits, expected[i], "request {i} diverges after restart");
+    }
+    if let Ok(s) = Arc::try_unwrap(server) {
+        s.shutdown();
+    }
+}
+
+/// A replica that panics on every forward — for testing the slot-lost
+/// (degraded) path where rebuilding can't help.
+struct AlwaysCrash;
+
+impl BatchModel for AlwaysCrash {
+    fn forward_batch(&mut self, _x: &Tensor) -> Result<Tensor> {
+        panic!("poisoned replica (test)");
+    }
+    fn in_features(&self) -> usize {
+        4
+    }
+}
+
+#[test]
+fn lost_replica_slot_degrades_but_the_server_keeps_serving() {
+    // Worker 0's replica crashes on its first forward and its slot can
+    // never rebuild (the factory refuses); worker 1 carries the load.
+    let built_once = Arc::new(AtomicBool::new(false));
+    let flag = built_once.clone();
+    let inner = Arc::new(mlp_factory(4));
+    let factory = FactoryFn::new(4, move |worker| {
+        if worker == 0 {
+            if flag.swap(true, Ordering::SeqCst) {
+                return Err(Error::msg("slot 0 cannot rebuild"));
+            }
+            let m: Box<dyn BatchModel> = Box::new(AlwaysCrash);
+            Ok(m)
+        } else {
+            inner.build(worker)
+        }
+    });
+    let cfg = ServeConfig::new()
+        .workers(2)
+        .max_batch(1)
+        .max_wait_ms(0)
+        .restart_limit(2)
+        .restart_backoff_ms(1)
+        .build()
+        .unwrap();
+    let server = InferenceServer::start(factory, cfg).unwrap();
+
+    // Keep submitting until worker 0 eats one; every reply is definite
+    // (Ok from worker 1, or WorkerCrashed from worker 0) — never a hang.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.stats().worker_crashes == 0 && Instant::now() < deadline {
+        let _ = server.infer(vec![0.1; 4]);
+    }
+    assert!(server.stats().worker_crashes >= 1, "worker 0 never crashed");
+
+    // Both rebuild attempts fail → the slot is abandoned → degraded.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.stats().health != "degraded" && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let stats = server.stats();
+    assert_eq!(stats.health, "degraded");
+    assert_eq!(stats.workers_alive, 1);
+    assert_eq!(stats.worker_restarts, 0, "no rebuild can succeed here");
+
+    // …but the surviving replica keeps answering.
+    for _ in 0..8 {
+        assert_eq!(server.infer(vec![0.2; 4]).unwrap().len(), 4);
+    }
     server.shutdown();
 }
